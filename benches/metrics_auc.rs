@@ -1,0 +1,23 @@
+//! AUC / logloss throughput: the eval path must not bottleneck the
+//! trainer (the paper evaluates 4.5M test rows per epoch at full scale).
+
+use cowclip::metrics::{auc, logloss_from_logits};
+use cowclip::util::bench::{bench, throughput};
+use cowclip::util::Rng;
+
+fn main() {
+    println!("== metrics_auc ==");
+    for n in [10_000usize, 100_000, 1_000_000] {
+        let mut rng = Rng::new(1);
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let labels: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.26) as u8).collect();
+        let r = bench(&format!("auc n={n}"), 1, 5, || {
+            std::hint::black_box(auc(&scores, &labels));
+        });
+        println!("    rows/s: {:.1}M", throughput(&r, n) / 1e6);
+        let r = bench(&format!("logloss n={n}"), 1, 5, || {
+            std::hint::black_box(logloss_from_logits(&scores, &labels));
+        });
+        println!("    rows/s: {:.1}M", throughput(&r, n) / 1e6);
+    }
+}

@@ -1,0 +1,55 @@
+//! Quickstart: generate a small synthetic Criteo-like dataset, train
+//! DeepFM with CowClip at 8x the base batch through the AOT/PJRT path,
+//! and print the test AUC.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::reference::ModelKind;
+use cowclip::runtime::Runtime;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::Result;
+
+fn main() -> Result<()> {
+    // 1. open the AOT artifacts (built once by `make artifacts`)
+    let runtime = std::sync::Arc::new(Runtime::open_default()?);
+    println!("platform: {}", runtime.platform());
+
+    // 2. synthesize a Criteo-shaped dataset (Zipf ids + hidden teacher)
+    let schema = runtime.manifest().schema("criteo_synth")?;
+    let ds = generate(&schema, &SynthConfig { n: 20_000, seed: 42, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+    println!("dataset: {} train / {} test rows, CTR {:.3}", train.n(), test.n(), ds.ctr());
+
+    // 3. train DeepFM with the CowClip algorithm + scaling rule at 8x batch
+    let preset = criteo_preset();
+    let engine = Engine::hlo(runtime, ModelKind::DeepFm, "criteo_synth", ClipMode::CowClip)?;
+    let cfg = TrainConfig {
+        batch: preset.base_batch * 8,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 2.0,
+        workers: 1,
+        warmup_steps: train.n() / (preset.base_batch * 8),
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 1,
+        verbose: true,
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let report = trainer.train(&train, &test)?;
+
+    println!(
+        "\nfinal: AUC {:.2}%  logloss {:.4}  in {:.1}s ({} steps)",
+        report.final_auc * 100.0,
+        report.final_logloss,
+        report.wall_seconds,
+        report.steps
+    );
+    Ok(())
+}

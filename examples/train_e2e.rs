@@ -1,0 +1,98 @@
+//! End-to-end validation driver (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//! synthesize a 100k-row Criteo-like dataset, train DeepFM for several
+//! hundred optimizer steps through the AOT HLO path (Pallas CowClip
+//! kernel inside the apply program), with 4 simulated data-parallel
+//! workers and tree all-reduce, logging the loss curve and per-epoch
+//! test AUC/logloss. The output of this run is recorded in
+//! EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::reference::ModelKind;
+use cowclip::runtime::Runtime;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::Result;
+
+fn main() -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let runtime = std::sync::Arc::new(Runtime::open_default()?);
+    let schema = runtime.manifest().schema("criteo_synth")?;
+
+    println!("[1/3] synthesizing 100k-row criteo_synth dataset...");
+    let ds = generate(&schema, &SynthConfig { n: 100_000, seed: 7, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+    println!(
+        "      {} train / {} test rows, {} cat fields (vocab {}), {} dense, CTR {:.3}",
+        train.n(),
+        test.n(),
+        schema.n_cat(),
+        schema.total_vocab(),
+        schema.n_dense,
+        ds.ctr()
+    );
+
+    println!("[2/3] training DeepFM + CowClip, batch 512 (paper 8K), 4 workers...");
+    let preset = criteo_preset();
+    let batch = 512;
+    let engine = Engine::hlo(runtime, ModelKind::DeepFm, "criteo_synth", ClipMode::CowClip)?;
+    let cfg = TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 3.0,
+        workers: 4,
+        warmup_steps: train.n() / batch,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 1,
+        verbose: true,
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let report = trainer.train(&train, &test)?;
+
+    println!("[3/3] results");
+    println!("      steps: {} (loss curve below)", report.steps);
+    // compact loss curve: every ~20th step
+    let stride = (report.train_loss_curve.len() / 25).max(1);
+    for (i, loss) in report.train_loss_curve.iter().enumerate().step_by(stride) {
+        let bar_len = ((loss / 0.7) * 48.0) as usize;
+        println!("      step {i:>4}  loss {loss:.4}  {}", "*".repeat(bar_len.min(60)));
+    }
+    for e in &report.epoch_evals {
+        println!(
+            "      epoch {}  train_loss {:.4}  test AUC {:.4}%  logloss {:.4}",
+            e.epoch,
+            e.train_loss,
+            e.test_auc * 100.0,
+            e.test_logloss
+        );
+    }
+    println!(
+        "      all-reduce: {} workers, {} rounds, {:.1} MiB total traffic",
+        report.reduce_stats.workers,
+        report.reduce_stats.rounds,
+        report.reduce_stats.bytes_moved as f64 / (1 << 20) as f64
+    );
+    for (phase, secs) in &report.phase_seconds {
+        println!("      phase {phase:<5} {secs:>7.2}s");
+    }
+    println!(
+        "      FINAL: test AUC {:.2}%  logloss {:.4}  wall {:.1}s (total {:.1}s)",
+        report.final_auc * 100.0,
+        report.final_logloss,
+        report.wall_seconds,
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(!report.diverged, "e2e run must not diverge");
+    assert!(report.final_auc > 0.6, "e2e run must clearly beat chance");
+    println!("      E2E OK");
+    Ok(())
+}

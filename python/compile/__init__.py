@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO text.
+
+Nothing in this package is imported at runtime; the Rust coordinator only
+consumes the HLO text + JSON manifests it emits under ``artifacts/``.
+"""

@@ -1,0 +1,134 @@
+"""AOT driver: lower every program in the manifest to HLO text.
+
+Run once at build time (``make artifacts``); the Rust binary is fully
+self-contained afterwards. HLO **text** is the interchange format — the
+``xla`` crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+(64-bit instruction ids), while the text parser reassigns ids cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only SUBSTR] [--force]
+
+Incremental: a content fingerprint of the compile package is stored in
+``artifacts/.fingerprint``; unchanged sources skip relowering.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import manifest as mf
+from . import train_step
+from .models import ModelCfg
+from .schemas import SCHEMAS
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_fn(spec: mf.ArtifactSpec, cfg: ModelCfg):
+    schema = SCHEMAS[spec.schema]
+    if spec.kind == "grad":
+        fn, _ = train_step.build_grad_fn(spec.model, schema, cfg)
+    elif spec.kind == "fwd":
+        fn, _ = train_step.build_fwd_fn(spec.model, schema, cfg)
+    elif spec.kind == "apply":
+        fn = train_step.build_apply_fn(spec.model, schema, cfg, spec.clip)
+    else:
+        raise ValueError(spec.kind)
+    return fn
+
+
+def lower_artifact(spec: mf.ArtifactSpec, cfg: ModelCfg) -> str:
+    schema = SCHEMAS[spec.schema]
+    fn = build_fn(spec, cfg)
+    shapes = [
+        jax.ShapeDtypeStruct(tuple(i["shape"]), DTYPES[i["dtype"]])
+        for i in mf.input_layout(spec, schema, cfg)
+    ]
+    # keep_unused: an input unused by a variant (e.g. `counts` under
+    # clip=none) must still appear in the program signature — the Rust
+    # runtime feeds every manifest input positionally.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*shapes))
+
+
+def source_fingerprint() -> str:
+    """Hash of every .py under compile/ — drives incremental rebuilds."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for name in sorted(files):
+            if name.endswith(".py"):
+                p = os.path.join(dirpath, name)
+                h.update(p.encode())
+                with open(p, "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact ids")
+    ap.add_argument("--force", action="store_true", help="ignore fingerprint")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the jnp oracles instead of Pallas kernels")
+    args = ap.parse_args(argv)
+
+    cfg = ModelCfg(use_pallas=not args.no_pallas)
+    os.makedirs(args.out_dir, exist_ok=True)
+    fp_path = os.path.join(args.out_dir, ".fingerprint")
+    fingerprint = source_fingerprint() + ("-nopallas" if args.no_pallas else "")
+
+    specs = mf.default_artifact_specs()
+    if args.only:
+        specs = [s for s in specs if args.only in s.artifact_id]
+
+    if not args.force and not args.only and os.path.exists(fp_path):
+        with open(fp_path) as f:
+            if f.read().strip() == fingerprint and all(
+                os.path.exists(os.path.join(args.out_dir, s.filename)) for s in specs
+            ):
+                print(f"artifacts up to date ({len(specs)} programs); skipping")
+                return 0
+
+    t0 = time.time()
+    for i, spec in enumerate(specs):
+        path = os.path.join(args.out_dir, spec.filename)
+        t1 = time.time()
+        text = lower_artifact(spec, cfg)
+        with open(path, "w") as f:
+            f.write(text)
+        print(
+            f"[{i + 1:3d}/{len(specs)}] {spec.artifact_id:<44s} "
+            f"{len(text) / 1024:7.1f} KiB  {time.time() - t1:5.2f}s"
+        )
+
+    mf.write_manifest(os.path.join(args.out_dir, "manifest.json"),
+                      mf.build_manifest(mf.default_artifact_specs(), cfg))
+    if not args.only:
+        with open(fp_path, "w") as f:
+            f.write(fingerprint + "\n")
+    print(f"lowered {len(specs)} programs in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

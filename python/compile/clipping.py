@@ -1,0 +1,113 @@
+"""The clipping strategies ablated in Table 7 of the paper.
+
+All variants share the signature
+``clip(g, w, counts, hypers, schema) -> g'`` over the ``[V, d]``
+embedding-gradient table; the selected variant is baked into each
+``apply`` artifact at lowering time (gradient clipping is control-flow
+free, so specialization beats a runtime switch).
+
+Variants (Table 7 rows):
+  * ``none``      — no clipping (the non-clipping scaling-rule baselines)
+  * ``global``    — classic gradient-norm clipping over the whole table
+  * ``field``     — per-field sub-table clipping, fixed threshold
+  * ``column``    — per-id (row) clipping, fixed threshold
+  * ``adafield``  — adaptive per-field: cnt_f * max(r*||w_f||, zeta)
+  * ``cowclip``   — adaptive per-column (Alg. 1) via the Pallas kernel
+
+Fixed thresholds read ``hypers[H_CLIP_T]``; the batch-size scaling of
+that threshold (sqrt, per the paper's appendix) happens in the Rust
+scaling engine before each step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import cowclip_clip, cowclip_clip_ref
+from .kernels.ref import EPS
+from .schemas import Schema
+
+# hypers vector layout (f32[8]); keep in sync with rust/src/runtime/hypers.rs
+H_LR_DENSE = 0
+H_LR_EMBED = 1
+H_L2_EMBED = 2
+H_CLIP_R = 3
+H_CLIP_ZETA = 4
+H_CLIP_T = 5
+H_STEP = 6
+H_RESERVED = 7
+N_HYPERS = 8
+
+
+def _clip_to(g: jnp.ndarray, norm: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Rescale ``g`` so its norm is at most ``thresh`` (no-op below)."""
+    return g * jnp.minimum(1.0, thresh / (norm + EPS))
+
+
+def clip_none(g, w, counts, hypers, schema: Schema):
+    return g
+
+
+def clip_global(g, w, counts, hypers, schema: Schema):
+    norm = jnp.sqrt(jnp.sum(g * g))
+    return _clip_to(g, norm, hypers[H_CLIP_T])
+
+
+def _field_slices(schema: Schema):
+    offs = schema.offsets
+    return [(o, o + v) for o, v in zip(offs, schema.vocab_sizes)]
+
+
+def clip_field(g, w, counts, hypers, schema: Schema):
+    out = []
+    for lo, hi in _field_slices(schema):
+        gf = g[lo:hi]
+        norm = jnp.sqrt(jnp.sum(gf * gf))
+        out.append(_clip_to(gf, norm, hypers[H_CLIP_T]))
+    return jnp.concatenate(out, axis=0)
+
+
+def clip_column(g, w, counts, hypers, schema: Schema):
+    norm = jnp.sqrt(jnp.sum(g * g, axis=-1, keepdims=True))
+    return _clip_to(g, norm, hypers[H_CLIP_T])
+
+
+def clip_adafield(g, w, counts, hypers, schema: Schema):
+    """Adaptive field-wise: threshold from the field sub-table's weight
+    norm, scaled by the field's total batch occurrences (== batch size,
+    since every sample carries exactly one id per field)."""
+    r, zeta = hypers[H_CLIP_R], hypers[H_CLIP_ZETA]
+    out = []
+    for lo, hi in _field_slices(schema):
+        gf, wf = g[lo:hi], w[lo:hi]
+        cnt_f = jnp.sum(counts[lo:hi])
+        norm = jnp.sqrt(jnp.sum(gf * gf))
+        wnorm = jnp.sqrt(jnp.sum(wf * wf))
+        thresh = cnt_f * jnp.maximum(r * wnorm, zeta)
+        out.append(_clip_to(gf, norm, thresh))
+    return jnp.concatenate(out, axis=0)
+
+
+def clip_cowclip(g, w, counts, hypers, schema: Schema, use_pallas: bool = True,
+                 v_block: int = 512):
+    if use_pallas:
+        return cowclip_clip(g, w, counts, hypers[H_CLIP_R], hypers[H_CLIP_ZETA],
+                            v_block=v_block)
+    return cowclip_clip_ref(g, w, counts, hypers[H_CLIP_R], hypers[H_CLIP_ZETA])
+
+
+CLIP_MODES = {
+    "none": clip_none,
+    "global": clip_global,
+    "field": clip_field,
+    "column": clip_column,
+    "adafield": clip_adafield,
+    "cowclip": clip_cowclip,
+}
+
+
+def get_clip(mode: str):
+    try:
+        return CLIP_MODES[mode]
+    except KeyError:
+        raise KeyError(f"unknown clip mode {mode!r}; known: {sorted(CLIP_MODES)}")

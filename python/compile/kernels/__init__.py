@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .cowclip import cowclip_clip
+from .fm import fm2
+from .ref import cowclip_clip_ref, fm2_bwd_ref, fm2_ref
+
+__all__ = ["cowclip_clip", "fm2", "cowclip_clip_ref", "fm2_ref", "fm2_bwd_ref"]

@@ -1,0 +1,99 @@
+"""Pallas kernel for adaptive column-wise clipping (the CowClip hot-spot).
+
+The clipping step of Algorithm 1 is a bandwidth-bound per-row reduction
+over the ``[V, d]`` embedding-gradient table. On GPU the paper's
+implementation maps one threadblock per embedding column; the TPU
+adaptation (DESIGN.md §3) tiles the table into ``(V_BLK, d)`` VMEM blocks
+streamed from HBM via ``BlockSpec`` — each block computes row-wise L2
+norms on the VPU, derives the count-scaled adaptive threshold, and
+rescales in place. With the default ``V_BLK = 512`` and d = 10 a block
+holds ~20 KiB of input + output, leaving ample VMEM for double-buffering
+the HBM stream.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifacts run anywhere. Real-TPU efficiency is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+# Rows of the [V, d] table processed per grid step. Chosen so a block's
+# in+out footprint (2 * V_BLK * d * 4B ≈ 40 KiB at d=10) double-buffers
+# comfortably inside a ~16 MiB VMEM budget; see the block sweep in
+# EXPERIMENTS.md §Perf.
+DEFAULT_V_BLOCK = 512
+
+
+def _cowclip_kernel(g_ref, w_ref, cnt_ref, rz_ref, out_ref):
+    """One (V_BLK, d) tile: row norms -> adaptive threshold -> rescale."""
+    g = g_ref[...]
+    w = w_ref[...]
+    cnt = cnt_ref[...]
+    r = rz_ref[0]
+    zeta = rz_ref[1]
+
+    g_norm = jnp.sqrt(jnp.sum(g * g, axis=-1))
+    w_norm = jnp.sqrt(jnp.sum(w * w, axis=-1))
+    clip_t = cnt * jnp.maximum(r * w_norm, zeta)
+    scale = jnp.minimum(1.0, clip_t / (g_norm + EPS))
+    out_ref[...] = g * scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("v_block",))
+def cowclip_clip(
+    g: jnp.ndarray,
+    w: jnp.ndarray,
+    counts: jnp.ndarray,
+    r: jnp.ndarray,
+    zeta: jnp.ndarray,
+    *,
+    v_block: int = DEFAULT_V_BLOCK,
+) -> jnp.ndarray:
+    """Clip each row of ``g`` to ``counts * max(r * ||w_row||, zeta)``.
+
+    Semantics identical to :func:`compile.kernels.ref.cowclip_clip_ref`;
+    the vocab dimension is padded up to a multiple of ``v_block`` (padded
+    rows have zero gradient and zero count, so they are exact no-ops).
+
+    Args:
+      g:      [V, d] float32 gradient table.
+      w:      [V, d] float32 weight table.
+      counts: [V] float32 per-id batch occurrence counts.
+      r, zeta: scalar float32 CowClip hyperparameters.
+      v_block: rows per VMEM tile (power of two recommended).
+    Returns:
+      [V, d] clipped gradient table.
+    """
+    v, d = g.shape
+    vb = min(v_block, v) if v > 0 else v_block
+    pad = (-v) % vb
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        counts = jnp.pad(counts, (0, pad))
+    vp = v + pad
+    rz = jnp.stack([r.astype(jnp.float32), zeta.astype(jnp.float32)])
+
+    out = pl.pallas_call(
+        _cowclip_kernel,
+        grid=(vp // vb,),
+        in_specs=[
+            pl.BlockSpec((vb, d), lambda i: (i, 0)),
+            pl.BlockSpec((vb, d), lambda i: (i, 0)),
+            pl.BlockSpec((vb,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((vb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((vp, d), g.dtype),
+        interpret=True,
+    )(g, w, counts, rz)
+    return out[:v] if pad else out

@@ -1,0 +1,97 @@
+"""Pallas kernels for the FM second-order interaction (DeepFM wide stream).
+
+Forward computes ``sum_{i<j} <v_i, v_j>`` per sample via the classic
+``0.5 * ((sum_f v)^2 - sum_f v^2)`` identity — two VPU reductions over the
+field axis instead of an O(F^2) pairwise loop. The batch axis is tiled
+with ``BlockSpec`` so each grid step streams a ``(B_BLK, F, d)`` slab
+through VMEM.
+
+``pallas_call`` has no automatic reverse-mode derivative, so the wrapper
+installs a ``jax.custom_vjp`` whose backward pass is *also* a Pallas
+kernel (the analytic gradient ``(sum_f' v) - v`` scaled by the upstream
+cotangent). Both directions are validated against ``ref.py`` oracles by
+the pytest/hypothesis suite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_B_BLOCK = 256
+
+
+def _fm2_fwd_kernel(v_ref, out_ref):
+    v = v_ref[...]                      # [B_BLK, F, d]
+    s = jnp.sum(v, axis=1)              # [B_BLK, d]
+    sq = jnp.sum(v * v, axis=1)         # [B_BLK, d]
+    out_ref[...] = 0.5 * jnp.sum(s * s - sq, axis=-1)
+
+
+def _fm2_bwd_kernel(v_ref, ct_ref, out_ref):
+    v = v_ref[...]                      # [B_BLK, F, d]
+    ct = ct_ref[...]                    # [B_BLK]
+    s = jnp.sum(v, axis=1, keepdims=True)
+    out_ref[...] = (s - v) * ct[:, None, None]
+
+
+def _pad_batch(x: jnp.ndarray, bb: int):
+    pad = (-x.shape[0]) % bb
+    if pad:
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, widths)
+    return x, pad
+
+
+def _fm2_fwd_impl(v: jnp.ndarray, bb: int) -> jnp.ndarray:
+    b, f, d = v.shape
+    bb = min(bb, b) if b > 0 else bb
+    vpad, pad = _pad_batch(v, bb)
+    bp = b + pad
+    out = pl.pallas_call(
+        _fm2_fwd_kernel,
+        grid=(bp // bb,),
+        in_specs=[pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), v.dtype),
+        interpret=True,
+    )(vpad)
+    return out[:b] if pad else out
+
+
+def _fm2_bwd_impl(v: jnp.ndarray, ct: jnp.ndarray, bb: int) -> jnp.ndarray:
+    b, f, d = v.shape
+    bb = min(bb, b) if b > 0 else bb
+    vpad, pad = _pad_batch(v, bb)
+    ctpad, _ = _pad_batch(ct, bb)
+    bp = b + pad
+    out = pl.pallas_call(
+        _fm2_bwd_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, f, d), v.dtype),
+        interpret=True,
+    )(vpad, ctpad)
+    return out[:b] if pad else out
+
+
+@jax.custom_vjp
+def fm2(v: jnp.ndarray) -> jnp.ndarray:
+    """FM second-order term per sample. ``v: [b, F, d] -> [b]``."""
+    return _fm2_fwd_impl(v, DEFAULT_B_BLOCK)
+
+
+def _fm2_vjp_fwd(v):
+    return _fm2_fwd_impl(v, DEFAULT_B_BLOCK), v
+
+
+def _fm2_vjp_bwd(v, ct):
+    return (_fm2_bwd_impl(v, ct, DEFAULT_B_BLOCK),)
+
+
+fm2.defvjp(_fm2_vjp_fwd, _fm2_vjp_bwd)

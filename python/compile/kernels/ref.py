@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness contracts*: every Pallas kernel in this package
+must match its oracle to float32 tolerance on every shape/dtype the test
+suite sweeps (see ``python/tests/test_kernels.py``). The oracles are also
+what the JAX model uses when ``use_pallas=False`` is requested, so the AOT
+artifacts can be built with or without the kernels for A/B benching.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def cowclip_clip_ref(
+    g: jnp.ndarray,
+    w: jnp.ndarray,
+    counts: jnp.ndarray,
+    r: jnp.ndarray,
+    zeta: jnp.ndarray,
+) -> jnp.ndarray:
+    """Adaptive column-wise clipping (Alg. 1, lines 6-11) — oracle.
+
+    One "column" of the paper's embedding matrix is one row of our
+    ``[V, d]`` table (one id's embedding vector).
+
+      clip_t[i] = counts[i] * max(r * ||w[i]||, zeta)
+      g'[i]     = min(1, clip_t[i] / ||g[i]||) * g[i]
+
+    Args:
+      g:      [V, d] gradient of the embedding table (mean-of-batch).
+      w:      [V, d] current embedding table.
+      counts: [V]    number of occurrences of each id in the batch.
+      r:      scalar CowClip ratio.
+      zeta:   scalar lower bound on the pre-count threshold.
+    """
+    g_norm = jnp.sqrt(jnp.sum(g * g, axis=-1))
+    w_norm = jnp.sqrt(jnp.sum(w * w, axis=-1))
+    clip_t = counts * jnp.maximum(r * w_norm, zeta)
+    scale = jnp.minimum(1.0, clip_t / (g_norm + EPS))
+    return g * scale[:, None]
+
+
+def fm2_ref(v: jnp.ndarray) -> jnp.ndarray:
+    """FM second-order interaction term — oracle.
+
+    sum_{i<j} <v_i, v_j> = 0.5 * sum_d ((sum_f v)^2 - sum_f v^2)
+
+    Args:
+      v: [b, F, d] per-field embedding vectors.
+    Returns:
+      [b] interaction logits.
+    """
+    s = jnp.sum(v, axis=1)          # [b, d]
+    sq = jnp.sum(v * v, axis=1)     # [b, d]
+    return 0.5 * jnp.sum(s * s - sq, axis=-1)
+
+
+def fm2_bwd_ref(v: jnp.ndarray, ct: jnp.ndarray) -> jnp.ndarray:
+    """VJP of :func:`fm2_ref`.
+
+    d fm2 / d v[b, f, :] = (sum_f' v[b, f', :]) - v[b, f, :]
+
+    Args:
+      v:  [b, F, d] primal input.
+      ct: [b] cotangent of the output.
+    Returns:
+      [b, F, d] cotangent of ``v``.
+    """
+    s = jnp.sum(v, axis=1, keepdims=True)  # [b, 1, d]
+    return (s - v) * ct[:, None, None]

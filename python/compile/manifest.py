@@ -1,0 +1,163 @@
+"""Artifact manifest: the contract between the compile path and Rust.
+
+``aot.py`` writes ``artifacts/manifest.json`` describing every lowered
+HLO program: its positional input layout (names, dtypes, shapes), output
+arity, parameter spec, the schema constants, and the optimizer/hypers
+conventions. The Rust runtime (``rust/src/runtime/artifacts.rs``)
+deserializes this file and refuses to run against a drifted layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+from .models import ModelCfg, get_model
+from .schemas import SCHEMAS, Schema
+
+MANIFEST_VERSION = 2
+
+# Default program grid (see DESIGN.md §2): microbatch sizes the grad
+# artifacts are specialized for, and the eval batch of fwd artifacts.
+GRAD_MICROBATCHES = (64, 512)
+EVAL_BATCH = 1024
+ALL_MODELS = ("deepfm", "wd", "dcn", "dcnv2")
+CORE_CLIPS = ("none", "cowclip")
+ABLATION_CLIPS = ("global", "field", "column", "adafield")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    """One HLO program to lower."""
+
+    kind: str                 # grad | apply | fwd
+    model: str
+    schema: str
+    batch: Optional[int] = None   # grad/fwd only
+    clip: Optional[str] = None    # apply only
+
+    @property
+    def artifact_id(self) -> str:
+        if self.kind == "apply":
+            return f"{self.schema}-{self.model}-apply-{self.clip}"
+        return f"{self.schema}-{self.model}-{self.kind}-b{self.batch}"
+
+    @property
+    def filename(self) -> str:
+        return f"{self.artifact_id}.hlo.txt"
+
+
+def default_artifact_specs() -> List[ArtifactSpec]:
+    """The full experiment grid (every table/figure in DESIGN.md §6)."""
+    specs: List[ArtifactSpec] = []
+    for schema in SCHEMAS:
+        for model in ALL_MODELS:
+            for mb in GRAD_MICROBATCHES:
+                specs.append(ArtifactSpec("grad", model, schema, batch=mb))
+            specs.append(ArtifactSpec("fwd", model, schema, batch=EVAL_BATCH))
+            for clip in CORE_CLIPS:
+                specs.append(ArtifactSpec("apply", model, schema, clip=clip))
+    # Clipping-design ablation (Table 7) only needs DeepFM on Criteo.
+    for clip in ABLATION_CLIPS:
+        specs.append(ArtifactSpec("apply", "deepfm", "criteo_synth", clip=clip))
+    return specs
+
+
+def input_layout(spec: ArtifactSpec, schema: Schema, cfg: ModelCfg) -> List[dict]:
+    """Positional input descriptors for one artifact."""
+    model = get_model(spec.model)
+    pspec = model.spec(schema, cfg)
+    params = [
+        {"name": e.name, "dtype": "f32", "shape": list(e.shape)} for e in pspec
+    ]
+    v = schema.total_vocab
+
+    def data_inputs(batch: int, with_y: bool) -> List[dict]:
+        ins = [{"name": "x_cat", "dtype": "i32", "shape": [batch, schema.n_cat]}]
+        if schema.n_dense:
+            ins.append({"name": "x_dense", "dtype": "f32", "shape": [batch, schema.n_dense]})
+        if with_y:
+            ins.append({"name": "y", "dtype": "f32", "shape": [batch]})
+        return ins
+
+    if spec.kind == "grad":
+        return params + data_inputs(spec.batch, with_y=True)
+    if spec.kind == "fwd":
+        return params + data_inputs(spec.batch, with_y=False)
+    if spec.kind == "apply":
+        slots = []
+        for tag in ("m", "v", "g"):
+            slots += [
+                {"name": f"{tag}.{e.name}", "dtype": "f32", "shape": list(e.shape)}
+                for e in pspec
+            ]
+        return (
+            params
+            + slots
+            + [
+                {"name": "counts", "dtype": "f32", "shape": [v]},
+                {"name": "hypers", "dtype": "f32", "shape": [8]},
+            ]
+        )
+    raise ValueError(f"unknown kind {spec.kind}")
+
+
+def output_arity(spec: ArtifactSpec, schema: Schema, cfg: ModelCfg) -> int:
+    n = len(get_model(spec.model).spec(schema, cfg))
+    if spec.kind == "grad":
+        return n + 2  # grads..., counts, loss
+    if spec.kind == "fwd":
+        return 1
+    if spec.kind == "apply":
+        return 3 * n
+    raise ValueError(spec.kind)
+
+
+def build_manifest(specs: List[ArtifactSpec], cfg: ModelCfg) -> dict:
+    artifacts = []
+    for s in specs:
+        schema = SCHEMAS[s.schema]
+        artifacts.append(
+            {
+                "id": s.artifact_id,
+                "kind": s.kind,
+                "model": s.model,
+                "schema": s.schema,
+                "batch": s.batch,
+                "clip": s.clip,
+                "file": s.filename,
+                "inputs": input_layout(s, schema, cfg),
+                "n_outputs": output_arity(s, schema, cfg),
+            }
+        )
+    param_specs = {}
+    for schema_name, schema in SCHEMAS.items():
+        for model_name in ALL_MODELS:
+            key = f"{schema_name}-{model_name}"
+            param_specs[key] = [
+                e.to_json_dict() for e in get_model(model_name).spec(schema, cfg)
+            ]
+    return {
+        "version": MANIFEST_VERSION,
+        "model_cfg": {
+            "embed_dim": cfg.embed_dim,
+            "hidden": list(cfg.hidden),
+            "n_cross": cfg.n_cross,
+            "use_pallas": cfg.use_pallas,
+        },
+        "adam": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-8},
+        "hypers_layout": [
+            "lr_dense", "lr_embed", "l2_embed", "clip_r",
+            "clip_zeta", "clip_t", "step", "reserved",
+        ],
+        "schemas": {name: s.to_json_dict() for name, s in SCHEMAS.items()},
+        "param_specs": param_specs,
+        "artifacts": artifacts,
+    }
+
+
+def write_manifest(path: str, manifest: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.write("\n")

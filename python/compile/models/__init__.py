@@ -1,0 +1,37 @@
+"""The four CTR prediction models evaluated by the paper.
+
+Each model module exposes:
+  ``spec(schema, cfg) -> ParamSpec``  — ordered positional parameter layout
+  ``fwd(params, x_cat, x_dense, schema, cfg) -> logits [b]``
+"""
+
+from . import common, dcn, dcnv2, deepfm, wd
+from .common import ModelCfg, ParamEntry, ParamSpec
+
+MODELS = {
+    "deepfm": deepfm,
+    "wd": wd,
+    "dcn": dcn,
+    "dcnv2": dcnv2,
+}
+
+
+def get_model(name: str):
+    try:
+        return MODELS[name]
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; known: {sorted(MODELS)}")
+
+
+__all__ = [
+    "MODELS",
+    "get_model",
+    "ModelCfg",
+    "ParamEntry",
+    "ParamSpec",
+    "common",
+    "deepfm",
+    "wd",
+    "dcn",
+    "dcnv2",
+]

@@ -1,0 +1,158 @@
+"""Shared building blocks for the CTR prediction models.
+
+Parameters are **ordered tuples of arrays**, not pytrees-with-names: the
+AOT interchange with Rust is positional, so every model publishes a
+``ParamSpec`` — an ordered list of ``(name, shape, group)`` entries — that
+is serialized into the artifact manifest. The Rust side constructs
+literals in exactly that order and re-associates names/groups from the
+manifest.
+
+Groups drive the optimizer semantics from the paper:
+  * ``embed``: the [V, d] id-embedding table — CowClip + L2 + eta_e
+  * ``wide``:  the [V, 1] first-order table — L2 + eta_e, **no clipping**
+               (the paper exempts the LR part, whose "embeddings" are
+               1-dimensional biases)
+  * ``dense``: MLP / cross weights — eta_dense, warmup, no L2, no clip
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..schemas import Schema
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Architecture hyperparameters (paper values scaled per DESIGN.md §4)."""
+
+    embed_dim: int = 10
+    hidden: Tuple[int, ...] = (128, 128, 128)
+    n_cross: int = 3
+    use_pallas: bool = True
+    # Rows per CowClip-kernel grid step in the AOT build. The TPU-shaped
+    # default in kernels/cowclip.py is 512 (VMEM-sized); the CPU artifacts
+    # use a much larger block because interpret-mode pays ~1ms of
+    # dynamic-slice machinery per grid step (measured in EXPERIMENTS.md
+    # §Perf) and has no VMEM constraint.
+    pallas_v_block: int = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: Tuple[int, ...]
+    group: str  # embed | wide | dense
+
+    def to_json_dict(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape), "group": self.group}
+
+
+ParamSpec = List[ParamEntry]
+
+
+def embed_spec(schema: Schema, cfg: ModelCfg) -> ParamSpec:
+    """The concatenated id-embedding table shared by every model."""
+    return [ParamEntry("embed_table", (schema.total_vocab, cfg.embed_dim), "embed")]
+
+
+def wide_spec(schema: Schema) -> ParamSpec:
+    """First-order (LR/FM linear) weights: one scalar per id + a bias."""
+    return [
+        ParamEntry("wide_table", (schema.total_vocab, 1), "wide"),
+        ParamEntry("wide_bias", (1,), "dense"),
+    ]
+
+
+def mlp_spec(in_dim: int, hidden: Sequence[int], prefix: str = "mlp") -> ParamSpec:
+    """3-layer (by default) ReLU MLP + scalar output head."""
+    spec: ParamSpec = []
+    d = in_dim
+    for i, h in enumerate(hidden):
+        spec.append(ParamEntry(f"{prefix}_w{i}", (d, h), "dense"))
+        spec.append(ParamEntry(f"{prefix}_b{i}", (h,), "dense"))
+        d = h
+    spec.append(ParamEntry(f"{prefix}_wout", (d, 1), "dense"))
+    spec.append(ParamEntry(f"{prefix}_bout", (1,), "dense"))
+    return spec
+
+
+def mlp_hidden_spec(in_dim: int, hidden: Sequence[int], prefix: str = "mlp") -> ParamSpec:
+    """MLP without the scalar head (DCN-style two-stream concat)."""
+    spec: ParamSpec = []
+    d = in_dim
+    for i, h in enumerate(hidden):
+        spec.append(ParamEntry(f"{prefix}_w{i}", (d, h), "dense"))
+        spec.append(ParamEntry(f"{prefix}_b{i}", (h,), "dense"))
+        d = h
+    return spec
+
+
+def dnn_input_dim(schema: Schema, cfg: ModelCfg) -> int:
+    """Dim of the deep-stream input: flattened embeddings ++ dense fields."""
+    return schema.n_cat * cfg.embed_dim + schema.n_dense
+
+
+class ParamReader:
+    """Sequential reader that pops arrays off the positional tuple in
+    spec order, so each model's ``fwd`` stays declarative."""
+
+    def __init__(self, params: Sequence[jnp.ndarray]):
+        self._params = params
+        self._i = 0
+
+    def take(self) -> jnp.ndarray:
+        p = self._params[self._i]
+        self._i += 1
+        return p
+
+    def done(self) -> None:
+        assert self._i == len(self._params), (
+            f"consumed {self._i} of {len(self._params)} params"
+        )
+
+
+def lookup_embeddings(embed_table: jnp.ndarray, x_cat: jnp.ndarray) -> jnp.ndarray:
+    """Gather per-field embedding vectors. ``x_cat`` holds *global* ids.
+
+    Returns [b, F, d].
+    """
+    return embed_table[x_cat]
+
+
+def wide_logit(wide_table: jnp.ndarray, wide_bias: jnp.ndarray, x_cat: jnp.ndarray) -> jnp.ndarray:
+    """First-order logit: bias + sum of per-id scalar weights. -> [b]"""
+    return jnp.sum(wide_table[x_cat][..., 0], axis=-1) + wide_bias[0]
+
+
+def mlp_forward(reader: ParamReader, x: jnp.ndarray, n_hidden: int) -> jnp.ndarray:
+    """ReLU MLP with scalar head. -> [b]"""
+    h = x
+    for _ in range(n_hidden):
+        w, b = reader.take(), reader.take()
+        h = jnp.maximum(h @ w + b, 0.0)
+    w, b = reader.take(), reader.take()
+    return (h @ w + b)[:, 0]
+
+
+def mlp_hidden_forward(reader: ParamReader, x: jnp.ndarray, n_hidden: int) -> jnp.ndarray:
+    """ReLU MLP without head. -> [b, hidden[-1]]"""
+    h = x
+    for _ in range(n_hidden):
+        w, b = reader.take(), reader.take()
+        h = jnp.maximum(h @ w + b, 0.0)
+    return h
+
+
+def deep_input(
+    embeds: jnp.ndarray, x_dense: jnp.ndarray, schema: Schema
+) -> jnp.ndarray:
+    """Deep-stream input: flatten embeddings, append continuous fields."""
+    b = embeds.shape[0]
+    flat = embeds.reshape(b, -1)
+    if schema.n_dense:
+        flat = jnp.concatenate([flat, x_dense], axis=-1)
+    return flat

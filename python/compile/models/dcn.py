@@ -1,0 +1,44 @@
+"""Deep & Cross Network (Wang et al. 2017).
+
+Cross stream over the concatenated input x0 (rank-1 cross layers):
+
+  x_{l+1} = x0 * (x_l . w_l) + b_l + x_l
+
+Two-stream output: logit = [cross_out ++ deep_hidden] @ w_out + b_out.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..schemas import Schema
+from . import common
+from .common import ModelCfg, ParamEntry, ParamReader, ParamSpec
+
+
+def spec(schema: Schema, cfg: ModelCfg) -> ParamSpec:
+    d0 = common.dnn_input_dim(schema, cfg)
+    s = common.embed_spec(schema, cfg)
+    for i in range(cfg.n_cross):
+        s.append(ParamEntry(f"cross_w{i}", (d0,), "dense"))
+        s.append(ParamEntry(f"cross_b{i}", (d0,), "dense"))
+    s += common.mlp_hidden_spec(d0, cfg.hidden)
+    s.append(ParamEntry("head_w", (d0 + cfg.hidden[-1], 1), "dense"))
+    s.append(ParamEntry("head_b", (1,), "dense"))
+    return s
+
+
+def fwd(params, x_cat: jnp.ndarray, x_dense: jnp.ndarray, schema: Schema, cfg: ModelCfg) -> jnp.ndarray:
+    r = ParamReader(params)
+    embed_table = r.take()
+    embeds = common.lookup_embeddings(embed_table, x_cat)
+    x0 = common.deep_input(embeds, x_dense, schema)            # [b, D]
+
+    xl = x0
+    for _ in range(cfg.n_cross):
+        w, b = r.take(), r.take()
+        xl = x0 * (xl @ w)[:, None] + b + xl
+    deep = common.mlp_hidden_forward(r, x0, len(cfg.hidden))
+    head_w, head_b = r.take(), r.take()
+    r.done()
+    return (jnp.concatenate([xl, deep], axis=-1) @ head_w + head_b)[:, 0]

@@ -1,0 +1,38 @@
+"""DeepFM (Guo et al. 2018): FM wide stream + deep MLP stream.
+
+  y_hat = w0 + sum_i w_i x_i  +  sum_{i<j} <v_i, v_j>  +  MLP(concat)
+
+The second-order FM term runs through the Pallas ``fm2`` kernel
+(``cfg.use_pallas=True``) or the jnp oracle, selected at trace time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..kernels import fm2, fm2_ref
+from ..schemas import Schema
+from . import common
+from .common import ModelCfg, ParamReader, ParamSpec
+
+
+def spec(schema: Schema, cfg: ModelCfg) -> ParamSpec:
+    return (
+        common.embed_spec(schema, cfg)
+        + common.wide_spec(schema)
+        + common.mlp_spec(common.dnn_input_dim(schema, cfg), cfg.hidden)
+    )
+
+
+def fwd(params, x_cat: jnp.ndarray, x_dense: jnp.ndarray, schema: Schema, cfg: ModelCfg) -> jnp.ndarray:
+    r = ParamReader(params)
+    embed_table = r.take()
+    wide_table, wide_bias = r.take(), r.take()
+
+    embeds = common.lookup_embeddings(embed_table, x_cat)      # [b, F, d]
+    first_order = common.wide_logit(wide_table, wide_bias, x_cat)
+    fm_fn = fm2 if cfg.use_pallas else fm2_ref
+    second_order = fm_fn(embeds)                               # [b]
+    deep = common.mlp_forward(r, common.deep_input(embeds, x_dense, schema), len(cfg.hidden))
+    r.done()
+    return first_order + second_order + deep

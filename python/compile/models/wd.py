@@ -1,0 +1,32 @@
+"""Wide & Deep (Cheng et al. 2016): LR wide stream + deep MLP stream.
+
+  y_hat = w0 + sum_i w_i x_i + MLP(concat)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..schemas import Schema
+from . import common
+from .common import ModelCfg, ParamReader, ParamSpec
+
+
+def spec(schema: Schema, cfg: ModelCfg) -> ParamSpec:
+    return (
+        common.embed_spec(schema, cfg)
+        + common.wide_spec(schema)
+        + common.mlp_spec(common.dnn_input_dim(schema, cfg), cfg.hidden)
+    )
+
+
+def fwd(params, x_cat: jnp.ndarray, x_dense: jnp.ndarray, schema: Schema, cfg: ModelCfg) -> jnp.ndarray:
+    r = ParamReader(params)
+    embed_table = r.take()
+    wide_table, wide_bias = r.take(), r.take()
+
+    embeds = common.lookup_embeddings(embed_table, x_cat)
+    wide = common.wide_logit(wide_table, wide_bias, x_cat)
+    deep = common.mlp_forward(r, common.deep_input(embeds, x_dense, schema), len(cfg.hidden))
+    r.done()
+    return wide + deep

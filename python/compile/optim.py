@@ -1,0 +1,39 @@
+"""Adam with loss-coupled L2 on the embedding tables (paper setting).
+
+The paper trains every model with Adam and an L2 penalty *on the
+embedding layers only* ("no L2-regularization is imposed on dense
+weights"). The L2 gradient ``lambda * w`` is added analytically in the
+apply step — equivalent to keeping the penalty in the loss, but it lets
+the ``grad`` artifact stay regularization-free so the Rust coordinator
+can sweep lambda without relowering.
+
+Ordering w.r.t. clipping follows the paper's observation that embeddings
+of absent ids keep shrinking under "continual application of
+L2-regularization": the L2 term is added **after** clipping, so it is
+never clipped away (a cnt=0 id has clip threshold 0, which would
+otherwise zero its weight-decay pull).
+
+The Rust reference optimizer (``rust/src/optim/adam.rs``) mirrors these
+constants bit-for-bit; the parity test drives both on identical inputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def adam_update(w, m, v, g, lr, step):
+    """One Adam step. ``step`` is the 1-based step index (float32 scalar).
+
+    Returns (w', m', v').
+    """
+    m2 = BETA1 * m + (1.0 - BETA1) * g
+    v2 = BETA2 * v + (1.0 - BETA2) * (g * g)
+    mhat = m2 / (1.0 - BETA1**step)
+    vhat = v2 / (1.0 - BETA2**step)
+    w2 = w - lr * mhat / (jnp.sqrt(vhat) + EPS)
+    return w2, m2, v2

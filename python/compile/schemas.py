@@ -1,0 +1,94 @@
+"""Dataset schemas shared between the compile path and the Rust runtime.
+
+A schema describes the *shape* of a CTR dataset: how many continuous
+(dense) fields it has, and the vocabulary size of every categorical field.
+Categorical ids are stored **globally offset**: field ``j`` owns the id
+range ``[offset[j], offset[j] + vocab[j])`` in one concatenated embedding
+table, which is the standard single-table trick used by DLRM-style
+systems.
+
+The Rust side (``rust/src/data/schema.rs``) defines the same presets; the
+AOT manifest (``artifacts/manifest.json``) embeds this schema so the Rust
+test-suite cross-checks that the two never drift.
+
+The presets are *synthetic, scaled-down* analogues of the paper's
+datasets (see DESIGN.md §4): same field structure (13 dense + 26
+categorical for Criteo, 24 categorical for Avazu), Zipf-distributed ids,
+vocabularies shrunk ~1/8000 so that the batch-size scaling span of the
+paper (1K → 128K) maps onto 64 → 8K while preserving the
+``b * P(id in x)`` regime that drives the paper's analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Field layout of a CTR dataset."""
+
+    name: str
+    n_dense: int
+    vocab_sizes: tuple  # vocab size per categorical field
+
+    @property
+    def n_cat(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def offsets(self) -> List[int]:
+        """Global id offset of each categorical field."""
+        offs, acc = [], 0
+        for v in self.vocab_sizes:
+            offs.append(acc)
+            acc += v
+        return offs
+
+    def to_json_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "n_dense": self.n_dense,
+            "vocab_sizes": list(self.vocab_sizes),
+            "total_vocab": self.total_vocab,
+            "offsets": self.offsets,
+        }
+
+
+# Synthetic Criteo: 13 dense + 26 categorical fields. Vocab sizes span
+# 4 decades, mimicking Figure 4 of the paper (a few huge long-tail fields,
+# many mid-sized ones, and tiny near-binary fields like "gender").
+CRITEO_SYNTH = Schema(
+    name="criteo_synth",
+    n_dense=13,
+    vocab_sizes=(
+        10000, 10000, 8000, 4000, 4000, 2000, 2000, 2000,
+        1000, 1000, 1000, 500, 500, 500, 500, 300,
+        300, 200, 100, 100, 50, 20, 10, 4, 3, 2,
+    ),
+)
+
+# Synthetic Avazu: 24 categorical fields, no dense fields.
+AVAZU_SYNTH = Schema(
+    name="avazu_synth",
+    n_dense=0,
+    vocab_sizes=(
+        8000, 8000, 4000, 2000, 2000, 1500, 1500, 1000,
+        500, 500, 500, 300, 300, 300, 200, 200,
+        100, 100, 50, 20, 10, 5, 3, 2,
+    ),
+)
+
+SCHEMAS = {s.name: s for s in (CRITEO_SYNTH, AVAZU_SYNTH)}
+
+
+def get_schema(name: str) -> Schema:
+    try:
+        return SCHEMAS[name]
+    except KeyError:
+        raise KeyError(f"unknown schema {name!r}; known: {sorted(SCHEMAS)}")

@@ -1,0 +1,129 @@
+"""Builders for the three AOT program kinds the Rust coordinator runs.
+
+  * ``grad``  (per model, schema, microbatch): forward + backward + id
+    occurrence counts. Pure w.r.t. hyperparameters so gradients can be
+    tree-reduced across simulated workers and accumulated across
+    microbatches to form an arbitrarily large effective batch.
+  * ``apply`` (per model, schema, clip mode): clipping + L2 + Adam over
+    the accumulated gradients. All optimizer hyperparameters arrive in a
+    runtime ``hypers`` vector so the Rust scaling engine can sweep them
+    without relowering.
+  * ``fwd``   (per model, schema, eval batch): logits for evaluation.
+
+Positional interfaces only — see ``models/common.py`` for the param-spec
+contract and ``manifest.py`` for the JSON the Rust side consumes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import clipping, optim
+from .clipping import H_L2_EMBED, H_LR_DENSE, H_LR_EMBED, H_STEP
+from .models import ModelCfg, get_model
+from .schemas import Schema
+
+
+def bce_with_logits(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Numerically stable mean binary cross-entropy."""
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def build_grad_fn(model_name: str, schema: Schema, cfg: ModelCfg) -> Tuple[Callable, List[str]]:
+    """(params..., x_cat, [x_dense], y) -> (grads..., counts, loss).
+
+    Returns the function and the names of its non-param inputs.
+    """
+    model = get_model(model_name)
+    n_params = len(model.spec(schema, cfg))
+    has_dense = schema.n_dense > 0
+
+    def fn(*args):
+        params = args[:n_params]
+        rest = args[n_params:]
+        if has_dense:
+            x_cat, x_dense, y = rest
+        else:
+            (x_cat, y) = rest
+            x_dense = jnp.zeros((x_cat.shape[0], 0), jnp.float32)
+
+        def loss_fn(ps):
+            logits = model.fwd(ps, x_cat, x_dense, schema, cfg)
+            return bce_with_logits(logits, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        counts = jnp.zeros((schema.total_vocab,), jnp.float32).at[x_cat.reshape(-1)].add(1.0)
+        return (*grads, counts, loss)
+
+    inputs = ["x_cat", "x_dense", "y"] if has_dense else ["x_cat", "y"]
+    return fn, inputs
+
+
+def build_apply_fn(model_name: str, schema: Schema, cfg: ModelCfg, clip_mode: str) -> Callable:
+    """(params..., m..., v..., grads..., counts, hypers) -> (params'..., m'..., v'...)."""
+    model = get_model(model_name)
+    spec = model.spec(schema, cfg)
+    n = len(spec)
+    clip_fn = clipping.get_clip(clip_mode)
+
+    def fn(*args):
+        params = args[:n]
+        ms = args[n : 2 * n]
+        vs = args[2 * n : 3 * n]
+        grads = args[3 * n : 4 * n]
+        counts = args[4 * n]
+        hypers = args[4 * n + 1]
+
+        lr_dense = hypers[H_LR_DENSE]
+        lr_embed = hypers[H_LR_EMBED]
+        l2 = hypers[H_L2_EMBED]
+        step = hypers[H_STEP]
+
+        new_p, new_m, new_v = [], [], []
+        for entry, w, m, v, g in zip(spec, params, ms, vs, grads):
+            if entry.group == "embed":
+                if clip_mode == "cowclip":
+                    g = clip_fn(g, w, counts, hypers, schema,
+                                use_pallas=cfg.use_pallas,
+                                v_block=cfg.pallas_v_block)
+                else:
+                    g = clip_fn(g, w, counts, hypers, schema)
+                g = g + l2 * w
+                lr = lr_embed
+            elif entry.group == "wide":
+                # Paper exempts the 1-d LR "embeddings" from clipping but
+                # keeps them under embedding LR + L2.
+                g = g + l2 * w
+                lr = lr_embed
+            else:  # dense
+                lr = lr_dense
+            w2, m2, v2 = optim.adam_update(w, m, v, g, lr, step)
+            new_p.append(w2)
+            new_m.append(m2)
+            new_v.append(v2)
+        return (*new_p, *new_m, *new_v)
+
+    return fn
+
+
+def build_fwd_fn(model_name: str, schema: Schema, cfg: ModelCfg) -> Tuple[Callable, List[str]]:
+    """(params..., x_cat, [x_dense]) -> (logits,)"""
+    model = get_model(model_name)
+    n_params = len(model.spec(schema, cfg))
+    has_dense = schema.n_dense > 0
+
+    def fn(*args):
+        params = args[:n_params]
+        rest = args[n_params:]
+        if has_dense:
+            x_cat, x_dense = rest
+        else:
+            (x_cat,) = rest
+            x_dense = jnp.zeros((x_cat.shape[0], 0), jnp.float32)
+        return (model.fwd(params, x_cat, x_dense, schema, cfg),)
+
+    inputs = ["x_cat", "x_dense"] if has_dense else ["x_cat"]
+    return fn, inputs

@@ -1,0 +1,93 @@
+"""AOT manifest + lowering: the compile-path/Rust contract."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import manifest as mf
+from compile.aot import lower_artifact, main as aot_main, source_fingerprint
+from compile.models import ModelCfg, get_model
+from compile.schemas import SCHEMAS
+
+CFG = ModelCfg(use_pallas=False)
+
+
+def test_default_specs_cover_the_experiment_grid():
+    specs = mf.default_artifact_specs()
+    ids = {s.artifact_id for s in specs}
+    assert len(ids) == len(specs), "duplicate artifact ids"
+    # every model on every schema has grad@{64,512}, fwd, apply none+cowclip
+    for schema in ("criteo_synth", "avazu_synth"):
+        for model in mf.ALL_MODELS:
+            assert f"{schema}-{model}-grad-b64" in ids
+            assert f"{schema}-{model}-grad-b512" in ids
+            assert f"{schema}-{model}-fwd-b{mf.EVAL_BATCH}" in ids
+            assert f"{schema}-{model}-apply-none" in ids
+            assert f"{schema}-{model}-apply-cowclip" in ids
+    # Table 7 ablation artifacts
+    for clip in mf.ABLATION_CLIPS:
+        assert f"criteo_synth-deepfm-apply-{clip}" in ids
+
+
+@pytest.mark.parametrize("kind", ["grad", "fwd", "apply"])
+def test_input_layout_arity(kind):
+    schema = SCHEMAS["criteo_synth"]
+    n = len(get_model("deepfm").spec(schema, CFG))
+    spec = mf.ArtifactSpec(kind, "deepfm", "criteo_synth", batch=64, clip="none")
+    ins = mf.input_layout(spec, schema, CFG)
+    if kind == "grad":
+        assert len(ins) == n + 3  # x_cat, x_dense, y
+        assert ins[-1]["name"] == "y"
+    elif kind == "fwd":
+        assert len(ins) == n + 2
+    else:
+        assert len(ins) == 4 * n + 2
+        assert ins[-1] == {"name": "hypers", "dtype": "f32", "shape": [8]}
+    assert mf.output_arity(spec, schema, CFG) == {
+        "grad": n + 2, "fwd": 1, "apply": 3 * n
+    }[kind]
+
+
+def test_avazu_layout_has_no_dense_input():
+    schema = SCHEMAS["avazu_synth"]
+    spec = mf.ArtifactSpec("grad", "wd", "avazu_synth", batch=64)
+    names = [i["name"] for i in mf.input_layout(spec, schema, CFG)]
+    assert "x_dense" not in names
+    assert names[-2:] == ["x_cat", "y"]
+
+
+def test_manifest_json_roundtrip():
+    m = mf.build_manifest(mf.default_artifact_specs(), CFG)
+    s = json.dumps(m)
+    m2 = json.loads(s)
+    assert m2["version"] == mf.MANIFEST_VERSION
+    assert set(m2["schemas"]) == {"criteo_synth", "avazu_synth"}
+    assert len(m2["param_specs"]) == 8
+    for art in m2["artifacts"]:
+        assert art["kind"] in ("grad", "apply", "fwd")
+        assert art["n_outputs"] > 0
+
+
+def test_lower_small_artifact_produces_hlo_text():
+    spec = mf.ArtifactSpec("fwd", "wd", "avazu_synth", batch=4)
+    text = lower_artifact(spec, CFG)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+def test_fingerprint_changes_with_source(tmp_path):
+    fp1 = source_fingerprint()
+    assert fp1 == source_fingerprint(), "fingerprint must be deterministic"
+    assert len(fp1) == 64
+
+
+def test_aot_cli_only_filter(tmp_path):
+    rc = aot_main([
+        "--out-dir", str(tmp_path), "--only", "avazu_synth-wd-fwd", "--no-pallas",
+    ])
+    assert rc == 0
+    files = os.listdir(tmp_path)
+    assert any(f.endswith(".hlo.txt") for f in files)
+    assert os.path.exists(os.path.join(tmp_path, "manifest.json"))

@@ -1,0 +1,110 @@
+"""Clipping-variant semantics (Table 7 ablation grid)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import clipping
+from compile.clipping import (
+    H_CLIP_R, H_CLIP_T, H_CLIP_ZETA, N_HYPERS, get_clip,
+)
+from compile.schemas import CRITEO_SYNTH, Schema
+
+TINY = Schema(name="tiny", n_dense=2, vocab_sizes=(4, 3, 2))
+
+
+def hyp(r=1.0, zeta=1e-4, clip_t=1.0):
+    h = np.zeros(N_HYPERS, np.float32)
+    h[H_CLIP_R], h[H_CLIP_ZETA], h[H_CLIP_T] = r, zeta, clip_t
+    return jnp.asarray(h)
+
+
+def setup(seed=0, scale=5.0):
+    v, d = TINY.total_vocab, 4
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = jax.random.normal(k[0], (v, d)) * scale
+    w = jax.random.normal(k[1], (v, d)) * 0.1
+    counts = jnp.floor(jax.random.uniform(k[2], (v,)) * 3)
+    return g, w, counts
+
+
+def test_none_is_identity():
+    g, w, c = setup()
+    np.testing.assert_array_equal(get_clip("none")(g, w, c, hyp(), TINY), g)
+
+
+def test_global_clips_total_norm():
+    g, w, c = setup()
+    out = get_clip("global")(g, w, c, hyp(clip_t=1.0), TINY)
+    assert float(jnp.linalg.norm(out)) <= 1.0 + 1e-5
+    # direction preserved
+    np.testing.assert_allclose(
+        out / jnp.linalg.norm(out), g / jnp.linalg.norm(g), rtol=1e-5
+    )
+
+
+def test_global_noop_below_threshold():
+    g, w, c = setup(scale=1e-4)
+    out = get_clip("global")(g, w, c, hyp(clip_t=100.0), TINY)
+    np.testing.assert_allclose(out, g, rtol=1e-6)
+
+
+def test_field_clips_each_field_independently():
+    g, w, c = setup()
+    out = get_clip("field")(g, w, c, hyp(clip_t=0.5), TINY)
+    for lo, vs in zip(TINY.offsets, TINY.vocab_sizes):
+        assert float(jnp.linalg.norm(out[lo : lo + vs])) <= 0.5 + 1e-5
+
+
+def test_column_clips_each_row():
+    g, w, c = setup()
+    out = get_clip("column")(g, w, c, hyp(clip_t=0.25), TINY)
+    norms = jnp.linalg.norm(out, axis=-1)
+    assert bool(jnp.all(norms <= 0.25 + 1e-5))
+
+
+def test_adafield_threshold_uses_field_count_and_weight_norm():
+    g, w, c = setup()
+    out = get_clip("adafield")(g, w, c, hyp(r=1.0, zeta=1e-6), TINY)
+    for lo, vs in zip(TINY.offsets, TINY.vocab_sizes):
+        gf, wf = g[lo : lo + vs], w[lo : lo + vs]
+        cnt_f = float(jnp.sum(c[lo : lo + vs]))
+        thresh = cnt_f * max(float(jnp.linalg.norm(wf)), 1e-6)
+        assert float(jnp.linalg.norm(out[lo : lo + vs])) <= thresh + 1e-4
+
+
+def test_cowclip_row_norm_bound():
+    g, w, c = setup()
+    out = get_clip("cowclip")(g, w, c, hyp(r=1.0, zeta=1e-5), TINY, use_pallas=False)
+    wnorm = jnp.linalg.norm(w, axis=-1)
+    bound = c * jnp.maximum(wnorm, 1e-5)
+    norms = jnp.linalg.norm(out, axis=-1)
+    assert bool(jnp.all(norms <= bound + 1e-4))
+
+
+@pytest.mark.parametrize("mode", sorted(clipping.CLIP_MODES))
+def test_all_modes_preserve_shape_and_finiteness(mode):
+    g, w, c = setup()
+    kwargs = {"use_pallas": False} if mode == "cowclip" else {}
+    out = clipping.CLIP_MODES[mode](g, w, c, hyp(), TINY, **kwargs)
+    assert out.shape == g.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("mode", ["global", "field", "column", "adafield", "cowclip"])
+def test_clipping_never_increases_row_norm(mode):
+    g, w, c = setup()
+    kwargs = {"use_pallas": False} if mode == "cowclip" else {}
+    out = clipping.CLIP_MODES[mode](g, w, c, hyp(), TINY, **kwargs)
+    assert bool(
+        jnp.all(jnp.linalg.norm(out, axis=-1) <= jnp.linalg.norm(g, axis=-1) + 1e-5)
+    )
+
+
+def test_field_slices_cover_criteo():
+    slices = clipping._field_slices(CRITEO_SYNTH)
+    assert slices[0][0] == 0
+    assert slices[-1][1] == CRITEO_SYNTH.total_vocab
+    for (a, b), (c2, _) in zip(slices, slices[1:]):
+        assert b == c2

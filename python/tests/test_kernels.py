@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (vocab sizes that do and don't divide the block
+size, tiny/large field counts, degenerate d=1) and value regimes
+(zero gradients, huge norms, zero counts). This is the core correctness
+signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cowclip_clip, cowclip_clip_ref, fm2, fm2_bwd_ref, fm2_ref
+from compile.kernels.cowclip import DEFAULT_V_BLOCK
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- cowclip
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    v=st.integers(1, 1400),
+    d=st.sampled_from([1, 4, 10, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    r=st.sampled_from([0.1, 1.0, 10.0]),
+    zeta=st.sampled_from([0.0, 1e-5, 1e-3]),
+)
+def test_cowclip_matches_ref(v, d, seed, r, zeta):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = jax.random.normal(k1, (v, d))
+    w = jax.random.normal(k2, (v, d)) * 0.01
+    counts = jnp.floor(jax.random.uniform(k3, (v,)) * 4.0)
+    got = cowclip_clip(g, w, counts, jnp.float32(r), jnp.float32(zeta))
+    want = cowclip_clip_ref(g, w, counts, jnp.float32(r), jnp.float32(zeta))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("v_block", [32, 128, DEFAULT_V_BLOCK, 2048])
+def test_cowclip_block_size_invariant(v_block):
+    """Result must not depend on the VMEM tile size."""
+    g = rand(0, (999, 10))
+    w = rand(1, (999, 10), 0.01)
+    counts = jnp.floor(jax.random.uniform(jax.random.PRNGKey(2), (999,)) * 3.0)
+    got = cowclip_clip(g, w, counts, jnp.float32(1.0), jnp.float32(1e-4), v_block=v_block)
+    want = cowclip_clip_ref(g, w, counts, jnp.float32(1.0), jnp.float32(1e-4))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_cowclip_zero_count_zeroes_nothing_extra():
+    """cnt=0 rows have zero threshold; their (zero) gradients stay zero,
+    and nonzero-count rows are untouched when under the threshold."""
+    g = jnp.zeros((8, 4)).at[3].set(jnp.array([1e-6, 0, 0, 0]))
+    w = jnp.full((8, 4), 0.1)
+    counts = jnp.zeros((8,)).at[3].set(1.0)
+    out = cowclip_clip(g, w, counts, jnp.float32(1.0), jnp.float32(1e-5))
+    np.testing.assert_allclose(out, g, atol=1e-9)
+
+
+def test_cowclip_clips_large_gradient_to_threshold():
+    g = jnp.zeros((4, 4)).at[0].set(jnp.array([100.0, 0, 0, 0]))
+    w = jnp.full((4, 4), 0.5)  # ||w_row|| = 1.0
+    counts = jnp.ones((4,)) * 2.0
+    out = cowclip_clip(g, w, counts, jnp.float32(1.0), jnp.float32(1e-5))
+    # threshold = 2 * max(1.0, 1e-5) = 2.0
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(out[0])), 2.0, rtol=1e-5
+    )
+
+
+def test_cowclip_zeta_floor_engages_for_tiny_weights():
+    g = jnp.ones((2, 4))  # norm 2.0
+    w = jnp.zeros((2, 4))  # ||w|| = 0 -> threshold floor = zeta
+    counts = jnp.ones((2,))
+    zeta = jnp.float32(0.5)
+    out = cowclip_clip(g, w, counts, jnp.float32(1.0), zeta)
+    np.testing.assert_allclose(float(jnp.linalg.norm(out[0])), 0.5, rtol=1e-5)
+
+
+def test_cowclip_direction_preserved():
+    g = rand(5, (64, 10), 10.0)
+    w = rand(6, (64, 10), 0.01)
+    counts = jnp.ones((64,))
+    out = cowclip_clip(g, w, counts, jnp.float32(1.0), jnp.float32(1e-4))
+    # clipped gradient is a nonnegative scalar multiple of the input
+    cross = jnp.sum(out * g, axis=-1)
+    assert bool(jnp.all(cross >= 0))
+
+
+# ---------------------------------------------------------------- fm2
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    b=st.integers(1, 700),
+    f=st.sampled_from([2, 5, 26]),
+    d=st.sampled_from([1, 4, 10]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fm2_matches_ref(b, f, d, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (b, f, d))
+    np.testing.assert_allclose(fm2(v), fm2_ref(v), rtol=1e-4, atol=1e-4)
+
+
+def test_fm2_known_value():
+    # two fields, d=1: fm2 = v0*v1
+    v = jnp.array([[[2.0], [3.0]]])
+    np.testing.assert_allclose(fm2(v), [6.0], rtol=1e-6)
+
+
+def test_fm2_pairwise_bruteforce():
+    v = rand(7, (13, 6, 4))
+    brute = jnp.zeros((13,))
+    for i in range(6):
+        for j in range(i + 1, 6):
+            brute = brute + jnp.sum(v[:, i] * v[:, j], axis=-1)
+    np.testing.assert_allclose(fm2(v), brute, rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(b=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_fm2_grad_matches_ref_grad(b, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (b, 8, 5))
+    ct = jax.random.normal(jax.random.PRNGKey(seed + 1), (b,))
+    g_pallas = jax.vjp(fm2, v)[1](ct)[0]
+    np.testing.assert_allclose(g_pallas, fm2_bwd_ref(v, ct), rtol=1e-4, atol=1e-4)
+
+
+def test_fm2_grad_through_jit():
+    v = rand(9, (32, 26, 10))
+    f = jax.jit(lambda v: jnp.sum(fm2(v) ** 2))
+    g = jax.grad(f)(v)
+    gr = jax.grad(lambda v: jnp.sum(fm2_ref(v) ** 2))(v)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)

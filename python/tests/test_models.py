@@ -1,0 +1,153 @@
+"""L2 model correctness: shapes, spec consistency, architectural semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import MODELS, ModelCfg, get_model
+from compile.models import common
+from compile.schemas import AVAZU_SYNTH, CRITEO_SYNTH
+
+CFG = ModelCfg(use_pallas=False)  # oracles: faster to trace in tests
+
+
+def init_params(model_name, schema, cfg, seed=0, embed_scale=0.01):
+    model = get_model(model_name)
+    params = []
+    key = jax.random.PRNGKey(seed)
+    for e in model.spec(schema, cfg):
+        key, sub = jax.random.split(key)
+        scale = embed_scale if e.group in ("embed", "wide") else 0.1
+        params.append(jax.random.normal(sub, e.shape) * scale)
+    return params
+
+
+def make_batch(schema, b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    cols = []
+    for off, vs in zip(schema.offsets, schema.vocab_sizes):
+        key, sub = jax.random.split(key)
+        cols.append(jax.random.randint(sub, (b,), off, off + vs))
+    x_cat = jnp.stack(cols, axis=1).astype(jnp.int32)
+    x_dense = jax.random.normal(ks[1], (b, schema.n_dense))
+    y = (jax.random.uniform(ks[2], (b,)) < 0.3).astype(jnp.float32)
+    return x_cat, x_dense, y
+
+
+@pytest.mark.parametrize("model_name", sorted(MODELS))
+@pytest.mark.parametrize("schema", [CRITEO_SYNTH, AVAZU_SYNTH], ids=lambda s: s.name)
+def test_fwd_shape_and_finite(model_name, schema):
+    params = init_params(model_name, schema, CFG)
+    x_cat, x_dense, _ = make_batch(schema, 17)
+    logits = get_model(model_name).fwd(params, x_cat, x_dense, schema, CFG)
+    assert logits.shape == (17,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("model_name", sorted(MODELS))
+def test_spec_groups_and_embedding_dominance(model_name):
+    spec = get_model(model_name).spec(CRITEO_SYNTH, CFG)
+    names = [e.name for e in spec]
+    assert len(names) == len(set(names)), "duplicate param names"
+    groups = {e.group for e in spec}
+    assert groups <= {"embed", "wide", "dense"}
+    assert spec[0].group == "embed"
+    n_embed = sum(np.prod(e.shape) for e in spec if e.group in ("embed", "wide"))
+    n_total = sum(np.prod(e.shape) for e in spec)
+    # The paper's Table 1 point: embeddings dominate the parameter count.
+    assert n_embed / n_total > 0.5
+
+
+def test_wd_is_linear_in_wide_table():
+    """W&D wide stream is exactly LR: doubling wide weights doubles the
+    first-order contribution."""
+    schema = CRITEO_SYNTH
+    params = init_params("wd", schema, CFG)
+    x_cat, x_dense, _ = make_batch(schema, 8)
+    wd = get_model("wd")
+    base = wd.fwd(params, x_cat, x_dense, schema, CFG)
+    p2 = list(params)
+    p2[1] = params[1] * 2.0  # wide_table
+    doubled = wd.fwd(p2, x_cat, x_dense, schema, CFG)
+    zeroed = list(params)
+    zeroed[1] = jnp.zeros_like(params[1])
+    no_wide = wd.fwd(zeroed, x_cat, x_dense, schema, CFG)
+    # doubling the wide table adds exactly one more copy of its logit
+    np.testing.assert_allclose(doubled - base, base - no_wide, rtol=1e-3, atol=1e-5)
+
+
+def test_deepfm_equals_wd_plus_fm():
+    """DeepFM = W&D + FM second-order term (shared spec layout)."""
+    from compile.kernels import fm2_ref
+
+    schema = CRITEO_SYNTH
+    params = init_params("deepfm", schema, CFG)
+    x_cat, x_dense, _ = make_batch(schema, 11)
+    d = get_model("deepfm").fwd(params, x_cat, x_dense, schema, CFG)
+    w = get_model("wd").fwd(params, x_cat, x_dense, schema, CFG)
+    embeds = params[0][x_cat]
+    np.testing.assert_allclose(d - w, fm2_ref(embeds), rtol=1e-4, atol=1e-5)
+
+
+def test_dcn_cross_zero_weights_is_identity():
+    """With w_l = b_l = 0 the DCN cross stream is the identity on x0."""
+    schema = CRITEO_SYNTH
+    cfg = CFG
+    model = get_model("dcn")
+    params = init_params("dcn", schema, cfg)
+    spec = model.spec(schema, cfg)
+    params = [
+        jnp.zeros_like(p) if e.name.startswith("cross_") else p
+        for e, p in zip(spec, params)
+    ]
+    x_cat, x_dense, _ = make_batch(schema, 5)
+    # head sees concat(x0, deep); verify via manual recomputation
+    embeds = params[0][x_cat]
+    x0 = common.deep_input(embeds, x_dense, schema)
+    r = common.ParamReader([p for e, p in zip(spec, params) if e.name.startswith("mlp_")])
+    deep = common.mlp_hidden_forward(r, x0, len(cfg.hidden))
+    head_w = params[-2]
+    head_b = params[-1]
+    want = (jnp.concatenate([x0, deep], axis=-1) @ head_w + head_b)[:, 0]
+    got = model.fwd(params, x_cat, x_dense, schema, cfg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dcnv2_cross_layer_formula():
+    """One DCNv2 cross layer: x1 = x0 ⊙ (W x0 + b) + x0."""
+    schema = AVAZU_SYNTH
+    cfg = ModelCfg(use_pallas=False, n_cross=1, hidden=(8,))
+    model = get_model("dcnv2")
+    params = init_params("dcnv2", schema, cfg)
+    spec = model.spec(schema, cfg)
+    x_cat, x_dense, _ = make_batch(schema, 3)
+    embeds = params[0][x_cat]
+    x0 = common.deep_input(embeds, x_dense, schema)
+    by_name = {e.name: p for e, p in zip(spec, params)}
+    x1 = x0 * (x0 @ by_name["cross_W0"] + by_name["cross_b0"]) + x0
+    h = jnp.maximum(x0 @ by_name["mlp_w0"] + by_name["mlp_b0"], 0.0)
+    want = (jnp.concatenate([x1, h], axis=-1) @ by_name["head_w"] + by_name["head_b"])[:, 0]
+    got = model.fwd(params, x_cat, x_dense, schema, cfg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_and_oracle_models_agree():
+    schema = CRITEO_SYNTH
+    cfg_p = ModelCfg(use_pallas=True)
+    cfg_r = ModelCfg(use_pallas=False)
+    params = init_params("deepfm", schema, cfg_p)
+    x_cat, x_dense, _ = make_batch(schema, 64)
+    a = get_model("deepfm").fwd(params, x_cat, x_dense, schema, cfg_p)
+    b = get_model("deepfm").fwd(params, x_cat, x_dense, schema, cfg_r)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_schema_offsets_partition_vocab():
+    for schema in (CRITEO_SYNTH, AVAZU_SYNTH):
+        offs = schema.offsets
+        assert offs[0] == 0
+        for i in range(1, len(offs)):
+            assert offs[i] == offs[i - 1] + schema.vocab_sizes[i - 1]
+        assert offs[-1] + schema.vocab_sizes[-1] == schema.total_vocab

@@ -1,0 +1,227 @@
+"""End-to-end semantics of the grad / apply / fwd program builders."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim
+from compile.clipping import (
+    H_CLIP_R, H_CLIP_ZETA, H_L2_EMBED, H_LR_DENSE, H_LR_EMBED, H_STEP, N_HYPERS,
+)
+from compile.kernels import cowclip_clip_ref
+from compile.models import ModelCfg, get_model
+from compile.schemas import Schema
+from compile.train_step import bce_with_logits, build_apply_fn, build_fwd_fn, build_grad_fn
+
+TINY = Schema(name="tiny", n_dense=3, vocab_sizes=(5, 4, 2))
+CFG = ModelCfg(use_pallas=False, hidden=(8, 8), n_cross=2, embed_dim=4)
+
+
+def init_params(model_name, schema=TINY, cfg=CFG, seed=0):
+    model = get_model(model_name)
+    params = []
+    key = jax.random.PRNGKey(seed)
+    for e in model.spec(schema, cfg):
+        key, sub = jax.random.split(key)
+        scale = 0.01 if e.group in ("embed", "wide") else 0.2
+        params.append(jax.random.normal(sub, e.shape) * scale)
+    return params
+
+
+def make_batch(schema, b, seed=1):
+    key = jax.random.PRNGKey(seed)
+    cols = []
+    for off, vs in zip(schema.offsets, schema.vocab_sizes):
+        key, sub = jax.random.split(key)
+        cols.append(jax.random.randint(sub, (b,), off, off + vs))
+    x_cat = jnp.stack(cols, axis=1).astype(jnp.int32)
+    key, k1, k2 = jax.random.split(key, 3)
+    x_dense = jax.random.normal(k1, (b, schema.n_dense))
+    y = (jax.random.uniform(k2, (b,)) < 0.4).astype(jnp.float32)
+    return x_cat, x_dense, y
+
+
+def hypers(lr_dense=1e-3, lr_embed=1e-3, l2=0.0, r=1.0, zeta=1e-5, clip_t=1e9, step=1.0):
+    h = np.zeros(N_HYPERS, np.float32)
+    h[H_LR_DENSE], h[H_LR_EMBED], h[H_L2_EMBED] = lr_dense, lr_embed, l2
+    h[H_CLIP_R], h[H_CLIP_ZETA], h[5], h[H_STEP] = r, zeta, clip_t, step
+    return jnp.asarray(h)
+
+
+def test_bce_matches_manual():
+    logits = jnp.array([0.0, 2.0, -3.0])
+    y = jnp.array([1.0, 0.0, 1.0])
+    p = jax.nn.sigmoid(logits)
+    want = -jnp.mean(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))
+    np.testing.assert_allclose(bce_with_logits(logits, y), want, rtol=1e-5)
+
+
+def test_counts_are_exact_occurrences():
+    fn, _ = build_grad_fn("wd", TINY, CFG)
+    params = init_params("wd")
+    x_cat, x_dense, y = make_batch(TINY, 32)
+    out = fn(*params, x_cat, x_dense, y)
+    counts = out[-2]
+    want = np.zeros(TINY.total_vocab)
+    for gid in np.asarray(x_cat).flatten():
+        want[gid] += 1
+    np.testing.assert_array_equal(np.asarray(counts), want)
+    assert counts.sum() == 32 * TINY.n_cat
+
+
+def test_grad_zero_for_absent_ids():
+    fn, _ = build_grad_fn("deepfm", TINY, CFG)
+    params = init_params("deepfm")
+    x_cat, x_dense, y = make_batch(TINY, 4)
+    out = fn(*params, x_cat, x_dense, y)
+    g_embed, counts = out[0], out[-2]
+    absent = np.asarray(counts) == 0
+    assert absent.any(), "test batch should miss some ids"
+    np.testing.assert_array_equal(np.asarray(g_embed)[absent], 0.0)
+
+
+def test_grad_matches_jax_grad_directly():
+    model = get_model("dcn")
+    fn, _ = build_grad_fn("dcn", TINY, CFG)
+    params = init_params("dcn")
+    x_cat, x_dense, y = make_batch(TINY, 16)
+    out = fn(*params, x_cat, x_dense, y)
+    n = len(params)
+    grads, loss = out[:n], out[-1]
+
+    def loss_fn(ps):
+        return bce_with_logits(model.fwd(ps, x_cat, x_dense, TINY, CFG), y)
+
+    want_loss, want_grads = jax.value_and_grad(loss_fn)(params)
+    np.testing.assert_allclose(loss, want_loss, rtol=1e-6)
+    for g, wg in zip(grads, want_grads):
+        np.testing.assert_allclose(g, wg, rtol=1e-5, atol=1e-7)
+
+
+def test_microbatch_accumulation_equals_big_batch():
+    """mean-of-means over equal microbatches == big-batch gradient; counts
+    add. This is the invariant the Rust coordinator's accumulator relies
+    on (DESIGN.md §2)."""
+    fn, _ = build_grad_fn("deepfm", TINY, CFG)
+    params = init_params("deepfm")
+    x_cat, x_dense, y = make_batch(TINY, 64)
+    big = fn(*params, x_cat, x_dense, y)
+    n = len(params)
+
+    acc = [jnp.zeros_like(g) for g in big[:n]]
+    acc_counts = jnp.zeros_like(big[-2])
+    for i in range(4):
+        sl = slice(16 * i, 16 * (i + 1))
+        out = fn(*params, x_cat[sl], x_dense[sl], y[sl])
+        acc = [a + g / 4.0 for a, g in zip(acc, out[:n])]
+        acc_counts = acc_counts + out[-2]
+    for a, g in zip(acc, big[:n]):
+        np.testing.assert_allclose(a, g, rtol=1e-4, atol=1e-7)
+    np.testing.assert_array_equal(acc_counts, big[-2])
+
+
+def test_apply_none_is_plain_adam_with_l2():
+    model = get_model("wd")
+    spec = model.spec(TINY, CFG)
+    n = len(spec)
+    params = init_params("wd")
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    grads = [jnp.ones_like(p) * 0.1 for p in params]
+    counts = jnp.ones((TINY.total_vocab,))
+    h = hypers(lr_dense=1e-2, lr_embed=1e-3, l2=0.5, step=3.0)
+
+    fn = build_apply_fn("wd", TINY, CFG, "none")
+    out = fn(*params, *ms, *vs, *grads, counts, h)
+    for i, e in enumerate(spec):
+        g = grads[i]
+        if e.group in ("embed", "wide"):
+            g = g + 0.5 * params[i]
+            lr = 1e-3
+        else:
+            lr = 1e-2
+        w2, m2, v2 = optim.adam_update(params[i], ms[i], vs[i], g, lr, 3.0)
+        np.testing.assert_allclose(out[i], w2, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(out[n + i], m2, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(out[2 * n + i], v2, rtol=1e-5, atol=1e-7)
+
+
+def test_apply_cowclip_composes_clip_l2_adam():
+    model = get_model("deepfm")
+    spec = model.spec(TINY, CFG)
+    params = init_params("deepfm")
+    ms = [jnp.ones_like(p) * 0.01 for p in params]
+    vs = [jnp.ones_like(p) * 0.02 for p in params]
+    key = jax.random.PRNGKey(3)
+    grads = []
+    for p in params:
+        key, sub = jax.random.split(key)
+        grads.append(jax.random.normal(sub, p.shape) * 2.0)
+    counts = jnp.floor(
+        jax.random.uniform(jax.random.PRNGKey(4), (TINY.total_vocab,)) * 3
+    )
+    h = hypers(lr_dense=1e-3, lr_embed=1e-4, l2=0.1, r=1.0, zeta=1e-5, step=7.0)
+
+    fn = build_apply_fn("deepfm", TINY, CFG, "cowclip")
+    out = fn(*params, *ms, *vs, *grads, counts, h)
+    # manual: embed table is params[0]
+    g0 = cowclip_clip_ref(grads[0], params[0], counts, jnp.float32(1.0), jnp.float32(1e-5))
+    g0 = g0 + 0.1 * params[0]
+    w2, _, _ = optim.adam_update(params[0], ms[0], vs[0], g0, 1e-4, 7.0)
+    np.testing.assert_allclose(out[0], w2, rtol=1e-5, atol=1e-7)
+    # wide table: L2 but NO clipping
+    g1 = grads[1] + 0.1 * params[1]
+    w2, _, _ = optim.adam_update(params[1], ms[1], vs[1], g1, 1e-4, 7.0)
+    np.testing.assert_allclose(out[1], w2, rtol=1e-5, atol=1e-7)
+
+
+def test_fwd_matches_model_fwd():
+    fn, _ = build_fwd_fn("dcnv2", TINY, CFG)
+    params = init_params("dcnv2")
+    x_cat, x_dense, _ = make_batch(TINY, 9)
+    (logits,) = fn(*params, x_cat, x_dense)
+    want = get_model("dcnv2").fwd(params, x_cat, x_dense, TINY, CFG)
+    np.testing.assert_allclose(logits, want, rtol=1e-6)
+
+
+def test_no_dense_schema_drops_x_dense_input():
+    nd = Schema(name="nodense", n_dense=0, vocab_sizes=(4, 3))
+    fn, inputs = build_grad_fn("wd", nd, CFG)
+    assert inputs == ["x_cat", "y"]
+    model = get_model("wd")
+    params = []
+    key = jax.random.PRNGKey(0)
+    for e in model.spec(nd, CFG):
+        key, sub = jax.random.split(key)
+        params.append(jax.random.normal(sub, e.shape) * 0.05)
+    x_cat = jnp.array([[0, 4], [1, 5]], jnp.int32)
+    y = jnp.array([1.0, 0.0])
+    out = fn(*params, x_cat, y)
+    assert bool(jnp.isfinite(out[-1]))
+
+
+@pytest.mark.parametrize("model_name", ["deepfm", "wd", "dcn", "dcnv2"])
+def test_training_reduces_loss(model_name):
+    """A few Adam steps on a fixed batch must reduce the loss — the
+    minimal 'this trains' signal for every model."""
+    gfn, _ = build_grad_fn(model_name, TINY, CFG)
+    afn = build_apply_fn(model_name, TINY, CFG, "cowclip")
+    params = init_params(model_name)
+    n = len(params)
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    x_cat, x_dense, y = make_batch(TINY, 64)
+
+    losses = []
+    for step in range(1, 16):
+        out = gfn(*params, x_cat, x_dense, y)
+        grads, counts, loss = out[:n], out[-2], out[-1]
+        losses.append(float(loss))
+        h = hypers(lr_dense=1e-2, lr_embed=1e-2, l2=1e-5, step=float(step))
+        out = afn(*params, *ms, *vs, *grads, counts, h)
+        params, ms, vs = list(out[:n]), list(out[n : 2 * n]), list(out[2 * n :])
+    # CowClip intentionally throttles early updates (threshold ∝ ||w||,
+    # tiny at init), so assert steady descent rather than a big drop.
+    assert losses[-1] < losses[0] * 0.97, losses
+    assert all(b <= a + 1e-4 for a, b in zip(losses, losses[1:])), losses

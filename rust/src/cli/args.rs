@@ -1,0 +1,113 @@
+//! Tiny flag parser: positional words + `--key value` / `--flag` pairs.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (without argv[0]). A `--key` followed by
+    /// another `--...` or end-of-line is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                let is_flag = it
+                    .peek()
+                    .map(|n| n.starts_with("--"))
+                    .unwrap_or(true);
+                let value = if is_flag { "true".to_string() } else { it.next().unwrap() };
+                if args.flags.insert(key.to_string(), value).is_some() {
+                    bail!("duplicate flag --{key}");
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("experiment table4 --n 5000 --quick --epochs 1.5");
+        assert_eq!(a.positional(0), Some("experiment"));
+        assert_eq!(a.positional(1), Some("table4"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5000);
+        assert!(a.has("quick"));
+        assert_eq!(a.f64_or("epochs", 0.0).unwrap(), 1.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("train --verbose");
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! Subcommand implementations for the `cowclip` binary.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::args::Args;
+use crate::clip::ClipMode;
+use crate::coordinator::{Engine, TrainConfig, Trainer};
+use crate::data::dataset::Dataset;
+use crate::data::split::{random_split, sequential_split};
+use crate::data::stats::{field_stats, infrequent_fraction};
+use crate::data::synth::{generate, SynthConfig};
+use crate::experiments::{self, ExpContext};
+use crate::reference::ModelKind;
+use crate::runtime::Runtime;
+use crate::scaling::presets;
+use crate::scaling::rules::ScalingRule;
+
+const USAGE: &str = "\
+cowclip — large-batch CTR training (CowClip, AAAI'23 reproduction)
+
+USAGE:
+  cowclip data gen   --schema <criteo_synth|avazu_synth> [--n N] [--seed S] --out FILE
+  cowclip data stats --path FILE [--batch B]
+  cowclip train      [--model deepfm|wd|dcn|dcnv2] [--schema S] [--batch B]
+                     [--rule none|sqrt|sqrt_star|linear|n2_lambda|cowclip]
+                     [--clip none|global|field|column|adafield|cowclip]
+                     [--epochs E] [--n N] [--workers W] [--seq-split]
+                     [--engine hlo|reference] [--seed S] [--save CKPT]
+  cowclip eval       --ckpt FILE --data FILE [--model M] [--batch B]
+  cowclip experiment <id|all|quick> [--n N] [--epochs E] [--seed S] [--out DIR]
+  cowclip artifacts  check
+  cowclip help
+
+Experiments: fig1 fig3 fig4 fig5 fig7_8 table2 table3 table4 table5 table6
+             table7 table10 table11 table12 table13 table14 hypers
+";
+
+/// Entry point used by `main`.
+pub fn dispatch(args: Args) -> Result<()> {
+    match args.positional(0) {
+        Some("data") => data_cmd(&args),
+        Some("train") => train_cmd(&args),
+        Some("eval") => eval_cmd(&args),
+        Some("experiment") => experiment_cmd(&args),
+        Some("artifacts") => artifacts_cmd(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(std::env::var("COWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn open_runtime() -> Result<Arc<Runtime>> {
+    let dir = artifacts_dir();
+    Ok(Arc::new(Runtime::new(&dir).with_context(|| {
+        format!("opening artifacts at {} — run `make artifacts` first", dir.display())
+    })?))
+}
+
+fn data_cmd(args: &Args) -> Result<()> {
+    match args.positional(1) {
+        Some("gen") => {
+            let schema_name = args.str_or("schema", "criteo_synth");
+            let schema = crate::data::schema::by_name(&schema_name)
+                .with_context(|| format!("unknown schema {schema_name}"))?;
+            let cfg = SynthConfig {
+                n: args.usize_or("n", 200_000)?,
+                seed: args.u64_or("seed", 1234)?,
+                ..Default::default()
+            };
+            let out = args.get("out").context("--out FILE required")?;
+            let t0 = std::time::Instant::now();
+            let ds = generate(&schema, &cfg);
+            ds.save(Path::new(out))?;
+            println!(
+                "wrote {} rows ({} cat fields, {} dense, ctr {:.3}) to {} in {:.1}s",
+                ds.n(),
+                schema.n_cat(),
+                schema.n_dense,
+                ds.ctr(),
+                out,
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(())
+        }
+        Some("stats") => {
+            let path = args.get("path").context("--path FILE required")?;
+            let ds = Dataset::load(Path::new(path))?;
+            let batch = args.usize_or("batch", 512)?;
+            println!(
+                "{}: {} rows, ctr {:.3}, {} fields, total vocab {}",
+                path,
+                ds.n(),
+                ds.ctr(),
+                ds.schema.n_cat(),
+                ds.schema.total_vocab()
+            );
+            println!(
+                "infrequent id fraction at batch {batch}: {:.1}%",
+                100.0 * infrequent_fraction(&ds, batch)
+            );
+            for s in field_stats(&ds).iter().take(6) {
+                println!(
+                    "  field {:>2}: vocab {:>6}  unseen {:>6}  head-10 mass {:>5.1}%",
+                    s.field,
+                    s.vocab,
+                    s.n_unseen,
+                    100.0 * s.head_mass(10)
+                );
+            }
+            Ok(())
+        }
+        _ => bail!("usage: cowclip data <gen|stats> ...\n\n{USAGE}"),
+    }
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let model: ModelKind = args.str_or("model", "deepfm").parse()?;
+    let schema_name = args.str_or("schema", "criteo_synth");
+    let batch = args.usize_or("batch", 512)?;
+    let rule: ScalingRule = args.str_or("rule", "cowclip").parse()?;
+    let clip: ClipMode = args.str_or("clip", "cowclip").parse()?;
+    let epochs = args.f64_or("epochs", 3.0)?;
+    let n = args.usize_or("n", 100_000)?;
+    let workers = args.usize_or("workers", 1)?;
+    let seed = args.u64_or("seed", 1234)?;
+    let engine_kind = args.str_or("engine", "hlo");
+
+    let schema = crate::data::schema::by_name(&schema_name)
+        .with_context(|| format!("unknown schema {schema_name}"))?;
+    println!("generating {n} rows of {schema_name}...");
+    let full = generate(&schema, &SynthConfig { n, seed, ..Default::default() });
+    let (train, test) = if args.has("seq-split") {
+        sequential_split(&full, 6.0 / 7.0)
+    } else {
+        let frac = if schema_name == "avazu_synth" { 0.8 } else { 0.9 };
+        random_split(&full, frac, seed)
+    };
+
+    let engine = match engine_kind.as_str() {
+        "hlo" => Engine::hlo(open_runtime()?, model, &schema_name, clip)?,
+        "reference" => Engine::reference(model, schema, 10, vec![128, 128, 128], 3, clip),
+        other => bail!("unknown engine {other:?} (hlo|reference)"),
+    };
+
+    let preset = presets::by_schema(&schema_name).context("no preset")?;
+    let use_cowclip_preset = clip == ClipMode::CowClip;
+    let base_hypers = if use_cowclip_preset { preset.cowclip } else { preset.baseline };
+    let init_sigma = if use_cowclip_preset {
+        preset.init_sigma_cowclip
+    } else {
+        preset.init_sigma_baseline
+    };
+    let steps_per_epoch = (train.n() / batch).max(1);
+    let cfg = TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers,
+        rule,
+        epochs,
+        workers,
+        warmup_steps: if use_cowclip_preset { steps_per_epoch } else { 0 },
+        init_sigma,
+        seed,
+        eval_every_epochs: 1,
+        verbose: true,
+    };
+    println!(
+        "training {model} on {schema_name}: batch {batch} (scale {:.0}x), rule {rule}, clip {clip}, {} workers, {} steps/epoch",
+        cfg.scale(),
+        workers,
+        steps_per_epoch
+    );
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let report = trainer.train(&train, &test)?;
+
+    println!("\n== result ==");
+    println!("steps: {}   wall: {:.1}s", report.steps, report.wall_seconds);
+    for (phase, secs) in &report.phase_seconds {
+        println!("  {phase:<6} {secs:>8.2}s");
+    }
+    if report.reduce_stats.workers > 1 {
+        println!(
+            "  all-reduce: {} rounds, {:.1} MiB moved",
+            report.reduce_stats.rounds,
+            report.reduce_stats.bytes_moved as f64 / (1 << 20) as f64
+        );
+    }
+    println!(
+        "final test AUC {:.4}%  logloss {:.4}{}",
+        report.final_auc * 100.0,
+        report.final_logloss,
+        if report.diverged { "  [DIVERGED]" } else { "" }
+    );
+    if let Some(path) = args.get("save") {
+        trainer.params.save(Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// Evaluate a checkpoint on a `.ctr` dataset file: AUC, logloss, and
+/// calibration (Brier / ECE) — streamed from disk.
+fn eval_cmd(args: &Args) -> Result<()> {
+    use crate::data::stream::StreamReader;
+    use crate::metrics::{brier_from_logits, ece_from_logits, EvalAccumulator};
+    use crate::model::params::ParamSet;
+
+    let ckpt = args.get("ckpt").context("--ckpt FILE required")?;
+    let data = args.get("data").context("--data FILE required")?;
+    let model: ModelKind = args.str_or("model", "deepfm").parse()?;
+    let reader = StreamReader::open(Path::new(data))?;
+    let schema_name = reader.schema.name.clone();
+
+    let engine = Engine::hlo(open_runtime()?, model, &schema_name, ClipMode::CowClip)?;
+    let params = ParamSet::load(Path::new(ckpt), &engine.spec())?;
+    let eval_batch = engine.eval_batch().unwrap_or(1024);
+
+    let mut acc = EvalAccumulator::new();
+    let mut logits_all: Vec<f32> = Vec::with_capacity(reader.n);
+    let mut labels_all: Vec<u8> = Vec::with_capacity(reader.n);
+    let mut lo = 0;
+    while lo < reader.n {
+        let hi = (lo + eval_batch).min(reader.n);
+        let mut b = reader.read_rows(lo, hi)?;
+        // pad up to the artifact batch by repeating the last row
+        if b.batch_size() < eval_batch {
+            let valid = b.batch_size();
+            let mut idx: Vec<usize> = (lo..hi).collect();
+            while idx.len() < eval_batch {
+                idx.push(hi - 1);
+            }
+            b = reader.read_rows(lo, hi)?; // reread; then extend manually
+            let extra = reader.read_rows(hi - 1, hi)?;
+            let mut cat = b.x_cat.as_i32()?.to_vec();
+            let mut dense = b.x_dense.as_f32()?.to_vec();
+            let mut y = b.y.as_f32()?.to_vec();
+            while y.len() < eval_batch {
+                cat.extend_from_slice(extra.x_cat.as_i32()?);
+                dense.extend_from_slice(extra.x_dense.as_f32()?);
+                y.push(extra.y.as_f32()?[0]);
+            }
+            b = crate::data::batcher::Batch {
+                x_cat: crate::tensor::Tensor::i32(vec![eval_batch, reader.schema.n_cat()], cat),
+                x_dense: crate::tensor::Tensor::f32(
+                    vec![eval_batch, reader.schema.n_dense],
+                    dense,
+                ),
+                y: crate::tensor::Tensor::f32(vec![eval_batch], y),
+                valid,
+            };
+        }
+        let logits = engine.fwd(&params, &b)?;
+        acc.push(&logits, b.y.as_f32()?, b.valid);
+        logits_all.extend_from_slice(&logits[..b.valid]);
+        labels_all.extend(b.y.as_f32()?[..b.valid].iter().map(|&v| v as u8));
+        lo = hi;
+    }
+    println!("{data}: {} rows evaluated with {model} from {ckpt}", acc.n());
+    println!("  AUC      {:.4}%", acc.auc() * 100.0);
+    println!("  logloss  {:.4}", acc.logloss());
+    println!("  Brier    {:.4}", brier_from_logits(&logits_all, &labels_all));
+    println!("  ECE(10)  {:.4}", ece_from_logits(&logits_all, &labels_all, 10));
+    Ok(())
+}
+
+fn experiment_cmd(args: &Args) -> Result<()> {
+    let which = args.positional(1).context("experiment id required (or 'all'/'quick')")?;
+    let n = args.usize_or("n", 40_000)?;
+    let epochs = args.f64_or("epochs", 2.0)?;
+    let seed = args.u64_or("seed", 1234)?;
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let runtime = if args.str_or("engine", "hlo") == "hlo" {
+        Some(open_runtime()?)
+    } else {
+        None
+    };
+    let ctx = ExpContext::new(runtime, n, epochs, seed);
+
+    let ids: Vec<&str> = match which {
+        "all" => experiments::ALL_IDS.to_vec(),
+        "quick" => experiments::QUICK_IDS.to_vec(),
+        one => vec![one],
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        println!("=== running {id} (n={n}, epochs={epochs}) ===");
+        let report = experiments::run(id, &ctx)?;
+        report.emit(&out_dir)?;
+        println!("=== {id} done in {:.1}s ===\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn artifacts_cmd(args: &Args) -> Result<()> {
+    match args.positional(1) {
+        Some("check") => {
+            let rt = open_runtime()?;
+            let m = rt.manifest();
+            println!(
+                "manifest v{} at {}: {} artifacts, {} schemas, platform {}",
+                m.version,
+                m.dir.display(),
+                m.artifacts.len(),
+                m.schema_names().len(),
+                rt.platform()
+            );
+            // compile everything to prove the HLO text parses + compiles
+            let mut compiled = 0;
+            for a in m.artifacts.clone() {
+                rt.load(&a)?;
+                compiled += 1;
+            }
+            println!("compiled {compiled}/{} programs OK", m.artifacts.len());
+            // schema drift check against rust presets
+            for name in ["criteo_synth", "avazu_synth"] {
+                let ours = crate::data::schema::by_name(name).unwrap();
+                let theirs = m.schema(name)?;
+                if ours != theirs {
+                    bail!("schema drift for {name}");
+                }
+            }
+            println!("schemas match rust presets");
+            Ok(())
+        }
+        _ => bail!("usage: cowclip artifacts check"),
+    }
+}

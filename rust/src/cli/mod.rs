@@ -1,0 +1,7 @@
+//! Command-line interface (hand-rolled: the offline build has no clap).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::dispatch;

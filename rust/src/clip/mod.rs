@@ -1,0 +1,11 @@
+//! Host-side reference implementations of every clipping strategy from
+//! the paper's Table 7 ablation, mirroring `python/compile/clipping.py`.
+//!
+//! The production path bakes the variant into the AOT `apply` artifact;
+//! these Rust twins power the no-artifact reference trainer, the parity
+//! tests and the proptest invariants (norm bounds, direction
+//! preservation, no-op-below-threshold).
+
+mod variants;
+
+pub use variants::{clip_embedding_grads, ClipMode, ClipParams, EPS};

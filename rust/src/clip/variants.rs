@@ -1,0 +1,267 @@
+//! Clipping variants over the `[V, d]` embedding-gradient table.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::bail;
+
+use crate::data::schema::Schema;
+
+/// Matches `kernels/ref.py::EPS` (guards the 0/0 norm-ratio case).
+pub const EPS: f32 = 1e-12;
+
+/// Which Table-7 clipping design to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ClipMode {
+    /// No clipping (scaling-rule-only baselines).
+    None,
+    /// Global gradient-norm clipping over the whole table ("GC").
+    Global,
+    /// Per-field sub-table clipping, fixed threshold.
+    Field,
+    /// Per-column (per-id) clipping, fixed threshold.
+    Column,
+    /// Adaptive field-wise: `cnt_f * max(r*||w_f||, zeta)`.
+    AdaField,
+    /// Adaptive column-wise — CowClip (Alg. 1).
+    CowClip,
+}
+
+impl ClipMode {
+    pub const ALL: [ClipMode; 6] = [
+        ClipMode::None,
+        ClipMode::Global,
+        ClipMode::Field,
+        ClipMode::Column,
+        ClipMode::AdaField,
+        ClipMode::CowClip,
+    ];
+
+    /// Artifact-id string (matches `python/compile/clipping.py` keys).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClipMode::None => "none",
+            ClipMode::Global => "global",
+            ClipMode::Field => "field",
+            ClipMode::Column => "column",
+            ClipMode::AdaField => "adafield",
+            ClipMode::CowClip => "cowclip",
+        }
+    }
+}
+
+impl fmt::Display for ClipMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for ClipMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "none" => ClipMode::None,
+            "global" => ClipMode::Global,
+            "field" => ClipMode::Field,
+            "column" => ClipMode::Column,
+            "adafield" => ClipMode::AdaField,
+            "cowclip" => ClipMode::CowClip,
+            other => bail!("unknown clip mode {other:?}"),
+        })
+    }
+}
+
+/// Clipping hyperparameters (subset of the hypers vector).
+#[derive(Clone, Copy, Debug)]
+pub struct ClipParams {
+    /// CowClip ratio `r`.
+    pub r: f32,
+    /// CowClip lower bound `zeta`.
+    pub zeta: f32,
+    /// Fixed threshold for the non-adaptive variants.
+    pub clip_t: f32,
+}
+
+impl Default for ClipParams {
+    fn default() -> Self {
+        // Paper: r = 1, zeta in {1e-5, 1e-4} by dataset.
+        ClipParams { r: 1.0, zeta: 1e-5, clip_t: 1.0 }
+    }
+}
+
+#[inline]
+fn norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+#[inline]
+fn rescale(xs: &mut [f32], n: f32, thresh: f32) {
+    let s = (thresh / (n + EPS)).min(1.0);
+    if s < 1.0 {
+        for x in xs {
+            *x *= s;
+        }
+    }
+}
+
+/// Clip the `[V, d]` gradient table in place.
+///
+/// * `g` — gradient of the embedding table (row-major, `v_total * d`)
+/// * `w` — current table values (same layout)
+/// * `counts` — per-id occurrence count in the (effective) batch
+pub fn clip_embedding_grads(
+    mode: ClipMode,
+    g: &mut [f32],
+    w: &[f32],
+    counts: &[f32],
+    schema: &Schema,
+    d: usize,
+    p: &ClipParams,
+) {
+    let v_total = schema.total_vocab();
+    debug_assert_eq!(g.len(), v_total * d);
+    debug_assert_eq!(w.len(), v_total * d);
+    debug_assert_eq!(counts.len(), v_total);
+
+    match mode {
+        ClipMode::None => {}
+        ClipMode::Global => {
+            let n = norm(g);
+            rescale(g, n, p.clip_t);
+        }
+        ClipMode::Field => {
+            for (off, vs) in schema.offsets().into_iter().zip(&schema.vocab_sizes) {
+                let sl = &mut g[off * d..(off + vs) * d];
+                let n = norm(sl);
+                rescale(sl, n, p.clip_t);
+            }
+        }
+        ClipMode::Column => {
+            for row in g.chunks_mut(d) {
+                let n = norm(row);
+                rescale(row, n, p.clip_t);
+            }
+        }
+        ClipMode::AdaField => {
+            for (off, vs) in schema.offsets().into_iter().zip(&schema.vocab_sizes) {
+                let lo = off * d;
+                let hi = (off + vs) * d;
+                let cnt_f: f32 = counts[off..off + vs].iter().sum();
+                let wnorm = norm(&w[lo..hi]);
+                let thresh = cnt_f * (p.r * wnorm).max(p.zeta);
+                let sl = &mut g[lo..hi];
+                let n = norm(sl);
+                rescale(sl, n, thresh);
+            }
+        }
+        ClipMode::CowClip => {
+            for (i, row) in g.chunks_mut(d).enumerate() {
+                let wnorm = norm(&w[i * d..(i + 1) * d]);
+                let thresh = counts[i] * (p.r * wnorm).max(p.zeta);
+                let n = norm(row);
+                rescale(row, n, thresh);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_schema() -> Schema {
+        Schema { name: "t".into(), n_dense: 0, vocab_sizes: vec![3, 2] }
+    }
+
+    fn setup(d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let v = 5;
+        let g: Vec<f32> = (0..v * d).map(|i| (i as f32 - 3.0) * 2.0).collect();
+        let w: Vec<f32> = (0..v * d).map(|i| 0.1 + 0.01 * i as f32).collect();
+        let counts = vec![2.0, 0.0, 1.0, 3.0, 1.0];
+        (g, w, counts)
+    }
+
+    #[test]
+    fn none_leaves_grads_untouched() {
+        let schema = tiny_schema();
+        let (mut g, w, c) = setup(4);
+        let orig = g.clone();
+        clip_embedding_grads(ClipMode::None, &mut g, &w, &c, &schema, 4, &ClipParams::default());
+        assert_eq!(g, orig);
+    }
+
+    #[test]
+    fn global_bounds_total_norm() {
+        let schema = tiny_schema();
+        let (mut g, w, c) = setup(4);
+        let p = ClipParams { clip_t: 2.0, ..Default::default() };
+        clip_embedding_grads(ClipMode::Global, &mut g, &w, &c, &schema, 4, &p);
+        assert!(norm(&g) <= 2.0 + 1e-4);
+    }
+
+    #[test]
+    fn field_bounds_each_field() {
+        let schema = tiny_schema();
+        let (mut g, w, c) = setup(4);
+        let p = ClipParams { clip_t: 0.7, ..Default::default() };
+        clip_embedding_grads(ClipMode::Field, &mut g, &w, &c, &schema, 4, &p);
+        assert!(norm(&g[0..12]) <= 0.7 + 1e-4);
+        assert!(norm(&g[12..20]) <= 0.7 + 1e-4);
+    }
+
+    #[test]
+    fn column_bounds_each_row() {
+        let schema = tiny_schema();
+        let (mut g, w, c) = setup(4);
+        let p = ClipParams { clip_t: 0.3, ..Default::default() };
+        clip_embedding_grads(ClipMode::Column, &mut g, &w, &c, &schema, 4, &p);
+        for row in g.chunks(4) {
+            assert!(norm(row) <= 0.3 + 1e-4);
+        }
+    }
+
+    #[test]
+    fn cowclip_threshold_formula() {
+        let schema = tiny_schema();
+        let d = 2;
+        let mut g = vec![10.0, 0.0, 10.0, 0.0, 0.0, 0.0, 1e-9, 0.0, 3.0, 4.0];
+        let w = vec![0.3, 0.4, 0.0, 0.0, 1.0, 0.0, 0.5, 0.0, 0.06, 0.08];
+        let c = vec![2.0, 1.0, 0.0, 1.0, 4.0];
+        let p = ClipParams { r: 1.0, zeta: 0.05, clip_t: 0.0 };
+        clip_embedding_grads(ClipMode::CowClip, &mut g, &w, &c, &schema, d, &p);
+        // row0: thresh = 2 * max(0.5, 0.05) = 1.0; |g| was 10 -> scaled to 1
+        assert!((norm(&g[0..2]) - 1.0).abs() < 1e-5);
+        // row1: thresh = 1 * max(0, .05) = 0.05 -> 10 clipped to 0.05
+        assert!((norm(&g[2..4]) - 0.05).abs() < 1e-6);
+        // row2: cnt=0 -> thresh 0 -> zero grad stays zero
+        assert_eq!(&g[4..6], &[0.0, 0.0]);
+        // row3: tiny grad below thresh -> untouched
+        assert!((g[6] - 1e-9).abs() < 1e-12);
+        // row4: thresh = 4 * max(0.1, 0.05) = 0.4; |g|=5 -> 0.4
+        assert!((norm(&g[8..10]) - 0.4).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adafield_uses_field_aggregate() {
+        let schema = tiny_schema();
+        let d = 1;
+        let mut g = vec![6.0, 8.0, 0.0, 5.0, 12.0];
+        let w = vec![1.0, 0.0, 0.0, 3.0, 4.0];
+        let c = vec![1.0, 1.0, 1.0, 2.0, 0.0];
+        let p = ClipParams { r: 1.0, zeta: 1e-6, clip_t: 0.0 };
+        clip_embedding_grads(ClipMode::AdaField, &mut g, &w, &c, &schema, d, &p);
+        // field0: cnt=3, ||w||=1 -> thresh 3; ||g||=10 -> scale 0.3
+        assert!((g[0] - 1.8).abs() < 1e-5 && (g[1] - 2.4).abs() < 1e-5);
+        // field1: cnt=2, ||w||=5 -> thresh 10; ||g||=13 -> scale 10/13
+        assert!((norm(&g[3..5]) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ClipMode::ALL {
+            assert_eq!(m.as_str().parse::<ClipMode>().unwrap(), m);
+        }
+        assert!("bogus".parse::<ClipMode>().is_err());
+    }
+}

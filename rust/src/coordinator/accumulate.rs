@@ -1,0 +1,124 @@
+//! Gradient accumulation across microbatches.
+//!
+//! A logical batch of size `B` is computed as `k` microbatches of equal
+//! size `b` (`B = k·b`). Because every microbatch gradient is a *mean*
+//! over its rows, the big-batch gradient is the weight-`b/B` sum of the
+//! microbatch gradients; occurrence counts add. The clip threshold of
+//! Alg. 1 then sees exactly the full-batch `cnt(id)`, which is the
+//! invariant `python/tests/test_train_step.py::
+//! test_microbatch_accumulation_equals_big_batch` pins down on the JAX
+//! side and `rust/tests` re-checks end to end.
+
+use anyhow::{ensure, Result};
+
+use crate::reference::GradOutput;
+use crate::tensor::Tensor;
+
+/// Weighted accumulator for microbatch gradient outputs.
+pub struct GradAccumulator {
+    grads: Option<Vec<Tensor>>,
+    counts: Vec<f32>,
+    loss_weighted: f64,
+    weight: f64,
+}
+
+impl GradAccumulator {
+    pub fn new(vocab: usize) -> GradAccumulator {
+        GradAccumulator {
+            grads: None,
+            counts: vec![0.0; vocab],
+            loss_weighted: 0.0,
+            weight: 0.0,
+        }
+    }
+
+    /// Add one microbatch's output with the given weight (its share of
+    /// the effective batch, e.g. `b/B`).
+    pub fn add(&mut self, out: &GradOutput, weight: f64) -> Result<()> {
+        ensure!(out.counts.len() == self.counts.len(), "vocab mismatch");
+        match &mut self.grads {
+            None => {
+                let mut scaled = out.grads.clone();
+                for t in &mut scaled {
+                    t.scale(weight as f32)?;
+                }
+                self.grads = Some(scaled);
+            }
+            Some(acc) => {
+                ensure!(acc.len() == out.grads.len(), "grad arity mismatch");
+                for (a, g) in acc.iter_mut().zip(&out.grads) {
+                    a.axpy(weight as f32, g)?;
+                }
+            }
+        }
+        for (c, &x) in self.counts.iter_mut().zip(&out.counts) {
+            *c += x;
+        }
+        self.loss_weighted += out.loss as f64 * weight;
+        self.weight += weight;
+        Ok(())
+    }
+
+    /// Total weight added so far (should reach 1.0 for a full batch).
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Decompose into raw parts: (grads, counts, weighted loss, weight).
+    /// Used by workers whose partial weight is deliberately < 1.
+    pub fn into_parts(self) -> (Option<Vec<Tensor>>, Vec<f32>, f32, f64) {
+        (self.grads, self.counts, self.loss_weighted as f32, self.weight)
+    }
+
+    /// Finish: returns (grads, counts, weighted mean loss).
+    pub fn finish(self) -> Result<(Vec<Tensor>, Vec<f32>, f32)> {
+        ensure!(self.grads.is_some(), "no microbatches accumulated");
+        ensure!(
+            (self.weight - 1.0).abs() < 1e-4,
+            "accumulated weight {} != 1.0 (incomplete batch?)",
+            self.weight
+        );
+        Ok((
+            self.grads.unwrap(),
+            self.counts,
+            self.loss_weighted as f32,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(val: f32, count: f32, loss: f32) -> GradOutput {
+        GradOutput {
+            grads: vec![Tensor::f32(vec![2], vec![val, -val])],
+            counts: vec![count, 0.0],
+            loss,
+        }
+    }
+
+    #[test]
+    fn weighted_mean_of_grads_and_sum_of_counts() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&out(1.0, 3.0, 0.5), 0.5).unwrap();
+        acc.add(&out(3.0, 1.0, 0.7), 0.5).unwrap();
+        let (grads, counts, loss) = acc.finish().unwrap();
+        assert_eq!(grads[0].as_f32().unwrap(), &[2.0, -2.0]);
+        assert_eq!(counts, vec![4.0, 0.0]);
+        assert!((loss - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn incomplete_weight_rejected() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&out(1.0, 1.0, 0.5), 0.25).unwrap();
+        assert!(acc.finish().is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let acc = GradAccumulator::new(2);
+        assert!(acc.finish().is_err());
+    }
+}

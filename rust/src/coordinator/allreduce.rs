@@ -1,0 +1,122 @@
+//! Binary-tree all-reduce over worker gradient contributions.
+//!
+//! The paper trains on one GPU but motivates large batches partly by
+//! multi-GPU embedding-gradient exchange costs; this module makes the
+//! extension concrete: `W` logical workers each hold a weighted partial
+//! (grads, counts, loss), and a `ceil(log2 W)`-round binary tree reduces
+//! them to the full-batch gradient, with per-round traffic accounting so
+//! Table 6's communication discussion can be quantified on this testbed.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Tensor;
+
+/// One worker's weighted contribution.
+#[derive(Clone, Debug)]
+pub struct Contribution {
+    pub grads: Vec<Tensor>,
+    pub counts: Vec<f32>,
+    /// Weighted loss (weight already folded in).
+    pub loss_weighted: f32,
+    pub weight: f32,
+}
+
+/// Traffic/latency accounting for one all-reduce.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReduceStats {
+    pub rounds: usize,
+    /// Total bytes a real network would move (sum over pairwise merges).
+    pub bytes_moved: u64,
+    pub workers: usize,
+}
+
+fn merge(dst: &mut Contribution, src: &Contribution) -> Result<u64> {
+    ensure!(dst.grads.len() == src.grads.len(), "grad arity mismatch");
+    let mut bytes = 0u64;
+    for (a, b) in dst.grads.iter_mut().zip(&src.grads) {
+        a.axpy(1.0, b)?;
+        bytes += (b.len() * 4) as u64;
+    }
+    for (c, &x) in dst.counts.iter_mut().zip(&src.counts) {
+        *c += x;
+    }
+    bytes += (src.counts.len() * 4) as u64;
+    dst.loss_weighted += src.loss_weighted;
+    dst.weight += src.weight;
+    Ok(bytes)
+}
+
+/// Reduce all contributions to one (weights must sum to ~1).
+pub fn tree_allreduce(
+    mut contributions: Vec<Contribution>,
+) -> Result<(Contribution, ReduceStats)> {
+    ensure!(!contributions.is_empty(), "no contributions");
+    let workers = contributions.len();
+    let mut stats = ReduceStats { rounds: 0, bytes_moved: 0, workers };
+
+    while contributions.len() > 1 {
+        stats.rounds += 1;
+        let half = contributions.len().div_ceil(2);
+        // pair worker i with worker i+half; survivors are the first half
+        let tail = contributions.split_off(half);
+        for (i, src) in tail.iter().enumerate() {
+            stats.bytes_moved += merge(&mut contributions[i], src)?;
+        }
+    }
+    let total = contributions.pop().unwrap();
+    ensure!(
+        (total.weight - 1.0).abs() < 1e-3,
+        "worker weights sum to {} != 1",
+        total.weight
+    );
+    Ok((total, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn contrib(v: f32, w: f32) -> Contribution {
+        Contribution {
+            grads: vec![Tensor::f32(vec![3], vec![v, v, v])],
+            counts: vec![1.0, 2.0],
+            loss_weighted: 0.1 * w,
+            weight: w,
+        }
+    }
+
+    #[test]
+    fn reduces_to_weighted_sum() {
+        let cs = vec![contrib(0.25, 0.25); 4];
+        let (total, stats) = tree_allreduce(cs).unwrap();
+        assert_eq!(total.grads[0].as_f32().unwrap(), &[1.0, 1.0, 1.0]);
+        assert_eq!(total.counts, vec![4.0, 8.0]);
+        assert!((total.weight - 1.0).abs() < 1e-6);
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.workers, 4);
+        // 4 workers: 2 merges + 1 merge, each (3+2)*4 bytes
+        assert_eq!(stats.bytes_moved, 3 * 5 * 4);
+    }
+
+    #[test]
+    fn odd_worker_count() {
+        let cs = vec![contrib(1.0 / 3.0, 1.0 / 3.0); 3];
+        let (total, stats) = tree_allreduce(cs).unwrap();
+        assert!((total.grads[0].as_f32().unwrap()[0] - 1.0).abs() < 1e-6);
+        assert_eq!(stats.rounds, 2);
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        let (total, stats) = tree_allreduce(vec![contrib(1.0, 1.0)]).unwrap();
+        assert_eq!(stats.bytes_moved, 0);
+        assert_eq!(stats.rounds, 0);
+        assert_eq!(total.counts, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mismatched_weights_rejected() {
+        let cs = vec![contrib(1.0, 0.3), contrib(1.0, 0.3)];
+        assert!(tree_allreduce(cs).is_err());
+    }
+}

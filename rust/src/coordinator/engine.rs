@@ -1,0 +1,292 @@
+//! Training engine abstraction: AOT/PJRT programs or the Rust reference.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::clip::ClipMode;
+use crate::data::batcher::Batch;
+use crate::data::schema::Schema;
+use crate::model::manifest::ParamEntry;
+use crate::model::params::ParamSet;
+use crate::reference::step::build_spec;
+use crate::reference::{GradOutput, ModelKind, ReferenceEngine, ReferenceModel};
+use crate::runtime::{HypersVec, Program, Runtime};
+use crate::tensor::Tensor;
+
+/// A training engine: grad / apply / fwd over positional parameters.
+pub enum Engine {
+    /// AOT HLO programs through PJRT (the production path).
+    Hlo(HloEngine),
+    /// Pure-Rust reference (no artifacts needed; slower).
+    Reference(ReferenceEngine),
+}
+
+impl Engine {
+    /// Build the HLO engine.
+    pub fn hlo(
+        runtime: Arc<Runtime>,
+        model: ModelKind,
+        schema_name: &str,
+        clip: ClipMode,
+    ) -> Result<Engine> {
+        Ok(Engine::Hlo(HloEngine::new(runtime, model, schema_name, clip)?))
+    }
+
+    /// Build the reference engine from manifest-equivalent constants.
+    pub fn reference(
+        model: ModelKind,
+        schema: Schema,
+        embed_dim: usize,
+        hidden: Vec<usize>,
+        n_cross: usize,
+        clip: ClipMode,
+    ) -> Engine {
+        Engine::Reference(ReferenceEngine::new(
+            ReferenceModel::new(model, schema, embed_dim, hidden, n_cross),
+            clip,
+        ))
+    }
+
+    pub fn spec(&self) -> Vec<ParamEntry> {
+        match self {
+            Engine::Hlo(e) => e.spec.clone(),
+            Engine::Reference(e) => e.spec(),
+        }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        match self {
+            Engine::Hlo(e) => &e.schema,
+            Engine::Reference(e) => &e.model.schema,
+        }
+    }
+
+    pub fn clip_mode(&self) -> ClipMode {
+        match self {
+            Engine::Hlo(e) => e.clip,
+            Engine::Reference(e) => e.clip_mode,
+        }
+    }
+
+    /// Microbatch sizes this engine can compute gradients at directly.
+    pub fn grad_batch_sizes(&self) -> Vec<usize> {
+        match self {
+            Engine::Hlo(e) => e.microbatches.clone(),
+            Engine::Reference(_) => vec![], // any size
+        }
+    }
+
+    /// Gradient + counts + loss for one batch whose size must be directly
+    /// supported (HLO: one of `grad_batch_sizes`; reference: any).
+    pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<GradOutput> {
+        match self {
+            Engine::Hlo(e) => e.grad(params, batch),
+            Engine::Reference(e) => e.grad(params, batch),
+        }
+    }
+
+    /// Optimizer update in place.
+    pub fn apply(
+        &self,
+        params: &mut ParamSet,
+        m: &mut ParamSet,
+        v: &mut ParamSet,
+        grads: &mut [Tensor],
+        counts: &[f32],
+        hv: &HypersVec,
+    ) -> Result<()> {
+        match self {
+            Engine::Hlo(e) => e.apply(params, m, v, grads, counts, hv),
+            Engine::Reference(e) => {
+                let mut h = hv.hypers;
+                h.lr_dense *= hv.dense_lr_factor;
+                e.apply(params, m, v, grads, counts, &h, hv.step)
+            }
+        }
+    }
+
+    /// Eval logits (batch size must match the fwd artifact for HLO).
+    pub fn fwd(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
+        match self {
+            Engine::Hlo(e) => e.fwd(params, batch),
+            Engine::Reference(e) => e.fwd(params, batch),
+        }
+    }
+
+    /// Eval batch size (fixed for HLO; caller's choice for reference).
+    pub fn eval_batch(&self) -> Option<usize> {
+        match self {
+            Engine::Hlo(e) => Some(e.eval_batch),
+            Engine::Reference(_) => None,
+        }
+    }
+}
+
+/// The AOT/PJRT engine: one `grad` program per microbatch size, one
+/// `apply` program per clip mode, one `fwd` program for eval.
+pub struct HloEngine {
+    runtime: Arc<Runtime>,
+    pub model: ModelKind,
+    pub schema: Schema,
+    pub clip: ClipMode,
+    pub spec: Vec<ParamEntry>,
+    pub microbatches: Vec<usize>,
+    pub eval_batch: usize,
+    grad_programs: Vec<(usize, Arc<Program>)>,
+    apply_program: Arc<Program>,
+    fwd_program: Arc<Program>,
+    has_dense: bool,
+}
+
+impl HloEngine {
+    pub fn new(
+        runtime: Arc<Runtime>,
+        model: ModelKind,
+        schema_name: &str,
+        clip: ClipMode,
+    ) -> Result<HloEngine> {
+        let manifest = runtime.manifest();
+        let schema = manifest.schema(schema_name)?;
+        let spec = manifest.param_spec(schema_name, model.as_str())?.to_vec();
+
+        // consistency check vs the Rust spec builder (drift guard)
+        let cfg = &manifest.model_cfg();
+        let rust_spec = build_spec(model, &schema, cfg.0, &cfg.1, cfg.2);
+        if rust_spec != spec {
+            bail!(
+                "param spec drift between manifest and rust for {}-{}",
+                schema_name,
+                model
+            );
+        }
+
+        let microbatches = manifest.grad_microbatches(model.as_str(), schema_name);
+        if microbatches.is_empty() {
+            bail!("no grad artifacts for {}-{}", schema_name, model);
+        }
+        let mut grad_programs = Vec::new();
+        for &mb in &microbatches {
+            let a = manifest
+                .find("grad", model.as_str(), schema_name, Some(mb), None)?
+                .clone();
+            grad_programs.push((mb, runtime.load(&a)?));
+        }
+        let apply_artifact = manifest
+            .find("apply", model.as_str(), schema_name, None, Some(clip.as_str()))
+            .with_context(|| format!("apply artifact for clip={clip}"))?
+            .clone();
+        let apply_program = runtime.load(&apply_artifact)?;
+        let fwd_artifact = manifest
+            .find("fwd", model.as_str(), schema_name, None, None)?
+            .clone();
+        let eval_batch = fwd_artifact.batch.unwrap();
+        let fwd_program = runtime.load(&fwd_artifact)?;
+        let has_dense = schema.n_dense > 0;
+
+        Ok(HloEngine {
+            runtime,
+            model,
+            schema,
+            clip,
+            spec,
+            microbatches,
+            eval_batch,
+            grad_programs,
+            apply_program,
+            fwd_program,
+            has_dense,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<GradOutput> {
+        let b = batch.batch_size();
+        let program = self
+            .grad_programs
+            .iter()
+            .find(|(mb, _)| *mb == b)
+            .map(|(_, p)| p)
+            .with_context(|| format!("no grad artifact for microbatch {b}"))?;
+
+        let n = params.len();
+        let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+        inputs.push(&batch.x_cat);
+        if self.has_dense {
+            inputs.push(&batch.x_dense);
+        }
+        inputs.push(&batch.y);
+        let mut out = program.run(&inputs)?;
+        // outputs: grads..., counts, loss
+        let loss_t = out.pop().unwrap();
+        let counts_t = out.pop().unwrap();
+        let loss = loss_t.as_f32()?[0];
+        let counts = counts_t.as_f32()?.to_vec();
+        debug_assert_eq!(out.len(), n);
+        Ok(GradOutput { grads: out, counts, loss })
+    }
+
+    fn apply(
+        &self,
+        params: &mut ParamSet,
+        m: &mut ParamSet,
+        v: &mut ParamSet,
+        grads: &mut [Tensor],
+        counts: &[f32],
+        hv: &HypersVec,
+    ) -> Result<()> {
+        let n = params.len();
+        let counts_t = Tensor::f32(vec![counts.len()], counts.to_vec());
+        let hypers_t = hv.tensor();
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(4 * n + 2);
+        inputs.extend(params.tensors.iter());
+        inputs.extend(m.tensors.iter());
+        inputs.extend(v.tensors.iter());
+        inputs.extend(grads.iter().map(|g| &*g));
+        inputs.push(&counts_t);
+        inputs.push(&hypers_t);
+        let mut out = self.apply_program.run(&inputs)?;
+        debug_assert_eq!(out.len(), 3 * n);
+        let vs = out.split_off(2 * n);
+        let ms = out.split_off(n);
+        params.tensors = out;
+        m.tensors = ms;
+        v.tensors = vs;
+        Ok(())
+    }
+
+    fn fwd(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
+        if batch.batch_size() != self.eval_batch {
+            bail!(
+                "fwd batch {} != artifact batch {}",
+                batch.batch_size(),
+                self.eval_batch
+            );
+        }
+        let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+        inputs.push(&batch.x_cat);
+        if self.has_dense {
+            inputs.push(&batch.x_dense);
+        }
+        let out = self.fwd_program.run(&inputs)?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+}
+
+/// Helper: pull (embed_dim, hidden, n_cross) out of the manifest.
+trait ManifestExt {
+    fn model_cfg(&self) -> (usize, Vec<usize>, usize);
+}
+
+impl ManifestExt for crate::model::manifest::Manifest {
+    fn model_cfg(&self) -> (usize, Vec<usize>, usize) {
+        (
+            self.model_cfg.embed_dim,
+            self.model_cfg.hidden.clone(),
+            self.model_cfg.n_cross,
+        )
+    }
+}

@@ -1,0 +1,25 @@
+//! The L3 training coordinator — the paper's system made concrete.
+//!
+//! Responsibilities:
+//! * **Engine abstraction** ([`engine`]): one surface over the AOT/PJRT
+//!   path and the pure-Rust reference path.
+//! * **Large-batch composition** ([`accumulate`]): an effective batch of
+//!   `s·b` is assembled by accumulating `s` microbatch gradients *and
+//!   occurrence counts*, which is exactly Alg. 1's full-batch semantics.
+//! * **Simulated data parallelism** ([`worker`], [`allreduce`]): logical
+//!   workers compute shard gradients; a binary-tree all-reduce combines
+//!   them, with traffic accounting (the paper's multi-GPU extension).
+//! * **The training loop** ([`trainer`]): scaling rules, warmup, eval,
+//!   checkpoints, timing.
+
+pub mod accumulate;
+pub mod allreduce;
+pub mod engine;
+pub mod trainer;
+pub mod worker;
+
+pub use accumulate::GradAccumulator;
+pub use allreduce::{tree_allreduce, ReduceStats};
+pub use engine::{Engine, HloEngine};
+pub use trainer::{TrainConfig, TrainReport, Trainer};
+pub use worker::WorkerShard;

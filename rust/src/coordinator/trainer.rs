@@ -1,0 +1,252 @@
+//! The end-to-end training loop: scaling rule → warmup → shard → grad →
+//! all-reduce → apply → eval, with timing broken down per phase.
+
+use anyhow::{ensure, Result};
+
+use super::allreduce::{tree_allreduce, ReduceStats};
+use super::engine::Engine;
+use super::worker::WorkerShard;
+use crate::data::batcher::{Batcher, EvalBatcher};
+use crate::data::dataset::Dataset;
+use crate::metrics::{EvalAccumulator, LossMeter};
+use crate::model::init::{init_params, InitConfig};
+use crate::model::params::ParamSet;
+use crate::runtime::HypersVec;
+use crate::scaling::rules::{HyperSet, ScalingRule};
+use crate::scaling::warmup::Warmup;
+use crate::util::Stopwatch;
+
+/// Training configuration for one run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Effective (large) batch size.
+    pub batch: usize,
+    /// Base batch the hyperparameters are calibrated for.
+    pub base_batch: usize,
+    /// Base hypers at `base_batch`.
+    pub base_hypers: HyperSet,
+    /// Scaling rule mapping base hypers to `batch`.
+    pub rule: ScalingRule,
+    pub epochs: f64,
+    /// Logical data-parallel workers.
+    pub workers: usize,
+    /// Warmup steps on the dense LR (0 = none).
+    pub warmup_steps: usize,
+    /// Embedding init sigma.
+    pub init_sigma: f32,
+    pub seed: u64,
+    /// Evaluate on the test set every `eval_every` epochs (0 = only at
+    /// the end).
+    pub eval_every_epochs: usize,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    /// Batch-size scale factor `s` relative to the calibration batch.
+    pub fn scale(&self) -> f64 {
+        self.batch as f64 / self.base_batch as f64
+    }
+
+    /// The resolved hypers after applying the scaling rule.
+    pub fn scaled_hypers(&self) -> HyperSet {
+        self.rule.apply(&self.base_hypers, self.scale())
+    }
+}
+
+/// Per-epoch evaluation snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochEval {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_auc: f64,
+    pub test_logloss: f64,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub final_auc: f64,
+    pub final_logloss: f64,
+    pub train_loss_curve: Vec<f32>,
+    pub epoch_evals: Vec<EpochEval>,
+    pub reduce_stats: ReduceStats,
+    /// (phase, seconds) totals: grad / reduce / apply / data / eval.
+    pub phase_seconds: Vec<(String, f64)>,
+    pub wall_seconds: f64,
+    pub diverged: bool,
+}
+
+impl TrainReport {
+    pub fn seconds(&self, phase: &str) -> f64 {
+        self.phase_seconds
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+}
+
+/// The leader: owns parameters and drives workers.
+pub struct Trainer {
+    pub engine: Engine,
+    pub cfg: TrainConfig,
+    pub params: ParamSet,
+    pub m: ParamSet,
+    pub v: ParamSet,
+    step: usize,
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, cfg: TrainConfig) -> Result<Trainer> {
+        ensure!(cfg.batch % cfg.workers == 0, "batch must divide by workers");
+        ensure!(cfg.workers >= 1);
+        let spec = engine.spec();
+        let params = init_params(&spec, &InitConfig { seed: cfg.seed, embed_sigma: cfg.init_sigma });
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        Ok(Trainer { engine, cfg, params, m, v, step: 0 })
+    }
+
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// One optimizer step on a prepared batch. Returns the batch loss.
+    pub fn train_step(&mut self, batch: &crate::data::batcher::Batch) -> Result<(f32, ReduceStats)> {
+        self.step += 1;
+        let hypers = self.cfg.scaled_hypers();
+        let warmup = Warmup::new(self.cfg.warmup_steps);
+        let hv = HypersVec::new(hypers)
+            .at_step(self.step)
+            .with_warmup(warmup.factor(self.step - 1));
+
+        // workers compute shard contributions
+        let mut contributions = Vec::with_capacity(self.cfg.workers);
+        for rank in 0..self.cfg.workers {
+            let shard = WorkerShard::new(rank, self.cfg.workers);
+            contributions.push(shard.compute(&self.engine, &self.params, batch)?);
+        }
+        let (total, stats) = tree_allreduce(contributions)?;
+        let mut grads = total.grads;
+        self.engine.apply(
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
+            &mut grads,
+            &total.counts,
+            &hv,
+        )?;
+        Ok((total.loss_weighted, stats))
+    }
+
+    /// Evaluate AUC/logloss on a dataset.
+    pub fn evaluate(&self, ds: &Dataset) -> Result<(f64, f64)> {
+        // HLO fwd artifacts are shape-specialized: always use their exact
+        // batch (EvalBatcher pads small datasets up to it); the reference
+        // engine takes whatever fits.
+        let eval_batch = self
+            .engine
+            .eval_batch()
+            .unwrap_or_else(|| 1024.min(ds.n().max(1)));
+        let mut acc = EvalAccumulator::new();
+        for batch in EvalBatcher::new(ds, eval_batch) {
+            let logits = self.engine.fwd(&self.params, &batch)?;
+            acc.push(&logits, batch.y.as_f32()?, batch.valid);
+        }
+        Ok((acc.auc(), acc.logloss()))
+    }
+
+    /// Full training run.
+    pub fn train(&mut self, train: &Dataset, test: &Dataset) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let mut sw = Stopwatch::new();
+        let steps_per_epoch = train.n() / self.cfg.batch;
+        ensure!(steps_per_epoch > 0, "batch larger than dataset");
+        let total_steps = ((steps_per_epoch as f64) * self.cfg.epochs).round() as usize;
+        ensure!(total_steps > 0, "no steps to run");
+
+        let mut batcher = Batcher::new(train, self.cfg.batch, self.cfg.seed ^ 0x5eed);
+        let mut loss_curve = Vec::with_capacity(total_steps);
+        let mut epoch_evals = Vec::new();
+        let mut reduce_total = ReduceStats::default();
+        let mut epoch_loss = LossMeter::new();
+        let mut diverged = false;
+
+        for s in 1..=total_steps {
+            sw.start("data");
+            let batch = batcher.next_batch();
+            sw.start("step");
+            let (loss, rstats) = self.train_step(&batch)?;
+            sw.stop();
+            reduce_total.rounds += rstats.rounds;
+            reduce_total.bytes_moved += rstats.bytes_moved;
+            reduce_total.workers = rstats.workers;
+            loss_curve.push(loss);
+            epoch_loss.update(loss as f64);
+            if !loss.is_finite() {
+                diverged = true;
+                break;
+            }
+
+            let at_epoch_end = s % steps_per_epoch == 0;
+            if at_epoch_end {
+                let epoch = s / steps_per_epoch;
+                let do_eval = self.cfg.eval_every_epochs > 0
+                    && epoch % self.cfg.eval_every_epochs == 0;
+                if do_eval {
+                    sw.start("eval");
+                    let (auc, ll) = self.evaluate(test)?;
+                    sw.stop();
+                    epoch_evals.push(EpochEval {
+                        epoch,
+                        train_loss: epoch_loss.mean(),
+                        test_auc: auc,
+                        test_logloss: ll,
+                    });
+                    if self.cfg.verbose {
+                        println!(
+                            "  epoch {epoch:>2}  train_loss {:.4}  test_auc {:.4}  test_logloss {:.4}",
+                            epoch_loss.mean(),
+                            auc,
+                            ll
+                        );
+                    }
+                }
+                epoch_loss.reset();
+            }
+        }
+        sw.stop();
+
+        let (final_auc, final_logloss) = if diverged {
+            (f64::NAN, f64::NAN)
+        } else {
+            let (a, l) = self.evaluate(test)?;
+            (a, l)
+        };
+
+        Ok(TrainReport {
+            steps: loss_curve.len(),
+            final_auc,
+            final_logloss,
+            train_loss_curve: loss_curve,
+            epoch_evals,
+            reduce_stats: reduce_total,
+            phase_seconds: sw
+                .summary()
+                .into_iter()
+                .map(|(n, d)| (n, d.as_secs_f64()))
+                .collect(),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            diverged,
+        })
+    }
+}
+
+/// Convenience: slice the first `n` rows of a dataset (cheap experiment
+/// subsetting).
+pub fn head(ds: &Dataset, n: usize) -> Dataset {
+    let idx: Vec<usize> = (0..n.min(ds.n())).collect();
+    ds.select(&idx)
+}

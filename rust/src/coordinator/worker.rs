@@ -1,0 +1,149 @@
+//! A logical data-parallel worker: computes its shard's weighted gradient
+//! contribution by accumulating engine-supported microbatches.
+
+use anyhow::{bail, Result};
+
+use super::accumulate::GradAccumulator;
+use super::allreduce::Contribution;
+use super::engine::Engine;
+use crate::data::batcher::Batch;
+use crate::model::params::ParamSet;
+use crate::tensor::Tensor;
+
+/// One worker's identity + shard geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerShard {
+    pub rank: usize,
+    pub world: usize,
+}
+
+impl WorkerShard {
+    pub fn new(rank: usize, world: usize) -> WorkerShard {
+        assert!(rank < world && world > 0);
+        WorkerShard { rank, world }
+    }
+
+    /// Row range of this worker within a batch of `b` rows (even split;
+    /// `b` must divide by `world`).
+    pub fn range(&self, b: usize) -> (usize, usize) {
+        assert_eq!(b % self.world, 0, "batch {b} not divisible by world {}", self.world);
+        let per = b / self.world;
+        (self.rank * per, (self.rank + 1) * per)
+    }
+
+    /// Pick the largest supported microbatch that divides `shard_rows`
+    /// (reference engine supports everything → use the shard whole).
+    pub fn plan_microbatch(&self, shard_rows: usize, supported: &[usize]) -> Result<usize> {
+        if supported.is_empty() {
+            return Ok(shard_rows);
+        }
+        supported
+            .iter()
+            .rev()
+            .copied()
+            .find(|mb| shard_rows % mb == 0)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no supported microbatch divides shard of {shard_rows} rows (have {supported:?})"
+                )
+            })
+    }
+
+    /// Compute this worker's contribution for its slice of `batch`,
+    /// weighted by `shard_rows / batch_rows`.
+    pub fn compute(
+        &self,
+        engine: &Engine,
+        params: &ParamSet,
+        batch: &Batch,
+    ) -> Result<Contribution> {
+        let b = batch.batch_size();
+        let (lo, hi) = self.range(b);
+        let rows = hi - lo;
+        let mb = self.plan_microbatch(rows, &engine.grad_batch_sizes())?;
+        let vocab = engine.schema().total_vocab();
+        let shard_weight = rows as f64 / b as f64;
+        let mb_weight = shard_weight * (mb as f64 / rows as f64);
+
+        let mut acc = GradAccumulator::new(vocab);
+        let mut start = lo;
+        while start < hi {
+            let micro = slice_batch(batch, start, start + mb)?;
+            let out = engine.grad(params, &micro)?;
+            acc.add(&out, mb_weight)?;
+            start += mb;
+        }
+        // The leader-side finish() contract requires total weight 1.0;
+        // a worker's partial contribution carries shard_weight instead.
+        let (grads, counts, loss_weighted, w) = acc.into_parts();
+        if (w - shard_weight).abs() > 1e-4 {
+            bail!("worker {} accumulated weight {w}, expected {shard_weight}", self.rank);
+        }
+        let grads = grads.ok_or_else(|| anyhow::anyhow!("empty shard"))?;
+        Ok(Contribution { grads, counts, loss_weighted, weight: shard_weight as f32 })
+    }
+}
+
+/// Copy rows `[lo, hi)` of a batch into a new owned batch.
+pub fn slice_batch(batch: &Batch, lo: usize, hi: usize) -> Result<Batch> {
+    let b = batch.batch_size();
+    if hi > b || lo >= hi {
+        bail!("slice [{lo},{hi}) out of range for batch {b}");
+    }
+    let f = batch.x_cat.shape()[1];
+    let d = batch.x_dense.shape()[1];
+    let rows = hi - lo;
+    let cat = batch.x_cat.as_i32()?;
+    let dense = batch.x_dense.as_f32()?;
+    let y = batch.y.as_f32()?;
+    Ok(Batch {
+        x_cat: Tensor::i32(vec![rows, f], cat[lo * f..hi * f].to_vec()),
+        x_dense: Tensor::f32(vec![rows, d], dense[lo * d..hi * d].to_vec()),
+        y: Tensor::f32(vec![rows], y[lo..hi].to_vec()),
+        valid: rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_batch() {
+        let world = 4;
+        let mut covered = vec![false; 64];
+        for rank in 0..world {
+            let (lo, hi) = WorkerShard::new(rank, world).range(64);
+            for slot in covered[lo..hi].iter_mut() {
+                assert!(!*slot);
+                *slot = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn microbatch_planning() {
+        let w = WorkerShard::new(0, 1);
+        assert_eq!(w.plan_microbatch(512, &[64, 512]).unwrap(), 512);
+        assert_eq!(w.plan_microbatch(128, &[64, 512]).unwrap(), 64);
+        assert_eq!(w.plan_microbatch(320, &[64, 512]).unwrap(), 64);
+        assert!(w.plan_microbatch(96, &[64, 512]).is_err());
+        // reference engine: anything goes
+        assert_eq!(w.plan_microbatch(96, &[]).unwrap(), 96);
+    }
+
+    #[test]
+    fn slice_batch_copies_rows() {
+        let batch = Batch {
+            x_cat: Tensor::i32(vec![4, 2], (0..8).collect()),
+            x_dense: Tensor::f32(vec![4, 1], vec![0.0, 1.0, 2.0, 3.0]),
+            y: Tensor::f32(vec![4], vec![0.0, 1.0, 0.0, 1.0]),
+            valid: 4,
+        };
+        let s = slice_batch(&batch, 1, 3).unwrap();
+        assert_eq!(s.x_cat.as_i32().unwrap(), &[2, 3, 4, 5]);
+        assert_eq!(s.x_dense.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(s.y.as_f32().unwrap(), &[1.0, 0.0]);
+    }
+}

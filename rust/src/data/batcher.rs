@@ -1,0 +1,202 @@
+//! Batch iteration: shuffled training epochs and padded eval batches.
+//!
+//! Training batches are fixed-size (the HLO artifacts are specialized per
+//! microbatch shape) with drop-last semantics, reshuffled every epoch from
+//! a deterministic stream. Eval batches pad the tail by repeating the last
+//! row and report the valid count so metrics ignore padding.
+
+use super::dataset::Dataset;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// One host batch ready for literal conversion.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// `[b, n_cat]` global ids.
+    pub x_cat: Tensor,
+    /// `[b, n_dense]` (empty tensor when the schema has no dense fields).
+    pub x_dense: Tensor,
+    /// `[b]` labels as f32.
+    pub y: Tensor,
+    /// Number of non-padding rows (== b for training batches).
+    pub valid: usize,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.x_cat.shape()[0]
+    }
+}
+
+fn materialize(ds: &Dataset, idx: &[usize]) -> Batch {
+    let b = idx.len();
+    let f = ds.schema.n_cat();
+    let d = ds.schema.n_dense;
+    let mut x_cat = Vec::with_capacity(b * f);
+    let mut x_dense = Vec::with_capacity(b * d);
+    let mut y = Vec::with_capacity(b);
+    for &i in idx {
+        x_cat.extend_from_slice(ds.cat_row(i));
+        x_dense.extend_from_slice(ds.dense_row(i));
+        y.push(ds.y[i] as f32);
+    }
+    Batch {
+        x_cat: Tensor::i32(vec![b, f], x_cat),
+        x_dense: Tensor::f32(vec![b, d], x_dense),
+        y: Tensor::f32(vec![b], y),
+        valid: b,
+    }
+}
+
+/// Shuffled fixed-size training batcher (drop-last).
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+    epoch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Batcher<'a> {
+        assert!(batch > 0 && batch <= ds.n(), "batch {} vs n {}", batch, ds.n());
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..ds.n()).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, batch, order, pos: 0, rng, epoch: 0 }
+    }
+
+    /// Batches per epoch (drop-last).
+    pub fn steps_per_epoch(&self) -> usize {
+        self.ds.n() / self.batch
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Next fixed-size batch; reshuffles and bumps the epoch counter when
+    /// the remaining tail is short.
+    pub fn next_batch(&mut self) -> Batch {
+        if self.pos + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            self.epoch += 1;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        let b = materialize(self.ds, idx);
+        self.pos += self.batch;
+        b
+    }
+}
+
+/// Sequential eval batcher with tail padding.
+pub struct EvalBatcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> EvalBatcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> EvalBatcher<'a> {
+        assert!(batch > 0);
+        EvalBatcher { ds, batch, pos: 0 }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.ds.n().div_ceil(self.batch)
+    }
+}
+
+impl<'a> Iterator for EvalBatcher<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.ds.n() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.ds.n());
+        let valid = end - self.pos;
+        let mut idx: Vec<usize> = (self.pos..end).collect();
+        // pad by repeating the final row to keep the artifact shape
+        while idx.len() < self.batch {
+            idx.push(end - 1);
+        }
+        let mut b = materialize(self.ds, &idx);
+        b.valid = valid;
+        self.pos = end;
+        Some(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Schema;
+
+    fn ds(n: usize) -> Dataset {
+        let schema = Schema { name: "t".into(), n_dense: 1, vocab_sizes: vec![4, 3] };
+        let mut d = Dataset::with_capacity(schema, n);
+        for i in 0..n {
+            d.x_cat.extend_from_slice(&[(i % 4) as i32, 4 + (i % 3) as i32]);
+            d.x_dense.push(i as f32);
+            d.y.push((i % 2) as u8);
+            d.ts.push(i as u32);
+        }
+        d
+    }
+
+    #[test]
+    fn training_batches_cover_epoch_without_repeats() {
+        let d = ds(10);
+        let mut b = Batcher::new(&d, 3, 0);
+        assert_eq!(b.steps_per_epoch(), 3);
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let batch = b.next_batch();
+            assert_eq!(batch.batch_size(), 3);
+            seen.extend(batch.x_dense.as_f32().unwrap().iter().map(|&x| x as usize));
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 9, "no duplicates within an epoch");
+        assert_eq!(b.epoch(), 0);
+        b.next_batch(); // triggers reshuffle
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn shuffling_changes_order_between_epochs() {
+        let d = ds(64);
+        let mut b = Batcher::new(&d, 32, 1);
+        let e0: Vec<f32> = b.next_batch().x_dense.as_f32().unwrap().to_vec();
+        b.next_batch();
+        let e1: Vec<f32> = b.next_batch().x_dense.as_f32().unwrap().to_vec();
+        assert_ne!(e0, e1);
+    }
+
+    #[test]
+    fn eval_batcher_pads_tail() {
+        let d = ds(7);
+        let mut it = EvalBatcher::new(&d, 4);
+        assert_eq!(it.n_batches(), 2);
+        let b0 = it.next().unwrap();
+        assert_eq!(b0.valid, 4);
+        let b1 = it.next().unwrap();
+        assert_eq!(b1.valid, 3);
+        assert_eq!(b1.batch_size(), 4);
+        // padded row repeats the last valid row
+        let cats = b1.x_cat.as_i32().unwrap();
+        assert_eq!(&cats[4..6], &cats[6..8]);
+        assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = ds(20);
+        let a: Vec<i32> = Batcher::new(&d, 5, 9).next_batch().x_cat.as_i32().unwrap().to_vec();
+        let b: Vec<i32> = Batcher::new(&d, 5, 9).next_batch().x_cat.as_i32().unwrap().to_vec();
+        assert_eq!(a, b);
+    }
+}

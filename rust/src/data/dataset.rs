@@ -1,0 +1,295 @@
+//! In-memory dataset + the `.ctr` binary on-disk format.
+//!
+//! Layout is struct-of-arrays for cache-friendly batch slicing:
+//! `x_cat` holds **global** ids row-major `[n, n_cat]`, `x_dense` is
+//! `[n, n_dense]`, labels are one byte each, and every row carries a
+//! synthetic timestamp so the Criteo-seq sequential split is expressible.
+//!
+//! File format (little-endian):
+//! ```text
+//! magic "CTRD" | u32 version | u32 name_len | name bytes
+//! u64 n | u32 n_cat | u32 n_dense | u32 n_vocab_sizes | u64 vocab sizes...
+//! x_cat  (n * n_cat   * i32)
+//! x_dense(n * n_dense * f32)
+//! y      (n * u8)
+//! ts     (n * u32)
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::schema::Schema;
+
+const MAGIC: &[u8; 4] = b"CTRD";
+const VERSION: u32 = 1;
+
+/// A fully materialized CTR dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub schema: Schema,
+    /// Row-major `[n, n_cat]` global ids.
+    pub x_cat: Vec<i32>,
+    /// Row-major `[n, n_dense]`.
+    pub x_dense: Vec<f32>,
+    /// Click labels (0/1).
+    pub y: Vec<u8>,
+    /// Monotone-ish synthetic timestamps (for the sequential split).
+    pub ts: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Empty dataset with capacity `n`.
+    pub fn with_capacity(schema: Schema, n: usize) -> Dataset {
+        Dataset {
+            x_cat: Vec::with_capacity(n * schema.n_cat()),
+            x_dense: Vec::with_capacity(n * schema.n_dense),
+            y: Vec::with_capacity(n),
+            ts: Vec::with_capacity(n),
+            schema,
+        }
+    }
+
+    /// Positive-label rate.
+    pub fn ctr(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().map(|&v| v as u64).sum::<u64>() as f64 / self.y.len() as f64
+    }
+
+    /// Borrow row `i`'s categorical ids.
+    pub fn cat_row(&self, i: usize) -> &[i32] {
+        let f = self.schema.n_cat();
+        &self.x_cat[i * f..(i + 1) * f]
+    }
+
+    /// Borrow row `i`'s dense features.
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        let d = self.schema.n_dense;
+        &self.x_dense[i * d..(i + 1) * d]
+    }
+
+    /// Select rows by index into a new dataset (used by splits).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::with_capacity(self.schema.clone(), idx.len());
+        for &i in idx {
+            out.x_cat.extend_from_slice(self.cat_row(i));
+            out.x_dense.extend_from_slice(self.dense_row(i));
+            out.y.push(self.y[i]);
+            out.ts.push(self.ts[i]);
+        }
+        out
+    }
+
+    /// Validate invariants (id ranges, array lengths). Cheap enough to run
+    /// after load; catches format drift immediately.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n();
+        if self.x_cat.len() != n * self.schema.n_cat() {
+            bail!("x_cat length mismatch");
+        }
+        if self.x_dense.len() != n * self.schema.n_dense {
+            bail!("x_dense length mismatch");
+        }
+        if self.ts.len() != n {
+            bail!("ts length mismatch");
+        }
+        let offsets = self.schema.offsets();
+        let total = self.schema.total_vocab() as i32;
+        for (i, row) in self.x_cat.chunks(self.schema.n_cat()).enumerate() {
+            for (f, &id) in row.iter().enumerate() {
+                let lo = offsets[f] as i32;
+                let hi = lo + self.schema.vocab_sizes[f] as i32;
+                if id < lo || id >= hi || id >= total {
+                    bail!("row {i} field {f}: id {id} outside [{lo},{hi})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `.ctr` binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let name = self.schema.name.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        w.write_all(&(self.n() as u64).to_le_bytes())?;
+        w.write_all(&(self.schema.n_cat() as u32).to_le_bytes())?;
+        w.write_all(&(self.schema.n_dense as u32).to_le_bytes())?;
+        w.write_all(&(self.schema.vocab_sizes.len() as u32).to_le_bytes())?;
+        for &v in &self.schema.vocab_sizes {
+            w.write_all(&(v as u64).to_le_bytes())?;
+        }
+        for &v in &self.x_cat {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &v in &self.x_dense {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&self.y)?;
+        for &v in &self.ts {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Deserialize from the `.ctr` binary format.
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a .ctr file", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported .ctr version {version}");
+        }
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let n = read_u64(&mut r)? as usize;
+        let n_cat = read_u32(&mut r)? as usize;
+        let n_dense = read_u32(&mut r)? as usize;
+        let n_vs = read_u32(&mut r)? as usize;
+        let mut vocab_sizes = Vec::with_capacity(n_vs);
+        for _ in 0..n_vs {
+            vocab_sizes.push(read_u64(&mut r)? as usize);
+        }
+        if vocab_sizes.len() != n_cat {
+            bail!("vocab_sizes/n_cat mismatch");
+        }
+        let schema = Schema {
+            name: String::from_utf8(name)?,
+            n_dense,
+            vocab_sizes,
+        };
+
+        let mut x_cat = vec![0i32; n * n_cat];
+        read_i32s(&mut r, &mut x_cat)?;
+        let mut x_dense = vec![0f32; n * n_dense];
+        read_f32s(&mut r, &mut x_dense)?;
+        let mut y = vec![0u8; n];
+        r.read_exact(&mut y)?;
+        let mut ts_raw = vec![0u8; n * 4];
+        r.read_exact(&mut ts_raw)?;
+        let ts = ts_raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let ds = Dataset { schema, x_cat, x_dense, y, ts };
+        ds.validate()?;
+        Ok(ds)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_i32s(r: &mut impl Read, out: &mut [i32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (o, c) in out.iter_mut().zip(buf.chunks_exact(4)) {
+        *o = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, out: &mut [f32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (o, c) in out.iter_mut().zip(buf.chunks_exact(4)) {
+        *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::criteo_synth;
+
+    fn tiny_dataset() -> Dataset {
+        let schema = Schema {
+            name: "t".into(),
+            n_dense: 2,
+            vocab_sizes: vec![3, 2],
+        };
+        Dataset {
+            schema,
+            x_cat: vec![0, 3, 2, 4, 1, 3],
+            x_dense: vec![0.5, -1.0, 2.0, 0.0, 1.5, 3.25],
+            y: vec![1, 0, 1],
+            ts: vec![10, 20, 30],
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let ds = tiny_dataset();
+        let dir = std::env::temp_dir().join(format!("ctr_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.ctr");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.schema, ds.schema);
+        assert_eq!(back.x_cat, ds.x_cat);
+        assert_eq!(back.x_dense, ds.x_dense);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.ts, ds.ts);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_catches_out_of_range_ids() {
+        let mut ds = tiny_dataset();
+        ds.x_cat[0] = 4; // belongs to field 1, not field 0
+        assert!(ds.validate().is_err());
+    }
+
+    #[test]
+    fn select_preserves_rows() {
+        let ds = tiny_dataset();
+        let sub = ds.select(&[2, 0]);
+        assert_eq!(sub.n(), 2);
+        assert_eq!(sub.cat_row(0), ds.cat_row(2));
+        assert_eq!(sub.cat_row(1), ds.cat_row(0));
+        assert_eq!(sub.y, vec![1, 1]);
+    }
+
+    #[test]
+    fn ctr_rate() {
+        assert!((tiny_dataset().ctr() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schema_presets_validate_empty() {
+        let ds = Dataset::with_capacity(criteo_synth(), 0);
+        ds.validate().unwrap();
+    }
+}

@@ -1,0 +1,23 @@
+//! Dataset substrate: synthetic Criteo/Avazu-like CTR data.
+//!
+//! The paper's experiments run on Criteo (45M rows) and Avazu (32M rows),
+//! which are not redistributable and far beyond this testbed; per
+//! DESIGN.md §4 we substitute schema-faithful synthetic datasets whose id
+//! frequencies follow the Zipf/exponential shape of the paper's Figure 4
+//! and whose labels come from a hidden second-order "teacher" so AUC
+//! responds to optimization quality.
+
+pub mod batcher;
+pub mod dataset;
+pub mod schema;
+pub mod split;
+pub mod stats;
+pub mod stream;
+pub mod synth;
+pub mod transform;
+
+pub use batcher::{Batch, Batcher, EvalBatcher};
+pub use dataset::Dataset;
+pub use schema::{Schema, avazu_synth, criteo_synth};
+pub use split::{sequential_split, random_split};
+pub use synth::{SynthConfig, generate};

@@ -1,0 +1,118 @@
+//! Field layout of a CTR dataset (mirrors `python/compile/schemas.py`).
+//!
+//! The Rust presets are the ones data generation uses; an integration test
+//! asserts byte-for-byte agreement with the schema embedded in
+//! `artifacts/manifest.json` so the compile path can never drift.
+
+/// Field layout: dense-field count plus per-categorical-field vocab sizes.
+/// Categorical ids are globally offset into one concatenated table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    pub name: String,
+    pub n_dense: usize,
+    pub vocab_sizes: Vec<usize>,
+}
+
+impl Schema {
+    pub fn n_cat(&self) -> usize {
+        self.vocab_sizes.len()
+    }
+
+    pub fn total_vocab(&self) -> usize {
+        self.vocab_sizes.iter().sum()
+    }
+
+    /// Global id offset of each categorical field.
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.vocab_sizes.len());
+        let mut acc = 0;
+        for &v in &self.vocab_sizes {
+            offs.push(acc);
+            acc += v;
+        }
+        offs
+    }
+
+    /// Which field owns a global id (panics if out of range).
+    pub fn field_of(&self, global_id: usize) -> usize {
+        assert!(global_id < self.total_vocab(), "id {global_id} out of range");
+        let mut acc = 0;
+        for (f, &v) in self.vocab_sizes.iter().enumerate() {
+            acc += v;
+            if global_id < acc {
+                return f;
+            }
+        }
+        unreachable!()
+    }
+}
+
+/// Synthetic Criteo: 13 dense + 26 categorical fields (see DESIGN.md §4).
+pub fn criteo_synth() -> Schema {
+    Schema {
+        name: "criteo_synth".into(),
+        n_dense: 13,
+        vocab_sizes: vec![
+            10000, 10000, 8000, 4000, 4000, 2000, 2000, 2000, 1000, 1000, 1000, 500, 500,
+            500, 500, 300, 300, 200, 100, 100, 50, 20, 10, 4, 3, 2,
+        ],
+    }
+}
+
+/// Synthetic Avazu: 24 categorical fields, no dense fields.
+pub fn avazu_synth() -> Schema {
+    Schema {
+        name: "avazu_synth".into(),
+        n_dense: 0,
+        vocab_sizes: vec![
+            8000, 8000, 4000, 2000, 2000, 1500, 1500, 1000, 500, 500, 500, 300, 300, 300,
+            200, 200, 100, 100, 50, 20, 10, 5, 3, 2,
+        ],
+    }
+}
+
+/// Look up a preset schema by name.
+pub fn by_name(name: &str) -> Option<Schema> {
+    match name {
+        "criteo_synth" => Some(criteo_synth()),
+        "avazu_synth" => Some(avazu_synth()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_partition_vocab() {
+        for schema in [criteo_synth(), avazu_synth()] {
+            let offs = schema.offsets();
+            assert_eq!(offs[0], 0);
+            for i in 1..offs.len() {
+                assert_eq!(offs[i], offs[i - 1] + schema.vocab_sizes[i - 1]);
+            }
+            assert_eq!(
+                offs.last().unwrap() + schema.vocab_sizes.last().unwrap(),
+                schema.total_vocab()
+            );
+        }
+    }
+
+    #[test]
+    fn field_of_boundaries() {
+        let s = criteo_synth();
+        assert_eq!(s.field_of(0), 0);
+        assert_eq!(s.field_of(9999), 0);
+        assert_eq!(s.field_of(10000), 1);
+        assert_eq!(s.field_of(s.total_vocab() - 1), s.n_cat() - 1);
+    }
+
+    #[test]
+    fn presets_match_paper_field_counts() {
+        assert_eq!(criteo_synth().n_cat(), 26);
+        assert_eq!(criteo_synth().n_dense, 13);
+        assert_eq!(avazu_synth().n_cat(), 24);
+        assert_eq!(avazu_synth().n_dense, 0);
+    }
+}

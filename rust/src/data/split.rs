@@ -1,0 +1,67 @@
+//! Train/test splits: random (Criteo 90/10, Avazu 80/20) and sequential
+//! (Criteo-seq: first six days train, last day test).
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+/// Random split: `train_frac` of rows to train, rest to test.
+pub fn random_split(ds: &Dataset, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..=1.0).contains(&train_frac));
+    let mut idx: Vec<usize> = (0..ds.n()).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let cut = (ds.n() as f64 * train_frac).round() as usize;
+    (ds.select(&idx[..cut]), ds.select(&idx[cut..]))
+}
+
+/// Sequential split on timestamps: rows with `ts < cutoff` train, rest
+/// test. `frac` picks the cutoff as a quantile of the time range
+/// (Criteo-seq uses 6/7).
+pub fn sequential_split(ds: &Dataset, frac: f64) -> (Dataset, Dataset) {
+    assert!(ds.n() > 0);
+    let min = *ds.ts.iter().min().unwrap() as f64;
+    let max = *ds.ts.iter().max().unwrap() as f64;
+    let cutoff = min + (max - min) * frac;
+    let train_idx: Vec<usize> = (0..ds.n()).filter(|&i| (ds.ts[i] as f64) < cutoff).collect();
+    let test_idx: Vec<usize> = (0..ds.n()).filter(|&i| (ds.ts[i] as f64) >= cutoff).collect();
+    (ds.select(&train_idx), ds.select(&test_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Schema;
+
+    fn ds(n: usize) -> Dataset {
+        let schema = Schema { name: "t".into(), n_dense: 0, vocab_sizes: vec![2] };
+        let mut d = Dataset::with_capacity(schema, n);
+        for i in 0..n {
+            d.x_cat.push((i % 2) as i32);
+            d.y.push(0);
+            d.ts.push(i as u32);
+        }
+        d
+    }
+
+    #[test]
+    fn random_split_sizes_and_disjoint() {
+        let d = ds(100);
+        let (tr, te) = random_split(&d, 0.9, 0);
+        assert_eq!(tr.n(), 90);
+        assert_eq!(te.n(), 10);
+        // each original row lands in exactly one side: count multiset of ts
+        let mut all: Vec<u32> = tr.ts.iter().chain(te.ts.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_split_respects_time_order() {
+        let d = ds(70);
+        let (tr, te) = sequential_split(&d, 6.0 / 7.0);
+        assert!(!tr.ts.is_empty() && !te.ts.is_empty());
+        let max_train = *tr.ts.iter().max().unwrap();
+        let min_test = *te.ts.iter().min().unwrap();
+        assert!(max_train < min_test);
+        assert!((tr.n() as f64 / d.n() as f64 - 6.0 / 7.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,138 @@
+//! Dataset statistics: per-field id-frequency profiles (paper Figure 4)
+//! and occurrence-probability summaries used by the analysis in §3.
+
+use super::dataset::Dataset;
+
+/// Frequency profile of one categorical field.
+#[derive(Clone, Debug)]
+pub struct FieldStats {
+    pub field: usize,
+    pub vocab: usize,
+    /// Occurrence count per local id, sorted descending.
+    pub sorted_counts: Vec<u64>,
+    /// Ids never seen in the dataset.
+    pub n_unseen: usize,
+}
+
+impl FieldStats {
+    /// Fraction of total occurrences covered by the `k` hottest ids.
+    pub fn head_mass(&self, k: usize) -> f64 {
+        let total: u64 = self.sorted_counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let head: u64 = self.sorted_counts.iter().take(k).sum();
+        head as f64 / total as f64
+    }
+
+    /// Log-spaced histogram of counts: `(bucket_upper_bound, n_ids)`.
+    /// This is the shape plotted in the paper's Figure 4.
+    pub fn log_histogram(&self) -> Vec<(u64, usize)> {
+        let mut buckets = Vec::new();
+        let mut ub = 1u64;
+        loop {
+            let n = self
+                .sorted_counts
+                .iter()
+                .filter(|&&c| c > ub / 2 && c <= ub)
+                .count();
+            buckets.push((ub, n));
+            if ub >= *self.sorted_counts.first().unwrap_or(&1) {
+                break;
+            }
+            ub *= 2;
+        }
+        buckets
+    }
+}
+
+/// Count id occurrences per field.
+pub fn field_stats(ds: &Dataset) -> Vec<FieldStats> {
+    let offsets = ds.schema.offsets();
+    let mut per_field: Vec<Vec<u64>> =
+        ds.schema.vocab_sizes.iter().map(|&v| vec![0u64; v]).collect();
+    for row in ds.x_cat.chunks(ds.schema.n_cat()) {
+        for (f, &gid) in row.iter().enumerate() {
+            per_field[f][gid as usize - offsets[f]] += 1;
+        }
+    }
+    per_field
+        .into_iter()
+        .enumerate()
+        .map(|(field, counts)| {
+            let n_unseen = counts.iter().filter(|&&c| c == 0).count();
+            let mut sorted_counts = counts;
+            sorted_counts.sort_unstable_by(|a, b| b.cmp(a));
+            FieldStats {
+                field,
+                vocab: sorted_counts.len(),
+                sorted_counts,
+                n_unseen,
+            }
+        })
+        .collect()
+}
+
+/// Global occurrence counts over the concatenated vocabulary.
+pub fn global_counts(ds: &Dataset) -> Vec<u64> {
+    let mut counts = vec![0u64; ds.schema.total_vocab()];
+    for &gid in &ds.x_cat {
+        counts[gid as usize] += 1;
+    }
+    counts
+}
+
+/// Fraction of ids with occurrence probability below `1/batch` — the
+/// "most ids are infrequent" premise of the paper's scaling analysis.
+pub fn infrequent_fraction(ds: &Dataset, batch: usize) -> f64 {
+    let counts = global_counts(ds);
+    let n = ds.n() as f64;
+    let thresh = 1.0 / batch as f64;
+    let infreq = counts.iter().filter(|&&c| (c as f64 / n) < thresh).count();
+    infreq as f64 / counts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::criteo_synth;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn counts_sum_to_rows() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 2000, ..Default::default() });
+        let stats = field_stats(&ds);
+        for s in &stats {
+            assert_eq!(s.sorted_counts.iter().sum::<u64>(), 2000);
+        }
+        assert_eq!(stats.len(), 26);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 20_000, ..Default::default() });
+        let stats = field_stats(&ds);
+        // in a big-vocab field, the 10 hottest ids must hold a large share
+        assert!(stats[0].head_mass(10) > 0.3, "head mass {}", stats[0].head_mass(10));
+        assert!(stats[0].n_unseen > 0, "zipf tail should leave unseen ids");
+    }
+
+    #[test]
+    fn infrequent_fraction_decreases_with_batch() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 10_000, ..Default::default() });
+        let f64_ = infrequent_fraction(&ds, 64);
+        let f4096 = infrequent_fraction(&ds, 4096);
+        assert!(f64_ >= f4096);
+        assert!(f64_ > 0.5, "most ids should be infrequent at b=64: {f64_}");
+    }
+
+    #[test]
+    fn log_histogram_covers_all_seen_ids() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 5000, ..Default::default() });
+        let stats = field_stats(&ds);
+        let s = &stats[2];
+        let histo_total: usize = s.log_histogram().iter().map(|&(_, n)| n).sum();
+        let seen = s.vocab - s.n_unseen;
+        assert_eq!(histo_total, seen);
+    }
+}

@@ -1,0 +1,275 @@
+//! Synthetic CTR data generator: Zipf-distributed ids + hidden teacher.
+//!
+//! Two properties of the real datasets matter to CowClip and must survive
+//! the substitution (DESIGN.md §4):
+//!
+//! 1. **Frequency imbalance** — the paper's Figure 4 shows per-field id
+//!    frequencies spanning decades with an exponential/Zipf envelope. We
+//!    sample each field's id from Zipf(alpha) with per-field alpha, so a
+//!    handful of ids absorb most of the mass and the tail is rarely seen —
+//!    exactly the `P(id in B) ≈ b·P(id in x)` regime of Eq. (1).
+//! 2. **Learnable structure** — labels are drawn from a hidden "teacher"
+//!    model (per-id biases + low-rank pairwise interactions + a dense-
+//!    feature term + noise), so a better-optimized student scores higher
+//!    AUC; pure random labels would make every scaling rule look alike.
+
+use super::dataset::Dataset;
+use super::schema::Schema;
+use crate::util::Rng;
+
+/// Generator knobs.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub n: usize,
+    pub seed: u64,
+    /// Zipf exponent per field cycles through this list.
+    pub alphas: Vec<f64>,
+    /// Teacher latent dimension for pairwise interactions.
+    pub teacher_dim: usize,
+    /// Scale of teacher logits (higher = more separable = higher AUC cap).
+    pub signal_scale: f64,
+    /// Logit offset controlling the base CTR (≈ sigmoid(offset)).
+    pub base_logit: f64,
+    /// Std of label noise added to the teacher logit.
+    pub noise: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n: 200_000,
+            seed: 1234,
+            alphas: vec![1.05, 1.2, 1.1, 1.3],
+            teacher_dim: 4,
+            signal_scale: 1.6,
+            base_logit: -1.1, // CTR ≈ 25%, close to Criteo's ~26%
+            noise: 0.8,
+        }
+    }
+}
+
+/// Per-field Zipf sampler with a precomputed CDF.
+pub struct ZipfField {
+    cdf: Vec<f64>,
+}
+
+impl ZipfField {
+    pub fn new(vocab: usize, alpha: f64) -> ZipfField {
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0;
+        for k in 0..vocab {
+            acc += 1.0 / ((k + 1) as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfField { cdf }
+    }
+
+    /// Draw a local id (0-based rank; rank 0 is the most frequent id).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        // first index with cdf >= u
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Occurrence probability of rank `k`.
+    pub fn prob(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+}
+
+/// Hidden ground-truth model that labels synthetic rows.
+struct Teacher {
+    /// Per-global-id scalar bias.
+    bias: Vec<f32>,
+    /// Per-global-id latent vector `[V, k]`.
+    latent: Vec<f32>,
+    k: usize,
+    /// Per-dense-field weight.
+    dense_w: Vec<f32>,
+    /// Pairwise interaction weight between fields (flattened upper
+    /// triangle), sparsified so only some field pairs interact.
+    pair_w: Vec<f32>,
+    n_cat: usize,
+}
+
+impl Teacher {
+    fn new(schema: &Schema, k: usize, rng: &mut Rng) -> Teacher {
+        let v = schema.total_vocab();
+        let n_cat = schema.n_cat();
+        let bias = rng.gaussian_vec(v, 0.35);
+        let latent = rng.gaussian_vec(v * k, (1.0 / (k as f32)).sqrt());
+        let dense_w = rng.gaussian_vec(schema.n_dense, 0.25);
+        let mut pair_w = rng.gaussian_vec(n_cat * n_cat, 0.6);
+        // keep ~20% of pairs active: realistic interaction sparsity
+        for w in &mut pair_w {
+            if rng.next_f64() > 0.2 {
+                *w = 0.0;
+            }
+        }
+        Teacher { bias, latent, k, dense_w, pair_w, n_cat }
+    }
+
+    fn logit(&self, cat_row: &[i32], dense_row: &[f32]) -> f64 {
+        let mut score = 0.0f64;
+        for &id in cat_row {
+            score += self.bias[id as usize] as f64;
+        }
+        for (j, &x) in dense_row.iter().enumerate() {
+            score += (self.dense_w[j] * x.tanh()) as f64;
+        }
+        let k = self.k;
+        for a in 0..self.n_cat {
+            for b in (a + 1)..self.n_cat {
+                let w = self.pair_w[a * self.n_cat + b];
+                if w == 0.0 {
+                    continue;
+                }
+                let ia = cat_row[a] as usize * k;
+                let ib = cat_row[b] as usize * k;
+                let mut dot = 0.0f32;
+                for t in 0..k {
+                    dot += self.latent[ia + t] * self.latent[ib + t];
+                }
+                score += (w * dot) as f64;
+            }
+        }
+        score
+    }
+}
+
+/// Generate a dataset according to `cfg`.
+pub fn generate(schema: &Schema, cfg: &SynthConfig) -> Dataset {
+    let mut root = Rng::new(cfg.seed);
+    let mut rng_fields = root.split(1);
+    let mut rng_teacher = root.split(2);
+    let mut rng_rows = root.split(3);
+
+    // Per-field Zipf samplers; shuffle rank->id so the "hot" id isn't
+    // always local id 0 (matters for the top-k collapse transform).
+    let samplers: Vec<ZipfField> = schema
+        .vocab_sizes
+        .iter()
+        .enumerate()
+        .map(|(f, &v)| ZipfField::new(v, cfg.alphas[f % cfg.alphas.len()]))
+        .collect();
+    let rank_to_id: Vec<Vec<usize>> = schema
+        .vocab_sizes
+        .iter()
+        .map(|&v| {
+            let mut ids: Vec<usize> = (0..v).collect();
+            rng_fields.shuffle(&mut ids);
+            ids
+        })
+        .collect();
+
+    let teacher = Teacher::new(schema, cfg.teacher_dim, &mut rng_teacher);
+    let offsets = schema.offsets();
+
+    let mut ds = Dataset::with_capacity(schema.clone(), cfg.n);
+    let n_cat = schema.n_cat();
+    let mut cat_row = vec![0i32; n_cat];
+    let mut dense_row = vec![0f32; schema.n_dense];
+
+    for i in 0..cfg.n {
+        for f in 0..n_cat {
+            let rank = samplers[f].sample(&mut rng_rows);
+            cat_row[f] = (offsets[f] + rank_to_id[f][rank]) as i32;
+        }
+        for d in dense_row.iter_mut() {
+            *d = rng_rows.next_gaussian() as f32;
+        }
+        let logit = cfg.base_logit
+            + cfg.signal_scale * teacher.logit(&cat_row, &dense_row)
+            + cfg.noise * rng_rows.next_gaussian();
+        let y = rng_rows.bernoulli(sigmoid(logit)) as u8;
+
+        ds.x_cat.extend_from_slice(&cat_row);
+        ds.x_dense.extend_from_slice(&dense_row);
+        ds.y.push(y);
+        // timestamps: uniform "seven days" so sequential split ≈ 6/7.
+        ds.ts.push((i as u64 * 7 * 86_400 / cfg.n.max(1) as u64) as u32);
+    }
+    ds
+}
+
+#[inline]
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::{avazu_synth, criteo_synth};
+
+    #[test]
+    fn zipf_is_heavily_skewed() {
+        let z = ZipfField::new(1000, 1.2);
+        let mut rng = Rng::new(0);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // head rank absorbs far more than uniform share
+        assert!(counts[0] > 1000, "head count {}", counts[0]);
+        // the tail half should be nearly empty
+        let tail: u32 = counts[500..].iter().sum();
+        assert!(tail < 2000, "tail count {tail}");
+    }
+
+    #[test]
+    fn zipf_probs_sum_to_one() {
+        let z = ZipfField::new(100, 1.05);
+        let total: f64 = (0..100).map(|k| z.prob(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generated_dataset_is_valid_and_reproducible() {
+        let schema = criteo_synth();
+        let cfg = SynthConfig { n: 500, ..Default::default() };
+        let a = generate(&schema, &cfg);
+        let b = generate(&schema, &cfg);
+        a.validate().unwrap();
+        assert_eq!(a.x_cat, b.x_cat);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.n(), 500);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let schema = avazu_synth();
+        let a = generate(&schema, &SynthConfig { n: 200, seed: 1, ..Default::default() });
+        let b = generate(&schema, &SynthConfig { n: 200, seed: 2, ..Default::default() });
+        assert_ne!(a.x_cat, b.x_cat);
+    }
+
+    #[test]
+    fn base_ctr_in_plausible_band() {
+        let schema = criteo_synth();
+        let ds = generate(&schema, &SynthConfig { n: 20_000, ..Default::default() });
+        let ctr = ds.ctr();
+        assert!(ctr > 0.1 && ctr < 0.5, "ctr {ctr}");
+    }
+
+    #[test]
+    fn timestamps_monotone_nondecreasing() {
+        let schema = avazu_synth();
+        let ds = generate(&schema, &SynthConfig { n: 1000, ..Default::default() });
+        assert!(ds.ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,151 @@
+//! Dataset transforms used by the paper's diagnostic experiments.
+//!
+//! Table 2 (right) ablates frequency imbalance by keeping only the top-3
+//! most frequent ids per field and collapsing everything else into a
+//! fourth "other" id, making every id frequent — under which the classic
+//! scaling rules work again.
+
+use super::dataset::Dataset;
+use super::schema::Schema;
+use super::stats::field_stats;
+
+/// Collapse each categorical field to its `k` hottest ids plus one
+/// "other" bucket (vocab becomes `min(vocab, k+1)` per field).
+pub fn topk_collapse(ds: &Dataset, k: usize) -> Dataset {
+    assert!(k >= 1);
+    let stats = field_stats(ds);
+    let offsets = ds.schema.offsets();
+
+    // per field: map local id -> new local id (0..k-1 hot, k = other)
+    let mut maps: Vec<Vec<i32>> = Vec::with_capacity(ds.schema.n_cat());
+    let mut new_vocab: Vec<usize> = Vec::with_capacity(ds.schema.n_cat());
+    for (f, &vocab) in ds.schema.vocab_sizes.iter().enumerate() {
+        // recompute counts in local-id order to rank ids
+        let mut counts = vec![0u64; vocab];
+        for row in ds.x_cat.chunks(ds.schema.n_cat()) {
+            counts[row[f] as usize - offsets[f]] += 1;
+        }
+        let mut ids: Vec<usize> = (0..vocab).collect();
+        ids.sort_unstable_by_key(|&i| std::cmp::Reverse(counts[i]));
+        let keep = k.min(vocab);
+        let has_other = vocab > keep;
+        let mut map = vec![keep as i32; vocab]; // default: "other"
+        for (rank, &id) in ids.iter().take(keep).enumerate() {
+            map[id] = rank as i32;
+        }
+        maps.push(map);
+        new_vocab.push(keep + has_other as usize);
+        let _ = &stats; // stats retained for potential diagnostics
+    }
+
+    let new_schema = Schema {
+        name: format!("{}_top{}", ds.schema.name, k),
+        n_dense: ds.schema.n_dense,
+        vocab_sizes: new_vocab,
+    };
+    let new_offsets = new_schema.offsets();
+
+    let mut out = Dataset::with_capacity(new_schema.clone(), ds.n());
+    for row in ds.x_cat.chunks(ds.schema.n_cat()) {
+        for (f, &gid) in row.iter().enumerate() {
+            let local = gid as usize - offsets[f];
+            out.x_cat.push(new_offsets[f] as i32 + maps[f][local]);
+        }
+    }
+    out.x_dense = ds.x_dense.clone();
+    out.y = ds.y.clone();
+    out.ts = ds.ts.clone();
+    out
+}
+
+/// Remap a collapsed dataset's ids onto a *target* schema (the artifact's
+/// schema) so a top-k dataset can run through HLO programs compiled for
+/// the full vocabulary: local id `l` of field `f` maps to global
+/// `target_offset[f] + l` (always valid since collapsed vocab ≤ target).
+pub fn reindex_to_schema(ds: &Dataset, target: &Schema) -> Dataset {
+    assert_eq!(ds.schema.n_cat(), target.n_cat());
+    assert_eq!(ds.schema.n_dense, target.n_dense);
+    for (f, (&a, &b)) in ds.schema.vocab_sizes.iter().zip(&target.vocab_sizes).enumerate() {
+        assert!(a <= b, "field {f}: collapsed vocab {a} exceeds target {b}");
+    }
+    let src_off = ds.schema.offsets();
+    let dst_off = target.offsets();
+    let mut out = Dataset::with_capacity(target.clone(), ds.n());
+    for row in ds.x_cat.chunks(ds.schema.n_cat()) {
+        for (f, &gid) in row.iter().enumerate() {
+            let local = gid as usize - src_off[f];
+            out.x_cat.push((dst_off[f] + local) as i32);
+        }
+    }
+    out.x_dense = ds.x_dense.clone();
+    out.y = ds.y.clone();
+    out.ts = ds.ts.clone();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::criteo_synth;
+    use crate::data::stats::global_counts;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn collapse_bounds_vocab_and_keeps_labels() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 3000, ..Default::default() });
+        let top3 = topk_collapse(&ds, 3);
+        top3.validate().unwrap();
+        assert!(top3.schema.vocab_sizes.iter().all(|&v| v <= 4));
+        assert_eq!(top3.y, ds.y);
+        assert_eq!(top3.n(), ds.n());
+    }
+
+    #[test]
+    fn collapse_makes_every_id_frequent() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 20_000, ..Default::default() });
+        let top3 = topk_collapse(&ds, 3);
+        let counts = global_counts(&top3);
+        let n = top3.n() as f64;
+        // every surviving id occurs with probability >> 1/4096
+        let min_p = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| c as f64 / n)
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_p > 1.0 / 4096.0, "min prob {min_p}");
+    }
+
+    #[test]
+    fn hot_ids_keep_their_mass() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 5000, ..Default::default() });
+        let before = global_counts(&ds);
+        let hottest_before = *before.iter().max().unwrap();
+        let top3 = topk_collapse(&ds, 3);
+        let after = global_counts(&top3);
+        // the per-field hottest id must keep an identical count
+        assert!(after.iter().any(|&c| c == hottest_before));
+    }
+
+    #[test]
+    fn reindex_preserves_structure() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 1000, ..Default::default() });
+        let top3 = topk_collapse(&ds, 3);
+        let re = reindex_to_schema(&top3, &criteo_synth());
+        re.validate().unwrap();
+        assert_eq!(re.schema.name, "criteo_synth");
+        assert_eq!(re.y, ds.y);
+        // collapsed field structure intact: ≤4 distinct ids per field
+        let offs = re.schema.offsets();
+        for f in 0..re.schema.n_cat() {
+            let mut distinct: Vec<i32> = re
+                .x_cat
+                .chunks(re.schema.n_cat())
+                .map(|r| r[f])
+                .collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert!(distinct.len() <= 4);
+            assert!(distinct.iter().all(|&g| g >= offs[f] as i32 && g < (offs[f] + 4) as i32));
+        }
+    }
+}

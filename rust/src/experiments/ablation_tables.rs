@@ -1,0 +1,186 @@
+//! Ablations: Table 7 (clipping designs) and Table 14 (CowClip
+//! components).
+
+use anyhow::Result;
+
+use super::common::{fmt_auc, fmt_logloss, run_one, DataVariant, ExpContext, RunSpec};
+use super::report::{Report, Table};
+use crate::clip::ClipMode;
+use crate::reference::ModelKind;
+use crate::scaling::rules::ScalingRule;
+
+const ABLATION_BATCHES: [(usize, &str); 2] = [(512, "8K"), (8192, "128K")];
+
+/// Table 7: gradient-clipping design ablation — global vs field vs
+/// column granularity, fixed vs adaptive thresholds.
+pub fn table7(ctx: &ExpContext) -> Result<Report> {
+    let n_train = ctx.data(DataVariant::Criteo)?.0.n();
+    let designs: [(&str, ClipMode); 5] = [
+        ("Gradient Clipping (GC)", ClipMode::Global),
+        ("Field-wise GC", ClipMode::Field),
+        ("Column-wise GC", ClipMode::Column),
+        ("Adaptive Field-wise GC", ClipMode::AdaField),
+        ("Adaptive Column-wise GC (CowClip)", ClipMode::CowClip),
+    ];
+    let mut header = vec!["design".to_string()];
+    for (b, label) in ABLATION_BATCHES {
+        if b <= n_train {
+            header.push(format!("b={label} AUC"));
+            header.push("LogLoss".into());
+        }
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+    for (label, clip) in designs {
+        let mut cells = vec![label.to_string()];
+        for (batch, _) in ABLATION_BATCHES {
+            if batch > n_train {
+                continue;
+            }
+            let mut spec = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, batch);
+            spec.clip = clip;
+            let r = run_one(ctx, &spec)?;
+            cells.push(fmt_auc(r.auc));
+            cells.push(fmt_logloss(r.logloss));
+        }
+        table.row(cells);
+    }
+    let body = format!(
+        "{}\n*Paper Table 7: finer granularity wins (column > field > global); \
+         adding adaptivity helps at column level but *hurts* at field level \
+         (column norms vary within a field); adaptive column-wise — CowClip — \
+         is best at both batches and is the only design stable at 128K.*",
+        table.to_markdown()
+    );
+    Ok(Report::new("table7", "Clipping-design ablation (DeepFM, Criteo)", body))
+}
+
+/// Table 14: component ablation of the CowClip recipe.
+pub fn table14(ctx: &ExpContext) -> Result<Report> {
+    let n_train = ctx.data(DataVariant::Criteo)?.0.n();
+    let mut header = vec!["configuration".to_string()];
+    for (b, label) in ABLATION_BATCHES {
+        if b <= n_train {
+            header.push(format!("b={label} AUC"));
+            header.push("LogLoss".into());
+        }
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+
+    let variants: Vec<(&str, Box<dyn Fn(usize) -> RunSpec>)> = vec![
+        (
+            "CowClip w/ Linear Scale on Dense",
+            Box::new(|b| {
+                let mut s = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, b);
+                s.rule = ScalingRule::Linear; // linear-scales the dense LR too
+                s
+            }),
+        ),
+        (
+            "CowClip w/ Empirical (n2-lambda) Scale",
+            Box::new(|b| {
+                let mut s = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, b);
+                s.rule = ScalingRule::N2Lambda;
+                s
+            }),
+        ),
+        (
+            "CowClip w/o zeta",
+            Box::new(|b| {
+                let mut s = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, b);
+                s.init_sigma = None;
+                s.warmup = true;
+                // zeta=0 removes the lower bound
+                s.clip = ClipMode::CowClip;
+                s.cowclip_preset = true;
+                s.rule = ScalingRule::CowClip;
+                s.init_sigma = Some(1e-2);
+                s
+            }),
+        ),
+        (
+            "CowClip w/o warmup",
+            Box::new(|b| {
+                let mut s = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, b);
+                s.warmup = false;
+                s
+            }),
+        ),
+        (
+            "CowClip w/o large init weight",
+            Box::new(|b| {
+                let mut s = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, b);
+                s.init_sigma = Some(1e-4); // baseline init
+                s
+            }),
+        ),
+        (
+            "CowClip (full)",
+            Box::new(|b| RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, b)),
+        ),
+    ];
+
+    for (label, mk) in &variants {
+        let mut cells = vec![label.to_string()];
+        for (batch, _) in ABLATION_BATCHES {
+            if batch > n_train {
+                continue;
+            }
+            let spec = mk(batch);
+            // "w/o zeta" needs zeta=0 in the hypers; RunSpec has no zeta
+            // knob, so thread it via a marker on the label.
+            let r = if label.contains("w/o zeta") {
+                run_with_zeta_zero(ctx, &spec)?
+            } else {
+                run_one(ctx, &spec)?
+            };
+            cells.push(fmt_auc(r.auc));
+            cells.push(fmt_logloss(r.logloss));
+        }
+        table.row(cells);
+    }
+    let body = format!(
+        "{}\n*Paper Table 14: linear-scaling the dense LR diverges; the \
+         empirical (n²-λ) schedule loses at 128K; ζ and warmup matter mainly \
+         at 128K; large init matters at 8K. The full recipe wins both \
+         columns.*",
+        table.to_markdown()
+    );
+    Ok(Report::new("table14", "CowClip component ablation (DeepFM, Criteo)", body))
+}
+
+/// Variant runner with the zeta lower bound removed.
+fn run_with_zeta_zero(
+    ctx: &ExpContext,
+    spec: &RunSpec,
+) -> Result<super::common::RunResult> {
+    use crate::coordinator::{TrainConfig, Trainer};
+    let data = ctx.data(spec.variant)?;
+    let preset = spec.variant.preset();
+    let mut base_hypers = preset.cowclip;
+    base_hypers.clip_zeta = 0.0;
+    let steps_per_epoch = (data.0.n() / spec.batch).max(1);
+    let engine = ctx.engine(spec.model, spec.variant, spec.clip)?;
+    let cfg = TrainConfig {
+        batch: spec.batch,
+        base_batch: preset.base_batch,
+        base_hypers,
+        rule: spec.rule,
+        epochs: ctx.epochs,
+        workers: ctx.workers,
+        warmup_steps: steps_per_epoch,
+        init_sigma: spec.init_sigma.unwrap_or(preset.init_sigma_cowclip),
+        seed: ctx.seed,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let report = trainer.train(&data.0, &data.1)?;
+    Ok(super::common::RunResult {
+        spec: spec.clone(),
+        auc: report.final_auc,
+        logloss: report.final_logloss,
+        report,
+    })
+}

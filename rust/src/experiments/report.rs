@@ -1,0 +1,99 @@
+//! Markdown table assembly + results persistence.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:<w$} |");
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+/// One experiment's rendered output.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub body: String,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, body: String) -> Report {
+        Report { id: id.into(), title: title.into(), body }
+    }
+
+    pub fn to_markdown(&self) -> String {
+        format!("## {} — {}\n\n{}\n", self.id, self.title, self.body)
+    }
+
+    /// Print to stdout and persist under `results/<id>.md`.
+    pub fn emit(&self, results_dir: &Path) -> Result<()> {
+        let text = self.to_markdown();
+        println!("{text}");
+        std::fs::create_dir_all(results_dir)?;
+        std::fs::write(results_dir.join(format!("{}.md", self.id)), &text)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["rule", "1K", "8K"]);
+        t.row(vec!["No Scaling".into(), "80.76".into(), "80.31".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| rule       | 1K    | 8K    |"));
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Scaling-rule comparison tables: Table 2 (diagnosis), Table 4 (Criteo),
+//! Table 10 (Criteo-seq), Table 11 (Avazu).
+
+use anyhow::Result;
+
+use super::common::{fmt_auc, fmt_logloss, run_one, DataVariant, ExpContext, RunSpec};
+use super::report::{Report, Table};
+use crate::reference::ModelKind;
+use crate::scaling::presets::paper_label;
+use crate::scaling::rules::ScalingRule;
+
+const DIAG_BATCHES: [usize; 4] = [64, 128, 256, 512]; // paper 1K..8K
+
+/// Table 2: No/Sqrt/Linear scaling on Criteo vs the top-3-id collapsed
+/// Criteo. The deltas (not absolutes) are the object: rules fail on the
+/// frequency-imbalanced data and work on the balanced one.
+pub fn table2(ctx: &ExpContext) -> Result<Report> {
+    let rules = [ScalingRule::NoScale, ScalingRule::Sqrt, ScalingRule::Linear];
+    let mut body = String::new();
+    for variant in [DataVariant::Criteo, DataVariant::CriteoTop3] {
+        body.push_str(&format!("**{}**\n\n", variant.label()));
+        let mut table = Table::new(&["batch", "No Scale", "Sqrt Scale", "Linear Scale"]);
+        let mut base_auc = [0.0f64; 3];
+        for (bi, &batch) in DIAG_BATCHES.iter().enumerate() {
+            let mut cells = vec![format!("{batch} ({})", paper_label(batch).unwrap_or("-"))];
+            for (ri, &rule) in rules.iter().enumerate() {
+                let r = run_one(ctx, &RunSpec::baseline(ModelKind::DeepFm, variant, batch, rule))?;
+                if bi == 0 {
+                    base_auc[ri] = r.auc;
+                    cells.push(fmt_auc(r.auc));
+                } else if r.auc.is_nan() {
+                    cells.push("diverge".into());
+                } else {
+                    cells.push(format!("{:+.2}", (r.auc - base_auc[ri]) * 100.0));
+                }
+            }
+            table.row(cells);
+        }
+        body.push_str(&table.to_markdown());
+        body.push('\n');
+    }
+    body.push_str(
+        "*Paper Table 2: on real (imbalanced) Criteo, classic rules lose AUC \
+         as batch grows; after collapsing every field to its top-3 ids (all \
+         ids frequent) the same rules hold — frequency imbalance is the \
+         failure cause. Expect the left block to degrade with batch and the \
+         right block to stay ~flat.*",
+    );
+    Ok(Report::new("table2", "Classic scaling rules vs id frequency (DeepFM)", body))
+}
+
+fn scaling_grid(ctx: &ExpContext, variant: DataVariant, id: &str, title: &str) -> Result<Report> {
+    // CowClip rows use the cowclip apply artifact; baselines use clip=none.
+    let strategies: Vec<(&str, Box<dyn Fn(usize) -> RunSpec>)> = vec![
+        (
+            "No Scaling",
+            Box::new(move |b| RunSpec::baseline(ModelKind::DeepFm, variant, b, ScalingRule::NoScale)),
+        ),
+        (
+            "Sqrt Scaling",
+            Box::new(move |b| RunSpec::baseline(ModelKind::DeepFm, variant, b, ScalingRule::Sqrt)),
+        ),
+        (
+            "Sqrt Scaling*",
+            Box::new(move |b| {
+                RunSpec::baseline(ModelKind::DeepFm, variant, b, ScalingRule::SqrtStar)
+            }),
+        ),
+        (
+            "LR Scaling",
+            Box::new(move |b| RunSpec::baseline(ModelKind::DeepFm, variant, b, ScalingRule::Linear)),
+        ),
+        (
+            "n2-lambda Scaling (Ours)",
+            Box::new(move |b| {
+                RunSpec::baseline(ModelKind::DeepFm, variant, b, ScalingRule::N2Lambda)
+            }),
+        ),
+        (
+            "CowClip (Ours)",
+            Box::new(move |b| RunSpec::cowclip(ModelKind::DeepFm, variant, b)),
+        ),
+    ];
+
+    let mut header: Vec<String> = vec!["strategy".into()];
+    for &b in &DIAG_BATCHES {
+        header.push(format!("{b} AUC", b = paper_label(b).unwrap_or("?")));
+        header.push("LogLoss".into());
+    }
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    for (label, mk) in &strategies {
+        let mut cells = vec![label.to_string()];
+        for &batch in &DIAG_BATCHES {
+            let r = run_one(ctx, &mk(batch))?;
+            cells.push(fmt_auc(r.auc));
+            cells.push(fmt_logloss(r.logloss));
+        }
+        table.row(cells);
+    }
+    let body = format!(
+        "{}\n*Paper {}: traditional rules degrade by 4K-8K; n²-λ holds to 4K; \
+         CowClip holds (or improves) across the whole span. Batch labels are \
+         the paper's (our sizes are 1/16, DESIGN.md §4).*",
+        table.to_markdown(),
+        id
+    );
+    Ok(Report::new(id, title, body))
+}
+
+/// Table 4: all six strategies on Criteo, DeepFM.
+pub fn table4(ctx: &ExpContext) -> Result<Report> {
+    scaling_grid(
+        ctx,
+        DataVariant::Criteo,
+        "table4",
+        "Scaling strategies on Criteo(synth), DeepFM, 1K-8K labels",
+    )
+}
+
+/// Table 10: scaling methods on Criteo-seq.
+pub fn table10(ctx: &ExpContext) -> Result<Report> {
+    scaling_grid(
+        ctx,
+        DataVariant::CriteoSeq,
+        "table10",
+        "Scaling strategies on Criteo-seq(synth), DeepFM",
+    )
+}
+
+/// Table 11: scaling methods on Avazu.
+pub fn table11(ctx: &ExpContext) -> Result<Report> {
+    scaling_grid(
+        ctx,
+        DataVariant::Avazu,
+        "table11",
+        "Scaling strategies on Avazu(synth), DeepFM",
+    )
+}

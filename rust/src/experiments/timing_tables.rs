@@ -1,0 +1,126 @@
+//! Training-time tables: Table 6 (Criteo) and Table 13 (Avazu) — measured
+//! wall-clock for our runs plus cost-model rows for the published systems.
+
+use anyhow::Result;
+
+use super::common::{fmt_auc, fmt_logloss, run_one, DataVariant, ExpContext, RunSpec};
+use super::report::{Report, Table};
+use crate::reference::ModelKind;
+use crate::scaling::presets::BATCH_LADDER;
+use crate::sim::{BaselineSystem, SimCostModel};
+
+fn timing_table(
+    ctx: &ExpContext,
+    variant: DataVariant,
+    id: &str,
+    title: &str,
+    models: &[ModelKind],
+) -> Result<Report> {
+    let n_train = ctx.data(variant)?.0.n();
+    let batches: Vec<(&str, usize)> = BATCH_LADDER
+        .iter()
+        .filter(|&&(_, b)| b <= n_train)
+        .copied()
+        .collect();
+
+    let mut header: Vec<String> =
+        vec!["system".into(), "AUC (%)".into(), "LogLoss".into()];
+    header.extend(batches.iter().map(|&(l, _)| format!("{l} (s)")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+
+    // simulated baseline systems (paper quotes: minutes on their testbed;
+    // we print their fitted cost-model minutes, capped at 4K batch)
+    for sys in BaselineSystem::ALL {
+        let (auc, ll) = sys.criteo_quality();
+        let model = SimCostModel::for_system(sys);
+        let mut cells = vec![
+            format!("{} (sim, min)", sys.label()),
+            format!("{auc:.1}"),
+            format!("{ll:.3}"),
+        ];
+        for &(label, _) in &batches {
+            // map our ladder label back to the paper batch for the model
+            let paper_batch = match label {
+                "1K" => 1024,
+                "2K" => 2048,
+                "4K" => 4096,
+                _ => 0,
+            };
+            if paper_batch == 0 || paper_batch > sys.max_batch_paper() {
+                cells.push("-".into());
+            } else {
+                let gpus = SimCostModel::paper_gpus_for_batch(paper_batch);
+                cells.push(format!("{:.0}", model.minutes(paper_batch, gpus)));
+            }
+        }
+        table.row(cells);
+    }
+
+    // our measured runs
+    let mut deepfm_times: Vec<f64> = Vec::new();
+    for &model in models {
+        let mut auc_s = String::new();
+        let mut ll_s = String::new();
+        let mut cells_time = Vec::new();
+        for (i, &(_, batch)) in batches.iter().enumerate() {
+            let r = run_one(ctx, &RunSpec::cowclip(model, variant, batch))?;
+            if i == 0 {
+                auc_s = fmt_auc(r.auc);
+                ll_s = fmt_logloss(r.logloss);
+            }
+            cells_time.push(format!("{:.1}", r.report.wall_seconds));
+            if model == ModelKind::DeepFm {
+                deepfm_times.push(r.report.wall_seconds);
+            }
+        }
+        let mut cells = vec![format!("{} (CowClip)", model.label()), auc_s, ll_s];
+        cells.extend(cells_time);
+        table.row(cells);
+    }
+
+    // speedup row (DeepFM)
+    if !deepfm_times.is_empty() {
+        let base = deepfm_times[0];
+        let mut cells = vec!["Speedup (DeepFM)".into(), "".into(), "".into()];
+        for t in &deepfm_times {
+            cells.push(format!("{:.2}x", base / t));
+        }
+        table.row(cells);
+    }
+
+    let body = format!(
+        "{}\n*Paper Table {}: baselines (XDL/FAE/DLRM/Hotline) go faster only \
+         by adding GPUs, cap at 4K batch and sit ≥0.6% AUC below; CowClip \
+         scales the batch on one device with near-linear speedup to 16K and \
+         ~{}x at 128K. Baseline rows are cost-model simulations (DESIGN.md \
+         §4) in paper-minutes; our rows are measured seconds on this CPU \
+         testbed — compare *speedup shapes*, not absolute units.*",
+        table.to_markdown(),
+        if id == "table6" { "6" } else { "13" },
+        if id == "table6" { "77" } else { "44" },
+    );
+    Ok(Report::new(id, title, body))
+}
+
+/// Table 6: training time on Criteo.
+pub fn table6(ctx: &ExpContext) -> Result<Report> {
+    timing_table(
+        ctx,
+        DataVariant::Criteo,
+        "table6",
+        "Training time vs batch size, Criteo(synth)",
+        &[ModelKind::DeepFm, ModelKind::WideDeep, ModelKind::Dcn, ModelKind::DcnV2],
+    )
+}
+
+/// Table 13: training time on Avazu (DeepFM + DCNv2 to bound runtime).
+pub fn table13(ctx: &ExpContext) -> Result<Report> {
+    timing_table(
+        ctx,
+        DataVariant::Avazu,
+        "table13",
+        "Training time vs batch size, Avazu(synth)",
+        &[ModelKind::DeepFm, ModelKind::DcnV2],
+    )
+}

@@ -1,0 +1,37 @@
+//! # CowClip — large-batch CTR training, reproduced end to end
+//!
+//! This crate is the Layer-3 coordinator of the three-layer reproduction of
+//! *CowClip: Reducing CTR Prediction Model Training Time from 12 Hours to
+//! 10 Minutes on 1 GPU* (Zheng et al., AAAI 2023):
+//!
+//! * **L1** — Pallas kernels (adaptive column-wise clipping, FM interaction)
+//!   authored in `python/compile/kernels/`, correctness-gated against
+//!   pure-jnp oracles.
+//! * **L2** — the four CTR models (W&D, DeepFM, DCN, DCN-v2) + Adam and the
+//!   clipping variants as JAX programs, AOT-lowered to HLO text under
+//!   `artifacts/`.
+//! * **L3** — this crate: the synthetic dataset substrate, the
+//!   leader/worker data-parallel coordinator, the scaling-rule engine, the
+//!   metrics stack, and the experiment harness that regenerates every table
+//!   and figure of the paper. Python never runs on the training path.
+//!
+//! Entry points: the `cowclip` binary (see `cli`), the five `examples/`,
+//! and the criterion benches. Start with [`runtime::Engine`] +
+//! [`coordinator::Trainer`] if you are embedding the library.
+
+pub mod cli;
+pub mod clip;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod reference;
+pub mod runtime;
+pub mod scaling;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{Error, Result};

@@ -1,0 +1,15 @@
+//! `cowclip` binary — CLI launcher for the coordinator, data tools and
+//! the experiment harness. See `cowclip help`.
+
+use cowclip::Result;
+
+mod cli_shim {
+    // The cli module lives in the library so examples/tests can reuse the
+    // arg parser; re-exported here for the binary.
+    pub use cowclip::cli::{dispatch, Args};
+}
+
+fn main() -> Result<()> {
+    let args = cli_shim::Args::parse(std::env::args().skip(1))?;
+    cli_shim::dispatch(args)
+}

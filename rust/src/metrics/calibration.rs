@@ -1,0 +1,94 @@
+//! Probability-calibration metrics.
+//!
+//! CTR systems bid money on predicted probabilities, so beyond ranking
+//! (AUC) the *calibration* of p̂ matters: the paper's L2/overfitting
+//! discussion is ultimately about keeping predictions calibrated at
+//! large batch. We report the standard pair:
+//!
+//! * **Brier score** — mean squared error of probabilities.
+//! * **ECE** (expected calibration error) — confidence-binned |p̂ − ȳ|,
+//!   weighted by bin occupancy.
+
+use super::logloss::sigmoid;
+
+/// Brier score from logits: `mean((sigmoid(z) - y)^2)`.
+pub fn brier_from_logits(logits: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    assert!(!logits.is_empty());
+    logits
+        .iter()
+        .zip(labels)
+        .map(|(&z, &y)| {
+            let d = sigmoid(z) as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / logits.len() as f64
+}
+
+/// Expected calibration error over `bins` equal-width probability bins.
+pub fn ece_from_logits(logits: &[f32], labels: &[u8], bins: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    assert!(bins > 0 && !logits.is_empty());
+    let mut sum_p = vec![0.0f64; bins];
+    let mut sum_y = vec![0.0f64; bins];
+    let mut count = vec![0usize; bins];
+    for (&z, &y) in logits.iter().zip(labels) {
+        let p = sigmoid(z) as f64;
+        let b = ((p * bins as f64) as usize).min(bins - 1);
+        sum_p[b] += p;
+        sum_y[b] += y as f64;
+        count[b] += 1;
+    }
+    let n = logits.len() as f64;
+    (0..bins)
+        .filter(|&b| count[b] > 0)
+        .map(|b| {
+            let c = count[b] as f64;
+            (c / n) * ((sum_p[b] / c) - (sum_y[b] / c)).abs()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brier_perfect_and_worst() {
+        // confident-correct ~ 0; confident-wrong ~ 1
+        assert!(brier_from_logits(&[20.0, -20.0], &[1, 0]) < 1e-6);
+        assert!(brier_from_logits(&[20.0, -20.0], &[0, 1]) > 0.99);
+    }
+
+    #[test]
+    fn brier_at_half_is_quarter() {
+        let b = brier_from_logits(&[0.0, 0.0], &[0, 1]);
+        assert!((b - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ece_zero_for_perfectly_calibrated_bins() {
+        // p = 0.5 predictions with a 50% positive rate -> ECE ~ 0
+        let logits = vec![0.0f32; 1000];
+        let labels: Vec<u8> = (0..1000).map(|i| (i % 2) as u8).collect();
+        assert!(ece_from_logits(&logits, &labels, 10) < 1e-9);
+    }
+
+    #[test]
+    fn ece_detects_systematic_overconfidence() {
+        // predict 0.9 while the true rate is 0.5
+        let logits = vec![2.1972246f32; 2000]; // sigmoid ~ 0.9
+        let labels: Vec<u8> = (0..2000).map(|i| (i % 2) as u8).collect();
+        let ece = ece_from_logits(&logits, &labels, 10);
+        assert!((ece - 0.4).abs() < 0.01, "ece {ece}");
+    }
+
+    #[test]
+    fn ece_bin_edges_do_not_panic() {
+        let logits = [f32::MAX.ln(), -50.0, 0.0];
+        let labels = [1u8, 0, 1];
+        let e = ece_from_logits(&logits, &labels, 4);
+        assert!(e.is_finite());
+    }
+}

@@ -1,0 +1,80 @@
+//! Logistic loss (the paper's secondary metric).
+
+/// Numerically stable sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Mean logloss from probabilities (clipped away from 0/1).
+pub fn logloss(probs: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    assert!(!probs.is_empty());
+    let mut total = 0.0f64;
+    for (&p, &y) in probs.iter().zip(labels) {
+        let p = (p as f64).clamp(1e-7, 1.0 - 1e-7);
+        total -= if y == 1 { p.ln() } else { (1.0 - p).ln() };
+    }
+    total / probs.len() as f64
+}
+
+/// Mean logloss computed stably from logits:
+/// `max(z,0) - z*y + log(1+exp(-|z|))`.
+pub fn logloss_from_logits(logits: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    assert!(!logits.is_empty());
+    let mut total = 0.0f64;
+    for (&z, &y) in logits.iter().zip(labels) {
+        let z = z as f64;
+        total += z.max(0.0) - z * y as f64 + (-z.abs()).exp().ln_1p();
+    }
+    total / logits.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_symmetry_and_range() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!((sigmoid(3.0) + sigmoid(-3.0) - 1.0).abs() < 1e-6);
+        assert!(sigmoid(-100.0) >= 0.0 && sigmoid(100.0) <= 1.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // p=0.5 everywhere -> ln 2
+        let ll = logloss(&[0.5, 0.5], &[0, 1]);
+        assert!((ll - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn logits_and_probs_agree() {
+        let logits = [-2.0f32, -0.5, 0.0, 1.5, 3.0];
+        let labels = [0u8, 1, 0, 1, 1];
+        let probs: Vec<f32> = logits.iter().map(|&z| sigmoid(z)).collect();
+        let a = logloss(&probs, &labels);
+        let b = logloss_from_logits(&logits, &labels);
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn confident_wrong_is_expensive() {
+        let good = logloss(&[0.9], &[1]);
+        let bad = logloss(&[0.1], &[1]);
+        assert!(bad > good * 5.0);
+    }
+
+    #[test]
+    fn extreme_logits_are_finite() {
+        let ll = logloss_from_logits(&[1e4, -1e4], &[1, 0]);
+        assert!(ll.is_finite());
+        assert!(ll < 1e-3);
+    }
+}

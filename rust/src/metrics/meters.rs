@@ -1,0 +1,98 @@
+//! Streaming metric accumulators used by the trainer and evaluators.
+
+use super::{auc, logloss_from_logits};
+
+/// Running mean of per-step training loss.
+#[derive(Clone, Debug, Default)]
+pub struct LossMeter {
+    sum: f64,
+    n: usize,
+}
+
+impl LossMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&mut self, loss: f64) {
+        self.sum += loss;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+/// Collects (logit, label) pairs across eval batches, then computes AUC
+/// and logloss in one pass. Padding rows are dropped via `valid`.
+#[derive(Clone, Debug, Default)]
+pub struct EvalAccumulator {
+    logits: Vec<f32>,
+    labels: Vec<u8>,
+}
+
+impl EvalAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the first `valid` entries of a batch's outputs.
+    pub fn push(&mut self, logits: &[f32], labels: &[f32], valid: usize) {
+        assert!(valid <= logits.len() && valid <= labels.len());
+        self.logits.extend_from_slice(&logits[..valid]);
+        self.labels.extend(labels[..valid].iter().map(|&y| y as u8));
+    }
+
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn auc(&self) -> f64 {
+        auc(&self.logits, &self.labels)
+    }
+
+    pub fn logloss(&self) -> f64 {
+        logloss_from_logits(&self.logits, &self.labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_meter_mean() {
+        let mut m = LossMeter::new();
+        assert_eq!(m.mean(), 0.0);
+        m.update(1.0);
+        m.update(3.0);
+        assert_eq!(m.mean(), 2.0);
+        assert_eq!(m.count(), 2);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn eval_accumulator_drops_padding() {
+        let mut acc = EvalAccumulator::new();
+        acc.push(&[2.0, -1.0, 9.9], &[1.0, 0.0, 1.0], 2); // last row is padding
+        acc.push(&[0.5], &[1.0], 1);
+        assert_eq!(acc.n(), 3);
+        assert!((acc.auc() - 1.0).abs() < 1e-12);
+        assert!(acc.logloss() > 0.0);
+    }
+}

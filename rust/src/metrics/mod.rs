@@ -1,0 +1,11 @@
+//! Evaluation metrics: exact AUC, logloss, and streaming accumulators.
+
+pub mod auc;
+pub mod calibration;
+pub mod logloss;
+pub mod meters;
+
+pub use auc::auc;
+pub use calibration::{brier_from_logits, ece_from_logits};
+pub use logloss::{logloss, logloss_from_logits, sigmoid};
+pub use meters::{EvalAccumulator, LossMeter};

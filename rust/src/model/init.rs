@@ -1,0 +1,130 @@
+//! Parameter initialization matching the paper's recipe (Appendix):
+//!
+//! * dense weights — Kaiming (He) normal, `std = sqrt(2 / fan_in)`;
+//!   biases zero.
+//! * embeddings — `N(0, sigma)`, with `sigma = 1e-4` for the baseline
+//!   runs and `sigma = 1e-2` for CowClip runs (the larger init gives the
+//!   norm-proportional clip threshold room to admit gradients early).
+//! * wide/LR table — treated as a 1-dim embedding, same sigma.
+
+use super::manifest::ParamEntry;
+use super::params::ParamSet;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Initialization hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct InitConfig {
+    pub seed: u64,
+    /// Embedding (and wide-table) init std.
+    pub embed_sigma: f32,
+}
+
+impl InitConfig {
+    /// Baseline init (paper: sigma = 1e-4).
+    pub fn baseline(seed: u64) -> InitConfig {
+        InitConfig { seed, embed_sigma: 1e-4 }
+    }
+
+    /// Large init used with CowClip (paper: sigma = 1e-2).
+    pub fn cowclip(seed: u64) -> InitConfig {
+        InitConfig { seed, embed_sigma: 1e-2 }
+    }
+}
+
+fn is_bias(name: &str) -> bool {
+    // Naming convention from python/compile/models: *_b<idx>, *_bout,
+    // wide_bias, cross_b<i>, head_b.
+    name.ends_with("bias")
+        || name
+            .rsplit('_')
+            .next()
+            .map(|last| last.starts_with('b') && !last.starts_with("bw"))
+            .unwrap_or(false)
+}
+
+/// Initialize a full parameter set for a manifest spec.
+pub fn init_params(spec: &[ParamEntry], cfg: &InitConfig) -> ParamSet {
+    let mut root = Rng::new(cfg.seed);
+    let tensors: Vec<Tensor> = spec
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let mut rng = root.split(i as u64 + 1);
+            let n = e.numel();
+            let data = match e.group.as_str() {
+                "embed" | "wide" => rng.gaussian_vec(n, cfg.embed_sigma),
+                _ => {
+                    if is_bias(&e.name) {
+                        vec![0.0; n]
+                    } else {
+                        // Kaiming over fan-in: first dim for matrices,
+                        // the vector length for 1-D cross weights.
+                        let fan_in = if e.shape.len() >= 2 { e.shape[0] } else { e.shape[0] };
+                        let std = (2.0 / fan_in as f32).sqrt();
+                        rng.gaussian_vec(n, std)
+                    }
+                }
+            };
+            Tensor::f32(e.shape.clone(), data)
+        })
+        .collect();
+    ParamSet::new(spec.to_vec(), tensors).expect("init shapes match spec by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, shape: Vec<usize>, group: &str) -> ParamEntry {
+        ParamEntry { name: name.into(), shape, group: group.into() }
+    }
+
+    #[test]
+    fn bias_name_detection() {
+        for b in ["mlp_b0", "mlp_bout", "wide_bias", "cross_b2", "head_b"] {
+            assert!(is_bias(b), "{b} should be a bias");
+        }
+        for w in ["mlp_w0", "mlp_wout", "embed_table", "cross_w1", "head_w", "cross_W0"] {
+            assert!(!is_bias(w), "{w} should not be a bias");
+        }
+    }
+
+    #[test]
+    fn embed_sigma_controls_embedding_scale() {
+        let spec = vec![entry("embed_table", vec![1000, 10], "embed")];
+        let small = init_params(&spec, &InitConfig::baseline(0));
+        let large = init_params(&spec, &InitConfig::cowclip(0));
+        let std = |p: &ParamSet| {
+            let xs = p.tensors[0].as_f32().unwrap();
+            let m: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+            (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32).sqrt()
+        };
+        assert!((std(&small) / 1e-4 - 1.0).abs() < 0.1);
+        assert!((std(&large) / 1e-2 - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn dense_kaiming_and_zero_bias() {
+        let spec = vec![
+            entry("mlp_w0", vec![128, 64], "dense"),
+            entry("mlp_b0", vec![64], "dense"),
+        ];
+        let p = init_params(&spec, &InitConfig::baseline(7));
+        let w = p.tensors[0].as_f32().unwrap();
+        let var: f32 = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        let want = 2.0 / 128.0;
+        assert!((var / want - 1.0).abs() < 0.15, "var {var} want {want}");
+        assert!(p.tensors[1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let spec = vec![entry("embed_table", vec![50, 4], "embed")];
+        let a = init_params(&spec, &InitConfig::baseline(1));
+        let b = init_params(&spec, &InitConfig::baseline(1));
+        let c = init_params(&spec, &InitConfig::baseline(2));
+        assert_eq!(a.tensors, b.tensors);
+        assert_ne!(a.tensors, c.tensors);
+    }
+}

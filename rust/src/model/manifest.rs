@@ -1,0 +1,275 @@
+//! `artifacts/manifest.json` — the compile-path/Rust interface contract.
+//!
+//! Written by `python/compile/manifest.py`; every field the Rust side
+//! relies on is validated on load, and the schema embedded here is
+//! cross-checked against the Rust presets by an integration test so the
+//! two sides cannot drift silently. Parsed with the in-tree JSON reader
+//! (`util::json`) — the build environment is offline, no serde.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::schema::Schema;
+use crate::util::json::Json;
+
+pub const SUPPORTED_VERSION: usize = 2;
+
+/// One positional parameter of a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "embed" | "wide" | "dense" — drives LR group / L2 / clipping.
+    pub group: String,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<ParamEntry> {
+        Ok(ParamEntry {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.usize_vec()?,
+            group: v.get("group")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One positional input of an HLO program.
+#[derive(Clone, Debug)]
+pub struct InputDesc {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered HLO program.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub id: String,
+    pub kind: String, // grad | apply | fwd
+    pub model: String,
+    pub schema: String,
+    pub batch: Option<usize>,
+    pub clip: Option<String>,
+    pub file: String,
+    pub inputs: Vec<InputDesc>,
+    pub n_outputs: usize,
+}
+
+/// Architecture constants shared by every artifact.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub embed_dim: usize,
+    pub hidden: Vec<usize>,
+    pub n_cross: usize,
+    pub use_pallas: bool,
+}
+
+/// Adam constants baked into the apply programs.
+#[derive(Clone, Debug)]
+pub struct AdamCfg {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub model_cfg: ModelCfg,
+    pub adam: AdamCfg,
+    pub hypers_layout: Vec<String>,
+    schemas: HashMap<String, Schema>,
+    pub param_specs: HashMap<String, Vec<ParamEntry>>,
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let version = v.get("version")?.as_usize()?;
+        let mc = v.get("model_cfg")?;
+        let model_cfg = ModelCfg {
+            embed_dim: mc.get("embed_dim")?.as_usize()?,
+            hidden: mc.get("hidden")?.usize_vec()?,
+            n_cross: mc.get("n_cross")?.as_usize()?,
+            use_pallas: mc.get("use_pallas")?.as_bool()?,
+        };
+        let ad = v.get("adam")?;
+        let adam = AdamCfg {
+            beta1: ad.get("beta1")?.as_f64()?,
+            beta2: ad.get("beta2")?.as_f64()?,
+            eps: ad.get("eps")?.as_f64()?,
+        };
+        let hypers_layout = v.get("hypers_layout")?.string_vec()?;
+
+        let mut schemas = HashMap::new();
+        for (name, sj) in v.get("schemas")?.as_obj()? {
+            let schema = Schema {
+                name: sj.get("name")?.as_str()?.to_string(),
+                n_dense: sj.get("n_dense")?.as_usize()?,
+                vocab_sizes: sj.get("vocab_sizes")?.usize_vec()?,
+            };
+            let total = sj.get("total_vocab")?.as_usize()?;
+            if total != schema.total_vocab() {
+                bail!("schema {name}: inconsistent total_vocab");
+            }
+            schemas.insert(name.clone(), schema);
+        }
+
+        let mut param_specs = HashMap::new();
+        for (key, spec) in v.get("param_specs")?.as_obj()? {
+            let entries: Vec<ParamEntry> = spec
+                .as_arr()?
+                .iter()
+                .map(ParamEntry::from_json)
+                .collect::<Result<_>>()?;
+            param_specs.insert(key.clone(), entries);
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(InputDesc {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                        shape: i.get("shape")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(Artifact {
+                id: a.get("id")?.as_str()?.to_string(),
+                kind: a.get("kind")?.as_str()?.to_string(),
+                model: a.get("model")?.as_str()?.to_string(),
+                schema: a.get("schema")?.as_str()?.to_string(),
+                batch: match a.opt("batch") {
+                    Some(b) => Some(b.as_usize()?),
+                    None => None,
+                },
+                clip: match a.opt("clip") {
+                    Some(c) => Some(c.as_str()?.to_string()),
+                    None => None,
+                },
+                file: a.get("file")?.as_str()?.to_string(),
+                inputs,
+                n_outputs: a.get("n_outputs")?.as_usize()?,
+            });
+        }
+
+        let m = Manifest {
+            version,
+            model_cfg,
+            adam,
+            hypers_layout,
+            schemas,
+            param_specs,
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.version != SUPPORTED_VERSION {
+            bail!(
+                "manifest version {} unsupported (want {}); re-run `make artifacts`",
+                self.version,
+                SUPPORTED_VERSION
+            );
+        }
+        let expected = [
+            "lr_dense", "lr_embed", "l2_embed", "clip_r", "clip_zeta", "clip_t", "step",
+            "reserved",
+        ];
+        if self.hypers_layout != expected {
+            bail!("hypers layout drifted: {:?}", self.hypers_layout);
+        }
+        for a in &self.artifacts {
+            if !matches!(a.kind.as_str(), "grad" | "apply" | "fwd") {
+                bail!("artifact {}: unknown kind {}", a.id, a.kind);
+            }
+            if a.inputs.is_empty() || a.n_outputs == 0 {
+                bail!("artifact {}: empty interface", a.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Schema by name, as the Rust type.
+    pub fn schema(&self, name: &str) -> Result<Schema> {
+        self.schemas
+            .get(name)
+            .cloned()
+            .with_context(|| format!("schema {name} not in manifest"))
+    }
+
+    pub fn schema_names(&self) -> Vec<&str> {
+        self.schemas.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Parameter spec for a (schema, model) pair.
+    pub fn param_spec(&self, schema: &str, model: &str) -> Result<&[ParamEntry]> {
+        self.param_specs
+            .get(&format!("{schema}-{model}"))
+            .map(|v| v.as_slice())
+            .with_context(|| format!("no param spec for {schema}-{model}"))
+    }
+
+    /// Find an artifact by predicate fields.
+    pub fn find(
+        &self,
+        kind: &str,
+        model: &str,
+        schema: &str,
+        batch: Option<usize>,
+        clip: Option<&str>,
+    ) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == kind
+                    && a.model == model
+                    && a.schema == schema
+                    && (batch.is_none() || a.batch == batch)
+                    && (clip.is_none() || a.clip.as_deref() == clip)
+            })
+            .with_context(|| {
+                format!("artifact not found: kind={kind} model={model} schema={schema} batch={batch:?} clip={clip:?}")
+            })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, artifact: &Artifact) -> PathBuf {
+        self.dir.join(&artifact.file)
+    }
+
+    /// Microbatch sizes available for (model, schema) grad programs,
+    /// ascending.
+    pub fn grad_microbatches(&self, model: &str, schema: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "grad" && a.model == model && a.schema == schema)
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}

@@ -1,0 +1,13 @@
+//! Model metadata: the AOT manifest contract and parameter management.
+//!
+//! The L2 compile path owns the model *math*; this module owns the model
+//! *state*: positional parameter layout (from `artifacts/manifest.json`),
+//! host-side initialization matching the paper's recipe, and checkpoints.
+
+pub mod init;
+pub mod manifest;
+pub mod params;
+
+pub use init::{init_params, InitConfig};
+pub use manifest::{Artifact, Manifest, ParamEntry};
+pub use params::ParamSet;

@@ -1,0 +1,206 @@
+//! Positional parameter set with checkpoint (de)serialization.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ParamEntry;
+use crate::tensor::Tensor;
+
+const CKPT_MAGIC: &[u8; 4] = b"CCKP";
+
+/// Ordered model parameters (or Adam moments) matching a manifest spec.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub spec: Vec<ParamEntry>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    pub fn new(spec: Vec<ParamEntry>, tensors: Vec<Tensor>) -> Result<ParamSet> {
+        if spec.len() != tensors.len() {
+            bail!("spec/tensor arity mismatch: {} vs {}", spec.len(), tensors.len());
+        }
+        for (e, t) in spec.iter().zip(&tensors) {
+            if e.shape != t.shape() {
+                bail!("param {}: shape {:?} vs tensor {:?}", e.name, e.shape, t.shape());
+            }
+        }
+        Ok(ParamSet { spec, tensors })
+    }
+
+    /// All-zeros set with the same spec (Adam moment initialization).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            spec: self.spec.clone(),
+            tensors: self.spec.iter().map(|e| Tensor::zeros(&e.shape)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total scalar parameter count.
+    pub fn numel(&self) -> usize {
+        self.spec.iter().map(|e| e.numel()).sum()
+    }
+
+    /// Scalar count per group ("embed"/"wide"/"dense").
+    pub fn numel_group(&self, group: &str) -> usize {
+        self.spec
+            .iter()
+            .filter(|e| e.group == group)
+            .map(|e| e.numel())
+            .sum()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Tensor> {
+        self.spec
+            .iter()
+            .position(|e| e.name == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    pub fn by_name_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.spec
+            .iter()
+            .position(|e| e.name == name)
+            .map(|i| &mut self.tensors[i])
+    }
+
+    /// Save to a simple binary checkpoint (names + f32 payloads).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(CKPT_MAGIC)?;
+        w.write_all(&(self.len() as u32).to_le_bytes())?;
+        for (e, t) in self.spec.iter().zip(&self.tensors) {
+            let name = e.name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(t.len() as u64).to_le_bytes())?;
+            for &x in t.as_f32()? {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a checkpoint against a known spec (shape-checked).
+    pub fn load(path: &Path, spec: &[ParamEntry]) -> Result<ParamSet> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != CKPT_MAGIC {
+            bail!("not a checkpoint file");
+        }
+        let mut nb = [0u8; 4];
+        r.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        if n != spec.len() {
+            bail!("checkpoint has {n} tensors, spec wants {}", spec.len());
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for e in spec {
+            let mut lb = [0u8; 4];
+            r.read_exact(&mut lb)?;
+            let name_len = u32::from_le_bytes(lb) as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            if name != e.name {
+                bail!("checkpoint order mismatch: {} vs {}", name, e.name);
+            }
+            let mut cb = [0u8; 8];
+            r.read_exact(&mut cb)?;
+            let count = u64::from_le_bytes(cb) as usize;
+            if count != e.numel() {
+                bail!("param {}: checkpoint numel {count} vs spec {}", e.name, e.numel());
+            }
+            let mut buf = vec![0u8; count * 4];
+            r.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(Tensor::f32(e.shape.clone(), data));
+        }
+        ParamSet::new(spec.to_vec(), tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<ParamEntry> {
+        vec![
+            ParamEntry { name: "a".into(), shape: vec![2, 3], group: "embed".into() },
+            ParamEntry { name: "b".into(), shape: vec![4], group: "dense".into() },
+        ]
+    }
+
+    fn pset() -> ParamSet {
+        ParamSet::new(
+            spec(),
+            vec![
+                Tensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()),
+                Tensor::f32(vec![4], vec![9.0; 4]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn numel_accounting() {
+        let p = pset();
+        assert_eq!(p.numel(), 10);
+        assert_eq!(p.numel_group("embed"), 6);
+        assert_eq!(p.numel_group("dense"), 4);
+        assert_eq!(p.numel_group("wide"), 0);
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let z = pset().zeros_like();
+        assert_eq!(z.tensors[0].shape(), &[2, 3]);
+        assert!(z.tensors[0].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let bad = ParamSet::new(spec(), vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[4])]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let p = pset();
+        let dir = std::env::temp_dir().join(format!("ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.ckpt");
+        p.save(&path).unwrap();
+        let back = ParamSet::load(&path, &spec()).unwrap();
+        assert_eq!(back.tensors, p.tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        let mut p = pset();
+        assert!(p.by_name("a").is_some());
+        assert!(p.by_name("zz").is_none());
+        p.by_name_mut("b").unwrap().scale(2.0).unwrap();
+        assert_eq!(p.by_name("b").unwrap().as_f32().unwrap()[0], 18.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Adam with bias correction; constants identical to the L2 JAX program.
+
+/// Adam hyperparameters (fixed across the paper's experiments).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Stateless Adam step operating on caller-owned moment buffers, so the
+/// same code serves every parameter tensor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig) -> Adam {
+        Adam { cfg }
+    }
+
+    /// In-place update of `w`, `m`, `v` with gradient `g` at 1-based step
+    /// `t` and learning rate `lr`.
+    pub fn step(&self, w: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, t: f32) {
+        debug_assert_eq!(w.len(), g.len());
+        debug_assert_eq!(w.len(), m.len());
+        debug_assert_eq!(w.len(), v.len());
+        let AdamConfig { beta1, beta2, eps } = self.cfg;
+        let bc1 = 1.0 - beta1.powf(t);
+        let bc2 = 1.0 - beta2.powf(t);
+        for i in 0..w.len() {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+            v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            w[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        let adam = Adam::default();
+        let mut w = vec![0.0f32; 3];
+        let mut m = vec![0.0; 3];
+        let mut v = vec![0.0; 3];
+        adam.step(&mut w, &mut m, &mut v, &[1.0, -5.0, 0.25], 0.01, 1.0);
+        for (i, sign) in [(0usize, -1.0f32), (1, 1.0), (2, -1.0)] {
+            assert!((w[i].abs() - 0.01).abs() < 1e-4, "w[{i}]={}", w[i]);
+            assert_eq!(w[i].signum(), sign);
+        }
+    }
+
+    #[test]
+    fn zero_grad_is_noop() {
+        let adam = Adam::default();
+        let mut w = vec![1.5f32, -2.0];
+        let mut m = vec![0.0; 2];
+        let mut v = vec![0.0; 2];
+        adam.step(&mut w, &mut m, &mut v, &[0.0, 0.0], 0.1, 1.0);
+        assert_eq!(w, vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (w - 3)^2
+        let adam = Adam::default();
+        let mut w = vec![0.0f32];
+        let mut m = vec![0.0];
+        let mut v = vec![0.0];
+        for t in 1..=2000 {
+            let g = vec![2.0 * (w[0] - 3.0)];
+            adam.step(&mut w, &mut m, &mut v, &g, 0.05, t as f32);
+        }
+        assert!((w[0] - 3.0).abs() < 0.05, "w={}", w[0]);
+    }
+
+    #[test]
+    fn moments_follow_recurrence() {
+        let adam = Adam::default();
+        let mut w = vec![0.0f32];
+        let mut m = vec![0.0];
+        let mut v = vec![0.0];
+        adam.step(&mut w, &mut m, &mut v, &[2.0], 0.01, 1.0);
+        assert!((m[0] - 0.2).abs() < 1e-6);
+        assert!((v[0] - 0.004).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,8 @@
+//! Host-side reference optimizer (Adam + L2), mirroring
+//! `python/compile/optim.py` exactly. Used by the pure-Rust reference
+//! trainer and by the HLO↔Rust parity tests; the production training
+//! path runs the AOT `apply` program instead.
+
+pub mod adam;
+
+pub use adam::{Adam, AdamConfig};

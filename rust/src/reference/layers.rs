@@ -1,0 +1,263 @@
+//! Differentiable building blocks with explicit forward caches and
+//! hand-derived backward passes (twins of `python/compile/models/common.py`
+//! and the Pallas kernels' math).
+
+use super::linalg::{colsum, matmul, matmul_nt, matmul_tn};
+
+/// Embedding gather: `out[b, F, d] = table[ids[b, F]]`.
+pub fn embed_fwd(table: &[f32], ids: &[i32], b: usize, f: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(ids.len(), b * f);
+    let mut out = vec![0.0f32; b * f * d];
+    for (slot, &id) in ids.iter().enumerate() {
+        let src = &table[id as usize * d..(id as usize + 1) * d];
+        out[slot * d..(slot + 1) * d].copy_from_slice(src);
+    }
+    out
+}
+
+/// Embedding backward: scatter-add `g[b, F, d]` into `dtable[V, d]`.
+pub fn embed_bwd(g: &[f32], ids: &[i32], v: usize, d: usize) -> Vec<f32> {
+    let mut dtable = vec![0.0f32; v * d];
+    for (slot, &id) in ids.iter().enumerate() {
+        let dst = &mut dtable[id as usize * d..(id as usize + 1) * d];
+        for (t, &gv) in dst.iter_mut().zip(&g[slot * d..(slot + 1) * d]) {
+            *t += gv;
+        }
+    }
+    dtable
+}
+
+/// Wide (first-order) logit: `out[b] = bias + sum_f wide[ids[b,f]]`.
+pub fn wide_fwd(wide: &[f32], bias: f32, ids: &[i32], b: usize, f: usize) -> Vec<f32> {
+    (0..b)
+        .map(|i| {
+            bias + ids[i * f..(i + 1) * f]
+                .iter()
+                .map(|&id| wide[id as usize])
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+/// Wide backward: `(dwide[V], dbias)` from upstream `dout[b]`.
+pub fn wide_bwd(dout: &[f32], ids: &[i32], v: usize, b: usize, f: usize) -> (Vec<f32>, f32) {
+    let mut dwide = vec![0.0f32; v];
+    let mut dbias = 0.0f32;
+    for i in 0..b {
+        dbias += dout[i];
+        for &id in &ids[i * f..(i + 1) * f] {
+            dwide[id as usize] += dout[i];
+        }
+    }
+    (dwide, dbias)
+}
+
+/// FM second-order term (twin of the Pallas `fm2` kernel):
+/// `out[b] = 0.5 * sum_d((sum_f v)^2 - sum_f v^2)`. Returns the cached
+/// field-sum `[b, d]` used by the backward pass.
+pub fn fm2_fwd(v: &[f32], b: usize, f: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut out = vec![0.0f32; b];
+    let mut sums = vec![0.0f32; b * d];
+    for i in 0..b {
+        let base = i * f * d;
+        let srow = &mut sums[i * d..(i + 1) * d];
+        let mut sq = vec![0.0f32; d];
+        for fj in 0..f {
+            for t in 0..d {
+                let x = v[base + fj * d + t];
+                srow[t] += x;
+                sq[t] += x * x;
+            }
+        }
+        out[i] = 0.5 * srow.iter().zip(&sq).map(|(s, q)| s * s - q).sum::<f32>();
+    }
+    (out, sums)
+}
+
+/// FM backward: `dv[b,f,:] = (sum_f' v - v[b,f,:]) * dout[b]`.
+pub fn fm2_bwd(v: &[f32], sums: &[f32], dout: &[f32], b: usize, f: usize, d: usize) -> Vec<f32> {
+    let mut dv = vec![0.0f32; b * f * d];
+    for i in 0..b {
+        let srow = &sums[i * d..(i + 1) * d];
+        let ct = dout[i];
+        for fj in 0..f {
+            let base = i * f * d + fj * d;
+            for t in 0..d {
+                dv[base + t] = (srow[t] - v[base + t]) * ct;
+            }
+        }
+    }
+    dv
+}
+
+/// One dense layer cache: input and pre-activation.
+pub struct DenseCache {
+    pub x: Vec<f32>,
+    pub pre: Vec<f32>,
+}
+
+/// Affine + optional ReLU. Caches enough for backward.
+pub fn dense_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    m: usize,
+    n: usize,
+    relu: bool,
+) -> (Vec<f32>, DenseCache) {
+    let mut y = matmul(x, w, b, m, n);
+    for i in 0..b {
+        for (yv, &bv) in y[i * n..(i + 1) * n].iter_mut().zip(bias) {
+            *yv += bv;
+        }
+    }
+    let pre = y.clone();
+    if relu {
+        for yv in &mut y {
+            if *yv < 0.0 {
+                *yv = 0.0;
+            }
+        }
+    }
+    (y, DenseCache { x: x.to_vec(), pre })
+}
+
+/// Backward of `dense_fwd`. Returns `(dx, dw, dbias)`.
+pub fn dense_bwd(
+    dy: &[f32],
+    cache: &DenseCache,
+    w: &[f32],
+    b: usize,
+    m: usize,
+    n: usize,
+    relu: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut g = dy.to_vec();
+    if relu {
+        for (gv, &p) in g.iter_mut().zip(&cache.pre) {
+            if p <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+    }
+    let dx = matmul_nt(&g, w, b, m, n);
+    let dw = matmul_tn(&cache.x, &g, b, m, n);
+    let db = colsum(&g, b, n);
+    (dx, dw, db)
+}
+
+/// Stable BCE-with-logits mean loss and its gradient
+/// `dlogit = (sigmoid(z) - y) / b`.
+pub fn bce_fwd_bwd(logits: &[f32], y: &[f32]) -> (f32, Vec<f32>) {
+    let b = logits.len();
+    let mut loss = 0.0f64;
+    let mut dlogits = vec![0.0f32; b];
+    for i in 0..b {
+        let z = logits[i] as f64;
+        let yi = y[i] as f64;
+        loss += z.max(0.0) - z * yi + (-z.abs()).exp().ln_1p();
+        let p = 1.0 / (1.0 + (-z).exp());
+        dlogits[i] = ((p - yi) / b as f64) as f32;
+    }
+    ((loss / b as f64) as f32, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embed_roundtrip_gradient() {
+        let table = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // V=3, d=2
+        let ids = [0i32, 2, 2, 1];
+        let out = embed_fwd(&table, &ids, 2, 2, 2);
+        assert_eq!(out, vec![1.0, 2.0, 5.0, 6.0, 5.0, 6.0, 3.0, 4.0]);
+        let g = vec![1.0f32; 8];
+        let dt = embed_bwd(&g, &ids, 3, 2);
+        assert_eq!(dt, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0]); // id 2 hit twice
+    }
+
+    #[test]
+    fn wide_fwd_bwd() {
+        let wide = [0.1f32, 0.2, 0.3];
+        let ids = [0i32, 2, 1, 1];
+        let out = wide_fwd(&wide, 1.0, &ids, 2, 2);
+        assert!((out[0] - 1.4).abs() < 1e-6);
+        assert!((out[1] - 1.4).abs() < 1e-6);
+        let (dw, db) = wide_bwd(&[1.0, 2.0], &ids, 3, 2, 2);
+        assert_eq!(dw, vec![1.0, 4.0, 1.0]);
+        assert_eq!(db, 3.0);
+    }
+
+    #[test]
+    fn fm2_matches_bruteforce() {
+        let (b, f, d) = (2usize, 3usize, 2usize);
+        let v: Vec<f32> = (0..b * f * d).map(|i| (i as f32) * 0.1 - 0.4).collect();
+        let (out, _) = fm2_fwd(&v, b, f, d);
+        for i in 0..b {
+            let mut brute = 0.0f32;
+            for a in 0..f {
+                for c in (a + 1)..f {
+                    for t in 0..d {
+                        brute += v[i * f * d + a * d + t] * v[i * f * d + c * d + t];
+                    }
+                }
+            }
+            assert!((out[i] - brute).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fm2_gradient_finite_difference() {
+        let (b, f, d) = (1usize, 3usize, 2usize);
+        let mut v: Vec<f32> = vec![0.3, -0.2, 0.5, 0.1, -0.4, 0.25];
+        let (_, sums) = fm2_fwd(&v, b, f, d);
+        let dv = fm2_bwd(&v, &sums, &[1.0], b, f, d);
+        let eps = 1e-3f32;
+        for i in 0..v.len() {
+            let orig = v[i];
+            v[i] = orig + eps;
+            let (hi, _) = fm2_fwd(&v, b, f, d);
+            v[i] = orig - eps;
+            let (lo, _) = fm2_fwd(&v, b, f, d);
+            v[i] = orig;
+            let fd = (hi[0] - lo[0]) / (2.0 * eps);
+            assert!((fd - dv[i]).abs() < 1e-3, "i={i}: fd {fd} vs {}", dv[i]);
+        }
+    }
+
+    #[test]
+    fn dense_relu_gradient_finite_difference() {
+        let (b, m, n) = (2usize, 3usize, 2usize);
+        let x: Vec<f32> = vec![0.5, -1.0, 0.3, 0.8, 0.2, -0.6];
+        let mut w: Vec<f32> = vec![0.4, -0.3, 0.7, 0.2, -0.5, 0.1];
+        let bias = vec![0.05f32, -0.1];
+        let loss = |w: &[f32]| -> f32 {
+            let (y, _) = dense_fwd(&x, w, &bias, b, m, n, true);
+            y.iter().sum()
+        };
+        let (_, cache) = dense_fwd(&x, &w, &bias, b, m, n, true);
+        let dy = vec![1.0f32; b * n];
+        let (_, dw, _) = dense_bwd(&dy, &cache, &w, b, m, n, true);
+        let eps = 1e-3;
+        for i in 0..w.len() {
+            let orig = w[i];
+            w[i] = orig + eps;
+            let hi = loss(&w);
+            w[i] = orig - eps;
+            let lo = loss(&w);
+            w[i] = orig;
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - dw[i]).abs() < 1e-2, "i={i}: fd {fd} vs {}", dw[i]);
+        }
+    }
+
+    #[test]
+    fn bce_known_values_and_grad() {
+        let (loss, d) = bce_fwd_bwd(&[0.0, 0.0], &[1.0, 0.0]);
+        assert!((loss - std::f64::consts::LN_2 as f32).abs() < 1e-6);
+        assert!((d[0] + 0.25).abs() < 1e-6); // (0.5-1)/2
+        assert!((d[1] - 0.25).abs() < 1e-6);
+    }
+}

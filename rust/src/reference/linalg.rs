@@ -1,0 +1,132 @@
+//! Row-major matrix helpers for the reference engine.
+//!
+//! Deliberately simple loops: the reference engine is a correctness
+//! oracle, not the hot path (the AOT artifacts are). The matmul uses the
+//! k-in-the-middle loop order so the inner loop is contiguous in both
+//! operands — good enough to keep the parity tests fast.
+
+/// `y[b, n] = x[b, m] @ w[m, n]` (accumulates into zeroed output).
+pub fn matmul(x: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(w.len(), m * n);
+    let mut y = vec![0.0f32; b * n];
+    for i in 0..b {
+        let xrow = &x[i * m..(i + 1) * m];
+        let yrow = &mut y[i * n..(i + 1) * n];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * n..(k + 1) * n];
+            for (yj, &wj) in yrow.iter_mut().zip(wrow) {
+                *yj += xv * wj;
+            }
+        }
+    }
+    y
+}
+
+/// `y[b, m] = g[b, n] @ w^T` where `w` is `[m, n]`.
+pub fn matmul_nt(g: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(w.len(), m * n);
+    let mut y = vec![0.0f32; b * m];
+    for i in 0..b {
+        let grow = &g[i * n..(i + 1) * n];
+        let yrow = &mut y[i * m..(i + 1) * m];
+        for k in 0..m {
+            let wrow = &w[k * n..(k + 1) * n];
+            let mut acc = 0.0f32;
+            for (gv, wv) in grow.iter().zip(wrow) {
+                acc += gv * wv;
+            }
+            yrow[k] = acc;
+        }
+    }
+    y
+}
+
+/// `dw[m, n] = x^T[m, b] @ g[b, n]` where `x` is `[b, m]`.
+pub fn matmul_tn(x: &[f32], g: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(g.len(), b * n);
+    let mut dw = vec![0.0f32; m * n];
+    for i in 0..b {
+        let xrow = &x[i * m..(i + 1) * m];
+        let grow = &g[i * n..(i + 1) * n];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let drow = &mut dw[k * n..(k + 1) * n];
+            for (dv, &gv) in drow.iter_mut().zip(grow) {
+                *dv += xv * gv;
+            }
+        }
+    }
+    dw
+}
+
+/// Column sums: `db[n] = sum_b g[b, n]`.
+pub fn colsum(g: &[f32], b: usize, n: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; n];
+    for i in 0..b {
+        for (dv, &gv) in db.iter_mut().zip(&g[i * n..(i + 1) * n]) {
+            *dv += gv;
+        }
+    }
+    db
+}
+
+/// Per-row dot products of two `[b, n]` matrices -> `[b]`.
+pub fn rowdot(a: &[f32], c: &[f32], b: usize, n: usize) -> Vec<f32> {
+    (0..b)
+        .map(|i| {
+            a[i * n..(i + 1) * n]
+                .iter()
+                .zip(&c[i * n..(i + 1) * n])
+                .map(|(x, y)| x * y)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let y = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_identities() {
+        // For y = x@w: dX = dY@w^T and dW = x^T@dY must satisfy the
+        // trace identity <dY, x@w_dir> = <matmul_tn(x,dY), w_dir>.
+        let x = [0.5f32, -1.0, 2.0, 0.0, 1.0, -0.5];
+        let w = [1.0f32, 0.0, -1.0, 2.0, 0.5, 1.5];
+        let dy = [1.0f32, -1.0, 0.5, 2.0];
+        let (b, m, n) = (2, 3, 2);
+        let dx = matmul_nt(&dy, &w, b, m, n);
+        let dw = matmul_tn(&x, &dy, b, m, n);
+        // directional check
+        let xdir = [0.1f32, 0.2, -0.1, 0.3, -0.2, 0.05];
+        let wdir = [0.2f32, -0.3, 0.1, 0.4, -0.1, 0.2];
+        let lhs: f32 = matmul(&xdir, &w, b, m, n).iter().zip(&dy).map(|(a, g)| a * g).sum();
+        let rhs: f32 = dx.iter().zip(&xdir).map(|(a, d)| a * d).sum();
+        assert!((lhs - rhs).abs() < 1e-5);
+        let lhs2: f32 = matmul(&x, &wdir, b, m, n).iter().zip(&dy).map(|(a, g)| a * g).sum();
+        let rhs2: f32 = dw.iter().zip(&wdir).map(|(a, d)| a * d).sum();
+        assert!((lhs2 - rhs2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn colsum_and_rowdot() {
+        let g = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(colsum(&g, 2, 2), vec![4.0, 6.0]);
+        assert_eq!(rowdot(&g, &g, 2, 2), vec![5.0, 25.0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Pure-Rust reference implementation of the full training math.
+//!
+//! This is a from-scratch twin of the L2 JAX programs: forward and
+//! hand-derived backward passes for all four CTR models, plus a complete
+//! training step (clip → L2 → Adam). It serves three purposes:
+//!
+//! 1. **Parity oracle** — integration tests drive the HLO artifacts and
+//!    this engine on identical inputs and require matching gradients,
+//!    losses and updates, which is the strongest end-to-end correctness
+//!    signal the repo has.
+//! 2. **No-artifact fallback** — `cowclip train --engine reference` runs
+//!    without `make artifacts` (slower; used in CI-like environments).
+//! 3. **Finite-difference ground truth** — the backward passes themselves
+//!    are verified against numerical gradients in this module's tests.
+
+pub mod layers;
+pub mod linalg;
+pub mod model;
+pub mod step;
+
+pub use model::{ModelKind, ReferenceModel};
+pub use step::{GradOutput, ReferenceEngine};

@@ -1,0 +1,516 @@
+//! The four CTR models: forward + hand-derived backward, positional
+//! parameter layout identical to `python/compile/models/*` specs.
+
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Result};
+
+use super::layers::*;
+use super::linalg::{colsum, matmul, matmul_nt, matmul_tn, rowdot};
+use crate::data::batcher::Batch;
+use crate::data::schema::Schema;
+use crate::model::params::ParamSet;
+use crate::tensor::Tensor;
+
+/// Which architecture to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    DeepFm,
+    WideDeep,
+    Dcn,
+    DcnV2,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 4] =
+        [ModelKind::DeepFm, ModelKind::WideDeep, ModelKind::Dcn, ModelKind::DcnV2];
+
+    /// Manifest / artifact-id name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::DeepFm => "deepfm",
+            ModelKind::WideDeep => "wd",
+            ModelKind::Dcn => "dcn",
+            ModelKind::DcnV2 => "dcnv2",
+        }
+    }
+
+    /// Paper row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelKind::DeepFm => "DeepFM",
+            ModelKind::WideDeep => "W&D",
+            ModelKind::Dcn => "DCN",
+            ModelKind::DcnV2 => "DCN v2",
+        }
+    }
+}
+
+impl FromStr for ModelKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "deepfm" => ModelKind::DeepFm,
+            "wd" => ModelKind::WideDeep,
+            "dcn" => ModelKind::Dcn,
+            "dcnv2" => ModelKind::DcnV2,
+            other => bail!("unknown model {other:?}"),
+        })
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Reference model: architecture constants + schema.
+#[derive(Clone, Debug)]
+pub struct ReferenceModel {
+    pub kind: ModelKind,
+    pub schema: Schema,
+    pub embed_dim: usize,
+    pub hidden: Vec<usize>,
+    pub n_cross: usize,
+}
+
+impl ReferenceModel {
+    pub fn new(kind: ModelKind, schema: Schema, embed_dim: usize, hidden: Vec<usize>, n_cross: usize) -> Self {
+        ReferenceModel { kind, schema, embed_dim, hidden, n_cross }
+    }
+
+    /// Deep-stream input dimension.
+    pub fn d0(&self) -> usize {
+        self.schema.n_cat() * self.embed_dim + self.schema.n_dense
+    }
+
+    /// Whether this architecture has a wide (LR/FM first-order) stream.
+    pub fn uses_wide(&self) -> bool {
+        matches!(self.kind, ModelKind::DeepFm | ModelKind::WideDeep)
+    }
+
+    /// Forward pass: logits `[b]`.
+    pub fn forward(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
+        Ok(self.forward_cached(params, batch)?.0)
+    }
+
+    /// Loss + positional gradients + per-id occurrence counts — the
+    /// reference twin of the AOT `grad` program.
+    pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<(f32, Vec<Tensor>, Vec<f32>)> {
+        let (logits, cache) = self.forward_cached(params, batch)?;
+        let y = batch.y.as_f32()?;
+        let (loss, dlogits) = bce_fwd_bwd(&logits, y);
+        let grads = self.backward(params, batch, &cache, &dlogits)?;
+
+        let mut counts = vec![0.0f32; self.schema.total_vocab()];
+        for &id in batch.x_cat.as_i32()? {
+            counts[id as usize] += 1.0;
+        }
+        Ok((loss, grads, counts))
+    }
+
+    // ------------------------------------------------------------------
+
+    fn forward_cached(&self, params: &ParamSet, batch: &Batch) -> Result<(Vec<f32>, Cache)> {
+        let ids = batch.x_cat.as_i32()?;
+        let dense = batch.x_dense.as_f32()?;
+        let b = batch.batch_size();
+        let f = self.schema.n_cat();
+        let d = self.embed_dim;
+        let nd = self.schema.n_dense;
+        let d0 = self.d0();
+        ensure!(ids.len() == b * f, "batch/cat shape mismatch");
+
+        let mut reader = Reader::new(params);
+        let embed_table = reader.next()?; // embed_table
+        let embeds = embed_fwd(embed_table, ids, b, f, d);
+
+        // x0 = concat(flatten(embeds), dense)
+        let mut x0 = vec![0.0f32; b * d0];
+        for i in 0..b {
+            x0[i * d0..i * d0 + f * d].copy_from_slice(&embeds[i * f * d..(i + 1) * f * d]);
+            if nd > 0 {
+                x0[i * d0 + f * d..(i + 1) * d0].copy_from_slice(&dense[i * nd..(i + 1) * nd]);
+            }
+        }
+
+        let mut cache = Cache {
+            embeds,
+            x0: x0.clone(),
+            fm_sums: Vec::new(),
+            wide_used: false,
+            mlp: Vec::new(),
+            cross: Vec::new(),
+            head_in: Vec::new(),
+        };
+
+        let mut logits;
+        match self.kind {
+            ModelKind::DeepFm | ModelKind::WideDeep => {
+                let wide_table = reader.next()?;
+                let wide_bias = reader.next()?[0];
+                cache.wide_used = true;
+                logits = wide_fwd(wide_table, wide_bias, ids, b, f);
+                if self.kind == ModelKind::DeepFm {
+                    let (fm, sums) = fm2_fwd(&cache.embeds, b, f, d);
+                    for (l, v) in logits.iter_mut().zip(&fm) {
+                        *l += v;
+                    }
+                    cache.fm_sums = sums;
+                }
+                // MLP with scalar head
+                let mut h = x0;
+                let mut m = d0;
+                for &n in &self.hidden {
+                    let w = reader.next()?;
+                    let bias = reader.next()?;
+                    let (out, c) = dense_fwd(&h, w, bias, b, m, n, true);
+                    cache.mlp.push(c);
+                    h = out;
+                    m = n;
+                }
+                let w = reader.next()?;
+                let bias = reader.next()?;
+                let (out, c) = dense_fwd(&h, w, bias, b, m, 1, false);
+                cache.mlp.push(c);
+                for i in 0..b {
+                    logits[i] += out[i];
+                }
+            }
+            ModelKind::Dcn | ModelKind::DcnV2 => {
+                // cross stream
+                let mut xl = x0.clone();
+                for _ in 0..self.n_cross {
+                    let w = reader.next()?;
+                    let bias = reader.next()?;
+                    match self.kind {
+                        ModelKind::Dcn => {
+                            // s[i] = xl[i,:] . w ; x_{l+1} = x0*s + b + xl
+                            let s: Vec<f32> = (0..b)
+                                .map(|i| {
+                                    xl[i * d0..(i + 1) * d0]
+                                        .iter()
+                                        .zip(w)
+                                        .map(|(x, wv)| x * wv)
+                                        .sum()
+                                })
+                                .collect();
+                            let mut next = vec![0.0f32; b * d0];
+                            for i in 0..b {
+                                for j in 0..d0 {
+                                    next[i * d0 + j] =
+                                        x0[i * d0 + j] * s[i] + bias[j] + xl[i * d0 + j];
+                                }
+                            }
+                            cache.cross.push(CrossCache { xl: xl.clone(), su: s });
+                            xl = next;
+                        }
+                        ModelKind::DcnV2 => {
+                            // u = xl@W + b ; x_{l+1} = x0 ⊙ u + xl
+                            let mut u = matmul(&xl, w, b, d0, d0);
+                            for i in 0..b {
+                                for (uv, &bv) in u[i * d0..(i + 1) * d0].iter_mut().zip(bias) {
+                                    *uv += bv;
+                                }
+                            }
+                            let mut next = vec![0.0f32; b * d0];
+                            for j in 0..b * d0 {
+                                next[j] = x0[j] * u[j] + xl[j];
+                            }
+                            cache.cross.push(CrossCache { xl: xl.clone(), su: u });
+                            xl = next;
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                // deep stream (hidden only)
+                let mut h = x0;
+                let mut m = d0;
+                for &n in &self.hidden {
+                    let w = reader.next()?;
+                    let bias = reader.next()?;
+                    let (out, c) = dense_fwd(&h, w, bias, b, m, n, true);
+                    cache.mlp.push(c);
+                    h = out;
+                    m = n;
+                }
+                // head over concat(xl, deep)
+                let hc = d0 + m;
+                let mut head_in = vec![0.0f32; b * hc];
+                for i in 0..b {
+                    head_in[i * hc..i * hc + d0].copy_from_slice(&xl[i * d0..(i + 1) * d0]);
+                    head_in[i * hc + d0..(i + 1) * hc].copy_from_slice(&h[i * m..(i + 1) * m]);
+                }
+                let head_w = reader.next()?;
+                let head_b = reader.next()?;
+                let (out, _) = dense_fwd(&head_in, head_w, head_b, b, hc, 1, false);
+                cache.head_in = head_in;
+                logits = out;
+            }
+        }
+        reader.finish()?;
+        Ok((logits, cache))
+    }
+
+    fn backward(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        cache: &Cache,
+        dlogits: &[f32],
+    ) -> Result<Vec<Tensor>> {
+        let ids = batch.x_cat.as_i32()?;
+        let b = batch.batch_size();
+        let f = self.schema.n_cat();
+        let d = self.embed_dim;
+        let d0 = self.d0();
+        let v = self.schema.total_vocab();
+
+        // gradients per positional slot, filled in spec order at the end
+        let mut grads: Vec<Tensor> = Vec::with_capacity(params.len());
+        let mut dx0 = vec![0.0f32; b * d0];
+        let mut dembeds = vec![0.0f32; b * f * d];
+
+        match self.kind {
+            ModelKind::DeepFm | ModelKind::WideDeep => {
+                // wide stream
+                let (dwide, dbias) = wide_bwd(dlogits, ids, v, b, f);
+                // FM stream
+                if self.kind == ModelKind::DeepFm {
+                    let dfm = fm2_bwd(&cache.embeds, &cache.fm_sums, dlogits, b, f, d);
+                    for (a, g) in dembeds.iter_mut().zip(&dfm) {
+                        *a += g;
+                    }
+                }
+                // deep stream: walk MLP caches backward
+                let n_hidden = self.hidden.len();
+                let mut dims = vec![d0];
+                dims.extend_from_slice(&self.hidden);
+                dims.push(1);
+                // collect weight refs in forward order
+                let mut weights: Vec<&[f32]> = Vec::new();
+                {
+                    let mut r = Reader::new(params);
+                    let _ = r.next()?; // embed
+                    let _ = r.next()?; // wide
+                    let _ = r.next()?; // wide_bias
+                    for _ in 0..=n_hidden {
+                        weights.push(r.next()?);
+                        let _ = r.next()?; // bias
+                    }
+                }
+                let mut dy: Vec<f32> = dlogits.to_vec(); // [b,1]
+                let mut dws: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                for layer in (0..=n_hidden).rev() {
+                    let relu = layer < n_hidden;
+                    let (m, n) = (dims[layer], dims[layer + 1]);
+                    let (dx, dw, db) =
+                        dense_bwd(&dy, &cache.mlp[layer], weights[layer], b, m, n, relu);
+                    dws.push((dw, db));
+                    dy = dx;
+                }
+                dws.reverse();
+                for (a, g) in dx0.iter_mut().zip(&dy) {
+                    *a += g;
+                }
+                // assemble positional grads: embed, wide, wide_bias, mlp...
+                // embed grad needs dx0's embedding slice + dembeds
+                for i in 0..b {
+                    for t in 0..f * d {
+                        dembeds[i * f * d + t] += dx0[i * d0 + t];
+                    }
+                }
+                let dtable = embed_bwd(&dembeds, ids, v, d);
+                grads.push(Tensor::f32(vec![v, d], dtable));
+                grads.push(Tensor::f32(vec![v, 1], dwide));
+                grads.push(Tensor::f32(vec![1], vec![dbias]));
+                for (dw, db) in dws {
+                    let n = db.len();
+                    let m = dw.len() / n;
+                    grads.push(Tensor::f32(vec![m, n], dw));
+                    grads.push(Tensor::f32(vec![n], db));
+                }
+            }
+            ModelKind::Dcn | ModelKind::DcnV2 => {
+                let n_hidden = self.hidden.len();
+                let h_last = *self.hidden.last().unwrap();
+                let hc = d0 + h_last;
+
+                // weight refs in forward order
+                let mut cross_ws: Vec<&[f32]> = Vec::new();
+                let mut mlp_ws: Vec<&[f32]> = Vec::new();
+                let head_w: &[f32];
+                {
+                    let mut r = Reader::new(params);
+                    let _ = r.next()?; // embed
+                    for _ in 0..self.n_cross {
+                        cross_ws.push(r.next()?);
+                        let _ = r.next()?;
+                    }
+                    for _ in 0..n_hidden {
+                        mlp_ws.push(r.next()?);
+                        let _ = r.next()?;
+                    }
+                    head_w = r.next()?;
+                    let _ = r.next()?;
+                    r.finish()?;
+                }
+
+                // head backward
+                let dhead_w = matmul_tn(&cache.head_in, dlogits, b, hc, 1);
+                let dhead_b = colsum(dlogits, b, 1);
+                let dhead_in = matmul_nt(dlogits, head_w, b, hc, 1);
+                let mut dxl = vec![0.0f32; b * d0];
+                let mut dh = vec![0.0f32; b * h_last];
+                for i in 0..b {
+                    dxl[i * d0..(i + 1) * d0]
+                        .copy_from_slice(&dhead_in[i * hc..i * hc + d0]);
+                    dh[i * h_last..(i + 1) * h_last]
+                        .copy_from_slice(&dhead_in[i * hc + d0..(i + 1) * hc]);
+                }
+
+                // deep stream backward
+                let mut dims = vec![d0];
+                dims.extend_from_slice(&self.hidden);
+                let mut mlp_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                let mut dy = dh;
+                for layer in (0..n_hidden).rev() {
+                    let (m, n) = (dims[layer], dims[layer + 1]);
+                    let (dx, dw, db) = dense_bwd(&dy, &cache.mlp[layer], mlp_ws[layer], b, m, n, true);
+                    mlp_grads.push((dw, db));
+                    dy = dx;
+                }
+                mlp_grads.reverse();
+                for (a, g) in dx0.iter_mut().zip(&dy) {
+                    *a += g;
+                }
+
+                // cross stream backward
+                let mut cross_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                for l in (0..self.n_cross).rev() {
+                    let cc = &cache.cross[l];
+                    match self.kind {
+                        ModelKind::Dcn => {
+                            // x_{l+1} = x0 * s + b + xl, s = xl . w
+                            let ds = rowdot(&cache.x0, &dxl, b, d0); // [b]
+                            let w = cross_ws[l];
+                            let mut dw = vec![0.0f32; d0];
+                            for i in 0..b {
+                                for j in 0..d0 {
+                                    dw[j] += ds[i] * cc.xl[i * d0 + j];
+                                }
+                            }
+                            let db = colsum(&dxl, b, d0);
+                            // dx0 += s * dxl ; dxl_new = dxl + ds ⊗ w
+                            let mut dxl_new = vec![0.0f32; b * d0];
+                            for i in 0..b {
+                                for j in 0..d0 {
+                                    dx0[i * d0 + j] += cc.su[i] * dxl[i * d0 + j];
+                                    dxl_new[i * d0 + j] = dxl[i * d0 + j] + ds[i] * w[j];
+                                }
+                            }
+                            cross_grads.push((dw, db));
+                            dxl = dxl_new;
+                        }
+                        ModelKind::DcnV2 => {
+                            // x_{l+1} = x0 ⊙ u + xl, u = xl@W + b
+                            let mut du = vec![0.0f32; b * d0];
+                            for j in 0..b * d0 {
+                                du[j] = cache.x0[j] * dxl[j];
+                                dx0[j] += cc.su[j] * dxl[j];
+                            }
+                            let dw = matmul_tn(&cc.xl, &du, b, d0, d0);
+                            let db = colsum(&du, b, d0);
+                            let dxl_add = matmul_nt(&du, cross_ws[l], b, d0, d0);
+                            for j in 0..b * d0 {
+                                dxl[j] += dxl_add[j];
+                            }
+                            cross_grads.push((dw, db));
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                cross_grads.reverse();
+                // x0 also receives the layer-0 dxl (xl starts as x0)
+                for (a, g) in dx0.iter_mut().zip(&dxl) {
+                    *a += g;
+                }
+
+                for i in 0..b {
+                    for t in 0..f * d {
+                        dembeds[i * f * d + t] += dx0[i * d0 + t];
+                    }
+                }
+                let dtable = embed_bwd(&dembeds, ids, v, d);
+                grads.push(Tensor::f32(vec![v, d], dtable));
+                for (dw, db) in cross_grads {
+                    if self.kind == ModelKind::Dcn {
+                        grads.push(Tensor::f32(vec![d0], dw));
+                    } else {
+                        grads.push(Tensor::f32(vec![d0, d0], dw));
+                    }
+                    grads.push(Tensor::f32(vec![d0], db));
+                }
+                for (dw, db) in mlp_grads {
+                    let n = db.len();
+                    let m = dw.len() / n;
+                    grads.push(Tensor::f32(vec![m, n], dw));
+                    grads.push(Tensor::f32(vec![n], db));
+                }
+                grads.push(Tensor::f32(vec![hc, 1], dhead_w));
+                grads.push(Tensor::f32(vec![1], dhead_b));
+            }
+        }
+
+        ensure!(grads.len() == params.len(), "gradient arity mismatch");
+        for (g, e) in grads.iter().zip(&params.spec) {
+            ensure!(g.shape() == e.shape.as_slice(), "grad shape mismatch for {}", e.name);
+        }
+        Ok(grads)
+    }
+}
+
+/// Forward caches reused by backward.
+struct Cache {
+    embeds: Vec<f32>,
+    x0: Vec<f32>,
+    fm_sums: Vec<f32>,
+    #[allow(dead_code)]
+    wide_used: bool,
+    mlp: Vec<DenseCache>,
+    cross: Vec<CrossCache>,
+    head_in: Vec<f32>,
+}
+
+/// Per-cross-layer cache: the layer input and the scalar/vector gate.
+struct CrossCache {
+    xl: Vec<f32>,
+    /// DCN: `s [b]`; DCNv2: `u [b, d0]`.
+    su: Vec<f32>,
+}
+
+/// Positional parameter walker (twin of python's ParamReader).
+struct Reader<'a> {
+    params: &'a ParamSet,
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(params: &'a ParamSet) -> Self {
+        Reader { params, i: 0 }
+    }
+
+    fn next(&mut self) -> Result<&'a [f32]> {
+        ensure!(self.i < self.params.len(), "parameter underflow");
+        let t = self.params.tensors[self.i].as_f32()?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(self.i == self.params.len(), "consumed {} of {} params", self.i, self.params.len());
+        Ok(())
+    }
+}

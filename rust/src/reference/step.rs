@@ -1,0 +1,320 @@
+//! Full reference training step: grad → clip → L2 → Adam.
+//!
+//! `ReferenceEngine` mirrors the split AOT interface (`grad` and `apply`
+//! as separate calls) so the coordinator can swap engines behind one
+//! trait-shaped surface.
+
+use anyhow::Result;
+
+use super::model::{ModelKind, ReferenceModel};
+use crate::clip::{clip_embedding_grads, ClipMode, ClipParams};
+use crate::data::batcher::Batch;
+use crate::data::schema::Schema;
+use crate::model::manifest::ParamEntry;
+use crate::model::params::ParamSet;
+use crate::optim::Adam;
+use crate::scaling::rules::HyperSet;
+use crate::tensor::Tensor;
+
+/// Output of a gradient computation.
+pub struct GradOutput {
+    pub grads: Vec<Tensor>,
+    pub counts: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Build the positional parameter spec for (model, schema) — must stay
+/// identical to `python/compile/models/*.spec`; the manifest parity test
+/// enforces this.
+pub fn build_spec(
+    kind: ModelKind,
+    schema: &Schema,
+    embed_dim: usize,
+    hidden: &[usize],
+    n_cross: usize,
+) -> Vec<ParamEntry> {
+    let v = schema.total_vocab();
+    let d0 = schema.n_cat() * embed_dim + schema.n_dense;
+    let entry = |name: &str, shape: Vec<usize>, group: &str| ParamEntry {
+        name: name.into(),
+        shape,
+        group: group.into(),
+    };
+    let mut spec = vec![entry("embed_table", vec![v, embed_dim], "embed")];
+    match kind {
+        ModelKind::DeepFm | ModelKind::WideDeep => {
+            spec.push(entry("wide_table", vec![v, 1], "wide"));
+            spec.push(entry("wide_bias", vec![1], "dense"));
+            let mut m = d0;
+            for (i, &h) in hidden.iter().enumerate() {
+                spec.push(entry(&format!("mlp_w{i}"), vec![m, h], "dense"));
+                spec.push(entry(&format!("mlp_b{i}"), vec![h], "dense"));
+                m = h;
+            }
+            spec.push(entry("mlp_wout", vec![m, 1], "dense"));
+            spec.push(entry("mlp_bout", vec![1], "dense"));
+        }
+        ModelKind::Dcn | ModelKind::DcnV2 => {
+            for i in 0..n_cross {
+                if kind == ModelKind::Dcn {
+                    spec.push(entry(&format!("cross_w{i}"), vec![d0], "dense"));
+                } else {
+                    spec.push(entry(&format!("cross_W{i}"), vec![d0, d0], "dense"));
+                }
+                spec.push(entry(&format!("cross_b{i}"), vec![d0], "dense"));
+            }
+            let mut m = d0;
+            for (i, &h) in hidden.iter().enumerate() {
+                spec.push(entry(&format!("mlp_w{i}"), vec![m, h], "dense"));
+                spec.push(entry(&format!("mlp_b{i}"), vec![h], "dense"));
+                m = h;
+            }
+            spec.push(entry("head_w", vec![d0 + m, 1], "dense"));
+            spec.push(entry("head_b", vec![1], "dense"));
+        }
+    }
+    spec
+}
+
+/// Pure-Rust engine implementing grad/apply/fwd.
+pub struct ReferenceEngine {
+    pub model: ReferenceModel,
+    pub clip_mode: ClipMode,
+    adam: Adam,
+}
+
+impl ReferenceEngine {
+    pub fn new(model: ReferenceModel, clip_mode: ClipMode) -> ReferenceEngine {
+        ReferenceEngine { model, clip_mode, adam: Adam::default() }
+    }
+
+    pub fn spec(&self) -> Vec<ParamEntry> {
+        build_spec(
+            self.model.kind,
+            &self.model.schema,
+            self.model.embed_dim,
+            &self.model.hidden,
+            self.model.n_cross,
+        )
+    }
+
+    /// Forward-only (eval) logits.
+    pub fn fwd(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
+        self.model.forward(params, batch)
+    }
+
+    /// Gradient + counts + loss for one microbatch.
+    pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<GradOutput> {
+        let (loss, grads, counts) = self.model.grad(params, batch)?;
+        Ok(GradOutput { grads, counts, loss })
+    }
+
+    /// Apply accumulated gradients: clip (embed group) → +L2 (embed+wide)
+    /// → Adam (group learning rates). `step` is 1-based.
+    pub fn apply(
+        &self,
+        params: &mut ParamSet,
+        m: &mut ParamSet,
+        v: &mut ParamSet,
+        grads: &mut [Tensor],
+        counts: &[f32],
+        hypers: &HyperSet,
+        step: f32,
+    ) -> Result<()> {
+        let d = self.model.embed_dim;
+        let clip_params = ClipParams {
+            r: hypers.clip_r,
+            zeta: hypers.clip_zeta,
+            clip_t: hypers.clip_t,
+        };
+        for (i, entry) in params.spec.clone().iter().enumerate() {
+            let w = params.tensors[i].as_f32_mut()?;
+            let g = grads[i].as_f32_mut()?;
+            let lr = match entry.group.as_str() {
+                "embed" => {
+                    clip_embedding_grads(
+                        self.clip_mode,
+                        g,
+                        w,
+                        counts,
+                        &self.model.schema,
+                        d,
+                        &clip_params,
+                    );
+                    for (gv, wv) in g.iter_mut().zip(w.iter()) {
+                        *gv += hypers.l2_embed * wv;
+                    }
+                    hypers.lr_embed
+                }
+                "wide" => {
+                    // L2 but no clipping (1-d LR "embeddings" are exempt)
+                    for (gv, wv) in g.iter_mut().zip(w.iter()) {
+                        *gv += hypers.l2_embed * wv;
+                    }
+                    hypers.lr_embed
+                }
+                _ => hypers.lr_dense,
+            };
+            self.adam.step(
+                w,
+                m.tensors[i].as_f32_mut()?,
+                v.tensors[i].as_f32_mut()?,
+                g,
+                lr,
+                step,
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batcher::Batch;
+    use crate::model::init::{init_params, InitConfig};
+    use crate::util::Rng;
+
+    fn tiny_schema() -> Schema {
+        Schema { name: "tiny".into(), n_dense: 3, vocab_sizes: vec![5, 4, 2] }
+    }
+
+    fn tiny_model(kind: ModelKind) -> ReferenceModel {
+        ReferenceModel::new(kind, tiny_schema(), 4, vec![8, 8], 2)
+    }
+
+    fn tiny_batch(schema: &Schema, b: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let offs = schema.offsets();
+        let mut x_cat = Vec::new();
+        for _ in 0..b {
+            for (f, &vs) in schema.vocab_sizes.iter().enumerate() {
+                x_cat.push((offs[f] + rng.below(vs as u64) as usize) as i32);
+            }
+        }
+        let x_dense: Vec<f32> = (0..b * schema.n_dense)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let y: Vec<f32> = (0..b).map(|_| rng.bernoulli(0.4) as u8 as f32).collect();
+        Batch {
+            x_cat: Tensor::i32(vec![b, schema.n_cat()], x_cat),
+            x_dense: Tensor::f32(vec![b, schema.n_dense], x_dense),
+            y: Tensor::f32(vec![b], y),
+            valid: b,
+        }
+    }
+
+    fn loss_of(model: &ReferenceModel, params: &ParamSet, batch: &Batch) -> f32 {
+        let logits = model.forward(params, batch).unwrap();
+        let y = batch.y.as_f32().unwrap();
+        super::super::layers::bce_fwd_bwd(&logits, y).0
+    }
+
+    /// The core correctness test of the whole reference engine: every
+    /// model's analytic gradient matches central finite differences on a
+    /// sample of coordinates from every parameter tensor.
+    #[test]
+    fn finite_difference_gradients_all_models() {
+        for kind in ModelKind::ALL {
+            let model = tiny_model(kind);
+            let spec = build_spec(kind, &model.schema, 4, &[8, 8], 2);
+            let mut params = init_params(&spec, &InitConfig { seed: 3, embed_sigma: 0.05 });
+            // perturb biases away from 0 so their grads are informative
+            for t in &mut params.tensors {
+                for (j, x) in t.as_f32_mut().unwrap().iter_mut().enumerate() {
+                    if *x == 0.0 {
+                        *x = 0.01 * ((j % 7) as f32 - 3.0);
+                    }
+                }
+            }
+            let batch = tiny_batch(&model.schema, 6, 9);
+            let (_, grads, _) = model.grad(&params, &batch).unwrap();
+
+            let eps = 2e-3f32;
+            let mut checked = 0;
+            for ti in 0..params.len() {
+                let n = params.tensors[ti].len();
+                // sample a handful of coordinates per tensor
+                let idxs: Vec<usize> = (0..n).step_by(1.max(n / 5)).take(5).collect();
+                for &j in &idxs {
+                    let orig = params.tensors[ti].as_f32().unwrap()[j];
+                    params.tensors[ti].as_f32_mut().unwrap()[j] = orig + eps;
+                    let hi = loss_of(&model, &params, &batch);
+                    params.tensors[ti].as_f32_mut().unwrap()[j] = orig - eps;
+                    let lo = loss_of(&model, &params, &batch);
+                    params.tensors[ti].as_f32_mut().unwrap()[j] = orig;
+                    let fd = (hi - lo) / (2.0 * eps);
+                    let an = grads[ti].as_f32().unwrap()[j];
+                    assert!(
+                        (fd - an).abs() < 2e-3 + 0.05 * an.abs().max(fd.abs()),
+                        "{kind}: tensor {} ({}) idx {j}: fd {fd} vs analytic {an}",
+                        ti,
+                        params.spec[ti].name,
+                    );
+                    checked += 1;
+                }
+            }
+            assert!(checked > 20, "{kind}: too few coordinates checked");
+        }
+    }
+
+    #[test]
+    fn counts_match_batch_occurrences() {
+        let model = tiny_model(ModelKind::WideDeep);
+        let spec = model_spec(&model);
+        let params = init_params(&spec, &InitConfig::baseline(0));
+        let batch = tiny_batch(&model.schema, 16, 4);
+        let (_, _, counts) = model.grad(&params, &batch).unwrap();
+        assert_eq!(counts.iter().sum::<f32>(), (16 * 3) as f32);
+    }
+
+    fn model_spec(model: &ReferenceModel) -> Vec<ParamEntry> {
+        build_spec(model.kind, &model.schema, model.embed_dim, &model.hidden, model.n_cross)
+    }
+
+    #[test]
+    fn training_reduces_loss_every_model() {
+        for kind in ModelKind::ALL {
+            let model = tiny_model(kind);
+            let engine = ReferenceEngine::new(model.clone(), ClipMode::CowClip);
+            let spec = engine.spec();
+            let mut params = init_params(&spec, &InitConfig { seed: 1, embed_sigma: 0.01 });
+            let mut m = params.zeros_like();
+            let mut v = params.zeros_like();
+            let batch = tiny_batch(&model.schema, 32, 2);
+            let hypers = HyperSet {
+                lr_dense: 1e-2,
+                lr_embed: 1e-2,
+                l2_embed: 1e-5,
+                clip_r: 1.0,
+                clip_zeta: 1e-5,
+                clip_t: 1.0,
+            };
+            let mut losses = Vec::new();
+            for t in 1..=20 {
+                let mut out = engine.grad(&params, &batch).unwrap();
+                losses.push(out.loss);
+                engine
+                    .apply(&mut params, &mut m, &mut v, &mut out.grads, &out.counts, &hypers, t as f32)
+                    .unwrap();
+            }
+            assert!(
+                losses[19] < losses[0] * 0.98,
+                "{kind}: {:?}",
+                (&losses[0], &losses[19])
+            );
+        }
+    }
+
+    #[test]
+    fn spec_matches_reference_grad_arity() {
+        for kind in ModelKind::ALL {
+            let model = tiny_model(kind);
+            let spec = model_spec(&model);
+            let params = init_params(&spec, &InitConfig::baseline(0));
+            let batch = tiny_batch(&model.schema, 4, 1);
+            let (_, grads, _) = model.grad(&params, &batch).unwrap();
+            assert_eq!(grads.len(), spec.len(), "{kind}");
+        }
+    }
+}

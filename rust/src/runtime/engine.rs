@@ -1,0 +1,146 @@
+//! Executable cache + typed execute wrapper.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::{Artifact, Manifest};
+use crate::tensor::Tensor;
+
+/// A compiled HLO program plus its manifest metadata.
+pub struct Program {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.artifact.inputs.len() {
+            bail!(
+                "{}: got {} inputs, expected {}",
+                self.artifact.id,
+                inputs.len(),
+                self.artifact.inputs.len()
+            );
+        }
+        // Shape check against the manifest (cheap; catches host bugs early).
+        for (t, d) in inputs.iter().zip(&self.artifact.inputs) {
+            if t.shape() != d.shape.as_slice() {
+                bail!(
+                    "{}: input {} shape {:?}, expected {:?}",
+                    self.artifact.id,
+                    d.name,
+                    t.shape(),
+                    d.shape
+                );
+            }
+        }
+        // Build Rust-owned device buffers and run through `execute_b`.
+        // (The crate's literal-taking `execute` leaks its inputs: the C
+        // shim `release()`s each transferred buffer and PJRT does not
+        // take ownership of non-donated arguments — ~10 MB leaked per
+        // training step before this was caught; see EXPERIMENTS.md §Perf.)
+        let client = self.exe.client();
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| match t {
+                Tensor::F32 { shape, data } => {
+                    client.buffer_from_host_buffer(data, shape, None)
+                }
+                Tensor::I32 { shape, data } => {
+                    client.buffer_from_host_buffer(data, shape, None)
+                }
+            })
+            .collect::<std::result::Result<_, _>>()?;
+        let result = self.exe.execute_b(&buffers)?;
+        // return_tuple=True at lowering: one buffer holding the out tuple.
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.artifact.n_outputs {
+            bail!(
+                "{}: got {} outputs, expected {}",
+                self.artifact.id,
+                parts.len(),
+                self.artifact.n_outputs
+            );
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// PJRT client + manifest + compiled-program cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Program>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (compiles nothing yet).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts location: `$COWCLIP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("COWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Runtime::new(Path::new(&dir))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling and caching on first use) the program for an
+    /// artifact id.
+    pub fn load(&self, artifact: &Artifact) -> Result<Arc<Program>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(p) = cache.get(&artifact.id) {
+                return Ok(p.clone());
+            }
+        }
+        let path = self.manifest.hlo_path(artifact);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", artifact.id))?;
+        let program = Arc::new(Program { artifact: artifact.clone(), exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(artifact.id.clone(), program.clone());
+        Ok(program)
+    }
+
+    /// Convenience: find + load + run in one call.
+    pub fn execute(
+        &self,
+        kind: &str,
+        model: &str,
+        schema: &str,
+        batch: Option<usize>,
+        clip: Option<&str>,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let artifact = self.manifest.find(kind, model, schema, batch, clip)?.clone();
+        self.load(&artifact)?.run(inputs)
+    }
+
+    /// Number of compiled programs currently cached.
+    pub fn cached_programs(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,64 @@
+//! The 8-slot runtime hypers vector (layout fixed by the manifest).
+
+use crate::scaling::rules::HyperSet;
+use crate::tensor::Tensor;
+
+/// Builder for the `hypers: f32[8]` input of `apply` artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct HypersVec {
+    pub hypers: HyperSet,
+    /// 1-based optimizer step (drives Adam bias correction).
+    pub step: f32,
+    /// Multiplier applied to the dense LR only (warmup).
+    pub dense_lr_factor: f32,
+}
+
+impl HypersVec {
+    pub fn new(hypers: HyperSet) -> HypersVec {
+        HypersVec { hypers, step: 1.0, dense_lr_factor: 1.0 }
+    }
+
+    pub fn at_step(mut self, step: usize) -> HypersVec {
+        self.step = step as f32;
+        self
+    }
+
+    pub fn with_warmup(mut self, factor: f32) -> HypersVec {
+        self.dense_lr_factor = factor;
+        self
+    }
+
+    /// Materialize the `[8]` tensor.
+    pub fn tensor(&self) -> Tensor {
+        let mut v = self.hypers.to_vec(self.step);
+        v[0] *= self.dense_lr_factor;
+        Tensor::f32(vec![8], v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> HyperSet {
+        HyperSet {
+            lr_dense: 2e-3,
+            lr_embed: 1e-3,
+            l2_embed: 1e-4,
+            clip_r: 1.0,
+            clip_zeta: 1e-5,
+            clip_t: 0.5,
+        }
+    }
+
+    #[test]
+    fn layout_and_warmup() {
+        let hv = HypersVec::new(base()).at_step(17).with_warmup(0.25);
+        let t = hv.tensor();
+        let xs = t.as_f32().unwrap();
+        assert_eq!(t.shape(), &[8]);
+        assert!((xs[0] - 5e-4).abs() < 1e-9, "dense lr warmed");
+        assert_eq!(xs[1], 1e-3);
+        assert_eq!(xs[6], 17.0);
+    }
+}

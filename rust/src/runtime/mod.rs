@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`). Compiled
+//! executables are cached per artifact id; the training hot loop calls
+//! [`Runtime::execute`] with host tensors and gets host tensors back.
+//!
+//! HLO **text** is the interchange format — see `python/compile/aot.py`
+//! and /opt/xla-example/README.md for why serialized protos don't work
+//! with xla_extension 0.5.1.
+
+pub mod engine;
+pub mod hypers;
+
+pub use engine::{Program, Runtime};
+pub use hypers::HypersVec;

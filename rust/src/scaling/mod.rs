@@ -1,0 +1,12 @@
+//! Hyperparameter scaling engine: the paper's Scaling Rules 1-4 plus the
+//! baseline variants, the dataset presets of Tables 8/9, and learning-rate
+//! warmup. This is where "scale the batch 128x" turns into concrete
+//! hypers-vector values fed to the AOT `apply` program each step.
+
+pub mod presets;
+pub mod rules;
+pub mod warmup;
+
+pub use presets::{avazu_preset, criteo_preset, DatasetPreset};
+pub use rules::{HyperSet, ScalingRule};
+pub use warmup::Warmup;

@@ -1,0 +1,235 @@
+//! Scaling rules (paper §3): how (learning rate, L2 weight) move when the
+//! batch grows from `b` to `s·b`.
+//!
+//! | rule      | eta_embed | eta_dense | lambda  | paper ref          |
+//! |-----------|-----------|-----------|---------|--------------------|
+//! | NoScale   | 1         | 1         | 1       | baseline           |
+//! | Sqrt      | sqrt(s)   | sqrt(s)   | sqrt(s) | Rule 1 (Krizhevsky)|
+//! | SqrtStar  | sqrt(s)   | sqrt(s)   | 1       | Guo et al. variant |
+//! | Linear    | s         | s         | 1       | Rule 2 (Goyal)     |
+//! | N2Lambda  | 1         | sqrt(s)   | s^2     | Rule 4 (ours)      |
+//! | CowClip   | 1         | sqrt(s)   | s       | Rule 3 (ours)      |
+//!
+//! Fixed clip thresholds scale by sqrt(s) (paper appendix: the sparse-id
+//! regime accumulates gradients like independent draws).
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::bail;
+
+/// Fully resolved hyperparameters for one training configuration —
+/// exactly the runtime `hypers` vector minus the step counter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HyperSet {
+    pub lr_dense: f32,
+    pub lr_embed: f32,
+    pub l2_embed: f32,
+    pub clip_r: f32,
+    pub clip_zeta: f32,
+    pub clip_t: f32,
+}
+
+impl HyperSet {
+    /// Pack into the 8-slot hypers vector (slot 6 = step, slot 7 spare).
+    pub fn to_vec(&self, step: f32) -> [f32; 8] {
+        [
+            self.lr_dense,
+            self.lr_embed,
+            self.l2_embed,
+            self.clip_r,
+            self.clip_zeta,
+            self.clip_t,
+            step,
+            0.0,
+        ]
+    }
+}
+
+/// The scaling strategy under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScalingRule {
+    NoScale,
+    Sqrt,
+    /// Sqrt on LR, lambda left alone (the DeepFM paper's variant).
+    SqrtStar,
+    Linear,
+    /// Rule 4: embedding LR fixed, lambda scaled s^2.
+    N2Lambda,
+    /// Rule 3 (used with the CowClip algorithm): embedding LR fixed,
+    /// lambda scaled s.
+    CowClip,
+}
+
+impl ScalingRule {
+    pub const ALL: [ScalingRule; 6] = [
+        ScalingRule::NoScale,
+        ScalingRule::Sqrt,
+        ScalingRule::SqrtStar,
+        ScalingRule::Linear,
+        ScalingRule::N2Lambda,
+        ScalingRule::CowClip,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScalingRule::NoScale => "none",
+            ScalingRule::Sqrt => "sqrt",
+            ScalingRule::SqrtStar => "sqrt_star",
+            ScalingRule::Linear => "linear",
+            ScalingRule::N2Lambda => "n2_lambda",
+            ScalingRule::CowClip => "cowclip",
+        }
+    }
+
+    /// Paper row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScalingRule::NoScale => "No Scaling",
+            ScalingRule::Sqrt => "Sqrt Scaling",
+            ScalingRule::SqrtStar => "Sqrt Scaling*",
+            ScalingRule::Linear => "LR (Linear) Scaling",
+            ScalingRule::N2Lambda => "n^2-lambda Scaling (Ours)",
+            ScalingRule::CowClip => "CowClip (Ours)",
+        }
+    }
+
+    /// Apply the rule: scale base hypers for a batch `s` times the base.
+    pub fn apply(&self, base: &HyperSet, s: f64) -> HyperSet {
+        let sf = s as f32;
+        let sqrt_s = (s.sqrt()) as f32;
+        let mut h = *base;
+        match self {
+            ScalingRule::NoScale => {}
+            ScalingRule::Sqrt => {
+                h.lr_embed *= sqrt_s;
+                h.lr_dense *= sqrt_s;
+                h.l2_embed *= sqrt_s;
+            }
+            ScalingRule::SqrtStar => {
+                h.lr_embed *= sqrt_s;
+                h.lr_dense *= sqrt_s;
+            }
+            ScalingRule::Linear => {
+                h.lr_embed *= sf;
+                h.lr_dense *= sf;
+            }
+            ScalingRule::N2Lambda => {
+                h.lr_dense *= sqrt_s;
+                h.l2_embed *= sf * sf;
+            }
+            ScalingRule::CowClip => {
+                h.lr_dense *= sqrt_s;
+                h.l2_embed *= sf;
+            }
+        }
+        // fixed clip thresholds follow sqrt scaling (appendix analysis)
+        h.clip_t *= sqrt_s;
+        h
+    }
+}
+
+impl fmt::Display for ScalingRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for ScalingRule {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "none" => ScalingRule::NoScale,
+            "sqrt" => ScalingRule::Sqrt,
+            "sqrt_star" => ScalingRule::SqrtStar,
+            "linear" => ScalingRule::Linear,
+            "n2_lambda" => ScalingRule::N2Lambda,
+            "cowclip" => ScalingRule::CowClip,
+            other => bail!("unknown scaling rule {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> HyperSet {
+        HyperSet {
+            lr_dense: 1e-4,
+            lr_embed: 1e-4,
+            l2_embed: 1e-4,
+            clip_r: 1.0,
+            clip_zeta: 1e-5,
+            clip_t: 1.0,
+        }
+    }
+
+    #[test]
+    fn identity_at_scale_one() {
+        for rule in ScalingRule::ALL {
+            assert_eq!(rule.apply(&base(), 1.0), base(), "{rule}");
+        }
+    }
+
+    #[test]
+    fn linear_rule_matches_table8() {
+        // Table 8, batch 8K = 8x base: LR 8e-4, L2 unchanged.
+        let h = ScalingRule::Linear.apply(&base(), 8.0);
+        assert!((h.lr_embed - 8e-4).abs() < 1e-9);
+        assert!((h.l2_embed - 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sqrt_rule_matches_table8() {
+        // Table 8, batch 2K: LR and L2 = sqrt(2)e-4
+        let h = ScalingRule::Sqrt.apply(&base(), 2.0);
+        let want = (2.0f32).sqrt() * 1e-4;
+        assert!((h.lr_embed - want).abs() < 1e-9);
+        assert!((h.l2_embed - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn n2_lambda_matches_table8_empirical_column() {
+        // Table 8 "Empirical Scaling": 8K -> L2 = 64e-4 ... wait, s^2 = 64
+        // L2 = 64 * 1e-4 = 6.4e-3; the paper's table shows 1.28e-2 at 8K
+        // because it tuned 2x (underlined). We implement the rule itself.
+        let h = ScalingRule::N2Lambda.apply(&base(), 4.0);
+        assert!((h.l2_embed - 16.0e-4).abs() < 1e-8);
+        assert!((h.lr_embed - 1e-4).abs() < 1e-9, "embed LR must not scale");
+        assert!((h.lr_dense - 2e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cowclip_rule_matches_table9() {
+        // Table 9 Criteo rows: L2 = s * 1e-4; embed LR pinned at 1e-4.
+        for (s, want_l2) in [(2.0, 2e-4), (8.0, 8e-4), (16.0, 1.6e-3), (64.0, 6.4e-3)] {
+            let h = ScalingRule::CowClip.apply(&base(), s);
+            assert!((h.l2_embed - want_l2).abs() < 1e-8, "s={s}");
+            assert!((h.lr_embed - 1e-4).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn clip_threshold_sqrt_scales() {
+        let h = ScalingRule::NoScale.apply(&base(), 16.0);
+        assert!((h.clip_t - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hypers_vector_layout() {
+        let v = base().to_vec(42.0);
+        assert_eq!(v[0], 1e-4);
+        assert_eq!(v[2], 1e-4);
+        assert_eq!(v[6], 42.0);
+        assert_eq!(v[7], 0.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for r in ScalingRule::ALL {
+            assert_eq!(r.as_str().parse::<ScalingRule>().unwrap(), r);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Learning-rate warmup (paper: one epoch of linear warmup on the dense
+//! weights only; embedding LR is *not* warmed up — the paper found it
+//! doesn't help there).
+
+/// Linear warmup over `steps` steps, factor in (0, 1].
+#[derive(Clone, Copy, Debug)]
+pub struct Warmup {
+    pub steps: usize,
+}
+
+impl Warmup {
+    pub fn new(steps: usize) -> Warmup {
+        Warmup { steps }
+    }
+
+    /// One epoch's worth of steps.
+    pub fn one_epoch(steps_per_epoch: usize) -> Warmup {
+        Warmup { steps: steps_per_epoch }
+    }
+
+    pub fn none() -> Warmup {
+        Warmup { steps: 0 }
+    }
+
+    /// Multiplier for 1-based step `t`.
+    pub fn factor(&self, t: usize) -> f32 {
+        if self.steps == 0 || t >= self.steps {
+            1.0
+        } else {
+            (t as f32 + 1.0) / self.steps as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramps_linearly_then_flat() {
+        let w = Warmup::new(10);
+        assert!(w.factor(0) > 0.0);
+        assert!(w.factor(4) < w.factor(8));
+        assert_eq!(w.factor(10), 1.0);
+        assert_eq!(w.factor(1000), 1.0);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let w = Warmup::none();
+        assert_eq!(w.factor(0), 1.0);
+        assert_eq!(w.factor(5), 1.0);
+    }
+
+    #[test]
+    fn epoch_constructor() {
+        assert_eq!(Warmup::one_epoch(37).steps, 37);
+    }
+}

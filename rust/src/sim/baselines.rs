@@ -1,0 +1,173 @@
+//! Analytic per-step cost models for the compared training systems.
+//!
+//! Model: `t_step = t_dense(b) + t_embed(b) + t_comm(b, gpus)` with
+//! constants fitted to the paper's published minutes (Tables 6 and 13).
+//! Each baseline differs in how embedding traffic and communication scale:
+//!
+//! * **XDL** — parameter-server style; embedding exchange dominates, poor
+//!   scaling with batch, multi-GPU adds near-linear comm cost.
+//! * **FAE** — hot-embedding-aware layout: ~40% of XDL's embedding
+//!   traffic.
+//! * **DLRM** — model-parallel embedding tables; better batch scaling but
+//!   heavy all-to-all when scaling GPUs.
+//! * **Hotline** — pipelined dispatch of hot/cold ids; lowest constant.
+//!
+//! The paper's key point survives any reasonable constant choice: these
+//! systems buy speed with more GPUs while capping at 4K batch, whereas
+//! CowClip scales the batch on one device.
+
+/// Which published system to model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineSystem {
+    Xdl,
+    Fae,
+    Dlrm,
+    Hotline,
+}
+
+impl BaselineSystem {
+    pub const ALL: [BaselineSystem; 4] = [
+        BaselineSystem::Xdl,
+        BaselineSystem::Fae,
+        BaselineSystem::Dlrm,
+        BaselineSystem::Hotline,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BaselineSystem::Xdl => "XDL",
+            BaselineSystem::Fae => "FAE",
+            BaselineSystem::Dlrm => "DLRM",
+            BaselineSystem::Hotline => "Hotline",
+        }
+    }
+
+    /// (AUC %, logloss) the paper reports for the system on Criteo —
+    /// quoted, not computed; the systems cap at small batch sizes with
+    /// visibly worse accuracy than CowClip.
+    pub fn criteo_quality(&self) -> (f64, f64) {
+        match self {
+            BaselineSystem::Xdl => (80.2, 0.452),
+            BaselineSystem::Fae => (80.2, 0.452),
+            BaselineSystem::Dlrm => (79.8, 0.456),
+            BaselineSystem::Hotline => (79.8, 0.456),
+        }
+    }
+
+    /// Largest batch the system scales to in the paper (beyond which it
+    /// loses accuracy), and the GPUs used per batch size {1K:1, 2K:2, 4K:4}.
+    pub fn max_batch_paper(&self) -> usize {
+        4096 // 4K for all four baselines, per Table 6 footnotes
+    }
+}
+
+/// Fitted cost model producing per-epoch minutes on the paper's testbed.
+#[derive(Clone, Copy, Debug)]
+pub struct SimCostModel {
+    /// Dense compute minutes per epoch at batch 1K on 1 GPU.
+    pub dense_min: f64,
+    /// Embedding/dispatch minutes per epoch at batch 1K on 1 GPU.
+    pub embed_min: f64,
+    /// Communication minutes per epoch per extra GPU.
+    pub comm_min_per_gpu: f64,
+    /// How embedding cost shrinks as batch doubles (0.5 = halves,
+    /// 1.0 = flat). Captures dispatch-bound vs compute-bound behaviour.
+    pub embed_batch_exponent: f64,
+}
+
+impl SimCostModel {
+    /// Constants fitted to Table 6 (Criteo, total training minutes for
+    /// 10 epochs; we model the total directly).
+    pub fn for_system(sys: BaselineSystem) -> SimCostModel {
+        match sys {
+            // totals at (1K,1gpu)=196, (2K,2)=179, (4K,4)=160
+            BaselineSystem::Xdl => SimCostModel {
+                dense_min: 49.0,
+                embed_min: 147.0,
+                comm_min_per_gpu: 22.0,
+                embed_batch_exponent: 0.28,
+            },
+            // (1K)=122, (2K,2)=116, (4K,4)=104
+            BaselineSystem::Fae => SimCostModel {
+                dense_min: 49.0,
+                embed_min: 73.0,
+                comm_min_per_gpu: 12.0,
+                embed_batch_exponent: 0.2,
+            },
+            // (1K)=196, (2K,2)=133, (4K,4)=76
+            BaselineSystem::Dlrm => SimCostModel {
+                dense_min: 49.0,
+                embed_min: 147.0,
+                comm_min_per_gpu: 4.0,
+                embed_batch_exponent: 0.95,
+            },
+            // (1K)=53, (2K,2)=45, (4K,4)=39
+            BaselineSystem::Hotline => SimCostModel {
+                dense_min: 20.0,
+                embed_min: 33.0,
+                comm_min_per_gpu: 5.0,
+                embed_batch_exponent: 0.45,
+            },
+        }
+    }
+
+    /// Predicted total training minutes at `batch` (paper-scale labels,
+    /// e.g. 1024 for "1K") on `gpus` devices.
+    pub fn minutes(&self, batch: usize, gpus: usize) -> f64 {
+        let s = batch as f64 / 1024.0;
+        // dense compute amortizes near-linearly with batch (Fig. 1a)
+        let dense = self.dense_min / s.min(8.0).max(1.0);
+        let embed = self.embed_min / s.powf(self.embed_batch_exponent);
+        let comm = self.comm_min_per_gpu * (gpus.saturating_sub(1)) as f64;
+        dense + embed + comm
+    }
+
+    /// The paper's GPU ladder: batch 1K on 1 GPU, 2K on 2, 4K on 4.
+    pub fn paper_gpus_for_batch(batch: usize) -> usize {
+        (batch / 1024).clamp(1, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitted_constants_land_near_paper_table6() {
+        // (system, batch, gpus, paper minutes, tolerance)
+        let rows = [
+            (BaselineSystem::Xdl, 1024, 1, 196.0, 20.0),
+            (BaselineSystem::Xdl, 2048, 2, 179.0, 25.0),
+            (BaselineSystem::Xdl, 4096, 4, 160.0, 30.0),
+            (BaselineSystem::Fae, 1024, 1, 122.0, 15.0),
+            (BaselineSystem::Fae, 4096, 4, 104.0, 25.0),
+            (BaselineSystem::Dlrm, 1024, 1, 196.0, 20.0),
+            (BaselineSystem::Dlrm, 4096, 4, 76.0, 20.0),
+            (BaselineSystem::Hotline, 1024, 1, 53.0, 8.0),
+            (BaselineSystem::Hotline, 4096, 4, 39.0, 12.0),
+        ];
+        for (sys, batch, gpus, want, tol) in rows {
+            let got = SimCostModel::for_system(sys).minutes(batch, gpus);
+            assert!(
+                (got - want).abs() < tol,
+                "{}: b={batch} gpus={gpus}: {got:.0} vs paper {want}",
+                sys.label()
+            );
+        }
+    }
+
+    #[test]
+    fn who_wins_ordering_preserved() {
+        // Hotline < FAE < XDL at 1K/1GPU (paper ordering)
+        let at_1k = |s: BaselineSystem| SimCostModel::for_system(s).minutes(1024, 1);
+        assert!(at_1k(BaselineSystem::Hotline) < at_1k(BaselineSystem::Fae));
+        assert!(at_1k(BaselineSystem::Fae) < at_1k(BaselineSystem::Xdl));
+    }
+
+    #[test]
+    fn gpu_ladder() {
+        assert_eq!(SimCostModel::paper_gpus_for_batch(1024), 1);
+        assert_eq!(SimCostModel::paper_gpus_for_batch(2048), 2);
+        assert_eq!(SimCostModel::paper_gpus_for_batch(4096), 4);
+    }
+}

@@ -1,0 +1,190 @@
+//! Row-major host tensor (f32 or i32) with shape bookkeeping.
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape, data }
+    }
+
+    /// All-zero f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32 { .. } => Dtype::F32,
+            Tensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Elementwise `self += alpha * other` (f32 only, shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape() != other.shape() {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape(), other.shape());
+        }
+        let dst = self.as_f32_mut()?;
+        let src = other.as_f32()?;
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += alpha * s;
+        }
+        Ok(())
+    }
+
+    /// Elementwise `self *= alpha` (f32 only).
+    pub fn scale(&mut self, alpha: f32) -> Result<()> {
+        for d in self.as_f32_mut()? {
+            *d *= alpha;
+        }
+        Ok(())
+    }
+
+    /// L2 norm (f32 only).
+    pub fn norm(&self) -> Result<f64> {
+        Ok(self
+            .as_f32()?
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt())
+    }
+
+    /// Convert to an [`xla::Literal`] for PJRT execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Rebuild from an [`xla::Literal`] (f32 and i32 element types only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(vec![3], vec![10.0, 20.0, 30.0]);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[6.0, 12.0, 18.0]);
+        a.scale(2.0).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpy_rejects_shape_mismatch() {
+        let mut a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        assert!(a.axpy(1.0, &b).is_err());
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = Tensor::i32(vec![2], vec![1, 2]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn norm() {
+        let t = Tensor::f32(vec![2], vec![3.0, 4.0]);
+        assert!((t.norm().unwrap() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Minimal host-side tensor used across the coordinator.
+//!
+//! The coordinator moves flat f32/i32 buffers between the data pipeline,
+//! the all-reduce tree and the PJRT runtime; it never does heavy math on
+//! them (that is L1/L2's job), so a deliberately small row-major tensor
+//! with shape checking is all we need — no views, no broadcasting.
+
+mod host;
+
+pub use host::{Dtype, Tensor};

@@ -1,0 +1,74 @@
+//! Tiny benchmark harness (offline build: no criterion). Used by the
+//! `benches/` binaries: warmup + timed repetitions + robust summary.
+
+use std::time::Instant;
+
+use super::stats::{mean, percentile};
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        mean(&self.samples_ms)
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.samples_ms, 50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        percentile(&self.samples_ms, 95.0)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>9.3} ms   p50 {:>9.3} ms   p95 {:>9.3} ms   (n={})",
+            self.name,
+            self.mean_ms(),
+            self.p50_ms(),
+            self.p95_ms(),
+            self.samples_ms.len()
+        );
+    }
+}
+
+/// Run `f` `warmup + reps` times, timing the last `reps`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_ms = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    let r = BenchResult { name: name.to_string(), samples_ms };
+    r.print();
+    r
+}
+
+/// Throughput helper: items/second given a per-call item count.
+pub fn throughput(result: &BenchResult, items_per_call: usize) -> f64 {
+    items_per_call as f64 / (result.mean_ms() / 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut calls = 0;
+        let r = bench("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.samples_ms.len(), 5);
+        assert!(r.mean_ms() >= 0.0);
+        assert!(throughput(&r, 100) > 0.0);
+    }
+}

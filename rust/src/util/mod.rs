@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG, math helpers, timing.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::{mean, percentile, stddev};
+pub use timer::Stopwatch;

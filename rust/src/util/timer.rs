@@ -1,0 +1,87 @@
+//! Wall-clock measurement helpers for the perf pass and Table 6.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch with named laps — used by the trainer to break
+/// a step into grad / reduce / apply / host phases.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin a named lap (ends any active lap first).
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// End the active lap, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.laps.push((name, t0.elapsed()));
+        }
+    }
+
+    /// Total time spent in laps with the given name.
+    pub fn total(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// Sum of all laps.
+    pub fn grand_total(&self) -> Duration {
+        self.laps.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// (name, total) per distinct lap name, in first-seen order.
+    pub fn summary(&self) -> Vec<(String, Duration)> {
+        let mut names: Vec<String> = Vec::new();
+        for (n, _) in &self.laps {
+            if !names.contains(n) {
+                names.push(n.clone());
+            }
+        }
+        names
+            .into_iter()
+            .map(|n| {
+                let t = self.total(&n);
+                (n, t)
+            })
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.laps.clear();
+        self.current = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_by_name() {
+        let mut sw = Stopwatch::new();
+        sw.start("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.start("b");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.start("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.total("a") >= Duration::from_millis(4));
+        assert!(sw.total("b") >= Duration::from_millis(2));
+        assert_eq!(sw.summary().len(), 2);
+        assert!(sw.grand_total() >= Duration::from_millis(6));
+    }
+}

@@ -1,0 +1,231 @@
+//! End-to-end parity: AOT HLO programs vs the pure-Rust reference engine.
+//!
+//! These are the strongest correctness tests in the repo: the same
+//! parameters and batches go through (a) the JAX→HLO→PJRT path and
+//! (b) the hand-written Rust twin, and gradients / losses / optimizer
+//! updates must agree to float32 tolerance.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, GradAccumulator};
+use cowclip::data::batcher::Batcher;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::model::init::{init_params, InitConfig};
+use cowclip::reference::{ModelKind, ReferenceEngine, ReferenceModel};
+use cowclip::runtime::{HypersVec, Runtime};
+use cowclip::scaling::rules::HyperSet;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Arc::new(Runtime::new(&dir).expect("open runtime")))
+}
+
+fn reference_for(rt: &Runtime, model: ModelKind, schema: &str, clip: ClipMode) -> ReferenceEngine {
+    let m = rt.manifest();
+    let s = m.schema(schema).unwrap();
+    ReferenceEngine::new(
+        ReferenceModel::new(
+            model,
+            s,
+            m.model_cfg.embed_dim,
+            m.model_cfg.hidden.clone(),
+            m.model_cfg.n_cross,
+        ),
+        clip,
+    )
+}
+
+fn hypers() -> HyperSet {
+    HyperSet {
+        lr_dense: 1e-3,
+        lr_embed: 1e-3,
+        l2_embed: 1e-4,
+        clip_r: 1.0,
+        clip_zeta: 1e-5,
+        clip_t: 0.5,
+    }
+}
+
+fn rel_close(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    let mut worst_i = 0;
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs() / (atol + rtol * y.abs().max(x.abs()));
+        if err > worst {
+            worst = err;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst <= 1.0,
+        "{what}: worst rel err {worst:.2} at {worst_i}: {} vs {}",
+        a[worst_i],
+        b[worst_i]
+    );
+}
+
+#[test]
+fn manifest_schema_matches_rust_presets() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    for name in ["criteo_synth", "avazu_synth"] {
+        let manifest_schema = m.schema(name).unwrap();
+        let rust_schema = cowclip::data::schema::by_name(name).unwrap();
+        assert_eq!(manifest_schema, rust_schema, "schema drift: {name}");
+    }
+}
+
+#[test]
+fn fwd_parity_all_models_criteo() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 1100, seed: 42, ..Default::default() });
+    for kind in [ModelKind::DeepFm, ModelKind::Dcn] {
+        let engine = Engine::hlo(rt.clone(), kind, "criteo_synth", ClipMode::CowClip).unwrap();
+        let reference = reference_for(&rt, kind, "criteo_synth", ClipMode::CowClip);
+        let params = init_params(&engine.spec(), &InitConfig { seed: 5, embed_sigma: 0.01 });
+
+        let mut batcher = Batcher::new(&ds, 1024, 7);
+        let batch = batcher.next_batch();
+        let hlo_logits = engine.fwd(&params, &batch).unwrap();
+        let ref_logits = reference.fwd(&params, &batch).unwrap();
+        rel_close(&hlo_logits, &ref_logits, 2e-4, 2e-5, &format!("{kind} fwd"));
+    }
+}
+
+#[test]
+fn grad_parity_deepfm_and_dcnv2() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 600, seed: 43, ..Default::default() });
+    for kind in [ModelKind::DeepFm, ModelKind::DcnV2] {
+        let engine = Engine::hlo(rt.clone(), kind, "criteo_synth", ClipMode::CowClip).unwrap();
+        let reference = reference_for(&rt, kind, "criteo_synth", ClipMode::CowClip);
+        let params = init_params(&engine.spec(), &InitConfig { seed: 11, embed_sigma: 0.01 });
+
+        let mut batcher = Batcher::new(&ds, 512, 3);
+        let batch = batcher.next_batch();
+        let h = engine.grad(&params, &batch).unwrap();
+        let r = reference.grad(&params, &batch).unwrap();
+
+        assert!((h.loss - r.loss).abs() < 1e-4, "{kind} loss {} vs {}", h.loss, r.loss);
+        rel_close(&h.counts, &r.counts, 0.0, 0.5, &format!("{kind} counts"));
+        for (i, (hg, rg)) in h.grads.iter().zip(&r.grads).enumerate() {
+            rel_close(
+                hg.as_f32().unwrap(),
+                rg.as_f32().unwrap(),
+                5e-3,
+                1e-6,
+                &format!("{kind} grad[{i}] {}", params.spec[i].name),
+            );
+        }
+    }
+}
+
+#[test]
+fn apply_parity_cowclip_and_none() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 600, seed: 44, ..Default::default() });
+    for clip in [ClipMode::CowClip, ClipMode::None] {
+        let engine = Engine::hlo(rt.clone(), ModelKind::DeepFm, "criteo_synth", clip).unwrap();
+        let reference = reference_for(&rt, ModelKind::DeepFm, "criteo_synth", clip);
+
+        let mut params_h = init_params(&engine.spec(), &InitConfig { seed: 21, embed_sigma: 0.01 });
+        let mut m_h = params_h.zeros_like();
+        let mut v_h = params_h.zeros_like();
+        let mut params_r = params_h.clone();
+        let mut m_r = m_h.clone();
+        let mut v_r = v_h.clone();
+
+        let mut batcher = Batcher::new(&ds, 512, 9);
+        let batch = batcher.next_batch();
+        let out = engine.grad(&params_h, &batch).unwrap();
+
+        let hv = HypersVec::new(hypers()).at_step(3).with_warmup(0.5);
+        let mut grads_h = out.grads.clone();
+        engine
+            .apply(&mut params_h, &mut m_h, &mut v_h, &mut grads_h, &out.counts, &hv)
+            .unwrap();
+        let mut grads_r = out.grads.clone();
+        let mut h = hypers();
+        h.lr_dense *= 0.5; // warmup folded the same way
+        reference
+            .apply(&mut params_r, &mut m_r, &mut v_r, &mut grads_r, &out.counts, &h, 3.0)
+            .unwrap();
+
+        for i in 0..params_h.len() {
+            rel_close(
+                params_h.tensors[i].as_f32().unwrap(),
+                params_r.tensors[i].as_f32().unwrap(),
+                5e-4,
+                1e-7,
+                &format!("{clip} params[{i}]"),
+            );
+            rel_close(
+                m_h.tensors[i].as_f32().unwrap(),
+                m_r.tensors[i].as_f32().unwrap(),
+                5e-4,
+                1e-7,
+                &format!("{clip} m[{i}]"),
+            );
+        }
+    }
+}
+
+#[test]
+fn microbatch_accumulation_matches_big_batch_hlo() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 600, seed: 45, ..Default::default() });
+    let engine = Engine::hlo(rt.clone(), ModelKind::WideDeep, "criteo_synth", ClipMode::CowClip).unwrap();
+    let params = init_params(&engine.spec(), &InitConfig { seed: 31, embed_sigma: 0.01 });
+
+    let mut batcher = Batcher::new(&ds, 512, 13);
+    let big = batcher.next_batch();
+    let whole = engine.grad(&params, &big).unwrap();
+
+    let mut acc = GradAccumulator::new(schema.total_vocab());
+    for k in 0..8 {
+        let micro = cowclip::coordinator::worker::slice_batch(&big, k * 64, (k + 1) * 64).unwrap();
+        let out = engine.grad(&params, &micro).unwrap();
+        acc.add(&out, 1.0 / 8.0).unwrap();
+    }
+    let (grads, counts, loss) = acc.finish().unwrap();
+    assert!((loss - whole.loss).abs() < 1e-4);
+    rel_close(&counts, &whole.counts, 0.0, 0.5, "counts");
+    for (i, (a, w)) in grads.iter().zip(&whole.grads).enumerate() {
+        rel_close(a.as_f32().unwrap(), w.as_f32().unwrap(), 1e-3, 1e-6, &format!("grad[{i}]"));
+    }
+}
+
+#[test]
+fn avazu_no_dense_path_runs() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("avazu_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 300, seed: 46, ..Default::default() });
+    let engine = Engine::hlo(rt.clone(), ModelKind::DeepFm, "avazu_synth", ClipMode::CowClip).unwrap();
+    let reference = reference_for(&rt, ModelKind::DeepFm, "avazu_synth", ClipMode::CowClip);
+    let params = init_params(&engine.spec(), &InitConfig { seed: 41, embed_sigma: 0.01 });
+    let mut batcher = Batcher::new(&ds, 64, 1);
+    let batch = batcher.next_batch();
+    let h = engine.grad(&params, &batch).unwrap();
+    let r = reference.grad(&params, &batch).unwrap();
+    assert!((h.loss - r.loss).abs() < 1e-4);
+    rel_close(
+        h.grads[0].as_f32().unwrap(),
+        r.grads[0].as_f32().unwrap(),
+        5e-3,
+        1e-6,
+        "avazu embed grad",
+    );
+}

@@ -1,0 +1,216 @@
+//! Property-based tests (in-tree deterministic random search — the build
+//! environment has no proptest crate; the loops below shrink nothing but
+//! sweep hundreds of randomized cases per property, which catches the
+//! same class of bugs for these invariants).
+
+use cowclip::clip::{clip_embedding_grads, ClipMode, ClipParams};
+use cowclip::coordinator::allreduce::{tree_allreduce, Contribution};
+use cowclip::data::schema::Schema;
+use cowclip::metrics::auc;
+use cowclip::scaling::rules::{HyperSet, ScalingRule};
+use cowclip::tensor::Tensor;
+use cowclip::util::Rng;
+
+fn rand_schema(rng: &mut Rng) -> Schema {
+    let n_fields = 1 + rng.below(5) as usize;
+    let vocab_sizes: Vec<usize> = (0..n_fields).map(|_| 1 + rng.below(12) as usize).collect();
+    Schema { name: "p".into(), n_dense: rng.below(3) as usize, vocab_sizes }
+}
+
+fn norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+/// Invariant: no clipping mode ever *increases* a row norm, and CowClip
+/// respects its per-row bound exactly.
+#[test]
+fn prop_clipping_norm_bounds() {
+    let mut rng = Rng::new(0xC11F);
+    for case in 0..300 {
+        let schema = rand_schema(&mut rng);
+        let v = schema.total_vocab();
+        let d = 1 + rng.below(6) as usize;
+        let mode = ClipMode::ALL[rng.below(6) as usize];
+        let g0: Vec<f32> = (0..v * d)
+            .map(|_| (rng.next_gaussian() * 10.0f64.powi(rng.below(4) as i32 - 2)) as f32)
+            .collect();
+        let w: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+        let counts: Vec<f32> = (0..v).map(|_| rng.below(5) as f32).collect();
+        let p = ClipParams {
+            r: [0.1, 1.0, 10.0][rng.below(3) as usize],
+            zeta: [0.0, 1e-5, 1e-3][rng.below(3) as usize],
+            clip_t: [0.01, 1.0, 100.0][rng.below(3) as usize],
+        };
+        let mut g = g0.clone();
+        clip_embedding_grads(mode, &mut g, &w, &counts, &schema, d, &p);
+
+        for (i, (row, row0)) in g.chunks(d).zip(g0.chunks(d)).enumerate() {
+            let n = norm(row);
+            let n0 = norm(row0);
+            assert!(
+                n <= n0 * (1.0 + 1e-5) + 1e-7,
+                "case {case} {mode}: row {i} grew {n0} -> {n}"
+            );
+            // direction preserved: row is a nonnegative multiple of row0
+            let dot: f32 = row.iter().zip(row0).map(|(a, b)| a * b).sum();
+            assert!(dot >= -1e-6, "case {case} {mode}: row {i} flipped direction");
+            if mode == ClipMode::CowClip {
+                let wnorm = norm(&w[i * d..(i + 1) * d]);
+                let bound = counts[i] * (p.r * wnorm).max(p.zeta);
+                assert!(
+                    n <= bound * (1.0 + 1e-4) + 1e-6,
+                    "case {case}: cowclip bound violated: {n} > {bound}"
+                );
+            }
+        }
+    }
+}
+
+/// Invariant: clipping is idempotent — applying twice equals once.
+#[test]
+fn prop_clipping_idempotent() {
+    let mut rng = Rng::new(0x1DE9);
+    for _ in 0..200 {
+        let schema = rand_schema(&mut rng);
+        let v = schema.total_vocab();
+        let d = 1 + rng.below(4) as usize;
+        let mode = ClipMode::ALL[rng.below(6) as usize];
+        let mut g: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+        let w: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+        let counts: Vec<f32> = (0..v).map(|_| rng.below(4) as f32).collect();
+        let p = ClipParams::default();
+        clip_embedding_grads(mode, &mut g, &w, &counts, &schema, d, &p);
+        let once = g.clone();
+        clip_embedding_grads(mode, &mut g, &w, &counts, &schema, d, &p);
+        for (a, b) in g.iter().zip(&once) {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-6), "not idempotent: {a} vs {b}");
+        }
+    }
+}
+
+/// Invariant: tree all-reduce equals the sequential sum, regardless of
+/// worker count (f32 tolerance).
+#[test]
+fn prop_allreduce_matches_sequential_sum() {
+    let mut rng = Rng::new(0xA11D);
+    for _ in 0..200 {
+        let workers = 1 + rng.below(9) as usize;
+        let len = 1 + rng.below(40) as usize;
+        let vocab = 1 + rng.below(10) as usize;
+        let mut contributions = Vec::new();
+        let mut want = vec![0.0f64; len];
+        let mut want_counts = vec![0.0f64; vocab];
+        for _ in 0..workers {
+            let g: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let c: Vec<f32> = (0..vocab).map(|_| rng.below(3) as f32).collect();
+            for (wv, &x) in want.iter_mut().zip(&g) {
+                *wv += x as f64;
+            }
+            for (wv, &x) in want_counts.iter_mut().zip(&c) {
+                *wv += x as f64;
+            }
+            contributions.push(Contribution {
+                grads: vec![Tensor::f32(vec![len], g)],
+                counts: c,
+                loss_weighted: 0.5 / workers as f32,
+                weight: 1.0 / workers as f32,
+            });
+        }
+        let (total, stats) = tree_allreduce(contributions).unwrap();
+        assert_eq!(stats.workers, workers);
+        assert!(stats.rounds <= (workers as f64).log2().ceil() as usize + 1);
+        for (got, want) in total.grads[0].as_f32().unwrap().iter().zip(&want) {
+            assert!((*got as f64 - want).abs() < 1e-4, "{got} vs {want}");
+        }
+        for (got, want) in total.counts.iter().zip(&want_counts) {
+            assert_eq!(*got as f64, *want);
+        }
+    }
+}
+
+/// Invariant: AUC is invariant under strictly monotone score transforms
+/// and flips to 1-AUC under negation.
+#[test]
+fn prop_auc_rank_invariance() {
+    let mut rng = Rng::new(0xAE0C);
+    for _ in 0..150 {
+        let n = 2 + rng.below(200) as usize;
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let labels: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.3) as u8).collect();
+        let a = auc(&scores, &labels);
+        assert!((0.0..=1.0).contains(&a));
+        // strictly monotone affine transform (tanh would saturate f32
+        // and introduce ties, which legitimately change AUC)
+        let t: Vec<f32> = scores.iter().map(|&s| 2.0 * s + 1.0).collect();
+        assert!((auc(&t, &labels) - a).abs() < 1e-9);
+        // negation
+        let neg: Vec<f32> = scores.iter().map(|&s| -s).collect();
+        let has_both = labels.iter().any(|&y| y == 1) && labels.iter().any(|&y| y == 0);
+        if has_both {
+            assert!((auc(&neg, &labels) - (1.0 - a)).abs() < 1e-9);
+        }
+    }
+}
+
+/// Invariant: every scaling rule is multiplicative in s — applying the
+/// rule at s1*s2 equals applying at s1 then rebasing at s2.
+#[test]
+fn prop_scaling_rules_compose() {
+    let mut rng = Rng::new(0x5CA1);
+    let base = HyperSet {
+        lr_dense: 1e-4,
+        lr_embed: 1e-4,
+        l2_embed: 1e-4,
+        clip_r: 1.0,
+        clip_zeta: 1e-5,
+        clip_t: 1.0,
+    };
+    for _ in 0..100 {
+        let rule = ScalingRule::ALL[rng.below(6) as usize];
+        let s1 = 2f64.powi(rng.below(4) as i32);
+        let s2 = 2f64.powi(rng.below(4) as i32);
+        let direct = rule.apply(&base, s1 * s2);
+        let staged = rule.apply(&rule.apply(&base, s1), s2);
+        for (a, b) in [
+            (direct.lr_dense, staged.lr_dense),
+            (direct.lr_embed, staged.lr_embed),
+            (direct.l2_embed, staged.l2_embed),
+            (direct.clip_t, staged.clip_t),
+        ] {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1e-12), "{rule}: {a} vs {b}");
+        }
+    }
+}
+
+/// Invariant: the dataset binary format roundtrips arbitrary valid data.
+#[test]
+fn prop_dataset_roundtrip() {
+    use cowclip::data::dataset::Dataset;
+    let mut rng = Rng::new(0xD474);
+    let dir = std::env::temp_dir().join(format!("cowclip_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..25 {
+        let schema = rand_schema(&mut rng);
+        let n = rng.below(50) as usize;
+        let offs = schema.offsets();
+        let mut ds = Dataset::with_capacity(schema.clone(), n);
+        for _ in 0..n {
+            for (f, &vs) in schema.vocab_sizes.iter().enumerate() {
+                ds.x_cat.push((offs[f] + rng.below(vs as u64) as usize) as i32);
+            }
+            for _ in 0..schema.n_dense {
+                ds.x_dense.push(rng.next_gaussian() as f32);
+            }
+            ds.y.push(rng.bernoulli(0.5) as u8);
+            ds.ts.push(rng.below(1 << 20) as u32);
+        }
+        let path = dir.join(format!("p{case}.ctr"));
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.x_cat, ds.x_cat);
+        assert_eq!(back.x_dense, ds.x_dense);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.ts, ds.ts);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,145 @@
+//! Trainer-level integration: full runs over the HLO engine, worker
+//! sharding equivalence, reference-engine fallback, checkpoints.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::model::params::ParamSet;
+use cowclip::reference::ModelKind;
+use cowclip::runtime::Runtime;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::new(&dir).expect("open runtime")))
+}
+
+fn config(batch: usize, workers: usize, epochs: f64) -> TrainConfig {
+    let preset = criteo_preset();
+    TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs,
+        workers,
+        warmup_steps: 0,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    }
+}
+
+#[test]
+fn hlo_training_learns_signal() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 12_000, seed: 7, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    let engine = Engine::hlo(rt, ModelKind::DeepFm, "criteo_synth", ClipMode::CowClip).unwrap();
+    let mut trainer = Trainer::new(engine, config(512, 1, 2.0)).unwrap();
+    let report = trainer.train(&train, &test).unwrap();
+
+    assert!(!report.diverged);
+    assert!(report.steps > 20);
+    assert!(
+        report.final_auc > 0.62,
+        "model should beat chance clearly: auc {}",
+        report.final_auc
+    );
+    // training loss should drop from the first few steps to the last few
+    let head: f32 = report.train_loss_curve[..5].iter().sum::<f32>() / 5.0;
+    let n = report.train_loss_curve.len();
+    let tail: f32 = report.train_loss_curve[n - 5..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss should fall: {head} -> {tail}");
+}
+
+#[test]
+fn worker_count_does_not_change_the_math() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 3000, seed: 8, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    let mut finals: Vec<Vec<f32>> = Vec::new();
+    for workers in [1usize, 4] {
+        let engine =
+            Engine::hlo(rt.clone(), ModelKind::WideDeep, "criteo_synth", ClipMode::CowClip)
+                .unwrap();
+        let mut trainer = Trainer::new(engine, config(512, workers, 1.0)).unwrap();
+        let report = trainer.train(&train, &test).unwrap();
+        assert!(!report.diverged);
+        if workers > 1 {
+            assert!(report.reduce_stats.bytes_moved > 0);
+            assert_eq!(report.reduce_stats.workers, workers);
+        }
+        finals.push(trainer.params.tensors[0].as_f32().unwrap().to_vec());
+    }
+    // data-parallel sharding is numerically equivalent (up to f32 assoc):
+    let (a, b) = (&finals[0], &finals[1]);
+    let max_diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "worker sharding changed results by {max_diff}");
+}
+
+#[test]
+fn reference_engine_trains_without_artifacts() {
+    let schema = cowclip::data::schema::criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n: 2000, seed: 9, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+    let engine = Engine::reference(
+        ModelKind::DeepFm,
+        schema,
+        10,
+        vec![32, 32],
+        3,
+        ClipMode::CowClip,
+    );
+    let mut trainer = Trainer::new(engine, config(64, 1, 1.0)).unwrap();
+    let report = trainer.train(&train, &test).unwrap();
+    assert!(!report.diverged);
+    assert!(report.final_auc.is_finite());
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(rt) = runtime() else { return };
+    let engine = Engine::hlo(rt, ModelKind::Dcn, "criteo_synth", ClipMode::CowClip).unwrap();
+    let trainer = Trainer::new(engine, config(64, 1, 1.0)).unwrap();
+    let dir = std::env::temp_dir().join(format!("cowclip_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("dcn.ckpt");
+    trainer.params.save(&path).unwrap();
+    let back = ParamSet::load(&path, &trainer.params.spec).unwrap();
+    assert_eq!(back.tensors, trainer.params.tensors);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn divergence_is_detected_not_hidden() {
+    let Some(rt) = runtime() else { return };
+    let schema = rt.manifest().schema("criteo_synth").unwrap();
+    let ds = generate(&schema, &SynthConfig { n: 2000, seed: 10, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+    let engine = Engine::hlo(rt, ModelKind::DeepFm, "criteo_synth", ClipMode::None).unwrap();
+    let mut cfg = config(64, 1, 1.0);
+    cfg.base_hypers.lr_dense = 1e6; // force a blow-up
+    cfg.base_hypers.lr_embed = 1e6;
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    let report = trainer.train(&train, &test).unwrap();
+    assert!(report.diverged || report.final_auc.is_nan() || report.final_logloss > 2.0);
+}
