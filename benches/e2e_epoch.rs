@@ -1,20 +1,92 @@
-//! End-to-end epoch bench (Table 6's measured side): full training
-//! epochs per batch size, reporting wall time and the speedup series.
+//! End-to-end epoch bench (Table 6's measured side).
+//!
+//! Arm 1 (always runs): the pure-Rust reference engine, sparse
+//! touched-rows embedding path vs the legacy dense O(V·d) path — the
+//! speedup the coordinator refactor buys on the optimizer side.
+//!
+//! Arm 2 (needs `make artifacts` + the `pjrt` feature): full training
+//! epochs through the AOT/PJRT path per batch size, reporting wall time
+//! and the speedup series.
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
 use cowclip::data::split::random_split;
 use cowclip::data::synth::{generate, SynthConfig};
-use cowclip::reference::ModelKind;
+use cowclip::reference::{ModelKind, ReferenceEngine, ReferenceModel};
 use cowclip::runtime::Runtime;
 use cowclip::scaling::presets::{criteo_preset, paper_label};
 use cowclip::scaling::rules::ScalingRule;
 
-fn main() {
+fn reference_cfg(batch: usize) -> TrainConfig {
+    let preset = criteo_preset();
+    TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 1.0,
+        workers: 1,
+        warmup_steps: 0,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    }
+}
+
+fn reference_sparse_vs_dense() {
+    let schema = cowclip::data::schema::criteo_synth();
+    let n = 20_000;
+    let ds = generate(&schema, &SynthConfig { n, seed: 2, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    println!("== e2e_epoch (reference engine): sparse vs dense embedding path ==");
+    println!(
+        "{:>8} {:>10} {:>12} {:>12} {:>9}",
+        "batch", "steps", "dense s", "sparse s", "speedup"
+    );
+    for batch in [512usize, 2048] {
+        let mut times = [0.0f64; 2];
+        for (arm, dense) in [(0usize, true), (1, false)] {
+            let engine = Engine::Reference(
+                ReferenceEngine::new(
+                    ReferenceModel::new(
+                        ModelKind::DeepFm,
+                        schema.clone(),
+                        10,
+                        vec![64, 64],
+                        2,
+                    ),
+                    ClipMode::CowClip,
+                )
+                .with_dense_grads(dense),
+            );
+            let mut trainer = Trainer::new(engine, reference_cfg(batch)).unwrap();
+            let report = trainer.train(&train, &test).unwrap();
+            times[arm] = report.seconds("step");
+            if arm == 1 {
+                println!(
+                    "{:>8} {:>10} {:>12.2} {:>12.2} {:>8.2}x",
+                    batch,
+                    report.steps,
+                    times[0],
+                    times[1],
+                    times[0] / times[1]
+                );
+            }
+        }
+    }
+    println!(
+        "(speedup reflects grad densification + dense accumulate/clip/Adam \
+         vs the touched-rows path; the model forward/backward is shared)\n"
+    );
+}
+
+fn hlo_epochs() {
     let runtime = match Runtime::open_default() {
         Ok(r) => std::sync::Arc::new(r),
         Err(e) => {
-            eprintln!("SKIP e2e_epoch: {e:#}");
+            eprintln!("SKIP hlo arm of e2e_epoch: {e:#}");
             return;
         }
     };
@@ -66,4 +138,9 @@ fn main() {
             report.final_auc * 100.0
         );
     }
+}
+
+fn main() {
+    reference_sparse_vs_dense();
+    hlo_epochs();
 }

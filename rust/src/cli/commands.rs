@@ -58,6 +58,16 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(std::env::var("COWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
 }
 
+/// `hlo` when the PJRT backend is compiled in, else the pure-Rust
+/// reference engine (the `pjrt` cargo feature is off by default).
+fn default_engine() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "hlo"
+    } else {
+        "reference"
+    }
+}
+
 fn open_runtime() -> Result<Arc<Runtime>> {
     let dir = artifacts_dir();
     Ok(Arc::new(Runtime::new(&dir).with_context(|| {
@@ -132,7 +142,7 @@ fn train_cmd(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 100_000)?;
     let workers = args.usize_or("workers", 1)?;
     let seed = args.u64_or("seed", 1234)?;
-    let engine_kind = args.str_or("engine", "hlo");
+    let engine_kind = args.str_or("engine", default_engine());
 
     let schema = crate::data::schema::by_name(&schema_name)
         .with_context(|| format!("unknown schema {schema_name}"))?;
@@ -278,7 +288,7 @@ fn experiment_cmd(args: &Args) -> Result<()> {
     let epochs = args.f64_or("epochs", 2.0)?;
     let seed = args.u64_or("seed", 1234)?;
     let out_dir = PathBuf::from(args.str_or("out", "results"));
-    let runtime = if args.str_or("engine", "hlo") == "hlo" {
+    let runtime = if args.str_or("engine", default_engine()) == "hlo" {
         Some(open_runtime()?)
     } else {
         None

@@ -8,4 +8,6 @@
 
 mod variants;
 
-pub use variants::{clip_embedding_grads, ClipMode, ClipParams, EPS};
+pub use variants::{
+    clip_embedding_grads, clip_embedding_grads_sparse, ClipMode, ClipParams, EPS,
+};

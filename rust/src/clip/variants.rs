@@ -6,6 +6,7 @@ use std::str::FromStr;
 use anyhow::bail;
 
 use crate::data::schema::Schema;
+use crate::tensor::SparseRows;
 
 /// Matches `kernels/ref.py::EPS` (guards the 0/0 norm-ratio case).
 pub const EPS: f32 = 1e-12;
@@ -131,7 +132,7 @@ pub fn clip_embedding_grads(
             rescale(g, n, p.clip_t);
         }
         ClipMode::Field => {
-            for (off, vs) in schema.offsets().into_iter().zip(&schema.vocab_sizes) {
+            for (off, vs) in schema.fields() {
                 let sl = &mut g[off * d..(off + vs) * d];
                 let n = norm(sl);
                 rescale(sl, n, p.clip_t);
@@ -144,7 +145,7 @@ pub fn clip_embedding_grads(
             }
         }
         ClipMode::AdaField => {
-            for (off, vs) in schema.offsets().into_iter().zip(&schema.vocab_sizes) {
+            for (off, vs) in schema.fields() {
                 let lo = off * d;
                 let hi = (off + vs) * d;
                 let cnt_f: f32 = counts[off..off + vs].iter().sum();
@@ -161,6 +162,98 @@ pub fn clip_embedding_grads(
                 let thresh = counts[i] * (p.r * wnorm).max(p.zeta);
                 let n = norm(row);
                 rescale(row, n, thresh);
+            }
+        }
+    }
+}
+
+/// Sparse twin of [`clip_embedding_grads`]: clips only the touched rows
+/// of the gradient, in O(touched · d) for every mode except `AdaField`
+/// (whose adaptive threshold needs the *full* per-field `||w_f||`, an
+/// O(V · d) read kept for exactness with the dense twin — it is an
+/// ablation mode, not the CowClip hot path).
+///
+/// Exactness vs the dense twin holds because untouched rows carry a zero
+/// gradient: per-row modes (None/Column/CowClip) are no-ops on them, and
+/// the aggregate modes (Global/Field/AdaField) see identical norms and
+/// counts whether or not zero rows participate.
+///
+/// * `g` — sparse gradient rows over the `[V, d]` table
+/// * `w` — current dense table values (`V * d`)
+/// * `counts` — per-*stored-row* occurrence counts, aligned with `g.ids()`
+pub fn clip_embedding_grads_sparse(
+    mode: ClipMode,
+    g: &mut SparseRows,
+    w: &[f32],
+    counts: &[f32],
+    schema: &Schema,
+    p: &ClipParams,
+) {
+    let d = g.d();
+    debug_assert_eq!(g.n_rows(), schema.total_vocab());
+    debug_assert_eq!(w.len(), schema.total_vocab() * d);
+    debug_assert_eq!(counts.len(), g.nnz());
+
+    match mode {
+        ClipMode::None => {}
+        ClipMode::Global => {
+            let vals = g.vals_mut();
+            let n = norm(vals);
+            rescale(vals, n, p.clip_t);
+        }
+        ClipMode::Column => {
+            for row in g.vals_mut().chunks_mut(d) {
+                let n = norm(row);
+                rescale(row, n, p.clip_t);
+            }
+        }
+        ClipMode::CowClip => {
+            let (ids, vals) = g.ids_vals_mut();
+            for (k, &id) in ids.iter().enumerate() {
+                let row = &mut vals[k * d..(k + 1) * d];
+                let wnorm = norm(&w[id as usize * d..(id as usize + 1) * d]);
+                let thresh = counts[k] * (p.r * wnorm).max(p.zeta);
+                let n = norm(row);
+                rescale(row, n, thresh);
+            }
+        }
+        ClipMode::Field => {
+            let (ids, vals) = g.ids_vals_mut();
+            let mut k = 0usize;
+            for (off, vs) in schema.fields() {
+                let hi_id = (off + vs) as u32;
+                let k0 = k;
+                while k < ids.len() && ids[k] < hi_id {
+                    k += 1;
+                }
+                if k == k0 {
+                    continue;
+                }
+                let sl = &mut vals[k0 * d..k * d];
+                let n = norm(sl);
+                rescale(sl, n, p.clip_t);
+            }
+        }
+        ClipMode::AdaField => {
+            let (ids, vals) = g.ids_vals_mut();
+            let mut k = 0usize;
+            for (off, vs) in schema.fields() {
+                let hi_id = (off + vs) as u32;
+                let k0 = k;
+                while k < ids.len() && ids[k] < hi_id {
+                    k += 1;
+                }
+                if k == k0 {
+                    continue;
+                }
+                // untouched ids have zero counts, so the stored-row sum
+                // equals the dense field sum
+                let cnt_f: f32 = counts[k0..k].iter().sum();
+                let wnorm = norm(&w[off * d..(off + vs) * d]);
+                let thresh = cnt_f * (p.r * wnorm).max(p.zeta);
+                let sl = &mut vals[k0 * d..k * d];
+                let n = norm(sl);
+                rescale(sl, n, thresh);
             }
         }
     }
@@ -255,6 +348,31 @@ mod tests {
         assert!((g[0] - 1.8).abs() < 1e-5 && (g[1] - 2.4).abs() < 1e-5);
         // field1: cnt=2, ||w||=5 -> thresh 10; ||g||=13 -> scale 10/13
         assert!((norm(&g[3..5]) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sparse_twin_matches_dense_on_touched_support() {
+        // rows 1 and 3 touched; the dense gradient is zero elsewhere
+        let schema = tiny_schema();
+        let d = 3;
+        let v = schema.total_vocab();
+        let ids = vec![1u32, 3];
+        let sparse_vals = vec![3.0, -4.0, 0.0, 1.0, 2.0, 2.0];
+        let sparse_counts = vec![2.0, 5.0];
+        let w: Vec<f32> = (0..v * d).map(|i| 0.05 * (i as f32 - 4.0)).collect();
+        let mut dense_counts = vec![0.0f32; v];
+        dense_counts[1] = 2.0;
+        dense_counts[3] = 5.0;
+        for mode in ClipMode::ALL {
+            let p = ClipParams { r: 1.0, zeta: 1e-3, clip_t: 0.8 };
+            let mut sg = SparseRows::new(v, d, ids.clone(), sparse_vals.clone());
+            let mut dg = sg.to_dense();
+            clip_embedding_grads(mode, &mut dg, &w, &dense_counts, &schema, d, &p);
+            clip_embedding_grads_sparse(mode, &mut sg, &w, &sparse_counts, &schema, &p);
+            for (a, b) in sg.to_dense().iter().zip(&dg) {
+                assert!((a - b).abs() <= 1e-6, "{mode}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

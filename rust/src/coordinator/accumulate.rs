@@ -8,16 +8,21 @@
 //! invariant `python/tests/test_train_step.py::
 //! test_microbatch_accumulation_equals_big_batch` pins down on the JAX
 //! side and `rust/tests` re-checks end to end.
+//!
+//! Accumulation is **sparse-aware**: row-indexed gradients and counts
+//! merge as sorted-id unions (cost O(touched · d) per add), never
+//! densifying over `total_vocab()` — the batch's union of touched ids
+//! stays tiny relative to V on CTR data.
 
 use anyhow::{ensure, Result};
 
 use crate::reference::GradOutput;
-use crate::tensor::Tensor;
+use crate::tensor::{GradTensor, SparseRows};
 
 /// Weighted accumulator for microbatch gradient outputs.
 pub struct GradAccumulator {
-    grads: Option<Vec<Tensor>>,
-    counts: Vec<f32>,
+    grads: Option<Vec<GradTensor>>,
+    counts: SparseRows,
     loss_weighted: f64,
     weight: f64,
 }
@@ -26,7 +31,7 @@ impl GradAccumulator {
     pub fn new(vocab: usize) -> GradAccumulator {
         GradAccumulator {
             grads: None,
-            counts: vec![0.0; vocab],
+            counts: SparseRows::empty(vocab, 1),
             loss_weighted: 0.0,
             weight: 0.0,
         }
@@ -35,7 +40,7 @@ impl GradAccumulator {
     /// Add one microbatch's output with the given weight (its share of
     /// the effective batch, e.g. `b/B`).
     pub fn add(&mut self, out: &GradOutput, weight: f64) -> Result<()> {
-        ensure!(out.counts.len() == self.counts.len(), "vocab mismatch");
+        ensure!(out.counts.n_rows() == self.counts.n_rows(), "vocab mismatch");
         match &mut self.grads {
             None => {
                 let mut scaled = out.grads.clone();
@@ -51,9 +56,8 @@ impl GradAccumulator {
                 }
             }
         }
-        for (c, &x) in self.counts.iter_mut().zip(&out.counts) {
-            *c += x;
-        }
+        // counts add unweighted: Alg. 1 wants the full-batch cnt(id)
+        self.counts.axpy(1.0, &out.counts)?;
         self.loss_weighted += out.loss as f64 * weight;
         self.weight += weight;
         Ok(())
@@ -66,12 +70,12 @@ impl GradAccumulator {
 
     /// Decompose into raw parts: (grads, counts, weighted loss, weight).
     /// Used by workers whose partial weight is deliberately < 1.
-    pub fn into_parts(self) -> (Option<Vec<Tensor>>, Vec<f32>, f32, f64) {
+    pub fn into_parts(self) -> (Option<Vec<GradTensor>>, SparseRows, f32, f64) {
         (self.grads, self.counts, self.loss_weighted as f32, self.weight)
     }
 
     /// Finish: returns (grads, counts, weighted mean loss).
-    pub fn finish(self) -> Result<(Vec<Tensor>, Vec<f32>, f32)> {
+    pub fn finish(self) -> Result<(Vec<GradTensor>, SparseRows, f32)> {
         ensure!(self.grads.is_some(), "no microbatches accumulated");
         ensure!(
             (self.weight - 1.0).abs() < 1e-4,
@@ -89,11 +93,25 @@ impl GradAccumulator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
 
     fn out(val: f32, count: f32, loss: f32) -> GradOutput {
         GradOutput {
-            grads: vec![Tensor::f32(vec![2], vec![val, -val])],
-            counts: vec![count, 0.0],
+            grads: vec![GradTensor::Dense(Tensor::f32(vec![2], vec![val, -val]))],
+            counts: SparseRows::new(2, 1, vec![0], vec![count]),
+            loss,
+        }
+    }
+
+    fn sparse_out(id: u32, val: f32, count: f32, loss: f32) -> GradOutput {
+        GradOutput {
+            grads: vec![GradTensor::Sparse(SparseRows::new(
+                4,
+                2,
+                vec![id],
+                vec![val, -val],
+            ))],
+            counts: SparseRows::new(4, 1, vec![id], vec![count]),
             loss,
         }
     }
@@ -104,9 +122,37 @@ mod tests {
         acc.add(&out(1.0, 3.0, 0.5), 0.5).unwrap();
         acc.add(&out(3.0, 1.0, 0.7), 0.5).unwrap();
         let (grads, counts, loss) = acc.finish().unwrap();
-        assert_eq!(grads[0].as_f32().unwrap(), &[2.0, -2.0]);
-        assert_eq!(counts, vec![4.0, 0.0]);
+        assert_eq!(grads[0].to_tensor().as_f32().unwrap(), &[2.0, -2.0]);
+        assert_eq!(counts.to_dense(), vec![4.0, 0.0]);
         assert!((loss - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparse_microbatches_merge_without_densifying() {
+        let mut acc = GradAccumulator::new(4);
+        acc.add(&sparse_out(1, 2.0, 1.0, 0.4), 0.5).unwrap();
+        acc.add(&sparse_out(3, 4.0, 2.0, 0.6), 0.5).unwrap();
+        let (grads, counts, loss) = acc.finish().unwrap();
+        match &grads[0] {
+            GradTensor::Sparse(s) => {
+                assert_eq!(s.ids(), &[1, 3]);
+                assert_eq!(s.vals(), &[1.0, -1.0, 2.0, -2.0]);
+            }
+            GradTensor::Dense(_) => panic!("accumulation densified a sparse grad"),
+        }
+        assert_eq!(counts.ids(), &[1, 3]);
+        assert_eq!(counts.vals(), &[1.0, 2.0]);
+        assert!((loss - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overlapping_sparse_ids_sum() {
+        let mut acc = GradAccumulator::new(4);
+        acc.add(&sparse_out(2, 2.0, 1.0, 0.0), 0.5).unwrap();
+        acc.add(&sparse_out(2, 6.0, 3.0, 0.0), 0.5).unwrap();
+        let (grads, counts, _) = acc.finish().unwrap();
+        assert_eq!(grads[0].to_tensor().as_f32().unwrap()[4..6], [4.0, -4.0]);
+        assert_eq!(counts.value_at(2), 4.0);
     }
 
     #[test]

@@ -6,16 +6,22 @@
 //! (grads, counts, loss), and a `ceil(log2 W)`-round binary tree reduces
 //! them to the full-batch gradient, with per-round traffic accounting so
 //! Table 6's communication discussion can be quantified on this testbed.
+//!
+//! Contributions are **sparse-aware**: row-indexed gradients and counts
+//! merge as sorted-id unions, and `bytes_moved` counts the actual sparse
+//! payload (ids + values) — which is exactly the saving Zhao et al.'s
+//! TeraByte-scale framework gets from exchanging touched rows instead of
+//! whole tables.
 
 use anyhow::{ensure, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{GradTensor, SparseRows};
 
 /// One worker's weighted contribution.
 #[derive(Clone, Debug)]
 pub struct Contribution {
-    pub grads: Vec<Tensor>,
-    pub counts: Vec<f32>,
+    pub grads: Vec<GradTensor>,
+    pub counts: SparseRows,
     /// Weighted loss (weight already folded in).
     pub loss_weighted: f32,
     pub weight: f32,
@@ -35,12 +41,10 @@ fn merge(dst: &mut Contribution, src: &Contribution) -> Result<u64> {
     let mut bytes = 0u64;
     for (a, b) in dst.grads.iter_mut().zip(&src.grads) {
         a.axpy(1.0, b)?;
-        bytes += (b.len() * 4) as u64;
+        bytes += b.payload_bytes();
     }
-    for (c, &x) in dst.counts.iter_mut().zip(&src.counts) {
-        *c += x;
-    }
-    bytes += (src.counts.len() * 4) as u64;
+    dst.counts.axpy(1.0, &src.counts)?;
+    bytes += src.counts.payload_bytes();
     dst.loss_weighted += src.loss_weighted;
     dst.weight += src.weight;
     Ok(bytes)
@@ -75,11 +79,21 @@ pub fn tree_allreduce(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
 
     fn contrib(v: f32, w: f32) -> Contribution {
         Contribution {
-            grads: vec![Tensor::f32(vec![3], vec![v, v, v])],
-            counts: vec![1.0, 2.0],
+            grads: vec![GradTensor::Dense(Tensor::f32(vec![3], vec![v, v, v]))],
+            counts: SparseRows::new(2, 1, vec![0, 1], vec![1.0, 2.0]),
+            loss_weighted: 0.1 * w,
+            weight: w,
+        }
+    }
+
+    fn sparse_contrib(id: u32, v: f32, w: f32) -> Contribution {
+        Contribution {
+            grads: vec![GradTensor::Sparse(SparseRows::new(100, 2, vec![id], vec![v, v]))],
+            counts: SparseRows::new(100, 1, vec![id], vec![1.0]),
             loss_weighted: 0.1 * w,
             weight: w,
         }
@@ -89,20 +103,41 @@ mod tests {
     fn reduces_to_weighted_sum() {
         let cs = vec![contrib(0.25, 0.25); 4];
         let (total, stats) = tree_allreduce(cs).unwrap();
-        assert_eq!(total.grads[0].as_f32().unwrap(), &[1.0, 1.0, 1.0]);
-        assert_eq!(total.counts, vec![4.0, 8.0]);
+        assert_eq!(total.grads[0].to_tensor().as_f32().unwrap(), &[1.0, 1.0, 1.0]);
+        assert_eq!(total.counts.to_dense(), vec![4.0, 8.0]);
         assert!((total.weight - 1.0).abs() < 1e-6);
         assert_eq!(stats.rounds, 2);
         assert_eq!(stats.workers, 4);
-        // 4 workers: 2 merges + 1 merge, each (3+2)*4 bytes
-        assert_eq!(stats.bytes_moved, 3 * 5 * 4);
+        // 4 workers: 3 merges, each 3*4 grad bytes + (2+2)*4 count bytes
+        assert_eq!(stats.bytes_moved, 3 * (3 * 4 + 4 * 4));
+    }
+
+    #[test]
+    fn sparse_contributions_stay_sparse_and_cheap() {
+        let cs = vec![
+            sparse_contrib(3, 0.5, 0.5),
+            sparse_contrib(90, 0.5, 0.5),
+        ];
+        let (total, stats) = tree_allreduce(cs).unwrap();
+        match &total.grads[0] {
+            GradTensor::Sparse(s) => {
+                assert_eq!(s.ids(), &[3, 90]);
+                assert_eq!(s.n_rows(), 100);
+            }
+            GradTensor::Dense(_) => panic!("all-reduce densified a sparse grad"),
+        }
+        assert_eq!(total.counts.ids(), &[3, 90]);
+        // one merge: 1 grad row (1 id + 2 vals)*4 + counts (1 id + 1 val)*4
+        assert_eq!(stats.bytes_moved, (1 + 2) * 4 + (1 + 1) * 4);
+        // far below the dense payload of 100*2*4 + 100*4 bytes
+        assert!(stats.bytes_moved < 1200);
     }
 
     #[test]
     fn odd_worker_count() {
         let cs = vec![contrib(1.0 / 3.0, 1.0 / 3.0); 3];
         let (total, stats) = tree_allreduce(cs).unwrap();
-        assert!((total.grads[0].as_f32().unwrap()[0] - 1.0).abs() < 1e-6);
+        assert!((total.grads[0].to_tensor().as_f32().unwrap()[0] - 1.0).abs() < 1e-6);
         assert_eq!(stats.rounds, 2);
     }
 
@@ -111,7 +146,7 @@ mod tests {
         let (total, stats) = tree_allreduce(vec![contrib(1.0, 1.0)]).unwrap();
         assert_eq!(stats.bytes_moved, 0);
         assert_eq!(stats.rounds, 0);
-        assert_eq!(total.counts, vec![1.0, 2.0]);
+        assert_eq!(total.counts.to_dense(), vec![1.0, 2.0]);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::model::params::ParamSet;
 use crate::reference::step::build_spec;
 use crate::reference::{GradOutput, ModelKind, ReferenceEngine, ReferenceModel};
 use crate::runtime::{HypersVec, Program, Runtime};
-use crate::tensor::Tensor;
+use crate::tensor::{GradTensor, SparseRows, Tensor};
 
 /// A training engine: grad / apply / fwd over positional parameters.
 pub enum Engine {
@@ -86,18 +86,23 @@ impl Engine {
         }
     }
 
-    /// Optimizer update in place.
+    /// Optimizer update in place. The reference engine consumes sparse
+    /// gradients directly; the HLO apply program is dense, so sparse
+    /// payloads are materialized at this boundary only.
     pub fn apply(
-        &self,
+        &mut self,
         params: &mut ParamSet,
         m: &mut ParamSet,
         v: &mut ParamSet,
-        grads: &mut [Tensor],
-        counts: &[f32],
+        grads: &mut [GradTensor],
+        counts: &SparseRows,
         hv: &HypersVec,
     ) -> Result<()> {
         match self {
-            Engine::Hlo(e) => e.apply(params, m, v, grads, counts, hv),
+            Engine::Hlo(e) => {
+                let dense_counts = counts.to_dense();
+                e.apply(params, m, v, grads, &dense_counts, hv)
+            }
             Engine::Reference(e) => {
                 let mut h = hv.hypers;
                 h.lr_dense *= hv.dense_lr_factor;
@@ -224,9 +229,13 @@ impl HloEngine {
         let loss_t = out.pop().unwrap();
         let counts_t = out.pop().unwrap();
         let loss = loss_t.as_f32()?[0];
-        let counts = counts_t.as_f32()?.to_vec();
+        // the artifact emits dense counts; sparsify so the coordinator's
+        // accumulate/all-reduce path stays O(touched) past this boundary
+        let dense_counts = counts_t.as_f32()?;
+        let counts = SparseRows::from_dense(dense_counts, dense_counts.len(), 1);
         debug_assert_eq!(out.len(), n);
-        Ok(GradOutput { grads: out, counts, loss })
+        let grads = out.into_iter().map(GradTensor::Dense).collect();
+        Ok(GradOutput { grads, counts, loss })
     }
 
     fn apply(
@@ -234,18 +243,33 @@ impl HloEngine {
         params: &mut ParamSet,
         m: &mut ParamSet,
         v: &mut ParamSet,
-        grads: &mut [Tensor],
+        grads: &[GradTensor],
         counts: &[f32],
         hv: &HypersVec,
     ) -> Result<()> {
         let n = params.len();
         let counts_t = Tensor::f32(vec![counts.len()], counts.to_vec());
         let hypers_t = hv.tensor();
+        // the apply artifact wants dense inputs: borrow dense gradients
+        // in place, materialize only the genuinely sparse ones
+        let materialized: Vec<Option<Tensor>> = grads
+            .iter()
+            .map(|g| match g {
+                GradTensor::Dense(_) => None,
+                GradTensor::Sparse(s) => Some(s.to_tensor()),
+            })
+            .collect();
         let mut inputs: Vec<&Tensor> = Vec::with_capacity(4 * n + 2);
         inputs.extend(params.tensors.iter());
         inputs.extend(m.tensors.iter());
         inputs.extend(v.tensors.iter());
-        inputs.extend(grads.iter().map(|g| &*g));
+        for (g, mat) in grads.iter().zip(&materialized) {
+            match (g, mat) {
+                (GradTensor::Dense(t), _) => inputs.push(t),
+                (GradTensor::Sparse(_), Some(t)) => inputs.push(t),
+                (GradTensor::Sparse(_), None) => unreachable!("materialized above"),
+            }
+        }
         inputs.push(&counts_t);
         inputs.push(&hypers_t);
         let mut out = self.apply_program.run(&inputs)?;

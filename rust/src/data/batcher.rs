@@ -5,6 +5,8 @@
 //! a deterministic stream. Eval batches pad the tail by repeating the last
 //! row and report the valid count so metrics ignore padding.
 
+use anyhow::Result;
+
 use super::dataset::Dataset;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -25,6 +27,26 @@ pub struct Batch {
 impl Batch {
     pub fn batch_size(&self) -> usize {
         self.x_cat.shape()[0]
+    }
+
+    /// Sorted unique global ids present in this batch plus per-id
+    /// occurrence counts — the support set of the sparse embedding
+    /// gradient and Alg. 1's full-batch `cnt(id)` in one pass.
+    pub fn touched(&self) -> Result<(Vec<u32>, Vec<f32>)> {
+        let mut sorted: Vec<u32> =
+            self.x_cat.as_i32()?.iter().map(|&id| id as u32).collect();
+        sorted.sort_unstable();
+        let mut ids: Vec<u32> = Vec::new();
+        let mut counts: Vec<f32> = Vec::new();
+        for id in sorted {
+            if ids.last() == Some(&id) {
+                *counts.last_mut().unwrap() += 1.0;
+            } else {
+                ids.push(id);
+                counts.push(1.0);
+            }
+        }
+        Ok((ids, counts))
     }
 }
 
@@ -190,6 +212,20 @@ mod tests {
         let cats = b1.x_cat.as_i32().unwrap();
         assert_eq!(&cats[4..6], &cats[6..8]);
         assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn touched_ids_sorted_unique_with_counts() {
+        let batch = Batch {
+            x_cat: Tensor::i32(vec![3, 2], vec![4, 0, 4, 2, 0, 4]),
+            x_dense: Tensor::f32(vec![3, 0], vec![]),
+            y: Tensor::f32(vec![3], vec![0.0; 3]),
+            valid: 3,
+        };
+        let (ids, counts) = batch.touched().unwrap();
+        assert_eq!(ids, vec![0, 2, 4]);
+        assert_eq!(counts, vec![2.0, 1.0, 3.0]);
+        assert_eq!(counts.iter().sum::<f32>(), 6.0);
     }
 
     #[test]

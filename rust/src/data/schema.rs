@@ -22,6 +22,17 @@ impl Schema {
         self.vocab_sizes.iter().sum()
     }
 
+    /// Iterate `(global_offset, vocab_size)` per categorical field
+    /// without allocating — the clip hot loops use this instead of
+    /// materializing [`Schema::offsets`] every step.
+    pub fn fields(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.vocab_sizes.iter().scan(0usize, |acc, &v| {
+            let off = *acc;
+            *acc += v;
+            Some((off, v))
+        })
+    }
+
     /// Global id offset of each categorical field.
     pub fn offsets(&self) -> Vec<usize> {
         let mut offs = Vec::with_capacity(self.vocab_sizes.len());
@@ -83,6 +94,19 @@ pub fn by_name(name: &str) -> Option<Schema> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fields_iterator_matches_offsets() {
+        for schema in [criteo_synth(), avazu_synth()] {
+            let offs = schema.offsets();
+            let pairs: Vec<(usize, usize)> = schema.fields().collect();
+            assert_eq!(pairs.len(), schema.n_cat());
+            for (f, &(off, vs)) in pairs.iter().enumerate() {
+                assert_eq!(off, offs[f]);
+                assert_eq!(vs, schema.vocab_sizes[f]);
+            }
+        }
+    }
 
     #[test]
     fn offsets_partition_vocab() {

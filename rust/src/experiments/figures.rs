@@ -185,14 +185,18 @@ pub fn fig5(ctx: &ExpContext) -> Result<Report> {
     let batch = snap_batcher.next_batch();
     let out = trainer.engine.grad(&trainer.params, &batch)?;
     let d = trainer.params.spec[0].shape[1];
-    let g = out.grads[0].as_f32()?;
+    // densify for this diagnostic (the embed grad is sparse on the
+    // reference path, dense on the HLO path)
+    let g_t = out.grads[0].to_tensor();
+    let g = g_t.as_f32()?;
+    let counts = out.counts.to_dense();
     let mut norms: Vec<f64> = Vec::new();
     for (i, row) in g.chunks(d).enumerate() {
-        if out.counts[i] > 0.0 {
+        if counts[i] > 0.0 {
             norms.push(row.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt());
         }
     }
-    norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    norms.sort_by(f64::total_cmp);
     let mut table = Table::new(&["norm bucket", "#columns", "bar"]);
     let buckets = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0];
     let mut lo = 0.0f64;

@@ -15,8 +15,38 @@
 //!   metrics stack, and the experiment harness that regenerates every table
 //!   and figure of the paper. Python never runs on the training path.
 //!
+//! ## The sparse gradient path
+//!
+//! Id frequencies in CTR data are wildly skewed, so a batch touches only
+//! a small fraction of the `[V, d]` embedding table. The coordinator's
+//! hot loop exploits that end to end: [`data::Batch::touched`] emits the
+//! sorted unique-id list per (micro)batch, the reference backward pass
+//! scatters into packed [`tensor::SparseRows`], accumulation and the
+//! tree all-reduce merge `(row_ids, grads, counts)` triples as sorted-id
+//! unions, all six clipping modes have sparse implementations
+//! ([`clip::clip_embedding_grads_sparse`]), and [`optim::LazyAdam`]
+//! applies closed-form bias-corrected moment decay on first touch — so
+//! per-step embedding cost is O(touched · d), not O(V · d). Dense
+//! `tensor::GradTensor` payloads (the HLO path) flow through the same
+//! coordinator types and densify only at the apply-program boundary.
+//!
+//! ## Features
+//!
+//! The `pjrt` cargo feature (off by default) compiles the real
+//! XLA/PJRT runtime backend; the default build substitutes a pure-Rust
+//! stub so `cargo build --release && cargo test -q` needs no artifacts
+//! and no XLA toolchain. See `runtime` for details.
+//!
+//! ## Benches
+//!
+//! `cargo bench` runs the plain-binary benches under `benches/`:
+//! `clip_throughput` (dense vs sparse clipping arms + speedup),
+//! `e2e_epoch` (sparse vs dense reference trainer, plus the HLO ladder
+//! when artifacts exist), `fig1_step_time`, `data_pipeline`,
+//! `metrics_auc`.
+//!
 //! Entry points: the `cowclip` binary (see `cli`), the five `examples/`,
-//! and the criterion benches. Start with [`runtime::Engine`] +
+//! and the benches above. Start with [`runtime::Runtime`] +
 //! [`coordinator::Trainer`] if you are embedding the library.
 
 pub mod cli;

@@ -16,7 +16,9 @@ pub fn auc(scores: &[f32], labels: &[u8]) -> f64 {
     }
 
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_unstable_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // total_cmp: NaN scores (e.g. from a diverged large-batch run) sort
+    // deterministically instead of panicking mid-eval
+    idx.sort_unstable_by(|&a, &b| scores[a].total_cmp(&scores[b]));
 
     // average ranks over tie groups
     let mut rank_sum_pos = 0.0f64;
@@ -82,6 +84,19 @@ mod tests {
     fn degenerate_single_class() {
         assert_eq!(auc(&[0.1, 0.9], &[1, 1]), 0.5);
         assert_eq!(auc(&[0.1, 0.9], &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic() {
+        // regression: a single NaN logit from a diverged run used to
+        // panic in partial_cmp().unwrap() mid-eval
+        let scores = [0.2f32, f32::NAN, 0.8, 0.5, f32::NAN];
+        let labels = [0u8, 1, 1, 0, 0];
+        let a = auc(&scores, &labels);
+        assert!((0.0..=1.0).contains(&a), "auc {a}");
+        // all-NaN input is also survivable
+        let a = auc(&[f32::NAN, f32::NAN], &[0, 1]);
+        assert!((0.0..=1.0).contains(&a));
     }
 
     #[test]

@@ -5,4 +5,4 @@
 
 pub mod adam;
 
-pub use adam::{Adam, AdamConfig};
+pub use adam::{Adam, AdamConfig, LazyAdam};

@@ -27,6 +27,24 @@ pub fn embed_bwd(g: &[f32], ids: &[i32], v: usize, d: usize) -> Vec<f32> {
     dtable
 }
 
+/// Sparse twin of [`embed_bwd`]: scatter-add `g[b, F, d]` into the
+/// packed rows of the sorted unique `touched` id list (which must
+/// contain every id in `ids`). Output is `touched.len() * d` values —
+/// O(b·F·(log T + d)) instead of O(V·d).
+pub fn embed_bwd_sparse(g: &[f32], ids: &[i32], touched: &[u32], d: usize) -> Vec<f32> {
+    let mut vals = vec![0.0f32; touched.len() * d];
+    for (slot, &id) in ids.iter().enumerate() {
+        let k = touched
+            .binary_search(&(id as u32))
+            .expect("batch id missing from touched list");
+        let dst = &mut vals[k * d..(k + 1) * d];
+        for (t, &gv) in dst.iter_mut().zip(&g[slot * d..(slot + 1) * d]) {
+            *t += gv;
+        }
+    }
+    vals
+}
+
 /// Wide (first-order) logit: `out[b] = bias + sum_f wide[ids[b,f]]`.
 pub fn wide_fwd(wide: &[f32], bias: f32, ids: &[i32], b: usize, f: usize) -> Vec<f32> {
     (0..b)
@@ -47,6 +65,27 @@ pub fn wide_bwd(dout: &[f32], ids: &[i32], v: usize, b: usize, f: usize) -> (Vec
         dbias += dout[i];
         for &id in &ids[i * f..(i + 1) * f] {
             dwide[id as usize] += dout[i];
+        }
+    }
+    (dwide, dbias)
+}
+
+/// Sparse twin of [`wide_bwd`]: `(dwide[touched.len()], dbias)`.
+pub fn wide_bwd_sparse(
+    dout: &[f32],
+    ids: &[i32],
+    touched: &[u32],
+    f: usize,
+) -> (Vec<f32>, f32) {
+    let mut dwide = vec![0.0f32; touched.len()];
+    let mut dbias = 0.0f32;
+    for (i, &dv) in dout.iter().enumerate() {
+        dbias += dv;
+        for &id in &ids[i * f..(i + 1) * f] {
+            let k = touched
+                .binary_search(&(id as u32))
+                .expect("batch id missing from touched list");
+            dwide[k] += dv;
         }
     }
     (dwide, dbias)
@@ -176,6 +215,26 @@ mod tests {
         let g = vec![1.0f32; 8];
         let dt = embed_bwd(&g, &ids, 3, 2);
         assert_eq!(dt, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0]); // id 2 hit twice
+    }
+
+    #[test]
+    fn sparse_backward_twins_match_dense() {
+        let ids = [0i32, 2, 2, 1];
+        let touched = [0u32, 1, 2];
+        let g = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]; // b=2, f=2, d=2
+        let dense = embed_bwd(&g, &ids, 3, 2);
+        let sparse = embed_bwd_sparse(&g, &ids, &touched, 2);
+        for (k, &id) in touched.iter().enumerate() {
+            assert_eq!(&sparse[k * 2..(k + 1) * 2], &dense[id as usize * 2..(id as usize + 1) * 2]);
+        }
+
+        let dout = [1.0f32, 2.0];
+        let (dw_dense, db_dense) = wide_bwd(&dout, &ids, 3, 2, 2);
+        let (dw_sparse, db_sparse) = wide_bwd_sparse(&dout, &ids, &touched, 2);
+        assert_eq!(db_dense, db_sparse);
+        for (k, &id) in touched.iter().enumerate() {
+            assert_eq!(dw_sparse[k], dw_dense[id as usize]);
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ use super::linalg::{colsum, matmul, matmul_nt, matmul_tn, rowdot};
 use crate::data::batcher::Batch;
 use crate::data::schema::Schema;
 use crate::model::params::ParamSet;
-use crate::tensor::Tensor;
+use crate::tensor::{GradTensor, SparseRows, Tensor};
 
 /// Which architecture to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -98,16 +98,22 @@ impl ReferenceModel {
 
     /// Loss + positional gradients + per-id occurrence counts — the
     /// reference twin of the AOT `grad` program.
-    pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<(f32, Vec<Tensor>, Vec<f32>)> {
+    ///
+    /// Row-indexed gradients (embedding + wide tables) come back
+    /// **sparse** over the batch's touched ids, and the counts are the
+    /// matching `d = 1` sparse vector, so nothing on this path ever
+    /// allocates O(V · d).
+    pub fn grad(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+    ) -> Result<(f32, Vec<GradTensor>, SparseRows)> {
         let (logits, cache) = self.forward_cached(params, batch)?;
         let y = batch.y.as_f32()?;
         let (loss, dlogits) = bce_fwd_bwd(&logits, y);
-        let grads = self.backward(params, batch, &cache, &dlogits)?;
-
-        let mut counts = vec![0.0f32; self.schema.total_vocab()];
-        for &id in batch.x_cat.as_i32()? {
-            counts[id as usize] += 1.0;
-        }
+        let (touched, cnts) = batch.touched()?;
+        let grads = self.backward(params, batch, &cache, &dlogits, &touched)?;
+        let counts = SparseRows::new(self.schema.total_vocab(), 1, touched, cnts);
         Ok((loss, grads, counts))
     }
 
@@ -260,7 +266,8 @@ impl ReferenceModel {
         batch: &Batch,
         cache: &Cache,
         dlogits: &[f32],
-    ) -> Result<Vec<Tensor>> {
+        touched: &[u32],
+    ) -> Result<Vec<GradTensor>> {
         let ids = batch.x_cat.as_i32()?;
         let b = batch.batch_size();
         let f = self.schema.n_cat();
@@ -269,14 +276,14 @@ impl ReferenceModel {
         let v = self.schema.total_vocab();
 
         // gradients per positional slot, filled in spec order at the end
-        let mut grads: Vec<Tensor> = Vec::with_capacity(params.len());
+        let mut grads: Vec<GradTensor> = Vec::with_capacity(params.len());
         let mut dx0 = vec![0.0f32; b * d0];
         let mut dembeds = vec![0.0f32; b * f * d];
 
         match self.kind {
             ModelKind::DeepFm | ModelKind::WideDeep => {
-                // wide stream
-                let (dwide, dbias) = wide_bwd(dlogits, ids, v, b, f);
+                // wide stream (sparse over the touched ids)
+                let (dwide, dbias) = wide_bwd_sparse(dlogits, ids, touched, f);
                 // FM stream
                 if self.kind == ModelKind::DeepFm {
                     let dfm = fm2_bwd(&cache.embeds, &cache.fm_sums, dlogits, b, f, d);
@@ -322,15 +329,15 @@ impl ReferenceModel {
                         dembeds[i * f * d + t] += dx0[i * d0 + t];
                     }
                 }
-                let dtable = embed_bwd(&dembeds, ids, v, d);
-                grads.push(Tensor::f32(vec![v, d], dtable));
-                grads.push(Tensor::f32(vec![v, 1], dwide));
-                grads.push(Tensor::f32(vec![1], vec![dbias]));
+                let dtable = embed_bwd_sparse(&dembeds, ids, touched, d);
+                grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable)));
+                grads.push(GradTensor::Sparse(SparseRows::new(v, 1, touched.to_vec(), dwide)));
+                grads.push(GradTensor::Dense(Tensor::f32(vec![1], vec![dbias])));
                 for (dw, db) in dws {
                     let n = db.len();
                     let m = dw.len() / n;
-                    grads.push(Tensor::f32(vec![m, n], dw));
-                    grads.push(Tensor::f32(vec![n], db));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![m, n], dw)));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![n], db)));
                 }
             }
             ModelKind::Dcn | ModelKind::DcnV2 => {
@@ -443,30 +450,30 @@ impl ReferenceModel {
                         dembeds[i * f * d + t] += dx0[i * d0 + t];
                     }
                 }
-                let dtable = embed_bwd(&dembeds, ids, v, d);
-                grads.push(Tensor::f32(vec![v, d], dtable));
+                let dtable = embed_bwd_sparse(&dembeds, ids, touched, d);
+                grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable)));
                 for (dw, db) in cross_grads {
                     if self.kind == ModelKind::Dcn {
-                        grads.push(Tensor::f32(vec![d0], dw));
+                        grads.push(GradTensor::Dense(Tensor::f32(vec![d0], dw)));
                     } else {
-                        grads.push(Tensor::f32(vec![d0, d0], dw));
+                        grads.push(GradTensor::Dense(Tensor::f32(vec![d0, d0], dw)));
                     }
-                    grads.push(Tensor::f32(vec![d0], db));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![d0], db)));
                 }
                 for (dw, db) in mlp_grads {
                     let n = db.len();
                     let m = dw.len() / n;
-                    grads.push(Tensor::f32(vec![m, n], dw));
-                    grads.push(Tensor::f32(vec![n], db));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![m, n], dw)));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![n], db)));
                 }
-                grads.push(Tensor::f32(vec![hc, 1], dhead_w));
-                grads.push(Tensor::f32(vec![1], dhead_b));
+                grads.push(GradTensor::Dense(Tensor::f32(vec![hc, 1], dhead_w)));
+                grads.push(GradTensor::Dense(Tensor::f32(vec![1], dhead_b)));
             }
         }
 
         ensure!(grads.len() == params.len(), "gradient arity mismatch");
         for (g, e) in grads.iter().zip(&params.spec) {
-            ensure!(g.shape() == e.shape.as_slice(), "grad shape mismatch for {}", e.name);
+            ensure!(g.matches_shape(&e.shape), "grad shape mismatch for {}", e.name);
         }
         Ok(grads)
     }

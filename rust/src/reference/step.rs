@@ -4,23 +4,38 @@
 //! as separate calls) so the coordinator can swap engines behind one
 //! trait-shaped surface.
 
-use anyhow::Result;
+use std::borrow::Cow;
+
+use anyhow::{bail, Result};
 
 use super::model::{ModelKind, ReferenceModel};
-use crate::clip::{clip_embedding_grads, ClipMode, ClipParams};
+use crate::clip::{clip_embedding_grads, clip_embedding_grads_sparse, ClipMode, ClipParams};
 use crate::data::batcher::Batch;
 use crate::data::schema::Schema;
 use crate::model::manifest::ParamEntry;
 use crate::model::params::ParamSet;
-use crate::optim::Adam;
+use crate::optim::{Adam, LazyAdam};
 use crate::scaling::rules::HyperSet;
-use crate::tensor::Tensor;
+use crate::tensor::{GradTensor, SparseRows};
 
-/// Output of a gradient computation.
+/// Output of a gradient computation: one dense-or-sparse gradient per
+/// positional parameter, plus the batch's per-id occurrence counts as a
+/// `d = 1` sparse vector over the vocabulary.
 pub struct GradOutput {
-    pub grads: Vec<Tensor>,
-    pub counts: Vec<f32>,
+    pub grads: Vec<GradTensor>,
+    pub counts: SparseRows,
     pub loss: f32,
+}
+
+/// Per-stored-row counts aligned with `ids` — borrowed in the common
+/// case where the gradient's id set *is* the counts' id set (true for
+/// everything the trainer produces), materialized only on mismatch.
+fn counts_for<'a>(ids: &[u32], counts: &'a SparseRows) -> Cow<'a, [f32]> {
+    if counts.ids() == ids {
+        Cow::Borrowed(counts.vals())
+    } else {
+        Cow::Owned(ids.iter().map(|&id| counts.value_at(id)).collect())
+    }
 }
 
 /// Build the positional parameter spec for (model, schema) — must stay
@@ -77,15 +92,38 @@ pub fn build_spec(
 }
 
 /// Pure-Rust engine implementing grad/apply/fwd.
+///
+/// The default path is **sparse**: row-indexed gradients (embed/wide)
+/// arrive as [`GradTensor::Sparse`] and are clipped, L2-regularized and
+/// Adam-stepped on their touched rows only ([`LazyAdam`]). Dense
+/// gradients (the diagnostic `dense_grads` mode, or HLO-originated
+/// tensors in parity tests) take the legacy eager path unchanged.
 pub struct ReferenceEngine {
     pub model: ReferenceModel,
     pub clip_mode: ClipMode,
     adam: Adam,
+    /// Per-param lazy-Adam row state, created on first sparse apply.
+    lazy: Vec<Option<LazyAdam>>,
+    /// Emit dense gradients from `grad()` (exercises the O(V·d) path;
+    /// benches use this to measure the dense-vs-sparse gap).
+    dense_grads: bool,
 }
 
 impl ReferenceEngine {
     pub fn new(model: ReferenceModel, clip_mode: ClipMode) -> ReferenceEngine {
-        ReferenceEngine { model, clip_mode, adam: Adam::default() }
+        ReferenceEngine {
+            model,
+            clip_mode,
+            adam: Adam::default(),
+            lazy: Vec::new(),
+            dense_grads: false,
+        }
+    }
+
+    /// Builder: emit dense gradients instead of sparse ones.
+    pub fn with_dense_grads(mut self, dense: bool) -> ReferenceEngine {
+        self.dense_grads = dense;
+        self
     }
 
     pub fn spec(&self) -> Vec<ParamEntry> {
@@ -105,64 +143,118 @@ impl ReferenceEngine {
 
     /// Gradient + counts + loss for one microbatch.
     pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<GradOutput> {
-        let (loss, grads, counts) = self.model.grad(params, batch)?;
+        let (loss, mut grads, counts) = self.model.grad(params, batch)?;
+        if self.dense_grads {
+            for g in &mut grads {
+                if matches!(g, GradTensor::Sparse(_)) {
+                    let dense = g.to_tensor();
+                    *g = GradTensor::Dense(dense);
+                }
+            }
+        }
         Ok(GradOutput { grads, counts, loss })
     }
 
     /// Apply accumulated gradients: clip (embed group) → +L2 (embed+wide)
     /// → Adam (group learning rates). `step` is 1-based.
+    ///
+    /// Sparse gradients pay O(touched · d): sparse clip, L2 on touched
+    /// rows only (lazy weight decay), and [`LazyAdam`] scatter updates.
+    /// Dense gradients keep the original eager O(V · d) semantics.
     pub fn apply(
-        &self,
+        &mut self,
         params: &mut ParamSet,
         m: &mut ParamSet,
         v: &mut ParamSet,
-        grads: &mut [Tensor],
-        counts: &[f32],
+        grads: &mut [GradTensor],
+        counts: &SparseRows,
         hypers: &HyperSet,
         step: f32,
     ) -> Result<()> {
-        let d = self.model.embed_dim;
+        let d_embed = self.model.embed_dim;
         let clip_params = ClipParams {
             r: hypers.clip_r,
             zeta: hypers.clip_zeta,
             clip_t: hypers.clip_t,
         };
-        for (i, entry) in params.spec.clone().iter().enumerate() {
-            let w = params.tensors[i].as_f32_mut()?;
-            let g = grads[i].as_f32_mut()?;
-            let lr = match entry.group.as_str() {
-                "embed" => {
-                    clip_embedding_grads(
-                        self.clip_mode,
-                        g,
-                        w,
-                        counts,
-                        &self.model.schema,
-                        d,
-                        &clip_params,
-                    );
-                    for (gv, wv) in g.iter_mut().zip(w.iter()) {
-                        *gv += hypers.l2_embed * wv;
+        let spec = &params.spec;
+        let tensors = &mut params.tensors;
+        if self.lazy.len() != spec.len() {
+            self.lazy = (0..spec.len()).map(|_| None).collect();
+        }
+        for (i, entry) in spec.iter().enumerate() {
+            let w = tensors[i].as_f32_mut()?;
+            let mi = m.tensors[i].as_f32_mut()?;
+            let vi = v.tensors[i].as_f32_mut()?;
+            match &mut grads[i] {
+                GradTensor::Sparse(sg) => {
+                    let lr = match entry.group.as_str() {
+                        "embed" => {
+                            let cnt = counts_for(sg.ids(), counts);
+                            clip_embedding_grads_sparse(
+                                self.clip_mode,
+                                sg,
+                                w,
+                                &cnt,
+                                &self.model.schema,
+                                &clip_params,
+                            );
+                            hypers.lr_embed
+                        }
+                        // wide: L2 but no clipping (1-d LR "embeddings")
+                        "wide" => hypers.lr_embed,
+                        other => bail!(
+                            "sparse gradient for dense-group param {} ({other})",
+                            entry.name
+                        ),
+                    };
+                    // lazy L2: regularize touched rows only
+                    let dd = sg.d();
+                    {
+                        let (ids, vals) = sg.ids_vals_mut();
+                        for (k, &id) in ids.iter().enumerate() {
+                            let base = id as usize * dd;
+                            for j in 0..dd {
+                                vals[k * dd + j] += hypers.l2_embed * w[base + j];
+                            }
+                        }
                     }
-                    hypers.lr_embed
-                }
-                "wide" => {
-                    // L2 but no clipping (1-d LR "embeddings" are exempt)
-                    for (gv, wv) in g.iter_mut().zip(w.iter()) {
-                        *gv += hypers.l2_embed * wv;
+                    if self.lazy[i].is_none() {
+                        self.lazy[i] = Some(LazyAdam::new(self.adam.cfg, entry.shape[0]));
                     }
-                    hypers.lr_embed
+                    let lazy = self.lazy[i].as_mut().unwrap();
+                    lazy.step_rows(w, mi, vi, sg.ids(), sg.vals(), dd, lr, step as u32);
                 }
-                _ => hypers.lr_dense,
-            };
-            self.adam.step(
-                w,
-                m.tensors[i].as_f32_mut()?,
-                v.tensors[i].as_f32_mut()?,
-                g,
-                lr,
-                step,
-            );
+                GradTensor::Dense(t) => {
+                    let g = t.as_f32_mut()?;
+                    let lr = match entry.group.as_str() {
+                        "embed" => {
+                            let dense_counts = counts.to_dense();
+                            clip_embedding_grads(
+                                self.clip_mode,
+                                g,
+                                w,
+                                &dense_counts,
+                                &self.model.schema,
+                                d_embed,
+                                &clip_params,
+                            );
+                            for (gv, wv) in g.iter_mut().zip(w.iter()) {
+                                *gv += hypers.l2_embed * wv;
+                            }
+                            hypers.lr_embed
+                        }
+                        "wide" => {
+                            for (gv, wv) in g.iter_mut().zip(w.iter()) {
+                                *gv += hypers.l2_embed * wv;
+                            }
+                            hypers.lr_embed
+                        }
+                        _ => hypers.lr_dense,
+                    };
+                    self.adam.step(w, mi, vi, g, lr, step);
+                }
+            }
         }
         Ok(())
     }
@@ -173,6 +265,7 @@ mod tests {
     use super::*;
     use crate::data::batcher::Batch;
     use crate::model::init::{init_params, InitConfig};
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     fn tiny_schema() -> Schema {
@@ -229,6 +322,8 @@ mod tests {
             }
             let batch = tiny_batch(&model.schema, 6, 9);
             let (_, grads, _) = model.grad(&params, &batch).unwrap();
+            // densify sparse (embed/wide) grads for coordinate access
+            let grads: Vec<Tensor> = grads.iter().map(|g| g.to_tensor()).collect();
 
             let eps = 2e-3f32;
             let mut checked = 0;
@@ -265,7 +360,8 @@ mod tests {
         let params = init_params(&spec, &InitConfig::baseline(0));
         let batch = tiny_batch(&model.schema, 16, 4);
         let (_, _, counts) = model.grad(&params, &batch).unwrap();
-        assert_eq!(counts.iter().sum::<f32>(), (16 * 3) as f32);
+        assert_eq!(counts.vals().iter().sum::<f32>(), (16 * 3) as f32);
+        assert_eq!(counts.n_rows(), model.schema.total_vocab());
     }
 
     fn model_spec(model: &ReferenceModel) -> Vec<ParamEntry> {
@@ -276,7 +372,7 @@ mod tests {
     fn training_reduces_loss_every_model() {
         for kind in ModelKind::ALL {
             let model = tiny_model(kind);
-            let engine = ReferenceEngine::new(model.clone(), ClipMode::CowClip);
+            let mut engine = ReferenceEngine::new(model.clone(), ClipMode::CowClip);
             let spec = engine.spec();
             let mut params = init_params(&spec, &InitConfig { seed: 1, embed_sigma: 0.01 });
             let mut m = params.zeros_like();
@@ -294,8 +390,9 @@ mod tests {
             for t in 1..=20 {
                 let mut out = engine.grad(&params, &batch).unwrap();
                 losses.push(out.loss);
+                let t = t as f32;
                 engine
-                    .apply(&mut params, &mut m, &mut v, &mut out.grads, &out.counts, &hypers, t as f32)
+                    .apply(&mut params, &mut m, &mut v, &mut out.grads, &out.counts, &hypers, t)
                     .unwrap();
             }
             assert!(

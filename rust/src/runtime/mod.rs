@@ -8,7 +8,17 @@
 //! HLO **text** is the interchange format — see `python/compile/aot.py`
 //! and /opt/xla-example/README.md for why serialized protos don't work
 //! with xla_extension 0.5.1.
+//!
+//! The whole backend is gated behind the off-by-default `pjrt` cargo
+//! feature: without it, `stub.rs` provides the same `Runtime`/`Program`
+//! API but refuses to execute, so the default build is pure Rust (the
+//! reference engine carries all tests). Enabling `pjrt` additionally
+//! requires adding a vendored `xla` bindings crate to `[dependencies]`.
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
 pub mod engine;
 pub mod hypers;
 

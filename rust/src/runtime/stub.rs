@@ -1,0 +1,87 @@
+//! Pure-Rust stand-in for the PJRT runtime, compiled when the `pjrt`
+//! cargo feature is off (the default).
+//!
+//! It keeps the exact public API of `engine.rs` so every consumer (the
+//! CLI, the HLO engine, benches, examples) compiles unchanged, but it
+//! refuses to execute: `Runtime::new` validates the manifest for a
+//! useful error message and then reports that PJRT support is not built
+//! in. The tier-1 verify therefore runs on any machine — all tests that
+//! need real artifacts already skip when `artifacts/manifest.json` is
+//! absent, and the reference engine covers the math.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::{Artifact, Manifest};
+use crate::tensor::Tensor;
+
+const NO_PJRT: &str =
+    "this build has no PJRT runtime (rebuild with `--features pjrt` and a vendored `xla` \
+     crate, or use `--engine reference`)";
+
+/// A compiled HLO program plus its manifest metadata (stub: never
+/// constructible without the `pjrt` feature).
+pub struct Program {
+    pub artifact: Artifact,
+}
+
+impl Program {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        bail!("{}: {NO_PJRT}", self.artifact.id)
+    }
+}
+
+/// PJRT client + manifest + compiled-program cache (stub).
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifacts directory. The manifest is parsed (so format
+    /// errors surface first), then the missing backend is reported.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let _manifest = Manifest::load(artifacts_dir)?;
+        bail!("artifacts at {} are valid, but {NO_PJRT}", artifacts_dir.display())
+    }
+
+    /// Default artifacts location: `$COWCLIP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("COWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Runtime::new(Path::new(&dir))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".into()
+    }
+
+    /// Fetch (compiling and caching on first use) the program for an
+    /// artifact id.
+    pub fn load(&self, artifact: &Artifact) -> Result<Arc<Program>> {
+        bail!("{}: {NO_PJRT}", artifact.id)
+    }
+
+    /// Convenience: find + load + run in one call.
+    pub fn execute(
+        &self,
+        _kind: &str,
+        _model: &str,
+        _schema: &str,
+        _batch: Option<usize>,
+        _clip: Option<&str>,
+        _inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        bail!("{NO_PJRT}")
+    }
+
+    /// Number of compiled programs currently cached.
+    pub fn cached_programs(&self) -> usize {
+        0
+    }
+}

@@ -119,6 +119,7 @@ impl Tensor {
     }
 
     /// Convert to an [`xla::Literal`] for PJRT execution.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -129,6 +130,7 @@ impl Tensor {
     }
 
     /// Rebuild from an [`xla::Literal`] (f32 and i32 element types only).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

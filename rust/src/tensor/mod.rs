@@ -6,5 +6,7 @@
 //! with shape checking is all we need — no views, no broadcasting.
 
 mod host;
+mod sparse;
 
 pub use host::{Dtype, Tensor};
+pub use sparse::{GradTensor, SparseRows};

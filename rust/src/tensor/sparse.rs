@@ -1,0 +1,404 @@
+//! Row-sparse tensors over `[n_rows, d]` tables.
+//!
+//! A CTR batch touches only a tiny fraction of the embedding vocabulary,
+//! so its embedding gradient is row-sparse: `(row_ids, vals)` with
+//! `row_ids` sorted unique and `vals` holding `ids.len() * d` floats.
+//! [`SparseRows`] is that representation; [`GradTensor`] is the dense-or-
+//! sparse sum type the coordinator moves through accumulate → all-reduce
+//! → clip → optimizer, keeping the per-step embedding cost
+//! O(touched · d) instead of O(V · d).
+//!
+//! Per-id occurrence counts travel as a `SparseRows` with `d = 1` over
+//! the same id set, so Alg. 1's `cnt(id)` never densifies either.
+
+use anyhow::{bail, ensure, Result};
+
+use super::host::Tensor;
+
+/// Row-sparse view of an `[n_rows, d]` f32 table: sorted unique row ids
+/// plus a packed `[nnz, d]` value block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseRows {
+    n_rows: usize,
+    d: usize,
+    ids: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl SparseRows {
+    /// Build from parts. `ids` must be sorted, unique and `< n_rows`;
+    /// `vals.len()` must equal `ids.len() * d`.
+    pub fn new(n_rows: usize, d: usize, ids: Vec<u32>, vals: Vec<f32>) -> SparseRows {
+        assert!(d > 0, "row width must be positive");
+        assert_eq!(vals.len(), ids.len() * d, "ids/vals length mismatch");
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be sorted unique");
+        debug_assert!(ids.last().map_or(true, |&id| (id as usize) < n_rows));
+        SparseRows { n_rows, d, ids, vals }
+    }
+
+    /// All-zero (no touched rows).
+    pub fn empty(n_rows: usize, d: usize) -> SparseRows {
+        SparseRows::new(n_rows, d, Vec::new(), Vec::new())
+    }
+
+    /// Scan a dense table and keep its nonzero rows.
+    pub fn from_dense(dense: &[f32], n_rows: usize, d: usize) -> SparseRows {
+        assert_eq!(dense.len(), n_rows * d, "dense length mismatch");
+        let mut ids = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..n_rows {
+            let row = &dense[r * d..(r + 1) * d];
+            if row.iter().any(|&x| x != 0.0) {
+                ids.push(r as u32);
+                vals.extend_from_slice(row);
+            }
+        }
+        SparseRows { n_rows, d, ids, vals }
+    }
+
+    /// Gather the given (sorted unique) rows out of a dense table.
+    pub fn gather(dense: &[f32], n_rows: usize, d: usize, ids: Vec<u32>) -> SparseRows {
+        assert_eq!(dense.len(), n_rows * d, "dense length mismatch");
+        let mut vals = Vec::with_capacity(ids.len() * d);
+        for &id in &ids {
+            vals.extend_from_slice(&dense[id as usize * d..(id as usize + 1) * d]);
+        }
+        SparseRows::new(n_rows, d, ids, vals)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of stored (touched) rows.
+    pub fn nnz(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    pub fn vals_mut(&mut self) -> &mut [f32] {
+        &mut self.vals
+    }
+
+    /// Split borrow: ids (shared) + vals (mutable), for in-place passes
+    /// that index rows while rewriting values.
+    pub fn ids_vals_mut(&mut self) -> (&[u32], &mut [f32]) {
+        (&self.ids, &mut self.vals)
+    }
+
+    /// The `k`-th stored row's values.
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.vals[k * self.d..(k + 1) * self.d]
+    }
+
+    /// Storage slot of a row id, if present.
+    pub fn find(&self, id: u32) -> Option<usize> {
+        self.ids.binary_search(&id).ok()
+    }
+
+    /// For `d == 1` tables (counts): value at `id`, 0.0 when untouched.
+    pub fn value_at(&self, id: u32) -> f32 {
+        debug_assert_eq!(self.d, 1);
+        self.find(id).map_or(0.0, |k| self.vals[k])
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.vals {
+            *v *= alpha;
+        }
+    }
+
+    /// `self += alpha * other` via a sorted-union merge: cost is
+    /// O((nnz_a + nnz_b) · d), independent of `n_rows`.
+    pub fn axpy(&mut self, alpha: f32, other: &SparseRows) -> Result<()> {
+        ensure!(
+            self.n_rows == other.n_rows && self.d == other.d,
+            "sparse axpy shape mismatch: [{}, {}] vs [{}, {}]",
+            self.n_rows,
+            self.d,
+            other.n_rows,
+            other.d
+        );
+        if other.ids.is_empty() {
+            return Ok(());
+        }
+        if self.ids.is_empty() {
+            self.ids = other.ids.clone();
+            self.vals = other.vals.iter().map(|&x| alpha * x).collect();
+            return Ok(());
+        }
+        let d = self.d;
+        let mut ids = Vec::with_capacity(self.ids.len() + other.ids.len());
+        let mut vals = Vec::with_capacity(self.vals.len() + other.vals.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.ids.len() || j < other.ids.len() {
+            let take_a = j >= other.ids.len()
+                || (i < self.ids.len() && self.ids[i] < other.ids[j]);
+            let take_b = i >= self.ids.len()
+                || (j < other.ids.len() && other.ids[j] < self.ids[i]);
+            if take_a {
+                ids.push(self.ids[i]);
+                vals.extend_from_slice(&self.vals[i * d..(i + 1) * d]);
+                i += 1;
+            } else if take_b {
+                ids.push(other.ids[j]);
+                vals.extend(other.vals[j * d..(j + 1) * d].iter().map(|&x| alpha * x));
+                j += 1;
+            } else {
+                ids.push(self.ids[i]);
+                let base = vals.len();
+                vals.extend_from_slice(&self.vals[i * d..(i + 1) * d]);
+                for (v, &o) in vals[base..].iter_mut().zip(&other.vals[j * d..(j + 1) * d]) {
+                    *v += alpha * o;
+                }
+                i += 1;
+                j += 1;
+            }
+        }
+        self.ids = ids;
+        self.vals = vals;
+        Ok(())
+    }
+
+    /// Scatter-add `alpha * self` into a dense `[n_rows * d]` buffer.
+    pub fn add_into_dense(&self, alpha: f32, dense: &mut [f32]) -> Result<()> {
+        ensure!(
+            dense.len() == self.n_rows * self.d,
+            "dense target length {} != {} * {}",
+            dense.len(),
+            self.n_rows,
+            self.d
+        );
+        let d = self.d;
+        for (k, &id) in self.ids.iter().enumerate() {
+            let dst = &mut dense[id as usize * d..(id as usize + 1) * d];
+            for (t, &v) in dst.iter_mut().zip(&self.vals[k * d..(k + 1) * d]) {
+                *t += alpha * v;
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the full dense `[n_rows * d]` buffer.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut dense = vec![0.0f32; self.n_rows * self.d];
+        let d = self.d;
+        for (k, &id) in self.ids.iter().enumerate() {
+            dense[id as usize * d..(id as usize + 1) * d]
+                .copy_from_slice(&self.vals[k * d..(k + 1) * d]);
+        }
+        dense
+    }
+
+    /// Materialize as a dense `[n_rows, d]` tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::f32(vec![self.n_rows, self.d], self.to_dense())
+    }
+
+    /// Bytes a network would move for this payload (ids + vals).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.ids.len() * 4 + self.vals.len() * 4) as u64
+    }
+}
+
+/// A gradient tensor that is either dense (HLO path, dense MLP params)
+/// or row-sparse (embedding/wide tables on the reference path).
+#[derive(Clone, Debug)]
+pub enum GradTensor {
+    Dense(Tensor),
+    Sparse(SparseRows),
+}
+
+impl GradTensor {
+    /// Does this gradient match a parameter of the given dense shape?
+    /// A sparse gradient over `[n_rows, d]` matches exactly that shape.
+    pub fn matches_shape(&self, shape: &[usize]) -> bool {
+        match self {
+            GradTensor::Dense(t) => t.shape() == shape,
+            GradTensor::Sparse(s) => shape == [s.n_rows(), s.d()],
+        }
+    }
+
+    /// Densify into a `[n_rows, d]` tensor (clones dense payloads).
+    pub fn to_tensor(&self) -> Tensor {
+        match self {
+            GradTensor::Dense(t) => t.clone(),
+            GradTensor::Sparse(s) => s.to_tensor(),
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) -> Result<()> {
+        match self {
+            GradTensor::Dense(t) => t.scale(alpha),
+            GradTensor::Sparse(s) => {
+                s.scale(alpha);
+                Ok(())
+            }
+        }
+    }
+
+    /// `self += alpha * other`. Sparse+sparse stays sparse; a dense
+    /// operand on either side densifies the result.
+    pub fn axpy(&mut self, alpha: f32, other: &GradTensor) -> Result<()> {
+        if matches!(self, GradTensor::Sparse(_)) && matches!(other, GradTensor::Dense(_)) {
+            let dense = self.to_tensor();
+            *self = GradTensor::Dense(dense);
+        }
+        match (&mut *self, other) {
+            (GradTensor::Dense(a), GradTensor::Dense(b)) => a.axpy(alpha, b),
+            (GradTensor::Sparse(a), GradTensor::Sparse(b)) => a.axpy(alpha, b),
+            (GradTensor::Dense(a), GradTensor::Sparse(b)) => {
+                if a.shape() != [b.n_rows(), b.d()] {
+                    bail!(
+                        "grad axpy shape mismatch: {:?} vs sparse [{}, {}]",
+                        a.shape(),
+                        b.n_rows(),
+                        b.d()
+                    );
+                }
+                b.add_into_dense(alpha, a.as_f32_mut()?)
+            }
+            (GradTensor::Sparse(_), GradTensor::Dense(_)) => unreachable!("densified above"),
+        }
+    }
+
+    /// Bytes a network would move for this payload.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            GradTensor::Dense(t) => (t.len() * 4) as u64,
+            GradTensor::Sparse(s) => s.payload_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(n_rows: usize, d: usize, ids: &[u32], vals: &[f32]) -> SparseRows {
+        SparseRows::new(n_rows, d, ids.to_vec(), vals.to_vec())
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let s = sp(4, 2, &[1, 3], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.to_dense(), vec![0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 3.0, 4.0]);
+        let back = SparseRows::from_dense(&s.to_dense(), 4, 2);
+        assert_eq!(back, s);
+        assert_eq!(s.to_tensor().shape(), &[4, 2]);
+    }
+
+    #[test]
+    fn gather_picks_rows() {
+        let dense = [10.0f32, 11.0, 20.0, 21.0, 30.0, 31.0];
+        let s = SparseRows::gather(&dense, 3, 2, vec![0, 2]);
+        assert_eq!(s.vals(), &[10.0, 11.0, 30.0, 31.0]);
+        assert_eq!(s.row(1), &[30.0, 31.0]);
+        assert_eq!(s.find(2), Some(1));
+        assert_eq!(s.find(1), None);
+    }
+
+    #[test]
+    fn axpy_merges_sorted_union() {
+        let mut a = sp(6, 1, &[0, 2, 5], &[1.0, 2.0, 3.0]);
+        let b = sp(6, 1, &[1, 2, 4], &[10.0, 20.0, 30.0]);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.ids(), &[0, 1, 2, 4, 5]);
+        assert_eq!(a.vals(), &[1.0, 5.0, 12.0, 15.0, 3.0]);
+        // equivalent to the dense computation
+        let mut dense = sp(6, 1, &[0, 2, 5], &[1.0, 2.0, 3.0]).to_dense();
+        for (x, y) in dense.iter_mut().zip(b.to_dense()) {
+            *x += 0.5 * y;
+        }
+        assert_eq!(a.to_dense(), dense);
+    }
+
+    #[test]
+    fn axpy_into_empty_scales() {
+        let mut a = SparseRows::empty(4, 2);
+        let b = sp(4, 2, &[1], &[2.0, -4.0]);
+        a.axpy(0.25, &b).unwrap();
+        assert_eq!(a.ids(), &[1]);
+        assert_eq!(a.vals(), &[0.5, -1.0]);
+    }
+
+    #[test]
+    fn axpy_rejects_shape_mismatch() {
+        let mut a = SparseRows::empty(4, 2);
+        assert!(a.axpy(1.0, &SparseRows::empty(4, 3)).is_err());
+        assert!(a.axpy(1.0, &SparseRows::empty(5, 2)).is_err());
+    }
+
+    #[test]
+    fn value_at_for_counts() {
+        let c = sp(5, 1, &[1, 4], &[2.0, 7.0]);
+        assert_eq!(c.value_at(1), 2.0);
+        assert_eq!(c.value_at(0), 0.0);
+        assert_eq!(c.value_at(4), 7.0);
+    }
+
+    #[test]
+    fn add_into_dense_scatters() {
+        let s = sp(3, 2, &[0, 2], &[1.0, 1.0, 2.0, 2.0]);
+        let mut dense = vec![1.0f32; 6];
+        s.add_into_dense(2.0, &mut dense).unwrap();
+        assert_eq!(dense, vec![3.0, 3.0, 1.0, 1.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn grad_tensor_axpy_all_combinations() {
+        let dense = |v: &[f32]| GradTensor::Dense(Tensor::f32(vec![3, 1], v.to_vec()));
+        let sparse = |ids: &[u32], v: &[f32]| GradTensor::Sparse(sp(3, 1, ids, v));
+
+        // dense += dense
+        let mut a = dense(&[1.0, 2.0, 3.0]);
+        a.axpy(1.0, &dense(&[1.0, 1.0, 1.0])).unwrap();
+        assert_eq!(a.to_tensor().as_f32().unwrap(), &[2.0, 3.0, 4.0]);
+        // dense += sparse
+        let mut a = dense(&[1.0, 2.0, 3.0]);
+        a.axpy(2.0, &sparse(&[1], &[5.0])).unwrap();
+        assert_eq!(a.to_tensor().as_f32().unwrap(), &[1.0, 12.0, 3.0]);
+        // sparse += sparse
+        let mut a = sparse(&[0], &[1.0]);
+        a.axpy(1.0, &sparse(&[2], &[3.0])).unwrap();
+        assert!(matches!(a, GradTensor::Sparse(_)));
+        assert_eq!(a.to_tensor().as_f32().unwrap(), &[1.0, 0.0, 3.0]);
+        // sparse += dense densifies
+        let mut a = sparse(&[0], &[1.0]);
+        a.axpy(1.0, &dense(&[1.0, 1.0, 1.0])).unwrap();
+        assert!(matches!(a, GradTensor::Dense(_)));
+        assert_eq!(a.to_tensor().as_f32().unwrap(), &[2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn payload_bytes_reflect_sparsity() {
+        let s = GradTensor::Sparse(sp(1000, 4, &[7], &[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(s.payload_bytes(), 4 + 16);
+        let d = GradTensor::Dense(Tensor::zeros(&[1000, 4]));
+        assert_eq!(d.payload_bytes(), 16_000);
+    }
+
+    #[test]
+    fn shape_matching() {
+        let s = GradTensor::Sparse(SparseRows::empty(10, 3));
+        assert!(s.matches_shape(&[10, 3]));
+        assert!(!s.matches_shape(&[10, 4]));
+        let d = GradTensor::Dense(Tensor::zeros(&[7]));
+        assert!(d.matches_shape(&[7]));
+    }
+}

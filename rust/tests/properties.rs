@@ -3,12 +3,14 @@
 //! sweep hundreds of randomized cases per property, which catches the
 //! same class of bugs for these invariants).
 
-use cowclip::clip::{clip_embedding_grads, ClipMode, ClipParams};
+use cowclip::clip::{
+    clip_embedding_grads, clip_embedding_grads_sparse, ClipMode, ClipParams,
+};
 use cowclip::coordinator::allreduce::{tree_allreduce, Contribution};
 use cowclip::data::schema::Schema;
 use cowclip::metrics::auc;
 use cowclip::scaling::rules::{HyperSet, ScalingRule};
-use cowclip::tensor::Tensor;
+use cowclip::tensor::{GradTensor, SparseRows, Tensor};
 use cowclip::util::Rng;
 
 fn rand_schema(rng: &mut Rng) -> Schema {
@@ -88,6 +90,49 @@ fn prop_clipping_idempotent() {
     }
 }
 
+/// Invariant: the sparse clip twin is elementwise-exact vs the dense
+/// implementation on any random touched-row support, for every mode.
+#[test]
+fn prop_sparse_clip_matches_dense() {
+    let mut rng = Rng::new(0x5BA6);
+    for case in 0..300 {
+        let schema = rand_schema(&mut rng);
+        let v = schema.total_vocab();
+        let d = 1 + rng.below(6) as usize;
+        let mode = ClipMode::ALL[rng.below(6) as usize];
+        let w: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+        // random subset of touched rows with random counts >= 1
+        let mut ids: Vec<u32> = (0..v as u32).filter(|_| rng.bernoulli(0.4)).collect();
+        if ids.is_empty() {
+            ids.push(rng.below(v as u64) as u32);
+        }
+        let sparse_counts: Vec<f32> = ids.iter().map(|_| 1.0 + rng.below(4) as f32).collect();
+        let vals: Vec<f32> = (0..ids.len() * d)
+            .map(|_| (rng.next_gaussian() * 3.0) as f32)
+            .collect();
+        let p = ClipParams {
+            r: [0.1, 1.0, 10.0][rng.below(3) as usize],
+            zeta: [0.0, 1e-5, 1e-3][rng.below(3) as usize],
+            clip_t: [0.01, 1.0, 100.0][rng.below(3) as usize],
+        };
+
+        let mut sg = SparseRows::new(v, d, ids.clone(), vals);
+        let mut dense = sg.to_dense();
+        let mut dense_counts = vec![0.0f32; v];
+        for (&id, &c) in ids.iter().zip(&sparse_counts) {
+            dense_counts[id as usize] = c;
+        }
+        clip_embedding_grads(mode, &mut dense, &w, &dense_counts, &schema, d, &p);
+        clip_embedding_grads_sparse(mode, &mut sg, &w, &sparse_counts, &schema, &p);
+        for (i, (a, b)) in sg.to_dense().iter().zip(&dense).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6,
+                "case {case} {mode}: elem {i}: sparse {a} vs dense {b}"
+            );
+        }
+    }
+}
+
 /// Invariant: tree all-reduce equals the sequential sum, regardless of
 /// worker count (f32 tolerance).
 #[test]
@@ -110,8 +155,8 @@ fn prop_allreduce_matches_sequential_sum() {
                 *wv += x as f64;
             }
             contributions.push(Contribution {
-                grads: vec![Tensor::f32(vec![len], g)],
-                counts: c,
+                grads: vec![GradTensor::Dense(Tensor::f32(vec![len], g))],
+                counts: SparseRows::from_dense(&c, vocab, 1),
                 loss_weighted: 0.5 / workers as f32,
                 weight: 1.0 / workers as f32,
             });
@@ -119,10 +164,11 @@ fn prop_allreduce_matches_sequential_sum() {
         let (total, stats) = tree_allreduce(contributions).unwrap();
         assert_eq!(stats.workers, workers);
         assert!(stats.rounds <= (workers as f64).log2().ceil() as usize + 1);
-        for (got, want) in total.grads[0].as_f32().unwrap().iter().zip(&want) {
+        let total_grad = total.grads[0].to_tensor();
+        for (got, want) in total_grad.as_f32().unwrap().iter().zip(&want) {
             assert!((*got as f64 - want).abs() < 1e-4, "{got} vs {want}");
         }
-        for (got, want) in total.counts.iter().zip(&want_counts) {
+        for (got, want) in total.counts.to_dense().iter().zip(&want_counts) {
             assert_eq!(*got as f64, *want);
         }
     }

@@ -1,0 +1,289 @@
+//! Dense ↔ sparse parity: the touched-rows gradient path must be
+//! elementwise-exact (≤ 1e-6) against the dense reference on every
+//! clipping mode, through accumulation and all-reduce, and lazy Adam
+//! must match eager Adam wherever their semantics coincide (every row
+//! touched every step).
+
+use cowclip::clip::{
+    clip_embedding_grads, clip_embedding_grads_sparse, ClipMode, ClipParams,
+};
+use cowclip::coordinator::allreduce::{tree_allreduce, Contribution};
+use cowclip::coordinator::{Engine, GradAccumulator, TrainConfig, Trainer};
+use cowclip::data::schema::{criteo_synth, Schema};
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::optim::{Adam, AdamConfig, LazyAdam};
+use cowclip::reference::{ModelKind, ReferenceEngine, ReferenceModel};
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::tensor::{GradTensor, SparseRows};
+use cowclip::util::Rng;
+
+const TOL: f32 = 1e-6;
+
+fn close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= TOL, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn test_schema() -> Schema {
+    Schema {
+        name: "parity".into(),
+        n_dense: 2,
+        vocab_sizes: vec![40, 25, 10, 3],
+    }
+}
+
+/// A Criteo-shaped sparse gradient: few touched rows, skewed counts.
+fn sparse_grad(schema: &Schema, d: usize, seed: u64) -> (SparseRows, Vec<f32>, Vec<f32>) {
+    let v = schema.total_vocab();
+    let mut rng = Rng::new(seed);
+    let ids: Vec<u32> = (0..v as u32).filter(|_| rng.bernoulli(0.25)).collect();
+    let counts: Vec<f32> = ids.iter().map(|_| 1.0 + rng.below(6) as f32).collect();
+    let vals: Vec<f32> = (0..ids.len() * d)
+        .map(|_| (rng.next_gaussian() * 2.0) as f32)
+        .collect();
+    let w: Vec<f32> = (0..v * d).map(|_| rng.next_gaussian() as f32 * 0.05).collect();
+    (SparseRows::new(v, d, ids, vals), counts, w)
+}
+
+/// Acceptance: all six clip modes agree dense vs sparse to 1e-6.
+#[test]
+fn clip_parity_all_six_modes() {
+    let schema = test_schema();
+    let d = 8;
+    for (mi, mode) in ClipMode::ALL.into_iter().enumerate() {
+        let (sg, counts, w) = sparse_grad(&schema, d, 100 + mi as u64);
+        let dense = sg.to_dense();
+        let mut dense_counts = vec![0.0f32; schema.total_vocab()];
+        for (&id, &c) in sg.ids().iter().zip(&counts) {
+            dense_counts[id as usize] = c;
+        }
+        for p in [
+            ClipParams::default(),
+            ClipParams { r: 0.5, zeta: 1e-4, clip_t: 0.1 },
+            ClipParams { r: 2.0, zeta: 0.0, clip_t: 10.0 },
+        ] {
+            let mut dense_run = dense.clone();
+            let mut sparse_run = sg.clone();
+            clip_embedding_grads(mode, &mut dense_run, &w, &dense_counts, &schema, d, &p);
+            clip_embedding_grads_sparse(mode, &mut sparse_run, &w, &counts, &schema, &p);
+            close(&sparse_run.to_dense(), &dense_run, &format!("clip {mode}"));
+        }
+    }
+}
+
+/// Acceptance: lazy Adam == eager Adam (1e-6/element) when every row is
+/// touched every step, across many steps and shapes.
+#[test]
+fn lazy_vs_eager_adam_parity() {
+    let cfg = AdamConfig::default();
+    let eager = Adam::new(cfg);
+    let n_rows = 17;
+    let d = 5;
+    let mut lazy = LazyAdam::new(cfg, n_rows);
+    let mut rng = Rng::new(7);
+    let n = n_rows * d;
+    let mut we: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+    let mut me = vec![0.0f32; n];
+    let mut ve = vec![0.0f32; n];
+    let (mut wl, mut ml, mut vl) = (we.clone(), me.clone(), ve.clone());
+    let ids: Vec<u32> = (0..n_rows as u32).collect();
+    for t in 1..=200u32 {
+        let g: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        eager.step(&mut we, &mut me, &mut ve, &g, 2e-3, t as f32);
+        lazy.step_rows(&mut wl, &mut ml, &mut vl, &ids, &g, d, 2e-3, t);
+    }
+    close(&we, &wl, "w");
+    close(&me, &ml, "m");
+    close(&ve, &vl, "v");
+}
+
+/// Lazy Adam's closed-form catch-up reproduces the eager moment
+/// trajectory exactly under skipped (zero-grad) steps.
+#[test]
+fn lazy_adam_moment_catchup_is_exact() {
+    let cfg = AdamConfig::default();
+    let eager = Adam::new(cfg);
+    let mut lazy = LazyAdam::new(cfg, 2);
+    let d = 1;
+    let (mut we, mut me, mut ve) = (vec![0.2f32, -0.3], vec![0.0f32; 2], vec![0.0f32; 2]);
+    let (mut wl, mut ml, mut vl) = (we.clone(), me.clone(), ve.clone());
+    // row 0 touched at steps {1, 7}; row 1 at every step
+    for t in 1..=7u32 {
+        let g0 = if t == 1 || t == 7 { 0.8 } else { 0.0 };
+        eager.step(&mut we, &mut me, &mut ve, &[g0, -0.5], 0.01, t as f32);
+        if t == 1 || t == 7 {
+            lazy.step_rows(&mut wl, &mut ml, &mut vl, &[0, 1], &[g0, -0.5], d, 0.01, t);
+        } else {
+            lazy.step_rows(&mut wl, &mut ml, &mut vl, &[1], &[-0.5], d, 0.01, t);
+        }
+    }
+    // moments agree on both rows
+    close(&me, &ml, "m");
+    for (i, (&a, &b)) in ve.iter().zip(&vl).enumerate() {
+        assert!((a - b).abs() <= 1e-7, "v[{i}]: {a} vs {b}");
+    }
+    // the always-touched row's weight agrees exactly too
+    assert!((we[1] - wl[1]).abs() <= TOL, "w[1]: {} vs {}", we[1], wl[1]);
+}
+
+/// Accumulating k sparse microbatches equals accumulating the same
+/// gradients densified, elementwise.
+#[test]
+fn accumulation_parity_sparse_vs_dense() {
+    let schema = test_schema();
+    let v = schema.total_vocab();
+    let d = 4;
+    let k = 8;
+    let mut sparse_acc = GradAccumulator::new(v);
+    let mut dense_acc = GradAccumulator::new(v);
+    for i in 0..k {
+        let (sg, counts, _) = sparse_grad(&schema, d, 200 + i);
+        let sparse_counts = SparseRows::new(v, 1, sg.ids().to_vec(), counts);
+        let out_sparse = cowclip::reference::GradOutput {
+            grads: vec![GradTensor::Sparse(sg.clone())],
+            counts: sparse_counts.clone(),
+            loss: 0.5,
+        };
+        let out_dense = cowclip::reference::GradOutput {
+            grads: vec![GradTensor::Dense(sg.to_tensor())],
+            counts: sparse_counts,
+            loss: 0.5,
+        };
+        sparse_acc.add(&out_sparse, 1.0 / k as f64).unwrap();
+        dense_acc.add(&out_dense, 1.0 / k as f64).unwrap();
+    }
+    let (gs, cs, ls) = sparse_acc.finish().unwrap();
+    let (gd, cd, ld) = dense_acc.finish().unwrap();
+    assert!(matches!(gs[0], GradTensor::Sparse(_)), "sparse path densified");
+    close(
+        gs[0].to_tensor().as_f32().unwrap(),
+        gd[0].to_tensor().as_f32().unwrap(),
+        "accumulated grad",
+    );
+    close(&cs.to_dense(), &cd.to_dense(), "accumulated counts");
+    assert!((ls - ld).abs() <= TOL);
+}
+
+/// Tree all-reduce over sparse contributions equals the dense reduce,
+/// and moves strictly fewer bytes.
+#[test]
+fn allreduce_parity_and_traffic_saving() {
+    let schema = test_schema();
+    let v = schema.total_vocab();
+    let d = 4;
+    let workers = 4;
+    let mut sparse_contribs = Vec::new();
+    let mut dense_contribs = Vec::new();
+    for r in 0..workers {
+        let (sg, counts, _) = sparse_grad(&schema, d, 300 + r);
+        let sc = SparseRows::new(v, 1, sg.ids().to_vec(), counts);
+        sparse_contribs.push(Contribution {
+            grads: vec![GradTensor::Sparse(sg.clone())],
+            counts: sc.clone(),
+            loss_weighted: 0.1 / workers as f32,
+            weight: 1.0 / workers as f32,
+        });
+        dense_contribs.push(Contribution {
+            grads: vec![GradTensor::Dense(sg.to_tensor())],
+            counts: sc,
+            loss_weighted: 0.1 / workers as f32,
+            weight: 1.0 / workers as f32,
+        });
+    }
+    let (ts, ss) = tree_allreduce(sparse_contribs).unwrap();
+    let (td, sd) = tree_allreduce(dense_contribs).unwrap();
+    close(
+        ts.grads[0].to_tensor().as_f32().unwrap(),
+        td.grads[0].to_tensor().as_f32().unwrap(),
+        "reduced grad",
+    );
+    close(&ts.counts.to_dense(), &td.counts.to_dense(), "reduced counts");
+    assert!(
+        ss.bytes_moved < sd.bytes_moved,
+        "sparse all-reduce should move fewer bytes: {} vs {}",
+        ss.bytes_moved,
+        sd.bytes_moved
+    );
+}
+
+/// The reference model's sparse counts match a dense recount of the
+/// batch, and the sparse embed gradient's support is exactly the
+/// touched-id set.
+#[test]
+fn reference_grad_sparse_support_is_exact() {
+    let schema = test_schema();
+    let model = ReferenceModel::new(ModelKind::DeepFm, schema.clone(), 6, vec![16, 16], 2);
+    let engine = ReferenceEngine::new(model, ClipMode::CowClip);
+    let ds = generate(&schema, &SynthConfig { n: 400, seed: 11, ..Default::default() });
+    let mut batcher = cowclip::data::batcher::Batcher::new(&ds, 64, 3);
+    let batch = batcher.next_batch();
+    let spec = engine.spec();
+    let params = cowclip::model::init_params(
+        &spec,
+        &cowclip::model::InitConfig { seed: 5, embed_sigma: 0.01 },
+    );
+    let out = engine.grad(&params, &batch).unwrap();
+
+    let mut dense_counts = vec![0.0f32; schema.total_vocab()];
+    for &id in batch.x_cat.as_i32().unwrap() {
+        dense_counts[id as usize] += 1.0;
+    }
+    close(&out.counts.to_dense(), &dense_counts, "counts");
+    match &out.grads[0] {
+        GradTensor::Sparse(s) => {
+            let expected: Vec<u32> = dense_counts
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0.0)
+                .map(|(i, _)| i as u32)
+                .collect();
+            assert_eq!(s.ids(), expected.as_slice(), "embed grad support");
+        }
+        GradTensor::Dense(_) => panic!("reference embed grad should be sparse"),
+    }
+}
+
+/// End to end: the sparse trainer path learns (loss falls, finite AUC)
+/// through Trainer -> workers -> accumulate -> all-reduce -> sparse
+/// apply, with multiple workers.
+#[test]
+fn e2e_sparse_pipeline_trains() {
+    let schema = criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n: 3000, seed: 9, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+    let preset = criteo_preset();
+    let engine = Engine::reference(
+        ModelKind::DeepFm,
+        schema,
+        8,
+        vec![32, 32],
+        2,
+        ClipMode::CowClip,
+    );
+    let cfg = TrainConfig {
+        batch: 128,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 1.0,
+        workers: 4,
+        warmup_steps: 0,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    let report = trainer.train(&train, &test).unwrap();
+    assert!(!report.diverged);
+    assert!(report.final_auc.is_finite());
+    let head: f32 = report.train_loss_curve[..3].iter().sum::<f32>() / 3.0;
+    let n = report.train_loss_curve.len();
+    let tail: f32 = report.train_loss_curve[n - 3..].iter().sum::<f32>() / 3.0;
+    assert!(tail < head, "loss should fall on the sparse path: {head} -> {tail}");
+    assert!(report.reduce_stats.bytes_moved > 0);
+}

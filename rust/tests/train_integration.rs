@@ -15,6 +15,10 @@ use cowclip::scaling::presets::criteo_preset;
 use cowclip::scaling::rules::ScalingRule;
 
 fn runtime() -> Option<Arc<Runtime>> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts (run `make artifacts`)");
