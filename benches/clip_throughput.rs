@@ -58,12 +58,12 @@ fn main() {
         }
     }
     // derive the touched-id support exactly the way the trainer does
-    let batch = Batch {
-        x_cat: Tensor::i32(vec![batch_rows, schema.n_cat()], batch_ids),
-        x_dense: Tensor::f32(vec![batch_rows, 0], vec![]),
-        y: Tensor::f32(vec![batch_rows], vec![0.0; batch_rows]),
-        valid: batch_rows,
-    };
+    let batch = Batch::new(
+        Tensor::i32(vec![batch_rows, schema.n_cat()], batch_ids),
+        Tensor::f32(vec![batch_rows, 0], vec![]),
+        Tensor::f32(vec![batch_rows], vec![0.0; batch_rows]),
+        batch_rows,
+    );
     let (ids, sparse_counts) = batch.touched().unwrap();
     let touched = ids.len();
     let g_sparse0 = SparseRows::gather(&g0, v, d, ids);

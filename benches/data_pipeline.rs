@@ -1,12 +1,92 @@
-//! Data-pipeline throughput: synthesis, batching, top-k transform. The
-//! coordinator's data phase must stay <10% of step time (EXPERIMENTS.md
-//! §Perf).
+//! Data-pipeline throughput: synthesis, batching, top-k transform, and
+//! the double-buffered prefetcher. The coordinator's data phase must
+//! stay <10% of step time (EXPERIMENTS.md §Perf); the prefetch arms
+//! measure how much of it the background thread hides when the consumer
+//! is busy (as the trainer is).
 
-use cowclip::data::batcher::Batcher;
+use cowclip::data::batcher::{Batch, Batcher};
+use cowclip::data::prefetch::Prefetch;
 use cowclip::data::schema::criteo_synth;
+use cowclip::data::stream::StreamReader;
 use cowclip::data::synth::{generate, SynthConfig};
 use cowclip::data::transform::topk_collapse;
+use cowclip::data::Dataset;
 use cowclip::util::bench::{bench, throughput};
+
+/// Stand-in for a training step: consume the batch (touched-id sort plus
+/// a dense checksum) so the producer thread has something to overlap.
+fn consume(b: &Batch) -> f64 {
+    let (ids, counts) = b.touched().unwrap();
+    let mut acc = ids.len() as f64;
+    for c in counts {
+        acc += c as f64;
+    }
+    for &x in b.x_dense.as_f32().unwrap() {
+        acc += x as f64;
+    }
+    acc
+}
+
+/// Time one batch source inline vs behind a depth-2 [`Prefetch`] (whose
+/// producer also warms the touched cache), and print the overlap win.
+/// `mk` must yield the same sequence on every call.
+fn overlap_arm<I, F>(what: &str, mk: F)
+where
+    F: Fn() -> I,
+    I: Iterator<Item = Batch> + Send,
+{
+    let t0 = std::time::Instant::now();
+    let mut inline_sink = 0.0f64;
+    for b in mk() {
+        inline_sink += consume(&b);
+    }
+    let inline_s = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let prefetched_sink = std::thread::scope(|s| {
+        let feed = Prefetch::spawn(
+            s,
+            mk().map(|b| {
+                let _ = b.touched(); // warm the cache on the producer
+                b
+            }),
+            2,
+        );
+        let mut acc = 0.0f64;
+        while let Some(b) = feed.recv() {
+            acc += consume(&b);
+        }
+        acc
+    });
+    let prefetch_s = t0.elapsed().as_secs_f64();
+    assert_eq!(inline_sink, prefetched_sink, "{what}: prefetch changed the data");
+    println!(
+        "    {what}: inline {:.3}s   prefetched {:.3}s   speedup {:.2}x",
+        inline_s,
+        prefetch_s,
+        inline_s / prefetch_s.max(1e-9)
+    );
+    std::hint::black_box(inline_sink);
+}
+
+fn prefetch_arms(ds: &Dataset) {
+    let batch = 4096usize;
+    let steps = 40usize;
+    println!("  -- prefetch overlap (batch {batch}) --");
+
+    overlap_arm("in-memory batcher ", || {
+        let mut b = Batcher::new(ds, batch, 7);
+        (0..steps).map(move |_| b.next_batch())
+    });
+
+    let dir = std::env::temp_dir().join(format!("ctr_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pipeline.ctr");
+    ds.save(&path).unwrap();
+    let r = StreamReader::open(&path).unwrap();
+    overlap_arm("streamed from disk", || r.epoch(batch, 3).map(|b| b.unwrap()));
+    std::fs::remove_dir_all(&dir).ok();
+}
 
 fn main() {
     println!("== data_pipeline ==");
@@ -28,6 +108,8 @@ fn main() {
         });
         println!("    rows/s: {:.1}M", throughput(&r, batch) / 1e6);
     }
+
+    prefetch_arms(&ds);
 
     let r = bench("topk_collapse k=3 (50k rows)", 1, 3, || {
         std::hint::black_box(topk_collapse(&ds, 3));

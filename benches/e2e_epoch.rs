@@ -4,9 +4,17 @@
 //! touched-rows embedding path vs the legacy dense O(V·d) path — the
 //! speedup the coordinator refactor buys on the optimizer side.
 //!
-//! Arm 2 (needs `make artifacts` + the `pjrt` feature): full training
+//! Arm 2 (always runs): the threaded execution engine — 4 logical
+//! workers fanned out over 1/2/4 threads with reduce-as-ready merging
+//! and the prefetching data pipeline, reporting step-throughput speedup
+//! over the sequential baseline (target: ≥1.5x at 4 workers).
+//!
+//! Arm 3 (needs `make artifacts` + the `pjrt` feature): full training
 //! epochs through the AOT/PJRT path per batch size, reporting wall time
 //! and the speedup series.
+//!
+//! `-- --smoke` runs only a tiny threaded-arm config (CI compile+run
+//! gate, a few seconds).
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
@@ -26,12 +34,63 @@ fn reference_cfg(batch: usize) -> TrainConfig {
         rule: ScalingRule::CowClip,
         epochs: 1.0,
         workers: 1,
+        threads: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,
         eval_every_epochs: 0,
         verbose: false,
     }
+}
+
+fn reference_engine(schema: &cowclip::data::Schema) -> Engine {
+    Engine::Reference(ReferenceEngine::new(
+        ReferenceModel::new(ModelKind::DeepFm, schema.clone(), 10, vec![64, 64], 2),
+        ClipMode::CowClip,
+    ))
+}
+
+/// Threaded arm: 4 logical workers, sequential vs 2 vs 4 threads. The
+/// same batches, the same rank-ordered merges — only the overlap of
+/// shard gradients, reduction, and batch prefetch changes.
+fn reference_threaded_speedup(smoke: bool) {
+    let schema = cowclip::data::schema::criteo_synth();
+    let n = if smoke { 6_000 } else { 20_000 };
+    let batch = if smoke { 512 } else { 2048 };
+    let ds = generate(&schema, &SynthConfig { n, seed: 2, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    println!("== e2e_epoch (reference engine): threaded workers vs sequential ==");
+    println!(
+        "{:>8} {:>8} {:>8} {:>10} {:>10} {:>10} {:>9}",
+        "batch", "workers", "threads", "steps", "step s", "data s", "speedup"
+    );
+    let mut base = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let mut cfg = reference_cfg(batch);
+        cfg.workers = 4;
+        cfg.threads = threads;
+        let mut trainer = Trainer::new(reference_engine(&schema), cfg).unwrap();
+        let report = trainer.train(&train, &test).unwrap();
+        let t = report.seconds("step").max(1e-9);
+        if threads == 1 {
+            base = t;
+        }
+        println!(
+            "{:>8} {:>8} {:>8} {:>10} {:>10.2} {:>10.2} {:>8.2}x",
+            batch,
+            4,
+            threads,
+            report.steps,
+            t,
+            report.seconds("data"),
+            base / t
+        );
+    }
+    println!(
+        "(speedup = sequential step time / threaded step time; batches and \
+         results are identical across rows — see rust/tests/parallel_parity.rs)\n"
+    );
 }
 
 fn reference_sparse_vs_dense() {
@@ -116,6 +175,7 @@ fn hlo_epochs() {
             rule: ScalingRule::CowClip,
             epochs: 1.0,
             workers: 1,
+            threads: 1,
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: 1234,
@@ -141,6 +201,12 @@ fn hlo_epochs() {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        reference_threaded_speedup(true);
+        return;
+    }
     reference_sparse_vs_dense();
+    reference_threaded_speedup(false);
     hlo_epochs();
 }

@@ -36,6 +36,7 @@ fn main() {
             rule: ScalingRule::CowClip,
             epochs: 1.0,
             workers: 1,
+            threads: 1, // sequential: this bench times the raw step
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: 1,

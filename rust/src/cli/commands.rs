@@ -27,8 +27,9 @@ USAGE:
   cowclip train      [--model deepfm|wd|dcn|dcnv2] [--schema S] [--batch B]
                      [--rule none|sqrt|sqrt_star|linear|n2_lambda|cowclip]
                      [--clip none|global|field|column|adafield|cowclip]
-                     [--epochs E] [--n N] [--workers W] [--seq-split]
+                     [--epochs E] [--n N] [--workers W] [--threads T] [--seq-split]
                      [--engine hlo|reference] [--seed S] [--save CKPT]
+                     (--threads 0 = one per core [default]; 1 = sequential)
   cowclip eval       --ckpt FILE --data FILE [--model M] [--batch B]
   cowclip experiment <id|all|quick> [--n N] [--epochs E] [--seed S] [--out DIR]
   cowclip artifacts  check
@@ -141,6 +142,7 @@ fn train_cmd(args: &Args) -> Result<()> {
     let epochs = args.f64_or("epochs", 3.0)?;
     let n = args.usize_or("n", 100_000)?;
     let workers = args.usize_or("workers", 1)?;
+    let threads = args.usize_or("threads", 0)?;
     let seed = args.u64_or("seed", 1234)?;
     let engine_kind = args.str_or("engine", default_engine());
 
@@ -177,6 +179,7 @@ fn train_cmd(args: &Args) -> Result<()> {
         rule,
         epochs,
         workers,
+        threads,
         warmup_steps: if use_cowclip_preset { steps_per_epoch } else { 0 },
         init_sigma,
         seed,
@@ -184,9 +187,10 @@ fn train_cmd(args: &Args) -> Result<()> {
         verbose: true,
     };
     println!(
-        "training {model} on {schema_name}: batch {batch} (scale {:.0}x), rule {rule}, clip {clip}, {} workers, {} steps/epoch",
+        "training {model} on {schema_name}: batch {batch} (scale {:.0}x), rule {rule}, clip {clip}, {} workers on {} threads, {} steps/epoch",
         cfg.scale(),
         workers,
+        cfg.threads_for(workers),
         steps_per_epoch
     );
     let mut trainer = Trainer::new(engine, cfg)?;
@@ -199,7 +203,7 @@ fn train_cmd(args: &Args) -> Result<()> {
     }
     if report.reduce_stats.workers > 1 {
         println!(
-            "  all-reduce: {} rounds, {:.1} MiB moved",
+            "  all-reduce: {} merges, {:.1} MiB moved",
             report.reduce_stats.rounds,
             report.reduce_stats.bytes_moved as f64 / (1 << 20) as f64
         );
@@ -258,15 +262,12 @@ fn eval_cmd(args: &Args) -> Result<()> {
                 dense.extend_from_slice(extra.x_dense.as_f32()?);
                 y.push(extra.y.as_f32()?[0]);
             }
-            b = crate::data::batcher::Batch {
-                x_cat: crate::tensor::Tensor::i32(vec![eval_batch, reader.schema.n_cat()], cat),
-                x_dense: crate::tensor::Tensor::f32(
-                    vec![eval_batch, reader.schema.n_dense],
-                    dense,
-                ),
-                y: crate::tensor::Tensor::f32(vec![eval_batch], y),
+            b = crate::data::batcher::Batch::new(
+                crate::tensor::Tensor::i32(vec![eval_batch, reader.schema.n_cat()], cat),
+                crate::tensor::Tensor::f32(vec![eval_batch, reader.schema.n_dense], dense),
+                crate::tensor::Tensor::f32(vec![eval_batch], y),
                 valid,
-            };
+            );
         }
         let logits = engine.fwd(&params, &b)?;
         acc.push(&logits, b.y.as_f32()?, b.valid);

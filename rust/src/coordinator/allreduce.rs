@@ -13,6 +13,8 @@
 //! TeraByte-scale framework gets from exchanging touched rows instead of
 //! whole tables.
 
+use std::collections::BTreeMap;
+
 use anyhow::{ensure, Result};
 
 use crate::tensor::{GradTensor, SparseRows};
@@ -74,6 +76,82 @@ pub fn tree_allreduce(
         total.weight
     );
     Ok((total, stats))
+}
+
+/// Reduce-as-ready: contributions stream in (over a channel, in whatever
+/// order the worker threads finish) and merge **eagerly but always in
+/// rank order**, so the slowest shard's gradient computation overlaps the
+/// reduction of everything before it while the result stays bitwise
+/// identical to a sequential rank-0..W-1 fold — which is what makes
+/// threaded and sequential training runs agree to the last ulp (see
+/// `rust/tests/parallel_parity.rs`).
+///
+/// Out-of-order arrivals park in a rank-keyed buffer until their
+/// predecessors have merged. `rounds` counts pairwise merges (`W - 1`
+/// for a full reduce) and `bytes_moved` the sparse payload traffic, same
+/// accounting as [`tree_allreduce`].
+pub struct StreamingReducer {
+    workers: usize,
+    next_rank: usize,
+    pending: BTreeMap<usize, Contribution>,
+    total: Option<Contribution>,
+    stats: ReduceStats,
+}
+
+impl StreamingReducer {
+    pub fn new(workers: usize) -> StreamingReducer {
+        StreamingReducer {
+            workers,
+            next_rank: 0,
+            pending: BTreeMap::new(),
+            total: None,
+            stats: ReduceStats { rounds: 0, bytes_moved: 0, workers },
+        }
+    }
+
+    /// Ranks merged into the running total so far.
+    pub fn merged(&self) -> usize {
+        self.next_rank
+    }
+
+    /// Hand over `rank`'s contribution; merges every consecutive rank
+    /// that is now available.
+    pub fn push(&mut self, rank: usize, c: Contribution) -> Result<()> {
+        ensure!(rank < self.workers, "rank {rank} out of range for {} workers", self.workers);
+        ensure!(
+            rank >= self.next_rank && !self.pending.contains_key(&rank),
+            "duplicate contribution for rank {rank}"
+        );
+        self.pending.insert(rank, c);
+        while let Some(next) = self.pending.remove(&self.next_rank) {
+            match &mut self.total {
+                None => self.total = Some(next),
+                Some(t) => {
+                    self.stats.rounds += 1;
+                    self.stats.bytes_moved += merge(t, &next)?;
+                }
+            }
+            self.next_rank += 1;
+        }
+        Ok(())
+    }
+
+    /// Finish: all ranks must have arrived and weights must sum to ~1.
+    pub fn finish(self) -> Result<(Contribution, ReduceStats)> {
+        ensure!(
+            self.next_rank == self.workers,
+            "only {}/{} contributions arrived",
+            self.next_rank,
+            self.workers
+        );
+        let total = self.total.ok_or_else(|| anyhow::anyhow!("no contributions"))?;
+        ensure!(
+            (total.weight - 1.0).abs() < 1e-3,
+            "worker weights sum to {} != 1",
+            total.weight
+        );
+        Ok((total, self.stats))
+    }
 }
 
 #[cfg(test)]
@@ -153,5 +231,59 @@ mod tests {
     fn mismatched_weights_rejected() {
         let cs = vec![contrib(1.0, 0.3), contrib(1.0, 0.3)];
         assert!(tree_allreduce(cs).is_err());
+    }
+
+    #[test]
+    fn streaming_reducer_is_arrival_order_invariant() {
+        // same four contributions, three different arrival orders — the
+        // totals must be identical because merges happen in rank order
+        let mk = |v: f32| contrib(v, 0.25);
+        let vals = [0.1f32, 0.2, 0.3, 0.4];
+        let mut totals = Vec::new();
+        for order in [[0usize, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]] {
+            let mut r = StreamingReducer::new(4);
+            for rank in order {
+                r.push(rank, mk(vals[rank])).unwrap();
+            }
+            let (total, stats) = r.finish().unwrap();
+            assert_eq!(stats.rounds, 3, "W-1 merges");
+            assert_eq!(stats.workers, 4);
+            assert!(stats.bytes_moved > 0);
+            totals.push(total.grads[0].to_tensor().as_f32().unwrap().to_vec());
+        }
+        assert_eq!(totals[0], totals[1]);
+        assert_eq!(totals[0], totals[2]);
+    }
+
+    #[test]
+    fn streaming_reducer_matches_sequential_fold() {
+        let cs: Vec<Contribution> =
+            (0..3).map(|r| sparse_contrib(10 * r + 1, 1.0 / 3.0, 1.0 / 3.0)).collect();
+        let mut r = StreamingReducer::new(3);
+        for (rank, c) in cs.clone().into_iter().enumerate() {
+            r.push(rank, c).unwrap();
+        }
+        let (total, _) = r.finish().unwrap();
+        // manual rank-ordered fold
+        let mut want = cs[0].clone();
+        merge(&mut want, &cs[1]).unwrap();
+        merge(&mut want, &cs[2]).unwrap();
+        assert_eq!(
+            total.grads[0].to_tensor().as_f32().unwrap(),
+            want.grads[0].to_tensor().as_f32().unwrap()
+        );
+        assert!(matches!(total.grads[0], GradTensor::Sparse(_)));
+    }
+
+    #[test]
+    fn streaming_reducer_rejects_incomplete_and_duplicates() {
+        let mut r = StreamingReducer::new(2);
+        r.push(0, contrib(0.5, 0.5)).unwrap();
+        assert!(r.push(0, contrib(0.5, 0.5)).is_err(), "duplicate rank");
+        assert!(r.push(5, contrib(0.5, 0.5)).is_err(), "rank out of range");
+        let mut r = StreamingReducer::new(2);
+        r.push(1, contrib(0.5, 0.5)).unwrap();
+        assert_eq!(r.merged(), 0, "rank 1 parks until rank 0 lands");
+        assert!(r.finish().is_err(), "missing rank 0");
     }
 }

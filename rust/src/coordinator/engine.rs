@@ -15,6 +15,11 @@ use crate::runtime::{HypersVec, Program, Runtime};
 use crate::tensor::{GradTensor, SparseRows, Tensor};
 
 /// A training engine: grad / apply / fwd over positional parameters.
+///
+/// `grad` and `fwd` take `&self` and every variant is `Sync` (asserted
+/// below), so the trainer's fan-out shares one `&Engine` across worker
+/// threads; only `apply` needs `&mut self` (optimizer state) and runs on
+/// the leader thread.
 pub enum Engine {
     /// AOT HLO programs through PJRT (the production path).
     Hlo(HloEngine),
@@ -299,6 +304,21 @@ impl HloEngine {
         Ok(out[0].as_f32()?.to_vec())
     }
 }
+
+// Thread-safety audit for the parallel fan-out: both engines must stay
+// shareable across worker threads. The reference engine is plain data;
+// the HLO path holds `Arc<Runtime>`/`Arc<Program>` whose only interior
+// mutability (the compiled-program cache) is behind a `Mutex`. If a
+// backend ever loses `Sync`, this fails to compile instead of breaking
+// `Trainer::train_step` at a distance.
+#[allow(dead_code)]
+const _: () = {
+    fn assert_sync<T: Sync>() {}
+    fn engines_are_shareable() {
+        assert_sync::<Engine>();
+        assert_sync::<HloEngine>();
+    }
+};
 
 /// Helper: pull (embed_dim, hidden, n_cross) out of the manifest.
 trait ManifestExt {

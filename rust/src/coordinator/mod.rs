@@ -6,11 +6,17 @@
 //! * **Large-batch composition** ([`accumulate`]): an effective batch of
 //!   `s·b` is assembled by accumulating `s` microbatch gradients *and
 //!   occurrence counts*, which is exactly Alg. 1's full-batch semantics.
-//! * **Simulated data parallelism** ([`worker`], [`allreduce`]): logical
-//!   workers compute shard gradients; a binary-tree all-reduce combines
-//!   them, with traffic accounting (the paper's multi-GPU extension).
-//! * **The training loop** ([`trainer`]): scaling rules, warmup, eval,
-//!   checkpoints, timing.
+//! * **Parallel data parallelism** ([`worker`], [`allreduce`]): logical
+//!   workers compute shard gradients on a scoped thread pool and stream
+//!   them into a rank-ordered reduce-as-ready merge
+//!   ([`allreduce::StreamingReducer`]) that overlaps reduction with the
+//!   slowest shard's compute, with traffic accounting (the paper's
+//!   multi-GPU extension); [`allreduce::tree_allreduce`] keeps the
+//!   binary-tree cost model for traffic studies.
+//! * **The training loop** ([`trainer`]): scaling rules, warmup,
+//!   prefetched batches, parallel eval, checkpoints, timing. See the
+//!   [`trainer`] module docs for the threading model and determinism
+//!   guarantees.
 
 pub mod accumulate;
 pub mod allreduce;
@@ -19,7 +25,7 @@ pub mod trainer;
 pub mod worker;
 
 pub use accumulate::GradAccumulator;
-pub use allreduce::{tree_allreduce, ReduceStats};
+pub use allreduce::{tree_allreduce, ReduceStats, StreamingReducer};
 pub use engine::{Engine, HloEngine};
 pub use trainer::{TrainConfig, TrainReport, Trainer};
-pub use worker::WorkerShard;
+pub use worker::{BatchSlice, WorkerShard};

@@ -1,13 +1,38 @@
 //! The end-to-end training loop: scaling rule → warmup → shard → grad →
 //! all-reduce → apply → eval, with timing broken down per phase.
+//!
+//! # Threading model
+//!
+//! The leader owns `ParamSet` (params + Adam moments) exclusively. Each
+//! step has three phases with different concurrency:
+//!
+//! 1. **Fan-out** — `WorkerShard::compute` runs on up to
+//!    [`TrainConfig::threads`] scoped threads, every worker sharing one
+//!    `&Engine` / `&ParamSet` / `&Batch` (all `Sync`; `Engine::grad` is
+//!    `&self`).
+//! 2. **Reduce-as-ready** — finished contributions stream over a channel
+//!    into a [`StreamingReducer`] on the leader thread, which merges them
+//!    eagerly *in rank order*: the slowest shard's gradient overlaps the
+//!    reduction of everything before it, and the fixed merge order keeps
+//!    results bitwise identical to a sequential run at any thread count.
+//! 3. **Apply** — stays single-threaded on the leader: the optimizer
+//!    mutates params and per-row lazy-Adam state in place, and a serial
+//!    apply is both cheap (O(touched·d)) and trivially deterministic.
+//!
+//! A scoped prefetch thread ([`Prefetch`]) materializes batch `N+1` —
+//! including the `Batch::touched` sort — while step `N` trains, so the
+//! `data` entry of `phase_seconds` shows only the un-overlapped residual.
+
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use super::allreduce::{tree_allreduce, ReduceStats};
+use super::allreduce::{Contribution, ReduceStats, StreamingReducer};
 use super::engine::Engine;
 use super::worker::WorkerShard;
-use crate::data::batcher::{Batcher, EvalBatcher};
+use crate::data::batcher::{Batch, Batcher, EvalBatcher};
 use crate::data::dataset::Dataset;
+use crate::data::prefetch::Prefetch;
 use crate::metrics::{EvalAccumulator, LossMeter};
 use crate::model::init::{init_params, InitConfig};
 use crate::model::params::ParamSet;
@@ -30,6 +55,12 @@ pub struct TrainConfig {
     pub epochs: f64,
     /// Logical data-parallel workers.
     pub workers: usize,
+    /// Compute threads for the worker fan-out, parallel eval, and the
+    /// batch prefetcher: `1` = fully sequential (the seed behavior),
+    /// `0` = auto (one thread per available core, capped by the work).
+    /// The thread count never changes the math — contributions merge in
+    /// rank order regardless of arrival order.
+    pub threads: usize,
     /// Warmup steps on the dense LR (0 = none).
     pub warmup_steps: usize,
     /// Embedding init sigma.
@@ -52,6 +83,16 @@ impl TrainConfig {
     pub fn scaled_hypers(&self) -> HyperSet {
         self.rule.apply(&self.base_hypers, self.scale())
     }
+
+    /// Resolve the thread count for a stage with `max_units` independent
+    /// units of work (shards for the fan-out, batches for eval).
+    pub fn threads_for(&self, max_units: usize) -> usize {
+        let cap = match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            t => t,
+        };
+        cap.min(max_units).max(1)
+    }
 }
 
 /// Per-epoch evaluation snapshot.
@@ -72,7 +113,7 @@ pub struct TrainReport {
     pub train_loss_curve: Vec<f32>,
     pub epoch_evals: Vec<EpochEval>,
     pub reduce_stats: ReduceStats,
-    /// (phase, seconds) totals: grad / reduce / apply / data / eval.
+    /// (phase, seconds) totals: data / step / eval.
     pub phase_seconds: Vec<(String, f64)>,
     pub wall_seconds: f64,
     pub diverged: bool,
@@ -96,6 +137,10 @@ pub struct Trainer {
     pub m: ParamSet,
     pub v: ParamSet,
     step: usize,
+    /// Loop-invariant resolved hypers (scaling rule already applied).
+    hypers: HyperSet,
+    /// Loop-invariant warmup schedule.
+    warmup: Warmup,
 }
 
 impl Trainer {
@@ -106,7 +151,9 @@ impl Trainer {
         let params = init_params(&spec, &InitConfig { seed: cfg.seed, embed_sigma: cfg.init_sigma });
         let m = params.zeros_like();
         let v = params.zeros_like();
-        Ok(Trainer { engine, cfg, params, m, v, step: 0 })
+        let hypers = cfg.scaled_hypers();
+        let warmup = Warmup::new(cfg.warmup_steps);
+        Ok(Trainer { engine, cfg, params, m, v, step: 0, hypers, warmup })
     }
 
     pub fn step(&self) -> usize {
@@ -114,21 +161,62 @@ impl Trainer {
     }
 
     /// One optimizer step on a prepared batch. Returns the batch loss.
-    pub fn train_step(&mut self, batch: &crate::data::batcher::Batch) -> Result<(f32, ReduceStats)> {
+    ///
+    /// Fan-out runs on `threads_for(workers)` scoped threads (ranks are
+    /// strided across threads so low ranks — merged first — finish
+    /// first); the reduction happens on this thread as contributions
+    /// arrive. `apply` then runs serially (see module docs).
+    ///
+    /// Threads are scoped per step: spawn cost is tens of µs against the
+    /// multi-ms shard gradients of the large batches this engine targets.
+    /// If µs-scale stepping ever matters, hoist a persistent pool to the
+    /// `train()` scope (noted in ROADMAP).
+    pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, ReduceStats)> {
         self.step += 1;
-        let hypers = self.cfg.scaled_hypers();
-        let warmup = Warmup::new(self.cfg.warmup_steps);
-        let hv = HypersVec::new(hypers)
+        let hv = HypersVec::new(self.hypers)
             .at_step(self.step)
-            .with_warmup(warmup.factor(self.step - 1));
+            .with_warmup(self.warmup.factor(self.step - 1));
 
-        // workers compute shard contributions
-        let mut contributions = Vec::with_capacity(self.cfg.workers);
-        for rank in 0..self.cfg.workers {
-            let shard = WorkerShard::new(rank, self.cfg.workers);
-            contributions.push(shard.compute(&self.engine, &self.params, batch)?);
-        }
-        let (total, stats) = tree_allreduce(contributions)?;
+        let workers = self.cfg.workers;
+        let threads = self.cfg.threads_for(workers);
+        let (total, stats) = if threads <= 1 {
+            // sequential fan-out, same rank-ordered reduce
+            let mut reducer = StreamingReducer::new(workers);
+            for rank in 0..workers {
+                let c = WorkerShard::new(rank, workers)
+                    .compute(&self.engine, &self.params, batch)?;
+                reducer.push(rank, c)?;
+            }
+            reducer.finish()?
+        } else {
+            let engine = &self.engine;
+            let params = &self.params;
+            std::thread::scope(|s| -> Result<(Contribution, ReduceStats)> {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for t in 0..threads {
+                    let tx = tx.clone();
+                    s.spawn(move || {
+                        let mut rank = t;
+                        while rank < workers {
+                            let c = WorkerShard::new(rank, workers)
+                                .compute(engine, params, batch);
+                            let failed = c.is_err();
+                            if tx.send((rank, c)).is_err() || failed {
+                                return;
+                            }
+                            rank += threads;
+                        }
+                    });
+                }
+                drop(tx); // reducer's recv loop ends when workers do
+                let mut reducer = StreamingReducer::new(workers);
+                for (rank, c) in rx {
+                    reducer.push(rank, c?)?;
+                }
+                reducer.finish()
+            })?
+        };
+
         let mut grads = total.grads;
         self.engine.apply(
             &mut self.params,
@@ -141,7 +229,10 @@ impl Trainer {
         Ok((total.loss_weighted, stats))
     }
 
-    /// Evaluate AUC/logloss on a dataset.
+    /// Evaluate AUC/logloss on a dataset, fanning eval batches out over
+    /// `threads_for(n_batches)` threads. Logits are pushed into the
+    /// accumulator in batch order, so the result is independent of the
+    /// thread count.
     pub fn evaluate(&self, ds: &Dataset) -> Result<(f64, f64)> {
         // HLO fwd artifacts are shape-specialized: always use their exact
         // batch (EvalBatcher pads small datasets up to it); the reference
@@ -150,24 +241,100 @@ impl Trainer {
             .engine
             .eval_batch()
             .unwrap_or_else(|| 1024.min(ds.n().max(1)));
+        let n_batches = ds.n().div_ceil(eval_batch);
+        let threads = self.cfg.threads_for(n_batches);
         let mut acc = EvalAccumulator::new();
-        for batch in EvalBatcher::new(ds, eval_batch) {
-            let logits = self.engine.fwd(&self.params, &batch)?;
-            acc.push(&logits, batch.y.as_f32()?, batch.valid);
+        if threads <= 1 {
+            for batch in EvalBatcher::new(ds, eval_batch) {
+                let logits = self.engine.fwd(&self.params, &batch)?;
+                acc.push(&logits, batch.y.as_f32()?, batch.valid);
+            }
+        } else {
+            let engine = &self.engine;
+            let params = &self.params;
+            type EvalOut = (usize, Vec<f32>, Vec<f32>, usize);
+            let mut results = std::thread::scope(|s| -> Result<Vec<EvalOut>> {
+                let mut handles = Vec::with_capacity(threads);
+                for t in 0..threads {
+                    handles.push(s.spawn(move || -> Result<Vec<EvalOut>> {
+                        let mut out = Vec::new();
+                        let mut i = t;
+                        while i < n_batches {
+                            let batch = EvalBatcher::nth_batch(ds, eval_batch, i)
+                                .ok_or_else(|| anyhow::anyhow!("eval batch {i} out of range"))?;
+                            let logits = engine.fwd(params, &batch)?;
+                            let y = batch.y.as_f32()?.to_vec();
+                            out.push((i, logits, y, batch.valid));
+                            i += threads;
+                        }
+                        Ok(out)
+                    }));
+                }
+                let mut all = Vec::with_capacity(n_batches);
+                for h in handles {
+                    all.extend(h.join().expect("eval worker panicked")?);
+                }
+                Ok(all)
+            })?;
+            results.sort_unstable_by_key(|(i, ..)| *i);
+            for (_, logits, y, valid) in &results {
+                acc.push(logits, y, *valid);
+            }
         }
         Ok((acc.auc(), acc.logloss()))
     }
 
     /// Full training run.
+    ///
+    /// With `threads != 1` the batcher runs on a scoped prefetch thread
+    /// (double-buffered), overlapping batch materialization and the
+    /// touched-id sort with the previous step's compute; `threads == 1`
+    /// keeps the fully inline seed path. Both orders of batches are
+    /// identical.
     pub fn train(&mut self, train: &Dataset, test: &Dataset) -> Result<TrainReport> {
-        let t0 = std::time::Instant::now();
-        let mut sw = Stopwatch::new();
+        let t0 = Instant::now();
         let steps_per_epoch = train.n() / self.cfg.batch;
         ensure!(steps_per_epoch > 0, "batch larger than dataset");
         let total_steps = ((steps_per_epoch as f64) * self.cfg.epochs).round() as usize;
         ensure!(total_steps > 0, "no steps to run");
 
         let mut batcher = Batcher::new(train, self.cfg.batch, self.cfg.seed ^ 0x5eed);
+        // only a single worker consumes the whole batch (and hence its
+        // touched cache); shards compute their own slices' touched sets
+        let warm_touched = self.cfg.workers == 1;
+        if self.cfg.threads_for(2) > 1 {
+            std::thread::scope(|scope| {
+                let feed = Prefetch::spawn(
+                    scope,
+                    (0..total_steps).map(move |_| {
+                        let b = batcher.next_batch();
+                        if warm_touched {
+                            let _ = b.touched(); // pay for the sort off the hot path
+                        }
+                        b
+                    }),
+                    2,
+                );
+                self.train_loop(t0, total_steps, steps_per_epoch, test, || {
+                    feed.recv()
+                        .ok_or_else(|| anyhow::anyhow!("prefetch producer exited early"))
+                })
+            })
+        } else {
+            self.train_loop(t0, total_steps, steps_per_epoch, test, || Ok(batcher.next_batch()))
+        }
+    }
+
+    /// The step loop shared by the prefetched and inline data paths.
+    fn train_loop(
+        &mut self,
+        t0: Instant,
+        total_steps: usize,
+        steps_per_epoch: usize,
+        test: &Dataset,
+        mut next_batch: impl FnMut() -> Result<Batch>,
+    ) -> Result<TrainReport> {
+        let mut sw = Stopwatch::new();
         let mut loss_curve = Vec::with_capacity(total_steps);
         let mut epoch_evals = Vec::new();
         let mut reduce_total = ReduceStats::default();
@@ -176,7 +343,7 @@ impl Trainer {
 
         for s in 1..=total_steps {
             sw.start("data");
-            let batch = batcher.next_batch();
+            let batch = next_batch()?;
             sw.start("step");
             let (loss, rstats) = self.train_step(&batch)?;
             sw.stop();

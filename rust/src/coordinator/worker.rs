@@ -84,11 +84,36 @@ impl WorkerShard {
     }
 }
 
-/// Copy rows `[lo, hi)` of a batch into a new owned batch.
-pub fn slice_batch(batch: &Batch, lo: usize, hi: usize) -> Result<Batch> {
+/// A worker's view of its rows: borrows the whole batch when the shard
+/// covers it (the 1-worker / whole-shard case — no per-step copy, and
+/// the prefetcher-warmed `touched()` cache is shared), owns a copy
+/// otherwise. Derefs to [`Batch`] so both cases feed `Engine::grad`
+/// unchanged.
+pub enum BatchSlice<'a> {
+    Whole(&'a Batch),
+    Owned(Batch),
+}
+
+impl std::ops::Deref for BatchSlice<'_> {
+    type Target = Batch;
+
+    fn deref(&self) -> &Batch {
+        match self {
+            BatchSlice::Whole(b) => b,
+            BatchSlice::Owned(b) => b,
+        }
+    }
+}
+
+/// Rows `[lo, hi)` of a batch: a borrow when the range is the whole
+/// batch, a row copy otherwise.
+pub fn slice_batch(batch: &Batch, lo: usize, hi: usize) -> Result<BatchSlice<'_>> {
     let b = batch.batch_size();
     if hi > b || lo >= hi {
         bail!("slice [{lo},{hi}) out of range for batch {b}");
+    }
+    if lo == 0 && hi == b {
+        return Ok(BatchSlice::Whole(batch));
     }
     let f = batch.x_cat.shape()[1];
     let d = batch.x_dense.shape()[1];
@@ -96,12 +121,12 @@ pub fn slice_batch(batch: &Batch, lo: usize, hi: usize) -> Result<Batch> {
     let cat = batch.x_cat.as_i32()?;
     let dense = batch.x_dense.as_f32()?;
     let y = batch.y.as_f32()?;
-    Ok(Batch {
-        x_cat: Tensor::i32(vec![rows, f], cat[lo * f..hi * f].to_vec()),
-        x_dense: Tensor::f32(vec![rows, d], dense[lo * d..hi * d].to_vec()),
-        y: Tensor::f32(vec![rows], y[lo..hi].to_vec()),
-        valid: rows,
-    })
+    Ok(BatchSlice::Owned(Batch::new(
+        Tensor::i32(vec![rows, f], cat[lo * f..hi * f].to_vec()),
+        Tensor::f32(vec![rows, d], dense[lo * d..hi * d].to_vec()),
+        Tensor::f32(vec![rows], y[lo..hi].to_vec()),
+        rows,
+    )))
 }
 
 #[cfg(test)]
@@ -135,15 +160,32 @@ mod tests {
 
     #[test]
     fn slice_batch_copies_rows() {
-        let batch = Batch {
-            x_cat: Tensor::i32(vec![4, 2], (0..8).collect()),
-            x_dense: Tensor::f32(vec![4, 1], vec![0.0, 1.0, 2.0, 3.0]),
-            y: Tensor::f32(vec![4], vec![0.0, 1.0, 0.0, 1.0]),
-            valid: 4,
-        };
+        let batch = Batch::new(
+            Tensor::i32(vec![4, 2], (0..8).collect()),
+            Tensor::f32(vec![4, 1], vec![0.0, 1.0, 2.0, 3.0]),
+            Tensor::f32(vec![4], vec![0.0, 1.0, 0.0, 1.0]),
+            4,
+        );
         let s = slice_batch(&batch, 1, 3).unwrap();
+        assert!(matches!(s, BatchSlice::Owned(_)));
         assert_eq!(s.x_cat.as_i32().unwrap(), &[2, 3, 4, 5]);
         assert_eq!(s.x_dense.as_f32().unwrap(), &[1.0, 2.0]);
         assert_eq!(s.y.as_f32().unwrap(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn whole_batch_slice_borrows_instead_of_copying() {
+        let batch = Batch::new(
+            Tensor::i32(vec![2, 1], vec![3, 1]),
+            Tensor::f32(vec![2, 1], vec![0.5, 0.25]),
+            Tensor::f32(vec![2], vec![1.0, 0.0]),
+            2,
+        );
+        // warm the touched cache, then check the borrow shares it
+        let (ids, _) = batch.touched().unwrap();
+        let s = slice_batch(&batch, 0, 2).unwrap();
+        assert!(matches!(s, BatchSlice::Whole(_)));
+        assert!(std::ptr::eq(&*s, &batch), "whole slice must alias the batch");
+        assert_eq!(s.touched().unwrap().0, ids);
     }
 }

@@ -5,6 +5,8 @@
 //! a deterministic stream. Eval batches pad the tail by repeating the last
 //! row and report the valid count so metrics ignore padding.
 
+use std::sync::OnceLock;
+
 use anyhow::Result;
 
 use super::dataset::Dataset;
@@ -12,6 +14,10 @@ use crate::tensor::Tensor;
 use crate::util::Rng;
 
 /// One host batch ready for literal conversion.
+///
+/// Construct with [`Batch::new`]; the touched-id set is computed lazily
+/// (and cached) so a prefetch thread can pay for the sort while the
+/// training thread is still busy with the previous step.
 #[derive(Clone, Debug)]
 pub struct Batch {
     /// `[b, n_cat]` global ids.
@@ -22,9 +28,15 @@ pub struct Batch {
     pub y: Tensor,
     /// Number of non-padding rows (== b for training batches).
     pub valid: usize,
+    /// Cached `touched()` result (sorted unique ids + counts).
+    touched: OnceLock<(Vec<u32>, Vec<f32>)>,
 }
 
 impl Batch {
+    pub fn new(x_cat: Tensor, x_dense: Tensor, y: Tensor, valid: usize) -> Batch {
+        Batch { x_cat, x_dense, y, valid, touched: OnceLock::new() }
+    }
+
     pub fn batch_size(&self) -> usize {
         self.x_cat.shape()[0]
     }
@@ -32,22 +44,29 @@ impl Batch {
     /// Sorted unique global ids present in this batch plus per-id
     /// occurrence counts — the support set of the sparse embedding
     /// gradient and Alg. 1's full-batch `cnt(id)` in one pass.
+    ///
+    /// Computed once and cached; the data-pipeline prefetcher calls this
+    /// on its background thread so the training thread gets a cache hit.
     pub fn touched(&self) -> Result<(Vec<u32>, Vec<f32>)> {
-        let mut sorted: Vec<u32> =
-            self.x_cat.as_i32()?.iter().map(|&id| id as u32).collect();
-        sorted.sort_unstable();
-        let mut ids: Vec<u32> = Vec::new();
-        let mut counts: Vec<f32> = Vec::new();
-        for id in sorted {
-            if ids.last() == Some(&id) {
-                *counts.last_mut().unwrap() += 1.0;
-            } else {
-                ids.push(id);
-                counts.push(1.0);
-            }
-        }
-        Ok((ids, counts))
+        let raw = self.x_cat.as_i32()?;
+        Ok(self.touched.get_or_init(|| compute_touched(raw)).clone())
     }
+}
+
+fn compute_touched(raw: &[i32]) -> (Vec<u32>, Vec<f32>) {
+    let mut sorted: Vec<u32> = raw.iter().map(|&id| id as u32).collect();
+    sorted.sort_unstable();
+    let mut ids: Vec<u32> = Vec::new();
+    let mut counts: Vec<f32> = Vec::new();
+    for id in sorted {
+        if ids.last() == Some(&id) {
+            *counts.last_mut().unwrap() += 1.0;
+        } else {
+            ids.push(id);
+            counts.push(1.0);
+        }
+    }
+    (ids, counts)
 }
 
 fn materialize(ds: &Dataset, idx: &[usize]) -> Batch {
@@ -62,12 +81,12 @@ fn materialize(ds: &Dataset, idx: &[usize]) -> Batch {
         x_dense.extend_from_slice(ds.dense_row(i));
         y.push(ds.y[i] as f32);
     }
-    Batch {
-        x_cat: Tensor::i32(vec![b, f], x_cat),
-        x_dense: Tensor::f32(vec![b, d], x_dense),
-        y: Tensor::f32(vec![b], y),
-        valid: b,
-    }
+    Batch::new(
+        Tensor::i32(vec![b, f], x_cat),
+        Tensor::f32(vec![b, d], x_dense),
+        Tensor::f32(vec![b], y),
+        b,
+    )
 }
 
 /// Shuffled fixed-size training batcher (drop-last).
@@ -117,17 +136,37 @@ impl<'a> Batcher<'a> {
 pub struct EvalBatcher<'a> {
     ds: &'a Dataset,
     batch: usize,
-    pos: usize,
+    next_idx: usize,
 }
 
 impl<'a> EvalBatcher<'a> {
     pub fn new(ds: &'a Dataset, batch: usize) -> EvalBatcher<'a> {
         assert!(batch > 0);
-        EvalBatcher { ds, batch, pos: 0 }
+        EvalBatcher { ds, batch, next_idx: 0 }
     }
 
     pub fn n_batches(&self) -> usize {
         self.ds.n().div_ceil(self.batch)
+    }
+
+    /// Materialize eval batch `i` (with tail padding) directly — the
+    /// random-access unit the parallel evaluator hands to each thread.
+    pub fn nth_batch(ds: &Dataset, batch: usize, i: usize) -> Option<Batch> {
+        assert!(batch > 0);
+        let pos = i * batch;
+        if pos >= ds.n() {
+            return None;
+        }
+        let end = (pos + batch).min(ds.n());
+        let valid = end - pos;
+        let mut idx: Vec<usize> = (pos..end).collect();
+        // pad by repeating the final row to keep the artifact shape
+        while idx.len() < batch {
+            idx.push(end - 1);
+        }
+        let mut b = materialize(ds, &idx);
+        b.valid = valid;
+        Some(b)
     }
 }
 
@@ -135,19 +174,8 @@ impl<'a> Iterator for EvalBatcher<'a> {
     type Item = Batch;
 
     fn next(&mut self) -> Option<Batch> {
-        if self.pos >= self.ds.n() {
-            return None;
-        }
-        let end = (self.pos + self.batch).min(self.ds.n());
-        let valid = end - self.pos;
-        let mut idx: Vec<usize> = (self.pos..end).collect();
-        // pad by repeating the final row to keep the artifact shape
-        while idx.len() < self.batch {
-            idx.push(end - 1);
-        }
-        let mut b = materialize(self.ds, &idx);
-        b.valid = valid;
-        self.pos = end;
+        let b = EvalBatcher::nth_batch(self.ds, self.batch, self.next_idx)?;
+        self.next_idx += 1;
         Some(b)
     }
 }
@@ -216,16 +244,32 @@ mod tests {
 
     #[test]
     fn touched_ids_sorted_unique_with_counts() {
-        let batch = Batch {
-            x_cat: Tensor::i32(vec![3, 2], vec![4, 0, 4, 2, 0, 4]),
-            x_dense: Tensor::f32(vec![3, 0], vec![]),
-            y: Tensor::f32(vec![3], vec![0.0; 3]),
-            valid: 3,
-        };
+        let batch = Batch::new(
+            Tensor::i32(vec![3, 2], vec![4, 0, 4, 2, 0, 4]),
+            Tensor::f32(vec![3, 0], vec![]),
+            Tensor::f32(vec![3], vec![0.0; 3]),
+            3,
+        );
         let (ids, counts) = batch.touched().unwrap();
         assert_eq!(ids, vec![0, 2, 4]);
         assert_eq!(counts, vec![2.0, 1.0, 3.0]);
         assert_eq!(counts.iter().sum::<f32>(), 6.0);
+        // second call hits the cache and must agree
+        let (ids2, counts2) = batch.touched().unwrap();
+        assert_eq!(ids, ids2);
+        assert_eq!(counts, counts2);
+    }
+
+    #[test]
+    fn nth_batch_matches_iterator() {
+        let d = ds(10);
+        let it: Vec<Batch> = EvalBatcher::new(&d, 4).collect();
+        for (i, b) in it.iter().enumerate() {
+            let nth = EvalBatcher::nth_batch(&d, 4, i).unwrap();
+            assert_eq!(nth.valid, b.valid);
+            assert_eq!(nth.x_cat.as_i32().unwrap(), b.x_cat.as_i32().unwrap());
+        }
+        assert!(EvalBatcher::nth_batch(&d, 4, it.len()).is_none());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 pub mod batcher;
 pub mod dataset;
+pub mod prefetch;
 pub mod schema;
 pub mod split;
 pub mod stats;
@@ -17,6 +18,7 @@ pub mod synth;
 pub mod transform;
 
 pub use batcher::{Batch, Batcher, EvalBatcher};
+pub use prefetch::Prefetch;
 pub use dataset::Dataset;
 pub use schema::{Schema, avazu_synth, criteo_synth};
 pub use split::{sequential_split, random_split};

@@ -193,6 +193,7 @@ pub fn run_one(ctx: &ExpContext, spec: &RunSpec) -> Result<RunResult> {
         rule: spec.rule,
         epochs: ctx.epochs,
         workers: ctx.workers,
+        threads: 0, // auto: experiments get the parallel engine for free
         warmup_steps,
         init_sigma,
         seed: ctx.seed,

@@ -48,6 +48,7 @@ pub fn fig1(ctx: &ExpContext) -> Result<Report> {
             rule: ScalingRule::CowClip,
             epochs: 1.0,
             workers: 1,
+            threads: 1, // sequential: this figure times the raw step
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: ctx.seed,
@@ -166,6 +167,7 @@ pub fn fig5(ctx: &ExpContext) -> Result<Report> {
         rule: ScalingRule::CowClip,
         epochs: ctx.epochs.min(1.0),
         workers: 1,
+        threads: 0,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: ctx.seed,
@@ -243,6 +245,7 @@ pub fn fig7_8(ctx: &ExpContext) -> Result<Report> {
             rule: ScalingRule::CowClip,
             epochs: ctx.epochs,
             workers: 1,
+            threads: 0,
             warmup_steps: steps_per_epoch,
             init_sigma: preset.init_sigma_cowclip,
             seed: ctx.seed,

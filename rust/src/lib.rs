@@ -30,6 +30,27 @@
 //! `tensor::GradTensor` payloads (the HLO path) flow through the same
 //! coordinator types and densify only at the apply-program boundary.
 //!
+//! ## Parallel execution
+//!
+//! Every step runs on a parallel engine built from `std::thread::scope`
+//! + channels (no dependencies). The leader ([`coordinator::Trainer`])
+//! owns `ParamSet` exclusively; the worker fan-out shares one `&Engine`
+//! / `&ParamSet` / `&Batch` across up to `TrainConfig::threads` scoped
+//! threads (`Engine` is `Sync`, `grad`/`fwd` are `&self`), and finished
+//! shard contributions stream over a channel into a
+//! [`coordinator::StreamingReducer`] that merges them **in rank order**
+//! as they land — the slowest shard's gradient overlaps the reduction of
+//! everything before it, and the fixed merge order makes any thread
+//! count bitwise-reproduce the sequential run
+//! (`rust/tests/parallel_parity.rs`). `apply` stays single-threaded on
+//! the leader: it mutates params and lazy-Adam row state in place, is
+//! O(touched·d) cheap, and a serial apply is trivially deterministic. A
+//! scoped [`data::Prefetch`] thread double-buffers the batch pipeline
+//! (materialization + the touched-id sort for step `N+1` overlap step
+//! `N`), and eval batches fan out the same way with order-preserving
+//! accumulation. `threads = 1` reproduces the fully sequential seed
+//! path; `0` (auto) uses one thread per core.
+//!
 //! ## Features
 //!
 //! The `pjrt` cargo feature (off by default) compiles the real

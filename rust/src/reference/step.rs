@@ -289,12 +289,12 @@ mod tests {
             .map(|_| rng.next_gaussian() as f32)
             .collect();
         let y: Vec<f32> = (0..b).map(|_| rng.bernoulli(0.4) as u8 as f32).collect();
-        Batch {
-            x_cat: Tensor::i32(vec![b, schema.n_cat()], x_cat),
-            x_dense: Tensor::f32(vec![b, schema.n_dense], x_dense),
-            y: Tensor::f32(vec![b], y),
-            valid: b,
-        }
+        Batch::new(
+            Tensor::i32(vec![b, schema.n_cat()], x_cat),
+            Tensor::f32(vec![b, schema.n_dense], x_dense),
+            Tensor::f32(vec![b], y),
+            b,
+        )
     }
 
     fn loss_of(model: &ReferenceModel, params: &ParamSet, batch: &Batch) -> f32 {

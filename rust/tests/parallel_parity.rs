@@ -1,0 +1,187 @@
+//! Threaded == sequential: the parallel execution engine (threaded
+//! worker fan-out, reduce-as-ready merging, prefetching data pipeline,
+//! parallel eval) must reproduce the sequential run exactly — same loss
+//! curve, same final parameters, same AUC — because contributions merge
+//! in rank order no matter which thread finishes first.
+//!
+//! Runs on the reference engine for every clip mode; the HLO engine
+//! shares the same coordinator path but needs the `pjrt` feature +
+//! artifacts (covered by `train_integration.rs` when available).
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, TrainReport, Trainer};
+use cowclip::data::dataset::Dataset;
+use cowclip::data::schema::criteo_synth;
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::data::{Batcher, Prefetch};
+use cowclip::reference::ModelKind;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+
+const TOL: f32 = 1e-6;
+
+fn data() -> (Dataset, Dataset) {
+    let schema = criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n: 2_000, seed: 17, ..Default::default() });
+    random_split(&ds, 0.9, 0)
+}
+
+fn run(
+    clip: ClipMode,
+    workers: usize,
+    threads: usize,
+    train: &Dataset,
+    test: &Dataset,
+) -> (TrainReport, Vec<Vec<f32>>) {
+    let preset = criteo_preset();
+    let engine = Engine::reference(
+        ModelKind::DeepFm,
+        criteo_synth(),
+        8,
+        vec![32, 32],
+        2,
+        clip,
+    );
+    let cfg = TrainConfig {
+        batch: 128,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 1.0,
+        workers,
+        threads,
+        warmup_steps: 4,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    let report = trainer.train(train, test).unwrap();
+    let params = trainer
+        .params
+        .tensors
+        .iter()
+        .map(|t| t.as_f32().unwrap().to_vec())
+        .collect();
+    (report, params)
+}
+
+fn close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= TOL, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Acceptance: a 4-worker run on ≥2 threads reproduces the sequential
+/// run's loss curve and final params within 1e-6, for every clip mode.
+#[test]
+fn threaded_run_matches_sequential_all_clip_modes() {
+    let (train, test) = data();
+    for clip in ClipMode::ALL {
+        let (seq, seq_params) = run(clip, 4, 1, &train, &test);
+        let (thr, thr_params) = run(clip, 4, 4, &train, &test);
+        assert!(!seq.diverged && !thr.diverged, "{clip}: diverged");
+        assert_eq!(seq.steps, thr.steps, "{clip}: step count");
+        close(
+            &seq.train_loss_curve,
+            &thr.train_loss_curve,
+            &format!("{clip}: loss curve"),
+        );
+        assert_eq!(seq_params.len(), thr_params.len(), "{clip}: param arity");
+        for (i, (a, b)) in seq_params.iter().zip(&thr_params).enumerate() {
+            close(a, b, &format!("{clip}: param[{i}]"));
+        }
+        assert!(
+            (seq.final_auc - thr.final_auc).abs() <= TOL as f64,
+            "{clip}: AUC {} vs {}",
+            seq.final_auc,
+            thr.final_auc
+        );
+        // the reduction does the same number of rank-ordered merges
+        assert_eq!(seq.reduce_stats, thr.reduce_stats, "{clip}: reduce stats");
+    }
+}
+
+/// Thread count is a pure throughput knob: 2 and 3 threads (worker count
+/// not divisible by threads) agree with 4.
+#[test]
+fn odd_thread_counts_agree() {
+    let (train, test) = data();
+    let (_, p1) = run(ClipMode::CowClip, 4, 1, &train, &test);
+    for threads in [2usize, 3] {
+        let (_, p) = run(ClipMode::CowClip, 4, threads, &train, &test);
+        for (i, (a, b)) in p1.iter().zip(&p).enumerate() {
+            close(a, b, &format!("threads={threads}: param[{i}]"));
+        }
+    }
+}
+
+/// Parallel evaluate pushes logits in batch order, so AUC/logloss are
+/// identical at any thread count.
+#[test]
+fn parallel_evaluate_matches_sequential() {
+    let (train, test) = data();
+    let preset = criteo_preset();
+    let engine = Engine::reference(
+        ModelKind::WideDeep,
+        criteo_synth(),
+        8,
+        vec![32, 32],
+        2,
+        ClipMode::CowClip,
+    );
+    let cfg = TrainConfig {
+        batch: 128,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 1.0,
+        workers: 2,
+        threads: 1,
+        warmup_steps: 0,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 7,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    trainer.train(&train, &test).unwrap();
+    // same trained params, eval with 1 vs many threads
+    trainer.cfg.threads = 1;
+    let (auc_seq, ll_seq) = trainer.evaluate(&test).unwrap();
+    trainer.cfg.threads = 4;
+    let (auc_par, ll_par) = trainer.evaluate(&test).unwrap();
+    assert_eq!(auc_seq, auc_par, "AUC must not depend on eval threads");
+    assert_eq!(ll_seq, ll_par, "logloss must not depend on eval threads");
+}
+
+/// The prefetcher hands the trainer the exact batch sequence the inline
+/// batcher would produce: same epoch coverage, same shuffle order.
+#[test]
+fn prefetched_batcher_matches_inline_order() {
+    let (train, _) = data();
+    let steps = 3 * (train.n() / 128);
+    let mut inline = Batcher::new(&train, 128, 99);
+    let inline_batches: Vec<Vec<i32>> = (0..steps)
+        .map(|_| inline.next_batch().x_cat.as_i32().unwrap().to_vec())
+        .collect();
+
+    let mut bg = Batcher::new(&train, 128, 99);
+    let prefetched: Vec<Vec<i32>> = std::thread::scope(|s| {
+        Prefetch::spawn(
+            s,
+            (0..steps).map(move |_| {
+                let b = bg.next_batch();
+                let _ = b.touched();
+                b
+            }),
+            2,
+        )
+        .map(|b| b.x_cat.as_i32().unwrap().to_vec())
+        .collect()
+    });
+    assert_eq!(inline_batches, prefetched);
+}

@@ -271,6 +271,7 @@ fn e2e_sparse_pipeline_trains() {
         rule: ScalingRule::CowClip,
         epochs: 1.0,
         workers: 4,
+        threads: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,

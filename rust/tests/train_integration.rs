@@ -36,6 +36,7 @@ fn config(batch: usize, workers: usize, epochs: f64) -> TrainConfig {
         rule: ScalingRule::CowClip,
         epochs,
         workers,
+        threads: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,
