@@ -9,12 +9,18 @@
 //! and the prefetching data pipeline, reporting step-throughput speedup
 //! over the sequential baseline (target: ≥1.5x at 4 workers).
 //!
-//! Arm 3 (needs `make artifacts` + the `pjrt` feature): full training
+//! Arm 3 (always runs): the shard-owned apply stage — `clip → L2 → Adam`
+//! over 1/2/4/8 parameter shards, reporting the apply-phase and
+//! full-step speedup vs the leader-serial path (target: apply > 1x at
+//! ≥4 shards; results are bitwise identical across rows, gated by
+//! `rust/tests/shard_parity.rs`).
+//!
+//! Arm 4 (needs `make artifacts` + the `pjrt` feature): full training
 //! epochs through the AOT/PJRT path per batch size, reporting wall time
 //! and the speedup series.
 //!
-//! `-- --smoke` runs only a tiny threaded-arm config (CI compile+run
-//! gate, a few seconds).
+//! `-- --smoke` runs tiny threaded-arm and sharded-arm configs (CI
+//! compile+run gate, a few seconds).
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
@@ -35,6 +41,7 @@ fn reference_cfg(batch: usize) -> TrainConfig {
         epochs: 1.0,
         workers: 1,
         threads: 1,
+        param_shards: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,
@@ -90,6 +97,55 @@ fn reference_threaded_speedup(smoke: bool) {
     println!(
         "(speedup = sequential step time / threaded step time; batches and \
          results are identical across rows — see rust/tests/parallel_parity.rs)\n"
+    );
+}
+
+/// Sharded-apply arm: same batches, same math (bitwise — see
+/// `shard_parity.rs`), only the number of apply-stage parameter shards
+/// changes. Reports the apply-phase speedup the shard-owned store buys
+/// over the leader-serial path, and the full-step speedup it implies.
+fn reference_sharded_apply_speedup(smoke: bool) {
+    let schema = cowclip::data::schema::criteo_synth();
+    let n = if smoke { 6_000 } else { 20_000 };
+    let batch = if smoke { 512 } else { 2048 };
+    let shard_ladder: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let ds = generate(&schema, &SynthConfig { n, seed: 2, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    println!("== e2e_epoch (reference engine): sharded apply vs leader-serial ==");
+    println!(
+        "{:>8} {:>8} {:>10} {:>10} {:>10} {:>12} {:>11}",
+        "batch", "shards", "steps", "apply s", "step s", "apply spdup", "step spdup"
+    );
+    let mut base_apply = 0.0f64;
+    let mut base_step = 0.0f64;
+    for &shards in shard_ladder {
+        let mut cfg = reference_cfg(batch);
+        cfg.workers = 1; // isolate the apply stage from the fan-out
+        cfg.threads = 0; // auto threads for the shard fan-out
+        cfg.param_shards = shards;
+        let mut trainer = Trainer::new(reference_engine(&schema), cfg).unwrap();
+        let report = trainer.train(&train, &test).unwrap();
+        let apply = report.seconds("apply").max(1e-9);
+        let step = report.seconds("step").max(1e-9);
+        if shards == 1 {
+            base_apply = apply;
+            base_step = step;
+        }
+        println!(
+            "{:>8} {:>8} {:>10} {:>10.2} {:>10.2} {:>11.2}x {:>10.2}x",
+            batch,
+            trainer.store.n_shards(),
+            report.steps,
+            apply,
+            step,
+            base_apply / apply,
+            base_step / step
+        );
+    }
+    println!(
+        "(apply spdup = serial apply time / sharded apply time; params, \
+         moments and losses are identical across rows)\n"
     );
 }
 
@@ -176,6 +232,7 @@ fn hlo_epochs() {
             epochs: 1.0,
             workers: 1,
             threads: 1,
+            param_shards: 1,
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: 1234,
@@ -204,9 +261,11 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         reference_threaded_speedup(true);
+        reference_sharded_apply_speedup(true);
         return;
     }
     reference_sparse_vs_dense();
     reference_threaded_speedup(false);
+    reference_sharded_apply_speedup(false);
     hlo_epochs();
 }

@@ -36,7 +36,8 @@ fn main() {
             rule: ScalingRule::CowClip,
             epochs: 1.0,
             workers: 1,
-            threads: 1, // sequential: this bench times the raw step
+            threads: 1,      // sequential: this bench times the raw step
+            param_shards: 1, // serial apply for the same reason
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: 1,

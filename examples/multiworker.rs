@@ -53,6 +53,7 @@ fn main() -> Result<()> {
             epochs: 1.0,
             workers,
             threads,
+            param_shards: 0,
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: 1234,
@@ -73,7 +74,7 @@ fn main() -> Result<()> {
             report.wall_seconds
         );
         // sharding + threading must not change the learned weights
-        let embed = trainer.params.tensors[0].as_f32()?.to_vec();
+        let embed = trainer.params().tensors[0].as_f32()?.to_vec();
         if let Some(reference) = &reference_embed {
             let max_diff = embed
                 .iter()

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         epochs: 2.0,
         workers: 1,
         threads: 0,
+        param_shards: 0,
         warmup_steps: train.n() / (preset.base_batch * 8),
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,

@@ -50,6 +50,7 @@ fn main() -> Result<()> {
         epochs: 3.0,
         workers: 4,
         threads: 0,
+        param_shards: 0,
         warmup_steps: train.n() / batch,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,

@@ -27,10 +27,14 @@ USAGE:
   cowclip train      [--model deepfm|wd|dcn|dcnv2] [--schema S] [--batch B]
                      [--rule none|sqrt|sqrt_star|linear|n2_lambda|cowclip]
                      [--clip none|global|field|column|adafield|cowclip]
-                     [--epochs E] [--n N] [--workers W] [--threads T] [--seq-split]
-                     [--engine hlo|reference] [--seed S] [--save CKPT]
+                     [--epochs E] [--n N] [--workers W] [--threads T]
+                     [--param-shards P] [--seq-split] [--engine hlo|reference]
+                     [--seed S] [--save CKPT] [--resume CKPT]
                      (--threads 0 = one per core [default]; 1 = sequential)
+                     (--param-shards 0 = auto [default]; 1 = serial apply;
+                      --resume continues step counter + warmup schedule)
   cowclip eval       --ckpt FILE --data FILE [--model M] [--batch B]
+                     [--engine hlo|reference]
   cowclip experiment <id|all|quick> [--n N] [--epochs E] [--seed S] [--out DIR]
   cowclip artifacts  check
   cowclip help
@@ -143,6 +147,7 @@ fn train_cmd(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 100_000)?;
     let workers = args.usize_or("workers", 1)?;
     let threads = args.usize_or("threads", 0)?;
+    let param_shards = args.usize_or("param-shards", 0)?;
     let seed = args.u64_or("seed", 1234)?;
     let engine_kind = args.str_or("engine", default_engine());
 
@@ -180,6 +185,7 @@ fn train_cmd(args: &Args) -> Result<()> {
         epochs,
         workers,
         threads,
+        param_shards,
         warmup_steps: if use_cowclip_preset { steps_per_epoch } else { 0 },
         init_sigma,
         seed,
@@ -194,6 +200,15 @@ fn train_cmd(args: &Args) -> Result<()> {
         steps_per_epoch
     );
     let mut trainer = Trainer::new(engine, cfg)?;
+    println!(
+        "apply stage: {} parameter shard{}",
+        trainer.store.n_shards(),
+        if trainer.store.n_shards() == 1 { " (serial)" } else { "s" }
+    );
+    if let Some(ckpt) = args.get("resume") {
+        trainer.resume_from(Path::new(ckpt))?;
+        println!("resumed from {ckpt} at step {}", trainer.step());
+    }
     let report = trainer.train(&train, &test)?;
 
     println!("\n== result ==");
@@ -215,18 +230,19 @@ fn train_cmd(args: &Args) -> Result<()> {
         if report.diverged { "  [DIVERGED]" } else { "" }
     );
     if let Some(path) = args.get("save") {
-        trainer.params.save(Path::new(path))?;
-        println!("checkpoint saved to {path}");
+        trainer.save_checkpoint(Path::new(path))?;
+        println!("checkpoint saved to {path} (params + moments + step {})", trainer.step());
     }
     Ok(())
 }
 
 /// Evaluate a checkpoint on a `.ctr` dataset file: AUC, logloss, and
-/// calibration (Brier / ECE) — streamed from disk.
+/// calibration (Brier / ECE) — streamed from disk. Accepts both the
+/// PR-1 `CCKP` params format and the full `CCKS` training checkpoint.
 fn eval_cmd(args: &Args) -> Result<()> {
     use crate::data::stream::StreamReader;
     use crate::metrics::{brier_from_logits, ece_from_logits, EvalAccumulator};
-    use crate::model::params::ParamSet;
+    use crate::model::store::ParamStore;
 
     let ckpt = args.get("ckpt").context("--ckpt FILE required")?;
     let data = args.get("data").context("--data FILE required")?;
@@ -234,8 +250,17 @@ fn eval_cmd(args: &Args) -> Result<()> {
     let reader = StreamReader::open(Path::new(data))?;
     let schema_name = reader.schema.name.clone();
 
-    let engine = Engine::hlo(open_runtime()?, model, &schema_name, ClipMode::CowClip)?;
-    let params = ParamSet::load(Path::new(ckpt), &engine.spec())?;
+    let engine = match args.str_or("engine", default_engine()).as_str() {
+        "hlo" => Engine::hlo(open_runtime()?, model, &schema_name, ClipMode::CowClip)?,
+        "reference" => {
+            let schema = crate::data::schema::by_name(&schema_name)
+                .with_context(|| format!("unknown schema {schema_name}"))?;
+            // same architecture constants as `train --engine reference`
+            Engine::reference(model, schema, 10, vec![128, 128, 128], 3, ClipMode::CowClip)
+        }
+        other => bail!("unknown engine {other:?} (hlo|reference)"),
+    };
+    let params = ParamStore::load_params(Path::new(ckpt), &engine.spec())?;
     let eval_batch = engine.eval_batch().unwrap_or(1024);
 
     let mut acc = EvalAccumulator::new();

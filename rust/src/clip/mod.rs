@@ -9,5 +9,6 @@
 mod variants;
 
 pub use variants::{
-    clip_embedding_grads, clip_embedding_grads_sparse, ClipMode, ClipParams, EPS,
+    clip_embedding_grads, clip_embedding_grads_range, clip_embedding_grads_sparse,
+    grad_l2_norm, ClipMode, ClipParams, EPS,
 };

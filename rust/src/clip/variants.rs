@@ -96,6 +96,14 @@ fn norm(xs: &[f32]) -> f32 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
 }
 
+/// The L2 norm every clipping variant uses (f64 accumulation, f32
+/// result). Public so the sharded apply stage can precompute the
+/// whole-table norm for `Global` mode with bitwise-identical rounding.
+#[inline]
+pub fn grad_l2_norm(xs: &[f32]) -> f32 {
+    norm(xs)
+}
+
 #[inline]
 fn rescale(xs: &mut [f32], n: f32, thresh: f32) {
     let s = (thresh / (n + EPS)).min(1.0);
@@ -170,13 +178,19 @@ pub fn clip_embedding_grads(
 /// Sparse twin of [`clip_embedding_grads`]: clips only the touched rows
 /// of the gradient, in O(touched · d) for every mode except `AdaField`
 /// (whose adaptive threshold needs the *full* per-field `||w_f||`, an
-/// O(V · d) read kept for exactness with the dense twin — it is an
-/// ablation mode, not the CowClip hot path).
+/// O(V · d) read kept for exactness with the dense twin — the sharded
+/// `ParamStore` path avoids it by passing maintained `Σw²` to
+/// [`clip_embedding_grads_range`] directly).
 ///
 /// Exactness vs the dense twin holds because untouched rows carry a zero
 /// gradient: per-row modes (None/Column/CowClip) are no-ops on them, and
 /// the aggregate modes (Global/Field/AdaField) see identical norms and
 /// counts whether or not zero rows participate.
+///
+/// Delegates to [`clip_embedding_grads_range`] as the whole-table case
+/// (`base = 0`, all fields, no maintained norms, no precomputed global
+/// norm) — one implementation of the six-mode math, same pattern as
+/// `LazyAdam::step_rows` forwarding to `lazy_step_rows`.
 ///
 /// * `g` — sparse gradient rows over the `[V, d]` table
 /// * `w` — current dense table values (`V * d`)
@@ -193,34 +207,72 @@ pub fn clip_embedding_grads_sparse(
     debug_assert_eq!(g.n_rows(), schema.total_vocab());
     debug_assert_eq!(w.len(), schema.total_vocab() * d);
     debug_assert_eq!(counts.len(), g.nnz());
+    let fields: Vec<(usize, usize)> = schema.fields().collect();
+    let (ids, vals) = g.ids_vals_mut();
+    clip_embedding_grads_range(mode, ids, vals, d, w, 0, counts, &fields, None, None, p);
+}
+
+/// Shard-local twin of [`clip_embedding_grads_sparse`]: clips the stored
+/// rows of one row-range view `[base, base + rows)` of the table, the
+/// unit the shard-owned apply stage runs per parameter shard.
+///
+/// Equivalence with the whole-table twin holds when shard boundaries are
+/// **field-aligned** (every field fully inside one shard — the
+/// `ShardPlan` invariant): per-row modes are row-local, `Field`/
+/// `AdaField` aggregate within one shard's fields, and `Global` receives
+/// the precomputed whole-table gradient norm so every shard rescales by
+/// the same factor.
+///
+/// * `ids`/`vals` — the view's stored rows (global ids, packed values)
+/// * `w` — the shard's weight rows (`rows * d` values starting at `base`)
+/// * `counts` — per-stored-row occurrence counts aligned with `ids`
+/// * `fields` — `(global_offset, vocab)` of the fields inside the range
+/// * `field_sqnorms` — maintained per-field `Σw²` aligned with `fields`
+///   (AdaField reads `sqrt` of these in O(1) instead of scanning the
+///   field's rows); `None` falls back to the O(field · d) scan
+/// * `global_norm` — precomputed whole-table ‖g‖ (`Global` mode only)
+#[allow(clippy::too_many_arguments)]
+pub fn clip_embedding_grads_range(
+    mode: ClipMode,
+    ids: &[u32],
+    vals: &mut [f32],
+    d: usize,
+    w: &[f32],
+    base: usize,
+    counts: &[f32],
+    fields: &[(usize, usize)],
+    field_sqnorms: Option<&[f64]>,
+    global_norm: Option<f32>,
+    p: &ClipParams,
+) {
+    debug_assert_eq!(vals.len(), ids.len() * d);
+    debug_assert_eq!(counts.len(), ids.len());
 
     match mode {
         ClipMode::None => {}
         ClipMode::Global => {
-            let vals = g.vals_mut();
-            let n = norm(vals);
+            let n = global_norm.unwrap_or_else(|| norm(vals));
             rescale(vals, n, p.clip_t);
         }
         ClipMode::Column => {
-            for row in g.vals_mut().chunks_mut(d) {
+            for row in vals.chunks_mut(d) {
                 let n = norm(row);
                 rescale(row, n, p.clip_t);
             }
         }
         ClipMode::CowClip => {
-            let (ids, vals) = g.ids_vals_mut();
             for (k, &id) in ids.iter().enumerate() {
-                let row = &mut vals[k * d..(k + 1) * d];
-                let wnorm = norm(&w[id as usize * d..(id as usize + 1) * d]);
+                let lo = (id as usize - base) * d;
+                let wnorm = norm(&w[lo..lo + d]);
                 let thresh = counts[k] * (p.r * wnorm).max(p.zeta);
+                let row = &mut vals[k * d..(k + 1) * d];
                 let n = norm(row);
                 rescale(row, n, thresh);
             }
         }
         ClipMode::Field => {
-            let (ids, vals) = g.ids_vals_mut();
             let mut k = 0usize;
-            for (off, vs) in schema.fields() {
+            for &(off, vs) in fields {
                 let hi_id = (off + vs) as u32;
                 let k0 = k;
                 while k < ids.len() && ids[k] < hi_id {
@@ -235,9 +287,8 @@ pub fn clip_embedding_grads_sparse(
             }
         }
         ClipMode::AdaField => {
-            let (ids, vals) = g.ids_vals_mut();
             let mut k = 0usize;
-            for (off, vs) in schema.fields() {
+            for (fi, &(off, vs)) in fields.iter().enumerate() {
                 let hi_id = (off + vs) as u32;
                 let k0 = k;
                 while k < ids.len() && ids[k] < hi_id {
@@ -246,10 +297,11 @@ pub fn clip_embedding_grads_sparse(
                 if k == k0 {
                     continue;
                 }
-                // untouched ids have zero counts, so the stored-row sum
-                // equals the dense field sum
                 let cnt_f: f32 = counts[k0..k].iter().sum();
-                let wnorm = norm(&w[off * d..(off + vs) * d]);
+                let wnorm = match field_sqnorms {
+                    Some(sq) => sq[fi].max(0.0).sqrt() as f32,
+                    None => norm(&w[(off - base) * d..(off + vs - base) * d]),
+                };
                 let thresh = cnt_f * (p.r * wnorm).max(p.zeta);
                 let sl = &mut vals[k0 * d..k * d];
                 let n = norm(sl);
@@ -370,6 +422,55 @@ mod tests {
             clip_embedding_grads(mode, &mut dg, &w, &dense_counts, &schema, d, &p);
             clip_embedding_grads_sparse(mode, &mut sg, &w, &sparse_counts, &schema, &p);
             for (a, b) in sg.to_dense().iter().zip(&dg) {
+                assert!((a - b).abs() <= 1e-6, "{mode}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_twin_matches_whole_table_across_field_aligned_shards() {
+        // rows 0,1,4 touched; split field-aligned at row 3 into 2 shards
+        let schema = tiny_schema();
+        let d = 2;
+        let v = schema.total_vocab();
+        let ids = vec![0u32, 1, 4];
+        let vals = vec![3.0f32, -4.0, 0.5, 0.5, 2.0, -2.0];
+        let counts = vec![2.0f32, 1.0, 5.0];
+        let w: Vec<f32> = (0..v * d).map(|i| 0.04 * (i as f32 - 3.0)).collect();
+        let fields: Vec<(usize, usize)> = schema.fields().collect();
+        for mode in ClipMode::ALL {
+            let p = ClipParams { r: 1.0, zeta: 1e-3, clip_t: 0.6 };
+            // whole-table sparse twin
+            let mut whole = SparseRows::new(v, d, ids.clone(), vals.clone());
+            clip_embedding_grads_sparse(mode, &mut whole, &w, &counts, &schema, &p);
+            // sharded: precompute the global norm the way the store does
+            let gnorm = (mode == ClipMode::Global).then(|| grad_l2_norm(&vals));
+            let sqnorms: Vec<f64> = fields
+                .iter()
+                .map(|&(off, vs)| {
+                    w[off * d..(off + vs) * d].iter().map(|&x| (x as f64) * (x as f64)).sum()
+                })
+                .collect();
+            let mut sharded = SparseRows::new(v, d, ids.clone(), vals.clone());
+            let views = sharded.range_views_mut(&[(0, 3), (3, 5)]);
+            for (s, view) in views.into_iter().enumerate() {
+                let fr = if s == 0 { 0..1 } else { 1..2 };
+                let cnt: Vec<f32> = view.ids.iter().map(|id| counts[ids.iter().position(|x| x == id).unwrap()]).collect();
+                clip_embedding_grads_range(
+                    mode,
+                    view.ids,
+                    view.vals,
+                    d,
+                    &w[view.base * d..(view.base + view.rows) * d],
+                    view.base,
+                    &cnt,
+                    &fields[fr.clone()],
+                    Some(&sqnorms[fr]),
+                    gnorm,
+                    &p,
+                );
+            }
+            for (a, b) in sharded.to_dense().iter().zip(whole.to_dense()) {
                 assert!((a - b).abs() <= 1e-6, "{mode}: {a} vs {b}");
             }
         }

@@ -4,11 +4,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::clip::ClipMode;
+use crate::clip::{ClipMode, ClipParams};
 use crate::data::batcher::Batch;
 use crate::data::schema::Schema;
 use crate::model::manifest::ParamEntry;
 use crate::model::params::ParamSet;
+use crate::model::store::{ApplyCtx, ParamStore};
 use crate::reference::step::build_spec;
 use crate::reference::{GradOutput, ModelKind, ReferenceEngine, ReferenceModel};
 use crate::runtime::{HypersVec, Program, Runtime};
@@ -91,9 +92,11 @@ impl Engine {
         }
     }
 
-    /// Optimizer update in place. The reference engine consumes sparse
-    /// gradients directly; the HLO apply program is dense, so sparse
-    /// payloads are materialized at this boundary only.
+    /// Optimizer update in place over caller-owned `ParamSet`s — the
+    /// **leader-serial oracle** path. The trainer itself applies through
+    /// [`Engine::apply_store`]; this entry point remains for the parity
+    /// suites (`hlo_parity`, `shard_parity`) that pin the sharded store
+    /// against the original serial math.
     pub fn apply(
         &mut self,
         params: &mut ParamSet,
@@ -112,6 +115,45 @@ impl Engine {
                 let mut h = hv.hypers;
                 h.lr_dense *= hv.dense_lr_factor;
                 e.apply(params, m, v, grads, counts, &h, hv.step)
+            }
+        }
+    }
+
+    /// Optimizer update through the shard-owned [`ParamStore`] — the
+    /// trainer's apply path. Takes `&self`: all optimizer state lives in
+    /// the store, so the engine stays shareable with the gradient
+    /// fan-out's persistent worker pool.
+    ///
+    /// The reference engine runs `clip → L2 → Adam` per parameter shard
+    /// (on up to `threads` scoped threads); the HLO apply program
+    /// rewrites whole tensors, so it goes through the store's exclusive
+    /// whole-set access and sparse payloads densify at that boundary.
+    pub fn apply_store(
+        &self,
+        store: &ParamStore,
+        grads: &mut [GradTensor],
+        counts: &SparseRows,
+        hv: &HypersVec,
+        threads: usize,
+    ) -> Result<()> {
+        match self {
+            Engine::Hlo(e) => {
+                let dense_counts = counts.to_dense();
+                store.with_all_mut(|params, m, v| e.apply(params, m, v, grads, &dense_counts, hv))
+            }
+            Engine::Reference(e) => {
+                let mut h = hv.hypers;
+                h.lr_dense *= hv.dense_lr_factor;
+                let ctx = ApplyCtx {
+                    clip: e.clip_mode,
+                    clip_params: ClipParams { r: h.clip_r, zeta: h.clip_zeta, clip_t: h.clip_t },
+                    lr_embed: h.lr_embed,
+                    lr_dense: h.lr_dense,
+                    l2_embed: h.l2_embed,
+                    adam: e.adam_cfg(),
+                    step: hv.step as u32,
+                };
+                store.apply_sharded(&ctx, grads, counts, threads)
             }
         }
     }

@@ -6,26 +6,34 @@
 //! * **Large-batch composition** ([`accumulate`]): an effective batch of
 //!   `s·b` is assembled by accumulating `s` microbatch gradients *and
 //!   occurrence counts*, which is exactly Alg. 1's full-batch semantics.
-//! * **Parallel data parallelism** ([`worker`], [`allreduce`]): logical
-//!   workers compute shard gradients on a scoped thread pool and stream
-//!   them into a rank-ordered reduce-as-ready merge
+//! * **Parallel data parallelism** ([`worker`], [`allreduce`], [`pool`]):
+//!   logical workers compute shard gradients on a persistent step-worker
+//!   pool ([`pool::StepPool`], spawned once per run) and stream them
+//!   into a rank-ordered reduce-as-ready merge
 //!   ([`allreduce::StreamingReducer`]) that overlaps reduction with the
 //!   slowest shard's compute, with traffic accounting (the paper's
 //!   multi-GPU extension); [`allreduce::tree_allreduce`] keeps the
 //!   binary-tree cost model for traffic studies.
+//! * **Sharded apply**: the merged gradient is partitioned by the
+//!   store's field-aligned shard plan and `clip → L2 → Adam` runs per
+//!   parameter shard in parallel (see `model::store::ParamStore`), so
+//!   the embedding-heavy optimizer stage no longer serializes on the
+//!   leader.
 //! * **The training loop** ([`trainer`]): scaling rules, warmup,
-//!   prefetched batches, parallel eval, checkpoints, timing. See the
-//!   [`trainer`] module docs for the threading model and determinism
-//!   guarantees.
+//!   prefetched batches, parallel eval, checkpoints (with resume),
+//!   timing. See the [`trainer`] module docs for the threading model and
+//!   determinism guarantees.
 
 pub mod accumulate;
 pub mod allreduce;
 pub mod engine;
+pub mod pool;
 pub mod trainer;
 pub mod worker;
 
 pub use accumulate::GradAccumulator;
 pub use allreduce::{tree_allreduce, ReduceStats, StreamingReducer};
 pub use engine::{Engine, HloEngine};
+pub use pool::{GradJob, StepPool};
 pub use trainer::{TrainConfig, TrainReport, Trainer};
 pub use worker::{BatchSlice, WorkerShard};

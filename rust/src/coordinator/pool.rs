@@ -1,0 +1,85 @@
+//! Persistent step-worker pool: the gradient fan-out without per-step
+//! thread spawns.
+//!
+//! PR 2 scoped the worker threads inside every `train_step` call — tens
+//! of µs of spawn cost per step, noise at 128K-row batches but real
+//! overhead for µs-scale small-batch stepping (a ROADMAP item). The pool
+//! is created **once** inside `Trainer::train`'s thread scope and lives
+//! for the whole run: workers block on a shared job queue, compute one
+//! [`WorkerShard`] contribution per job, and reply on the job's own
+//! per-step channel.
+//!
+//! Workers read the parameters through the store's `RwLock` — the
+//! fan-out holds read locks, the apply stage takes the write side — so
+//! no borrow ties a step's data to the pool: jobs carry the batch as an
+//! `Arc` and are `'static`.
+//!
+//! Jobs are queued in rank order and the queue is FIFO, so low ranks
+//! (which the rank-ordered [`super::StreamingReducer`] merges first)
+//! start first — the same ordering heuristic the scoped fan-out used.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::Scope;
+
+use anyhow::Result;
+
+use super::allreduce::Contribution;
+use super::engine::Engine;
+use super::worker::WorkerShard;
+use crate::data::batcher::Batch;
+use crate::model::params::ParamSet;
+
+/// One gradient task: compute `rank`'s shard contribution for `batch`
+/// and send it (tagged with the rank) over `reply`.
+pub struct GradJob {
+    pub rank: usize,
+    pub world: usize,
+    pub batch: Arc<Batch>,
+    pub reply: Sender<(usize, Result<Contribution>)>,
+}
+
+/// A persistent pool of gradient workers (see module docs). Dropping the
+/// pool closes the job queue; the scoped worker threads drain and exit
+/// before the owning scope joins them.
+pub struct StepPool {
+    tx: Sender<GradJob>,
+}
+
+impl StepPool {
+    /// Spawn `threads` workers on `scope`, each sharing `engine` and
+    /// reading parameters through `params` for every job it picks up.
+    pub fn spawn<'scope, 'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        threads: usize,
+        engine: &'env Engine,
+        params: &'env RwLock<ParamSet>,
+    ) -> StepPool {
+        let (tx, rx) = channel::<GradJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        for _ in 0..threads.max(1) {
+            let rx = Arc::clone(&rx);
+            scope.spawn(move || loop {
+                // hold the queue lock only while waiting for a job; the
+                // compute below runs with the queue free
+                let job = match rx.lock().unwrap().recv() {
+                    Ok(job) => job,
+                    Err(_) => break, // pool dropped: shut down
+                };
+                let contribution = {
+                    let guard = params.read().unwrap();
+                    WorkerShard::new(job.rank, job.world).compute(engine, &guard, &job.batch)
+                };
+                // a dropped reply receiver just means the leader already
+                // failed this step; keep serving the queue
+                let _ = job.reply.send((job.rank, contribution));
+            });
+        }
+        StepPool { tx }
+    }
+
+    /// Queue a gradient job.
+    pub fn submit(&self, job: GradJob) {
+        self.tx.send(job).expect("step pool workers exited early");
+    }
+}

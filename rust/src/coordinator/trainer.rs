@@ -1,34 +1,50 @@
 //! The end-to-end training loop: scaling rule → warmup → shard → grad →
-//! all-reduce → apply → eval, with timing broken down per phase.
+//! all-reduce → sharded apply → eval, with timing broken down per phase.
 //!
 //! # Threading model
 //!
-//! The leader owns `ParamSet` (params + Adam moments) exclusively. Each
-//! step has three phases with different concurrency:
+//! Parameters and optimizer state live in the shard-owned
+//! [`ParamStore`]: weights behind a `RwLock` (read by the gradient
+//! fan-out, written by apply), Adam moments / lazy-Adam rows / per-field
+//! norms behind a `Mutex` taken only during apply. Each step has three
+//! phases:
 //!
-//! 1. **Fan-out** — `WorkerShard::compute` runs on up to
-//!    [`TrainConfig::threads`] scoped threads, every worker sharing one
-//!    `&Engine` / `&ParamSet` / `&Batch` (all `Sync`; `Engine::grad` is
-//!    `&self`).
-//! 2. **Reduce-as-ready** — finished contributions stream over a channel
-//!    into a [`StreamingReducer`] on the leader thread, which merges them
-//!    eagerly *in rank order*: the slowest shard's gradient overlaps the
-//!    reduction of everything before it, and the fixed merge order keeps
-//!    results bitwise identical to a sequential run at any thread count.
-//! 3. **Apply** — stays single-threaded on the leader: the optimizer
-//!    mutates params and per-row lazy-Adam state in place, and a serial
-//!    apply is both cheap (O(touched·d)) and trivially deterministic.
+//! 1. **Fan-out** — `WorkerShard::compute` jobs run on a persistent
+//!    [`StepPool`] created once in [`Trainer::train`]'s thread scope
+//!    (spawn cost is paid per *run*, not per step — the old per-step
+//!    `thread::scope` is gone from the hot loop). Workers take read
+//!    locks on the weights; jobs carry the batch as an `Arc`.
+//! 2. **Reduce-as-ready** — finished contributions stream over a
+//!    per-step channel into a [`StreamingReducer`] on the leader thread,
+//!    merging eagerly *in rank order*: the slowest shard's gradient
+//!    overlaps the reduction of everything before it, and the fixed
+//!    merge order keeps results bitwise identical to a sequential run at
+//!    any thread count.
+//! 3. **Sharded apply** — the store partitions the merged gradient by
+//!    its field-aligned [`ShardPlan`] row ranges and runs CowClip's
+//!    `clip → L2 → Adam` per parameter shard on scoped threads
+//!    ([`TrainConfig::param_shards`] owners), each owning disjoint
+//!    `&mut` slices of weights + moments. The shard count never changes
+//!    the math (`rust/tests/shard_parity.rs`).
 //!
 //! A scoped prefetch thread ([`Prefetch`]) materializes batch `N+1` —
 //! including the `Batch::touched` sort — while step `N` trains, so the
 //! `data` entry of `phase_seconds` shows only the un-overlapped residual.
+//! `phase_seconds` additionally reports the `grad` (fan-out + reduce)
+//! and `apply` sub-phases of `step`.
+//!
+//! [`ParamStore`]: crate::model::store::ParamStore
+//! [`ShardPlan`]: crate::model::store::ShardPlan
 
+use std::path::Path;
+use std::sync::{Arc, RwLockReadGuard};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use super::allreduce::{Contribution, ReduceStats, StreamingReducer};
 use super::engine::Engine;
+use super::pool::{GradJob, StepPool};
 use super::worker::WorkerShard;
 use crate::data::batcher::{Batch, Batcher, EvalBatcher};
 use crate::data::dataset::Dataset;
@@ -36,6 +52,7 @@ use crate::data::prefetch::Prefetch;
 use crate::metrics::{EvalAccumulator, LossMeter};
 use crate::model::init::{init_params, InitConfig};
 use crate::model::params::ParamSet;
+use crate::model::store::ParamStore;
 use crate::runtime::HypersVec;
 use crate::scaling::rules::{HyperSet, ScalingRule};
 use crate::scaling::warmup::Warmup;
@@ -55,12 +72,20 @@ pub struct TrainConfig {
     pub epochs: f64,
     /// Logical data-parallel workers.
     pub workers: usize,
-    /// Compute threads for the worker fan-out, parallel eval, and the
-    /// batch prefetcher: `1` = fully sequential (the seed behavior),
-    /// `0` = auto (one thread per available core, capped by the work).
-    /// The thread count never changes the math — contributions merge in
-    /// rank order regardless of arrival order.
+    /// Compute threads for the worker fan-out, the sharded apply stage,
+    /// parallel eval, and the batch prefetcher: `1` = fully sequential
+    /// (the seed behavior), `0` = auto (one thread per available core,
+    /// capped by the work). The thread count never changes the math —
+    /// contributions merge in rank order regardless of arrival order.
     pub threads: usize,
+    /// Apply-stage parameter shards: the embedding/wide tables are
+    /// partitioned row-wise (field-aligned) and dense tensors grouped so
+    /// `clip → L2 → Adam` runs per shard in parallel. `0` = auto (one
+    /// per core, capped by the categorical field count); `1` = the
+    /// serial leader path. Forced to 1 on the HLO engine (its apply
+    /// program rewrites whole tensors). The shard count never changes
+    /// the math (`rust/tests/shard_parity.rs`).
+    pub param_shards: usize,
     /// Warmup steps on the dense LR (0 = none).
     pub warmup_steps: usize,
     /// Embedding init sigma.
@@ -85,7 +110,8 @@ impl TrainConfig {
     }
 
     /// Resolve the thread count for a stage with `max_units` independent
-    /// units of work (shards for the fan-out, batches for eval).
+    /// units of work (worker shards for the fan-out, parameter shards
+    /// for apply, batches for eval).
     pub fn threads_for(&self, max_units: usize) -> usize {
         let cap = match self.threads {
             0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -113,7 +139,8 @@ pub struct TrainReport {
     pub train_loss_curve: Vec<f32>,
     pub epoch_evals: Vec<EpochEval>,
     pub reduce_stats: ReduceStats,
-    /// (phase, seconds) totals: data / step / eval.
+    /// (phase, seconds) totals: data / step / eval, plus the `grad`
+    /// (fan-out + reduce) and `apply` sub-phases of `step`.
     pub phase_seconds: Vec<(String, f64)>,
     pub wall_seconds: f64,
     pub diverged: bool,
@@ -129,18 +156,32 @@ impl TrainReport {
     }
 }
 
-/// The leader: owns parameters and drives workers.
+/// The leader: owns the engine and the shard-owned parameter store, and
+/// drives workers.
 pub struct Trainer {
     pub engine: Engine,
     pub cfg: TrainConfig,
-    pub params: ParamSet,
-    pub m: ParamSet,
-    pub v: ParamSet,
+    /// Shard-owned parameters + optimizer state (see [`ParamStore`]).
+    pub store: ParamStore,
     step: usize,
     /// Loop-invariant resolved hypers (scaling rule already applied).
     hypers: HyperSet,
     /// Loop-invariant warmup schedule.
     warmup: Warmup,
+}
+
+/// Resolve the apply-stage shard count: HLO applies whole tensors (so 1),
+/// otherwise `param_shards` (0 = one per core) capped by the field count.
+fn resolve_shards(engine: &Engine, cfg: &TrainConfig) -> usize {
+    if matches!(engine, Engine::Hlo(_)) {
+        return 1;
+    }
+    let n_fields = engine.schema().n_cat().max(1);
+    let requested = match cfg.param_shards {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        s => s,
+    };
+    requested.min(n_fields).max(1)
 }
 
 impl Trainer {
@@ -149,84 +190,51 @@ impl Trainer {
         ensure!(cfg.workers >= 1);
         let spec = engine.spec();
         let params = init_params(&spec, &InitConfig { seed: cfg.seed, embed_sigma: cfg.init_sigma });
-        let m = params.zeros_like();
-        let v = params.zeros_like();
+        let n_shards = resolve_shards(&engine, &cfg);
+        let store = ParamStore::new(engine.schema().clone(), params, n_shards)?;
         let hypers = cfg.scaled_hypers();
         let warmup = Warmup::new(cfg.warmup_steps);
-        Ok(Trainer { engine, cfg, params, m, v, step: 0, hypers, warmup })
+        Ok(Trainer { engine, cfg, store, step: 0, hypers, warmup })
     }
 
     pub fn step(&self) -> usize {
         self.step
     }
 
+    /// Shared read access to the current parameters.
+    pub fn params(&self) -> RwLockReadGuard<'_, ParamSet> {
+        self.store.read()
+    }
+
+    /// Save the full training state (params + Adam moments + lazy-Adam
+    /// rows + step counter) as a `CCKS` checkpoint.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.store.save_checkpoint(path, self.step as u64)
+    }
+
+    /// Resume from a checkpoint written by [`Trainer::save_checkpoint`]
+    /// (or a bare PR-1 `CCKP` params file): restores weights, moments and
+    /// the step counter, so warmup and Adam bias correction continue
+    /// exactly where the saved run stopped.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let step = self.store.load_checkpoint(path)?;
+        self.step = step as usize;
+        Ok(())
+    }
+
     /// One optimizer step on a prepared batch. Returns the batch loss.
     ///
-    /// Fan-out runs on `threads_for(workers)` scoped threads (ranks are
-    /// strided across threads so low ranks — merged first — finish
-    /// first); the reduction happens on this thread as contributions
-    /// arrive. `apply` then runs serially (see module docs).
-    ///
-    /// Threads are scoped per step: spawn cost is tens of µs against the
-    /// multi-ms shard gradients of the large batches this engine targets.
-    /// If µs-scale stepping ever matters, hoist a persistent pool to the
-    /// `train()` scope (noted in ROADMAP).
+    /// This standalone entry point (benches and figure experiments call
+    /// it directly) fans out inline — sequentially, or on a per-step
+    /// scope when `threads > 1`. `Trainer::train` instead routes steps
+    /// through its persistent [`StepPool`]; both paths produce bitwise
+    /// identical results.
     pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, ReduceStats)> {
         self.step += 1;
-        let hv = HypersVec::new(self.hypers)
-            .at_step(self.step)
-            .with_warmup(self.warmup.factor(self.step - 1));
-
-        let workers = self.cfg.workers;
-        let threads = self.cfg.threads_for(workers);
-        let (total, stats) = if threads <= 1 {
-            // sequential fan-out, same rank-ordered reduce
-            let mut reducer = StreamingReducer::new(workers);
-            for rank in 0..workers {
-                let c = WorkerShard::new(rank, workers)
-                    .compute(&self.engine, &self.params, batch)?;
-                reducer.push(rank, c)?;
-            }
-            reducer.finish()?
-        } else {
-            let engine = &self.engine;
-            let params = &self.params;
-            std::thread::scope(|s| -> Result<(Contribution, ReduceStats)> {
-                let (tx, rx) = std::sync::mpsc::channel();
-                for t in 0..threads {
-                    let tx = tx.clone();
-                    s.spawn(move || {
-                        let mut rank = t;
-                        while rank < workers {
-                            let c = WorkerShard::new(rank, workers)
-                                .compute(engine, params, batch);
-                            let failed = c.is_err();
-                            if tx.send((rank, c)).is_err() || failed {
-                                return;
-                            }
-                            rank += threads;
-                        }
-                    });
-                }
-                drop(tx); // reducer's recv loop ends when workers do
-                let mut reducer = StreamingReducer::new(workers);
-                for (rank, c) in rx {
-                    reducer.push(rank, c?)?;
-                }
-                reducer.finish()
-            })?
-        };
-
-        let mut grads = total.grads;
-        self.engine.apply(
-            &mut self.params,
-            &mut self.m,
-            &mut self.v,
-            &mut grads,
-            &total.counts,
-            &hv,
-        )?;
-        Ok((total.loss_weighted, stats))
+        let hv = hypers_for_step(self.hypers, self.warmup, self.step);
+        let (total, stats) = fan_out_inline(&self.engine, &self.store, &self.cfg, batch)?;
+        let loss = apply_contribution(&self.engine, &self.store, &self.cfg, &hv, total)?;
+        Ok((loss, stats))
     }
 
     /// Evaluate AUC/logloss on a dataset, fanning eval batches out over
@@ -234,63 +242,16 @@ impl Trainer {
     /// accumulator in batch order, so the result is independent of the
     /// thread count.
     pub fn evaluate(&self, ds: &Dataset) -> Result<(f64, f64)> {
-        // HLO fwd artifacts are shape-specialized: always use their exact
-        // batch (EvalBatcher pads small datasets up to it); the reference
-        // engine takes whatever fits.
-        let eval_batch = self
-            .engine
-            .eval_batch()
-            .unwrap_or_else(|| 1024.min(ds.n().max(1)));
-        let n_batches = ds.n().div_ceil(eval_batch);
-        let threads = self.cfg.threads_for(n_batches);
-        let mut acc = EvalAccumulator::new();
-        if threads <= 1 {
-            for batch in EvalBatcher::new(ds, eval_batch) {
-                let logits = self.engine.fwd(&self.params, &batch)?;
-                acc.push(&logits, batch.y.as_f32()?, batch.valid);
-            }
-        } else {
-            let engine = &self.engine;
-            let params = &self.params;
-            type EvalOut = (usize, Vec<f32>, Vec<f32>, usize);
-            let mut results = std::thread::scope(|s| -> Result<Vec<EvalOut>> {
-                let mut handles = Vec::with_capacity(threads);
-                for t in 0..threads {
-                    handles.push(s.spawn(move || -> Result<Vec<EvalOut>> {
-                        let mut out = Vec::new();
-                        let mut i = t;
-                        while i < n_batches {
-                            let batch = EvalBatcher::nth_batch(ds, eval_batch, i)
-                                .ok_or_else(|| anyhow::anyhow!("eval batch {i} out of range"))?;
-                            let logits = engine.fwd(params, &batch)?;
-                            let y = batch.y.as_f32()?.to_vec();
-                            out.push((i, logits, y, batch.valid));
-                            i += threads;
-                        }
-                        Ok(out)
-                    }));
-                }
-                let mut all = Vec::with_capacity(n_batches);
-                for h in handles {
-                    all.extend(h.join().expect("eval worker panicked")?);
-                }
-                Ok(all)
-            })?;
-            results.sort_unstable_by_key(|(i, ..)| *i);
-            for (_, logits, y, valid) in &results {
-                acc.push(logits, y, *valid);
-            }
-        }
-        Ok((acc.auc(), acc.logloss()))
+        evaluate_with(&self.engine, &self.store, &self.cfg, ds)
     }
 
     /// Full training run.
     ///
-    /// With `threads != 1` the batcher runs on a scoped prefetch thread
-    /// (double-buffered), overlapping batch materialization and the
-    /// touched-id sort with the previous step's compute; `threads == 1`
-    /// keeps the fully inline seed path. Both orders of batches are
-    /// identical.
+    /// Opens one thread scope for the whole run holding the prefetch
+    /// thread (batch `N+1` materializes while step `N` trains) and the
+    /// persistent [`StepPool`] (when `threads != 1` and `workers > 1`).
+    /// `threads == 1` keeps the fully inline sequential seed path. Batch
+    /// order and all results are identical either way.
     pub fn train(&mut self, train: &Dataset, test: &Dataset) -> Result<TrainReport> {
         let t0 = Instant::now();
         let steps_per_epoch = train.n() / self.cfg.batch;
@@ -302,7 +263,17 @@ impl Trainer {
         // only a single worker consumes the whole batch (and hence its
         // touched cache); shards compute their own slices' touched sets
         let warm_touched = self.cfg.workers == 1;
-        if self.cfg.threads_for(2) > 1 {
+
+        // split borrows: the scope threads share the engine and the
+        // store's locks while the loop advances the step counter
+        let engine = &self.engine;
+        let store = &self.store;
+        let cfg = &self.cfg;
+        let hypers = self.hypers;
+        let warmup = self.warmup;
+        let step = &mut self.step;
+
+        if cfg.threads_for(2) > 1 {
             std::thread::scope(|scope| {
                 let feed = Prefetch::spawn(
                     scope,
@@ -315,100 +286,297 @@ impl Trainer {
                     }),
                     2,
                 );
-                self.train_loop(t0, total_steps, steps_per_epoch, test, || {
-                    feed.recv()
-                        .ok_or_else(|| anyhow::anyhow!("prefetch producer exited early"))
-                })
+                let pool_threads = cfg.threads_for(cfg.workers);
+                let pool = (pool_threads > 1)
+                    .then(|| StepPool::spawn(scope, pool_threads, engine, store.weights_lock()));
+                run_loop(
+                    engine,
+                    store,
+                    cfg,
+                    hypers,
+                    warmup,
+                    step,
+                    pool.as_ref(),
+                    t0,
+                    total_steps,
+                    steps_per_epoch,
+                    test,
+                    || {
+                        feed.recv()
+                            .ok_or_else(|| anyhow::anyhow!("prefetch producer exited early"))
+                    },
+                )
             })
         } else {
-            self.train_loop(t0, total_steps, steps_per_epoch, test, || Ok(batcher.next_batch()))
+            run_loop(
+                engine,
+                store,
+                cfg,
+                hypers,
+                warmup,
+                step,
+                None,
+                t0,
+                total_steps,
+                steps_per_epoch,
+                test,
+                || Ok(batcher.next_batch()),
+            )
         }
     }
+}
 
-    /// The step loop shared by the prefetched and inline data paths.
-    fn train_loop(
-        &mut self,
-        t0: Instant,
-        total_steps: usize,
-        steps_per_epoch: usize,
-        test: &Dataset,
-        mut next_batch: impl FnMut() -> Result<Batch>,
-    ) -> Result<TrainReport> {
-        let mut sw = Stopwatch::new();
-        let mut loss_curve = Vec::with_capacity(total_steps);
-        let mut epoch_evals = Vec::new();
-        let mut reduce_total = ReduceStats::default();
-        let mut epoch_loss = LossMeter::new();
-        let mut diverged = false;
+/// The per-step hypers vector: warmup factor on the dense LR at 1-based
+/// `step`. Shared by `Trainer::train_step` and the pooled `run_loop` so
+/// the two step paths cannot drift.
+fn hypers_for_step(hypers: HyperSet, warmup: Warmup, step: usize) -> HypersVec {
+    HypersVec::new(hypers).at_step(step).with_warmup(warmup.factor(step - 1))
+}
 
-        for s in 1..=total_steps {
-            sw.start("data");
-            let batch = next_batch()?;
-            sw.start("step");
-            let (loss, rstats) = self.train_step(&batch)?;
-            sw.stop();
-            reduce_total.rounds += rstats.rounds;
-            reduce_total.bytes_moved += rstats.bytes_moved;
-            reduce_total.workers = rstats.workers;
-            loss_curve.push(loss);
-            epoch_loss.update(loss as f64);
-            if !loss.is_finite() {
-                diverged = true;
-                break;
-            }
+/// Gradient fan-out through the persistent pool: one job per worker
+/// rank, replies merged in rank order as they land.
+fn fan_out_pool(
+    pool: &StepPool,
+    workers: usize,
+    batch: &Arc<Batch>,
+) -> Result<(Contribution, ReduceStats)> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    for rank in 0..workers {
+        pool.submit(GradJob {
+            rank,
+            world: workers,
+            batch: Arc::clone(batch),
+            reply: tx.clone(),
+        });
+    }
+    drop(tx); // the reducer's recv loop ends when the last reply lands
+    let mut reducer = StreamingReducer::new(workers);
+    for (rank, c) in rx {
+        reducer.push(rank, c?)?;
+    }
+    reducer.finish()
+}
 
-            let at_epoch_end = s % steps_per_epoch == 0;
-            if at_epoch_end {
-                let epoch = s / steps_per_epoch;
-                let do_eval = self.cfg.eval_every_epochs > 0
-                    && epoch % self.cfg.eval_every_epochs == 0;
-                if do_eval {
-                    sw.start("eval");
-                    let (auc, ll) = self.evaluate(test)?;
-                    sw.stop();
-                    epoch_evals.push(EpochEval {
-                        epoch,
-                        train_loss: epoch_loss.mean(),
-                        test_auc: auc,
-                        test_logloss: ll,
-                    });
-                    if self.cfg.verbose {
-                        println!(
-                            "  epoch {epoch:>2}  train_loss {:.4}  test_auc {:.4}  test_logloss {:.4}",
-                            epoch_loss.mean(),
-                            auc,
-                            ll
-                        );
-                    }
-                }
-                epoch_loss.reset();
-            }
+/// Inline gradient fan-out (no pool): sequential when `threads <= 1`,
+/// otherwise a per-step scope (the standalone `train_step` path). Ranks
+/// are strided across threads so low ranks — merged first — finish
+/// first.
+fn fan_out_inline(
+    engine: &Engine,
+    store: &ParamStore,
+    cfg: &TrainConfig,
+    batch: &Batch,
+) -> Result<(Contribution, ReduceStats)> {
+    let workers = cfg.workers;
+    let threads = cfg.threads_for(workers);
+    let guard = store.read();
+    let params: &ParamSet = &guard;
+    if threads <= 1 {
+        let mut reducer = StreamingReducer::new(workers);
+        for rank in 0..workers {
+            let c = WorkerShard::new(rank, workers).compute(engine, params, batch)?;
+            reducer.push(rank, c)?;
         }
-        sw.stop();
-
-        let (final_auc, final_logloss) = if diverged {
-            (f64::NAN, f64::NAN)
-        } else {
-            let (a, l) = self.evaluate(test)?;
-            (a, l)
-        };
-
-        Ok(TrainReport {
-            steps: loss_curve.len(),
-            final_auc,
-            final_logloss,
-            train_loss_curve: loss_curve,
-            epoch_evals,
-            reduce_stats: reduce_total,
-            phase_seconds: sw
-                .summary()
-                .into_iter()
-                .map(|(n, d)| (n, d.as_secs_f64()))
-                .collect(),
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            diverged,
+        reducer.finish()
+    } else {
+        std::thread::scope(|s| -> Result<(Contribution, ReduceStats)> {
+            let (tx, rx) = std::sync::mpsc::channel();
+            for t in 0..threads {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let mut rank = t;
+                    while rank < workers {
+                        let c = WorkerShard::new(rank, workers).compute(engine, params, batch);
+                        let failed = c.is_err();
+                        if tx.send((rank, c)).is_err() || failed {
+                            return;
+                        }
+                        rank += threads;
+                    }
+                });
+            }
+            drop(tx);
+            let mut reducer = StreamingReducer::new(workers);
+            for (rank, c) in rx {
+                reducer.push(rank, c?)?;
+            }
+            reducer.finish()
         })
     }
+}
+
+/// Apply a reduced contribution through the store's sharded path.
+fn apply_contribution(
+    engine: &Engine,
+    store: &ParamStore,
+    cfg: &TrainConfig,
+    hv: &HypersVec,
+    total: Contribution,
+) -> Result<f32> {
+    let Contribution { mut grads, counts, loss_weighted, .. } = total;
+    engine.apply_store(store, &mut grads, &counts, hv, cfg.threads_for(store.n_shards()))?;
+    Ok(loss_weighted)
+}
+
+/// Parallel evaluation over a read snapshot of the store's weights.
+fn evaluate_with(
+    engine: &Engine,
+    store: &ParamStore,
+    cfg: &TrainConfig,
+    ds: &Dataset,
+) -> Result<(f64, f64)> {
+    // HLO fwd artifacts are shape-specialized: always use their exact
+    // batch (EvalBatcher pads small datasets up to it); the reference
+    // engine takes whatever fits.
+    let eval_batch = engine.eval_batch().unwrap_or_else(|| 1024.min(ds.n().max(1)));
+    let n_batches = ds.n().div_ceil(eval_batch);
+    let threads = cfg.threads_for(n_batches);
+    let guard = store.read();
+    let params: &ParamSet = &guard;
+    let mut acc = EvalAccumulator::new();
+    if threads <= 1 {
+        for batch in EvalBatcher::new(ds, eval_batch) {
+            let logits = engine.fwd(params, &batch)?;
+            acc.push(&logits, batch.y.as_f32()?, batch.valid);
+        }
+    } else {
+        type EvalOut = (usize, Vec<f32>, Vec<f32>, usize);
+        let mut results = std::thread::scope(|s| -> Result<Vec<EvalOut>> {
+            let mut handles = Vec::with_capacity(threads);
+            for t in 0..threads {
+                handles.push(s.spawn(move || -> Result<Vec<EvalOut>> {
+                    let mut out = Vec::new();
+                    let mut i = t;
+                    while i < n_batches {
+                        let batch = EvalBatcher::nth_batch(ds, eval_batch, i)
+                            .ok_or_else(|| anyhow::anyhow!("eval batch {i} out of range"))?;
+                        let logits = engine.fwd(params, &batch)?;
+                        let y = batch.y.as_f32()?.to_vec();
+                        out.push((i, logits, y, batch.valid));
+                        i += threads;
+                    }
+                    Ok(out)
+                }));
+            }
+            let mut all = Vec::with_capacity(n_batches);
+            for h in handles {
+                all.extend(h.join().expect("eval worker panicked")?);
+            }
+            Ok(all)
+        })?;
+        results.sort_unstable_by_key(|(i, ..)| *i);
+        for (_, logits, y, valid) in &results {
+            acc.push(logits, y, *valid);
+        }
+    }
+    Ok((acc.auc(), acc.logloss()))
+}
+
+/// The step loop shared by the pooled and inline paths.
+#[allow(clippy::too_many_arguments)]
+fn run_loop(
+    engine: &Engine,
+    store: &ParamStore,
+    cfg: &TrainConfig,
+    hypers: HyperSet,
+    warmup: Warmup,
+    step: &mut usize,
+    pool: Option<&StepPool>,
+    t0: Instant,
+    total_steps: usize,
+    steps_per_epoch: usize,
+    test: &Dataset,
+    mut next_batch: impl FnMut() -> Result<Batch>,
+) -> Result<TrainReport> {
+    let mut sw = Stopwatch::new();
+    let mut grad_secs = 0.0f64;
+    let mut apply_secs = 0.0f64;
+    let mut loss_curve = Vec::with_capacity(total_steps);
+    let mut epoch_evals = Vec::new();
+    let mut reduce_total = ReduceStats::default();
+    let mut epoch_loss = LossMeter::new();
+    let mut diverged = false;
+
+    for s in 1..=total_steps {
+        sw.start("data");
+        let batch = Arc::new(next_batch()?);
+        sw.start("step");
+        *step += 1;
+        let hv = hypers_for_step(hypers, warmup, *step);
+        let t_grad = Instant::now();
+        let (total, rstats) = match pool {
+            Some(pool) => fan_out_pool(pool, cfg.workers, &batch)?,
+            None => fan_out_inline(engine, store, cfg, &batch)?,
+        };
+        grad_secs += t_grad.elapsed().as_secs_f64();
+        let t_apply = Instant::now();
+        let loss = apply_contribution(engine, store, cfg, &hv, total)?;
+        apply_secs += t_apply.elapsed().as_secs_f64();
+        sw.stop();
+        reduce_total.rounds += rstats.rounds;
+        reduce_total.bytes_moved += rstats.bytes_moved;
+        reduce_total.workers = rstats.workers;
+        loss_curve.push(loss);
+        epoch_loss.update(loss as f64);
+        if !loss.is_finite() {
+            diverged = true;
+            break;
+        }
+
+        let at_epoch_end = s % steps_per_epoch == 0;
+        if at_epoch_end {
+            let epoch = s / steps_per_epoch;
+            let do_eval =
+                cfg.eval_every_epochs > 0 && epoch % cfg.eval_every_epochs == 0;
+            if do_eval {
+                sw.start("eval");
+                let (auc, ll) = evaluate_with(engine, store, cfg, test)?;
+                sw.stop();
+                epoch_evals.push(EpochEval {
+                    epoch,
+                    train_loss: epoch_loss.mean(),
+                    test_auc: auc,
+                    test_logloss: ll,
+                });
+                if cfg.verbose {
+                    println!(
+                        "  epoch {epoch:>2}  train_loss {:.4}  test_auc {:.4}  test_logloss {:.4}",
+                        epoch_loss.mean(),
+                        auc,
+                        ll
+                    );
+                }
+            }
+            epoch_loss.reset();
+        }
+    }
+    sw.stop();
+
+    let (final_auc, final_logloss) = if diverged {
+        (f64::NAN, f64::NAN)
+    } else {
+        evaluate_with(engine, store, cfg, test)?
+    };
+
+    let mut phase_seconds: Vec<(String, f64)> = sw
+        .summary()
+        .into_iter()
+        .map(|(n, d)| (n, d.as_secs_f64()))
+        .collect();
+    phase_seconds.push(("grad".to_string(), grad_secs));
+    phase_seconds.push(("apply".to_string(), apply_secs));
+
+    Ok(TrainReport {
+        steps: loss_curve.len(),
+        final_auc,
+        final_logloss,
+        train_loss_curve: loss_curve,
+        epoch_evals,
+        reduce_stats: reduce_total,
+        phase_seconds,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        diverged,
+    })
 }
 
 /// Convenience: slice the first `n` rows of a dataset (cheap experiment

@@ -170,6 +170,7 @@ fn run_with_zeta_zero(
         epochs: ctx.epochs,
         workers: ctx.workers,
         threads: 0,
+        param_shards: 0,
         warmup_steps: steps_per_epoch,
         init_sigma: spec.init_sigma.unwrap_or(preset.init_sigma_cowclip),
         seed: ctx.seed,

@@ -193,7 +193,8 @@ pub fn run_one(ctx: &ExpContext, spec: &RunSpec) -> Result<RunResult> {
         rule: spec.rule,
         epochs: ctx.epochs,
         workers: ctx.workers,
-        threads: 0, // auto: experiments get the parallel engine for free
+        threads: 0,      // auto: experiments get the parallel engine for free
+        param_shards: 0, // auto: sharded apply too
         warmup_steps,
         init_sigma,
         seed: ctx.seed,

@@ -48,7 +48,8 @@ pub fn fig1(ctx: &ExpContext) -> Result<Report> {
             rule: ScalingRule::CowClip,
             epochs: 1.0,
             workers: 1,
-            threads: 1, // sequential: this figure times the raw step
+            threads: 1,      // sequential: this figure times the raw step
+            param_shards: 1, // serial apply for the same reason
             warmup_steps: 0,
             init_sigma: preset.init_sigma_cowclip,
             seed: ctx.seed,
@@ -168,6 +169,7 @@ pub fn fig5(ctx: &ExpContext) -> Result<Report> {
         epochs: ctx.epochs.min(1.0),
         workers: 1,
         threads: 0,
+        param_shards: 0,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: ctx.seed,
@@ -185,8 +187,10 @@ pub fn fig5(ctx: &ExpContext) -> Result<Report> {
     // one gradient snapshot at batch 512
     let mut snap_batcher = Batcher::new(train, 512, 2);
     let batch = snap_batcher.next_batch();
-    let out = trainer.engine.grad(&trainer.params, &batch)?;
-    let d = trainer.params.spec[0].shape[1];
+    let params = trainer.params();
+    let out = trainer.engine.grad(&params, &batch)?;
+    let d = params.spec[0].shape[1];
+    drop(params);
     // densify for this diagnostic (the embed grad is sparse on the
     // reference path, dense on the HLO path)
     let g_t = out.grads[0].to_tensor();
@@ -246,6 +250,7 @@ pub fn fig7_8(ctx: &ExpContext) -> Result<Report> {
             epochs: ctx.epochs,
             workers: 1,
             threads: 0,
+            param_shards: 0,
             warmup_steps: steps_per_epoch,
             init_sigma: preset.init_sigma_cowclip,
             seed: ctx.seed,

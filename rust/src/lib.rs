@@ -30,26 +30,45 @@
 //! `tensor::GradTensor` payloads (the HLO path) flow through the same
 //! coordinator types and densify only at the apply-program boundary.
 //!
-//! ## Parallel execution
+//! ## Parallel execution and the shard-owned parameter store
 //!
-//! Every step runs on a parallel engine built from `std::thread::scope`
-//! + channels (no dependencies). The leader ([`coordinator::Trainer`])
-//! owns `ParamSet` exclusively; the worker fan-out shares one `&Engine`
-//! / `&ParamSet` / `&Batch` across up to `TrainConfig::threads` scoped
-//! threads (`Engine` is `Sync`, `grad`/`fwd` are `&self`), and finished
-//! shard contributions stream over a channel into a
-//! [`coordinator::StreamingReducer`] that merges them **in rank order**
-//! as they land — the slowest shard's gradient overlaps the reduction of
-//! everything before it, and the fixed merge order makes any thread
-//! count bitwise-reproduce the sequential run
-//! (`rust/tests/parallel_parity.rs`). `apply` stays single-threaded on
-//! the leader: it mutates params and lazy-Adam row state in place, is
-//! O(touched·d) cheap, and a serial apply is trivially deterministic. A
-//! scoped [`data::Prefetch`] thread double-buffers the batch pipeline
+//! Every step runs on a parallel engine built from std threads +
+//! channels (no dependencies). Parameters and optimizer state live in
+//! the shard-owned [`model::store::ParamStore`] — weights behind a
+//! `RwLock`, Adam moments / lazy-Adam rows / maintained per-field norms
+//! behind a `Mutex` — which inverts the old leader-owned-`ParamSet`
+//! model so every stage of the step can parallelize:
+//!
+//! * **Fan-out** — `WorkerShard::compute` jobs run on a persistent
+//!   [`coordinator::StepPool`] spawned once per `train()` (no per-step
+//!   thread spawn); workers take read locks on the weights and jobs
+//!   carry the batch as an `Arc`.
+//! * **Reduce-as-ready** — contributions stream into a
+//!   [`coordinator::StreamingReducer`] that merges them **in rank
+//!   order** as they land — the slowest shard's gradient overlaps the
+//!   reduction of everything before it, and the fixed merge order makes
+//!   any thread count bitwise-reproduce the sequential run
+//!   (`rust/tests/parallel_parity.rs`).
+//! * **Sharded apply** — the merged gradient is partitioned by the
+//!   store's field-aligned `ShardPlan` (row ranges for the embed/wide
+//!   tables, grouped whole tensors for the dense params) and CowClip's
+//!   `clip → L2 → Adam` runs per shard on scoped threads, each owning
+//!   disjoint `&mut` slices of weights + moments. Field alignment keeps
+//!   every clip mode shard-local (`Global` gets its whole-table norm
+//!   precomputed), and maintained per-field `Σw²` makes sparse AdaField
+//!   O(touched) instead of re-scanning the table. Any shard count
+//!   bitwise-matches the serial path (`rust/tests/shard_parity.rs`).
+//!
+//! A scoped [`data::Prefetch`] thread double-buffers the batch pipeline
 //! (materialization + the touched-id sort for step `N+1` overlap step
 //! `N`), and eval batches fan out the same way with order-preserving
 //! accumulation. `threads = 1` reproduces the fully sequential seed
-//! path; `0` (auto) uses one thread per core.
+//! path; `0` (auto) uses one thread per core; `param_shards` sizes the
+//! apply stage the same way. Checkpoints (`CCKS`) carry params, both
+//! Adam moments, the lazy-Adam row clocks and the step counter, in a
+//! shard-count-independent layout that still round-trips the PR-1
+//! `CCKP` params format — `--resume` continues warmup and bias
+//! correction exactly where a run stopped.
 //!
 //! ## Features
 //!

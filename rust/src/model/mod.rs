@@ -2,12 +2,16 @@
 //!
 //! The L2 compile path owns the model *math*; this module owns the model
 //! *state*: positional parameter layout (from `artifacts/manifest.json`),
-//! host-side initialization matching the paper's recipe, and checkpoints.
+//! host-side initialization matching the paper's recipe, the shard-owned
+//! [`store::ParamStore`] (weights + Adam moments + maintained per-field
+//! norms, partitioned for the parallel apply stage), and checkpoints.
 
 pub mod init;
 pub mod manifest;
 pub mod params;
+pub mod store;
 
 pub use init::{init_params, InitConfig};
 pub use manifest::{Artifact, Manifest, ParamEntry};
 pub use params::ParamSet;
+pub use store::{ApplyCtx, ParamStore, ShardPlan};

@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 use super::manifest::ParamEntry;
 use crate::tensor::Tensor;
 
-const CKPT_MAGIC: &[u8; 4] = b"CCKP";
+pub(crate) const CKPT_MAGIC: &[u8; 4] = b"CCKP";
 
 /// Ordered model parameters (or Adam moments) matching a manifest spec.
 #[derive(Clone, Debug)]
@@ -79,6 +79,16 @@ impl ParamSet {
         let f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         let mut w = BufWriter::new(f);
+        self.write_block(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Serialize as one self-describing `CCKP` block (magic + names +
+    /// f32 payloads) — the byte layout [`ParamSet::save`] has always
+    /// written; the sharded [`super::store::ParamStore`] checkpoint
+    /// embeds three of these back to back.
+    pub fn write_block<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_all(CKPT_MAGIC)?;
         w.write_all(&(self.len() as u32).to_le_bytes())?;
         for (e, t) in self.spec.iter().zip(&self.tensors) {
@@ -90,7 +100,6 @@ impl ParamSet {
                 w.write_all(&x.to_le_bytes())?;
             }
         }
-        w.flush()?;
         Ok(())
     }
 
@@ -99,11 +108,21 @@ impl ParamSet {
         let f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
         let mut r = BufReader::new(f);
+        Self::read_block(&mut r, spec)
+    }
+
+    /// Read one `CCKP` block (magic included) against a known spec.
+    pub fn read_block<R: Read>(r: &mut R, spec: &[ParamEntry]) -> Result<ParamSet> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
         if &magic != CKPT_MAGIC {
             bail!("not a checkpoint file");
         }
+        Self::read_block_body(r, spec)
+    }
+
+    /// Read a `CCKP` block whose magic has already been consumed.
+    pub(crate) fn read_block_body<R: Read>(r: &mut R, spec: &[ParamEntry]) -> Result<ParamSet> {
         let mut nb = [0u8; 4];
         r.read_exact(&mut nb)?;
         let n = u32::from_le_bytes(nb) as usize;

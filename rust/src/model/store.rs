@@ -1,0 +1,1080 @@
+//! Shard-owned parameter store: weights, Adam moments, lazy-Adam row
+//! state and maintained per-field norms, partitioned for a parallel
+//! apply stage.
+//!
+//! The PR-2 trainer kept one leader-owned `ParamSet` plus two dense
+//! moment `ParamSet`s, which forced CowClip's `clip → L2 → Adam → apply`
+//! to run serially over the full table — exactly the embedding-heavy
+//! stage the paper says dominates CTR training. [`ParamStore`] inverts
+//! that ownership:
+//!
+//! * **Vocab-shaped tables** (`embed`/`wide` groups) are partitioned
+//!   row-wise into shards whose boundaries are **field-aligned**, so
+//!   every clipping mode stays shard-local (`Global` gets its whole-table
+//!   gradient norm precomputed once). Each shard owns its rows' weights,
+//!   Adam moments and lazy-Adam last-touch steps for the duration of an
+//!   apply.
+//! * **Dense parameters** are grouped onto shards greedily by scalar
+//!   count, so the MLP/cross tensors spread across the same owners.
+//! * **Per-field `Σw²`** is maintained incrementally as rows change
+//!   (subtract the old row's mass, add the new), making sparse AdaField's
+//!   adaptive threshold an O(1) read per field instead of the O(V · d)
+//!   table scan the ablation mode used to pay every step.
+//!
+//! Shard execution is embarrassingly parallel — every work item holds
+//! disjoint `&mut` slices carved with `split_at_mut` — so the result is
+//! bitwise identical at any shard/thread count (`rust/tests/
+//! shard_parity.rs` pins this against the legacy serial oracle).
+//!
+//! Weights live behind a `RwLock` and optimizer state behind a `Mutex`:
+//! the persistent step-worker pool reads parameters concurrently during
+//! the gradient fan-out, and the apply stage takes the write side — no
+//! per-step thread spawn, no copies.
+//!
+//! # Checkpoints
+//!
+//! [`ParamStore::save_checkpoint`] writes a `CCKS` file: a small header
+//! (version + optimizer step), the params / m / v as three PR-1 `CCKP`
+//! blocks, then the per-row lazy-Adam step tables. The layout is
+//! canonical (dense, shard-count independent), so any `--param-shards`
+//! value loads any checkpoint, and [`ParamStore::load_checkpoint`] also
+//! accepts a bare `CCKP` params file (moments reset, step 0).
+
+use std::borrow::Cow;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::{Mutex, RwLock, RwLockReadGuard};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::manifest::ParamEntry;
+use super::params::{ParamSet, CKPT_MAGIC};
+use crate::clip::{clip_embedding_grads_range, grad_l2_norm, ClipMode, ClipParams};
+use crate::data::schema::Schema;
+use crate::optim::{lazy_step_rows, Adam, AdamConfig};
+use crate::tensor::{GradTensor, SparseRows, Tensor};
+
+const STORE_MAGIC: &[u8; 4] = b"CCKS";
+const STORE_VERSION: u32 = 1;
+
+/// How parameters are split across apply-stage shard owners.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    n_shards: usize,
+    /// The schema's `(global_offset, vocab)` per categorical field,
+    /// collected once so the per-step apply never re-walks the schema.
+    fields: Vec<(usize, usize)>,
+    /// Ascending field cuts (len `n_shards + 1`): shard `s` owns fields
+    /// `[cuts[s], cuts[s+1])` of every vocab-shaped table.
+    field_cuts: Vec<usize>,
+    /// Global row ranges per shard, contiguous and covering `[0, V)`.
+    row_ranges: Vec<(usize, usize)>,
+    /// Per param: row-split vocab table or whole-tensor owner.
+    assignments: Vec<Assignment>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Assignment {
+    /// Vocab-shaped table (`embed`/`wide`): rows split by `row_ranges`.
+    Rows,
+    /// Dense parameter: owned whole by one shard.
+    Whole(usize),
+}
+
+impl ShardPlan {
+    /// Build a plan: field-aligned row cuts balanced by vocab mass, dense
+    /// tensors spread greedily by scalar count. Deterministic.
+    pub fn build(spec: &[ParamEntry], schema: &Schema, n_shards: usize) -> Result<ShardPlan> {
+        ensure!(n_shards >= 1, "shard count must be >= 1");
+        let fields: Vec<(usize, usize)> = schema.fields().collect();
+        let total = schema.total_vocab();
+        let cuts = field_cuts(&fields, n_shards);
+        let row_ranges: Vec<(usize, usize)> = (0..n_shards)
+            .map(|s| (row_of(&fields, cuts[s], total), row_of(&fields, cuts[s + 1], total)))
+            .collect();
+        let mut dense_load = vec![0usize; n_shards];
+        let mut assignments = Vec::with_capacity(spec.len());
+        for e in spec {
+            if matches!(e.group.as_str(), "embed" | "wide") {
+                ensure!(
+                    e.shape[0] == total,
+                    "vocab table {} has {} rows but the schema vocab is {total}",
+                    e.name,
+                    e.shape[0]
+                );
+                assignments.push(Assignment::Rows);
+            } else {
+                let s = (0..n_shards).min_by_key(|&s| (dense_load[s], s)).unwrap();
+                dense_load[s] += e.numel();
+                assignments.push(Assignment::Whole(s));
+            }
+        }
+        Ok(ShardPlan { n_shards, fields, field_cuts: cuts, row_ranges, assignments })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Global row ranges per shard (field-aligned, contiguous, covering).
+    pub fn row_ranges(&self) -> &[(usize, usize)] {
+        &self.row_ranges
+    }
+
+    /// Field-index span `[lo, hi)` owned by shard `s`.
+    pub fn field_span(&self, s: usize) -> (usize, usize) {
+        (self.field_cuts[s], self.field_cuts[s + 1])
+    }
+}
+
+/// Proportional field cuts: shard `s` stops once the cumulative vocab
+/// reaches `total * (s + 1) / n` (rounded up). Shards can be empty when
+/// `n` exceeds the field count or one field dominates the vocab.
+fn field_cuts(fields: &[(usize, usize)], n: usize) -> Vec<usize> {
+    let total: usize = fields.iter().map(|&(_, v)| v).sum();
+    let mut cuts = Vec::with_capacity(n + 1);
+    cuts.push(0);
+    let mut f = 0usize;
+    let mut acc = 0usize;
+    for s in 1..n {
+        let target = (total * s).div_ceil(n);
+        while f < fields.len() && acc < target {
+            acc += fields[f].1;
+            f += 1;
+        }
+        cuts.push(f);
+    }
+    cuts.push(fields.len());
+    cuts
+}
+
+fn row_of(fields: &[(usize, usize)], cut: usize, total: usize) -> usize {
+    if cut < fields.len() {
+        fields[cut].0
+    } else {
+        total
+    }
+}
+
+/// Everything the apply stage needs besides the gradients: resolved
+/// hyperparameters (warmup already folded into `lr_dense`), the clip
+/// mode, Adam constants, and the 1-based optimizer step.
+#[derive(Clone, Copy, Debug)]
+pub struct ApplyCtx {
+    pub clip: ClipMode,
+    pub clip_params: ClipParams,
+    pub lr_embed: f32,
+    pub lr_dense: f32,
+    pub l2_embed: f32,
+    pub adam: AdamConfig,
+    /// 1-based optimizer step.
+    pub step: u32,
+}
+
+/// Mutable optimizer state, locked as one unit during apply.
+struct OptState {
+    m: ParamSet,
+    v: ParamSet,
+    /// Per-row 1-based last-update step of each vocab table (lazy Adam);
+    /// `None` for dense parameters.
+    last_step: Vec<Option<Vec<u32>>>,
+    /// Maintained per-field `Σw²` (f64) of each `embed`-group table;
+    /// `None` elsewhere. AdaField reads `sqrt` of these.
+    field_sqnorms: Vec<Option<Vec<f64>>>,
+}
+
+/// The shard-owned parameter store (see module docs).
+pub struct ParamStore {
+    spec: Vec<ParamEntry>,
+    schema: Schema,
+    plan: ShardPlan,
+    weights: RwLock<ParamSet>,
+    opt: Mutex<OptState>,
+}
+
+impl ParamStore {
+    /// Wrap freshly initialized parameters; moments start at zero and the
+    /// per-field norms are computed once from the initial weights.
+    pub fn new(schema: Schema, params: ParamSet, n_shards: usize) -> Result<ParamStore> {
+        let spec = params.spec.clone();
+        let plan = ShardPlan::build(&spec, &schema, n_shards)?;
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        let last_step = spec
+            .iter()
+            .map(|e| match e.group.as_str() {
+                "embed" | "wide" => Some(vec![0u32; e.shape[0]]),
+                _ => None,
+            })
+            .collect();
+        let field_sqnorms = init_sqnorms(&spec, &schema, &params)?;
+        Ok(ParamStore {
+            spec,
+            schema,
+            plan,
+            weights: RwLock::new(params),
+            opt: Mutex::new(OptState { m, v, last_step, field_sqnorms }),
+        })
+    }
+
+    pub fn spec(&self) -> &[ParamEntry] {
+        &self.spec
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Shared read access to the weights (gradient fan-out, eval, tests).
+    pub fn read(&self) -> RwLockReadGuard<'_, ParamSet> {
+        self.weights.read().unwrap()
+    }
+
+    /// The weight lock itself — captured by the persistent step-worker
+    /// pool so workers can read parameters without borrowing the store.
+    pub fn weights_lock(&self) -> &RwLock<ParamSet> {
+        &self.weights
+    }
+
+    /// Owned copy of the current weights.
+    pub fn snapshot(&self) -> ParamSet {
+        self.read().clone()
+    }
+
+    /// Owned copies of the Adam moments `(m, v)`.
+    pub fn moments(&self) -> (ParamSet, ParamSet) {
+        let opt = self.opt.lock().unwrap();
+        (opt.m.clone(), opt.v.clone())
+    }
+
+    /// Exclusive access to (params, m, v) as whole sets — the HLO apply
+    /// program rewrites all three wholesale. The maintained field norms
+    /// are *not* refreshed here (the HLO path never reads them; a
+    /// checkpoint load recomputes them from the stored weights).
+    pub fn with_all_mut<T>(
+        &self,
+        f: impl FnOnce(&mut ParamSet, &mut ParamSet, &mut ParamSet) -> Result<T>,
+    ) -> Result<T> {
+        let mut w = self.weights.write().unwrap();
+        let mut opt = self.opt.lock().unwrap();
+        let OptState { m, v, .. } = &mut *opt;
+        f(&mut w, m, v)
+    }
+
+    /// CowClip's `clip → L2 → Adam → apply`, executed per parameter
+    /// shard. With `threads > 1` (and more than one shard) the shards run
+    /// on scoped threads; every work item owns disjoint `&mut` slices, so
+    /// the result is bitwise identical at any shard/thread count.
+    ///
+    /// Vocab-table gradients normally arrive row-sparse; a dense gradient
+    /// (the diagnostic `dense_grads` mode) is converted to an all-rows
+    /// sparse payload first — lazy Adam over every row reproduces the
+    /// eager update exactly, so one sharded code path serves both.
+    pub fn apply_sharded(
+        &self,
+        ctx: &ApplyCtx,
+        grads: &mut [GradTensor],
+        counts: &SparseRows,
+        threads: usize,
+    ) -> Result<()> {
+        ensure!(
+            grads.len() == self.spec.len(),
+            "grad arity {} != spec {}",
+            grads.len(),
+            self.spec.len()
+        );
+        let mut w_guard = self.weights.write().unwrap();
+        let mut opt_guard = self.opt.lock().unwrap();
+        let params: &mut ParamSet = &mut w_guard;
+        let OptState { m, v, last_step, field_sqnorms } = &mut *opt_guard;
+
+        // 0. densified vocab-table grads -> all-rows sparse (see above)
+        for (e, g) in self.spec.iter().zip(grads.iter_mut()) {
+            if !matches!(e.group.as_str(), "embed" | "wide")
+                || matches!(g, GradTensor::Sparse(_))
+            {
+                continue;
+            }
+            let rows = e.shape[0];
+            let d = e.numel() / rows;
+            let taken = std::mem::replace(g, GradTensor::Sparse(SparseRows::empty(rows, d)));
+            let GradTensor::Dense(t) = taken else { unreachable!("checked above") };
+            debug_assert_eq!(t.len(), rows * d, "dense grad shape for {}", e.name);
+            let vals = match t {
+                Tensor::F32 { data, .. } => data,
+                Tensor::I32 { .. } => bail!("non-f32 gradient for {}", e.name),
+            };
+            let ids: Vec<u32> = (0..rows as u32).collect();
+            *g = GradTensor::Sparse(SparseRows::new(rows, d, ids, vals));
+        }
+
+        // 1. Global clip rescales by the *whole-table* gradient norm:
+        // compute it once, before the rows are split across shards.
+        let mut global_norms: Vec<Option<f32>> = vec![None; self.spec.len()];
+        if ctx.clip == ClipMode::Global {
+            for ((e, g), slot) in self.spec.iter().zip(grads.iter()).zip(global_norms.iter_mut())
+            {
+                if e.group == "embed" {
+                    if let GradTensor::Sparse(s) = g {
+                        *slot = Some(grad_l2_norm(s.vals()));
+                    }
+                }
+            }
+        }
+
+        // 2. carve per-shard work items out of disjoint &mut slices
+        let n_shards = self.plan.n_shards;
+        let fields_all: &[(usize, usize)] = &self.plan.fields;
+        let mut work: Vec<Vec<WorkItem<'_>>> = (0..n_shards).map(|_| Vec::new()).collect();
+        let iter = self
+            .spec
+            .iter()
+            .zip(self.plan.assignments.iter())
+            .zip(params.tensors.iter_mut())
+            .zip(m.tensors.iter_mut())
+            .zip(v.tensors.iter_mut())
+            .zip(grads.iter_mut())
+            .zip(last_step.iter_mut())
+            .zip(field_sqnorms.iter_mut())
+            .zip(global_norms.iter());
+        for ((((((((entry, assign), w_t), m_t), v_t), g), last), sq), gnorm) in iter {
+            match assign {
+                Assignment::Whole(s) => {
+                    let GradTensor::Dense(g_t) = g else {
+                        bail!("sparse gradient for dense-group param {}", entry.name)
+                    };
+                    work[*s].push(WorkItem::DenseTensor {
+                        w: w_t.as_f32_mut()?,
+                        m: m_t.as_f32_mut()?,
+                        v: v_t.as_f32_mut()?,
+                        g: g_t.as_f32_mut()?,
+                        lr: ctx.lr_dense,
+                    });
+                }
+                Assignment::Rows => {
+                    let GradTensor::Sparse(sg) = g else {
+                        bail!("dense gradient survived normalization for {}", entry.name)
+                    };
+                    let rows = entry.shape[0];
+                    let d = sg.d();
+                    ensure!(sg.n_rows() == rows, "grad rows mismatch for {}", entry.name);
+                    let is_embed = entry.group == "embed";
+                    let ranges = &self.plan.row_ranges;
+                    let w_parts = split_rows(w_t.as_f32_mut()?, d, ranges);
+                    let m_parts = split_rows(m_t.as_f32_mut()?, d, ranges);
+                    let v_parts = split_rows(v_t.as_f32_mut()?, d, ranges);
+                    let last_parts =
+                        split_rows(last.as_mut().expect("vocab table has lazy state"), 1, ranges);
+                    let sq_parts: Vec<Option<&mut [f64]>> = match (is_embed, sq) {
+                        (true, Some(sq)) => {
+                            split_by_cuts(sq, &self.plan.field_cuts).into_iter().map(Some).collect()
+                        }
+                        _ => (0..n_shards).map(|_| None).collect(),
+                    };
+                    let g_parts = sg.range_views_mut(ranges);
+                    for (s, (((((gv, wp), mp), vp), lp), sqp)) in g_parts
+                        .into_iter()
+                        .zip(w_parts)
+                        .zip(m_parts)
+                        .zip(v_parts)
+                        .zip(last_parts)
+                        .zip(sq_parts)
+                        .enumerate()
+                    {
+                        let (flo, fhi) = self.plan.field_span(s);
+                        let fields: &[(usize, usize)] =
+                            if is_embed { &fields_all[flo..fhi] } else { &[] };
+                        work[s].push(WorkItem::VocabTable {
+                            base: gv.base,
+                            rows: gv.rows,
+                            d,
+                            ids: gv.ids,
+                            gvals: gv.vals,
+                            w: wp,
+                            m: mp,
+                            v: vp,
+                            last: lp,
+                            fields,
+                            sqnorms: sqp,
+                            clip: is_embed,
+                            global_norm: *gnorm,
+                            lr: ctx.lr_embed,
+                        });
+                    }
+                }
+            }
+        }
+
+        // 3. run the shards — serially, or bucketed round-robin over at
+        // most `threads` scoped threads (shards can outnumber cores)
+        let run_threads = threads.min(n_shards).max(1);
+        if run_threads <= 1 {
+            for items in work {
+                run_shard(items, counts, ctx)?;
+            }
+        } else {
+            let mut buckets: Vec<Vec<Vec<WorkItem<'_>>>> =
+                (0..run_threads).map(|_| Vec::new()).collect();
+            for (s, items) in work.into_iter().enumerate() {
+                if !items.is_empty() {
+                    buckets[s % run_threads].push(items);
+                }
+            }
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::with_capacity(run_threads);
+                for bucket in buckets {
+                    if bucket.is_empty() {
+                        continue;
+                    }
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        for items in bucket {
+                            run_shard(items, counts, ctx)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("shard apply thread panicked")?;
+                }
+                Ok(())
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Write the full training checkpoint (see module docs for layout).
+    ///
+    /// The file is written to a `.tmp` sibling and renamed into place, so
+    /// a crash mid-save never destroys an existing checkpoint at `path`.
+    pub fn save_checkpoint(&self, path: &Path, step: u64) -> Result<()> {
+        let w_guard = self.read();
+        let opt = self.opt.lock().unwrap();
+        let tmp = path.with_extension("tmp");
+        {
+            let f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            let mut w = BufWriter::new(f);
+            w.write_all(STORE_MAGIC)?;
+            w.write_all(&STORE_VERSION.to_le_bytes())?;
+            w.write_all(&step.to_le_bytes())?;
+            w_guard.write_block(&mut w)?;
+            opt.m.write_block(&mut w)?;
+            opt.v.write_block(&mut w)?;
+            // per-row lazy-Adam last-touch steps (dense params write 0 rows)
+            for last in &opt.last_step {
+                match last {
+                    Some(rows) => {
+                        w.write_all(&(rows.len() as u64).to_le_bytes())?;
+                        for &x in rows {
+                            w.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                    None => w.write_all(&0u64.to_le_bytes())?,
+                }
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint into this store, replacing weights, moments and
+    /// lazy-Adam state, and recomputing the maintained field norms.
+    /// Accepts the full `CCKS` layout or a bare PR-1 `CCKP` params file
+    /// (moments reset, step 0). Returns the stored optimizer step.
+    ///
+    /// The file is parsed into temporaries first and committed only once
+    /// every block has read cleanly — a truncated or corrupt checkpoint
+    /// leaves the store untouched.
+    pub fn load_checkpoint(&self, path: &Path) -> Result<u64> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        let step: u64;
+        let params: ParamSet;
+        let moments: Option<(ParamSet, ParamSet)>;
+        let mut lazy: Option<Vec<Option<Vec<u32>>>> = None;
+        if &magic == STORE_MAGIC {
+            let mut vb = [0u8; 4];
+            r.read_exact(&mut vb)?;
+            let version = u32::from_le_bytes(vb);
+            ensure!(version == STORE_VERSION, "unsupported checkpoint version {version}");
+            let mut sb = [0u8; 8];
+            r.read_exact(&mut sb)?;
+            step = u64::from_le_bytes(sb);
+            params = ParamSet::read_block(&mut r, &self.spec)?;
+            let m = ParamSet::read_block(&mut r, &self.spec)?;
+            let v = ParamSet::read_block(&mut r, &self.spec)?;
+            moments = Some((m, v));
+            let mut rows_per_param = Vec::with_capacity(self.spec.len());
+            for e in &self.spec {
+                let mut nb = [0u8; 8];
+                r.read_exact(&mut nb)?;
+                let n = u64::from_le_bytes(nb) as usize;
+                if matches!(e.group.as_str(), "embed" | "wide") {
+                    ensure!(
+                        n == e.shape[0],
+                        "checkpoint lazy rows {n} != {} for {}",
+                        e.shape[0],
+                        e.name
+                    );
+                    let mut buf = vec![0u8; n * 4];
+                    r.read_exact(&mut buf)?;
+                    let rows: Vec<u32> = buf
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    rows_per_param.push(Some(rows));
+                } else {
+                    ensure!(n == 0, "unexpected lazy rows for dense param {}", e.name);
+                    rows_per_param.push(None);
+                }
+            }
+            lazy = Some(rows_per_param);
+        } else if &magic == CKPT_MAGIC {
+            params = ParamSet::read_block_body(&mut r, &self.spec)?;
+            moments = None;
+            step = 0;
+        } else {
+            bail!("not a checkpoint file");
+        }
+        let sqnorms = init_sqnorms(&self.spec, &self.schema, &params)?;
+
+        // everything parsed — commit atomically under the locks
+        let mut w_guard = self.weights.write().unwrap();
+        let mut opt = self.opt.lock().unwrap();
+        let (m, v) = match moments {
+            Some(mv) => mv,
+            None => (params.zeros_like(), params.zeros_like()),
+        };
+        *w_guard = params;
+        opt.m = m;
+        opt.v = v;
+        match lazy {
+            Some(rows_per_param) => opt.last_step = rows_per_param,
+            None => {
+                for last in opt.last_step.iter_mut() {
+                    if let Some(rows) = last {
+                        rows.fill(0);
+                    }
+                }
+            }
+        }
+        opt.field_sqnorms = sqnorms;
+        Ok(step)
+    }
+
+    /// Params-only load, accepting both checkpoint formats (the `eval`
+    /// command reads either a PR-1 `CCKP` file or a `CCKS` checkpoint).
+    pub fn load_params(path: &Path, spec: &[ParamEntry]) -> Result<ParamSet> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic == STORE_MAGIC {
+            let mut vb = [0u8; 4];
+            r.read_exact(&mut vb)?;
+            let version = u32::from_le_bytes(vb);
+            ensure!(version == STORE_VERSION, "unsupported checkpoint version {version}");
+            let mut sb = [0u8; 8];
+            r.read_exact(&mut sb)?;
+            ParamSet::read_block(&mut r, spec)
+        } else if &magic == CKPT_MAGIC {
+            ParamSet::read_block_body(&mut r, spec)
+        } else {
+            bail!("not a checkpoint file");
+        }
+    }
+
+    /// Maintained `Σw²` per field of the first `embed` table (tests and
+    /// diagnostics; `None` when the spec has no embed group). Kept in
+    /// sync with the weights only while the engine clips with `AdaField`
+    /// — the sole reader; other modes skip the upkeep, and a checkpoint
+    /// load recomputes the norms from the stored weights.
+    pub fn field_sqnorms(&self) -> Option<Vec<f64>> {
+        let opt = self.opt.lock().unwrap();
+        opt.field_sqnorms.iter().find_map(|s| s.clone())
+    }
+}
+
+/// One shard's slice of the apply-stage work: disjoint mutable views of
+/// the parameters, moments and gradients it owns.
+enum WorkItem<'a> {
+    /// A row range of a vocab-shaped table (embed/wide).
+    VocabTable {
+        base: usize,
+        rows: usize,
+        d: usize,
+        ids: &'a [u32],
+        gvals: &'a mut [f32],
+        w: &'a mut [f32],
+        m: &'a mut [f32],
+        v: &'a mut [f32],
+        last: &'a mut [u32],
+        /// `(global_offset, vocab)` of the fields inside the range
+        /// (empty for the un-clipped wide table).
+        fields: &'a [(usize, usize)],
+        sqnorms: Option<&'a mut [f64]>,
+        /// Clip this table (embed group only).
+        clip: bool,
+        global_norm: Option<f32>,
+        lr: f32,
+    },
+    /// A whole dense tensor (MLP/cross weights, biases).
+    DenseTensor {
+        w: &'a mut [f32],
+        m: &'a mut [f32],
+        v: &'a mut [f32],
+        g: &'a mut [f32],
+        lr: f32,
+    },
+}
+
+/// Execute one shard's items: clip → lazy L2 → Adam, identical math to
+/// the serial oracle (`ReferenceEngine::apply`) on each slice.
+fn run_shard(items: Vec<WorkItem<'_>>, counts: &SparseRows, ctx: &ApplyCtx) -> Result<()> {
+    let adam = Adam::new(ctx.adam);
+    for item in items {
+        match item {
+            WorkItem::DenseTensor { w, m, v, g, lr } => {
+                adam.step(w, m, v, g, lr, ctx.step as f32);
+            }
+            WorkItem::VocabTable {
+                base,
+                rows,
+                d,
+                ids,
+                gvals,
+                w,
+                m,
+                v,
+                last,
+                fields,
+                mut sqnorms,
+                clip,
+                global_norm,
+                lr,
+            } => {
+                if ids.is_empty() {
+                    continue;
+                }
+                if clip {
+                    let cnt = counts_for_range(counts, ids, base, base + rows);
+                    clip_embedding_grads_range(
+                        ctx.clip,
+                        ids,
+                        gvals,
+                        d,
+                        w,
+                        base,
+                        &cnt,
+                        fields,
+                        sqnorms.as_deref(),
+                        global_norm,
+                        &ctx.clip_params,
+                    );
+                }
+                // lazy L2: regularize touched rows only (serial-oracle
+                // semantics for sparse payloads)
+                for (k, &id) in ids.iter().enumerate() {
+                    let lo = (id as usize - base) * d;
+                    for j in 0..d {
+                        gvals[k * d + j] += ctx.l2_embed * w[lo + j];
+                    }
+                }
+                // maintained field norms: retire the touched rows' old
+                // mass, update, then add the new mass back. Only AdaField
+                // reads these (the clip mode is fixed per engine, and a
+                // checkpoint load recomputes from the weights), so other
+                // modes skip the two extra O(touched·d) passes.
+                let track_norms = ctx.clip == ClipMode::AdaField;
+                if track_norms {
+                    if let Some(sq) = sqnorms.as_deref_mut() {
+                        update_field_sqnorms(sq, fields, ids, w, base, d, -1.0);
+                    }
+                }
+                lazy_step_rows(&ctx.adam, w, m, v, last, ids, gvals, d, lr, ctx.step, base);
+                if track_norms {
+                    if let Some(sq) = sqnorms.as_deref_mut() {
+                        update_field_sqnorms(sq, fields, ids, w, base, d, 1.0);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `sq[field] += sign * Σ row²` over the touched rows, walking fields and
+/// sorted ids in lockstep (same two-pointer walk as the clip twins).
+fn update_field_sqnorms(
+    sq: &mut [f64],
+    fields: &[(usize, usize)],
+    ids: &[u32],
+    w: &[f32],
+    base: usize,
+    d: usize,
+    sign: f64,
+) {
+    let mut k = 0usize;
+    for (fi, &(off, vs)) in fields.iter().enumerate() {
+        let hi_id = (off + vs) as u32;
+        while k < ids.len() && ids[k] < hi_id {
+            let lo = (ids[k] as usize - base) * d;
+            let mass: f64 = w[lo..lo + d].iter().map(|&x| (x as f64) * (x as f64)).sum();
+            sq[fi] += sign * mass;
+            k += 1;
+        }
+    }
+    debug_assert_eq!(k, ids.len(), "touched ids outside the shard's fields");
+}
+
+/// Per-stored-row counts aligned with `ids`: borrowed when the counts'
+/// ids over `[lo, hi)` are exactly `ids` (true for trainer-produced
+/// payloads), materialized by lookup otherwise.
+fn counts_for_range<'a>(
+    counts: &'a SparseRows,
+    ids: &[u32],
+    lo: usize,
+    hi: usize,
+) -> Cow<'a, [f32]> {
+    let a = counts.ids().partition_point(|&id| (id as usize) < lo);
+    let b = counts.ids().partition_point(|&id| (id as usize) < hi);
+    if &counts.ids()[a..b] == ids {
+        Cow::Borrowed(&counts.vals()[a..b])
+    } else {
+        Cow::Owned(ids.iter().map(|&id| counts.value_at(id)).collect())
+    }
+}
+
+/// Split a packed `[rows, d]` slice into per-shard row ranges. `ranges`
+/// must be contiguous ascending and start at row 0 (the `ShardPlan`
+/// invariant).
+fn split_rows<'a, T>(s: &'a mut [T], d: usize, ranges: &[(usize, usize)]) -> Vec<&'a mut [T]> {
+    debug_assert_eq!(ranges.first().map_or(0, |r| r.0), 0);
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = s;
+    for &(lo, hi) in ranges {
+        debug_assert!(hi >= lo);
+        let (take, r) = std::mem::take(&mut rest).split_at_mut((hi - lo) * d);
+        out.push(take);
+        rest = r;
+    }
+    debug_assert!(rest.is_empty(), "ranges must cover the whole table");
+    out
+}
+
+/// Split a slice at ascending cut points (`cuts[0] == 0`,
+/// `cuts.last() == len`).
+fn split_by_cuts<'a, T>(s: &'a mut [T], cuts: &[usize]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(cuts.len().saturating_sub(1));
+    let mut rest = s;
+    for win in cuts.windows(2) {
+        let (take, r) = std::mem::take(&mut rest).split_at_mut(win[1] - win[0]);
+        out.push(take);
+        rest = r;
+    }
+    debug_assert!(rest.is_empty());
+    out
+}
+
+/// Per-field `Σw²` (f64) for every `embed`-group table.
+fn init_sqnorms(
+    spec: &[ParamEntry],
+    schema: &Schema,
+    params: &ParamSet,
+) -> Result<Vec<Option<Vec<f64>>>> {
+    let mut out = Vec::with_capacity(spec.len());
+    for (e, t) in spec.iter().zip(&params.tensors) {
+        if e.group == "embed" {
+            let d = e.shape[1];
+            let w = t.as_f32()?;
+            let sq: Vec<f64> = schema
+                .fields()
+                .map(|(off, vs)| {
+                    w[off * d..(off + vs) * d].iter().map(|&x| (x as f64) * (x as f64)).sum()
+                })
+                .collect();
+            out.push(Some(sq));
+        } else {
+            out.push(None);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_params, InitConfig};
+    use crate::scaling::rules::HyperSet;
+    use crate::util::Rng;
+
+    fn test_schema() -> Schema {
+        Schema { name: "store_test".into(), n_dense: 2, vocab_sizes: vec![12, 9, 6, 4, 2] }
+    }
+
+    fn test_spec(schema: &Schema, d: usize) -> Vec<ParamEntry> {
+        let v = schema.total_vocab();
+        vec![
+            ParamEntry { name: "embed_table".into(), shape: vec![v, d], group: "embed".into() },
+            ParamEntry { name: "wide_table".into(), shape: vec![v, 1], group: "wide".into() },
+            ParamEntry { name: "mlp_w0".into(), shape: vec![8, 4], group: "dense".into() },
+            ParamEntry { name: "mlp_b0".into(), shape: vec![4], group: "dense".into() },
+            ParamEntry { name: "mlp_w1".into(), shape: vec![4, 1], group: "dense".into() },
+        ]
+    }
+
+    fn ctx(clip: ClipMode, step: u32) -> ApplyCtx {
+        let h = HyperSet {
+            lr_dense: 1e-2,
+            lr_embed: 8e-3,
+            l2_embed: 1e-4,
+            clip_r: 1.0,
+            clip_zeta: 1e-4,
+            clip_t: 0.5,
+        };
+        ApplyCtx {
+            clip,
+            clip_params: ClipParams { r: h.clip_r, zeta: h.clip_zeta, clip_t: h.clip_t },
+            lr_embed: h.lr_embed,
+            lr_dense: h.lr_dense,
+            l2_embed: h.l2_embed,
+            adam: AdamConfig::default(),
+            step,
+        }
+    }
+
+    /// Random sparse grads + counts for the two vocab tables and dense
+    /// grads for the rest, Criteo-shaped (few touched rows).
+    fn random_grads(
+        spec: &[ParamEntry],
+        schema: &Schema,
+        seed: u64,
+    ) -> (Vec<GradTensor>, SparseRows) {
+        let v = schema.total_vocab();
+        let mut rng = Rng::new(seed);
+        let ids: Vec<u32> = (0..v as u32).filter(|_| rng.bernoulli(0.3)).collect();
+        let counts: Vec<f32> = ids.iter().map(|_| 1.0 + rng.below(5) as f32).collect();
+        let grads = spec
+            .iter()
+            .map(|e| match e.group.as_str() {
+                "embed" | "wide" => {
+                    let d = e.numel() / e.shape[0];
+                    let vals: Vec<f32> =
+                        (0..ids.len() * d).map(|_| rng.next_gaussian() as f32).collect();
+                    GradTensor::Sparse(SparseRows::new(v, d, ids.clone(), vals))
+                }
+                _ => {
+                    let vals: Vec<f32> =
+                        (0..e.numel()).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+                    GradTensor::Dense(Tensor::f32(e.shape.clone(), vals))
+                }
+            })
+            .collect();
+        (grads, SparseRows::new(v, 1, ids, counts))
+    }
+
+    #[test]
+    fn plan_is_field_aligned_and_covering() {
+        let schema = test_schema();
+        let spec = test_spec(&schema, 4);
+        for n in [1usize, 2, 3, 5, 8] {
+            let plan = ShardPlan::build(&spec, &schema, n).unwrap();
+            let ranges = plan.row_ranges();
+            assert_eq!(ranges.len(), n);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[n - 1].1, schema.total_vocab());
+            let offsets = schema.offsets();
+            for (s, &(lo, hi)) in ranges.iter().enumerate() {
+                assert!(lo <= hi);
+                if s > 0 {
+                    assert_eq!(lo, ranges[s - 1].1, "ranges must be contiguous");
+                }
+                // every boundary is a field offset (or the vocab end)
+                assert!(
+                    lo == schema.total_vocab() || offsets.contains(&lo),
+                    "shard {s} starts mid-field at {lo}"
+                );
+                let (flo, fhi) = plan.field_span(s);
+                assert!(flo <= fhi);
+                if flo < fhi {
+                    assert_eq!(offsets[flo], lo);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_balances_dense_params() {
+        let schema = test_schema();
+        let spec = test_spec(&schema, 4);
+        let plan = ShardPlan::build(&spec, &schema, 2).unwrap();
+        // three dense tensors (32, 4, 4 scalars) over two shards: the big
+        // one alone, the two small ones together
+        let owners: Vec<usize> = plan
+            .assignments
+            .iter()
+            .filter_map(|a| match a {
+                Assignment::Whole(s) => Some(*s),
+                Assignment::Rows => None,
+            })
+            .collect();
+        assert_eq!(owners.len(), 3);
+        assert_eq!(owners[0], 0);
+        assert_eq!(owners[1], 1);
+        assert_eq!(owners[2], 1);
+    }
+
+    #[test]
+    fn sharded_apply_matches_single_shard_all_modes() {
+        let schema = test_schema();
+        let d = 4;
+        let spec = test_spec(&schema, d);
+        for clip in ClipMode::ALL {
+            let init = init_params(&spec, &InitConfig { seed: 11, embed_sigma: 0.02 });
+            let serial = ParamStore::new(schema.clone(), init.clone(), 1).unwrap();
+            let sharded = ParamStore::new(schema.clone(), init, 3).unwrap();
+            for t in 1..=5u32 {
+                let (mut g1, counts) = random_grads(&spec, &schema, 40 + t as u64);
+                let mut g2 = g1.clone();
+                serial.apply_sharded(&ctx(clip, t), &mut g1, &counts, 1).unwrap();
+                sharded.apply_sharded(&ctx(clip, t), &mut g2, &counts, 3).unwrap();
+            }
+            let a = serial.snapshot();
+            let b = sharded.snapshot();
+            for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+                assert_eq!(ta, tb, "{clip}: param[{i}] diverged across shard counts");
+            }
+            let (ma, va) = serial.moments();
+            let (mb, vb) = sharded.moments();
+            assert_eq!(ma.tensors, mb.tensors, "{clip}: m moments");
+            assert_eq!(va.tensors, vb.tensors, "{clip}: v moments");
+        }
+    }
+
+    #[test]
+    fn dense_vocab_grads_take_the_eager_path() {
+        // a densified embed grad must update *every* row (eager Adam
+        // semantics), unlike the sparse payload which freezes untouched rows
+        let schema = test_schema();
+        let d = 2;
+        let spec = test_spec(&schema, d);
+        let init = init_params(&spec, &InitConfig { seed: 3, embed_sigma: 0.05 });
+        let store = ParamStore::new(schema.clone(), init.clone(), 2).unwrap();
+        let v = schema.total_vocab();
+        let (mut grads, counts) = random_grads(&spec, &schema, 7);
+        // densify the embed grad (zero rows included)
+        let GradTensor::Sparse(s) = &grads[0] else { panic!() };
+        grads[0] = GradTensor::Dense(s.to_tensor());
+        store.apply_sharded(&ctx(ClipMode::None, 1), &mut grads, &counts, 2).unwrap();
+        let after = store.snapshot();
+        let w0 = init.tensors[0].as_f32().unwrap();
+        let w1 = after.tensors[0].as_f32().unwrap();
+        // with L2 > 0 every row moves, even zero-grad ones
+        let moved = (0..v).filter(|&r| w0[r * d..(r + 1) * d] != w1[r * d..(r + 1) * d]).count();
+        assert!(moved > v * 9 / 10, "only {moved}/{v} rows moved on the eager path");
+    }
+
+    #[test]
+    fn maintained_sqnorms_track_the_weights() {
+        let schema = test_schema();
+        let d = 3;
+        let spec = test_spec(&schema, d);
+        let init = init_params(&spec, &InitConfig { seed: 5, embed_sigma: 0.03 });
+        let store = ParamStore::new(schema.clone(), init, 2).unwrap();
+        for t in 1..=6u32 {
+            let (mut grads, counts) = random_grads(&spec, &schema, 90 + t as u64);
+            store.apply_sharded(&ctx(ClipMode::AdaField, t), &mut grads, &counts, 2).unwrap();
+        }
+        let maintained = store.field_sqnorms().unwrap();
+        let w_set = store.snapshot();
+        let w = w_set.tensors[0].as_f32().unwrap();
+        for (fi, (off, vs)) in schema.fields().enumerate() {
+            let fresh: f64 =
+                w[off * d..(off + vs) * d].iter().map(|&x| (x as f64) * (x as f64)).sum();
+            let diff = (maintained[fi] - fresh).abs();
+            assert!(
+                diff <= 1e-9 * fresh.max(1.0),
+                "field {fi}: maintained {} vs fresh {fresh}",
+                maintained[fi]
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_full_state() {
+        let schema = test_schema();
+        let spec = test_spec(&schema, 4);
+        let init = init_params(&spec, &InitConfig { seed: 21, embed_sigma: 0.02 });
+        let store = ParamStore::new(schema.clone(), init, 2).unwrap();
+        for t in 1..=3u32 {
+            let (mut grads, counts) = random_grads(&spec, &schema, t as u64);
+            store.apply_sharded(&ctx(ClipMode::CowClip, t), &mut grads, &counts, 1).unwrap();
+        }
+        let dir = std::env::temp_dir().join(format!("ccks_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("full.ckpt");
+        store.save_checkpoint(&path, 3).unwrap();
+
+        // load into a store with a *different* shard count
+        let fresh = init_params(&spec, &InitConfig { seed: 99, embed_sigma: 0.02 });
+        let other = ParamStore::new(schema.clone(), fresh, 3).unwrap();
+        let step = other.load_checkpoint(&path).unwrap();
+        assert_eq!(step, 3);
+        assert_eq!(other.snapshot().tensors, store.snapshot().tensors);
+        let (m1, v1) = store.moments();
+        let (m2, v2) = other.moments();
+        assert_eq!(m1.tensors, m2.tensors);
+        assert_eq!(v1.tensors, v2.tensors);
+        {
+            let a = store.opt.lock().unwrap();
+            let b = other.opt.lock().unwrap();
+            assert_eq!(a.last_step, b.last_step, "lazy-Adam rows must round-trip");
+        }
+        // params-only reader sees the same weights
+        let p = ParamStore::load_params(&path, &spec).unwrap();
+        assert_eq!(p.tensors, store.snapshot().tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bare_cckp_file_loads_with_reset_moments() {
+        let schema = test_schema();
+        let spec = test_spec(&schema, 4);
+        let params = init_params(&spec, &InitConfig { seed: 8, embed_sigma: 0.02 });
+        let dir = std::env::temp_dir().join(format!("cckp_compat_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("params.ckpt");
+        params.save(&path).unwrap();
+
+        let store = ParamStore::new(
+            schema.clone(),
+            init_params(&spec, &InitConfig { seed: 1, embed_sigma: 0.02 }),
+            2,
+        )
+        .unwrap();
+        let step = store.load_checkpoint(&path).unwrap();
+        assert_eq!(step, 0);
+        assert_eq!(store.snapshot().tensors, params.tensors);
+        let (m, v) = store.moments();
+        assert!(m.tensors.iter().all(|t| t.as_f32().unwrap().iter().all(|&x| x == 0.0)));
+        assert!(v.tensors.iter().all(|t| t.as_f32().unwrap().iter().all(|&x| x == 0.0)));
+        // and ParamStore::load_params accepts the same file
+        let p = ParamStore::load_params(&path, &spec).unwrap();
+        assert_eq!(p.tensors, params.tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

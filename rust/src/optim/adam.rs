@@ -95,41 +95,67 @@ impl LazyAdam {
         lr: f32,
         t: u32,
     ) {
-        debug_assert_eq!(g.len(), ids.len() * d);
-        debug_assert_eq!(w.len(), self.last_step.len() * d);
-        debug_assert_eq!(w.len(), m.len());
-        debug_assert_eq!(w.len(), v.len());
-        let AdamConfig { beta1, beta2, eps } = self.cfg;
-        let bc1 = 1.0 - (beta1 as f64).powf(t as f64);
-        let bc2 = 1.0 - (beta2 as f64).powf(t as f64);
-        for (k, &id) in ids.iter().enumerate() {
-            let row = id as usize;
-            let lo = row * d;
-            let last = self.last_step[row];
-            if last > 0 {
-                // closed-form decay for the zero-grad steps since `last`
-                let missed = t.saturating_sub(1).saturating_sub(last);
-                if missed > 0 {
-                    let dm = (beta1 as f64).powi(missed as i32) as f32;
-                    let dv = (beta2 as f64).powi(missed as i32) as f32;
-                    for x in &mut m[lo..lo + d] {
-                        *x *= dm;
-                    }
-                    for x in &mut v[lo..lo + d] {
-                        *x *= dv;
-                    }
+        lazy_step_rows(&self.cfg, w, m, v, &mut self.last_step, ids, g, d, lr, t, 0);
+    }
+}
+
+/// Shard-local lazy-Adam scatter update over a *slice* of a table.
+///
+/// `w`/`m`/`v` hold rows `[base, base + last.len())` of the full table
+/// (`last.len() * d` values each); `ids` are **global** row ids inside
+/// that range, and `last` is the matching slice of the per-row 1-based
+/// last-update steps (0 = never touched). The per-element math is
+/// exactly [`LazyAdam::step_rows`] — which delegates here with
+/// `base = 0` — so a table split across shard owners bitwise-matches the
+/// unsharded update.
+#[allow(clippy::too_many_arguments)]
+pub fn lazy_step_rows(
+    cfg: &AdamConfig,
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    last: &mut [u32],
+    ids: &[u32],
+    g: &[f32],
+    d: usize,
+    lr: f32,
+    t: u32,
+    base: usize,
+) {
+    debug_assert_eq!(g.len(), ids.len() * d);
+    debug_assert_eq!(w.len(), last.len() * d);
+    debug_assert_eq!(w.len(), m.len());
+    debug_assert_eq!(w.len(), v.len());
+    let AdamConfig { beta1, beta2, eps } = *cfg;
+    let bc1 = 1.0 - (beta1 as f64).powf(t as f64);
+    let bc2 = 1.0 - (beta2 as f64).powf(t as f64);
+    for (k, &id) in ids.iter().enumerate() {
+        let row = id as usize - base;
+        let lo = row * d;
+        let prev = last[row];
+        if prev > 0 {
+            // closed-form decay for the zero-grad steps since `prev`
+            let missed = t.saturating_sub(1).saturating_sub(prev);
+            if missed > 0 {
+                let dm = (beta1 as f64).powi(missed as i32) as f32;
+                let dv = (beta2 as f64).powi(missed as i32) as f32;
+                for x in &mut m[lo..lo + d] {
+                    *x *= dm;
+                }
+                for x in &mut v[lo..lo + d] {
+                    *x *= dv;
                 }
             }
-            for j in 0..d {
-                let gi = g[k * d + j];
-                m[lo + j] = beta1 * m[lo + j] + (1.0 - beta1) * gi;
-                v[lo + j] = beta2 * v[lo + j] + (1.0 - beta2) * gi * gi;
-                let mhat = m[lo + j] as f64 / bc1;
-                let vhat = v[lo + j] as f64 / bc2;
-                w[lo + j] -= (lr as f64 * mhat / (vhat.sqrt() + eps as f64)) as f32;
-            }
-            self.last_step[row] = t;
         }
+        for j in 0..d {
+            let gi = g[k * d + j];
+            m[lo + j] = beta1 * m[lo + j] + (1.0 - beta1) * gi;
+            v[lo + j] = beta2 * v[lo + j] + (1.0 - beta2) * gi * gi;
+            let mhat = m[lo + j] as f64 / bc1;
+            let vhat = v[lo + j] as f64 / bc2;
+            w[lo + j] -= (lr as f64 * mhat / (vhat.sqrt() + eps as f64)) as f32;
+        }
+        last[row] = t;
     }
 }
 
@@ -245,6 +271,39 @@ mod tests {
         assert!((ve[0] - vl[0]).abs() <= 1e-7, "v: {} vs {}", ve[0], vl[0]);
         // the w gap is exactly the skipped zero-grad drift: small
         assert!((we[0] - wl[0]).abs() < 0.05, "w: {} vs {}", we[0], wl[0]);
+    }
+
+    #[test]
+    fn offset_shard_update_matches_whole_table() {
+        // one table updated whole vs split at row 2 into two shard
+        // slices with rebased state: bitwise identical trajectories
+        let cfg = AdamConfig::default();
+        let d = 3;
+        let rows = 5;
+        let mut whole = LazyAdam::new(cfg, rows);
+        let mut w = vec![0.1f32; rows * d];
+        let mut m = vec![0.0f32; rows * d];
+        let mut v = vec![0.0f32; rows * d];
+        let (mut ws, mut ms, mut vs) = (w.clone(), m.clone(), v.clone());
+        let mut last_s = vec![0u32; rows];
+        for t in 1..=8u32 {
+            let ids: Vec<u32> = if t % 2 == 0 { vec![0, 3] } else { vec![1, 3, 4] };
+            let g: Vec<f32> = (0..ids.len() * d).map(|i| (i as f32 + t as f32) * 0.1).collect();
+            whole.step_rows(&mut w, &mut m, &mut v, &ids, &g, d, 0.01, t);
+
+            let split_k = ids.partition_point(|&id| (id as usize) < 2);
+            let (lo_ids, hi_ids) = ids.split_at(split_k);
+            let (lo_g, hi_g) = g.split_at(split_k * d);
+            let (w0, w1) = ws.split_at_mut(2 * d);
+            let (m0, m1) = ms.split_at_mut(2 * d);
+            let (v0, v1) = vs.split_at_mut(2 * d);
+            let (l0, l1) = last_s.split_at_mut(2);
+            lazy_step_rows(&cfg, w0, m0, v0, l0, lo_ids, lo_g, d, 0.01, t, 0);
+            lazy_step_rows(&cfg, w1, m1, v1, l1, hi_ids, hi_g, d, 0.01, t, 2);
+        }
+        assert_eq!(w, ws);
+        assert_eq!(m, ms);
+        assert_eq!(v, vs);
     }
 
     #[test]

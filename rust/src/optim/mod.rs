@@ -5,4 +5,4 @@
 
 pub mod adam;
 
-pub use adam::{Adam, AdamConfig, LazyAdam};
+pub use adam::{lazy_step_rows, Adam, AdamConfig, LazyAdam};

@@ -126,6 +126,12 @@ impl ReferenceEngine {
         self
     }
 
+    /// Adam constants (the shard-owned apply path builds its own
+    /// optimizer state from these).
+    pub fn adam_cfg(&self) -> crate::optim::AdamConfig {
+        self.adam.cfg
+    }
+
     pub fn spec(&self) -> Vec<ParamEntry> {
         build_spec(
             self.model.kind,
@@ -157,6 +163,12 @@ impl ReferenceEngine {
 
     /// Apply accumulated gradients: clip (embed group) → +L2 (embed+wide)
     /// → Adam (group learning rates). `step` is 1-based.
+    ///
+    /// This is the **leader-serial oracle**: the trainer now applies
+    /// through the shard-owned `model::store::ParamStore` instead, and
+    /// `rust/tests/shard_parity.rs` pins that path against this one.
+    /// Kept `&mut self` (per-param [`LazyAdam`] state) and byte-for-byte
+    /// unchanged so the oracle cannot drift with the refactor.
     ///
     /// Sparse gradients pay O(touched · d): sparse clip, L2 on touched
     /// rows only (lazy weight decay), and [`LazyAdam`] scatter updates.

@@ -9,4 +9,4 @@ mod host;
 mod sparse;
 
 pub use host::{Dtype, Tensor};
-pub use sparse::{GradTensor, SparseRows};
+pub use sparse::{GradTensor, SparseRowRangeMut, SparseRows};

@@ -214,6 +214,51 @@ impl SparseRows {
     pub fn payload_bytes(&self) -> u64 {
         (self.ids.len() * 4 + self.vals.len() * 4) as u64
     }
+
+    /// Split the stored rows into disjoint mutable row-range views, one
+    /// per range. `ranges` must be ascending, non-overlapping `[lo, hi)`
+    /// pairs; stored rows outside every range are not reachable through
+    /// the views (the shard-apply caller passes ranges covering the whole
+    /// table). Each view keeps the *global* ids — the `base` field tells
+    /// range-local code how to rebase them into its slice of the table.
+    pub fn range_views_mut(&mut self, ranges: &[(usize, usize)]) -> Vec<SparseRowRangeMut<'_>> {
+        let d = self.d;
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut ids_rest: &[u32] = &self.ids;
+        let mut vals_rest: &mut [f32] = &mut self.vals;
+        let mut prev_hi = 0usize;
+        for &(lo, hi) in ranges {
+            assert!(lo >= prev_hi && lo <= hi && hi <= self.n_rows, "bad range [{lo}, {hi})");
+            prev_hi = hi;
+            let start = ids_rest.partition_point(|&id| (id as usize) < lo);
+            let end = ids_rest.partition_point(|&id| (id as usize) < hi);
+            let vr = std::mem::take(&mut vals_rest);
+            let (_, vr) = vr.split_at_mut(start * d);
+            let (take_v, vr) = vr.split_at_mut((end - start) * d);
+            vals_rest = vr;
+            let take_i = &ids_rest[start..end];
+            ids_rest = &ids_rest[end..];
+            out.push(SparseRowRangeMut { base: lo, rows: hi - lo, d, ids: take_i, vals: take_v });
+        }
+        out
+    }
+}
+
+/// A mutable view of the stored rows of a [`SparseRows`] whose ids fall
+/// in `[base, base + rows)` — the unit of work the shard-owned apply
+/// stage hands each parameter shard.
+#[derive(Debug)]
+pub struct SparseRowRangeMut<'a> {
+    /// First table row of the range (global).
+    pub base: usize,
+    /// Table rows spanned by the range.
+    pub rows: usize,
+    /// Row width.
+    pub d: usize,
+    /// Global ids of the stored rows inside the range (sorted unique).
+    pub ids: &'a [u32],
+    /// Packed values of those rows (`ids.len() * d`).
+    pub vals: &'a mut [f32],
 }
 
 /// A gradient tensor that is either dense (HLO path, dense MLP params)
@@ -391,6 +436,34 @@ mod tests {
         assert_eq!(s.payload_bytes(), 4 + 16);
         let d = GradTensor::Dense(Tensor::zeros(&[1000, 4]));
         assert_eq!(d.payload_bytes(), 16_000);
+    }
+
+    #[test]
+    fn range_views_partition_stored_rows() {
+        let mut s = sp(10, 2, &[1, 3, 4, 8], &[1.0, 1.5, 3.0, 3.5, 4.0, 4.5, 8.0, 8.5]);
+        let views = s.range_views_mut(&[(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(views.len(), 3);
+        assert_eq!(views[0].ids, &[1, 3]);
+        assert_eq!(views[0].base, 0);
+        assert_eq!(&*views[0].vals, &[1.0, 1.5, 3.0, 3.5]);
+        assert_eq!(views[1].ids, &[4]);
+        assert_eq!(views[1].base, 4);
+        assert_eq!(views[2].ids, &[8]);
+        assert_eq!(&*views[2].vals, &[8.0, 8.5]);
+        // views mutate the underlying storage
+        views.into_iter().for_each(|v| v.vals.iter_mut().for_each(|x| *x *= 2.0));
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+        assert_eq!(s.row(3), &[16.0, 17.0]);
+    }
+
+    #[test]
+    fn range_views_handle_empty_ranges() {
+        let mut s = sp(6, 1, &[5], &[7.0]);
+        let views = s.range_views_mut(&[(0, 2), (2, 2), (2, 6)]);
+        assert!(views[0].ids.is_empty() && views[0].vals.is_empty());
+        assert!(views[1].ids.is_empty());
+        assert_eq!(views[2].ids, &[5]);
+        assert_eq!(views[2].rows, 4);
     }
 
     #[test]

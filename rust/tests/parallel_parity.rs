@@ -51,6 +51,7 @@ fn run(
         epochs: 1.0,
         workers,
         threads,
+        param_shards: 1, // the shard dimension is covered by shard_parity.rs
         warmup_steps: 4,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,
@@ -60,7 +61,7 @@ fn run(
     let mut trainer = Trainer::new(engine, cfg).unwrap();
     let report = trainer.train(train, test).unwrap();
     let params = trainer
-        .params
+        .params()
         .tensors
         .iter()
         .map(|t| t.as_f32().unwrap().to_vec())
@@ -141,6 +142,7 @@ fn parallel_evaluate_matches_sequential() {
         epochs: 1.0,
         workers: 2,
         threads: 1,
+        param_shards: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 7,

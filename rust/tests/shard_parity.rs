@@ -1,0 +1,209 @@
+//! Sharded == serial: the shard-owned `ParamStore` apply stage (row-wise
+//! embedding shards, grouped dense tensors, maintained per-field norms,
+//! parallel `clip → L2 → Adam`) must reproduce the leader-serial oracle
+//! (`ReferenceEngine::apply`, kept byte-for-byte from PR 2) within 1e-6
+//! for every clip mode, every model, and any shard count — and different
+//! shard counts must agree with each other bitwise (mirrors
+//! `parallel_parity.rs` for the thread dimension).
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, TrainReport, Trainer};
+use cowclip::data::dataset::Dataset;
+use cowclip::data::schema::{criteo_synth, Schema};
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::data::Batcher;
+use cowclip::model::{init_params, InitConfig, ParamStore};
+use cowclip::reference::ModelKind;
+use cowclip::runtime::HypersVec;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::{HyperSet, ScalingRule};
+
+const TOL: f32 = 1e-6;
+
+fn close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= TOL, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn tiny_schema() -> Schema {
+    Schema { name: "shard_tiny".into(), n_dense: 2, vocab_sizes: vec![6, 5, 4, 2] }
+}
+
+fn tiny_engine(kind: ModelKind, clip: ClipMode) -> Engine {
+    Engine::reference(kind, tiny_schema(), 4, vec![8, 8], 2, clip)
+}
+
+fn hypers() -> HyperSet {
+    HyperSet {
+        lr_dense: 1e-2,
+        lr_embed: 8e-3,
+        l2_embed: 1e-4,
+        clip_r: 1.0,
+        clip_zeta: 1e-4,
+        clip_t: 0.5,
+    }
+}
+
+/// Acceptance: for all four models, all six clip modes, and 1/2/odd
+/// shard counts, a few optimizer steps through the shard-owned store
+/// match the leader-serial oracle ≤ 1e-6 per element.
+#[test]
+fn store_matches_serial_oracle_all_models_modes_shards() {
+    let schema = tiny_schema();
+    let ds = generate(&schema, &SynthConfig { n: 400, seed: 31, ..Default::default() });
+    for kind in ModelKind::ALL {
+        for clip in ClipMode::ALL {
+            for shards in [1usize, 2, 3] {
+                // serial oracle: the pre-refactor apply over plain ParamSets
+                let mut oracle = tiny_engine(kind, clip);
+                let spec = oracle.spec();
+                let init = init_params(&spec, &InitConfig { seed: 5, embed_sigma: 0.02 });
+                let mut params_o = init.clone();
+                let mut m_o = params_o.zeros_like();
+                let mut v_o = params_o.zeros_like();
+
+                // shard-owned store driven through Engine::apply_store
+                let store_engine = tiny_engine(kind, clip);
+                let store = ParamStore::new(schema.clone(), init, shards).unwrap();
+
+                let mut batcher = Batcher::new(&ds, 32, 7);
+                for t in 1..=5usize {
+                    let batch = batcher.next_batch();
+                    let hv = HypersVec::new(hypers()).at_step(t).with_warmup(0.5);
+
+                    let mut out_o = oracle.grad(&params_o, &batch).unwrap();
+                    oracle
+                        .apply(&mut params_o, &mut m_o, &mut v_o, &mut out_o.grads, &out_o.counts, &hv)
+                        .unwrap();
+
+                    let mut out_s = {
+                        let guard = store.read();
+                        store_engine.grad(&guard, &batch).unwrap()
+                    };
+                    store_engine
+                        .apply_store(&store, &mut out_s.grads, &out_s.counts, &hv, shards)
+                        .unwrap();
+                }
+
+                let snap = store.snapshot();
+                for (i, (a, b)) in params_o.tensors.iter().zip(&snap.tensors).enumerate() {
+                    close(
+                        a.as_f32().unwrap(),
+                        b.as_f32().unwrap(),
+                        &format!("{kind}/{clip}/shards={shards}: param[{i}] ({})", spec[i].name),
+                    );
+                }
+                let (m_s, v_s) = store.moments();
+                for (i, (a, b)) in m_o.tensors.iter().zip(&m_s.tensors).enumerate() {
+                    close(a.as_f32().unwrap(), b.as_f32().unwrap(),
+                        &format!("{kind}/{clip}/shards={shards}: m[{i}]"));
+                }
+                for (i, (a, b)) in v_o.tensors.iter().zip(&v_s.tensors).enumerate() {
+                    close(a.as_f32().unwrap(), b.as_f32().unwrap(),
+                        &format!("{kind}/{clip}/shards={shards}: v[{i}]"));
+                }
+            }
+        }
+    }
+}
+
+fn data() -> (Dataset, Dataset) {
+    let schema = criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n: 1_500, seed: 19, ..Default::default() });
+    random_split(&ds, 0.9, 0)
+}
+
+fn run(
+    clip: ClipMode,
+    shards: usize,
+    train: &Dataset,
+    test: &Dataset,
+) -> (TrainReport, Vec<Vec<f32>>, Option<Vec<f64>>) {
+    let preset = criteo_preset();
+    let engine = Engine::reference(ModelKind::DeepFm, criteo_synth(), 8, vec![32, 32], 2, clip);
+    let cfg = TrainConfig {
+        batch: 128,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs: 1.0,
+        workers: 2,
+        threads: 2,
+        param_shards: shards,
+        warmup_steps: 4,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    let report = trainer.train(train, test).unwrap();
+    let params = trainer
+        .params()
+        .tensors
+        .iter()
+        .map(|t| t.as_f32().unwrap().to_vec())
+        .collect();
+    let sqnorms = trainer.store.field_sqnorms();
+    (report, params, sqnorms)
+}
+
+/// Acceptance: a full threaded training run is invariant to the apply
+/// shard count — same loss curve, same final params, same AUC — for the
+/// CowClip hot path and the AdaField ablation (the mode the maintained
+/// norms serve).
+#[test]
+fn trainer_run_is_shard_count_invariant() {
+    let (train, test) = data();
+    for clip in [ClipMode::CowClip, ClipMode::AdaField] {
+        let (base_report, base_params, _) = run(clip, 1, &train, &test);
+        assert!(!base_report.diverged, "{clip}: serial run diverged");
+        for shards in [2usize, 3] {
+            let (report, params, _) = run(clip, shards, &train, &test);
+            assert!(!report.diverged, "{clip}/shards={shards}: diverged");
+            assert_eq!(base_report.steps, report.steps, "{clip}: step count");
+            close(
+                &base_report.train_loss_curve,
+                &report.train_loss_curve,
+                &format!("{clip}/shards={shards}: loss curve"),
+            );
+            for (i, (a, b)) in base_params.iter().zip(&params).enumerate() {
+                close(a, b, &format!("{clip}/shards={shards}: param[{i}]"));
+            }
+            assert!(
+                (base_report.final_auc - report.final_auc).abs() <= TOL as f64,
+                "{clip}/shards={shards}: AUC {} vs {}",
+                base_report.final_auc,
+                report.final_auc
+            );
+        }
+    }
+}
+
+/// The maintained per-field `Σw²` (what makes sparse AdaField O(touched)
+/// instead of O(V·d)) stays in sync with a fresh scan of the weights
+/// through a full AdaField training run.
+#[test]
+fn adafield_maintained_norms_track_weights_through_training() {
+    let (train, test) = data();
+    let (_, params, sqnorms) = run(ClipMode::AdaField, 3, &train, &test);
+    let sqnorms = sqnorms.expect("embed table has maintained norms");
+    let schema = criteo_synth();
+    let embed = &params[0];
+    let d = embed.len() / schema.total_vocab();
+    for (fi, (off, vs)) in schema.fields().enumerate() {
+        let fresh: f64 = embed[off * d..(off + vs) * d]
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum();
+        let diff = (sqnorms[fi] - fresh).abs();
+        assert!(
+            diff <= 1e-7 * fresh.max(1.0),
+            "field {fi}: maintained {} vs fresh {fresh}",
+            sqnorms[fi]
+        );
+    }
+}

@@ -272,6 +272,7 @@ fn e2e_sparse_pipeline_trains() {
         epochs: 1.0,
         workers: 4,
         threads: 1,
+        param_shards: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,

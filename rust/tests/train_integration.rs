@@ -37,6 +37,7 @@ fn config(batch: usize, workers: usize, epochs: f64) -> TrainConfig {
         epochs,
         workers,
         threads: 1,
+        param_shards: 1,
         warmup_steps: 0,
         init_sigma: preset.init_sigma_cowclip,
         seed: 1234,
@@ -89,7 +90,7 @@ fn worker_count_does_not_change_the_math() {
             assert!(report.reduce_stats.bytes_moved > 0);
             assert_eq!(report.reduce_stats.workers, workers);
         }
-        finals.push(trainer.params.tensors[0].as_f32().unwrap().to_vec());
+        finals.push(trainer.params().tensors[0].as_f32().unwrap().to_vec());
     }
     // data-parallel sharding is numerically equivalent (up to f32 assoc):
     let (a, b) = (&finals[0], &finals[1]);
@@ -128,9 +129,71 @@ fn checkpoint_roundtrip_through_trainer() {
     let dir = std::env::temp_dir().join(format!("cowclip_ckpt_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("dcn.ckpt");
-    trainer.params.save(&path).unwrap();
-    let back = ParamSet::load(&path, &trainer.params.spec).unwrap();
-    assert_eq!(back.tensors, trainer.params.tensors);
+    trainer.params().save(&path).unwrap();
+    let back = ParamSet::load(&path, &trainer.params().spec).unwrap();
+    assert_eq!(back.tensors, trainer.params().tensors);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Checkpoint resume: a run saved mid-stream and resumed in a fresh
+/// trainer must continue exactly like the uninterrupted run — same
+/// params, same Adam moments, same step counter — including through the
+/// warmup window (the resumed step counter drives the same factors).
+#[test]
+fn checkpoint_resume_matches_uninterrupted_run() {
+    let schema = cowclip::data::schema::criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n: 2_000, seed: 12, ..Default::default() });
+    let engine = || {
+        Engine::reference(
+            ModelKind::DeepFm,
+            cowclip::data::schema::criteo_synth(),
+            8,
+            vec![32, 32],
+            2,
+            ClipMode::CowClip,
+        )
+    };
+    let mut cfg = config(128, 1, 1.0);
+    cfg.warmup_steps = 6; // steps 5..6 of the resumed run are still warming
+    cfg.param_shards = 2;
+
+    // uninterrupted: 8 steps over a fixed batch sequence
+    let mut batches = cowclip::data::Batcher::new(&ds, 128, 77);
+    let seq: Vec<_> = (0..8).map(|_| batches.next_batch()).collect();
+    let mut full = Trainer::new(engine(), cfg.clone()).unwrap();
+    for b in &seq {
+        full.train_step(b).unwrap();
+    }
+
+    // interrupted twin: 4 steps, save, resume in a fresh trainer, finish
+    let dir = std::env::temp_dir().join(format!("cowclip_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.ckpt");
+    let mut first = Trainer::new(engine(), cfg.clone()).unwrap();
+    for b in &seq[..4] {
+        first.train_step(b).unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+    let mut resumed = Trainer::new(engine(), cfg).unwrap();
+    resumed.resume_from(&path).unwrap();
+    assert_eq!(resumed.step(), 4, "resume must restore the step counter");
+    for b in &seq[4..] {
+        resumed.train_step(b).unwrap();
+    }
+
+    assert_eq!(resumed.step(), full.step());
+    let (a, b) = (full.params(), resumed.params());
+    for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        let (xa, xb) = (ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        for (j, (x, y)) in xa.iter().zip(xb).enumerate() {
+            assert!((x - y).abs() <= 1e-6, "param[{i}][{j}]: {x} vs {y}");
+        }
+    }
+    drop((a, b));
+    let (mf, vf) = full.store.moments();
+    let (mr, vr) = resumed.store.moments();
+    assert_eq!(mf.tensors, mr.tensors, "m moments must round-trip");
+    assert_eq!(vf.tensors, vr.tensors, "v moments must round-trip");
     std::fs::remove_dir_all(&dir).ok();
 }
 
