@@ -1,0 +1,92 @@
+//! Serving throughput: batched vs unbatched micro-batching, f32 vs
+//! quantized tables.
+//!
+//! An open-loop driver pre-enqueues a fixed request load (drawn from the
+//! training synthesizer's Zipf id model, so the embedding gather sees
+//! production-shaped skew) and the table reports, per configuration:
+//! achieved QPS, p50/p99 request latency (enqueue → scored) from the
+//! shared `metrics::LatencyHistogram`, and the mean coalesced batch
+//! size. The batched rows should beat `max_batch = 1` on QPS by roughly
+//! the per-forward fixed-cost amortization; the quantized rows show the
+//! ~2x table-memory cut at near-identical throughput.
+//!
+//! `-- --smoke` runs a small config (CI compile+run gate).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cowclip::data::schema::criteo_synth;
+use cowclip::data::synth::{RowSampler, SynthConfig};
+use cowclip::model::init::{init_params, InitConfig};
+use cowclip::reference::step::build_spec;
+use cowclip::reference::{ModelKind, ReferenceModel};
+use cowclip::serve::{score_all, Request, ServeConfig, ServeModel, Server};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_requests = if smoke { 2_000 } else { 20_000 };
+
+    let schema = criteo_synth();
+    let model = ReferenceModel::new(ModelKind::DeepFm, schema.clone(), 10, vec![64, 64], 2);
+    let spec = build_spec(model.kind, &schema, model.embed_dim, &model.hidden, model.n_cross);
+    let params = init_params(&spec, &InitConfig { seed: 7, embed_sigma: 0.02 });
+
+    let mut sampler = RowSampler::new(&schema, &SynthConfig { seed: 99, ..Default::default() });
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let (cat, dense) = sampler.next_row();
+            Request { id: i as u64, cat, dense }
+        })
+        .collect();
+
+    println!("== serve_throughput: {n_requests} open-loop requests, DeepFM/criteo_synth ==");
+    println!(
+        "{:>6} {:>12} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "quant", "mode", "table MiB", "QPS", "p50 ms", "p99 ms", "mean ms", "batch"
+    );
+    let mut qps_unbatched = 0.0f64;
+    for quant in [false, true] {
+        let frozen =
+            Arc::new(ServeModel::from_params(model.clone(), params.clone(), quant).unwrap());
+        for (mode, max_batch) in [("unbatched", 1usize), ("batched-64", 64)] {
+            let cfg = ServeConfig {
+                max_batch,
+                max_delay: Duration::from_micros(500),
+                threads: 2,
+            };
+            let server = Server::start(Arc::clone(&frozen), cfg);
+            let client = server.client();
+            let scored = score_all(&client, reqs.clone()).unwrap();
+            assert_eq!(scored.len(), reqs.len());
+            let stats = server.shutdown().unwrap();
+            let (p50, _p90, p99, mean) = stats.latency.summary();
+            println!(
+                "{:>6} {:>12} {:>10.1} {:>10.0} {:>10.3} {:>10.3} {:>10.3} {:>10.1}",
+                quant,
+                mode,
+                frozen.table_bytes() as f64 / (1 << 20) as f64,
+                stats.qps(),
+                p50,
+                p99,
+                mean,
+                stats.mean_batch()
+            );
+            if !quant && max_batch == 1 {
+                qps_unbatched = stats.qps();
+            } else if !quant && qps_unbatched > 0.0 {
+                println!(
+                    "{:>6} {:>12} batching speedup vs unbatched: {:.2}x",
+                    "", "", stats.qps() / qps_unbatched
+                );
+            }
+        }
+    }
+    let f32_model = ServeModel::from_params(model.clone(), params.clone(), false).unwrap();
+    let q_model = ServeModel::from_params(model, params, true).unwrap();
+    println!(
+        "table memory: {:.1} MiB f32 -> {:.1} MiB quantized ({:.2}x)",
+        f32_model.table_bytes() as f64 / (1 << 20) as f64,
+        q_model.table_bytes() as f64 / (1 << 20) as f64,
+        f32_model.table_bytes() as f64 / q_model.table_bytes() as f64
+    );
+}

@@ -35,6 +35,16 @@ USAGE:
                       --resume continues step counter + warmup schedule)
   cowclip eval       --ckpt FILE --data FILE [--model M] [--batch B]
                      [--engine hlo|reference]
+  cowclip serve      --ckpt FILE [--model M] [--schema S] [--quant]
+                     [--max-batch N] [--max-delay-us U] [--scoring-threads T]
+                     [--synthetic] [--duration-ms D] [--qps Q] [--seed S]
+                     [--requests FILE.tsv]
+                     (micro-batching scorer: synthetic open-loop load for
+                      D ms — Q req/s, 0 = max rate — or a TSV of requests;
+                      --quant serves u16-quantized tables, ~2x less memory)
+  cowclip inspect    <ckpt> [--model M] [--schema S]
+                     (print format/step/per-table sizes of a CCKP/CCKS
+                      file; --model+--schema resolve tensor shapes)
   cowclip experiment <id|all|quick> [--n N] [--epochs E] [--seed S] [--out DIR]
   cowclip artifacts  check
   cowclip help
@@ -49,6 +59,8 @@ pub fn dispatch(args: Args) -> Result<()> {
         Some("data") => data_cmd(&args),
         Some("train") => train_cmd(&args),
         Some("eval") => eval_cmd(&args),
+        Some("serve") => serve_cmd(&args),
+        Some("inspect") => inspect_cmd(&args),
         Some("experiment") => experiment_cmd(&args),
         Some("artifacts") => artifacts_cmd(&args),
         Some("help") | None => {
@@ -305,6 +317,184 @@ fn eval_cmd(args: &Args) -> Result<()> {
     println!("  logloss  {:.4}", acc.logloss());
     println!("  Brier    {:.4}", brier_from_logits(&logits_all, &labels_all));
     println!("  ECE(10)  {:.4}", ece_from_logits(&logits_all, &labels_all, 10));
+    Ok(())
+}
+
+/// Serve a checkpoint through the micro-batching scorer and drive it
+/// with either a synthetic open-loop load (the default: `RowSampler`
+/// draws requests from the training synthesizer's Zipf id model) or a
+/// TSV of requests. Prints QPS, batch-coalescing and latency stats.
+fn serve_cmd(args: &Args) -> Result<()> {
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use crate::data::synth::RowSampler;
+    use crate::reference::ReferenceModel;
+    use crate::serve::{read_requests_tsv, score_all, Request, ServeConfig, ServeModel, Server};
+
+    let ckpt = args.get("ckpt").context("--ckpt FILE required")?;
+    let model: ModelKind = args.str_or("model", "deepfm").parse()?;
+    let schema_name = args.str_or("schema", "criteo_synth");
+    let schema = crate::data::schema::by_name(&schema_name)
+        .with_context(|| format!("unknown schema {schema_name}"))?;
+    let quant = args.has("quant");
+    // same architecture constants as `train --engine reference`
+    let reference = ReferenceModel::new(model, schema.clone(), 10, vec![128, 128, 128], 3);
+    let frozen = Arc::new(ServeModel::load(Path::new(ckpt), reference, quant)?);
+    let mib = |b: usize| b as f64 / (1 << 20) as f64;
+    println!(
+        "loaded {model} from {ckpt}: {:.1} MiB resident ({:.1} MiB as f32{})",
+        mib(frozen.serving_bytes()),
+        mib(frozen.f32_bytes()),
+        match frozen.quant_error_bound() {
+            Some(b) => format!(", u16-quantized tables, per-field bound <= {b:.2e}"),
+            None => String::new(),
+        }
+    );
+
+    let cfg = ServeConfig {
+        max_batch: args.usize_or("max-batch", 64)?.max(1),
+        max_delay: Duration::from_micros(args.u64_or("max-delay-us", 2000)?),
+        threads: args.usize_or("scoring-threads", 2)?.max(1),
+    };
+    println!(
+        "serving: max batch {}, deadline {} us, {} scoring threads",
+        cfg.max_batch,
+        cfg.max_delay.as_micros(),
+        cfg.threads
+    );
+    let server = Server::start(Arc::clone(&frozen), cfg);
+    let client = server.client();
+
+    if let Some(tsv) = args.get("requests") {
+        let reqs = read_requests_tsv(Path::new(tsv), frozen.schema())?;
+        println!("scoring {} requests from {tsv}...", reqs.len());
+        let scored = score_all(&client, reqs)?;
+        let mean_p: f64 =
+            scored.iter().map(|s| s.prob as f64).sum::<f64>() / scored.len().max(1) as f64;
+        println!("mean p(click) {mean_p:.4}");
+    } else {
+        let duration = Duration::from_millis(args.u64_or("duration-ms", 2000)?);
+        let target_qps = args.f64_or("qps", 0.0)?;
+        let seed = args.u64_or("seed", 1234)?;
+        let mut sampler = RowSampler::new(
+            &schema,
+            &crate::data::synth::SynthConfig { seed, ..Default::default() },
+        );
+        println!(
+            "synthetic open-loop load for {} ms ({})...",
+            duration.as_millis(),
+            if target_qps > 0.0 { format!("{target_qps:.0} req/s") } else { "max rate".into() }
+        );
+        let t0 = Instant::now();
+        let mut offered = crate::metrics::QpsMeter::new();
+        let mut pending = VecDeque::new();
+        while t0.elapsed() < duration {
+            let (cat, dense) = sampler.next_row();
+            pending.push_back(client.submit(Request { id: offered.count(), cat, dense })?);
+            offered.hit(1);
+            if target_qps > 0.0 {
+                // open loop: pace arrivals off the wall clock, not responses
+                let due = Duration::from_secs_f64(offered.count() as f64 / target_qps);
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            // bound driver memory without closing the loop on every reply
+            while pending.len() > 50_000 {
+                let _ = pending.pop_front().unwrap().recv();
+            }
+        }
+        let offered_qps = offered.qps();
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        println!("offered load: {} requests at {:.0} req/s", offered.count(), offered_qps);
+    }
+
+    let stats = server.shutdown()?;
+    let (p50, p90, p99, mean) = stats.latency.summary();
+    println!("\n== serving report ==");
+    println!("  requests      {:>10}", stats.requests);
+    println!("  wall          {:>10.2} s", stats.wall.as_secs_f64());
+    println!("  QPS           {:>10.0}", stats.qps());
+    println!("  micro-batches {:>10}   (mean size {:.1})", stats.batches, stats.mean_batch());
+    println!("  latency ms    p50 {p50:>8.3}   p90 {p90:>8.3}   p99 {p99:>8.3}   mean {mean:>8.3}");
+    Ok(())
+}
+
+/// Sanity-check a checkpoint artifact: format, step counter, per-table
+/// sizes. With `--model`/`--schema` the spec resolves tensor shapes.
+fn inspect_cmd(args: &Args) -> Result<()> {
+    use crate::model::inspect_checkpoint;
+    use crate::reference::step::build_spec;
+
+    let path = args
+        .positional(1)
+        .context("usage: cowclip inspect <ckpt> [--model M] [--schema S]")?;
+    let info = inspect_checkpoint(Path::new(path))?;
+    println!(
+        "{path}: {} checkpoint{}, optimizer step {}",
+        info.format,
+        if info.format == "CCKS" { format!(" v{}", info.version) } else { String::new() },
+        info.step
+    );
+    println!(
+        "  state: {}",
+        if info.has_moments {
+            "params + Adam moments + lazy-Adam row clocks (resumable)"
+        } else {
+            "params only (serving/eval)"
+        }
+    );
+
+    // optional shape resolution against the reference spec
+    let spec = if args.has("model") || args.has("schema") {
+        let model: ModelKind = args.str_or("model", "deepfm").parse()?;
+        let schema_name = args.str_or("schema", "criteo_synth");
+        let schema = crate::data::schema::by_name(&schema_name)
+            .with_context(|| format!("unknown schema {schema_name}"))?;
+        Some(build_spec(model, &schema, 10, &[128, 128, 128], 3))
+    } else {
+        None
+    };
+
+    for e in &info.params {
+        let shape = spec
+            .as_ref()
+            .and_then(|s| s.iter().find(|se| se.name == e.name))
+            .filter(|se| se.numel() as u64 == e.numel)
+            .map(|se| format!("{:?}", se.shape))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "  {:<16} {:>12} params {:>12} bytes  shape {}",
+            e.name,
+            e.numel,
+            e.numel * 4,
+            shape
+        );
+    }
+    println!(
+        "  total: {} tensors, {} params, {:.2} MiB (f32)",
+        info.params.len(),
+        info.total_numel(),
+        info.total_bytes() as f64 / (1 << 20) as f64
+    );
+    if let Some(spec) = &spec {
+        let named: std::collections::HashSet<&str> =
+            info.params.iter().map(|e| e.name.as_str()).collect();
+        let missing: Vec<&str> = spec
+            .iter()
+            .filter(|se| !named.contains(se.name.as_str()))
+            .map(|se| se.name.as_str())
+            .collect();
+        if missing.is_empty() {
+            println!("  spec check: all expected tensors present");
+        } else {
+            println!("  spec check: MISSING {missing:?}");
+        }
+    }
     Ok(())
 }
 

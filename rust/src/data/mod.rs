@@ -22,4 +22,4 @@ pub use prefetch::Prefetch;
 pub use dataset::Dataset;
 pub use schema::{Schema, avazu_synth, criteo_synth};
 pub use split::{sequential_split, random_split};
-pub use synth::{SynthConfig, generate};
+pub use synth::{RowSampler, SynthConfig, generate};

@@ -151,15 +151,16 @@ impl Teacher {
     }
 }
 
-/// Generate a dataset according to `cfg`.
-pub fn generate(schema: &Schema, cfg: &SynthConfig) -> Dataset {
-    let mut root = Rng::new(cfg.seed);
-    let mut rng_fields = root.split(1);
-    let mut rng_teacher = root.split(2);
-    let mut rng_rows = root.split(3);
-
-    // Per-field Zipf samplers; shuffle rank->id so the "hot" id isn't
-    // always local id 0 (matters for the top-k collapse transform).
+/// The per-field id model shared by [`generate`] and [`RowSampler`]:
+/// Zipf samplers plus the rank→id shuffles (seeded from `rng_fields`, so
+/// the "hot" id isn't always local id 0 — matters for the top-k collapse
+/// transform). Keeping this in one place is what makes load generation
+/// and training synthesis draw from **one** id distribution.
+fn field_model(
+    schema: &Schema,
+    cfg: &SynthConfig,
+    rng_fields: &mut Rng,
+) -> (Vec<ZipfField>, Vec<Vec<usize>>) {
     let samplers: Vec<ZipfField> = schema
         .vocab_sizes
         .iter()
@@ -175,6 +176,73 @@ pub fn generate(schema: &Schema, cfg: &SynthConfig) -> Dataset {
             ids
         })
         .collect();
+    (samplers, rank_to_id)
+}
+
+/// Seeded single-row stream drawn from the **same** per-field Zipf
+/// samplers and rank shuffles as [`generate`] — the serving tier's load
+/// generator and the training synthesizer share one id-frequency model,
+/// so a serving benchmark hits the embedding table with the skew the
+/// model was trained under. Each draw yields `(cat_ids, dense)` with
+/// global categorical ids; labels are not generated (requests don't
+/// have them).
+pub struct RowSampler {
+    samplers: Vec<ZipfField>,
+    rank_to_id: Vec<Vec<usize>>,
+    offsets: Vec<usize>,
+    n_dense: usize,
+    rng: Rng,
+}
+
+impl RowSampler {
+    /// Same seeding discipline as [`generate`]: `cfg.seed` derives the
+    /// field shuffles (`split(1)`) and the row stream (`split(3)`), so a
+    /// sampler built from a dataset's `SynthConfig` draws ids with that
+    /// dataset's exact per-field distribution.
+    pub fn new(schema: &Schema, cfg: &SynthConfig) -> RowSampler {
+        let mut root = Rng::new(cfg.seed);
+        let mut rng_fields = root.split(1);
+        let _rng_teacher = root.split(2); // keep the stream family aligned
+        let rng = root.split(3);
+        let (samplers, rank_to_id) = field_model(schema, cfg, &mut rng_fields);
+        RowSampler {
+            samplers,
+            rank_to_id,
+            offsets: schema.offsets(),
+            n_dense: schema.n_dense,
+            rng,
+        }
+    }
+
+    /// Draw one request row: global categorical ids + dense features.
+    pub fn next_row(&mut self) -> (Vec<i32>, Vec<f32>) {
+        let mut cat = Vec::with_capacity(self.samplers.len());
+        for (f, sampler) in self.samplers.iter().enumerate() {
+            let rank = sampler.sample(&mut self.rng);
+            cat.push((self.offsets[f] + self.rank_to_id[f][rank]) as i32);
+        }
+        let dense: Vec<f32> =
+            (0..self.n_dense).map(|_| self.rng.next_gaussian() as f32).collect();
+        (cat, dense)
+    }
+}
+
+impl Iterator for RowSampler {
+    type Item = (Vec<i32>, Vec<f32>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        Some(self.next_row())
+    }
+}
+
+/// Generate a dataset according to `cfg`.
+pub fn generate(schema: &Schema, cfg: &SynthConfig) -> Dataset {
+    let mut root = Rng::new(cfg.seed);
+    let mut rng_fields = root.split(1);
+    let mut rng_teacher = root.split(2);
+    let mut rng_rows = root.split(3);
+
+    let (samplers, rank_to_id) = field_model(schema, cfg, &mut rng_fields);
 
     let teacher = Teacher::new(schema, cfg.teacher_dim, &mut rng_teacher);
     let offsets = schema.offsets();
@@ -264,6 +332,60 @@ mod tests {
         let ds = generate(&schema, &SynthConfig { n: 20_000, ..Default::default() });
         let ctr = ds.ctr();
         assert!(ctr > 0.1 && ctr < 0.5, "ctr {ctr}");
+    }
+
+    #[test]
+    fn row_sampler_matches_generate_distribution() {
+        // Same seed -> same rank shuffles and Zipf CDFs, so per-field id
+        // frequencies of the request stream track the dataset's closely.
+        let schema = Schema { name: "rs".into(), n_dense: 2, vocab_sizes: vec![50, 20] };
+        let cfg = SynthConfig { n: 30_000, seed: 77, ..Default::default() };
+        let ds = generate(&schema, &cfg);
+        let mut sampler = RowSampler::new(&schema, &cfg);
+        let total = schema.total_vocab();
+        let mut ds_counts = vec![0u32; total];
+        for &id in &ds.x_cat {
+            ds_counts[id as usize] += 1;
+        }
+        let mut rs_counts = vec![0u32; total];
+        let offs = schema.offsets();
+        for _ in 0..cfg.n {
+            let (cat, dense) = sampler.next_row();
+            assert_eq!(cat.len(), schema.n_cat());
+            assert_eq!(dense.len(), schema.n_dense);
+            for (f, &id) in cat.iter().enumerate() {
+                let lo = offs[f] as i32;
+                let hi = lo + schema.vocab_sizes[f] as i32;
+                assert!(id >= lo && id < hi, "field {f}: id {id} outside [{lo},{hi})");
+                rs_counts[id as usize] += 1;
+            }
+        }
+        // the head ids (the ones that dominate training) must agree: same
+        // argmax per field and similar head mass
+        for (off, vs) in schema.fields() {
+            let arg = |c: &[u32]| {
+                (off..off + vs).max_by_key(|&i| c[i]).unwrap()
+            };
+            assert_eq!(arg(&ds_counts), arg(&rs_counts), "hot id differs at field offset {off}");
+            let head_ds = *ds_counts[off..off + vs].iter().max().unwrap() as f64 / cfg.n as f64;
+            let head_rs = *rs_counts[off..off + vs].iter().max().unwrap() as f64 / cfg.n as f64;
+            assert!(
+                (head_ds - head_rs).abs() < 0.05,
+                "head mass {head_ds:.3} vs {head_rs:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn row_sampler_is_deterministic_and_seed_sensitive() {
+        let schema = avazu_synth();
+        let cfg = SynthConfig::default();
+        let a: Vec<_> = RowSampler::new(&schema, &cfg).take(20).collect();
+        let b: Vec<_> = RowSampler::new(&schema, &cfg).take(20).collect();
+        assert_eq!(a, b);
+        let c: Vec<_> =
+            RowSampler::new(&schema, &SynthConfig { seed: 999, ..cfg }).take(20).collect();
+        assert_ne!(a, c);
     }
 
     #[test]

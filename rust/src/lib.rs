@@ -70,6 +70,26 @@
 //! `CCKP` params format — `--resume` continues warmup and bias
 //! correction exactly where a run stopped.
 //!
+//! ## Online serving
+//!
+//! The train → serve loop closes in [`serve`]: a checkpoint saved with
+//! `train --save` loads into an immutable, `Arc`-shared
+//! [`serve::ServeModel`] (the `CCKS`/`CCKP` artifact *is* the
+//! deployment unit), and single-impression requests flow through a
+//! micro-batching queue — **enqueue → coalesce → score → respond** —
+//! where a micro-batch drains on a max-batch-size or latency-deadline
+//! trigger and scores on a pool of threads via the reference model's
+//! inference-only forward (no grad buffers, no locks on the hot path).
+//! Embedding/wide tables optionally quantize to u16 codes with
+//! per-field affine constants (`--quant`, ~2× less serving memory, a
+//! documented dequantization error bound), request load comes from the
+//! same Zipf id model the synthesizer trains on
+//! ([`data::synth::RowSampler`]), and latency lands in a fixed-bucket
+//! histogram ([`metrics::LatencyHistogram`], p50/p90/p99 + QPS).
+//! `cowclip inspect <ckpt>` sanity-checks an artifact before rollout;
+//! `rust/tests/serve_parity.rs` pins served scores to the offline
+//! forward pass at any arrival order and thread count.
+//!
 //! ## Features
 //!
 //! The `pjrt` cargo feature (off by default) compiles the real
@@ -100,6 +120,7 @@ pub mod optim;
 pub mod reference;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod util;

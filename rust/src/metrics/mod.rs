@@ -8,4 +8,4 @@ pub mod meters;
 pub use auc::auc;
 pub use calibration::{brier_from_logits, ece_from_logits};
 pub use logloss::{logloss, logloss_from_logits, sigmoid};
-pub use meters::{EvalAccumulator, LossMeter};
+pub use meters::{EvalAccumulator, LatencyHistogram, LossMeter, QpsMeter};

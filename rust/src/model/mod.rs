@@ -14,4 +14,4 @@ pub mod store;
 pub use init::{init_params, InitConfig};
 pub use manifest::{Artifact, Manifest, ParamEntry};
 pub use params::ParamSet;
-pub use store::{ApplyCtx, ParamStore, ShardPlan};
+pub use store::{inspect_checkpoint, ApplyCtx, CheckpointEntry, CheckpointInfo, ParamStore, ShardPlan};

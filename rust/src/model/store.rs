@@ -41,7 +41,7 @@
 //! accepts a bare `CCKP` params file (moments reset, step 0).
 
 use std::borrow::Cow;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::{Mutex, RwLock, RwLockReadGuard};
 
@@ -609,6 +609,129 @@ impl ParamStore {
     }
 }
 
+/// One entry of an inspected checkpoint: tensor name + scalar count
+/// (shapes are not stored in the file; resolve them against a spec).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointEntry {
+    pub name: String,
+    pub numel: u64,
+}
+
+/// Header-level summary of a checkpoint file, read without
+/// materializing any payload (tensor data is seeked over) — the
+/// `cowclip inspect` command's backing API, for sanity-checking an
+/// artifact before serving it.
+#[derive(Clone, Debug)]
+pub struct CheckpointInfo {
+    /// `"CCKS"` (full training state) or `"CCKP"` (bare params).
+    pub format: &'static str,
+    /// Store format version (0 for bare `CCKP` files).
+    pub version: u32,
+    /// Saved optimizer step (0 for bare `CCKP` files).
+    pub step: u64,
+    /// Name + numel per parameter tensor, in file order.
+    pub params: Vec<CheckpointEntry>,
+    /// Whether Adam moments + lazy-Adam rows follow the params block.
+    pub has_moments: bool,
+}
+
+impl CheckpointInfo {
+    /// Total parameter scalar count.
+    pub fn total_numel(&self) -> u64 {
+        self.params.iter().map(|e| e.numel).sum()
+    }
+
+    /// Total parameter payload bytes (f32).
+    pub fn total_bytes(&self) -> u64 {
+        self.total_numel() * 4
+    }
+}
+
+/// Inspect a checkpoint file (either format) without loading payloads.
+pub fn inspect_checkpoint(path: &Path) -> Result<CheckpointInfo> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic == STORE_MAGIC {
+        let mut vb = [0u8; 4];
+        r.read_exact(&mut vb)?;
+        let version = u32::from_le_bytes(vb);
+        ensure!(version == STORE_VERSION, "unsupported checkpoint version {version}");
+        let mut sb = [0u8; 8];
+        r.read_exact(&mut sb)?;
+        let step = u64::from_le_bytes(sb);
+        let params = scan_block(&mut r)?;
+        // the "resumable" claim covers the moment and lazy-row blocks
+        // too: scan (seek over) all of them so truncation anywhere in
+        // the file is reported, not silently summarized
+        for which in ["m", "v"] {
+            let block = scan_block(&mut r)
+                .with_context(|| format!("scanning the Adam {which} block"))?;
+            ensure!(
+                block.len() == params.len(),
+                "Adam {which} block has {} tensors, params have {}",
+                block.len(),
+                params.len()
+            );
+        }
+        for e in &params {
+            let mut nb = [0u8; 8];
+            r.read_exact(&mut nb)
+                .with_context(|| format!("lazy-Adam rows for {}", e.name))?;
+            let n = u64::from_le_bytes(nb);
+            r.seek(SeekFrom::Current(n as i64 * 4))?;
+        }
+        check_not_truncated(&mut r)?;
+        Ok(CheckpointInfo { format: "CCKS", version, step, params, has_moments: true })
+    } else if &magic == CKPT_MAGIC {
+        let params = scan_block_body(&mut r)?;
+        check_not_truncated(&mut r)?;
+        Ok(CheckpointInfo { format: "CCKP", version: 0, step: 0, params, has_moments: false })
+    } else {
+        bail!("{}: not a checkpoint file", path.display());
+    }
+}
+
+/// Seeking past EOF succeeds silently, so a truncated payload is caught
+/// by comparing the cursor against the file length after the scan.
+fn check_not_truncated(r: &mut BufReader<std::fs::File>) -> Result<()> {
+    let pos = r.stream_position()?;
+    let len = r.get_ref().metadata()?.len();
+    ensure!(pos <= len, "checkpoint truncated: scan needs {pos} bytes, file has {len}");
+    Ok(())
+}
+
+/// Scan one `CCKP` block (magic included), seeking over payloads.
+fn scan_block<R: Read + Seek>(r: &mut R) -> Result<Vec<CheckpointEntry>> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == CKPT_MAGIC, "malformed checkpoint block");
+    scan_block_body(r)
+}
+
+fn scan_block_body<R: Read + Seek>(r: &mut R) -> Result<Vec<CheckpointEntry>> {
+    let mut nb = [0u8; 4];
+    r.read_exact(&mut nb)?;
+    let n = u32::from_le_bytes(nb) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut lb = [0u8; 4];
+        r.read_exact(&mut lb)?;
+        let name_len = u32::from_le_bytes(lb) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let mut cb = [0u8; 8];
+        r.read_exact(&mut cb)?;
+        let numel = u64::from_le_bytes(cb);
+        r.seek(SeekFrom::Current(numel as i64 * 4))
+            .context("checkpoint truncated inside a tensor payload")?;
+        out.push(CheckpointEntry { name: String::from_utf8(name)?, numel });
+    }
+    Ok(out)
+}
+
 /// One shard's slice of the apply-stage work: disjoint mutable views of
 /// the parameters, moments and gradients it owns.
 enum WorkItem<'a> {
@@ -1047,6 +1170,48 @@ mod tests {
         // params-only reader sees the same weights
         let p = ParamStore::load_params(&path, &spec).unwrap();
         assert_eq!(p.tensors, store.snapshot().tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inspect_reads_both_formats_without_payloads() {
+        let schema = test_schema();
+        let spec = test_spec(&schema, 4);
+        let init = init_params(&spec, &InitConfig { seed: 13, embed_sigma: 0.02 });
+        let dir = std::env::temp_dir().join(format!("ccks_inspect_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let cckp = dir.join("params.ckpt");
+        init.save(&cckp).unwrap();
+        let info = inspect_checkpoint(&cckp).unwrap();
+        assert_eq!(info.format, "CCKP");
+        assert_eq!(info.step, 0);
+        assert!(!info.has_moments);
+        assert_eq!(info.params.len(), spec.len());
+
+        let store = ParamStore::new(schema.clone(), init, 2).unwrap();
+        let ccks = dir.join("full.ckpt");
+        store.save_checkpoint(&ccks, 42).unwrap();
+        let info = inspect_checkpoint(&ccks).unwrap();
+        assert_eq!(info.format, "CCKS");
+        assert_eq!(info.step, 42);
+        assert!(info.has_moments);
+        for (e, s) in info.params.iter().zip(&spec) {
+            assert_eq!(e.name, s.name);
+            assert_eq!(e.numel, s.numel() as u64);
+        }
+        assert_eq!(info.total_bytes(), 4 * spec.iter().map(|e| e.numel() as u64).sum::<u64>());
+
+        // a truncated file is reported, not silently summarized —
+        // whether the cut lands in the params block, in the moment /
+        // lazy-row blocks ("resumable" must mean the whole state is
+        // there), or mid-payload anywhere
+        let bytes = std::fs::read(&ccks).unwrap();
+        for cut_at in [60, bytes.len() / 2, bytes.len() - 10] {
+            let cut = dir.join("cut.ckpt");
+            std::fs::write(&cut, &bytes[..cut_at]).unwrap();
+            assert!(inspect_checkpoint(&cut).is_err(), "cut at {cut_at} must be reported");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -162,6 +162,34 @@ pub fn dense_fwd(
     (y, DenseCache { x: x.to_vec(), pre })
 }
 
+/// Inference-only twin of [`dense_fwd`]: identical affine + optional
+/// ReLU math, but no backward cache is allocated — the serving tier's
+/// forward must not pay for gradient state it will never use.
+pub fn dense_infer(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    m: usize,
+    n: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let mut y = matmul(x, w, b, m, n);
+    for i in 0..b {
+        for (yv, &bv) in y[i * n..(i + 1) * n].iter_mut().zip(bias) {
+            *yv += bv;
+        }
+    }
+    if relu {
+        for yv in &mut y {
+            if *yv < 0.0 {
+                *yv = 0.0;
+            }
+        }
+    }
+    y
+}
+
 /// Backward of `dense_fwd`. Returns `(dx, dw, dbias)`.
 pub fn dense_bwd(
     dy: &[f32],
@@ -309,6 +337,19 @@ mod tests {
             w[i] = orig;
             let fd = (hi - lo) / (2.0 * eps);
             assert!((fd - dw[i]).abs() < 1e-2, "i={i}: fd {fd} vs {}", dw[i]);
+        }
+    }
+
+    #[test]
+    fn dense_infer_matches_dense_fwd() {
+        let (b, m, n) = (3usize, 4usize, 2usize);
+        let x: Vec<f32> = (0..b * m).map(|i| (i as f32) * 0.17 - 1.0).collect();
+        let w: Vec<f32> = (0..m * n).map(|i| (i as f32) * 0.05 - 0.2).collect();
+        let bias = vec![0.3f32, -0.4];
+        for relu in [false, true] {
+            let (y, _) = dense_fwd(&x, &w, &bias, b, m, n, relu);
+            let yi = dense_infer(&x, &w, &bias, b, m, n, relu);
+            assert_eq!(y, yi, "relu={relu}");
         }
     }
 

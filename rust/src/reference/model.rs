@@ -117,6 +117,142 @@ impl ReferenceModel {
         Ok((loss, grads, counts))
     }
 
+    /// Batched **inference-only** forward over pre-gathered embeddings —
+    /// the serving tier's scoring path. The caller gathers (and, under
+    /// quantization, dequantizes) the vocab-table rows itself:
+    ///
+    /// * `dense` — the non-vocab parameters (every spec entry whose
+    ///   group is not `embed`/`wide`), in spec order.
+    /// * `embeds` — `[b, n_cat, embed_dim]` gathered embedding rows.
+    /// * `wide_sums` — per row `Σ_f wide_table[ids[f]]` (bias *not*
+    ///   included), required by the wide-stream models (DeepFM, W&D)
+    ///   and ignored otherwise.
+    /// * `x_dense` — `[b, n_dense]` dense features.
+    ///
+    /// The op order mirrors [`ReferenceModel::forward`] exactly, so with
+    /// f32 gathers the logits are bit-identical to the training-side
+    /// forward; no backward caches are allocated.
+    pub fn infer_gathered(
+        &self,
+        dense: &[&Tensor],
+        embeds: &[f32],
+        wide_sums: Option<&[f32]>,
+        x_dense: &[f32],
+        b: usize,
+    ) -> Result<Vec<f32>> {
+        let f = self.schema.n_cat();
+        let d = self.embed_dim;
+        let nd = self.schema.n_dense;
+        let d0 = self.d0();
+        ensure!(embeds.len() == b * f * d, "embeds shape mismatch");
+        ensure!(x_dense.len() == b * nd, "dense-feature shape mismatch");
+
+        // x0 = concat(flatten(embeds), dense)
+        let mut x0 = vec![0.0f32; b * d0];
+        for i in 0..b {
+            x0[i * d0..i * d0 + f * d].copy_from_slice(&embeds[i * f * d..(i + 1) * f * d]);
+            if nd > 0 {
+                x0[i * d0 + f * d..(i + 1) * d0].copy_from_slice(&x_dense[i * nd..(i + 1) * nd]);
+            }
+        }
+
+        let mut r = SliceReader::new(dense);
+        let logits = match self.kind {
+            ModelKind::DeepFm | ModelKind::WideDeep => {
+                let sums = wide_sums
+                    .ok_or_else(|| anyhow::anyhow!("{} needs wide_sums", self.kind))?;
+                ensure!(sums.len() == b, "wide_sums length mismatch");
+                let wide_bias = r.next()?[0];
+                let mut logits: Vec<f32> = sums.iter().map(|&s| wide_bias + s).collect();
+                if self.kind == ModelKind::DeepFm {
+                    let (fm, _) = fm2_fwd(embeds, b, f, d);
+                    for (l, v) in logits.iter_mut().zip(&fm) {
+                        *l += v;
+                    }
+                }
+                let mut h = x0;
+                let mut m = d0;
+                for &n in &self.hidden {
+                    let w = r.next()?;
+                    let bias = r.next()?;
+                    h = dense_infer(&h, w, bias, b, m, n, true);
+                    m = n;
+                }
+                let w = r.next()?;
+                let bias = r.next()?;
+                let out = dense_infer(&h, w, bias, b, m, 1, false);
+                for i in 0..b {
+                    logits[i] += out[i];
+                }
+                logits
+            }
+            ModelKind::Dcn | ModelKind::DcnV2 => {
+                // cross stream
+                let mut xl = x0.clone();
+                for _ in 0..self.n_cross {
+                    let w = r.next()?;
+                    let bias = r.next()?;
+                    match self.kind {
+                        ModelKind::Dcn => {
+                            let s: Vec<f32> = (0..b)
+                                .map(|i| {
+                                    xl[i * d0..(i + 1) * d0]
+                                        .iter()
+                                        .zip(w)
+                                        .map(|(x, wv)| x * wv)
+                                        .sum()
+                                })
+                                .collect();
+                            let mut next = vec![0.0f32; b * d0];
+                            for i in 0..b {
+                                for j in 0..d0 {
+                                    next[i * d0 + j] =
+                                        x0[i * d0 + j] * s[i] + bias[j] + xl[i * d0 + j];
+                                }
+                            }
+                            xl = next;
+                        }
+                        ModelKind::DcnV2 => {
+                            let mut u = matmul(&xl, w, b, d0, d0);
+                            for i in 0..b {
+                                for (uv, &bv) in u[i * d0..(i + 1) * d0].iter_mut().zip(bias) {
+                                    *uv += bv;
+                                }
+                            }
+                            let mut next = vec![0.0f32; b * d0];
+                            for j in 0..b * d0 {
+                                next[j] = x0[j] * u[j] + xl[j];
+                            }
+                            xl = next;
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                // deep stream (hidden only)
+                let mut h = x0;
+                let mut m = d0;
+                for &n in &self.hidden {
+                    let w = r.next()?;
+                    let bias = r.next()?;
+                    h = dense_infer(&h, w, bias, b, m, n, true);
+                    m = n;
+                }
+                // head over concat(xl, deep)
+                let hc = d0 + m;
+                let mut head_in = vec![0.0f32; b * hc];
+                for i in 0..b {
+                    head_in[i * hc..i * hc + d0].copy_from_slice(&xl[i * d0..(i + 1) * d0]);
+                    head_in[i * hc + d0..(i + 1) * hc].copy_from_slice(&h[i * m..(i + 1) * m]);
+                }
+                let head_w = r.next()?;
+                let head_b = r.next()?;
+                dense_infer(&head_in, head_w, head_b, b, hc, 1, false)
+            }
+        };
+        r.finish()?;
+        Ok(logits)
+    }
+
     // ------------------------------------------------------------------
 
     fn forward_cached(&self, params: &ParamSet, batch: &Batch) -> Result<(Vec<f32>, Cache)> {
@@ -496,6 +632,36 @@ struct CrossCache {
     xl: Vec<f32>,
     /// DCN: `s [b]`; DCNv2: `u [b, d0]`.
     su: Vec<f32>,
+}
+
+/// Positional walker over the non-vocab parameter tensors handed to
+/// [`ReferenceModel::infer_gathered`].
+struct SliceReader<'a> {
+    tensors: &'a [&'a Tensor],
+    i: usize,
+}
+
+impl<'a> SliceReader<'a> {
+    fn new(tensors: &'a [&'a Tensor]) -> Self {
+        SliceReader { tensors, i: 0 }
+    }
+
+    fn next(&mut self) -> Result<&'a [f32]> {
+        ensure!(self.i < self.tensors.len(), "dense parameter underflow");
+        let t = self.tensors[self.i].as_f32()?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(
+            self.i == self.tensors.len(),
+            "consumed {} of {} dense params",
+            self.i,
+            self.tensors.len()
+        );
+        Ok(())
+    }
 }
 
 /// Positional parameter walker (twin of python's ParamReader).

@@ -1,0 +1,84 @@
+//! Online inference: checkpoint-frozen scoring behind a micro-batching
+//! request queue, with optionally quantized embedding tables.
+//!
+//! Training fast only matters if the freshly trained model reaches
+//! traffic — this module is everything downstream of
+//! `Trainer::evaluate`: the production-shaped serving tier that closes
+//! the train → serve loop of the CowClip reproduction.
+//!
+//! # Request lifecycle
+//!
+//! **enqueue → coalesce → score → respond.** A [`Client`] validates each
+//! single-impression [`Request`] and pushes it onto the shared queue; a
+//! scoring thread drains a micro-batch when the queue reaches
+//! [`ServeConfig::max_batch`] *or* the oldest request has waited
+//! [`ServeConfig::max_delay`] (so a lone request is never stranded);
+//! the batch runs one inference-only forward through the immutable
+//! `Arc<`[`ServeModel`]`>`; each request's logit and calibrated
+//! probability return over its reply channel. Per-request latency lands
+//! in a [`crate::metrics::LatencyHistogram`] (p50/p90/p99 + mean) and
+//! [`ServeStats`] reports QPS and batch-coalescing stats at shutdown.
+//! See [`queue`] for the batching-policy details.
+//!
+//! # Freshness story
+//!
+//! The trainer's checkpoint *is* the deployment artifact:
+//!
+//! ```text
+//! cowclip train --save model.ckpt        # CCKS: params + moments + step
+//! cowclip inspect model.ckpt             # sanity-check before rollout
+//! cowclip serve --ckpt model.ckpt ...    # frozen scoring replica
+//! ```
+//!
+//! [`ServeModel::load`] accepts the full `CCKS` training checkpoint
+//! (optimizer state is ignored — serving needs only weights) or a bare
+//! `CCKP` params file, so every checkpoint a run ever saved can be
+//! served, and a retrain → re-serve cycle is two commands.
+//!
+//! # Quantization
+//!
+//! With `--quant` the embedding and wide tables store u16 codes plus
+//! per-field affine constants ([`QuantizedTable`]), roughly halving
+//! serving memory. Scoring dequantizes rows during the gather (each
+//! request column's field is known statically, so no lookups); the
+//! served scores equal the reference forward over the dequantized
+//! tables exactly, and each dequantized weight sits within the
+//! documented per-field bound of the trained one — see [`quant`] for
+//! the formula and `rust/tests/serve_parity.rs` for the gate.
+//!
+//! # Quickstart (library)
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use cowclip::data::schema::criteo_synth;
+//! use cowclip::reference::{ModelKind, ReferenceModel};
+//! use cowclip::serve::{Request, ServeConfig, ServeModel, Server};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let model = ReferenceModel::new(
+//!     ModelKind::DeepFm, criteo_synth(), 10, vec![128, 128, 128], 3);
+//! let frozen = Arc::new(ServeModel::load(
+//!     std::path::Path::new("model.ckpt"), model, /*quant=*/ true)?);
+//! let server = Server::start(frozen, ServeConfig::default());
+//! let client = server.client();
+//! let scored = client.score(Request {
+//!     id: 0,
+//!     cat: vec![0; 26],          // global ids, one per field
+//!     dense: vec![0.0; 13],
+//! })?;
+//! println!("p(click) = {:.4}", scored.prob);
+//! let stats = server.shutdown()?;
+//! println!("{} requests at {:.0} QPS", stats.requests, stats.qps());
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod model;
+pub mod quant;
+pub mod queue;
+pub mod request;
+
+pub use model::ServeModel;
+pub use quant::QuantizedTable;
+pub use queue::{score_all, Client, ServeConfig, ServeStats, Server};
+pub use request::{read_requests_tsv, Request, Scored};

@@ -1,0 +1,284 @@
+//! The frozen, immutable scoring model served to request traffic.
+//!
+//! A [`ServeModel`] is built once — from a training checkpoint (`CCKS`
+//! or bare `CCKP`) or an in-memory `ParamSet` — and never mutated, so it
+//! is shared across scoring threads as a plain `Arc` with no locks on
+//! the hot path. The vocab-shaped tables (embedding + wide) optionally
+//! quantize to u16 codes with per-field affine constants
+//! ([`QuantizedTable`]), cutting serving memory roughly in half; the
+//! dense MLP/cross parameters stay f32 (they are negligible next to the
+//! tables and feed matmuls directly).
+//!
+//! Scoring gathers the batch's embedding rows (dequantizing on the fly
+//! in quantized mode — the gather knows each column's field statically,
+//! so the affine constants need no lookup) and runs the reference
+//! model's inference-only forward ([`ReferenceModel::infer_gathered`]),
+//! which mirrors the training forward op for op. In f32 mode served
+//! logits are therefore bit-identical to `ReferenceModel::forward`; in
+//! quantized mode they are exactly the forward over the dequantized
+//! tables, whose weights sit within the documented per-field bound of
+//! the trained ones (`rust/tests/serve_parity.rs` pins both).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::quant::QuantizedTable;
+use super::request::Request;
+use crate::data::schema::Schema;
+use crate::model::manifest::ParamEntry;
+use crate::model::params::ParamSet;
+use crate::model::store::ParamStore;
+use crate::reference::ReferenceModel;
+use crate::tensor::Tensor;
+
+/// Frozen storage of one vocab-shaped table.
+enum TableStore {
+    F32(Vec<f32>),
+    Quant(QuantizedTable),
+}
+
+impl TableStore {
+    fn row_into(&self, id: usize, field: usize, d: usize, out: &mut [f32]) {
+        match self {
+            TableStore::F32(w) => out.copy_from_slice(&w[id * d..(id + 1) * d]),
+            TableStore::Quant(q) => q.row_into(id, field, out),
+        }
+    }
+
+    fn value(&self, id: usize, field: usize) -> f32 {
+        match self {
+            TableStore::F32(w) => w[id],
+            TableStore::Quant(q) => q.value(id, field),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            TableStore::F32(w) => w.len() * 4,
+            TableStore::Quant(q) => q.bytes(),
+        }
+    }
+
+    fn f32_bytes(&self) -> usize {
+        match self {
+            TableStore::F32(w) => w.len() * 4,
+            TableStore::Quant(q) => q.rows() * q.d() * 4,
+        }
+    }
+
+    fn to_f32(&self) -> Vec<f32> {
+        match self {
+            TableStore::F32(w) => w.clone(),
+            TableStore::Quant(q) => q.dequantize_all(),
+        }
+    }
+}
+
+/// The frozen model (see module docs). Immutable after construction;
+/// share it across scoring threads as `Arc<ServeModel>`.
+pub struct ServeModel {
+    model: ReferenceModel,
+    spec: Vec<ParamEntry>,
+    /// `(offset, vocab)` per categorical field, collected once.
+    fields: Vec<(usize, usize)>,
+    /// The `embed`-group table (always present).
+    embed: TableStore,
+    /// The `wide`-group table (DeepFM / W&D only).
+    wide: Option<TableStore>,
+    /// Non-vocab parameters in spec order (wide_bias, MLP, cross, head).
+    dense: Vec<Tensor>,
+    quantized: bool,
+}
+
+impl ServeModel {
+    /// Freeze an in-memory parameter set for serving. `params` must
+    /// match the model's spec (it is consumed — serving owns a private
+    /// copy that trainers can't touch).
+    pub fn from_params(model: ReferenceModel, params: ParamSet, quant: bool) -> Result<ServeModel> {
+        let spec = params.spec.clone();
+        let expected = crate::reference::step::build_spec(
+            model.kind,
+            &model.schema,
+            model.embed_dim,
+            &model.hidden,
+            model.n_cross,
+        );
+        ensure!(
+            spec == expected,
+            "parameter spec does not match the {} architecture",
+            model.kind
+        );
+        let fields: Vec<(usize, usize)> = model.schema.fields().collect();
+        let mut embed = None;
+        let mut wide = None;
+        let mut dense = Vec::new();
+        for (e, t) in spec.iter().zip(params.tensors.into_iter()) {
+            match e.group.as_str() {
+                "embed" => {
+                    ensure!(embed.is_none(), "multiple embed tables in spec");
+                    embed = Some(freeze_table(t, e, &fields, quant)?);
+                }
+                "wide" => {
+                    ensure!(wide.is_none(), "multiple wide tables in spec");
+                    wide = Some(freeze_table(t, e, &fields, quant)?);
+                }
+                _ => dense.push(t),
+            }
+        }
+        let embed = embed.context("spec has no embed table")?;
+        ensure!(
+            wide.is_some() == model.uses_wide(),
+            "wide table presence does not match the {} architecture",
+            model.kind
+        );
+        Ok(ServeModel { model, spec, fields, embed, wide, dense, quantized: quant })
+    }
+
+    /// Load a frozen model from a training checkpoint — either the full
+    /// `CCKS` state (moments are ignored; serving only needs weights) or
+    /// a bare PR-1 `CCKP` params file. This is the freshness hand-off:
+    /// `train --save ckpt` → `serve --ckpt ckpt`.
+    pub fn load(path: &Path, model: ReferenceModel, quant: bool) -> Result<ServeModel> {
+        let spec = crate::reference::step::build_spec(
+            model.kind,
+            &model.schema,
+            model.embed_dim,
+            &model.hidden,
+            model.n_cross,
+        );
+        let params = ParamStore::load_params(path, &spec)
+            .with_context(|| format!("loading serving weights from {}", path.display()))?;
+        ServeModel::from_params(model, params, quant)
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.model.schema
+    }
+
+    pub fn reference(&self) -> &ReferenceModel {
+        &self.model
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.quantized
+    }
+
+    /// Validate and score a micro-batch; returns one logit per request,
+    /// in request order.
+    pub fn score_batch(&self, reqs: &[Request]) -> Result<Vec<f32>> {
+        for r in reqs {
+            r.validate(&self.model.schema)?;
+        }
+        self.score_batch_validated(reqs)
+    }
+
+    /// Scoring without re-validation — the micro-batching queue's path:
+    /// `Client::submit` already validated every request at enqueue, so
+    /// the scoring thread must not pay the O(batch · n_cat) range
+    /// checks a second time.
+    pub(crate) fn score_batch_validated(&self, reqs: &[Request]) -> Result<Vec<f32>> {
+        let b = reqs.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let f = self.model.schema.n_cat();
+        let d = self.model.embed_dim;
+        let nd = self.model.schema.n_dense;
+        debug_assert!(reqs.iter().all(|r| r.validate(&self.model.schema).is_ok()));
+
+        let mut embeds = vec![0.0f32; b * f * d];
+        let mut wide_sums = self.wide.as_ref().map(|_| vec![0.0f32; b]);
+        let mut x_dense = vec![0.0f32; b * nd];
+        for (i, r) in reqs.iter().enumerate() {
+            for (j, &id) in r.cat.iter().enumerate() {
+                let slot = (i * f + j) * d;
+                self.embed.row_into(id as usize, j, d, &mut embeds[slot..slot + d]);
+            }
+            if let (Some(sums), Some(wide)) = (wide_sums.as_mut(), self.wide.as_ref()) {
+                let mut s = 0.0f32;
+                for (j, &id) in r.cat.iter().enumerate() {
+                    s += wide.value(id as usize, j);
+                }
+                sums[i] = s;
+            }
+            x_dense[i * nd..(i + 1) * nd].copy_from_slice(&r.dense);
+        }
+        let dense_refs: Vec<&Tensor> = self.dense.iter().collect();
+        self.model.infer_gathered(&dense_refs, &embeds, wide_sums.as_deref(), &x_dense, b)
+    }
+
+    /// Rebuild a full `ParamSet` with the tables as the scorer actually
+    /// sees them (dequantized in quantized mode) — the offline oracle the
+    /// parity suite runs `ReferenceModel::forward` against.
+    pub fn oracle_params(&self) -> Result<ParamSet> {
+        let mut tensors = Vec::with_capacity(self.spec.len());
+        let mut dense_it = self.dense.iter();
+        for e in &self.spec {
+            let t = match e.group.as_str() {
+                "embed" => Tensor::f32(e.shape.clone(), self.embed.to_f32()),
+                "wide" => Tensor::f32(
+                    e.shape.clone(),
+                    self.wide.as_ref().context("spec has a wide table but model does not")?.to_f32(),
+                ),
+                _ => dense_it.next().context("dense param underflow")?.clone(),
+            };
+            tensors.push(t);
+        }
+        ParamSet::new(self.spec.clone(), tensors)
+    }
+
+    /// Resident bytes of the vocab tables as served (the quantization
+    /// target; the dense MLP/cross params are reported separately).
+    pub fn table_bytes(&self) -> usize {
+        self.embed.bytes() + self.wide.as_ref().map_or(0, |w| w.bytes())
+    }
+
+    /// Bytes the same tables occupy un-quantized (f32).
+    pub fn table_f32_bytes(&self) -> usize {
+        self.embed.f32_bytes() + self.wide.as_ref().map_or(0, |w| w.f32_bytes())
+    }
+
+    /// Resident bytes of the frozen parameters as served.
+    pub fn serving_bytes(&self) -> usize {
+        self.table_bytes() + self.dense.iter().map(|t| t.len() * 4).sum::<usize>()
+    }
+
+    /// Bytes the same parameters occupy un-quantized (f32).
+    pub fn f32_bytes(&self) -> usize {
+        self.table_f32_bytes() + self.dense.iter().map(|t| t.len() * 4).sum::<usize>()
+    }
+
+    /// Largest per-field dequantization error bound across the quantized
+    /// tables (`None` in f32 mode). See `serve::quant` for the formula.
+    pub fn quant_error_bound(&self) -> Option<f32> {
+        if !self.quantized {
+            return None;
+        }
+        let mut bound = 0.0f32;
+        for t in [Some(&self.embed), self.wide.as_ref()].into_iter().flatten() {
+            if let TableStore::Quant(q) = t {
+                bound = bound.max(q.max_error_bound());
+            }
+        }
+        Some(bound)
+    }
+}
+
+fn freeze_table(
+    t: Tensor,
+    e: &ParamEntry,
+    fields: &[(usize, usize)],
+    quant: bool,
+) -> Result<TableStore> {
+    let d = e.shape.get(1).copied().unwrap_or(1);
+    let data = match t {
+        Tensor::F32 { data, .. } => data,
+        Tensor::I32 { .. } => bail!("non-f32 vocab table {}", e.name),
+    };
+    Ok(if quant {
+        TableStore::Quant(QuantizedTable::quantize(&data, d, fields)?)
+    } else {
+        TableStore::F32(data)
+    })
+}

@@ -1,0 +1,257 @@
+//! 16-bit affine quantization of vocab-shaped tables for serving.
+//!
+//! The embedding table dominates a CTR model's memory (V·d f32 scalars;
+//! the dense MLP/cross weights are tiny next to it), and a serving
+//! replica never updates it — so a frozen model can store each scalar as
+//! a `u16` code plus **per-field** affine constants and halve resident
+//! table memory. Per-field (not per-table) constants matter because
+//! CowClip-trained fields have wildly different weight scales (the
+//! per-field norms are the whole point of the clipping algorithm);
+//! sharing one scale across the table would crush the small fields'
+//! resolution.
+//!
+//! # Scheme and error bound
+//!
+//! For field `f` with weight range `[min_f, max_f]` over all of its rows:
+//!
+//! ```text
+//! step_f  = (max_f − min_f) / 65535
+//! code(x) = round((x − min_f) / step_f)          (clamped to [0, 65535])
+//! deq(c)  = min_f + c · step_f                   (f32 arithmetic)
+//! ```
+//!
+//! The rounding error is at most `step_f / 2`; evaluating `deq` in f32
+//! adds at most a few ulps of `max(|min_f|, |max_f|, range_f)`. The
+//! **documented per-field bound** returned by
+//! [`QuantizedTable::error_bound`] is
+//!
+//! ```text
+//! |x − deq(code(x))| ≤ step_f / 2 + 2⁻²⁰ · (range_f + absmax_f)
+//! ```
+//!
+//! and the round-trip test in `rust/tests/serve_parity.rs` asserts it
+//! for every table of a trained model. A degenerate field (all weights
+//! equal, `step_f = 0`) round-trips exactly.
+
+use anyhow::{ensure, Result};
+
+/// Slop factor covering f32 evaluation of `min + code·step` (a few ulps
+/// of the field's magnitude — see the module docs for the full bound).
+const F32_EVAL_SLOP: f32 = 1.0 / (1u32 << 20) as f32;
+
+/// A `[rows, d]` table stored as `u16` codes + per-field affine
+/// constants. Rows are grouped into fields by `(global_offset, vocab)`
+/// spans exactly like the training-side `Schema::fields` iterator, so a
+/// gather always knows its field index statically (column `j` of a CTR
+/// request is field `j`) and pays no lookup.
+#[derive(Clone, Debug)]
+pub struct QuantizedTable {
+    rows: usize,
+    d: usize,
+    codes: Vec<u16>,
+    /// `(global_offset, vocab)` per field — the quantization groups.
+    fields: Vec<(usize, usize)>,
+    field_min: Vec<f32>,
+    field_step: Vec<f32>,
+}
+
+impl QuantizedTable {
+    /// Quantize a packed `[rows, d]` f32 table. `fields` must be the
+    /// schema's `(offset, vocab)` spans, contiguous and covering `rows`.
+    pub fn quantize(w: &[f32], d: usize, fields: &[(usize, usize)]) -> Result<QuantizedTable> {
+        ensure!(d >= 1, "table width must be >= 1");
+        ensure!(!fields.is_empty(), "need at least one field");
+        let rows = w.len() / d;
+        ensure!(rows * d == w.len(), "table length {} not a multiple of d={d}", w.len());
+        let mut expect = 0usize;
+        for &(off, vs) in fields {
+            ensure!(off == expect, "fields must be contiguous (offset {off} vs {expect})");
+            expect = off + vs;
+        }
+        ensure!(expect == rows, "fields cover {expect} rows, table has {rows}");
+
+        let mut codes = vec![0u16; w.len()];
+        let mut field_min = Vec::with_capacity(fields.len());
+        let mut field_step = Vec::with_capacity(fields.len());
+        for &(off, vs) in fields {
+            let span = &w[off * d..(off + vs) * d];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in span {
+                ensure!(x.is_finite(), "non-finite weight in quantized table");
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            if span.is_empty() {
+                lo = 0.0;
+                hi = 0.0;
+            }
+            let step = ((hi as f64 - lo as f64) / 65535.0) as f32;
+            for (c, &x) in codes[off * d..(off + vs) * d].iter_mut().zip(span) {
+                *c = if step == 0.0 {
+                    0
+                } else {
+                    let q = ((x as f64 - lo as f64) / step as f64).round();
+                    q.clamp(0.0, 65535.0) as u16
+                };
+            }
+            field_min.push(lo);
+            field_step.push(step);
+        }
+        Ok(QuantizedTable { rows, d, codes, fields: fields.to_vec(), field_min, field_step })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Dequantize row `id` (a global id belonging to field `field`)
+    /// into `out` (length `d`).
+    #[inline]
+    pub fn row_into(&self, id: usize, field: usize, out: &mut [f32]) {
+        let min = self.field_min[field];
+        let step = self.field_step[field];
+        let src = &self.codes[id * self.d..(id + 1) * self.d];
+        for (o, &c) in out.iter_mut().zip(src) {
+            *o = min + c as f32 * step;
+        }
+    }
+
+    /// Dequantize the single scalar of a `d == 1` row (the wide table).
+    #[inline]
+    pub fn value(&self, id: usize, field: usize) -> f32 {
+        debug_assert_eq!(self.d, 1);
+        self.field_min[field] + self.codes[id] as f32 * self.field_step[field]
+    }
+
+    /// Dequantize the whole table back to packed f32 — the offline
+    /// oracle the serving parity test scores against.
+    pub fn dequantize_all(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.d];
+        for (fi, &(off, vs)) in self.fields.iter().enumerate() {
+            let min = self.field_min[fi];
+            let step = self.field_step[fi];
+            for (o, &c) in out[off * self.d..(off + vs) * self.d]
+                .iter_mut()
+                .zip(&self.codes[off * self.d..(off + vs) * self.d])
+            {
+                *o = min + c as f32 * step;
+            }
+        }
+        out
+    }
+
+    /// The documented per-field round-trip bound (module docs):
+    /// `step/2 + 2⁻²⁰·(range + absmax)`.
+    pub fn error_bound(&self, field: usize) -> f32 {
+        let min = self.field_min[field];
+        let step = self.field_step[field];
+        let range = step * 65535.0;
+        let absmax = min.abs().max((min + range).abs());
+        step * 0.5 + F32_EVAL_SLOP * (range + absmax)
+    }
+
+    /// Largest per-field bound — the table-level guarantee.
+    pub fn max_error_bound(&self) -> f32 {
+        (0..self.fields.len()).map(|f| self.error_bound(f)).fold(0.0, f32::max)
+    }
+
+    /// Resident bytes of the quantized representation.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() * 2 + self.fields.len() * (2 * 4 + 2 * 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn fields() -> Vec<(usize, usize)> {
+        vec![(0, 6), (6, 3), (9, 1)]
+    }
+
+    #[test]
+    fn roundtrip_within_documented_bound() {
+        let d = 4;
+        let mut rng = Rng::new(3);
+        // fields with very different scales, like CowClip-trained tables
+        let mut w = vec![0.0f32; 10 * d];
+        for (fi, (off, vs)) in fields().into_iter().enumerate() {
+            let scale = [1.0f32, 1e-3, 10.0][fi];
+            for x in &mut w[off * d..(off + vs) * d] {
+                *x = rng.next_gaussian() as f32 * scale;
+            }
+        }
+        let q = QuantizedTable::quantize(&w, d, &fields()).unwrap();
+        let back = q.dequantize_all();
+        for (fi, (off, vs)) in fields().into_iter().enumerate() {
+            let bound = q.error_bound(fi);
+            for i in off * d..(off + vs) * d {
+                let err = (w[i] - back[i]).abs();
+                assert!(err <= bound, "field {fi} idx {i}: err {err} > bound {bound}");
+            }
+        }
+        // per-field constants keep the small field's resolution fine:
+        // the 1e-3-scale field's bound is far below the 1.0-scale one
+        assert!(q.error_bound(1) < q.error_bound(0) / 10.0);
+    }
+
+    #[test]
+    fn row_gather_matches_dequantize_all() {
+        let d = 3;
+        let w: Vec<f32> = (0..30).map(|i| (i as f32) * 0.01 - 0.15).collect();
+        let q = QuantizedTable::quantize(&w, d, &fields()).unwrap();
+        let all = q.dequantize_all();
+        let mut row = vec![0.0f32; d];
+        for (fi, (off, vs)) in fields().into_iter().enumerate() {
+            for id in off..off + vs {
+                q.row_into(id, fi, &mut row);
+                assert_eq!(&row[..], &all[id * d..(id + 1) * d]);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_scalar_gather() {
+        let w: Vec<f32> = (0..10).map(|i| (i as f32) * 0.5).collect();
+        let q = QuantizedTable::quantize(&w, 1, &fields()).unwrap();
+        let all = q.dequantize_all();
+        for (fi, (off, vs)) in fields().into_iter().enumerate() {
+            for id in off..off + vs {
+                assert_eq!(q.value(id, fi), all[id]);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_field_roundtrips_exactly() {
+        let w = vec![0.125f32; 10];
+        let q = QuantizedTable::quantize(&w, 1, &fields()).unwrap();
+        assert_eq!(q.dequantize_all(), w);
+        assert_eq!(q.error_bound(0), 0.0 + F32_EVAL_SLOP * 0.125);
+    }
+
+    #[test]
+    fn memory_is_roughly_halved() {
+        let d = 8;
+        let big_fields = vec![(0usize, 600usize), (600, 300), (900, 100)];
+        let w = vec![0.5f32; 1000 * d];
+        let q = QuantizedTable::quantize(&w, d, &big_fields).unwrap();
+        // u16 codes + per-field constants: just over half the f32 bytes
+        assert!(q.bytes() < w.len() * 4 * 6 / 10, "{} vs {}", q.bytes(), w.len() * 4);
+        assert!(q.bytes() >= w.len() * 2);
+    }
+
+    #[test]
+    fn bad_field_layout_rejected() {
+        let w = vec![0.0f32; 10];
+        assert!(QuantizedTable::quantize(&w, 1, &[(0, 4), (5, 5)]).is_err()); // gap
+        assert!(QuantizedTable::quantize(&w, 1, &[(0, 4)]).is_err()); // short
+        assert!(QuantizedTable::quantize(&w, 3, &fields()).is_err()); // len % d
+    }
+}

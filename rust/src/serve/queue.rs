@@ -1,0 +1,309 @@
+//! The micro-batching request queue and scoring-thread pool.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//! enqueue ── Client::submit validates the request and pushes it (with
+//! │          its arrival time and a reply channel) onto the shared
+//! │          queue, waking the scoring pool.
+//! coalesce ─ a scoring thread drains a micro-batch when EITHER trigger
+//! │          fires: the queue holds `max_batch` requests (throughput
+//! │          trigger), or the oldest queued request has waited
+//! │          `max_delay` (latency-deadline trigger — a lone request is
+//! │          never stranded behind an unfilled batch).
+//! score ──── the thread runs one batched forward through the frozen
+//! │          `Arc<ServeModel>` (no locks held while scoring; other
+//! │          threads keep draining the queue concurrently).
+//! respond ── each request's logit/probability goes back over its reply
+//!            channel; per-request latency (enqueue → scored) lands in
+//!            the shared histogram.
+//! ```
+//!
+//! The queue itself is a `Mutex<VecDeque>` + `Condvar` with
+//! short-critical-section discipline: the lock covers only push/drain
+//! bookkeeping, never scoring, so contention stays negligible next to a
+//! forward pass. Batching policy is two-trigger (size OR deadline),
+//! which is the standard production trade: `max_batch` bounds the work
+//! per forward, `max_delay` bounds the queueing latency any request can
+//! pay waiting for co-riders.
+//!
+//! Shutdown flushes: remaining requests are drained and scored without
+//! waiting for deadlines, then the workers exit.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::model::ServeModel;
+use super::request::{Request, Scored};
+use crate::metrics::{sigmoid, LatencyHistogram};
+
+/// Micro-batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Drain a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// ... or as soon as the oldest queued request has waited this long.
+    pub max_delay: Duration,
+    /// Scoring threads (each drains and scores whole micro-batches).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 64, max_delay: Duration::from_millis(2), threads: 2 }
+    }
+}
+
+struct PendingReq {
+    req: Request,
+    enqueued: Instant,
+    reply: mpsc::Sender<Scored>,
+}
+
+struct QueueState {
+    deque: VecDeque<PendingReq>,
+    shutdown: bool,
+}
+
+/// Serving counters, folded under one lock off the scoring path.
+#[derive(Default)]
+struct Counters {
+    requests: u64,
+    batches: u64,
+    latency: LatencyHistogram,
+}
+
+struct Shared {
+    model: Arc<ServeModel>,
+    cfg: ServeConfig,
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    counters: Mutex<Counters>,
+    /// First scoring error, if any (requests in that batch get dropped
+    /// replies; `shutdown` surfaces the message).
+    error: Mutex<Option<String>>,
+    started: Instant,
+    next_id: AtomicU64,
+}
+
+/// A running micro-batching scorer: owns the scoring threads; hand out
+/// [`Client`]s to submit traffic, then [`Server::shutdown`] to flush,
+/// join and collect the serving stats.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Cheap cloneable submission handle.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<Shared>,
+}
+
+/// Aggregate serving statistics, collected at shutdown.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    /// Requests scored.
+    pub requests: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Per-request enqueue→scored latency (milliseconds).
+    pub latency: LatencyHistogram,
+    /// Server lifetime (start → shutdown).
+    pub wall: Duration,
+}
+
+impl ServeStats {
+    /// Mean requests per micro-batch (the coalescing win).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Scored requests per second over the server lifetime.
+    pub fn qps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+}
+
+impl Server {
+    /// Spawn the scoring pool over a frozen model.
+    pub fn start(model: Arc<ServeModel>, cfg: ServeConfig) -> Server {
+        let threads = cfg.threads.max(1);
+        let shared = Arc::new(Shared {
+            model,
+            cfg,
+            q: Mutex::new(QueueState { deque: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            counters: Mutex::new(Counters::default()),
+            error: Mutex::new(None),
+            started: Instant::now(),
+            next_id: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Server { shared, workers }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Flush the queue, stop the scoring threads and return the stats.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        {
+            let mut st = self.shared.q.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("scoring thread panicked"))?;
+        }
+        if let Some(e) = self.shared.error.lock().unwrap().take() {
+            bail!("serving error: {e}");
+        }
+        let c = self.shared.counters.lock().unwrap();
+        Ok(ServeStats {
+            requests: c.requests,
+            batches: c.batches,
+            latency: c.latency.clone(),
+            wall: self.shared.started.elapsed(),
+        })
+    }
+}
+
+impl Client {
+    /// Fresh correlation id (callers that don't track their own).
+    pub fn next_id(&self) -> u64 {
+        self.shared.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Validate and enqueue one request; the returned channel yields the
+    /// score once its micro-batch runs. Submitting never blocks on
+    /// scoring (open-loop friendly).
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Scored>> {
+        req.validate(self.shared.model.schema())?;
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.q.lock().unwrap();
+            if st.shutdown {
+                bail!("server is shutting down");
+            }
+            st.deque.push_back(PendingReq { req, enqueued: Instant::now(), reply: tx });
+        }
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Submit and wait for the score (closed-loop callers and tests).
+    pub fn score(&self, req: Request) -> Result<Scored> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| {
+            let msg = self
+                .shared
+                .error
+                .lock()
+                .unwrap()
+                .clone()
+                .unwrap_or_else(|| "scoring dropped the request".into());
+            anyhow::anyhow!("serving error: {msg}")
+        })
+    }
+}
+
+/// One scoring thread: coalesce → score → respond until shutdown.
+fn worker_loop(shared: &Shared) {
+    let max_batch = shared.cfg.max_batch.max(1);
+    loop {
+        // --- coalesce: wait for a full batch or the oldest deadline ---
+        let batch: Vec<PendingReq> = {
+            let mut st = shared.q.lock().unwrap();
+            loop {
+                if st.deque.is_empty() {
+                    if st.shutdown {
+                        return;
+                    }
+                    st = shared.cv.wait(st).unwrap();
+                    continue;
+                }
+                if st.deque.len() >= max_batch || st.shutdown {
+                    break; // size trigger (or flush-on-shutdown)
+                }
+                let deadline = st.deque.front().unwrap().enqueued + shared.cfg.max_delay;
+                let now = Instant::now();
+                if now >= deadline {
+                    break; // latency-deadline trigger
+                }
+                let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+            let take = st.deque.len().min(max_batch);
+            st.deque.drain(..take).collect()
+        };
+        // more work may remain for an idle sibling
+        shared.cv.notify_one();
+
+        // --- score (no locks held) ---
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut meta = Vec::with_capacity(batch.len());
+        for p in batch {
+            meta.push((p.enqueued, p.reply));
+            reqs.push(p.req);
+        }
+        // requests were validated at submit; don't re-check per batch
+        match shared.model.score_batch_validated(&reqs) {
+            Ok(logits) => {
+                let scored_at = Instant::now();
+                {
+                    let mut c = shared.counters.lock().unwrap();
+                    c.batches += 1;
+                    c.requests += reqs.len() as u64;
+                    for (enq, _) in &meta {
+                        c.latency.record(scored_at.duration_since(*enq).as_secs_f64() * 1e3);
+                    }
+                }
+                // --- respond ---
+                for ((_, reply), (req, &logit)) in meta.iter().zip(reqs.iter().zip(&logits)) {
+                    // a gone receiver just means the caller stopped waiting
+                    let _ = reply.send(Scored { id: req.id, logit, prob: sigmoid(logit) });
+                }
+            }
+            Err(e) => {
+                let mut slot = shared.error.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e.to_string());
+                }
+                // replies drop here; blocked callers see RecvError
+            }
+        }
+    }
+}
+
+/// Convenience for load drivers: submit a whole request list open-loop
+/// (everything enqueued before anything is awaited), then wait for all
+/// responses. Returns the scores in submission order.
+pub fn score_all(client: &Client, reqs: Vec<Request>) -> Result<Vec<Scored>> {
+    let rxs: Vec<mpsc::Receiver<Scored>> =
+        reqs.into_iter().map(|r| client.submit(r)).collect::<Result<_>>()?;
+    rxs.into_iter()
+        .map(|rx| rx.recv().context("scoring dropped a request (see server error)"))
+        .collect()
+}

@@ -1,0 +1,158 @@
+//! Scoring requests and responses, plus the TSV request reader.
+//!
+//! A request is one impression: global categorical ids per
+//! `data::schema` (column `j` is field `j`, id already offset into the
+//! concatenated vocabulary) plus the dense features. Responses carry
+//! the logit and the calibrated click probability.
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::schema::Schema;
+
+/// One scoring request (a single impression).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Caller-chosen correlation id, echoed in the response.
+    pub id: u64,
+    /// `[n_cat]` global categorical ids (column `j` belongs to field `j`).
+    pub cat: Vec<i32>,
+    /// `[n_dense]` dense features.
+    pub dense: Vec<f32>,
+}
+
+impl Request {
+    /// Check arity and per-field id ranges against a schema.
+    pub fn validate(&self, schema: &Schema) -> Result<()> {
+        ensure!(
+            self.cat.len() == schema.n_cat(),
+            "request {}: {} categorical ids, schema wants {}",
+            self.id,
+            self.cat.len(),
+            schema.n_cat()
+        );
+        ensure!(
+            self.dense.len() == schema.n_dense,
+            "request {}: {} dense features, schema wants {}",
+            self.id,
+            self.dense.len(),
+            schema.n_dense
+        );
+        for ((off, vs), &id) in schema.fields().zip(&self.cat) {
+            let (lo, hi) = (off as i64, (off + vs) as i64);
+            ensure!(
+                (id as i64) >= lo && (id as i64) < hi,
+                "request {}: id {id} outside field range [{lo}, {hi})",
+                self.id
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One scored response.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    /// The request's correlation id.
+    pub id: u64,
+    /// Raw model output.
+    pub logit: f32,
+    /// `sigmoid(logit)` — the predicted click probability.
+    pub prob: f32,
+}
+
+/// Read requests from a TSV file: one request per line, `n_cat` global
+/// ids followed by `n_dense` floats, separated by tabs or spaces. Blank
+/// lines and `#` comments are skipped; every row is validated against
+/// the schema. Request ids are assigned in file order.
+pub fn read_requests_tsv(path: &Path, schema: &Schema) -> Result<Vec<Request>> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let want = schema.n_cat() + schema.n_dense;
+    let mut out = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = trimmed.split(['\t', ' ']).filter(|t| !t.is_empty()).collect();
+        if toks.len() != want {
+            bail!(
+                "{}:{}: {} columns, expected {} ({} cat ids + {} dense)",
+                path.display(),
+                lineno + 1,
+                toks.len(),
+                want,
+                schema.n_cat(),
+                schema.n_dense
+            );
+        }
+        let cat: Vec<i32> = toks[..schema.n_cat()]
+            .iter()
+            .map(|t| {
+                t.parse()
+                    .with_context(|| format!("{}:{}: bad id {t:?}", path.display(), lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        let dense: Vec<f32> = toks[schema.n_cat()..]
+            .iter()
+            .map(|t| {
+                t.parse().with_context(|| {
+                    format!("{}:{}: bad dense value {t:?}", path.display(), lineno + 1)
+                })
+            })
+            .collect::<Result<_>>()?;
+        let req = Request { id: out.len() as u64, cat, dense };
+        req.validate(schema)
+            .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        out.push(req);
+    }
+    ensure!(!out.is_empty(), "{}: no requests found", path.display());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema { name: "req".into(), n_dense: 2, vocab_sizes: vec![4, 3] }
+    }
+
+    #[test]
+    fn validate_checks_ranges_and_arity() {
+        let s = schema();
+        let ok = Request { id: 0, cat: vec![3, 6], dense: vec![0.5, -1.0] };
+        ok.validate(&s).unwrap();
+        let bad_field = Request { id: 1, cat: vec![4, 6], dense: vec![0.0, 0.0] };
+        assert!(bad_field.validate(&s).is_err(), "id 4 belongs to field 1");
+        let bad_arity = Request { id: 2, cat: vec![0], dense: vec![0.0, 0.0] };
+        assert!(bad_arity.validate(&s).is_err());
+        let bad_dense = Request { id: 3, cat: vec![0, 4], dense: vec![0.0] };
+        assert!(bad_dense.validate(&s).is_err());
+    }
+
+    #[test]
+    fn tsv_roundtrip_and_errors() {
+        let s = schema();
+        let dir = std::env::temp_dir().join(format!("serve_tsv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.tsv");
+        std::fs::write(&good, "# a comment\n0\t4\t0.5\t-1.0\n\n3 6 1.0 2.0\n").unwrap();
+        let reqs = read_requests_tsv(&good, &s).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].cat, vec![0, 4]);
+        assert_eq!(reqs[1].id, 1);
+        assert_eq!(reqs[1].dense, vec![1.0, 2.0]);
+
+        let bad = dir.join("bad.tsv");
+        std::fs::write(&bad, "0\t99\t0.0\t0.0\n").unwrap();
+        assert!(read_requests_tsv(&bad, &s).is_err(), "out-of-range id must fail");
+        let short = dir.join("short.tsv");
+        std::fs::write(&short, "0\t4\t0.5\n").unwrap();
+        assert!(read_requests_tsv(&short, &s).is_err(), "missing column must fail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

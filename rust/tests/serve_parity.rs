@@ -1,0 +1,324 @@
+//! Serving-tier parity gates.
+//!
+//! * Scores returned through the micro-batching server — any queue
+//!   arrival order, any scoring-thread count, any batching trigger mix —
+//!   match the offline reference forward pass ≤ 1e-6 in f32 mode.
+//! * In quantized mode, served scores match the offline forward over
+//!   the **dequantized** tables ≤ 1e-6, and every dequantized weight of
+//!   a trained model sits within the documented per-field round-trip
+//!   bound (`serve::quant` module docs); AUC on a synthetic eval set
+//!   moves < 1e-3 under quantization.
+//! * The latency-deadline trigger flushes partial batches, so a lone
+//!   request is never stranded behind an unfilled `max_batch`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::data::batcher::Batch;
+use cowclip::data::schema::Schema;
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, RowSampler, SynthConfig};
+use cowclip::metrics::auc;
+use cowclip::model::init::{init_params, InitConfig};
+use cowclip::model::params::ParamSet;
+use cowclip::reference::step::build_spec;
+use cowclip::reference::{ModelKind, ReferenceModel};
+use cowclip::scaling::rules::{HyperSet, ScalingRule};
+use cowclip::serve::{Request, ServeConfig, ServeModel, Server};
+use cowclip::tensor::Tensor;
+use cowclip::util::Rng;
+
+fn tiny_schema() -> Schema {
+    Schema { name: "serve_tiny".into(), n_dense: 3, vocab_sizes: vec![40, 30, 20, 6] }
+}
+
+fn tiny_model(kind: ModelKind) -> ReferenceModel {
+    ReferenceModel::new(kind, tiny_schema(), 4, vec![16, 16], 2)
+}
+
+fn tiny_params(model: &ReferenceModel, seed: u64) -> ParamSet {
+    let spec = build_spec(model.kind, &model.schema, model.embed_dim, &model.hidden, model.n_cross);
+    init_params(&spec, &InitConfig { seed, embed_sigma: 0.05 })
+}
+
+/// N requests drawn from the synthesizer's id model.
+fn requests(schema: &Schema, n: usize, seed: u64) -> Vec<Request> {
+    let mut sampler = RowSampler::new(schema, &SynthConfig { seed, ..Default::default() });
+    (0..n)
+        .map(|i| {
+            let (cat, dense) = sampler.next_row();
+            Request { id: i as u64, cat, dense }
+        })
+        .collect()
+}
+
+/// Offline oracle: one big batched forward over the same rows.
+fn offline_logits(model: &ReferenceModel, params: &ParamSet, reqs: &[Request]) -> Vec<f32> {
+    let b = reqs.len();
+    let f = model.schema.n_cat();
+    let nd = model.schema.n_dense;
+    let mut cat = Vec::with_capacity(b * f);
+    let mut dense = Vec::with_capacity(b * nd);
+    for r in reqs {
+        cat.extend_from_slice(&r.cat);
+        dense.extend_from_slice(&r.dense);
+    }
+    let batch = Batch::new(
+        Tensor::i32(vec![b, f], cat),
+        Tensor::f32(vec![b, nd], dense),
+        Tensor::f32(vec![b], vec![0.0; b]),
+        b,
+    );
+    model.forward(params, &batch).unwrap()
+}
+
+/// Drive `reqs` through a server from `clients` submitter threads in a
+/// shuffled arrival order; return scores keyed by request id.
+fn serve_scores(
+    frozen: &Arc<ServeModel>,
+    cfg: ServeConfig,
+    reqs: &[Request],
+    clients: usize,
+    shuffle_seed: u64,
+) -> Vec<f32> {
+    let clients = clients.max(1);
+    let server = Server::start(Arc::clone(frozen), cfg);
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    Rng::new(shuffle_seed).shuffle(&mut order);
+    let mut out = vec![f32::NAN; reqs.len()];
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            let client = server.client();
+            let order = &order;
+            handles.push(s.spawn(move || {
+                let mut scored = Vec::new();
+                let mut i = t;
+                while i < order.len() {
+                    let req = reqs[order[i]].clone();
+                    scored.push(client.score(req).unwrap());
+                    i += clients;
+                }
+                scored
+            }));
+        }
+        for h in handles {
+            for sc in h.join().unwrap() {
+                out[sc.id as usize] = sc.logit;
+            }
+        }
+    });
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests as usize, reqs.len());
+    assert!(stats.batches >= 1);
+    assert_eq!(stats.latency.count(), stats.requests);
+    out
+}
+
+#[test]
+fn served_scores_match_offline_forward_all_models_f32() {
+    for kind in ModelKind::ALL {
+        let model = tiny_model(kind);
+        let params = tiny_params(&model, 11);
+        let reqs = requests(&model.schema, 160, 21);
+        let oracle = offline_logits(&model, &params, &reqs);
+        let frozen =
+            Arc::new(ServeModel::from_params(model.clone(), params.clone(), false).unwrap());
+        for (max_batch, threads, clients) in [(1, 1, 1), (7, 3, 4), (64, 2, 2)] {
+            let cfg = ServeConfig {
+                max_batch,
+                max_delay: Duration::from_micros(300),
+                threads,
+            };
+            let got = serve_scores(&frozen, cfg, &reqs, clients, 1000 + max_batch as u64);
+            for (i, (&g, &o)) in got.iter().zip(&oracle).enumerate() {
+                assert!(
+                    (g - o).abs() <= 1e-6,
+                    "{kind} (batch {max_batch}, {threads} thr): req {i}: {g} vs {o}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn deadline_trigger_flushes_partial_batches() {
+    let model = tiny_model(ModelKind::WideDeep);
+    let params = tiny_params(&model, 5);
+    let frozen = Arc::new(ServeModel::from_params(model, params, false).unwrap());
+    // max_batch far larger than the traffic: only the deadline can fire
+    let cfg = ServeConfig {
+        max_batch: 10_000,
+        max_delay: Duration::from_millis(5),
+        threads: 2,
+    };
+    let server = Server::start(Arc::clone(&frozen), cfg);
+    let client = server.client();
+    let reqs = requests(frozen.schema(), 3, 9);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = reqs.into_iter().map(|r| client.submit(r).unwrap()).collect();
+    for rx in rxs {
+        let sc = rx.recv_timeout(Duration::from_secs(5)).expect("deadline must flush");
+        assert!(sc.logit.is_finite());
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 3);
+}
+
+#[test]
+fn invalid_request_is_rejected_at_submit() {
+    let model = tiny_model(ModelKind::Dcn);
+    let params = tiny_params(&model, 2);
+    let frozen = Arc::new(ServeModel::from_params(model, params, false).unwrap());
+    let server = Server::start(Arc::clone(&frozen), ServeConfig::default());
+    let client = server.client();
+    let bad = Request { id: 0, cat: vec![0, 0, 0, 0], dense: vec![0.0; 3] };
+    // id 0 in column 1 belongs to field 0's range, not field 1's
+    assert!(client.submit(bad).is_err());
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 0);
+}
+
+#[test]
+fn quantized_serving_matches_dequantized_oracle_all_models() {
+    for kind in ModelKind::ALL {
+        let model = tiny_model(kind);
+        let params = tiny_params(&model, 31);
+        let reqs = requests(&model.schema, 120, 41);
+        let frozen =
+            Arc::new(ServeModel::from_params(model.clone(), params.clone(), true).unwrap());
+        assert!(frozen.is_quantized());
+        // the scorer's semantics: forward over the dequantized tables
+        let oracle_params = frozen.oracle_params().unwrap();
+        let oracle = offline_logits(&model, &oracle_params, &reqs);
+        let cfg = ServeConfig { max_batch: 9, max_delay: Duration::from_micros(300), threads: 3 };
+        let got = serve_scores(&frozen, cfg, &reqs, 3, 77);
+        for (i, (&g, &o)) in got.iter().zip(&oracle).enumerate() {
+            assert!((g - o).abs() <= 1e-6, "{kind}: req {i}: {g} vs {o}");
+        }
+        // and the dequantized tables sit within the documented bound of
+        // the original weights
+        let bound = frozen.quant_error_bound().unwrap();
+        for (e, (orig, deq)) in params
+            .spec
+            .iter()
+            .zip(params.tensors.iter().zip(&oracle_params.tensors))
+        {
+            if !matches!(e.group.as_str(), "embed" | "wide") {
+                continue;
+            }
+            for (a, b) in orig.as_f32().unwrap().iter().zip(deq.as_f32().unwrap()) {
+                assert!((a - b).abs() <= bound, "{kind} {}: {a} vs {b} (bound {bound})", e.name);
+            }
+        }
+        // table memory actually shrinks (~2x: u16 codes + tiny constants)
+        assert!(frozen.table_bytes() < frozen.table_f32_bytes() * 3 / 4);
+        assert!(frozen.serving_bytes() < frozen.f32_bytes());
+    }
+}
+
+/// Quantize → dequantize every table of a *trained* model: per-field
+/// round-trip bound holds, and eval AUC moves < 1e-3.
+#[test]
+fn quant_roundtrip_and_auc_on_trained_model() {
+    let schema = tiny_schema();
+    let n = 6_000;
+    let full = generate(&schema, &SynthConfig { n, seed: 8, ..Default::default() });
+    let (train, test) = random_split(&full, 0.8, 3);
+    let hypers = HyperSet {
+        lr_dense: 1e-2,
+        lr_embed: 8e-3,
+        l2_embed: 1e-5,
+        clip_r: 1.0,
+        clip_zeta: 1e-5,
+        clip_t: 1.0,
+    };
+    let engine = Engine::reference(
+        ModelKind::DeepFm,
+        schema.clone(),
+        4,
+        vec![16, 16],
+        2,
+        ClipMode::CowClip,
+    );
+    let cfg = TrainConfig {
+        batch: 256,
+        base_batch: 256,
+        base_hypers: hypers,
+        rule: ScalingRule::NoScale,
+        epochs: 3.0,
+        workers: 1,
+        threads: 1,
+        param_shards: 1,
+        warmup_steps: 0,
+        init_sigma: 0.01,
+        seed: 4,
+        eval_every_epochs: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    let report = trainer.train(&train, &test).unwrap();
+    assert!(!report.diverged);
+    let trained = trainer.params().clone();
+
+    let model = tiny_model(ModelKind::DeepFm);
+    let f32_model = ServeModel::from_params(model.clone(), trained.clone(), false).unwrap();
+    let q_model = ServeModel::from_params(model.clone(), trained.clone(), true).unwrap();
+
+    // 1. round-trip bound on every vocab table of the trained weights
+    let bound = q_model.quant_error_bound().unwrap();
+    assert!(bound > 0.0 && bound < 1e-3, "bound {bound} should be tiny for trained tables");
+    let deq = q_model.oracle_params().unwrap();
+    let mut max_err = 0.0f32;
+    for (e, (orig, back)) in
+        trained.spec.iter().zip(trained.tensors.iter().zip(&deq.tensors))
+    {
+        match e.group.as_str() {
+            "embed" | "wide" => {
+                for (a, b) in orig.as_f32().unwrap().iter().zip(back.as_f32().unwrap()) {
+                    max_err = max_err.max((a - b).abs());
+                }
+            }
+            // dense params are not quantized: byte-identical
+            _ => assert_eq!(orig, back, "{} must pass through untouched", e.name),
+        }
+    }
+    assert!(max_err <= bound, "round-trip err {max_err} > documented bound {bound}");
+
+    // 2. AUC on the eval split within 1e-3 of the f32 model
+    let eval_reqs: Vec<Request> = (0..test.n())
+        .map(|i| Request {
+            id: i as u64,
+            cat: test.cat_row(i).to_vec(),
+            dense: test.dense_row(i).to_vec(),
+        })
+        .collect();
+    let f32_logits = f32_model.score_batch(&eval_reqs).unwrap();
+    let q_logits = q_model.score_batch(&eval_reqs).unwrap();
+    let auc_f32 = auc(&f32_logits, &test.y);
+    let auc_q = auc(&q_logits, &test.y);
+    assert!(auc_f32 > 0.55, "trained model should beat chance (auc {auc_f32})");
+    assert!(
+        (auc_f32 - auc_q).abs() < 1e-3,
+        "quantization moved AUC too far: {auc_f32} vs {auc_q}"
+    );
+}
+
+/// The served f32 path and `ServeModel::score_batch` (no queue) agree —
+/// the micro-batcher never changes the math, only the batching.
+#[test]
+fn direct_score_batch_matches_served_path() {
+    let model = tiny_model(ModelKind::DcnV2);
+    let params = tiny_params(&model, 17);
+    let reqs = requests(&model.schema, 64, 5);
+    let frozen = Arc::new(ServeModel::from_params(model, params, false).unwrap());
+    let direct = frozen.score_batch(&reqs).unwrap();
+    let cfg = ServeConfig { max_batch: 5, max_delay: Duration::from_micros(200), threads: 2 };
+    let served = serve_scores(&frozen, cfg, &reqs, 2, 3);
+    for (i, (&a, &b)) in direct.iter().zip(&served).enumerate() {
+        assert!((a - b).abs() <= 1e-6, "req {i}: {a} vs {b}");
+    }
+}
