@@ -15,12 +15,19 @@
 //! ≥4 shards; results are bitwise identical across rows, gated by
 //! `rust/tests/shard_parity.rs`).
 //!
-//! Arm 4 (needs `make artifacts` + the `pjrt` feature): full training
+//! Arm 4 (always runs): the zero-allocation hot path — single-worker
+//! single-thread full steps on the PR-5 vectorized kernels + scratch
+//! arenas, reporting absolute step throughput (steps/s and rows/s).
+//! This is the number to compare against the PR-4 baseline build: same
+//! config, same batches, only the kernel/memory tier changed (the
+//! parity suites pin the math).
+//!
+//! Arm 5 (needs `make artifacts` + the `pjrt` feature): full training
 //! epochs through the AOT/PJRT path per batch size, reporting wall time
 //! and the speedup series.
 //!
-//! `-- --smoke` runs tiny threaded-arm and sharded-arm configs (CI
-//! compile+run gate, a few seconds).
+//! `-- --smoke` runs tiny threaded-arm, sharded-arm and hot-path
+//! configs (CI compile+run gate, a few seconds).
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
@@ -149,6 +156,42 @@ fn reference_sharded_apply_speedup(smoke: bool) {
     );
 }
 
+/// Hot-path arm: absolute full-step throughput of the tuned
+/// single-worker loop (vectorized kernels, fused gather+concat, scratch
+/// arenas, tree reduce, deferred-merge apply). Print-and-compare across
+/// PR builds — the parity gates guarantee the math is unchanged, so any
+/// delta here is pure systems speedup.
+fn reference_hot_path_throughput(smoke: bool) {
+    let schema = cowclip::data::schema::criteo_synth();
+    let n = if smoke { 6_000 } else { 20_000 };
+    let batches: &[usize] = if smoke { &[512] } else { &[512, 2048] };
+    let ds = generate(&schema, &SynthConfig { n, seed: 2, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    println!("== e2e_epoch (reference engine): zero-alloc hot path, absolute throughput ==");
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>12}",
+        "batch", "steps", "step s", "steps/s", "rows/s"
+    );
+    for &batch in batches {
+        let mut trainer = Trainer::new(reference_engine(&schema), reference_cfg(batch)).unwrap();
+        let report = trainer.train(&train, &test).unwrap();
+        let t = report.seconds("step").max(1e-9);
+        println!(
+            "{:>8} {:>10} {:>10.2} {:>10.1} {:>12.0}",
+            batch,
+            report.steps,
+            t,
+            report.steps as f64 / t,
+            (report.steps * batch) as f64 / t
+        );
+    }
+    println!(
+        "(compare across PR builds at fixed config: the kernel/memory tier \
+         is the only variable — see benches/kernels.rs for per-kernel numbers)\n"
+    );
+}
+
 fn reference_sparse_vs_dense() {
     let schema = cowclip::data::schema::criteo_synth();
     let n = 20_000;
@@ -260,10 +303,12 @@ fn hlo_epochs() {
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
+        reference_hot_path_throughput(true);
         reference_threaded_speedup(true);
         reference_sharded_apply_speedup(true);
         return;
     }
+    reference_hot_path_throughput(false);
     reference_sparse_vs_dense();
     reference_threaded_speedup(false);
     reference_sharded_apply_speedup(false);

@@ -1,0 +1,151 @@
+//! Kernel microbenchmarks: the PR-5 vectorized/fused tier vs the kept
+//! naive oracles.
+//!
+//! Reports GFLOP/s (matmuls) and GB/s (gathers) plus the
+//! vectorized-over-naive speedup per kernel:
+//!
+//! * `matmul` fwd (`x@w`), bwd-input (`g@w^T`), bwd-weight (`x^T@g`)
+//! * embedding gather — the fused gather+concat (`embed_concat_fwd`)
+//!   vs gather-then-copy through a staging buffer
+//! * fused gather+dequantize (`QuantizedTable::row_into` per row) vs
+//!   dequantize-everything-then-gather
+//!
+//! For peak numbers run with the machine's full SIMD set:
+//! `RUSTFLAGS="-C target-cpu=native" cargo bench --bench kernels`.
+//! `-- --smoke` shrinks every shape to a compile+run CI gate.
+
+use cowclip::reference::layers::{embed_concat_fwd, embed_fwd};
+use cowclip::reference::linalg::{self, naive};
+use cowclip::serve::quant::QuantizedTable;
+use cowclip::util::bench::bench;
+use cowclip::util::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian() as f32).collect()
+}
+
+fn gflops(flops: f64, mean_ms: f64) -> f64 {
+    flops / (mean_ms * 1e-3) / 1e9
+}
+
+fn gbps(bytes: f64, mean_ms: f64) -> f64 {
+    bytes / (mean_ms * 1e-3) / 1e9
+}
+
+fn matmul_arm(smoke: bool) {
+    let (b, m, n) = if smoke { (64, 48, 32) } else { (1024, 336, 128) };
+    let (warm, reps) = if smoke { (1, 3) } else { (3, 15) };
+    let mut rng = Rng::new(0xBE7C);
+    let x = rand_vec(&mut rng, b * m);
+    let w = rand_vec(&mut rng, m * n);
+    let g = rand_vec(&mut rng, b * n);
+    let flops = 2.0 * b as f64 * m as f64 * n as f64;
+
+    println!("== kernels: matmul tier ({b}x{m} @ {m}x{n}) ==");
+    let mut y = vec![0.0f32; b * n];
+    let fwd_v = bench("matmul fwd (vectorized, into)", warm, reps, || {
+        linalg::matmul_into(&x, &w, &mut y, b, m, n);
+    });
+    let fwd_n = bench("matmul fwd (naive oracle)", warm, reps, || {
+        std::hint::black_box(naive::matmul(&x, &w, b, m, n));
+    });
+    let mut dx = vec![0.0f32; b * m];
+    let nt_v = bench("matmul bwd-input g@w^T (vectorized)", warm, reps, || {
+        linalg::matmul_nt_into(&g, &w, &mut dx, b, m, n);
+    });
+    let nt_n = bench("matmul bwd-input (naive oracle)", warm, reps, || {
+        std::hint::black_box(naive::matmul_nt(&g, &w, b, m, n));
+    });
+    let mut dw = vec![0.0f32; m * n];
+    let tn_v = bench("matmul bwd-weight x^T@g (vectorized)", warm, reps, || {
+        linalg::matmul_tn_into(&x, &g, &mut dw, b, m, n);
+    });
+    let tn_n = bench("matmul bwd-weight (naive oracle)", warm, reps, || {
+        std::hint::black_box(naive::matmul_tn(&x, &g, b, m, n));
+    });
+    std::hint::black_box((&y, &dx, &dw));
+
+    println!("\n{:>26} {:>12} {:>12} {:>9}", "kernel", "vec GF/s", "naive GF/s", "speedup");
+    for (name, v, nv) in [
+        ("matmul fwd", &fwd_v, &fwd_n),
+        ("matmul bwd-input", &nt_v, &nt_n),
+        ("matmul bwd-weight", &tn_v, &tn_n),
+    ] {
+        println!(
+            "{:>26} {:>12.2} {:>12.2} {:>8.2}x",
+            name,
+            gflops(flops, v.mean_ms()),
+            gflops(flops, nv.mean_ms()),
+            nv.mean_ms() / v.mean_ms()
+        );
+    }
+    println!();
+}
+
+fn gather_arm(smoke: bool) {
+    // Criteo-synth-shaped: 26 fields, d=16, plus 13 dense features
+    let (vocab, b) = if smoke { (5_000, 256) } else { (200_000, 4096) };
+    let (warm, reps) = if smoke { (1, 3) } else { (3, 15) };
+    let (f, d, nd) = (26usize, 16usize, 13usize);
+    let d0 = f * d + nd;
+    let mut rng = Rng::new(0x6A7E);
+    let table = rand_vec(&mut rng, vocab * d);
+    let dense = rand_vec(&mut rng, b * nd);
+    let ids: Vec<i32> = (0..b * f).map(|_| rng.below(vocab as u64) as i32).collect();
+    let bytes = (b * f * d * 4) as f64; // embed payload moved per call
+
+    println!("== kernels: embedding gather (b={b}, F={f}, d={d}, V={vocab}) ==");
+    let mut x0 = vec![0.0f32; b * d0];
+    let fused = bench("gather+concat (fused, one pass)", warm, reps, || {
+        embed_concat_fwd(&table, &ids, &dense, b, f, d, nd, &mut x0);
+    });
+    let staged = bench("gather then copy (staging buffer)", warm, reps, || {
+        let embeds = embed_fwd(&table, &ids, b, f, d);
+        for i in 0..b {
+            x0[i * d0..i * d0 + f * d].copy_from_slice(&embeds[i * f * d..(i + 1) * f * d]);
+            x0[i * d0 + f * d..(i + 1) * d0].copy_from_slice(&dense[i * nd..(i + 1) * nd]);
+        }
+    });
+    std::hint::black_box(&x0);
+    println!(
+        "\n  fused {:.2} GB/s vs staged {:.2} GB/s -> {:.2}x\n",
+        gbps(bytes, fused.mean_ms()),
+        gbps(bytes, staged.mean_ms()),
+        staged.mean_ms() / fused.mean_ms()
+    );
+
+    // fused gather+dequantize (the quantized serving path)
+    let fields: Vec<(usize, usize)> = (0..f).map(|j| (j * (vocab / f), vocab / f)).collect();
+    let table_q: Vec<f32> = table[..(vocab / f) * f * d].to_vec();
+    let q = QuantizedTable::quantize(&table_q, d, &fields).unwrap();
+    let rows = vocab / f * f;
+    let qids: Vec<usize> = (0..b * f).map(|_| rng.below(rows as u64) as usize).collect();
+    let field_of = |id: usize| (id / (vocab / f)).min(f - 1);
+
+    println!("== kernels: fused gather+dequantize (u16 codes -> f32 rows) ==");
+    let mut out = vec![0.0f32; b * f * d];
+    let fused_q = bench("gather+dequant (fused, per row)", warm, reps, || {
+        for (slot, &id) in qids.iter().enumerate() {
+            q.row_into(id, field_of(id), &mut out[slot * d..(slot + 1) * d]);
+        }
+    });
+    let staged_q = bench("dequantize-all then gather", warm, reps, || {
+        let full = q.dequantize_all();
+        for (slot, &id) in qids.iter().enumerate() {
+            out[slot * d..(slot + 1) * d].copy_from_slice(&full[id * d..(id + 1) * d]);
+        }
+    });
+    std::hint::black_box(&out);
+    println!(
+        "\n  fused {:.2} GB/s vs staged {:.2} GB/s -> {:.2}x\n",
+        gbps(bytes, fused_q.mean_ms()),
+        gbps(bytes, staged_q.mean_ms()),
+        staged_q.mean_ms() / fused_q.mean_ms()
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    matmul_arm(smoke);
+    gather_arm(smoke);
+}

@@ -38,7 +38,9 @@ impl GradAccumulator {
     }
 
     /// Add one microbatch's output with the given weight (its share of
-    /// the effective batch, e.g. `b/B`).
+    /// the effective batch, e.g. `b/B`). Borrows the output and clones
+    /// only to seed the first microbatch (later adds merge in place) —
+    /// see [`GradAccumulator::add_owned`] for the fully move-in path.
     pub fn add(&mut self, out: &GradOutput, weight: f64) -> Result<()> {
         ensure!(out.counts.n_rows() == self.counts.n_rows(), "vocab mismatch");
         match &mut self.grads {
@@ -58,6 +60,40 @@ impl GradAccumulator {
         }
         // counts add unweighted: Alg. 1 wants the full-batch cnt(id)
         self.counts.axpy(1.0, &out.counts)?;
+        self.loss_weighted += out.loss as f64 * weight;
+        self.weight += weight;
+        Ok(())
+    }
+
+    /// Move-in twin of [`GradAccumulator::add`]: the first microbatch's
+    /// gradients and counts are scaled in place and kept (no clone), so
+    /// a worker whose shard is a single microbatch — the reference
+    /// engine's common case — accumulates with zero payload copies.
+    pub fn add_owned(&mut self, out: GradOutput, weight: f64) -> Result<()> {
+        ensure!(out.counts.n_rows() == self.counts.n_rows(), "vocab mismatch");
+        match &mut self.grads {
+            None => {
+                let mut scaled = out.grads;
+                for t in &mut scaled {
+                    t.scale(weight as f32)?;
+                }
+                self.grads = Some(scaled);
+            }
+            Some(acc) => {
+                ensure!(acc.len() == out.grads.len(), "grad arity mismatch");
+                for (a, g) in acc.iter_mut().zip(&out.grads) {
+                    a.axpy(weight as f32, g)?;
+                }
+            }
+        }
+        // counts add unweighted: Alg. 1 wants the full-batch cnt(id).
+        // `axpy(1.0, x)` into an empty table equals `x` bitwise, so the
+        // first microbatch may simply move its counts in.
+        if self.counts.is_empty() {
+            self.counts = out.counts;
+        } else {
+            self.counts.axpy(1.0, &out.counts)?;
+        }
         self.loss_weighted += out.loss as f64 * weight;
         self.weight += weight;
         Ok(())

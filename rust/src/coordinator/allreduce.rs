@@ -12,6 +12,24 @@
 //! payload (ids + values) — which is exactly the saving Zhao et al.'s
 //! TeraByte-scale framework gets from exchanging touched rows instead of
 //! whole tables.
+//!
+//! Two reducers live here:
+//!
+//! * [`tree_allreduce`] — the offline round-structured reduce kept for
+//!   the traffic-model studies and tests.
+//! * [`TreeReducer`] — the streaming reducer on the training hot path:
+//!   contributions arrive in any order (over a channel, as worker
+//!   threads finish) and merge eagerly along a **fixed binary tree over
+//!   contiguous rank ranges**. The pairing depends only on the worker
+//!   count — never on arrival order or thread count — so the reduction
+//!   is bitwise deterministic, and the critical path after the last
+//!   arrival is O(log W) merges instead of the O(W) tail the old serial
+//!   rank-ordered fold paid. With [`TreeReducer::deferred`], the *root*
+//!   merge (the largest one) is withheld and handed back as
+//!   [`Reduced::Halves`], so the sharded apply stage can run it split by
+//!   parameter-shard row range — each shard merges its slice and
+//!   immediately applies it, overlapping the merge tail with the
+//!   optimizer (`model::store::ParamStore::apply_sharded_pair`).
 
 use std::collections::BTreeMap;
 
@@ -38,6 +56,37 @@ pub struct ReduceStats {
     pub workers: usize,
 }
 
+/// A finished reduction: either the full total, or the root's two
+/// subtree totals with their merge deferred into the apply stage.
+pub enum Reduced {
+    Whole(Contribution),
+    /// `left` covers ranks `[0, mid)`, `right` covers `[mid, W)`; the
+    /// root merge `left + right` has been *accounted* in the stats but
+    /// executes inside the sharded apply, split per row range.
+    Halves { left: Contribution, right: Contribution },
+}
+
+impl Reduced {
+    /// Total weighted loss (the root merge's loss sum is associative-free).
+    pub fn loss_weighted(&self) -> f32 {
+        match self {
+            Reduced::Whole(c) => c.loss_weighted,
+            Reduced::Halves { left, right } => left.loss_weighted + right.loss_weighted,
+        }
+    }
+
+    /// Force the full merge (fallback consumers: HLO apply, tests).
+    pub fn into_whole(self) -> Result<Contribution> {
+        match self {
+            Reduced::Whole(c) => Ok(c),
+            Reduced::Halves { mut left, right } => {
+                merge(&mut left, &right)?;
+                Ok(left)
+            }
+        }
+    }
+}
+
 fn merge(dst: &mut Contribution, src: &Contribution) -> Result<u64> {
     ensure!(dst.grads.len() == src.grads.len(), "grad arity mismatch");
     let mut bytes = 0u64;
@@ -50,6 +99,10 @@ fn merge(dst: &mut Contribution, src: &Contribution) -> Result<u64> {
     dst.loss_weighted += src.loss_weighted;
     dst.weight += src.weight;
     Ok(bytes)
+}
+
+fn payload_bytes(c: &Contribution) -> u64 {
+    c.grads.iter().map(|g| g.payload_bytes()).sum::<u64>() + c.counts.payload_bytes()
 }
 
 /// Reduce all contributions to one (weights must sum to ~1).
@@ -78,79 +131,176 @@ pub fn tree_allreduce(
     Ok((total, stats))
 }
 
-/// Reduce-as-ready: contributions stream in (over a channel, in whatever
-/// order the worker threads finish) and merge **eagerly but always in
-/// rank order**, so the slowest shard's gradient computation overlaps the
-/// reduction of everything before it while the result stays bitwise
-/// identical to a sequential rank-0..W-1 fold — which is what makes
-/// threaded and sequential training runs agree to the last ulp (see
-/// `rust/tests/parallel_parity.rs`).
-///
-/// Out-of-order arrivals park in a rank-keyed buffer until their
-/// predecessors have merged. `rounds` counts pairwise merges (`W - 1`
-/// for a full reduce) and `bytes_moved` the sparse payload traffic, same
-/// accounting as [`tree_allreduce`].
-pub struct StreamingReducer {
-    workers: usize,
-    next_rank: usize,
-    pending: BTreeMap<usize, Contribution>,
-    total: Option<Contribution>,
-    stats: ReduceStats,
+/// The canonical tree split of a rank range `[lo, hi)`: the left child
+/// takes the ceiling half. Every node of the merge tree is a contiguous
+/// range produced by recursively applying this split from the root
+/// `[0, W)` — fixed by `W` alone.
+fn split_point(lo: usize, hi: usize) -> usize {
+    lo + (hi - lo).div_ceil(2)
 }
 
-impl StreamingReducer {
-    pub fn new(workers: usize) -> StreamingReducer {
-        StreamingReducer {
+/// Locate the sibling + parent of canonical segment `[lo, hi)` by
+/// descending the fixed tree from the root. Returns `None` for the root
+/// itself.
+fn sibling_of(
+    workers: usize,
+    lo: usize,
+    hi: usize,
+) -> Option<((usize, usize), (usize, usize), bool)> {
+    let (mut a, mut b) = (0usize, workers);
+    while b - a > 1 {
+        let mid = split_point(a, b);
+        if (lo, hi) == (a, mid) {
+            return Some(((mid, b), (a, b), true));
+        }
+        if (lo, hi) == (mid, b) {
+            return Some(((a, mid), (a, b), false));
+        }
+        if hi <= mid {
+            b = mid;
+        } else if lo >= mid {
+            a = mid;
+        } else {
+            unreachable!("segment [{lo}, {hi}) straddles the canonical split {mid}");
+        }
+    }
+    None
+}
+
+/// Reduce-as-ready over a **deterministic merge tree** (see module
+/// docs): contributions stream in (over a channel, in whatever order the
+/// worker threads finish) and merge eagerly with their tree sibling as
+/// soon as both sides are ready. The pairing is fixed by the worker
+/// count, so the result — and the per-merge traffic accounting — is
+/// identical at any thread count and any arrival order; the work
+/// *remaining* after the slowest shard lands is only its O(log W) spine
+/// to the root, not a serial O(W) fold.
+///
+/// `rounds` counts pairwise merges (`W - 1` for a full reduce) and
+/// `bytes_moved` the sparse payload traffic, same accounting as
+/// [`tree_allreduce`].
+pub struct TreeReducer {
+    workers: usize,
+    arrived: Vec<bool>,
+    /// Ready-but-unmerged canonical segments: `lo -> (hi, contribution)`.
+    ready: BTreeMap<usize, (usize, Contribution)>,
+    stats: ReduceStats,
+    /// Withhold the root merge for the apply stage (see
+    /// [`TreeReducer::finish_halves`]).
+    defer_root: bool,
+}
+
+impl TreeReducer {
+    pub fn new(workers: usize) -> TreeReducer {
+        TreeReducer {
             workers,
-            next_rank: 0,
-            pending: BTreeMap::new(),
-            total: None,
+            arrived: vec![false; workers],
+            ready: BTreeMap::new(),
             stats: ReduceStats { rounds: 0, bytes_moved: 0, workers },
+            defer_root: false,
         }
     }
 
-    /// Ranks merged into the running total so far.
-    pub fn merged(&self) -> usize {
-        self.next_rank
+    /// A reducer that stops one merge short of the root: `finish_halves`
+    /// hands back the two subtree totals so the final (largest) merge
+    /// can run inside the sharded apply, split per row range.
+    pub fn deferred(workers: usize) -> TreeReducer {
+        let mut r = TreeReducer::new(workers);
+        r.defer_root = true;
+        r
     }
 
-    /// Hand over `rank`'s contribution; merges every consecutive rank
-    /// that is now available.
+    /// Ranks whose contributions have arrived so far.
+    pub fn arrived(&self) -> usize {
+        self.arrived.iter().filter(|&&a| a).count()
+    }
+
+    /// Hand over `rank`'s contribution; eagerly merges every tree node
+    /// whose two children are now both ready.
     pub fn push(&mut self, rank: usize, c: Contribution) -> Result<()> {
         ensure!(rank < self.workers, "rank {rank} out of range for {} workers", self.workers);
-        ensure!(
-            rank >= self.next_rank && !self.pending.contains_key(&rank),
-            "duplicate contribution for rank {rank}"
-        );
-        self.pending.insert(rank, c);
-        while let Some(next) = self.pending.remove(&self.next_rank) {
-            match &mut self.total {
-                None => self.total = Some(next),
-                Some(t) => {
-                    self.stats.rounds += 1;
-                    self.stats.bytes_moved += merge(t, &next)?;
-                }
+        ensure!(!self.arrived[rank], "duplicate contribution for rank {rank}");
+        self.arrived[rank] = true;
+        self.ready.insert(rank, (rank + 1, c));
+
+        let (mut lo, mut hi) = (rank, rank + 1);
+        while let Some((sib, parent, is_left)) = sibling_of(self.workers, lo, hi) {
+            if self.defer_root && parent == (0, self.workers) {
+                break;
             }
-            self.next_rank += 1;
+            let sib_ready = self.ready.get(&sib.0).is_some_and(|(h, _)| *h == sib.1);
+            if !sib_ready {
+                break;
+            }
+            let (_, other) = self.ready.remove(&sib.0).unwrap();
+            let (_, mine) = self.ready.remove(&lo).unwrap();
+            // merge left += right regardless of arrival order
+            let (mut left, right) = if is_left { (mine, other) } else { (other, mine) };
+            self.stats.rounds += 1;
+            self.stats.bytes_moved += merge(&mut left, &right)?;
+            self.ready.insert(parent.0, (parent.1, left));
+            (lo, hi) = parent;
         }
         Ok(())
     }
 
-    /// Finish: all ranks must have arrived and weights must sum to ~1.
-    pub fn finish(self) -> Result<(Contribution, ReduceStats)> {
+    fn ensure_complete(&self) -> Result<()> {
+        let n = self.arrived();
         ensure!(
-            self.next_rank == self.workers,
-            "only {}/{} contributions arrived",
-            self.next_rank,
+            n == self.workers,
+            "only {n}/{} contributions arrived",
             self.workers
         );
-        let total = self.total.ok_or_else(|| anyhow::anyhow!("no contributions"))?;
+        Ok(())
+    }
+
+    /// Finish with the full total: all ranks must have arrived and
+    /// weights must sum to ~1. (A deferred reducer performs the root
+    /// merge here — the fallback for consumers that need the whole
+    /// gradient, e.g. the HLO apply program.)
+    pub fn finish(mut self) -> Result<(Contribution, ReduceStats)> {
+        self.ensure_complete()?;
+        if self.ready.len() == 2 {
+            let (_, (_, right)) = self.ready.pop_last().unwrap();
+            let (_, (_, mut left)) = self.ready.pop_last().unwrap();
+            self.stats.rounds += 1;
+            self.stats.bytes_moved += merge(&mut left, &right)?;
+            self.ready.insert(0, (self.workers, left));
+        }
+        ensure!(self.ready.len() == 1, "reduction did not converge to a single segment");
+        let (_, (_, total)) = self.ready.pop_last().unwrap();
         ensure!(
             (total.weight - 1.0).abs() < 1e-3,
             "worker weights sum to {} != 1",
             total.weight
         );
         Ok((total, self.stats))
+    }
+
+    /// Finish with the root merge deferred: returns
+    /// [`Reduced::Halves`] (or `Whole` for a single worker). The
+    /// withheld merge is *accounted* here — its pairing, payload bytes
+    /// and round are fixed already — so the stats are identical to
+    /// [`TreeReducer::finish`]'s at any thread count.
+    pub fn finish_halves(mut self) -> Result<(Reduced, ReduceStats)> {
+        ensure!(self.defer_root, "finish_halves requires TreeReducer::deferred");
+        self.ensure_complete()?;
+        if self.workers == 1 {
+            let (_, (_, total)) = self.ready.pop_last().unwrap();
+            ensure!((total.weight - 1.0).abs() < 1e-3, "weight {} != 1", total.weight);
+            return Ok((Reduced::Whole(total), self.stats));
+        }
+        ensure!(self.ready.len() == 2, "deferred reduction must end with two subtrees");
+        let (_, (_, right)) = self.ready.pop_last().unwrap();
+        let (_, (_, left)) = self.ready.pop_last().unwrap();
+        ensure!(
+            (left.weight + right.weight - 1.0).abs() < 1e-3,
+            "worker weights sum to {} != 1",
+            left.weight + right.weight
+        );
+        self.stats.rounds += 1;
+        self.stats.bytes_moved += payload_bytes(&right);
+        Ok((Reduced::Halves { left, right }, self.stats))
     }
 }
 
@@ -175,6 +325,19 @@ mod tests {
             loss_weighted: 0.1 * w,
             weight: w,
         }
+    }
+
+    /// The reference serial execution of the same fixed tree: recursive
+    /// left-ceiling split, children reduced first, then left += right.
+    fn serial_tree_fold(cs: &[Contribution], lo: usize, hi: usize) -> Contribution {
+        if hi - lo == 1 {
+            return cs[lo].clone();
+        }
+        let mid = super::split_point(lo, hi);
+        let mut left = serial_tree_fold(cs, lo, mid);
+        let right = serial_tree_fold(cs, mid, hi);
+        merge(&mut left, &right).unwrap();
+        left
     }
 
     #[test]
@@ -233,15 +396,88 @@ mod tests {
         assert!(tree_allreduce(cs).is_err());
     }
 
+    /// Acceptance (satellite): for 1–9 workers and scrambled arrival
+    /// orders, the streaming tree reducer is **bitwise** equal to the
+    /// serial execution of the same fold — the fixed pairing, not the
+    /// arrival schedule, defines the result.
     #[test]
-    fn streaming_reducer_is_arrival_order_invariant() {
-        // same four contributions, three different arrival orders — the
-        // totals must be identical because merges happen in rank order
+    fn tree_reducer_bitwise_matches_serial_fold_1_to_9_workers() {
+        for workers in 1usize..=9 {
+            // overlapping + disjoint sparse ids, uneven values
+            let cs: Vec<Contribution> = (0..workers)
+                .map(|r| {
+                    let mut c = sparse_contrib(
+                        (7 * r % 10) as u32,
+                        0.1 + r as f32 * 0.371,
+                        1.0 / workers as f32,
+                    );
+                    c.loss_weighted = 0.01 * r as f32;
+                    c
+                })
+                .collect();
+            let want = serial_tree_fold(&cs, 0, workers);
+
+            // a few deterministic scrambles of the arrival order
+            for scramble in 0..3usize {
+                let mut order: Vec<usize> = (0..workers).collect();
+                match scramble {
+                    1 => order.reverse(),
+                    2 => order.rotate_left(workers / 2),
+                    _ => {}
+                }
+                let mut r = TreeReducer::new(workers);
+                for rank in order {
+                    r.push(rank, cs[rank].clone()).unwrap();
+                }
+                let (total, stats) = r.finish().unwrap();
+                assert_eq!(stats.rounds, workers - 1, "W-1 merges");
+                assert_eq!(
+                    total.grads[0].to_tensor().as_f32().unwrap(),
+                    want.grads[0].to_tensor().as_f32().unwrap(),
+                    "workers={workers} scramble={scramble}: grads"
+                );
+                assert_eq!(total.counts, want.counts, "workers={workers}: counts");
+                assert_eq!(total.loss_weighted, want.loss_weighted, "workers={workers}: loss");
+            }
+        }
+    }
+
+    /// Deferred mode: halves merge to exactly the full finish() total,
+    /// and the accounted stats agree with the eager path.
+    #[test]
+    fn deferred_root_merge_equals_eager_finish() {
+        for workers in 1usize..=7 {
+            let cs: Vec<Contribution> = (0..workers)
+                .map(|r| sparse_contrib((3 * r % 8) as u32, 0.2 + r as f32, 1.0 / workers as f32))
+                .collect();
+            let mut eager = TreeReducer::new(workers);
+            let mut deferred = TreeReducer::deferred(workers);
+            for (rank, c) in cs.iter().enumerate() {
+                eager.push(rank, c.clone()).unwrap();
+                deferred.push(rank, c.clone()).unwrap();
+            }
+            let (want, want_stats) = eager.finish().unwrap();
+            let (halves, stats) = deferred.finish_halves().unwrap();
+            assert_eq!(stats, want_stats, "workers={workers}: stats must match");
+            let got = halves.into_whole().unwrap();
+            assert_eq!(
+                got.grads[0].to_tensor().as_f32().unwrap(),
+                want.grads[0].to_tensor().as_f32().unwrap(),
+                "workers={workers}"
+            );
+            assert_eq!(got.counts, want.counts);
+        }
+    }
+
+    #[test]
+    fn arrival_order_and_critical_path() {
+        // same four contributions, three arrival orders — identical
+        // totals; and after the last arrival only the spine merges run
         let mk = |v: f32| contrib(v, 0.25);
         let vals = [0.1f32, 0.2, 0.3, 0.4];
         let mut totals = Vec::new();
         for order in [[0usize, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]] {
-            let mut r = StreamingReducer::new(4);
+            let mut r = TreeReducer::new(4);
             for rank in order {
                 r.push(rank, mk(vals[rank])).unwrap();
             }
@@ -253,37 +489,29 @@ mod tests {
         }
         assert_eq!(totals[0], totals[1]);
         assert_eq!(totals[0], totals[2]);
+
+        // critical path: with ranks 0,1,3 already in, rank 2's arrival
+        // triggers exactly the ceil(log2 4) = 2 spine merges
+        let mut r = TreeReducer::new(4);
+        r.push(0, mk(0.1)).unwrap();
+        r.push(1, mk(0.2)).unwrap(); // merges (0,1) immediately
+        r.push(3, mk(0.4)).unwrap(); // parks: sibling 2 missing
+        assert_eq!(r.stats.rounds, 1);
+        r.push(2, mk(0.3)).unwrap(); // (2,3) then root — the log-depth spine
+        assert_eq!(r.stats.rounds, 3);
     }
 
     #[test]
-    fn streaming_reducer_matches_sequential_fold() {
-        let cs: Vec<Contribution> =
-            (0..3).map(|r| sparse_contrib(10 * r + 1, 1.0 / 3.0, 1.0 / 3.0)).collect();
-        let mut r = StreamingReducer::new(3);
-        for (rank, c) in cs.clone().into_iter().enumerate() {
-            r.push(rank, c).unwrap();
-        }
-        let (total, _) = r.finish().unwrap();
-        // manual rank-ordered fold
-        let mut want = cs[0].clone();
-        merge(&mut want, &cs[1]).unwrap();
-        merge(&mut want, &cs[2]).unwrap();
-        assert_eq!(
-            total.grads[0].to_tensor().as_f32().unwrap(),
-            want.grads[0].to_tensor().as_f32().unwrap()
-        );
-        assert!(matches!(total.grads[0], GradTensor::Sparse(_)));
-    }
-
-    #[test]
-    fn streaming_reducer_rejects_incomplete_and_duplicates() {
-        let mut r = StreamingReducer::new(2);
+    fn tree_reducer_rejects_incomplete_and_duplicates() {
+        let mut r = TreeReducer::new(2);
         r.push(0, contrib(0.5, 0.5)).unwrap();
         assert!(r.push(0, contrib(0.5, 0.5)).is_err(), "duplicate rank");
         assert!(r.push(5, contrib(0.5, 0.5)).is_err(), "rank out of range");
-        let mut r = StreamingReducer::new(2);
+        let mut r = TreeReducer::new(2);
         r.push(1, contrib(0.5, 0.5)).unwrap();
-        assert_eq!(r.merged(), 0, "rank 1 parks until rank 0 lands");
+        assert_eq!(r.arrived(), 1);
         assert!(r.finish().is_err(), "missing rank 0");
+        let r = TreeReducer::new(3);
+        assert!(r.finish().is_err(), "nothing arrived");
     }
 }

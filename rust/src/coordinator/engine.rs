@@ -92,6 +92,28 @@ impl Engine {
         }
     }
 
+    /// Gradient of rows `[lo, hi)` of `batch` — the worker fan-out's hot
+    /// path. The reference engine reads the batch storage in place and
+    /// runs its intermediates on `scratch` (zero copies, zero
+    /// steady-state allocation); the HLO engine needs owned microbatch
+    /// tensors for its program inputs, so it materializes the slice.
+    pub fn grad_range(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        lo: usize,
+        hi: usize,
+        scratch: &mut crate::reference::Scratch,
+    ) -> Result<GradOutput> {
+        match self {
+            Engine::Hlo(e) => {
+                let micro = super::worker::slice_batch(batch, lo, hi)?;
+                e.grad(params, &micro)
+            }
+            Engine::Reference(e) => e.grad_range_scratch(params, batch, lo, hi, scratch),
+        }
+    }
+
     /// Optimizer update in place over caller-owned `ParamSet`s — the
     /// **leader-serial oracle** path. The trainer itself applies through
     /// [`Engine::apply_store`]; this entry point remains for the parity
@@ -142,18 +164,50 @@ impl Engine {
                 store.with_all_mut(|params, m, v| e.apply(params, m, v, grads, &dense_counts, hv))
             }
             Engine::Reference(e) => {
-                let mut h = hv.hypers;
-                h.lr_dense *= hv.dense_lr_factor;
-                let ctx = ApplyCtx {
-                    clip: e.clip_mode,
-                    clip_params: ClipParams { r: h.clip_r, zeta: h.clip_zeta, clip_t: h.clip_t },
-                    lr_embed: h.lr_embed,
-                    lr_dense: h.lr_dense,
-                    l2_embed: h.l2_embed,
-                    adam: e.adam_cfg(),
-                    step: hv.step as u32,
-                };
+                let ctx = reference_apply_ctx(e, hv);
                 store.apply_sharded(&ctx, grads, counts, threads)
+            }
+        }
+    }
+
+    /// Optimizer update for a reduction finished as two subtree halves
+    /// ([`crate::coordinator::Reduced::Halves`]): the root merge runs
+    /// *inside* the sharded apply, split per parameter-shard row range,
+    /// so apply work starts on each shard's range as soon as its slice
+    /// merges instead of waiting for the whole-table merge tail.
+    ///
+    /// Reference engine only (the trainer routes the HLO engine — and
+    /// the diagnostic dense-grads / Global-clip configurations — through
+    /// the eager [`Engine::apply_store`] path); as a defensive fallback
+    /// a non-reference engine merges eagerly here and delegates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_store_halves(
+        &self,
+        store: &ParamStore,
+        left: &mut crate::coordinator::allreduce::Contribution,
+        right: crate::coordinator::allreduce::Contribution,
+        hv: &HypersVec,
+        threads: usize,
+    ) -> Result<()> {
+        match self {
+            Engine::Reference(e) => {
+                let ctx = reference_apply_ctx(e, hv);
+                store.apply_sharded_pair(
+                    &ctx,
+                    &mut left.grads,
+                    right.grads,
+                    &left.counts,
+                    &right.counts,
+                    threads,
+                )
+            }
+            Engine::Hlo(_) => {
+                // eager fallback: merge, then the whole-tensor apply
+                for (a, b) in left.grads.iter_mut().zip(&right.grads) {
+                    a.axpy(1.0, b)?;
+                }
+                left.counts.axpy(1.0, &right.counts)?;
+                self.apply_store(store, &mut left.grads, &left.counts, hv, threads)
             }
         }
     }
@@ -163,6 +217,20 @@ impl Engine {
         match self {
             Engine::Hlo(e) => e.fwd(params, batch),
             Engine::Reference(e) => e.fwd(params, batch),
+        }
+    }
+
+    /// Eval logits on a caller-owned scratch arena (the returned buffer
+    /// was taken from it — recycle after use on the reference engine).
+    pub fn fwd_scratch(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        scratch: &mut crate::reference::Scratch,
+    ) -> Result<Vec<f32>> {
+        match self {
+            Engine::Hlo(e) => e.fwd(params, batch),
+            Engine::Reference(e) => e.fwd_scratch(params, batch, scratch),
         }
     }
 
@@ -344,6 +412,24 @@ impl HloEngine {
         }
         let out = self.fwd_program.run(&inputs)?;
         Ok(out[0].as_f32()?.to_vec())
+    }
+}
+
+/// The reference engine's resolved per-step apply context (warmup factor
+/// folded into the dense LR). Shared by [`Engine::apply_store`] and
+/// [`Engine::apply_store_halves`] so the eager and deferred-merge apply
+/// paths can never drift on hyperparameter resolution.
+fn reference_apply_ctx(e: &ReferenceEngine, hv: &HypersVec) -> ApplyCtx {
+    let mut h = hv.hypers;
+    h.lr_dense *= hv.dense_lr_factor;
+    ApplyCtx {
+        clip: e.clip_mode,
+        clip_params: ClipParams { r: h.clip_r, zeta: h.clip_zeta, clip_t: h.clip_t },
+        lr_embed: h.lr_embed,
+        lr_dense: h.lr_dense,
+        l2_embed: h.l2_embed,
+        adam: e.adam_cfg(),
+        step: hv.step as u32,
     }
 }
 

@@ -9,11 +9,16 @@
 //! * **Parallel data parallelism** ([`worker`], [`allreduce`], [`pool`]):
 //!   logical workers compute shard gradients on a persistent step-worker
 //!   pool ([`pool::StepPool`], spawned once per run) and stream them
-//!   into a rank-ordered reduce-as-ready merge
-//!   ([`allreduce::StreamingReducer`]) that overlaps reduction with the
-//!   slowest shard's compute, with traffic accounting (the paper's
-//!   multi-GPU extension); [`allreduce::tree_allreduce`] keeps the
-//!   binary-tree cost model for traffic studies.
+//!   into a deterministic **tree-merge** reducer
+//!   ([`allreduce::TreeReducer`]) — fixed pairing over contiguous rank
+//!   ranges, so reduction overlaps the slowest shard's compute, the
+//!   post-arrival critical path is O(log W), and the result is bitwise
+//!   identical at any thread count; with the root merge deferred
+//!   ([`allreduce::Reduced::Halves`]) the final, largest merge runs
+//!   inside the sharded apply, split per parameter-shard row range.
+//!   Traffic accounting covers the paper's multi-GPU extension;
+//!   [`allreduce::tree_allreduce`] keeps the round-structured cost model
+//!   for traffic studies.
 //! * **Sharded apply**: the merged gradient is partitioned by the
 //!   store's field-aligned shard plan and `clip → L2 → Adam` runs per
 //!   parameter shard in parallel (see `model::store::ParamStore`), so
@@ -32,7 +37,7 @@ pub mod trainer;
 pub mod worker;
 
 pub use accumulate::GradAccumulator;
-pub use allreduce::{tree_allreduce, ReduceStats, StreamingReducer};
+pub use allreduce::{tree_allreduce, Reduced, ReduceStats, TreeReducer};
 pub use engine::{Engine, HloEngine};
 pub use pool::{GradJob, StepPool};
 pub use trainer::{TrainConfig, TrainReport, Trainer};

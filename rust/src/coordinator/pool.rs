@@ -14,9 +14,10 @@
 //! no borrow ties a step's data to the pool: jobs carry the batch as an
 //! `Arc` and are `'static`.
 //!
-//! Jobs are queued in rank order and the queue is FIFO, so low ranks
-//! (which the rank-ordered [`super::StreamingReducer`] merges first)
-//! start first — the same ordering heuristic the scoped fan-out used.
+//! Jobs are queued in rank order and the queue is FIFO, so rank-adjacent
+//! shards (which the fixed-pairing [`super::TreeReducer`] merges
+//! together first) tend to finish close together — the same ordering
+//! heuristic the scoped fan-out used.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, RwLock};
@@ -59,20 +60,28 @@ impl StepPool {
         let rx = Arc::new(Mutex::new(rx));
         for _ in 0..threads.max(1) {
             let rx = Arc::clone(&rx);
-            scope.spawn(move || loop {
-                // hold the queue lock only while waiting for a job; the
-                // compute below runs with the queue free
-                let job = match rx.lock().unwrap().recv() {
-                    Ok(job) => job,
-                    Err(_) => break, // pool dropped: shut down
-                };
-                let contribution = {
-                    let guard = params.read().unwrap();
-                    WorkerShard::new(job.rank, job.world).compute(engine, &guard, &job.batch)
-                };
-                // a dropped reply receiver just means the leader already
-                // failed this step; keep serving the queue
-                let _ = job.reply.send((job.rank, contribution));
+            scope.spawn(move || {
+                // one scratch arena per worker thread, alive for the
+                // whole run: after the first job its buffers reach
+                // steady-state capacity and the compute path stops
+                // allocating
+                let mut scratch = crate::reference::Scratch::new();
+                loop {
+                    // hold the queue lock only while waiting for a job;
+                    // the compute below runs with the queue free
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // pool dropped: shut down
+                    };
+                    let contribution = {
+                        let guard = params.read().unwrap();
+                        WorkerShard::new(job.rank, job.world)
+                            .compute(engine, &guard, &job.batch, &mut scratch)
+                    };
+                    // a dropped reply receiver just means the leader
+                    // already failed this step; keep serving the queue
+                    let _ = job.reply.send((job.rank, contribution));
+                }
             });
         }
         StepPool { tx }

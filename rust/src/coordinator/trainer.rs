@@ -13,19 +13,27 @@
 //!    [`StepPool`] created once in [`Trainer::train`]'s thread scope
 //!    (spawn cost is paid per *run*, not per step — the old per-step
 //!    `thread::scope` is gone from the hot loop). Workers take read
-//!    locks on the weights; jobs carry the batch as an `Arc`.
-//! 2. **Reduce-as-ready** — finished contributions stream over a
-//!    per-step channel into a [`StreamingReducer`] on the leader thread,
-//!    merging eagerly *in rank order*: the slowest shard's gradient
-//!    overlaps the reduction of everything before it, and the fixed
-//!    merge order keeps results bitwise identical to a sequential run at
-//!    any thread count.
-//! 3. **Sharded apply** — the store partitions the merged gradient by
-//!    its field-aligned [`ShardPlan`] row ranges and runs CowClip's
-//!    `clip → L2 → Adam` per parameter shard on scoped threads
-//!    ([`TrainConfig::param_shards`] owners), each owning disjoint
-//!    `&mut` slices of weights + moments. The shard count never changes
-//!    the math (`rust/tests/shard_parity.rs`).
+//!    locks on the weights, jobs carry the batch as an `Arc`, and every
+//!    worker thread owns a persistent [`Scratch`] arena so the
+//!    forward/backward compute path performs zero steady-state heap
+//!    allocation.
+//! 2. **Tree reduce-as-ready** — finished contributions stream over a
+//!    per-step channel into a [`TreeReducer`] on the leader thread,
+//!    merging eagerly along a **fixed binary tree over contiguous rank
+//!    ranges**: reduction overlaps the slowest shard's compute, the
+//!    post-arrival critical path is O(log W) merges (not a serial O(W)
+//!    fold), and because the pairing depends only on the worker count,
+//!    results stay bitwise identical at any thread count.
+//! 3. **Sharded apply, overlapped with the merge tail** — on the
+//!    reference engine (clip mode ≠ Global) the reducer withholds the
+//!    *root* merge and hands back its two subtree halves
+//!    ([`Reduced::Halves`]); the store splits that final merge per
+//!    field-aligned [`ShardPlan`] row range and performs each slice
+//!    *inside* the shard's own apply task, so CowClip's `clip → L2 →
+//!    Adam` starts on a shard's range as soon as its slice of the merge
+//!    completes ([`TrainConfig::param_shards`] owners, disjoint `&mut`
+//!    slices of weights + moments). Neither the shard count nor the
+//!    deferred merge changes the math (`rust/tests/shard_parity.rs`).
 //!
 //! A scoped prefetch thread ([`Prefetch`]) materializes batch `N+1` —
 //! including the `Batch::touched` sort — while step `N` trains, so the
@@ -42,10 +50,12 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use super::allreduce::{Contribution, ReduceStats, StreamingReducer};
+use super::allreduce::{Contribution, Reduced, ReduceStats, TreeReducer};
 use super::engine::Engine;
 use super::pool::{GradJob, StepPool};
 use super::worker::WorkerShard;
+use crate::clip::ClipMode;
+use crate::reference::Scratch;
 use crate::data::batcher::{Batch, Batcher, EvalBatcher};
 use crate::data::dataset::Dataset;
 use crate::data::prefetch::Prefetch;
@@ -168,6 +178,10 @@ pub struct Trainer {
     hypers: HyperSet,
     /// Loop-invariant warmup schedule.
     warmup: Warmup,
+    /// Per-thread scratch arenas for the inline fan-out paths (the
+    /// persistent pool's workers own their own); reused across steps so
+    /// the compute path stops allocating after warmup.
+    scratches: Vec<Scratch>,
 }
 
 /// Resolve the apply-stage shard count: HLO applies whole tensors (so 1),
@@ -194,7 +208,22 @@ impl Trainer {
         let store = ParamStore::new(engine.schema().clone(), params, n_shards)?;
         let hypers = cfg.scaled_hypers();
         let warmup = Warmup::new(cfg.warmup_steps);
-        Ok(Trainer { engine, cfg, store, step: 0, hypers, warmup })
+        let scratches = (0..cfg.threads_for(cfg.workers)).map(|_| Scratch::new()).collect();
+        Ok(Trainer { engine, cfg, store, step: 0, hypers, warmup, scratches })
+    }
+
+    /// Total scratch-arena allocation events across the trainer's inline
+    /// fan-out threads — flat across steps once warm (the
+    /// zero-steady-state-allocation gate in `train_integration.rs`).
+    pub fn scratch_grow_events(&self) -> usize {
+        self.scratches.iter().map(|s| s.grow_events()).sum()
+    }
+
+    fn ensure_scratches(&mut self) {
+        let need = self.cfg.threads_for(self.cfg.workers);
+        while self.scratches.len() < need {
+            self.scratches.push(Scratch::new());
+        }
     }
 
     pub fn step(&self) -> usize {
@@ -231,8 +260,17 @@ impl Trainer {
     /// identical results.
     pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, ReduceStats)> {
         self.step += 1;
+        self.ensure_scratches();
         let hv = hypers_for_step(self.hypers, self.warmup, self.step);
-        let (total, stats) = fan_out_inline(&self.engine, &self.store, &self.cfg, batch)?;
+        let defer = wants_deferred_merge(&self.engine);
+        let (total, stats) = fan_out_inline(
+            &self.engine,
+            &self.store,
+            &self.cfg,
+            batch,
+            defer,
+            &mut self.scratches,
+        )?;
         let loss = apply_contribution(&self.engine, &self.store, &self.cfg, &hv, total)?;
         Ok((loss, stats))
     }
@@ -264,6 +302,7 @@ impl Trainer {
         // touched cache); shards compute their own slices' touched sets
         let warm_touched = self.cfg.workers == 1;
 
+        self.ensure_scratches();
         // split borrows: the scope threads share the engine and the
         // store's locks while the loop advances the step counter
         let engine = &self.engine;
@@ -272,6 +311,7 @@ impl Trainer {
         let hypers = self.hypers;
         let warmup = self.warmup;
         let step = &mut self.step;
+        let scratches = &mut self.scratches;
 
         if cfg.threads_for(2) > 1 {
             std::thread::scope(|scope| {
@@ -296,6 +336,7 @@ impl Trainer {
                     hypers,
                     warmup,
                     step,
+                    scratches,
                     pool.as_ref(),
                     t0,
                     total_steps,
@@ -315,6 +356,7 @@ impl Trainer {
                 hypers,
                 warmup,
                 step,
+                scratches,
                 None,
                 t0,
                 total_steps,
@@ -326,6 +368,30 @@ impl Trainer {
     }
 }
 
+/// Whether the reducer should withhold the root merge so the sharded
+/// apply can run it split per row range: the reference engine's sparse
+/// path, except `Global` clipping (whose threshold needs the
+/// *whole-table* merged gradient norm before any shard may start).
+fn wants_deferred_merge(engine: &Engine) -> bool {
+    match engine {
+        Engine::Reference(e) => {
+            e.clip_mode != ClipMode::Global && !e.emits_dense_grads()
+        }
+        Engine::Hlo(_) => false,
+    }
+}
+
+/// Finish a reducer according to the defer mode, normalizing to
+/// [`Reduced`].
+fn finish_reducer(reducer: TreeReducer, defer: bool) -> Result<(Reduced, ReduceStats)> {
+    if defer {
+        reducer.finish_halves()
+    } else {
+        let (total, stats) = reducer.finish()?;
+        Ok((Reduced::Whole(total), stats))
+    }
+}
+
 /// The per-step hypers vector: warmup factor on the dense LR at 1-based
 /// `step`. Shared by `Trainer::train_step` and the pooled `run_loop` so
 /// the two step paths cannot drift.
@@ -334,12 +400,13 @@ fn hypers_for_step(hypers: HyperSet, warmup: Warmup, step: usize) -> HypersVec {
 }
 
 /// Gradient fan-out through the persistent pool: one job per worker
-/// rank, replies merged in rank order as they land.
+/// rank, replies merged along the fixed tree as they land.
 fn fan_out_pool(
     pool: &StepPool,
     workers: usize,
     batch: &Arc<Batch>,
-) -> Result<(Contribution, ReduceStats)> {
+    defer: bool,
+) -> Result<(Reduced, ReduceStats)> {
     let (tx, rx) = std::sync::mpsc::channel();
     for rank in 0..workers {
         pool.submit(GradJob {
@@ -350,43 +417,48 @@ fn fan_out_pool(
         });
     }
     drop(tx); // the reducer's recv loop ends when the last reply lands
-    let mut reducer = StreamingReducer::new(workers);
+    let mut reducer = if defer { TreeReducer::deferred(workers) } else { TreeReducer::new(workers) };
     for (rank, c) in rx {
         reducer.push(rank, c?)?;
     }
-    reducer.finish()
+    finish_reducer(reducer, defer)
 }
 
 /// Inline gradient fan-out (no pool): sequential when `threads <= 1`,
-/// otherwise a per-step scope (the standalone `train_step` path). Ranks
-/// are strided across threads so low ranks — merged first — finish
-/// first.
+/// otherwise a per-step scope (the standalone `train_step` path). Each
+/// thread borrows one of the trainer's persistent scratch arenas.
 fn fan_out_inline(
     engine: &Engine,
     store: &ParamStore,
     cfg: &TrainConfig,
     batch: &Batch,
-) -> Result<(Contribution, ReduceStats)> {
+    defer: bool,
+    scratches: &mut [Scratch],
+) -> Result<(Reduced, ReduceStats)> {
     let workers = cfg.workers;
     let threads = cfg.threads_for(workers);
+    debug_assert!(scratches.len() >= threads, "trainer must pre-size its scratch arenas");
     let guard = store.read();
     let params: &ParamSet = &guard;
     if threads <= 1 {
-        let mut reducer = StreamingReducer::new(workers);
+        let scratch = &mut scratches[0];
+        let mut reducer =
+            if defer { TreeReducer::deferred(workers) } else { TreeReducer::new(workers) };
         for rank in 0..workers {
-            let c = WorkerShard::new(rank, workers).compute(engine, params, batch)?;
+            let c = WorkerShard::new(rank, workers).compute(engine, params, batch, scratch)?;
             reducer.push(rank, c)?;
         }
-        reducer.finish()
+        finish_reducer(reducer, defer)
     } else {
-        std::thread::scope(|s| -> Result<(Contribution, ReduceStats)> {
+        std::thread::scope(|s| -> Result<(Reduced, ReduceStats)> {
             let (tx, rx) = std::sync::mpsc::channel();
-            for t in 0..threads {
+            for (t, scratch) in scratches.iter_mut().take(threads).enumerate() {
                 let tx = tx.clone();
                 s.spawn(move || {
                     let mut rank = t;
                     while rank < workers {
-                        let c = WorkerShard::new(rank, workers).compute(engine, params, batch);
+                        let c = WorkerShard::new(rank, workers)
+                            .compute(engine, params, batch, scratch);
                         let failed = c.is_err();
                         if tx.send((rank, c)).is_err() || failed {
                             return;
@@ -396,26 +468,38 @@ fn fan_out_inline(
                 });
             }
             drop(tx);
-            let mut reducer = StreamingReducer::new(workers);
+            let mut reducer =
+                if defer { TreeReducer::deferred(workers) } else { TreeReducer::new(workers) };
             for (rank, c) in rx {
                 reducer.push(rank, c?)?;
             }
-            reducer.finish()
+            finish_reducer(reducer, defer)
         })
     }
 }
 
-/// Apply a reduced contribution through the store's sharded path.
+/// Apply a reduction through the store's sharded path. A whole total
+/// goes through the eager apply; deferred halves route to
+/// [`Engine::apply_store_halves`], whose per-shard tasks run their slice
+/// of the root merge inline.
 fn apply_contribution(
     engine: &Engine,
     store: &ParamStore,
     cfg: &TrainConfig,
     hv: &HypersVec,
-    total: Contribution,
+    total: Reduced,
 ) -> Result<f32> {
-    let Contribution { mut grads, counts, loss_weighted, .. } = total;
-    engine.apply_store(store, &mut grads, &counts, hv, cfg.threads_for(store.n_shards()))?;
-    Ok(loss_weighted)
+    let threads = cfg.threads_for(store.n_shards());
+    let loss = total.loss_weighted();
+    match total {
+        Reduced::Whole(Contribution { mut grads, counts, .. }) => {
+            engine.apply_store(store, &mut grads, &counts, hv, threads)?;
+        }
+        Reduced::Halves { mut left, right } => {
+            engine.apply_store_halves(store, &mut left, right, hv, threads)?;
+        }
+    }
+    Ok(loss)
 }
 
 /// Parallel evaluation over a read snapshot of the store's weights.
@@ -435,9 +519,13 @@ fn evaluate_with(
     let params: &ParamSet = &guard;
     let mut acc = EvalAccumulator::new();
     if threads <= 1 {
+        // one scratch reused across every eval batch: logits are pushed
+        // then recycled, so eval stops allocating after the first batch
+        let mut scratch = Scratch::new();
         for batch in EvalBatcher::new(ds, eval_batch) {
-            let logits = engine.fwd(params, &batch)?;
+            let logits = engine.fwd_scratch(params, &batch, &mut scratch)?;
             acc.push(&logits, batch.y.as_f32()?, batch.valid);
+            scratch.recycle(logits);
         }
     } else {
         type EvalOut = (usize, Vec<f32>, Vec<f32>, usize);
@@ -445,12 +533,15 @@ fn evaluate_with(
             let mut handles = Vec::with_capacity(threads);
             for t in 0..threads {
                 handles.push(s.spawn(move || -> Result<Vec<EvalOut>> {
+                    let mut scratch = Scratch::new();
                     let mut out = Vec::new();
                     let mut i = t;
                     while i < n_batches {
                         let batch = EvalBatcher::nth_batch(ds, eval_batch, i)
                             .ok_or_else(|| anyhow::anyhow!("eval batch {i} out of range"))?;
-                        let logits = engine.fwd(params, &batch)?;
+                        // logits escape into the ordered result set, so
+                        // they are not recycled (forward intermediates are)
+                        let logits = engine.fwd_scratch(params, &batch, &mut scratch)?;
                         let y = batch.y.as_f32()?.to_vec();
                         out.push((i, logits, y, batch.valid));
                         i += threads;
@@ -481,6 +572,7 @@ fn run_loop(
     hypers: HyperSet,
     warmup: Warmup,
     step: &mut usize,
+    scratches: &mut [Scratch],
     pool: Option<&StepPool>,
     t0: Instant,
     total_steps: usize,
@@ -488,6 +580,7 @@ fn run_loop(
     test: &Dataset,
     mut next_batch: impl FnMut() -> Result<Batch>,
 ) -> Result<TrainReport> {
+    let defer = wants_deferred_merge(engine);
     let mut sw = Stopwatch::new();
     let mut grad_secs = 0.0f64;
     let mut apply_secs = 0.0f64;
@@ -505,8 +598,8 @@ fn run_loop(
         let hv = hypers_for_step(hypers, warmup, *step);
         let t_grad = Instant::now();
         let (total, rstats) = match pool {
-            Some(pool) => fan_out_pool(pool, cfg.workers, &batch)?,
-            None => fan_out_inline(engine, store, cfg, &batch)?,
+            Some(pool) => fan_out_pool(pool, cfg.workers, &batch, defer)?,
+            None => fan_out_inline(engine, store, cfg, &batch, defer, scratches)?,
         };
         grad_secs += t_grad.elapsed().as_secs_f64();
         let t_apply = Instant::now();

@@ -1,5 +1,12 @@
 //! A logical data-parallel worker: computes its shard's weighted gradient
 //! contribution by accumulating engine-supported microbatches.
+//!
+//! On the reference engine the worker reads its row range **in place**
+//! through [`Engine::grad_range`] — no per-step row copies — and runs on
+//! a caller-owned [`Scratch`] arena, so the steady-state compute path
+//! performs no heap allocation beyond the escaping gradient payloads.
+//! [`slice_batch`] remains for the HLO path (its programs need owned
+//! microbatch tensors) and for tests.
 
 use anyhow::{bail, Result};
 
@@ -8,6 +15,7 @@ use super::allreduce::Contribution;
 use super::engine::Engine;
 use crate::data::batcher::Batch;
 use crate::model::params::ParamSet;
+use crate::reference::Scratch;
 use crate::tensor::Tensor;
 
 /// One worker's identity + shard geometry.
@@ -50,12 +58,15 @@ impl WorkerShard {
     }
 
     /// Compute this worker's contribution for its slice of `batch`,
-    /// weighted by `shard_rows / batch_rows`.
+    /// weighted by `shard_rows / batch_rows`. Intermediates run on the
+    /// caller's `scratch` arena (one per worker thread, reused across
+    /// steps).
     pub fn compute(
         &self,
         engine: &Engine,
         params: &ParamSet,
         batch: &Batch,
+        scratch: &mut Scratch,
     ) -> Result<Contribution> {
         let b = batch.batch_size();
         let (lo, hi) = self.range(b);
@@ -68,9 +79,8 @@ impl WorkerShard {
         let mut acc = GradAccumulator::new(vocab);
         let mut start = lo;
         while start < hi {
-            let micro = slice_batch(batch, start, start + mb)?;
-            let out = engine.grad(params, &micro)?;
-            acc.add(&out, mb_weight)?;
+            let out = engine.grad_range(params, batch, start, start + mb, scratch)?;
+            acc.add_owned(out, mb_weight)?;
             start += mb;
         }
         // The leader-side finish() contract requires total weight 1.0;

@@ -53,6 +53,15 @@ impl Batch {
     }
 }
 
+/// Sorted unique ids + per-id occurrence counts of an arbitrary id
+/// slice — the uncached form of [`Batch::touched`], used by the worker
+/// fan-out for row-range shards of a batch (which borrow the batch's
+/// storage instead of copying rows, so the batch-level cache does not
+/// apply).
+pub fn touched_of(raw: &[i32]) -> (Vec<u32>, Vec<f32>) {
+    compute_touched(raw)
+}
+
 fn compute_touched(raw: &[i32]) -> (Vec<u32>, Vec<f32>) {
     let mut sorted: Vec<u32> = raw.iter().map(|&id| id as u32).collect();
     sorted.sort_unstable();

@@ -41,21 +41,26 @@
 //!
 //! * **Fan-out** — `WorkerShard::compute` jobs run on a persistent
 //!   [`coordinator::StepPool`] spawned once per `train()` (no per-step
-//!   thread spawn); workers take read locks on the weights and jobs
-//!   carry the batch as an `Arc`.
-//! * **Reduce-as-ready** — contributions stream into a
-//!   [`coordinator::StreamingReducer`] that merges them **in rank
-//!   order** as they land — the slowest shard's gradient overlaps the
-//!   reduction of everything before it, and the fixed merge order makes
-//!   any thread count bitwise-reproduce the sequential run
+//!   thread spawn); workers take read locks on the weights, jobs carry
+//!   the batch as an `Arc`, and each worker reads its row range **in
+//!   place** (no per-step row copies).
+//! * **Tree reduce-as-ready** — contributions stream into a
+//!   [`coordinator::TreeReducer`] that merges them along a **fixed
+//!   binary tree over contiguous rank ranges** as they land: the
+//!   slowest shard's gradient overlaps the reduction of everything
+//!   else, the post-arrival critical path is O(log W) merges, and the
+//!   worker-count-only pairing makes any thread count and any arrival
+//!   order bitwise-reproduce the same result
 //!   (`rust/tests/parallel_parity.rs`).
-//! * **Sharded apply** — the merged gradient is partitioned by the
-//!   store's field-aligned `ShardPlan` (row ranges for the embed/wide
-//!   tables, grouped whole tensors for the dense params) and CowClip's
-//!   `clip → L2 → Adam` runs per shard on scoped threads, each owning
-//!   disjoint `&mut` slices of weights + moments. Field alignment keeps
-//!   every clip mode shard-local (`Global` gets its whole-table norm
-//!   precomputed), and maintained per-field `Σw²` makes sparse AdaField
+//! * **Sharded apply, overlapped with the merge tail** — the reducer
+//!   withholds the *root* merge ([`coordinator::Reduced::Halves`]); the
+//!   store splits it per field-aligned `ShardPlan` row range and runs
+//!   each slice inside that shard's own `clip → L2 → Adam` task on
+//!   scoped threads, each owning disjoint `&mut` slices of weights +
+//!   moments — apply starts on a shard's range while other ranges are
+//!   still merging. Field alignment keeps every clip mode shard-local
+//!   (`Global` needs the whole-table merged norm and takes the eager
+//!   path), and maintained per-field `Σw²` makes sparse AdaField
 //!   O(touched) instead of re-scanning the table. Any shard count
 //!   bitwise-matches the serial path (`rust/tests/shard_parity.rs`).
 //!
@@ -90,6 +95,48 @@
 //! `rust/tests/serve_parity.rs` pins served scores to the offline
 //! forward pass at any arrival order and thread count.
 //!
+//! ## Performance model
+//!
+//! The single-machine step loop is engineered so that, at steady state,
+//! the compute path touches neither the allocator nor any redundant
+//! memory traffic:
+//!
+//! * **Kernels** ([`reference::linalg`]) — blocked, unit-stride,
+//!   FMA-friendly microkernels the compiler auto-vectorizes (`i-k-j`
+//!   matmuls with row-axpy inner loops, 8-lane dot products), each with
+//!   a write-into-output `_into` variant. The original scalar loops are
+//!   kept verbatim in `linalg::naive` as correctness oracles, pinned by
+//!   property tests (≤1e-6, odd shapes, empty batch) and raced by
+//!   `benches/kernels.rs`.
+//! * **Fused passes** ([`reference::layers`]) — the embedding gather
+//!   writes straight into the deep-stream `x0` concat layout (the
+//!   first `F·d` columns *are* the embeds tensor), DeepFM's FM term and
+//!   the embedding backward read it strided in place, and the serving
+//!   tier gathers + dequantizes + wide-sums in one pass per request.
+//! * **Scratch ownership** ([`reference::Scratch`]) — every
+//!   forward/backward/infer intermediate comes from a per-thread
+//!   free-list arena and returns to it; worker-pool threads, the
+//!   trainer's inline fan-out, eval threads and the serving queue's
+//!   scoring threads each own one for the lifetime of the run. After a
+//!   one-step warmup the arena's `grow_events()` counter stays flat —
+//!   tested at the model, trainer and serving levels — so the only
+//!   per-step allocations are the escaping gradient payloads
+//!   themselves.
+//! * **Determinism story** — the tree reducer's pairing is a function
+//!   of the worker count alone (left-ceiling split of contiguous rank
+//!   ranges), so any arrival order, thread count or shard count
+//!   produces bitwise-identical training; the deferred root merge is
+//!   row-local, so executing it per shard range inside apply cannot
+//!   change a single bit (`apply_sharded_pair` vs eager-merge is
+//!   pinned exactly in `model::store` tests).
+//!
+//! Bench recipe: `RUSTFLAGS="-C target-cpu=native" cargo bench --bench
+//! kernels` (per-kernel GFLOP/s + vectorized-vs-naive speedup) and
+//! `cargo bench --bench e2e_epoch` (absolute full-step throughput — the
+//! cross-PR comparison number). The release profile builds with
+//! `lto = "thin"` and `codegen-units = 1` so the kernel tier inlines
+//! across module boundaries.
+//!
 //! ## Features
 //!
 //! The `pjrt` cargo feature (off by default) compiles the real
@@ -100,10 +147,11 @@
 //! ## Benches
 //!
 //! `cargo bench` runs the plain-binary benches under `benches/`:
+//! `kernels` (vectorized vs naive kernel tier, fused gathers),
 //! `clip_throughput` (dense vs sparse clipping arms + speedup),
-//! `e2e_epoch` (sparse vs dense reference trainer, plus the HLO ladder
-//! when artifacts exist), `fig1_step_time`, `data_pipeline`,
-//! `metrics_auc`.
+//! `e2e_epoch` (hot-path throughput, threaded and sharded-apply arms,
+//! plus the HLO ladder when artifacts exist), `fig1_step_time`,
+//! `data_pipeline`, `serve_throughput`, `metrics_auc`.
 //!
 //! Entry points: the `cowclip` binary (see `cli`), the five `examples/`,
 //! and the benches above. Start with [`runtime::Runtime`] +

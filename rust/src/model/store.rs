@@ -52,7 +52,7 @@ use super::params::{ParamSet, CKPT_MAGIC};
 use crate::clip::{clip_embedding_grads_range, grad_l2_norm, ClipMode, ClipParams};
 use crate::data::schema::Schema;
 use crate::optim::{lazy_step_rows, Adam, AdamConfig};
-use crate::tensor::{GradTensor, SparseRows, Tensor};
+use crate::tensor::{merge_row_slices, GradTensor, SparseRows, Tensor};
 
 const STORE_MAGIC: &[u8; 4] = b"CCKS";
 const STORE_VERSION: u32 = 1;
@@ -392,12 +392,11 @@ impl ParamStore {
                         let (flo, fhi) = self.plan.field_span(s);
                         let fields: &[(usize, usize)] =
                             if is_embed { &fields_all[flo..fhi] } else { &[] };
+                        let hi = gv.base + gv.rows;
                         work[s].push(WorkItem::VocabTable {
                             base: gv.base,
-                            rows: gv.rows,
                             d,
-                            ids: gv.ids,
-                            gvals: gv.vals,
+                            grad: TableGrad::Ready { ids: gv.ids, vals: gv.vals, counts, hi },
                             w: wp,
                             m: mp,
                             v: vp,
@@ -413,41 +412,158 @@ impl ParamStore {
             }
         }
 
-        // 3. run the shards — serially, or bucketed round-robin over at
-        // most `threads` scoped threads (shards can outnumber cores)
-        let run_threads = threads.min(n_shards).max(1);
-        if run_threads <= 1 {
-            for items in work {
-                run_shard(items, counts, ctx)?;
+        run_shards(work, ctx, threads)
+    }
+
+    /// [`ParamStore::apply_sharded`] for a reduction that arrived as the
+    /// root's two subtree halves ([`crate::coordinator::Reduced::Halves`]):
+    /// the final — largest — merge of the gradient tree is **split per
+    /// shard row range and executed inside each shard's apply task**, so
+    /// a shard starts clipping/stepping its range as soon as its slice
+    /// of the merge completes while other shards' merge tail is still
+    /// draining. Row-local union merging makes this bitwise identical to
+    /// merging the whole tables first (gated by `shard_parity.rs` /
+    /// `parallel_parity.rs`).
+    ///
+    /// Falls back to the eager whole-merge path when a vocab gradient is
+    /// dense (the diagnostic `dense_grads` mode) or the clip mode is
+    /// `Global` (whose threshold needs the *whole-table* merged norm
+    /// before any shard may start).
+    pub fn apply_sharded_pair(
+        &self,
+        ctx: &ApplyCtx,
+        left: &mut [GradTensor],
+        right: Vec<GradTensor>,
+        left_counts: &SparseRows,
+        right_counts: &SparseRows,
+        threads: usize,
+    ) -> Result<()> {
+        ensure!(
+            left.len() == self.spec.len() && right.len() == self.spec.len(),
+            "grad arity {}/{} != spec {}",
+            left.len(),
+            right.len(),
+            self.spec.len()
+        );
+        let splittable = ctx.clip != ClipMode::Global
+            && self
+                .spec
+                .iter()
+                .zip(left.iter())
+                .zip(right.iter())
+                .all(|((e, l), r)| {
+                    !matches!(e.group.as_str(), "embed" | "wide")
+                        || (matches!(l, GradTensor::Sparse(_))
+                            && matches!(r, GradTensor::Sparse(_)))
+                });
+        if !splittable {
+            // eager fallback: merge the halves, then the normal path
+            for (l, r) in left.iter_mut().zip(&right) {
+                l.axpy(1.0, r)?;
             }
-        } else {
-            let mut buckets: Vec<Vec<Vec<WorkItem<'_>>>> =
-                (0..run_threads).map(|_| Vec::new()).collect();
-            for (s, items) in work.into_iter().enumerate() {
-                if !items.is_empty() {
-                    buckets[s % run_threads].push(items);
-                }
-            }
-            std::thread::scope(|scope| -> Result<()> {
-                let mut handles = Vec::with_capacity(run_threads);
-                for bucket in buckets {
-                    if bucket.is_empty() {
-                        continue;
-                    }
-                    handles.push(scope.spawn(move || -> Result<()> {
-                        for items in bucket {
-                            run_shard(items, counts, ctx)?;
-                        }
-                        Ok(())
-                    }));
-                }
-                for h in handles {
-                    h.join().expect("shard apply thread panicked")?;
-                }
-                Ok(())
-            })?;
+            let mut counts = left_counts.clone();
+            counts.axpy(1.0, right_counts)?;
+            return self.apply_sharded(ctx, left, &counts, threads);
         }
-        Ok(())
+
+        let mut w_guard = self.weights.write().unwrap();
+        let mut opt_guard = self.opt.lock().unwrap();
+        let params: &mut ParamSet = &mut w_guard;
+        let OptState { m, v, last_step, field_sqnorms } = &mut *opt_guard;
+
+        let n_shards = self.plan.n_shards;
+        let fields_all: &[(usize, usize)] = &self.plan.fields;
+        let ranges = &self.plan.row_ranges;
+        let mut work: Vec<Vec<WorkItem<'_>>> = (0..n_shards).map(|_| Vec::new()).collect();
+        let iter = self
+            .spec
+            .iter()
+            .zip(self.plan.assignments.iter())
+            .zip(params.tensors.iter_mut())
+            .zip(m.tensors.iter_mut())
+            .zip(v.tensors.iter_mut())
+            .zip(left.iter_mut())
+            .zip(right.iter())
+            .zip(last_step.iter_mut())
+            .zip(field_sqnorms.iter_mut());
+        for ((((((((entry, assign), w_t), m_t), v_t), lg), rg), last), sq) in iter {
+            match assign {
+                Assignment::Whole(s) => {
+                    // dense params are small: merge on the leader, then
+                    // hand the shard the merged tensor as usual
+                    lg.axpy(1.0, rg)?;
+                    let GradTensor::Dense(g_t) = lg else {
+                        bail!("sparse gradient for dense-group param {}", entry.name)
+                    };
+                    work[*s].push(WorkItem::DenseTensor {
+                        w: w_t.as_f32_mut()?,
+                        m: m_t.as_f32_mut()?,
+                        v: v_t.as_f32_mut()?,
+                        g: g_t.as_f32_mut()?,
+                        lr: ctx.lr_dense,
+                    });
+                }
+                Assignment::Rows => {
+                    let (GradTensor::Sparse(ls), GradTensor::Sparse(rs)) = (&*lg, rg) else {
+                        bail!("dense vocab gradient on the split path for {}", entry.name)
+                    };
+                    let rows = entry.shape[0];
+                    let d = ls.d();
+                    ensure!(
+                        ls.n_rows() == rows && rs.n_rows() == rows && rs.d() == d,
+                        "grad rows mismatch for {}",
+                        entry.name
+                    );
+                    let is_embed = entry.group == "embed";
+                    let w_parts = split_rows(w_t.as_f32_mut()?, d, ranges);
+                    let m_parts = split_rows(m_t.as_f32_mut()?, d, ranges);
+                    let v_parts = split_rows(v_t.as_f32_mut()?, d, ranges);
+                    let last_parts =
+                        split_rows(last.as_mut().expect("vocab table has lazy state"), 1, ranges);
+                    let sq_parts: Vec<Option<&mut [f64]>> = match (is_embed, sq) {
+                        (true, Some(sq)) => {
+                            split_by_cuts(sq, &self.plan.field_cuts).into_iter().map(Some).collect()
+                        }
+                        _ => (0..n_shards).map(|_| None).collect(),
+                    };
+                    for (s, ((((wp, mp), vp), lp), sqp)) in w_parts
+                        .into_iter()
+                        .zip(m_parts)
+                        .zip(v_parts)
+                        .zip(last_parts)
+                        .zip(sq_parts)
+                        .enumerate()
+                    {
+                        let (lo, hi) = ranges[s];
+                        let (flo, fhi) = self.plan.field_span(s);
+                        let fields: &[(usize, usize)] =
+                            if is_embed { &fields_all[flo..fhi] } else { &[] };
+                        let (l_ids, l_vals) = ls.range_slice(lo, hi);
+                        let (r_ids, r_vals) = rs.range_slice(lo, hi);
+                        let (lc, rc) = if is_embed {
+                            (left_counts.range_slice(lo, hi), right_counts.range_slice(lo, hi))
+                        } else {
+                            ((&[][..], &[][..]), (&[][..], &[][..]))
+                        };
+                        work[s].push(WorkItem::VocabTable {
+                            base: lo,
+                            d,
+                            grad: TableGrad::Merge { l_ids, l_vals, r_ids, r_vals, lc, rc },
+                            w: wp,
+                            m: mp,
+                            v: vp,
+                            last: lp,
+                            fields,
+                            sqnorms: sqp,
+                            clip: is_embed,
+                            global_norm: None,
+                            lr: ctx.lr_embed,
+                        });
+                    }
+                }
+            }
+        }
+        run_shards(work, ctx, threads)
     }
 
     /// Write the full training checkpoint (see module docs for layout).
@@ -732,16 +848,38 @@ fn scan_block_body<R: Read + Seek>(r: &mut R) -> Result<Vec<CheckpointEntry>> {
     Ok(out)
 }
 
+/// A vocab-table work item's gradient payload.
+enum TableGrad<'a> {
+    /// A fully merged gradient range (the eager path): ids, mutable
+    /// values, and the whole-table counts + range end — the per-range
+    /// clip-count resolution runs inside the shard task
+    /// ([`counts_for_range`] in [`run_shard`]), off the leader's serial
+    /// prefix.
+    Ready { ids: &'a [u32], vals: &'a mut [f32], counts: &'a SparseRows, hi: usize },
+    /// The two halves of a deferred root merge, sliced to this shard's
+    /// row range; the shard thread performs the union merge itself (the
+    /// row-local arithmetic is bitwise identical to merging the whole
+    /// tables first — see [`merge_row_slices`]), so apply work on this
+    /// range starts without waiting for the whole-table merge tail.
+    Merge {
+        l_ids: &'a [u32],
+        l_vals: &'a [f32],
+        r_ids: &'a [u32],
+        r_vals: &'a [f32],
+        /// Count ranges of both halves (empty for un-clipped tables).
+        lc: (&'a [u32], &'a [f32]),
+        rc: (&'a [u32], &'a [f32]),
+    },
+}
+
 /// One shard's slice of the apply-stage work: disjoint mutable views of
 /// the parameters, moments and gradients it owns.
 enum WorkItem<'a> {
     /// A row range of a vocab-shaped table (embed/wide).
     VocabTable {
         base: usize,
-        rows: usize,
         d: usize,
-        ids: &'a [u32],
-        gvals: &'a mut [f32],
+        grad: TableGrad<'a>,
         w: &'a mut [f32],
         m: &'a mut [f32],
         v: &'a mut [f32],
@@ -765,9 +903,111 @@ enum WorkItem<'a> {
     },
 }
 
-/// Execute one shard's items: clip → lazy L2 → Adam, identical math to
+/// Run the per-shard work — serially, or bucketed round-robin over at
+/// most `threads` scoped threads (shards can outnumber cores).
+fn run_shards(work: Vec<Vec<WorkItem<'_>>>, ctx: &ApplyCtx, threads: usize) -> Result<()> {
+    let n_shards = work.len();
+    let run_threads = threads.min(n_shards).max(1);
+    if run_threads <= 1 {
+        for items in work {
+            run_shard(items, ctx)?;
+        }
+    } else {
+        let mut buckets: Vec<Vec<Vec<WorkItem<'_>>>> =
+            (0..run_threads).map(|_| Vec::new()).collect();
+        for (s, items) in work.into_iter().enumerate() {
+            if !items.is_empty() {
+                buckets[s % run_threads].push(items);
+            }
+        }
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(run_threads);
+            for bucket in buckets {
+                if bucket.is_empty() {
+                    continue;
+                }
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for items in bucket {
+                        run_shard(items, ctx)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().expect("shard apply thread panicked")?;
+            }
+            Ok(())
+        })?;
+    }
+    Ok(())
+}
+
+/// The per-range `clip → lazy L2 → lazy Adam` core, identical math to
 /// the serial oracle (`ReferenceEngine::apply`) on each slice.
-fn run_shard(items: Vec<WorkItem<'_>>, counts: &SparseRows, ctx: &ApplyCtx) -> Result<()> {
+#[allow(clippy::too_many_arguments)]
+fn apply_table_range(
+    ctx: &ApplyCtx,
+    base: usize,
+    d: usize,
+    ids: &[u32],
+    gvals: &mut [f32],
+    cnt: &[f32],
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    last: &mut [u32],
+    fields: &[(usize, usize)],
+    mut sqnorms: Option<&mut [f64]>,
+    clip: bool,
+    global_norm: Option<f32>,
+    lr: f32,
+) {
+    if clip {
+        clip_embedding_grads_range(
+            ctx.clip,
+            ids,
+            gvals,
+            d,
+            w,
+            base,
+            cnt,
+            fields,
+            sqnorms.as_deref(),
+            global_norm,
+            &ctx.clip_params,
+        );
+    }
+    // lazy L2: regularize touched rows only (serial-oracle semantics
+    // for sparse payloads)
+    for (k, &id) in ids.iter().enumerate() {
+        let lo = (id as usize - base) * d;
+        for j in 0..d {
+            gvals[k * d + j] += ctx.l2_embed * w[lo + j];
+        }
+    }
+    // maintained field norms: retire the touched rows' old mass,
+    // update, then add the new mass back. Only AdaField reads these
+    // (the clip mode is fixed per engine, and a checkpoint load
+    // recomputes from the weights), so other modes skip the two extra
+    // O(touched·d) passes.
+    let track_norms = ctx.clip == ClipMode::AdaField;
+    if track_norms {
+        if let Some(sq) = sqnorms.as_deref_mut() {
+            update_field_sqnorms(sq, fields, ids, w, base, d, -1.0);
+        }
+    }
+    lazy_step_rows(&ctx.adam, w, m, v, last, ids, gvals, d, lr, ctx.step, base);
+    if track_norms {
+        if let Some(sq) = sqnorms.as_deref_mut() {
+            update_field_sqnorms(sq, fields, ids, w, base, d, 1.0);
+        }
+    }
+}
+
+/// Execute one shard's items. For [`TableGrad::Merge`] payloads the
+/// shard performs its slice of the deferred root merge first — this is
+/// where the reduction's final merge overlaps the optimizer.
+fn run_shard(items: Vec<WorkItem<'_>>, ctx: &ApplyCtx) -> Result<()> {
     let adam = Adam::new(ctx.adam);
     for item in items {
         match item {
@@ -776,65 +1016,60 @@ fn run_shard(items: Vec<WorkItem<'_>>, counts: &SparseRows, ctx: &ApplyCtx) -> R
             }
             WorkItem::VocabTable {
                 base,
-                rows,
                 d,
-                ids,
-                gvals,
+                grad,
                 w,
                 m,
                 v,
                 last,
                 fields,
-                mut sqnorms,
+                sqnorms,
                 clip,
                 global_norm,
                 lr,
-            } => {
-                if ids.is_empty() {
-                    continue;
-                }
-                if clip {
-                    let cnt = counts_for_range(counts, ids, base, base + rows);
-                    clip_embedding_grads_range(
-                        ctx.clip,
-                        ids,
-                        gvals,
-                        d,
-                        w,
-                        base,
-                        &cnt,
-                        fields,
-                        sqnorms.as_deref(),
-                        global_norm,
-                        &ctx.clip_params,
+            } => match grad {
+                TableGrad::Ready { ids, vals, counts, hi } => {
+                    if ids.is_empty() {
+                        continue;
+                    }
+                    let cnt: Cow<'_, [f32]> = if clip {
+                        counts_for_range(counts, ids, base, hi)
+                    } else {
+                        Cow::Borrowed(&[][..])
+                    };
+                    apply_table_range(
+                        ctx, base, d, ids, vals, &cnt, w, m, v, last, fields, sqnorms,
+                        clip, global_norm, lr,
                     );
                 }
-                // lazy L2: regularize touched rows only (serial-oracle
-                // semantics for sparse payloads)
-                for (k, &id) in ids.iter().enumerate() {
-                    let lo = (id as usize - base) * d;
-                    for j in 0..d {
-                        gvals[k * d + j] += ctx.l2_embed * w[lo + j];
+                TableGrad::Merge { l_ids, l_vals, r_ids, r_vals, lc, rc } => {
+                    let (ids, mut vals) = merge_row_slices(l_ids, l_vals, r_ids, r_vals, d);
+                    if ids.is_empty() {
+                        continue;
                     }
+                    let cnt: Vec<f32> = if clip {
+                        let (cids, cvals) = merge_row_slices(lc.0, lc.1, rc.0, rc.1, 1);
+                        if cids == ids {
+                            cvals
+                        } else {
+                            // counts support differs from the grad's
+                            // (never on the trainer path): align by lookup
+                            ids.iter()
+                                .map(|id| {
+                                    cids.binary_search(id)
+                                        .map_or(0.0, |k| cvals[k])
+                                })
+                                .collect()
+                        }
+                    } else {
+                        Vec::new()
+                    };
+                    apply_table_range(
+                        ctx, base, d, &ids, &mut vals, &cnt, w, m, v, last, fields,
+                        sqnorms, clip, global_norm, lr,
+                    );
                 }
-                // maintained field norms: retire the touched rows' old
-                // mass, update, then add the new mass back. Only AdaField
-                // reads these (the clip mode is fixed per engine, and a
-                // checkpoint load recomputes from the weights), so other
-                // modes skip the two extra O(touched·d) passes.
-                let track_norms = ctx.clip == ClipMode::AdaField;
-                if track_norms {
-                    if let Some(sq) = sqnorms.as_deref_mut() {
-                        update_field_sqnorms(sq, fields, ids, w, base, d, -1.0);
-                    }
-                }
-                lazy_step_rows(&ctx.adam, w, m, v, last, ids, gvals, d, lr, ctx.step, base);
-                if track_norms {
-                    if let Some(sq) = sqnorms.as_deref_mut() {
-                        update_field_sqnorms(sq, fields, ids, w, base, d, 1.0);
-                    }
-                }
-            }
+            },
         }
     }
     Ok(())
@@ -1134,6 +1369,53 @@ mod tests {
                 "field {fi}: maintained {} vs fresh {fresh}",
                 maintained[fi]
             );
+        }
+    }
+
+    /// The deferred-root-merge apply (merge the two reduction halves per
+    /// shard row range inside the shard task) must be bitwise identical
+    /// to eagerly merging the halves and applying the total — for every
+    /// clip mode (Global exercises the fallback) and shard count.
+    #[test]
+    fn apply_sharded_pair_matches_eager_merge_all_modes() {
+        let schema = test_schema();
+        let d = 4;
+        let spec = test_spec(&schema, d);
+        for clip in ClipMode::ALL {
+            for shards in [1usize, 2, 3] {
+                let init = init_params(&spec, &InitConfig { seed: 17, embed_sigma: 0.02 });
+                let eager = ParamStore::new(schema.clone(), init.clone(), shards).unwrap();
+                let pair = ParamStore::new(schema.clone(), init, shards).unwrap();
+                for t in 1..=4u32 {
+                    // two halves with overlapping + disjoint touched ids
+                    let (gl, cl) = random_grads(&spec, &schema, 700 + t as u64);
+                    let (gr, cr) = random_grads(&spec, &schema, 900 + t as u64);
+
+                    // eager: merge halves first (the TreeReducer root
+                    // merge), then the normal sharded apply
+                    let mut merged = gl.clone();
+                    for (a, b) in merged.iter_mut().zip(&gr) {
+                        a.axpy(1.0, b).unwrap();
+                    }
+                    let mut counts = cl.clone();
+                    counts.axpy(1.0, &cr).unwrap();
+                    eager.apply_sharded(&ctx(clip, t), &mut merged, &counts, shards).unwrap();
+
+                    // pair: merge happens inside the shard tasks
+                    let mut left = gl;
+                    pair.apply_sharded_pair(&ctx(clip, t), &mut left, gr, &cl, &cr, shards)
+                        .unwrap();
+                }
+                let a = eager.snapshot();
+                let b = pair.snapshot();
+                for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+                    assert_eq!(ta, tb, "{clip}/shards={shards}: param[{i}] diverged");
+                }
+                let (ma, va) = eager.moments();
+                let (mb, vb) = pair.moments();
+                assert_eq!(ma.tensors, mb.tensors, "{clip}/shards={shards}: m moments");
+                assert_eq!(va.tensors, vb.tensors, "{clip}/shards={shards}: v moments");
+            }
         }
     }
 

@@ -1,8 +1,19 @@
 //! Differentiable building blocks with explicit forward caches and
 //! hand-derived backward passes (twins of `python/compile/models/common.py`
 //! and the Pallas kernels' math).
+//!
+//! Two tiers, mirroring `linalg`:
+//!
+//! * The original allocating functions (`embed_fwd`, `dense_fwd`, …) are
+//!   kept as the simple reference forms and as oracles for the tests.
+//! * The `_into` / `_strided` variants are the hot-path forms: they
+//!   write into caller-owned [`super::Scratch`] buffers, fuse the
+//!   embedding gather with the `x0` concat ([`embed_concat_fwd`]), and
+//!   read/write the embedding block *in place inside `x0`* (stride
+//!   `d0`), so the model forward/backward never materializes a separate
+//!   `[b, F·d]` embeds tensor.
 
-use super::linalg::{colsum, matmul, matmul_nt, matmul_tn};
+use super::linalg::{colsum, matmul, matmul_into, matmul_nt, matmul_tn};
 
 /// Embedding gather: `out[b, F, d] = table[ids[b, F]]`.
 pub fn embed_fwd(table: &[f32], ids: &[i32], b: usize, f: usize, d: usize) -> Vec<f32> {
@@ -39,6 +50,64 @@ pub fn embed_bwd_sparse(g: &[f32], ids: &[i32], touched: &[u32], d: usize) -> Ve
             .expect("batch id missing from touched list");
         let dst = &mut vals[k * d..(k + 1) * d];
         for (t, &gv) in dst.iter_mut().zip(&g[slot * d..(slot + 1) * d]) {
+            *t += gv;
+        }
+    }
+    vals
+}
+
+/// Fused gather + concat: one pass builds `x0[b, d0]` rows as
+/// `[table[ids[i, 0]] … table[ids[i, F-1]] | dense_x[i]]` — the
+/// embedding read and the deep-stream input concat the model used to do
+/// in two passes (gather into a `[b, F·d]` embeds buffer, then copy)
+/// collapse into a single write per row. `d0 = f·d + nd`.
+pub fn embed_concat_fwd(
+    table: &[f32],
+    ids: &[i32],
+    dense_x: &[f32],
+    b: usize,
+    f: usize,
+    d: usize,
+    nd: usize,
+    x0: &mut [f32],
+) {
+    let d0 = f * d + nd;
+    debug_assert_eq!(ids.len(), b * f);
+    debug_assert_eq!(dense_x.len(), b * nd);
+    debug_assert_eq!(x0.len(), b * d0);
+    for (i, row) in x0.chunks_exact_mut(d0).enumerate() {
+        for (j, &id) in ids[i * f..(i + 1) * f].iter().enumerate() {
+            row[j * d..(j + 1) * d]
+                .copy_from_slice(&table[id as usize * d..(id as usize + 1) * d]);
+        }
+        if nd > 0 {
+            row[f * d..].copy_from_slice(&dense_x[i * nd..(i + 1) * nd]);
+        }
+    }
+}
+
+/// Strided twin of [`embed_bwd_sparse`]: scatter-add the embedding block
+/// of each `dx0` row (columns `[0, f·d)` of a `[b, stride]` layout) into
+/// the packed rows of the sorted unique `touched` id list. Slot order is
+/// identical to the flat twin, so results are bitwise equal.
+pub fn embed_bwd_sparse_strided(
+    g: &[f32],
+    stride: usize,
+    ids: &[i32],
+    touched: &[u32],
+    f: usize,
+    d: usize,
+) -> Vec<f32> {
+    debug_assert!(stride >= f * d);
+    let mut vals = vec![0.0f32; touched.len() * d];
+    for (slot, &id) in ids.iter().enumerate() {
+        let (i, j) = (slot / f, slot % f);
+        let k = touched
+            .binary_search(&(id as u32))
+            .expect("batch id missing from touched list");
+        let src = &g[i * stride + j * d..i * stride + (j + 1) * d];
+        let dst = &mut vals[k * d..(k + 1) * d];
+        for (t, &gv) in dst.iter_mut().zip(src) {
             *t += gv;
         }
     }
@@ -91,6 +160,19 @@ pub fn wide_bwd_sparse(
     (dwide, dbias)
 }
 
+/// Write-into twin of [`wide_fwd`]: same per-row accumulation order, no
+/// allocation.
+pub fn wide_fwd_into(wide: &[f32], bias: f32, ids: &[i32], b: usize, f: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), b);
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut s = 0.0f32;
+        for &id in &ids[i * f..(i + 1) * f] {
+            s += wide[id as usize];
+        }
+        *o = bias + s;
+    }
+}
+
 /// FM second-order term (twin of the Pallas `fm2` kernel):
 /// `out[b] = 0.5 * sum_d((sum_f v)^2 - sum_f v^2)`. Returns the cached
 /// field-sum `[b, d]` used by the backward pass.
@@ -127,6 +209,72 @@ pub fn fm2_bwd(v: &[f32], sums: &[f32], dout: &[f32], b: usize, f: usize, d: usi
         }
     }
     dv
+}
+
+/// Strided, write-into twin of [`fm2_fwd`]: the embedding block lives in
+/// the first `f·d` columns of each `[b, stride]` row of `x` (i.e. inside
+/// `x0` directly, no separate embeds tensor). `out[b]`, `sums[b, d]` and
+/// the per-row square accumulator `sq[d]` are caller-owned scratch.
+/// Accumulation order matches [`fm2_fwd`] exactly (bitwise).
+#[allow(clippy::too_many_arguments)]
+pub fn fm2_fwd_strided(
+    x: &[f32],
+    stride: usize,
+    b: usize,
+    f: usize,
+    d: usize,
+    out: &mut [f32],
+    sums: &mut [f32],
+    sq: &mut [f32],
+) {
+    debug_assert!(stride >= f * d);
+    debug_assert_eq!(out.len(), b);
+    debug_assert_eq!(sums.len(), b * d);
+    debug_assert_eq!(sq.len(), d);
+    for i in 0..b {
+        let base = i * stride;
+        let srow = &mut sums[i * d..(i + 1) * d];
+        srow.fill(0.0);
+        sq.fill(0.0);
+        for fj in 0..f {
+            for t in 0..d {
+                let v = x[base + fj * d + t];
+                srow[t] += v;
+                sq[t] += v * v;
+            }
+        }
+        out[i] = 0.5 * srow.iter().zip(sq.iter()).map(|(s, q)| s * s - q).sum::<f32>();
+    }
+}
+
+/// Strided, *accumulating* twin of [`fm2_bwd`]: adds
+/// `(sum_f' v - v[b,f,:]) * dout[b]` into the embedding block of each
+/// `dv` row (`[b, dv_stride]` layout) — so the FM gradient lands
+/// directly in `dx0` without a separate dembeds buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn fm2_bwd_strided_acc(
+    x: &[f32],
+    x_stride: usize,
+    sums: &[f32],
+    dout: &[f32],
+    b: usize,
+    f: usize,
+    d: usize,
+    dv: &mut [f32],
+    dv_stride: usize,
+) {
+    debug_assert!(x_stride >= f * d && dv_stride >= f * d);
+    for i in 0..b {
+        let srow = &sums[i * d..(i + 1) * d];
+        let ct = dout[i];
+        for fj in 0..f {
+            let xb = i * x_stride + fj * d;
+            let db = i * dv_stride + fj * d;
+            for t in 0..d {
+                dv[db + t] += (srow[t] - x[xb + t]) * ct;
+            }
+        }
+    }
 }
 
 /// One dense layer cache: input and pre-activation.
@@ -190,6 +338,94 @@ pub fn dense_infer(
     y
 }
 
+/// Write-into twin of [`dense_fwd`]: affine into `pre` (kept for the
+/// backward relu mask), activated copy into `out`. Same op order as the
+/// allocating form, so results are bitwise equal.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_fwd_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    m: usize,
+    n: usize,
+    relu: bool,
+    pre: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(pre.len(), b * n);
+    debug_assert_eq!(out.len(), b * n);
+    matmul_into(x, w, pre, b, m, n);
+    for row in pre.chunks_exact_mut(n) {
+        for (yv, &bv) in row.iter_mut().zip(bias) {
+            *yv += bv;
+        }
+    }
+    out.copy_from_slice(pre);
+    if relu {
+        for yv in out.iter_mut() {
+            if *yv < 0.0 {
+                *yv = 0.0;
+            }
+        }
+    }
+}
+
+/// Write-into twin of [`dense_infer`]: no pre-activation kept.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_infer_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    m: usize,
+    n: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), b * n);
+    matmul_into(x, w, out, b, m, n);
+    for row in out.chunks_exact_mut(n) {
+        for (yv, &bv) in row.iter_mut().zip(bias) {
+            *yv += bv;
+        }
+    }
+    if relu {
+        for yv in out.iter_mut() {
+            if *yv < 0.0 {
+                *yv = 0.0;
+            }
+        }
+    }
+}
+
+/// In-place ReLU backward mask: zero `dy` wherever the cached
+/// pre-activation was non-positive.
+pub fn relu_mask(dy: &mut [f32], pre: &[f32]) {
+    debug_assert_eq!(dy.len(), pre.len());
+    for (gv, &p) in dy.iter_mut().zip(pre) {
+        if p <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Write-into twin of [`bce_fwd_bwd`]: the gradient lands in
+/// caller-owned `dlogits`, the mean loss is returned.
+pub fn bce_fwd_bwd_into(logits: &[f32], y: &[f32], dlogits: &mut [f32]) -> f32 {
+    let b = logits.len();
+    debug_assert_eq!(dlogits.len(), b);
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let z = logits[i] as f64;
+        let yi = y[i] as f64;
+        loss += z.max(0.0) - z * yi + (-z.abs()).exp().ln_1p();
+        let p = 1.0 / (1.0 + (-z).exp());
+        dlogits[i] = ((p - yi) / b as f64) as f32;
+    }
+    (loss / b as f64) as f32
+}
+
 /// Backward of `dense_fwd`. Returns `(dx, dw, dbias)`.
 pub fn dense_bwd(
     dy: &[f32],
@@ -217,17 +453,9 @@ pub fn dense_bwd(
 /// Stable BCE-with-logits mean loss and its gradient
 /// `dlogit = (sigmoid(z) - y) / b`.
 pub fn bce_fwd_bwd(logits: &[f32], y: &[f32]) -> (f32, Vec<f32>) {
-    let b = logits.len();
-    let mut loss = 0.0f64;
-    let mut dlogits = vec![0.0f32; b];
-    for i in 0..b {
-        let z = logits[i] as f64;
-        let yi = y[i] as f64;
-        loss += z.max(0.0) - z * yi + (-z.abs()).exp().ln_1p();
-        let p = 1.0 / (1.0 + (-z).exp());
-        dlogits[i] = ((p - yi) / b as f64) as f32;
-    }
-    ((loss / b as f64) as f32, dlogits)
+    let mut dlogits = vec![0.0f32; logits.len()];
+    let loss = bce_fwd_bwd_into(logits, y, &mut dlogits);
+    (loss, dlogits)
 }
 
 #[cfg(test)]
@@ -351,6 +579,109 @@ mod tests {
             let yi = dense_infer(&x, &w, &bias, b, m, n, relu);
             assert_eq!(y, yi, "relu={relu}");
         }
+    }
+
+    #[test]
+    fn fused_concat_matches_gather_plus_copy() {
+        let (b, f, d, nd) = (3usize, 2usize, 2usize, 2usize);
+        let d0 = f * d + nd;
+        let table: Vec<f32> = (0..10).map(|i| i as f32 * 0.5).collect(); // V=5, d=2
+        let ids = [0i32, 4, 2, 1, 3, 3];
+        let dense: Vec<f32> = (0..b * nd).map(|i| -(i as f32)).collect();
+        // oracle: gather then concat
+        let embeds = embed_fwd(&table, &ids, b, f, d);
+        let mut want = vec![0.0f32; b * d0];
+        for i in 0..b {
+            want[i * d0..i * d0 + f * d].copy_from_slice(&embeds[i * f * d..(i + 1) * f * d]);
+            want[i * d0 + f * d..(i + 1) * d0].copy_from_slice(&dense[i * nd..(i + 1) * nd]);
+        }
+        let mut x0 = vec![9.0f32; b * d0];
+        embed_concat_fwd(&table, &ids, &dense, b, f, d, nd, &mut x0);
+        assert_eq!(x0, want);
+        // no dense features
+        let mut x0nd = vec![9.0f32; b * f * d];
+        embed_concat_fwd(&table, &ids, &[], b, f, d, 0, &mut x0nd);
+        assert_eq!(x0nd, embeds);
+    }
+
+    #[test]
+    fn strided_fm2_and_scatter_match_flat_oracles() {
+        let (b, f, d, nd) = (4usize, 3usize, 2usize, 1usize);
+        let d0 = f * d + nd;
+        let mut x0 = vec![0.0f32; b * d0];
+        let v: Vec<f32> = (0..b * f * d).map(|i| (i as f32) * 0.13 - 0.7).collect();
+        for i in 0..b {
+            x0[i * d0..i * d0 + f * d].copy_from_slice(&v[i * f * d..(i + 1) * f * d]);
+            x0[i * d0 + f * d] = 99.0; // dense column must be ignored
+        }
+        let (out_o, sums_o) = fm2_fwd(&v, b, f, d);
+        let mut out = vec![0.0f32; b];
+        let mut sums = vec![0.0f32; b * d];
+        let mut sq = vec![0.0f32; d];
+        fm2_fwd_strided(&x0, d0, b, f, d, &mut out, &mut sums, &mut sq);
+        assert_eq!(out, out_o);
+        assert_eq!(sums, sums_o);
+
+        let dout = [1.0f32, -2.0, 0.5, 3.0];
+        let dv_o = fm2_bwd(&v, &sums_o, &dout, b, f, d);
+        let mut dx0 = vec![0.25f32; b * d0];
+        fm2_bwd_strided_acc(&x0, d0, &sums, &dout, b, f, d, &mut dx0, d0);
+        for i in 0..b {
+            for t in 0..f * d {
+                assert_eq!(dx0[i * d0 + t], 0.25 + dv_o[i * f * d + t], "i={i} t={t}");
+            }
+            assert_eq!(dx0[i * d0 + f * d], 0.25, "dense column must be untouched");
+        }
+
+        // strided sparse scatter == flat sparse scatter on the embed block
+        let ids = [0i32, 2, 1, 1, 0, 2, 2, 0, 1, 0, 1, 2];
+        let touched = [0u32, 1, 2];
+        let flat = embed_bwd_sparse(&dv_o, &ids, &touched, d);
+        // build a strided g holding dv in the embed block
+        let mut g = vec![7.0f32; b * d0];
+        for i in 0..b {
+            g[i * d0..i * d0 + f * d].copy_from_slice(&dv_o[i * f * d..(i + 1) * f * d]);
+        }
+        let strided = embed_bwd_sparse_strided(&g, d0, &ids, &touched, f, d);
+        assert_eq!(strided, flat);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let (b, m, n) = (3usize, 5usize, 4usize);
+        let x: Vec<f32> = (0..b * m).map(|i| (i as f32) * 0.11 - 0.8).collect();
+        let w: Vec<f32> = (0..m * n).map(|i| (i as f32) * 0.07 - 0.6).collect();
+        let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.1 - 0.2).collect();
+        for relu in [false, true] {
+            let (y, cache) = dense_fwd(&x, &w, &bias, b, m, n, relu);
+            let mut pre = vec![1.0f32; b * n];
+            let mut out = vec![2.0f32; b * n];
+            dense_fwd_into(&x, &w, &bias, b, m, n, relu, &mut pre, &mut out);
+            assert_eq!(out, y, "relu={relu}");
+            assert_eq!(pre, cache.pre, "relu={relu}");
+            let mut out2 = vec![3.0f32; b * n];
+            dense_infer_into(&x, &w, &bias, b, m, n, relu, &mut out2);
+            assert_eq!(out2, y, "infer relu={relu}");
+        }
+        // wide into
+        let wide = [0.1f32, 0.2, 0.3];
+        let ids = [0i32, 2, 1, 1];
+        let want = wide_fwd(&wide, 1.0, &ids, 2, 2);
+        let mut got = vec![0.0f32; 2];
+        wide_fwd_into(&wide, 1.0, &ids, 2, 2, &mut got);
+        assert_eq!(got, want);
+        // bce into
+        let logits = [0.3f32, -1.2, 2.0];
+        let ys = [1.0f32, 0.0, 1.0];
+        let (l1, d1) = bce_fwd_bwd(&logits, &ys);
+        let mut d2 = vec![0.0f32; 3];
+        let l2 = bce_fwd_bwd_into(&logits, &ys, &mut d2);
+        assert_eq!(l1, l2);
+        assert_eq!(d1, d2);
+        // relu mask
+        let mut dy = vec![1.0f32, 2.0, 3.0, 4.0];
+        relu_mask(&mut dy, &[0.5, -0.1, 0.0, 2.0]);
+        assert_eq!(dy, vec![1.0, 0.0, 0.0, 4.0]);
     }
 
     #[test]

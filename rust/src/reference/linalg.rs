@@ -1,99 +1,294 @@
-//! Row-major matrix helpers for the reference engine.
+//! Row-major matrix kernels for the reference engine's hot path.
 //!
-//! Deliberately simple loops: the reference engine is a correctness
-//! oracle, not the hot path (the AOT artifacts are). The matmul uses the
-//! k-in-the-middle loop order so the inner loop is contiguous in both
-//! operands — good enough to keep the parity tests fast.
+//! Two tiers live here:
+//!
+//! * The **vectorized kernels** (top level) — blocked, unit-stride loops
+//!   whose inner bodies are written so the compiler auto-vectorizes them
+//!   (row-[`axpy`] accumulation for the `i-k-j` matmuls, an 8-lane
+//!   [`dot`] for the transposed products). Every kernel has a
+//!   write-into-output `_into` variant so the per-step compute path can
+//!   run on reusable [`super::Scratch`] buffers with zero allocation;
+//!   the allocating names are thin wrappers kept for tests and cold
+//!   callers.
+//! * The **naive oracles** ([`naive`]) — the original deliberately
+//!   simple loops, kept verbatim so the property tests (and
+//!   `benches/kernels.rs`) can pin the vectorized kernels against a
+//!   known-good reference and report the speedup.
+//!
+//! Determinism notes: [`matmul_into`] and [`matmul_tn_into`] accumulate
+//! each output element in the same index order as the naive loops, so
+//! they are bitwise identical to the oracles. [`dot`] (and therefore
+//! [`matmul_nt_into`] / [`rowdot_into`]) sums through 8 fixed lanes, so
+//! it is deterministic run-to-run but differs from the serial sum by
+//! normal f32 association (≤1e-6 relative on test-scale data — the
+//! property tests pin this). All call sites use the same kernels, so
+//! train-vs-serve and threaded-vs-sequential parity are unaffected.
 
-/// `y[b, n] = x[b, m] @ w[m, n]` (accumulates into zeroed output).
-pub fn matmul(x: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), b * m);
-    debug_assert_eq!(w.len(), m * n);
-    let mut y = vec![0.0f32; b * n];
-    for i in 0..b {
-        let xrow = &x[i * m..(i + 1) * m];
-        let yrow = &mut y[i * n..(i + 1) * n];
-        for (k, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[k * n..(k + 1) * n];
-            for (yj, &wj) in yrow.iter_mut().zip(wrow) {
-                *yj += xv * wj;
-            }
+/// Row blocking factor for the `i-k-j` matmul: the weight rows touched
+/// by a block of samples stay resident across the block.
+const BLOCK: usize = 32;
+
+/// `y += a * x`, element-wise. The body is chunked by 8 so the compiler
+/// emits FMA vector code; per-element arithmetic is unchanged (each
+/// output lane sees exactly one fused `y[i] + a * x[i]` per call), so
+/// this is bitwise identical to the scalar loop.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    let n8 = y.len() - y.len() % 8;
+    let (y8, y_tail) = y.split_at_mut(n8);
+    let (x8, x_tail) = x.split_at(n8);
+    for (yc, xc) in y8.chunks_exact_mut(8).zip(x8.chunks_exact(8)) {
+        for i in 0..8 {
+            yc[i] += a * xc[i];
         }
     }
+    for (yv, &xv) in y_tail.iter_mut().zip(x_tail) {
+        *yv += a * xv;
+    }
+}
+
+/// Dot product over 8 fixed accumulator lanes (vectorizable, and
+/// deterministic: the lane-combine order never changes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() - a.len() % 8;
+    let mut lanes = [0.0f32; 8];
+    for (ac, bc) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
+        for i in 0..8 {
+            lanes[i] += ac[i] * bc[i];
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    for (&x, &y) in a[n8..].iter().zip(&b[n8..]) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y[b, n] = x[b, m] @ w[m, n]`, written into `y`.
+///
+/// Loop order is `i-k-j` (sample, contraction, output) with a row-axpy
+/// inner loop — both operand reads are unit-stride — and samples are
+/// blocked so each block re-reads the weight rows while they are hot.
+/// Accumulation order per output element is `k`-ascending, identical to
+/// [`naive::matmul`] (bitwise).
+pub fn matmul_into(x: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(y.len(), b * n);
+    y.fill(0.0);
+    let mut i0 = 0usize;
+    while i0 < b {
+        let i1 = (i0 + BLOCK).min(b);
+        for k in 0..m {
+            let wrow = &w[k * n..(k + 1) * n];
+            for i in i0..i1 {
+                let xv = x[i * m + k];
+                if xv != 0.0 {
+                    axpy(&mut y[i * n..(i + 1) * n], wrow, xv);
+                }
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// Allocating wrapper over [`matmul_into`].
+pub fn matmul(x: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; b * n];
+    matmul_into(x, w, &mut y, b, m, n);
     y
 }
 
-/// `y[b, m] = g[b, n] @ w^T` where `w` is `[m, n]`.
-pub fn matmul_nt(g: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+/// `y[b, m] = g[b, n] @ w^T` where `w` is `[m, n]`, written into `y`.
+/// Each output is a unit-stride [`dot`] of a `g` row with a `w` row.
+pub fn matmul_nt_into(g: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
     debug_assert_eq!(g.len(), b * n);
     debug_assert_eq!(w.len(), m * n);
-    let mut y = vec![0.0f32; b * m];
+    debug_assert_eq!(y.len(), b * m);
     for i in 0..b {
         let grow = &g[i * n..(i + 1) * n];
         let yrow = &mut y[i * m..(i + 1) * m];
-        for k in 0..m {
-            let wrow = &w[k * n..(k + 1) * n];
-            let mut acc = 0.0f32;
-            for (gv, wv) in grow.iter().zip(wrow) {
-                acc += gv * wv;
-            }
-            yrow[k] = acc;
+        for (k, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot(grow, &w[k * n..(k + 1) * n]);
         }
     }
+}
+
+/// Allocating wrapper over [`matmul_nt_into`].
+pub fn matmul_nt(g: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; b * m];
+    matmul_nt_into(g, w, &mut y, b, m, n);
     y
 }
 
-/// `dw[m, n] = x^T[m, b] @ g[b, n]` where `x` is `[b, m]`.
-pub fn matmul_tn(x: &[f32], g: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+/// `dw[m, n] = x^T[m, b] @ g[b, n]` where `x` is `[b, m]`, written into
+/// `dw`. Output rows are blocked so a block of `dw` stays hot across the
+/// whole batch sweep; per-element accumulation stays `i`-ascending
+/// (bitwise identical to [`naive::matmul_tn`]).
+pub fn matmul_tn_into(x: &[f32], g: &[f32], dw: &mut [f32], b: usize, m: usize, n: usize) {
     debug_assert_eq!(x.len(), b * m);
     debug_assert_eq!(g.len(), b * n);
-    let mut dw = vec![0.0f32; m * n];
-    for i in 0..b {
-        let xrow = &x[i * m..(i + 1) * m];
-        let grow = &g[i * n..(i + 1) * n];
-        for (k, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let drow = &mut dw[k * n..(k + 1) * n];
-            for (dv, &gv) in drow.iter_mut().zip(grow) {
-                *dv += xv * gv;
+    debug_assert_eq!(dw.len(), m * n);
+    dw.fill(0.0);
+    let mut k0 = 0usize;
+    while k0 < m {
+        let k1 = (k0 + BLOCK).min(m);
+        for i in 0..b {
+            let grow = &g[i * n..(i + 1) * n];
+            for k in k0..k1 {
+                let xv = x[i * m + k];
+                if xv != 0.0 {
+                    axpy(&mut dw[k * n..(k + 1) * n], grow, xv);
+                }
             }
         }
+        k0 = k1;
     }
+}
+
+/// Allocating wrapper over [`matmul_tn_into`].
+pub fn matmul_tn(x: &[f32], g: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut dw = vec![0.0f32; m * n];
+    matmul_tn_into(x, g, &mut dw, b, m, n);
     dw
 }
 
-/// Column sums: `db[n] = sum_b g[b, n]`.
+/// Column sums `db[n] = sum_b g[b, n]`, written into `db`.
+pub fn colsum_into(g: &[f32], db: &mut [f32], b: usize, n: usize) {
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(db.len(), n);
+    db.fill(0.0);
+    for i in 0..b {
+        axpy(db, &g[i * n..(i + 1) * n], 1.0);
+    }
+}
+
+/// Allocating wrapper over [`colsum_into`].
 pub fn colsum(g: &[f32], b: usize, n: usize) -> Vec<f32> {
     let mut db = vec![0.0f32; n];
-    for i in 0..b {
-        for (dv, &gv) in db.iter_mut().zip(&g[i * n..(i + 1) * n]) {
-            *dv += gv;
-        }
-    }
+    colsum_into(g, &mut db, b, n);
     db
 }
 
-/// Per-row dot products of two `[b, n]` matrices -> `[b]`.
+/// Per-row dot products of two `[b, n]` matrices, written into `out[b]`.
+pub fn rowdot_into(a: &[f32], c: &[f32], out: &mut [f32], b: usize, n: usize) {
+    debug_assert_eq!(a.len(), b * n);
+    debug_assert_eq!(c.len(), b * n);
+    debug_assert_eq!(out.len(), b);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(&a[i * n..(i + 1) * n], &c[i * n..(i + 1) * n]);
+    }
+}
+
+/// Allocating wrapper over [`rowdot_into`].
 pub fn rowdot(a: &[f32], c: &[f32], b: usize, n: usize) -> Vec<f32> {
-    (0..b)
-        .map(|i| {
-            a[i * n..(i + 1) * n]
-                .iter()
-                .zip(&c[i * n..(i + 1) * n])
-                .map(|(x, y)| x * y)
-                .sum()
-        })
-        .collect()
+    let mut out = vec![0.0f32; b];
+    rowdot_into(a, c, &mut out, b, n);
+    out
+}
+
+/// The original scalar kernels, kept byte-for-byte as correctness
+/// oracles for the vectorized tier. Used by the `linalg` property tests
+/// and `benches/kernels.rs` (speedup reporting); not part of the compute
+/// path.
+pub mod naive {
+    /// `y[b, n] = x[b, m] @ w[m, n]` (accumulates into zeroed output).
+    pub fn matmul(x: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * m);
+        debug_assert_eq!(w.len(), m * n);
+        let mut y = vec![0.0f32; b * n];
+        for i in 0..b {
+            let xrow = &x[i * m..(i + 1) * m];
+            let yrow = &mut y[i * n..(i + 1) * n];
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[k * n..(k + 1) * n];
+                for (yj, &wj) in yrow.iter_mut().zip(wrow) {
+                    *yj += xv * wj;
+                }
+            }
+        }
+        y
+    }
+
+    /// `y[b, m] = g[b, n] @ w^T` where `w` is `[m, n]`.
+    pub fn matmul_nt(g: &[f32], w: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(g.len(), b * n);
+        debug_assert_eq!(w.len(), m * n);
+        let mut y = vec![0.0f32; b * m];
+        for i in 0..b {
+            let grow = &g[i * n..(i + 1) * n];
+            let yrow = &mut y[i * m..(i + 1) * m];
+            for k in 0..m {
+                let wrow = &w[k * n..(k + 1) * n];
+                let mut acc = 0.0f32;
+                for (gv, wv) in grow.iter().zip(wrow) {
+                    acc += gv * wv;
+                }
+                yrow[k] = acc;
+            }
+        }
+        y
+    }
+
+    /// `dw[m, n] = x^T[m, b] @ g[b, n]` where `x` is `[b, m]`.
+    pub fn matmul_tn(x: &[f32], g: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * m);
+        debug_assert_eq!(g.len(), b * n);
+        let mut dw = vec![0.0f32; m * n];
+        for i in 0..b {
+            let xrow = &x[i * m..(i + 1) * m];
+            let grow = &g[i * n..(i + 1) * n];
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let drow = &mut dw[k * n..(k + 1) * n];
+                for (dv, &gv) in drow.iter_mut().zip(grow) {
+                    *dv += xv * gv;
+                }
+            }
+        }
+        dw
+    }
+
+    /// Column sums: `db[n] = sum_b g[b, n]`.
+    pub fn colsum(g: &[f32], b: usize, n: usize) -> Vec<f32> {
+        let mut db = vec![0.0f32; n];
+        for i in 0..b {
+            for (dv, &gv) in db.iter_mut().zip(&g[i * n..(i + 1) * n]) {
+                *dv += gv;
+            }
+        }
+        db
+    }
+
+    /// Per-row dot products of two `[b, n]` matrices -> `[b]`.
+    pub fn rowdot(a: &[f32], c: &[f32], b: usize, n: usize) -> Vec<f32> {
+        (0..b)
+            .map(|i| {
+                a[i * n..(i + 1) * n]
+                    .iter()
+                    .zip(&c[i * n..(i + 1) * n])
+                    .map(|(x, y)| x * y)
+                    .sum()
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn matmul_small_known() {
@@ -128,5 +323,105 @@ mod tests {
         let g = [1.0f32, 2.0, 3.0, 4.0];
         assert_eq!(colsum(&g, 2, 2), vec![4.0, 6.0]);
         assert_eq!(rowdot(&g, &g, 2, 2), vec![5.0, 25.0]);
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize, zeros: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if zeros && rng.bernoulli(0.2) {
+                    0.0
+                } else {
+                    rng.next_gaussian() as f32
+                }
+            })
+            .collect()
+    }
+
+    fn close(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let tol = 1e-6f32 * (1.0 + x.abs().max(y.abs()));
+            assert!((x - y).abs() <= tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// Property: every vectorized kernel matches its naive oracle within
+    /// 1e-6 relative over random shapes — including odd (non-multiple-
+    /// of-8 / non-multiple-of-block) dimensions and the empty batch.
+    #[test]
+    fn prop_vectorized_matches_naive_oracles() {
+        let mut rng = Rng::new(0x51AD);
+        for case in 0..200 {
+            let b = (rng.below(70)) as usize; // 0 included: empty batch
+            let m = 1 + rng.below(45) as usize;
+            let n = 1 + rng.below(37) as usize;
+            let x = rand_vec(&mut rng, b * m, true);
+            let w = rand_vec(&mut rng, m * n, false);
+            let g = rand_vec(&mut rng, b * n, true);
+
+            // matmul (bitwise: same per-element accumulation order)
+            assert_eq!(
+                matmul(&x, &w, b, m, n),
+                naive::matmul(&x, &w, b, m, n),
+                "case {case}: matmul ({b},{m},{n})"
+            );
+            // matmul_tn (bitwise for the same reason)
+            assert_eq!(
+                matmul_tn(&x, &g, b, m, n),
+                naive::matmul_tn(&x, &g, b, m, n),
+                "case {case}: matmul_tn ({b},{m},{n})"
+            );
+            // lane-summed kernels: 1e-6 relative
+            close(
+                &matmul_nt(&g, &w, b, m, n),
+                &naive::matmul_nt(&g, &w, b, m, n),
+                &format!("case {case}: matmul_nt ({b},{m},{n})"),
+            );
+            close(
+                &colsum(&g, b, n),
+                &naive::colsum(&g, b, n),
+                &format!("case {case}: colsum ({b},{n})"),
+            );
+            let a2 = rand_vec(&mut rng, b * n, false);
+            close(
+                &rowdot(&g, &a2, b, n),
+                &naive::rowdot(&g, &a2, b, n),
+                &format!("case {case}: rowdot ({b},{n})"),
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_and_dot_odd_lengths() {
+        let mut rng = Rng::new(7);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 65] {
+            let x = rand_vec(&mut rng, len, false);
+            let mut y = rand_vec(&mut rng, len, false);
+            let y0 = y.clone();
+            axpy(&mut y, &x, 0.5);
+            for i in 0..len {
+                assert_eq!(y[i], y0[i] + 0.5 * x[i], "axpy len {len} idx {i}");
+            }
+            let serial: f32 = x.iter().zip(&y0).map(|(a, b)| a * b).sum();
+            let d = dot(&x, &y0);
+            assert!((d - serial).abs() <= 1e-5 * (1.0 + serial.abs()), "dot len {len}");
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_output() {
+        // _into targets are reused scratch buffers: stale contents must
+        // not leak into results.
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let w = [5.0f32, 6.0, 7.0, 8.0];
+        let mut y = vec![99.0f32; 4];
+        matmul_into(&x, &w, &mut y, 2, 2, 2);
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+        let mut dw = vec![-3.0f32; 4];
+        matmul_tn_into(&x, &w, &mut dw, 2, 2, 2);
+        assert_eq!(dw, naive::matmul_tn(&x, &w, 2, 2, 2));
+        let mut db = vec![42.0f32; 2];
+        colsum_into(&w, &mut db, 2, 2);
+        assert_eq!(db, vec![12.0, 14.0]);
     }
 }

@@ -16,7 +16,9 @@
 pub mod layers;
 pub mod linalg;
 pub mod model;
+pub mod scratch;
 pub mod step;
 
 pub use model::{ModelKind, ReferenceModel};
+pub use scratch::Scratch;
 pub use step::{GradOutput, ReferenceEngine};

@@ -1,13 +1,27 @@
 //! The four CTR models: forward + hand-derived backward, positional
 //! parameter layout identical to `python/compile/models/*` specs.
+//!
+//! # Memory discipline (PR 5)
+//!
+//! Every intermediate of forward/backward/infer lives in a caller-owned
+//! [`Scratch`] arena: the embedding gather is fused with the deep-stream
+//! concat (`x0`'s first `F·d` columns *are* the embeds tensor — no
+//! separate `[b, F·d]` buffer exists), layer caches hold recycled
+//! buffers instead of fresh `Vec`s, and the only per-step heap
+//! allocations left on the gradient path are the escaping outputs
+//! themselves (the sparse/dense gradient payloads and the touched-id
+//! list) plus a few layer-count pointer spines. The
+//! `steady_state_grad_performs_no_scratch_allocation` test pins the
+//! arena at zero growth across steps.
 
 use std::str::FromStr;
 
 use anyhow::{bail, ensure, Result};
 
 use super::layers::*;
-use super::linalg::{colsum, matmul, matmul_nt, matmul_tn, rowdot};
-use crate::data::batcher::Batch;
+use super::linalg::{axpy, colsum, dot, matmul_into, matmul_nt_into, matmul_tn, rowdot_into};
+use super::scratch::Scratch;
+use crate::data::batcher::{touched_of, Batch};
 use crate::data::schema::Schema;
 use crate::model::params::ParamSet;
 use crate::tensor::{GradTensor, SparseRows, Tensor};
@@ -91,13 +105,38 @@ impl ReferenceModel {
         matches!(self.kind, ModelKind::DeepFm | ModelKind::WideDeep)
     }
 
-    /// Forward pass: logits `[b]`.
+    /// Forward pass: logits `[b]` (convenience form; allocates a
+    /// throwaway scratch arena — hot callers use
+    /// [`ReferenceModel::forward_scratch`]).
     pub fn forward(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
-        Ok(self.forward_cached(params, batch)?.0)
+        let mut scratch = Scratch::new();
+        self.forward_scratch(params, batch, &mut scratch)
+    }
+
+    /// Forward pass on a caller-owned scratch arena. The returned logits
+    /// buffer was taken from `scratch`; recycle it there when done to
+    /// keep the steady state allocation-free.
+    pub fn forward_scratch(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<f32>> {
+        let (logits, cache) = self.forward_on(
+            params,
+            batch.x_cat.as_i32()?,
+            batch.x_dense.as_f32()?,
+            batch.batch_size(),
+            scratch,
+        )?;
+        cache.recycle(scratch);
+        Ok(logits)
     }
 
     /// Loss + positional gradients + per-id occurrence counts — the
-    /// reference twin of the AOT `grad` program.
+    /// reference twin of the AOT `grad` program (convenience form with a
+    /// throwaway scratch arena; hot callers use
+    /// [`ReferenceModel::grad_with`]).
     ///
     /// Row-indexed gradients (embedding + wide tables) come back
     /// **sparse** over the batch's touched ids, and the counts are the
@@ -108,145 +147,251 @@ impl ReferenceModel {
         params: &ParamSet,
         batch: &Batch,
     ) -> Result<(f32, Vec<GradTensor>, SparseRows)> {
-        let (logits, cache) = self.forward_cached(params, batch)?;
-        let y = batch.y.as_f32()?;
-        let (loss, dlogits) = bce_fwd_bwd(&logits, y);
+        let mut scratch = Scratch::new();
+        self.grad_with(params, batch, &mut scratch)
+    }
+
+    /// [`ReferenceModel::grad`] on a caller-owned scratch arena: all
+    /// forward/backward intermediates come from (and return to)
+    /// `scratch`; only the gradient payloads themselves allocate.
+    pub fn grad_with(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        scratch: &mut Scratch,
+    ) -> Result<(f32, Vec<GradTensor>, SparseRows)> {
         let (touched, cnts) = batch.touched()?;
-        let grads = self.backward(params, batch, &cache, &dlogits, &touched)?;
+        self.grad_on(
+            params,
+            batch.x_cat.as_i32()?,
+            batch.x_dense.as_f32()?,
+            batch.y.as_f32()?,
+            batch.batch_size(),
+            touched,
+            cnts,
+            scratch,
+        )
+    }
+
+    /// Gradient of rows `[lo, hi)` of `batch`, reading the batch storage
+    /// in place — the worker fan-out's shard path, which used to copy
+    /// its row range into a fresh `Batch` every step. The whole-batch
+    /// range reuses the batch's cached touched set.
+    pub fn grad_range_with(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        lo: usize,
+        hi: usize,
+        scratch: &mut Scratch,
+    ) -> Result<(f32, Vec<GradTensor>, SparseRows)> {
+        let b = batch.batch_size();
+        ensure!(lo < hi && hi <= b, "row range [{lo}, {hi}) out of bounds for batch {b}");
+        if lo == 0 && hi == b {
+            return self.grad_with(params, batch, scratch);
+        }
+        let f = self.schema.n_cat();
+        let nd = self.schema.n_dense;
+        let ids = &batch.x_cat.as_i32()?[lo * f..hi * f];
+        let dense = &batch.x_dense.as_f32()?[lo * nd..hi * nd];
+        let y = &batch.y.as_f32()?[lo..hi];
+        let (touched, cnts) = touched_of(ids);
+        self.grad_on(params, ids, dense, y, hi - lo, touched, cnts, scratch)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn grad_on(
+        &self,
+        params: &ParamSet,
+        ids: &[i32],
+        dense: &[f32],
+        y: &[f32],
+        b: usize,
+        touched: Vec<u32>,
+        cnts: Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> Result<(f32, Vec<GradTensor>, SparseRows)> {
+        let (logits, cache) = self.forward_on(params, ids, dense, b, scratch)?;
+        let mut dlogits = scratch.take(b);
+        let loss = bce_fwd_bwd_into(&logits, y, &mut dlogits);
+        scratch.recycle(logits);
+        let grads = self.backward_on(params, ids, b, &cache, &dlogits, &touched, scratch)?;
+        scratch.recycle(dlogits);
+        cache.recycle(scratch);
         let counts = SparseRows::new(self.schema.total_vocab(), 1, touched, cnts);
         Ok((loss, grads, counts))
     }
 
-    /// Batched **inference-only** forward over pre-gathered embeddings —
-    /// the serving tier's scoring path. The caller gathers (and, under
-    /// quantization, dequantizes) the vocab-table rows itself:
+    /// Batched **inference-only** forward over a pre-built `x0` — the
+    /// serving tier's scoring path. The caller gathers (and, under
+    /// quantization, dequantizes) the vocab-table rows directly into the
+    /// first `F·d` columns of each `x0` row and the dense features into
+    /// the tail, in one fused pass (see `serve::model`):
     ///
-    /// * `dense` — the non-vocab parameters (every spec entry whose
-    ///   group is not `embed`/`wide`), in spec order.
-    /// * `embeds` — `[b, n_cat, embed_dim]` gathered embedding rows.
+    /// * `dense_params` — the non-vocab parameters (every spec entry
+    ///   whose group is not `embed`/`wide`), in spec order.
+    /// * `x0` — `[b, d0]` rows of `[gathered embeds | dense features]`.
     /// * `wide_sums` — per row `Σ_f wide_table[ids[f]]` (bias *not*
     ///   included), required by the wide-stream models (DeepFM, W&D)
     ///   and ignored otherwise.
-    /// * `x_dense` — `[b, n_dense]` dense features.
     ///
-    /// The op order mirrors [`ReferenceModel::forward`] exactly, so with
-    /// f32 gathers the logits are bit-identical to the training-side
-    /// forward; no backward caches are allocated.
-    pub fn infer_gathered(
+    /// The op order mirrors [`ReferenceModel::forward`] exactly — the
+    /// same fused/vectorized kernels run on both sides — so with f32
+    /// gathers the logits are bit-identical to the training-side
+    /// forward; no backward caches are allocated, and every intermediate
+    /// comes from `scratch` (the returned logits buffer included —
+    /// recycle it after use).
+    pub fn infer_x0(
         &self,
-        dense: &[&Tensor],
-        embeds: &[f32],
+        dense_params: &[Tensor],
+        x0: &[f32],
         wide_sums: Option<&[f32]>,
-        x_dense: &[f32],
         b: usize,
+        scratch: &mut Scratch,
     ) -> Result<Vec<f32>> {
         let f = self.schema.n_cat();
         let d = self.embed_dim;
-        let nd = self.schema.n_dense;
         let d0 = self.d0();
-        ensure!(embeds.len() == b * f * d, "embeds shape mismatch");
-        ensure!(x_dense.len() == b * nd, "dense-feature shape mismatch");
+        ensure!(x0.len() == b * d0, "x0 shape mismatch");
 
-        // x0 = concat(flatten(embeds), dense)
-        let mut x0 = vec![0.0f32; b * d0];
-        for i in 0..b {
-            x0[i * d0..i * d0 + f * d].copy_from_slice(&embeds[i * f * d..(i + 1) * f * d]);
-            if nd > 0 {
-                x0[i * d0 + f * d..(i + 1) * d0].copy_from_slice(&x_dense[i * nd..(i + 1) * nd]);
-            }
-        }
-
-        let mut r = SliceReader::new(dense);
+        let mut r = SliceReader::new(dense_params);
         let logits = match self.kind {
             ModelKind::DeepFm | ModelKind::WideDeep => {
                 let sums = wide_sums
                     .ok_or_else(|| anyhow::anyhow!("{} needs wide_sums", self.kind))?;
                 ensure!(sums.len() == b, "wide_sums length mismatch");
                 let wide_bias = r.next()?[0];
-                let mut logits: Vec<f32> = sums.iter().map(|&s| wide_bias + s).collect();
+                let mut lg = scratch.take(b);
+                for (l, &s) in lg.iter_mut().zip(sums) {
+                    *l = wide_bias + s;
+                }
                 if self.kind == ModelKind::DeepFm {
-                    let (fm, _) = fm2_fwd(embeds, b, f, d);
-                    for (l, v) in logits.iter_mut().zip(&fm) {
+                    let mut fm = scratch.take(b);
+                    let mut fsums = scratch.take(b * d);
+                    let mut sq = scratch.take(d);
+                    fm2_fwd_strided(x0, d0, b, f, d, &mut fm, &mut fsums, &mut sq);
+                    for (l, &v) in lg.iter_mut().zip(fm.iter()) {
                         *l += v;
                     }
+                    scratch.recycle(fm);
+                    scratch.recycle(fsums);
+                    scratch.recycle(sq);
                 }
-                let mut h = x0;
                 let mut m = d0;
-                for &n in &self.hidden {
+                let mut h: Vec<f32> = Vec::new(); // empty = input is x0
+                for &nn in &self.hidden {
                     let w = r.next()?;
                     let bias = r.next()?;
-                    h = dense_infer(&h, w, bias, b, m, n, true);
-                    m = n;
+                    let mut out = scratch.take(b * nn);
+                    {
+                        let input: &[f32] = if h.is_empty() { x0 } else { &h };
+                        dense_infer_into(input, w, bias, b, m, nn, true, &mut out);
+                    }
+                    let old = std::mem::replace(&mut h, out);
+                    if !old.is_empty() {
+                        scratch.recycle(old);
+                    }
+                    m = nn;
                 }
                 let w = r.next()?;
                 let bias = r.next()?;
-                let out = dense_infer(&h, w, bias, b, m, 1, false);
-                for i in 0..b {
-                    logits[i] += out[i];
+                let mut out1 = scratch.take(b);
+                {
+                    let input: &[f32] = if h.is_empty() { x0 } else { &h };
+                    dense_infer_into(input, w, bias, b, m, 1, false, &mut out1);
                 }
-                logits
+                if !h.is_empty() {
+                    scratch.recycle(h);
+                }
+                for (l, &o) in lg.iter_mut().zip(out1.iter()) {
+                    *l += o;
+                }
+                scratch.recycle(out1);
+                lg
             }
             ModelKind::Dcn | ModelKind::DcnV2 => {
-                // cross stream
-                let mut xl = x0.clone();
+                // cross stream (ping-pong buffers; empty = x0)
+                let mut xl: Vec<f32> = Vec::new();
                 for _ in 0..self.n_cross {
                     let w = r.next()?;
                     let bias = r.next()?;
+                    let mut next = scratch.take(b * d0);
                     match self.kind {
                         ModelKind::Dcn => {
-                            let s: Vec<f32> = (0..b)
-                                .map(|i| {
-                                    xl[i * d0..(i + 1) * d0]
-                                        .iter()
-                                        .zip(w)
-                                        .map(|(x, wv)| x * wv)
-                                        .sum()
-                                })
-                                .collect();
-                            let mut next = vec![0.0f32; b * d0];
+                            let cur: &[f32] = if xl.is_empty() { x0 } else { &xl };
                             for i in 0..b {
+                                let s = dot(&cur[i * d0..(i + 1) * d0], w);
                                 for j in 0..d0 {
                                     next[i * d0 + j] =
-                                        x0[i * d0 + j] * s[i] + bias[j] + xl[i * d0 + j];
+                                        x0[i * d0 + j] * s + bias[j] + cur[i * d0 + j];
                                 }
                             }
-                            xl = next;
                         }
                         ModelKind::DcnV2 => {
-                            let mut u = matmul(&xl, w, b, d0, d0);
-                            for i in 0..b {
-                                for (uv, &bv) in u[i * d0..(i + 1) * d0].iter_mut().zip(bias) {
-                                    *uv += bv;
+                            let mut u = scratch.take(b * d0);
+                            {
+                                let cur: &[f32] = if xl.is_empty() { x0 } else { &xl };
+                                matmul_into(cur, w, &mut u, b, d0, d0);
+                                for row in u.chunks_exact_mut(d0) {
+                                    for (uv, &bv) in row.iter_mut().zip(bias) {
+                                        *uv += bv;
+                                    }
+                                }
+                                for j in 0..b * d0 {
+                                    next[j] = x0[j] * u[j] + cur[j];
                                 }
                             }
-                            let mut next = vec![0.0f32; b * d0];
-                            for j in 0..b * d0 {
-                                next[j] = x0[j] * u[j] + xl[j];
-                            }
-                            xl = next;
+                            scratch.recycle(u);
                         }
                         _ => unreachable!(),
                     }
+                    let old = std::mem::replace(&mut xl, next);
+                    if !old.is_empty() {
+                        scratch.recycle(old);
+                    }
                 }
                 // deep stream (hidden only)
-                let mut h = x0;
                 let mut m = d0;
-                for &n in &self.hidden {
+                let mut h: Vec<f32> = Vec::new();
+                for &nn in &self.hidden {
                     let w = r.next()?;
                     let bias = r.next()?;
-                    h = dense_infer(&h, w, bias, b, m, n, true);
-                    m = n;
+                    let mut out = scratch.take(b * nn);
+                    {
+                        let input: &[f32] = if h.is_empty() { x0 } else { &h };
+                        dense_infer_into(input, w, bias, b, m, nn, true, &mut out);
+                    }
+                    let old = std::mem::replace(&mut h, out);
+                    if !old.is_empty() {
+                        scratch.recycle(old);
+                    }
+                    m = nn;
                 }
                 // head over concat(xl, deep)
                 let hc = d0 + m;
-                let mut head_in = vec![0.0f32; b * hc];
-                for i in 0..b {
-                    head_in[i * hc..i * hc + d0].copy_from_slice(&xl[i * d0..(i + 1) * d0]);
-                    head_in[i * hc + d0..(i + 1) * hc].copy_from_slice(&h[i * m..(i + 1) * m]);
+                let mut head_in = scratch.take(b * hc);
+                {
+                    let xl_f: &[f32] = if xl.is_empty() { x0 } else { &xl };
+                    let deep: &[f32] = if h.is_empty() { x0 } else { &h };
+                    for i in 0..b {
+                        head_in[i * hc..i * hc + d0]
+                            .copy_from_slice(&xl_f[i * d0..(i + 1) * d0]);
+                        head_in[i * hc + d0..(i + 1) * hc]
+                            .copy_from_slice(&deep[i * m..(i + 1) * m]);
+                    }
+                }
+                if !xl.is_empty() {
+                    scratch.recycle(xl);
+                }
+                if !h.is_empty() {
+                    scratch.recycle(h);
                 }
                 let head_w = r.next()?;
                 let head_b = r.next()?;
-                dense_infer(&head_in, head_w, head_b, b, hc, 1, false)
+                let mut lg = scratch.take(b);
+                dense_infer_into(&head_in, head_w, head_b, b, hc, 1, false, &mut lg);
+                scratch.recycle(head_in);
+                lg
             }
         };
         r.finish()?;
@@ -255,157 +400,189 @@ impl ReferenceModel {
 
     // ------------------------------------------------------------------
 
-    fn forward_cached(&self, params: &ParamSet, batch: &Batch) -> Result<(Vec<f32>, Cache)> {
-        let ids = batch.x_cat.as_i32()?;
-        let dense = batch.x_dense.as_f32()?;
-        let b = batch.batch_size();
+    /// Forward over raw id/dense slices: logits + backward caches, all on
+    /// scratch buffers. `x0`'s first `F·d` columns double as the embeds
+    /// tensor (fused gather+concat), so DeepFM's FM term and the embed
+    /// backward read it strided instead of through a separate buffer.
+    fn forward_on(
+        &self,
+        params: &ParamSet,
+        ids: &[i32],
+        dense: &[f32],
+        b: usize,
+        scratch: &mut Scratch,
+    ) -> Result<(Vec<f32>, Cache)> {
         let f = self.schema.n_cat();
         let d = self.embed_dim;
         let nd = self.schema.n_dense;
         let d0 = self.d0();
         ensure!(ids.len() == b * f, "batch/cat shape mismatch");
+        ensure!(dense.len() == b * nd, "batch/dense shape mismatch");
 
         let mut reader = Reader::new(params);
-        let embed_table = reader.next()?; // embed_table
-        let embeds = embed_fwd(embed_table, ids, b, f, d);
+        let embed_table = reader.next()?;
+        let mut x0 = scratch.take(b * d0);
+        embed_concat_fwd(embed_table, ids, dense, b, f, d, nd, &mut x0);
 
-        // x0 = concat(flatten(embeds), dense)
-        let mut x0 = vec![0.0f32; b * d0];
-        for i in 0..b {
-            x0[i * d0..i * d0 + f * d].copy_from_slice(&embeds[i * f * d..(i + 1) * f * d]);
-            if nd > 0 {
-                x0[i * d0 + f * d..(i + 1) * d0].copy_from_slice(&dense[i * nd..(i + 1) * nd]);
-            }
-        }
+        let n_hidden = self.hidden.len();
+        let mut fm_sums: Vec<f32> = Vec::new();
+        let mut mlp_pre: Vec<Vec<f32>> = Vec::with_capacity(n_hidden);
+        let mut mlp_h: Vec<Vec<f32>> = Vec::with_capacity(n_hidden);
+        let mut cross_su: Vec<Vec<f32>> = Vec::with_capacity(self.n_cross);
+        let mut cross_out: Vec<Vec<f32>> = Vec::with_capacity(self.n_cross);
+        let mut head_in: Vec<f32> = Vec::new();
 
-        let mut cache = Cache {
-            embeds,
-            x0: x0.clone(),
-            fm_sums: Vec::new(),
-            wide_used: false,
-            mlp: Vec::new(),
-            cross: Vec::new(),
-            head_in: Vec::new(),
-        };
-
-        let mut logits;
-        match self.kind {
+        let logits: Vec<f32> = match self.kind {
             ModelKind::DeepFm | ModelKind::WideDeep => {
                 let wide_table = reader.next()?;
                 let wide_bias = reader.next()?[0];
-                cache.wide_used = true;
-                logits = wide_fwd(wide_table, wide_bias, ids, b, f);
+                let mut lg = scratch.take(b);
+                wide_fwd_into(wide_table, wide_bias, ids, b, f, &mut lg);
                 if self.kind == ModelKind::DeepFm {
-                    let (fm, sums) = fm2_fwd(&cache.embeds, b, f, d);
-                    for (l, v) in logits.iter_mut().zip(&fm) {
+                    let mut fm = scratch.take(b);
+                    let mut sums = scratch.take(b * d);
+                    let mut sq = scratch.take(d);
+                    fm2_fwd_strided(&x0, d0, b, f, d, &mut fm, &mut sums, &mut sq);
+                    for (l, &v) in lg.iter_mut().zip(fm.iter()) {
                         *l += v;
                     }
-                    cache.fm_sums = sums;
+                    scratch.recycle(fm);
+                    scratch.recycle(sq);
+                    fm_sums = sums;
                 }
                 // MLP with scalar head
-                let mut h = x0;
                 let mut m = d0;
-                for &n in &self.hidden {
+                for (li, &nn) in self.hidden.iter().enumerate() {
                     let w = reader.next()?;
                     let bias = reader.next()?;
-                    let (out, c) = dense_fwd(&h, w, bias, b, m, n, true);
-                    cache.mlp.push(c);
-                    h = out;
-                    m = n;
+                    let mut pre = scratch.take(b * nn);
+                    let mut out = scratch.take(b * nn);
+                    {
+                        let input: &[f32] = if li == 0 { &x0 } else { &mlp_h[li - 1] };
+                        dense_fwd_into(input, w, bias, b, m, nn, true, &mut pre, &mut out);
+                    }
+                    mlp_pre.push(pre);
+                    mlp_h.push(out);
+                    m = nn;
                 }
                 let w = reader.next()?;
                 let bias = reader.next()?;
-                let (out, c) = dense_fwd(&h, w, bias, b, m, 1, false);
-                cache.mlp.push(c);
-                for i in 0..b {
-                    logits[i] += out[i];
+                let mut out1 = scratch.take(b);
+                {
+                    let input: &[f32] =
+                        if n_hidden == 0 { &x0 } else { &mlp_h[n_hidden - 1] };
+                    dense_infer_into(input, w, bias, b, m, 1, false, &mut out1);
                 }
+                for (l, &o) in lg.iter_mut().zip(out1.iter()) {
+                    *l += o;
+                }
+                scratch.recycle(out1);
+                lg
             }
             ModelKind::Dcn | ModelKind::DcnV2 => {
                 // cross stream
-                let mut xl = x0.clone();
-                for _ in 0..self.n_cross {
+                for l in 0..self.n_cross {
                     let w = reader.next()?;
                     let bias = reader.next()?;
                     match self.kind {
                         ModelKind::Dcn => {
                             // s[i] = xl[i,:] . w ; x_{l+1} = x0*s + b + xl
-                            let s: Vec<f32> = (0..b)
-                                .map(|i| {
-                                    xl[i * d0..(i + 1) * d0]
-                                        .iter()
-                                        .zip(w)
-                                        .map(|(x, wv)| x * wv)
-                                        .sum()
-                                })
-                                .collect();
-                            let mut next = vec![0.0f32; b * d0];
-                            for i in 0..b {
-                                for j in 0..d0 {
-                                    next[i * d0 + j] =
-                                        x0[i * d0 + j] * s[i] + bias[j] + xl[i * d0 + j];
+                            let mut sbuf = scratch.take(b);
+                            let mut next = scratch.take(b * d0);
+                            {
+                                let xl: &[f32] =
+                                    if l == 0 { &x0 } else { &cross_out[l - 1] };
+                                for (i, sv) in sbuf.iter_mut().enumerate() {
+                                    *sv = dot(&xl[i * d0..(i + 1) * d0], w);
+                                }
+                                for i in 0..b {
+                                    for j in 0..d0 {
+                                        next[i * d0 + j] = x0[i * d0 + j] * sbuf[i]
+                                            + bias[j]
+                                            + xl[i * d0 + j];
+                                    }
                                 }
                             }
-                            cache.cross.push(CrossCache { xl: xl.clone(), su: s });
-                            xl = next;
+                            cross_su.push(sbuf);
+                            cross_out.push(next);
                         }
                         ModelKind::DcnV2 => {
                             // u = xl@W + b ; x_{l+1} = x0 ⊙ u + xl
-                            let mut u = matmul(&xl, w, b, d0, d0);
-                            for i in 0..b {
-                                for (uv, &bv) in u[i * d0..(i + 1) * d0].iter_mut().zip(bias) {
-                                    *uv += bv;
+                            let mut u = scratch.take(b * d0);
+                            let mut next = scratch.take(b * d0);
+                            {
+                                let xl: &[f32] =
+                                    if l == 0 { &x0 } else { &cross_out[l - 1] };
+                                matmul_into(xl, w, &mut u, b, d0, d0);
+                                for row in u.chunks_exact_mut(d0) {
+                                    for (uv, &bv) in row.iter_mut().zip(bias) {
+                                        *uv += bv;
+                                    }
+                                }
+                                for j in 0..b * d0 {
+                                    next[j] = x0[j] * u[j] + xl[j];
                                 }
                             }
-                            let mut next = vec![0.0f32; b * d0];
-                            for j in 0..b * d0 {
-                                next[j] = x0[j] * u[j] + xl[j];
-                            }
-                            cache.cross.push(CrossCache { xl: xl.clone(), su: u });
-                            xl = next;
+                            cross_su.push(u);
+                            cross_out.push(next);
                         }
                         _ => unreachable!(),
                     }
                 }
                 // deep stream (hidden only)
-                let mut h = x0;
                 let mut m = d0;
-                for &n in &self.hidden {
+                for (li, &nn) in self.hidden.iter().enumerate() {
                     let w = reader.next()?;
                     let bias = reader.next()?;
-                    let (out, c) = dense_fwd(&h, w, bias, b, m, n, true);
-                    cache.mlp.push(c);
-                    h = out;
-                    m = n;
+                    let mut pre = scratch.take(b * nn);
+                    let mut out = scratch.take(b * nn);
+                    {
+                        let input: &[f32] = if li == 0 { &x0 } else { &mlp_h[li - 1] };
+                        dense_fwd_into(input, w, bias, b, m, nn, true, &mut pre, &mut out);
+                    }
+                    mlp_pre.push(pre);
+                    mlp_h.push(out);
+                    m = nn;
                 }
                 // head over concat(xl, deep)
                 let hc = d0 + m;
-                let mut head_in = vec![0.0f32; b * hc];
-                for i in 0..b {
-                    head_in[i * hc..i * hc + d0].copy_from_slice(&xl[i * d0..(i + 1) * d0]);
-                    head_in[i * hc + d0..(i + 1) * hc].copy_from_slice(&h[i * m..(i + 1) * m]);
+                head_in = scratch.take(b * hc);
+                {
+                    let xl_f: &[f32] = if self.n_cross == 0 {
+                        &x0
+                    } else {
+                        &cross_out[self.n_cross - 1]
+                    };
+                    let deep: &[f32] =
+                        if n_hidden == 0 { &x0 } else { &mlp_h[n_hidden - 1] };
+                    for i in 0..b {
+                        head_in[i * hc..i * hc + d0]
+                            .copy_from_slice(&xl_f[i * d0..(i + 1) * d0]);
+                        head_in[i * hc + d0..(i + 1) * hc]
+                            .copy_from_slice(&deep[i * m..(i + 1) * m]);
+                    }
                 }
                 let head_w = reader.next()?;
                 let head_b = reader.next()?;
-                let (out, _) = dense_fwd(&head_in, head_w, head_b, b, hc, 1, false);
-                cache.head_in = head_in;
-                logits = out;
+                let mut lg = scratch.take(b);
+                dense_infer_into(&head_in, head_w, head_b, b, hc, 1, false, &mut lg);
+                lg
             }
-        }
+        };
         reader.finish()?;
-        Ok((logits, cache))
+        Ok((logits, Cache { x0, fm_sums, mlp_pre, mlp_h, cross_su, cross_out, head_in }))
     }
 
-    fn backward(
+    fn backward_on(
         &self,
         params: &ParamSet,
-        batch: &Batch,
+        ids: &[i32],
+        b: usize,
         cache: &Cache,
         dlogits: &[f32],
         touched: &[u32],
+        scratch: &mut Scratch,
     ) -> Result<Vec<GradTensor>> {
-        let ids = batch.x_cat.as_i32()?;
-        let b = batch.batch_size();
         let f = self.schema.n_cat();
         let d = self.embed_dim;
         let d0 = self.d0();
@@ -413,27 +590,19 @@ impl ReferenceModel {
 
         // gradients per positional slot, filled in spec order at the end
         let mut grads: Vec<GradTensor> = Vec::with_capacity(params.len());
-        let mut dx0 = vec![0.0f32; b * d0];
-        let mut dembeds = vec![0.0f32; b * f * d];
+        let mut dx0 = scratch.take(b * d0);
 
         match self.kind {
             ModelKind::DeepFm | ModelKind::WideDeep => {
                 // wide stream (sparse over the touched ids)
                 let (dwide, dbias) = wide_bwd_sparse(dlogits, ids, touched, f);
-                // FM stream
-                if self.kind == ModelKind::DeepFm {
-                    let dfm = fm2_bwd(&cache.embeds, &cache.fm_sums, dlogits, b, f, d);
-                    for (a, g) in dembeds.iter_mut().zip(&dfm) {
-                        *a += g;
-                    }
-                }
-                // deep stream: walk MLP caches backward
+                // deep stream: head + hidden layers, walked backward
                 let n_hidden = self.hidden.len();
                 let mut dims = vec![d0];
                 dims.extend_from_slice(&self.hidden);
                 dims.push(1);
                 // collect weight refs in forward order
-                let mut weights: Vec<&[f32]> = Vec::new();
+                let mut weights: Vec<&[f32]> = Vec::with_capacity(n_hidden + 1);
                 {
                     let mut r = Reader::new(params);
                     let _ = r.next()?; // embed
@@ -444,28 +613,46 @@ impl ReferenceModel {
                         let _ = r.next()?; // bias
                     }
                 }
-                let mut dy: Vec<f32> = dlogits.to_vec(); // [b,1]
-                let mut dws: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                let mut dy = scratch.take(b); // head upstream grad [b, 1]
+                dy.copy_from_slice(dlogits);
+                let mut dws: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_hidden + 1);
                 for layer in (0..=n_hidden).rev() {
-                    let relu = layer < n_hidden;
                     let (m, n) = (dims[layer], dims[layer + 1]);
-                    let (dx, dw, db) =
-                        dense_bwd(&dy, &cache.mlp[layer], weights[layer], b, m, n, relu);
+                    if layer < n_hidden {
+                        relu_mask(&mut dy, &cache.mlp_pre[layer]);
+                    }
+                    let input: &[f32] =
+                        if layer == 0 { &cache.x0 } else { &cache.mlp_h[layer - 1] };
+                    let dw = matmul_tn(input, &dy, b, m, n);
+                    let db = colsum(&dy, b, n);
                     dws.push((dw, db));
-                    dy = dx;
-                }
-                dws.reverse();
-                for (a, g) in dx0.iter_mut().zip(&dy) {
-                    *a += g;
-                }
-                // assemble positional grads: embed, wide, wide_bias, mlp...
-                // embed grad needs dx0's embedding slice + dembeds
-                for i in 0..b {
-                    for t in 0..f * d {
-                        dembeds[i * f * d + t] += dx0[i * d0 + t];
+                    if layer == 0 {
+                        // the layer-0 dx *is* the deep-stream dx0
+                        matmul_nt_into(&dy, weights[layer], &mut dx0, b, m, n);
+                    } else {
+                        let mut dx = scratch.take(b * m);
+                        matmul_nt_into(&dy, weights[layer], &mut dx, b, m, n);
+                        scratch.recycle(std::mem::replace(&mut dy, dx));
                     }
                 }
-                let dtable = embed_bwd_sparse(&dembeds, ids, touched, d);
+                scratch.recycle(dy);
+                dws.reverse();
+                // FM stream: accumulate straight into dx0's embed block
+                if self.kind == ModelKind::DeepFm {
+                    fm2_bwd_strided_acc(
+                        &cache.x0,
+                        d0,
+                        &cache.fm_sums,
+                        dlogits,
+                        b,
+                        f,
+                        d,
+                        &mut dx0,
+                        d0,
+                    );
+                }
+                // assemble positional grads: embed, wide, wide_bias, mlp...
+                let dtable = embed_bwd_sparse_strided(&dx0, d0, ids, touched, f, d);
                 grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable)));
                 grads.push(GradTensor::Sparse(SparseRows::new(v, 1, touched.to_vec(), dwide)));
                 grads.push(GradTensor::Dense(Tensor::f32(vec![1], vec![dbias])));
@@ -482,8 +669,8 @@ impl ReferenceModel {
                 let hc = d0 + h_last;
 
                 // weight refs in forward order
-                let mut cross_ws: Vec<&[f32]> = Vec::new();
-                let mut mlp_ws: Vec<&[f32]> = Vec::new();
+                let mut cross_ws: Vec<&[f32]> = Vec::with_capacity(self.n_cross);
+                let mut mlp_ws: Vec<&[f32]> = Vec::with_capacity(n_hidden);
                 let head_w: &[f32];
                 {
                     let mut r = Reader::new(params);
@@ -504,72 +691,84 @@ impl ReferenceModel {
                 // head backward
                 let dhead_w = matmul_tn(&cache.head_in, dlogits, b, hc, 1);
                 let dhead_b = colsum(dlogits, b, 1);
-                let dhead_in = matmul_nt(dlogits, head_w, b, hc, 1);
-                let mut dxl = vec![0.0f32; b * d0];
-                let mut dh = vec![0.0f32; b * h_last];
+                let mut dhead_in = scratch.take(b * hc);
+                matmul_nt_into(dlogits, head_w, &mut dhead_in, b, hc, 1);
+                let mut dxl = scratch.take(b * d0);
+                let mut dy = scratch.take(b * h_last);
                 for i in 0..b {
                     dxl[i * d0..(i + 1) * d0]
                         .copy_from_slice(&dhead_in[i * hc..i * hc + d0]);
-                    dh[i * h_last..(i + 1) * h_last]
+                    dy[i * h_last..(i + 1) * h_last]
                         .copy_from_slice(&dhead_in[i * hc + d0..(i + 1) * hc]);
                 }
+                scratch.recycle(dhead_in);
 
                 // deep stream backward
                 let mut dims = vec![d0];
                 dims.extend_from_slice(&self.hidden);
-                let mut mlp_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
-                let mut dy = dh;
+                let mut mlp_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_hidden);
                 for layer in (0..n_hidden).rev() {
                     let (m, n) = (dims[layer], dims[layer + 1]);
-                    let (dx, dw, db) = dense_bwd(&dy, &cache.mlp[layer], mlp_ws[layer], b, m, n, true);
+                    relu_mask(&mut dy, &cache.mlp_pre[layer]);
+                    let input: &[f32] =
+                        if layer == 0 { &cache.x0 } else { &cache.mlp_h[layer - 1] };
+                    let dw = matmul_tn(input, &dy, b, m, n);
+                    let db = colsum(&dy, b, n);
                     mlp_grads.push((dw, db));
-                    dy = dx;
+                    if layer == 0 {
+                        matmul_nt_into(&dy, mlp_ws[layer], &mut dx0, b, m, n);
+                    } else {
+                        let mut dx = scratch.take(b * m);
+                        matmul_nt_into(&dy, mlp_ws[layer], &mut dx, b, m, n);
+                        scratch.recycle(std::mem::replace(&mut dy, dx));
+                    }
                 }
+                scratch.recycle(dy);
                 mlp_grads.reverse();
-                for (a, g) in dx0.iter_mut().zip(&dy) {
-                    *a += g;
-                }
 
                 // cross stream backward
-                let mut cross_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                let mut cross_grads: Vec<(Vec<f32>, Vec<f32>)> =
+                    Vec::with_capacity(self.n_cross);
                 for l in (0..self.n_cross).rev() {
-                    let cc = &cache.cross[l];
+                    let xl_in: &[f32] =
+                        if l == 0 { &cache.x0 } else { &cache.cross_out[l - 1] };
+                    let su = &cache.cross_su[l];
                     match self.kind {
                         ModelKind::Dcn => {
                             // x_{l+1} = x0 * s + b + xl, s = xl . w
-                            let ds = rowdot(&cache.x0, &dxl, b, d0); // [b]
-                            let w = cross_ws[l];
+                            let mut ds = scratch.take(b);
+                            rowdot_into(&cache.x0, &dxl, &mut ds, b, d0);
                             let mut dw = vec![0.0f32; d0];
                             for i in 0..b {
-                                for j in 0..d0 {
-                                    dw[j] += ds[i] * cc.xl[i * d0 + j];
-                                }
+                                axpy(&mut dw, &xl_in[i * d0..(i + 1) * d0], ds[i]);
                             }
                             let db = colsum(&dxl, b, d0);
-                            // dx0 += s * dxl ; dxl_new = dxl + ds ⊗ w
-                            let mut dxl_new = vec![0.0f32; b * d0];
+                            // dx0 += s * dxl ; dxl += ds ⊗ w (in place:
+                            // each element's old value is read first)
+                            let w = cross_ws[l];
                             for i in 0..b {
                                 for j in 0..d0 {
-                                    dx0[i * d0 + j] += cc.su[i] * dxl[i * d0 + j];
-                                    dxl_new[i * d0 + j] = dxl[i * d0 + j] + ds[i] * w[j];
+                                    dx0[i * d0 + j] += su[i] * dxl[i * d0 + j];
+                                    dxl[i * d0 + j] += ds[i] * w[j];
                                 }
                             }
                             cross_grads.push((dw, db));
-                            dxl = dxl_new;
+                            scratch.recycle(ds);
                         }
                         ModelKind::DcnV2 => {
                             // x_{l+1} = x0 ⊙ u + xl, u = xl@W + b
-                            let mut du = vec![0.0f32; b * d0];
+                            let mut du = scratch.take(b * d0);
                             for j in 0..b * d0 {
                                 du[j] = cache.x0[j] * dxl[j];
-                                dx0[j] += cc.su[j] * dxl[j];
+                                dx0[j] += su[j] * dxl[j];
                             }
-                            let dw = matmul_tn(&cc.xl, &du, b, d0, d0);
+                            let dw = matmul_tn(xl_in, &du, b, d0, d0);
                             let db = colsum(&du, b, d0);
-                            let dxl_add = matmul_nt(&du, cross_ws[l], b, d0, d0);
-                            for j in 0..b * d0 {
-                                dxl[j] += dxl_add[j];
-                            }
+                            let mut tmp = scratch.take(b * d0);
+                            matmul_nt_into(&du, cross_ws[l], &mut tmp, b, d0, d0);
+                            axpy(&mut dxl, &tmp, 1.0);
+                            scratch.recycle(tmp);
+                            scratch.recycle(du);
                             cross_grads.push((dw, db));
                         }
                         _ => unreachable!(),
@@ -577,16 +776,10 @@ impl ReferenceModel {
                 }
                 cross_grads.reverse();
                 // x0 also receives the layer-0 dxl (xl starts as x0)
-                for (a, g) in dx0.iter_mut().zip(&dxl) {
-                    *a += g;
-                }
+                axpy(&mut dx0, &dxl, 1.0);
+                scratch.recycle(dxl);
 
-                for i in 0..b {
-                    for t in 0..f * d {
-                        dembeds[i * f * d + t] += dx0[i * d0 + t];
-                    }
-                }
-                let dtable = embed_bwd_sparse(&dembeds, ids, touched, d);
+                let dtable = embed_bwd_sparse_strided(&dx0, d0, ids, touched, f, d);
                 grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable)));
                 for (dw, db) in cross_grads {
                     if self.kind == ModelKind::Dcn {
@@ -606,6 +799,7 @@ impl ReferenceModel {
                 grads.push(GradTensor::Dense(Tensor::f32(vec![1], dhead_b)));
             }
         }
+        scratch.recycle(dx0);
 
         ensure!(grads.len() == params.len(), "gradient arity mismatch");
         for (g, e) in grads.iter().zip(&params.spec) {
@@ -615,34 +809,55 @@ impl ReferenceModel {
     }
 }
 
-/// Forward caches reused by backward.
+/// Forward caches reused by backward — every buffer is scratch-owned and
+/// returned via [`Cache::recycle`]. `x0`'s embed block doubles as the
+/// embeds tensor (no separate `[b, F·d]` buffer).
 struct Cache {
-    embeds: Vec<f32>,
     x0: Vec<f32>,
+    /// DeepFM field-sums `[b, d]`; empty otherwise.
     fm_sums: Vec<f32>,
-    #[allow(dead_code)]
-    wide_used: bool,
-    mlp: Vec<DenseCache>,
-    cross: Vec<CrossCache>,
+    /// Hidden-layer pre-activations (ReLU mask inputs).
+    mlp_pre: Vec<Vec<f32>>,
+    /// Hidden-layer outputs (the next layer's backward input).
+    mlp_h: Vec<Vec<f32>>,
+    /// Per cross layer: DCN `s [b]`, DCNv2 `u [b, d0]`.
+    cross_su: Vec<Vec<f32>>,
+    /// Per cross layer: its *output* `x_{l+1}` (layer `l`'s backward
+    /// input is `cross_out[l-1]`, or `x0` for the first layer).
+    cross_out: Vec<Vec<f32>>,
+    /// DCN-family head input `[b, d0 + h_last]`; empty otherwise.
     head_in: Vec<f32>,
 }
 
-/// Per-cross-layer cache: the layer input and the scalar/vector gate.
-struct CrossCache {
-    xl: Vec<f32>,
-    /// DCN: `s [b]`; DCNv2: `u [b, d0]`.
-    su: Vec<f32>,
+impl Cache {
+    fn recycle(self, scratch: &mut Scratch) {
+        scratch.recycle(self.x0);
+        scratch.recycle(self.fm_sums);
+        for v in self.mlp_pre {
+            scratch.recycle(v);
+        }
+        for v in self.mlp_h {
+            scratch.recycle(v);
+        }
+        for v in self.cross_su {
+            scratch.recycle(v);
+        }
+        for v in self.cross_out {
+            scratch.recycle(v);
+        }
+        scratch.recycle(self.head_in);
+    }
 }
 
 /// Positional walker over the non-vocab parameter tensors handed to
-/// [`ReferenceModel::infer_gathered`].
+/// [`ReferenceModel::infer_x0`].
 struct SliceReader<'a> {
-    tensors: &'a [&'a Tensor],
+    tensors: &'a [Tensor],
     i: usize,
 }
 
 impl<'a> SliceReader<'a> {
-    fn new(tensors: &'a [&'a Tensor]) -> Self {
+    fn new(tensors: &'a [Tensor]) -> Self {
         SliceReader { tensors, i: 0 }
     }
 
@@ -685,5 +900,183 @@ impl<'a> Reader<'a> {
     fn finish(&self) -> Result<()> {
         ensure!(self.i == self.params.len(), "consumed {} of {} params", self.i, self.params.len());
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_params, InitConfig};
+    use crate::reference::step::build_spec;
+    use crate::util::Rng;
+
+    fn tiny_schema() -> Schema {
+        Schema { name: "model_tiny".into(), n_dense: 3, vocab_sizes: vec![5, 4, 2] }
+    }
+
+    fn tiny_model(kind: ModelKind) -> ReferenceModel {
+        ReferenceModel::new(kind, tiny_schema(), 4, vec![8, 8], 2)
+    }
+
+    fn tiny_batch(schema: &Schema, b: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let offs = schema.offsets();
+        let mut x_cat = Vec::new();
+        for _ in 0..b {
+            for (f, &vs) in schema.vocab_sizes.iter().enumerate() {
+                x_cat.push((offs[f] + rng.below(vs as u64) as usize) as i32);
+            }
+        }
+        let x_dense: Vec<f32> = (0..b * schema.n_dense)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let y: Vec<f32> = (0..b).map(|_| rng.bernoulli(0.4) as u8 as f32).collect();
+        Batch::new(
+            Tensor::i32(vec![b, schema.n_cat()], x_cat),
+            Tensor::f32(vec![b, schema.n_dense], x_dense),
+            Tensor::f32(vec![b], y),
+            b,
+        )
+    }
+
+    /// The zero-allocation acceptance gate at the model level: after one
+    /// warmup call, further grad calls on the same shapes must not grow
+    /// the scratch arena — the whole forward/backward intermediate set
+    /// is recycled.
+    #[test]
+    fn steady_state_grad_performs_no_scratch_allocation() {
+        for kind in ModelKind::ALL {
+            let model = tiny_model(kind);
+            let spec = build_spec(kind, &model.schema, 4, &[8, 8], 2);
+            let params = init_params(&spec, &InitConfig { seed: 2, embed_sigma: 0.05 });
+            let batch = tiny_batch(&model.schema, 8, 3);
+            let mut scratch = Scratch::new();
+            let (loss0, grads0, _) = model.grad_with(&params, &batch, &mut scratch).unwrap();
+            let grown = scratch.grow_events();
+            assert!(grown > 0, "{kind}: warmup must populate the arena");
+            for it in 0..4 {
+                // value stability doubles as the stale-data guard: every
+                // reused buffer must be fully overwritten, so repeated
+                // calls are bitwise identical to the first
+                let (loss, grads, _) = model.grad_with(&params, &batch, &mut scratch).unwrap();
+                assert_eq!(loss, loss0, "{kind}: iter {it} loss drifted (stale scratch read?)");
+                for (gi, (a, b)) in grads.iter().zip(&grads0).enumerate() {
+                    assert_eq!(
+                        a.to_tensor().as_f32().unwrap(),
+                        b.to_tensor().as_f32().unwrap(),
+                        "{kind}: iter {it} grad[{gi}] drifted (stale scratch read?)"
+                    );
+                }
+            }
+            assert_eq!(
+                scratch.grow_events(),
+                grown,
+                "{kind}: steady-state grad allocated new scratch buffers"
+            );
+            // forward-only (eval) path: recycle the returned logits and
+            // the arena stays flat too
+            let lg = model.forward_scratch(&params, &batch, &mut scratch).unwrap();
+            let lg0 = lg.clone();
+            scratch.recycle(lg);
+            let grown = scratch.grow_events();
+            for _ in 0..3 {
+                let lg = model.forward_scratch(&params, &batch, &mut scratch).unwrap();
+                assert_eq!(lg, lg0, "{kind}: eval logits drifted (stale scratch read?)");
+                scratch.recycle(lg);
+            }
+            assert_eq!(scratch.grow_events(), grown, "{kind}: eval path allocated");
+        }
+    }
+
+    /// Row-range gradients read the batch in place and must equal the
+    /// gradient of a materialized row-slice batch.
+    #[test]
+    fn grad_range_matches_sliced_batch() {
+        for kind in ModelKind::ALL {
+            let model = tiny_model(kind);
+            let spec = build_spec(kind, &model.schema, 4, &[8, 8], 2);
+            let params = init_params(&spec, &InitConfig { seed: 9, embed_sigma: 0.04 });
+            let batch = tiny_batch(&model.schema, 12, 5);
+            let (lo, hi) = (4usize, 10usize);
+            let mut scratch = Scratch::new();
+            let (loss_r, grads_r, counts_r) =
+                model.grad_range_with(&params, &batch, lo, hi, &mut scratch).unwrap();
+
+            // materialized slice (the old copy path)
+            let f = model.schema.n_cat();
+            let nd = model.schema.n_dense;
+            let cat = batch.x_cat.as_i32().unwrap();
+            let dense = batch.x_dense.as_f32().unwrap();
+            let yv = batch.y.as_f32().unwrap();
+            let sliced = Batch::new(
+                Tensor::i32(vec![hi - lo, f], cat[lo * f..hi * f].to_vec()),
+                Tensor::f32(vec![hi - lo, nd], dense[lo * nd..hi * nd].to_vec()),
+                Tensor::f32(vec![hi - lo], yv[lo..hi].to_vec()),
+                hi - lo,
+            );
+            let (loss_s, grads_s, counts_s) = model.grad(&params, &sliced).unwrap();
+
+            assert_eq!(loss_r, loss_s, "{kind}: loss");
+            assert_eq!(counts_r, counts_s, "{kind}: counts");
+            assert_eq!(grads_r.len(), grads_s.len());
+            for (i, (a, b)) in grads_r.iter().zip(&grads_s).enumerate() {
+                assert_eq!(
+                    a.to_tensor().as_f32().unwrap(),
+                    b.to_tensor().as_f32().unwrap(),
+                    "{kind}: grad[{i}]"
+                );
+            }
+        }
+    }
+
+    /// The scratch-based infer path equals the training forward exactly
+    /// (f32 serving is bit-identical to eval).
+    #[test]
+    fn infer_x0_matches_forward_all_models() {
+        for kind in ModelKind::ALL {
+            let model = tiny_model(kind);
+            let spec = build_spec(kind, &model.schema, 4, &[8, 8], 2);
+            let params = init_params(&spec, &InitConfig { seed: 4, embed_sigma: 0.05 });
+            let batch = tiny_batch(&model.schema, 6, 11);
+            let want = model.forward(&params, &batch).unwrap();
+
+            // build x0 + wide sums the way the serving tier does
+            let b = batch.batch_size();
+            let f = model.schema.n_cat();
+            let d = model.embed_dim;
+            let nd = model.schema.n_dense;
+            let d0 = model.d0();
+            let ids = batch.x_cat.as_i32().unwrap();
+            let dense = batch.x_dense.as_f32().unwrap();
+            let mut embed_t: Option<&[f32]> = None;
+            let mut wide_t: Option<&[f32]> = None;
+            let mut dense_params: Vec<Tensor> = Vec::new();
+            for (e, t) in spec.iter().zip(&params.tensors) {
+                match e.group.as_str() {
+                    "embed" => embed_t = Some(t.as_f32().unwrap()),
+                    "wide" => wide_t = Some(t.as_f32().unwrap()),
+                    _ => dense_params.push(t.clone()),
+                }
+            }
+            let table = embed_t.unwrap();
+            let mut x0 = vec![0.0f32; b * d0];
+            embed_concat_fwd(table, ids, dense, b, f, d, nd, &mut x0);
+            let wide_sums: Option<Vec<f32>> = wide_t.map(|wt| {
+                (0..b)
+                    .map(|i| {
+                        let mut s = 0.0f32;
+                        for &id in &ids[i * f..(i + 1) * f] {
+                            s += wt[id as usize];
+                        }
+                        s
+                    })
+                    .collect()
+            });
+            let mut scratch = Scratch::new();
+            let got = model
+                .infer_x0(&dense_params, &x0, wide_sums.as_deref(), b, &mut scratch)
+                .unwrap();
+            assert_eq!(got, want, "{kind}: infer_x0 vs forward");
+        }
     }
 }

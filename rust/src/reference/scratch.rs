@@ -1,0 +1,183 @@
+//! Reusable per-worker scratch buffers for the compute hot path.
+//!
+//! The reference engine's forward/backward/infer passes need a dozen
+//! intermediate `f32` buffers per call. Allocating them fresh every step
+//! (the pre-PR-5 behavior: ~24 heap allocations per forward) puts the
+//! allocator on the critical path of every microbatch. A [`Scratch`] is
+//! a small free-list arena owned by exactly one worker thread: passes
+//! [`take`](Scratch::take) buffers for their intermediates and
+//! [`recycle`](Scratch::recycle) them on the way out, so once every
+//! buffer has grown to its steady-state capacity, the compute path
+//! performs **zero heap allocation per step**.
+//!
+//! Design notes:
+//!
+//! * `take` is **best-fit**: it returns the smallest free buffer whose
+//!   capacity already covers the request, so varying request sizes (the
+//!   serving path's fluctuating micro-batches, eval tails) converge to a
+//!   stable buffer set instead of thrashing.
+//! * Reused buffers keep their **stale contents** (always finite floats
+//!   from a previous pass — never uninitialized memory): every consumer
+//!   on the compute path fully overwrites its buffer before reading it
+//!   (the `_into` kernels either `fill(0.0)` accumulation targets
+//!   themselves or assign every element), so zero-filling on `take`
+//!   would memset each intermediate a second time per step. Callers
+//!   that genuinely need zeros use [`take_zeroed`](Scratch::take_zeroed);
+//!   the steady-state tests pin value stability across repeated calls,
+//!   so an accidental read-before-write of stale data fails loudly.
+//! * [`grow_events`](Scratch::grow_events) counts every take that had to
+//!   allocate. The steady-state-zero-allocation property is *tested*
+//!   (not just claimed): see `reference::model`'s
+//!   `steady_state_grad_performs_no_scratch_allocation` and
+//!   `train_integration.rs`.
+//! * A `Scratch` is deliberately **not** shared: it is `Send` but has no
+//!   interior mutability; every worker/scoring thread owns its own (the
+//!   persistent pools in `coordinator::pool` and `serve::queue` keep one
+//!   per thread for the lifetime of the run).
+
+/// Free-list arena of reusable `f32` buffers (see module docs).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+    grown: usize,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { free: Vec::new(), grown: 0 }
+    }
+
+    /// A buffer of exactly `len` elements whose contents are
+    /// **unspecified but finite** (stale values from a previous pass, or
+    /// zeros for the extension of a fresh/grown buffer) — the caller
+    /// must fully overwrite it before reading. Reuses the best-fitting
+    /// free buffer when one exists; otherwise allocates (counted in
+    /// [`grow_events`](Scratch::grow_events)).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len
+                && best.map_or(true, |j| b.capacity() < self.free[j].capacity())
+            {
+                best = Some(i);
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.free.swap_remove(i),
+            None => {
+                self.grown += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        if buf.len() > len {
+            buf.truncate(len); // O(1) for f32: no drop glue, no writes
+        } else {
+            buf.resize(len, 0.0); // zero-writes only the extension
+        }
+        buf
+    }
+
+    /// [`take`](Scratch::take), but zero-filled — for accumulation
+    /// targets that genuinely start from zero.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.take(len);
+        buf.fill(0.0);
+        buf
+    }
+
+    /// Return a buffer to the free list. Buffers that escape to callers
+    /// instead (e.g. logits handed to eval) are simply not returned —
+    /// the arena never aliases them. Zero-capacity vecs (empty optional
+    /// cache fields) are dropped so the free list stays bounded by the
+    /// peak number of live buffers.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of `take` calls that had to allocate since construction.
+    /// Flat across steps == the compute path is allocation-free.
+    pub fn grow_events(&self) -> usize {
+        self.grown
+    }
+
+    /// Buffers currently parked in the free list (diagnostics).
+    pub fn free_buffers(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycles_without_rewriting() {
+        let mut s = Scratch::new();
+        let mut a = s.take(16);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a, vec![0.0f32; 16], "a fresh buffer extends with zeros");
+        a.iter_mut().for_each(|x| *x = 7.0);
+        let cap = a.capacity();
+        s.recycle(a);
+        let b = s.take(10);
+        assert_eq!(b.len(), 10);
+        assert_eq!(b.capacity(), cap, "the same buffer comes back");
+        assert!(b.iter().all(|x| x.is_finite()), "stale contents are finite floats");
+        assert_eq!(s.grow_events(), 1, "second take must not allocate");
+        // growing within capacity zero-fills only the extension
+        s.recycle(b);
+        let c = s.take(12);
+        assert_eq!(c.len(), 12);
+        assert!(c[10..].iter().all(|&x| x == 0.0), "extension beyond prior len is zeroed");
+    }
+
+    #[test]
+    fn take_zeroed_always_zeroes() {
+        let mut s = Scratch::new();
+        let mut a = s.take(8);
+        a.iter_mut().for_each(|x| *x = f32::NAN);
+        s.recycle(a);
+        let b = s.take_zeroed(8);
+        assert_eq!(b, vec![0.0f32; 8]);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut s = Scratch::new();
+        let big = s.take(100);
+        let small = s.take(8);
+        s.recycle(big);
+        s.recycle(small);
+        let got = s.take(4);
+        assert!(got.capacity() < 100, "best fit should pick the small buffer");
+        s.recycle(got);
+        let got = s.take(50);
+        assert!(got.capacity() >= 100, "only the big buffer fits 50");
+    }
+
+    #[test]
+    fn steady_state_has_no_growth() {
+        let mut s = Scratch::new();
+        // warm up with the sequence a hot loop would issue
+        for _ in 0..2 {
+            let a = s.take(32);
+            let b = s.take(8);
+            let c = s.take(32);
+            s.recycle(a);
+            s.recycle(b);
+            s.recycle(c);
+        }
+        let grown = s.grow_events();
+        for _ in 0..100 {
+            let a = s.take(32);
+            let b = s.take(8);
+            let c = s.take(32);
+            s.recycle(c);
+            s.recycle(b);
+            s.recycle(a);
+        }
+        assert_eq!(s.grow_events(), grown, "steady state must not allocate");
+    }
+}

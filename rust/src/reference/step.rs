@@ -142,14 +142,64 @@ impl ReferenceEngine {
         )
     }
 
+    /// Whether the diagnostic dense-gradient mode is on (the trainer's
+    /// deferred-merge apply path requires sparse vocab payloads).
+    pub fn emits_dense_grads(&self) -> bool {
+        self.dense_grads
+    }
+
     /// Forward-only (eval) logits.
     pub fn fwd(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
         self.model.forward(params, batch)
     }
 
-    /// Gradient + counts + loss for one microbatch.
+    /// Forward-only logits on a caller-owned scratch arena; the returned
+    /// buffer was taken from `scratch` — recycle it after use to keep
+    /// eval allocation-free.
+    pub fn fwd_scratch(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        scratch: &mut crate::reference::Scratch,
+    ) -> Result<Vec<f32>> {
+        self.model.forward_scratch(params, batch, scratch)
+    }
+
+    /// Gradient + counts + loss for one microbatch (convenience form
+    /// with a throwaway scratch arena).
     pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<GradOutput> {
-        let (loss, mut grads, counts) = self.model.grad(params, batch)?;
+        let mut scratch = crate::reference::Scratch::new();
+        self.grad_scratch(params, batch, &mut scratch)
+    }
+
+    /// [`ReferenceEngine::grad`] on a caller-owned scratch arena — the
+    /// worker fan-out's hot path.
+    pub fn grad_scratch(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        scratch: &mut crate::reference::Scratch,
+    ) -> Result<GradOutput> {
+        let (loss, grads, counts) = self.model.grad_with(params, batch, scratch)?;
+        Ok(self.finish_grad(loss, grads, counts))
+    }
+
+    /// Gradient of rows `[lo, hi)` of `batch`, reading the batch storage
+    /// in place (no row copies — see
+    /// [`ReferenceModel::grad_range_with`]).
+    pub fn grad_range_scratch(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        lo: usize,
+        hi: usize,
+        scratch: &mut crate::reference::Scratch,
+    ) -> Result<GradOutput> {
+        let (loss, grads, counts) = self.model.grad_range_with(params, batch, lo, hi, scratch)?;
+        Ok(self.finish_grad(loss, grads, counts))
+    }
+
+    fn finish_grad(&self, loss: f32, mut grads: Vec<GradTensor>, counts: SparseRows) -> GradOutput {
         if self.dense_grads {
             for g in &mut grads {
                 if matches!(g, GradTensor::Sparse(_)) {
@@ -158,7 +208,7 @@ impl ReferenceEngine {
                 }
             }
         }
-        Ok(GradOutput { grads, counts, loss })
+        GradOutput { grads, counts, loss }
     }
 
     /// Apply accumulated gradients: clip (embed group) → +L2 (embed+wide)

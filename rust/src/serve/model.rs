@@ -9,15 +9,23 @@
 //! dense MLP/cross parameters stay f32 (they are negligible next to the
 //! tables and feed matmuls directly).
 //!
-//! Scoring gathers the batch's embedding rows (dequantizing on the fly
-//! in quantized mode — the gather knows each column's field statically,
-//! so the affine constants need no lookup) and runs the reference
-//! model's inference-only forward ([`ReferenceModel::infer_gathered`]),
-//! which mirrors the training forward op for op. In f32 mode served
-//! logits are therefore bit-identical to `ReferenceModel::forward`; in
-//! quantized mode they are exactly the forward over the dequantized
-//! tables, whose weights sit within the documented per-field bound of
-//! the trained ones (`rust/tests/serve_parity.rs` pins both).
+//! Scoring is a **single fused pass** per request: each categorical
+//! field's embedding row gathers (dequantizing on the fly in quantized
+//! mode — the gather knows each column's field statically, so the
+//! affine constants need no lookup) *directly into the model's `x0`
+//! input layout*, the wide-table sum accumulates in the same sweep, and
+//! the dense features copy into the row tail — then the reference
+//! model's inference-only forward ([`ReferenceModel::infer_x0`]) runs
+//! over it, mirroring the training forward op for op on the same
+//! vectorized kernels. In f32 mode served logits are therefore
+//! bit-identical to `ReferenceModel::forward`; in quantized mode they
+//! are exactly the forward over the dequantized tables, whose weights
+//! sit within the documented per-field bound of the trained ones
+//! (`rust/tests/serve_parity.rs` pins both). All scoring intermediates
+//! (the `x0` batch, wide sums, layer activations, logits) live in the
+//! calling thread's [`Scratch`] arena — the queue's scoring threads
+//! each own one for the lifetime of the server, so steady-state scoring
+//! performs zero heap allocation.
 
 use std::path::Path;
 
@@ -29,7 +37,7 @@ use crate::data::schema::Schema;
 use crate::model::manifest::ParamEntry;
 use crate::model::params::ParamSet;
 use crate::model::store::ParamStore;
-use crate::reference::ReferenceModel;
+use crate::reference::{ReferenceModel, Scratch};
 use crate::tensor::Tensor;
 
 /// Frozen storage of one vocab-shaped table.
@@ -165,19 +173,46 @@ impl ServeModel {
     }
 
     /// Validate and score a micro-batch; returns one logit per request,
-    /// in request order.
+    /// in request order. Convenience form with a throwaway scratch
+    /// arena — the queue's scoring threads use
+    /// [`ServeModel::score_batch_scratch`] with a persistent one.
     pub fn score_batch(&self, reqs: &[Request]) -> Result<Vec<f32>> {
         for r in reqs {
             r.validate(&self.model.schema)?;
         }
-        self.score_batch_validated(reqs)
+        let mut scratch = Scratch::new();
+        self.score_batch_validated(reqs, &mut scratch)
+    }
+
+    /// Validate and score on a caller-owned scratch arena. The returned
+    /// logits buffer was taken from `scratch`; recycle it there once the
+    /// scores have been copied out.
+    pub fn score_batch_scratch(
+        &self,
+        reqs: &[Request],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<f32>> {
+        for r in reqs {
+            r.validate(&self.model.schema)?;
+        }
+        self.score_batch_validated(reqs, scratch)
     }
 
     /// Scoring without re-validation — the micro-batching queue's path:
     /// `Client::submit` already validated every request at enqueue, so
     /// the scoring thread must not pay the O(batch · n_cat) range
     /// checks a second time.
-    pub(crate) fn score_batch_validated(&self, reqs: &[Request]) -> Result<Vec<f32>> {
+    ///
+    /// One fused pass per request builds the model input: embedding rows
+    /// gather (+dequantize) straight into `x0`'s embed block, the wide
+    /// sum accumulates in the same field sweep, and the dense features
+    /// land in the row tail — no separate embeds / x_dense staging
+    /// buffers.
+    pub(crate) fn score_batch_validated(
+        &self,
+        reqs: &[Request],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<f32>> {
         let b = reqs.len();
         if b == 0 {
             return Ok(Vec::new());
@@ -185,27 +220,33 @@ impl ServeModel {
         let f = self.model.schema.n_cat();
         let d = self.model.embed_dim;
         let nd = self.model.schema.n_dense;
+        let d0 = self.model.d0();
         debug_assert!(reqs.iter().all(|r| r.validate(&self.model.schema).is_ok()));
 
-        let mut embeds = vec![0.0f32; b * f * d];
-        let mut wide_sums = self.wide.as_ref().map(|_| vec![0.0f32; b]);
-        let mut x_dense = vec![0.0f32; b * nd];
+        let mut x0 = scratch.take(b * d0);
+        let mut wide_sums = self.wide.as_ref().map(|_| scratch.take(b));
         for (i, r) in reqs.iter().enumerate() {
+            let row = &mut x0[i * d0..(i + 1) * d0];
+            let mut s = 0.0f32;
             for (j, &id) in r.cat.iter().enumerate() {
-                let slot = (i * f + j) * d;
-                self.embed.row_into(id as usize, j, d, &mut embeds[slot..slot + d]);
-            }
-            if let (Some(sums), Some(wide)) = (wide_sums.as_mut(), self.wide.as_ref()) {
-                let mut s = 0.0f32;
-                for (j, &id) in r.cat.iter().enumerate() {
+                self.embed.row_into(id as usize, j, d, &mut row[j * d..(j + 1) * d]);
+                if let Some(wide) = self.wide.as_ref() {
                     s += wide.value(id as usize, j);
                 }
+            }
+            if let Some(sums) = wide_sums.as_mut() {
                 sums[i] = s;
             }
-            x_dense[i * nd..(i + 1) * nd].copy_from_slice(&r.dense);
+            if nd > 0 {
+                row[f * d..].copy_from_slice(&r.dense);
+            }
         }
-        let dense_refs: Vec<&Tensor> = self.dense.iter().collect();
-        self.model.infer_gathered(&dense_refs, &embeds, wide_sums.as_deref(), &x_dense, b)
+        let logits = self.model.infer_x0(&self.dense, &x0, wide_sums.as_deref(), b, scratch)?;
+        scratch.recycle(x0);
+        if let Some(sums) = wide_sums {
+            scratch.recycle(sums);
+        }
+        Ok(logits)
     }
 
     /// Rebuild a full `ParamSet` with the tables as the scorer actually

@@ -229,9 +229,13 @@ impl Client {
     }
 }
 
-/// One scoring thread: coalesce → score → respond until shutdown.
+/// One scoring thread: coalesce → score → respond until shutdown. Each
+/// thread owns a persistent scratch arena: the gather/forward
+/// intermediates and the logits buffer are recycled every batch, so
+/// steady-state scoring performs no heap allocation on the compute path.
 fn worker_loop(shared: &Shared) {
     let max_batch = shared.cfg.max_batch.max(1);
+    let mut scratch = crate::reference::Scratch::new();
     loop {
         // --- coalesce: wait for a full batch or the oldest deadline ---
         let batch: Vec<PendingReq> = {
@@ -269,7 +273,7 @@ fn worker_loop(shared: &Shared) {
             reqs.push(p.req);
         }
         // requests were validated at submit; don't re-check per batch
-        match shared.model.score_batch_validated(&reqs) {
+        match shared.model.score_batch_validated(&reqs, &mut scratch) {
             Ok(logits) => {
                 let scored_at = Instant::now();
                 {
@@ -285,6 +289,9 @@ fn worker_loop(shared: &Shared) {
                     // a gone receiver just means the caller stopped waiting
                     let _ = reply.send(Scored { id: req.id, logit, prob: sigmoid(logit) });
                 }
+                // scores are copied into the replies; the buffer goes
+                // back to the arena
+                scratch.recycle(logits);
             }
             Err(e) => {
                 let mut slot = shared.error.lock().unwrap();

@@ -9,4 +9,4 @@ mod host;
 mod sparse;
 
 pub use host::{Dtype, Tensor};
-pub use sparse::{GradTensor, SparseRowRangeMut, SparseRows};
+pub use sparse::{merge_row_slices, GradTensor, SparseRowRangeMut, SparseRows};

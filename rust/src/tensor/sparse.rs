@@ -215,6 +215,15 @@ impl SparseRows {
         (self.ids.len() * 4 + self.vals.len() * 4) as u64
     }
 
+    /// Immutable view of the stored rows whose ids fall in `[lo, hi)`:
+    /// `(ids, vals)` slices. The deferred-merge apply path slices both
+    /// halves of the root reduction per shard row range with this.
+    pub fn range_slice(&self, lo: usize, hi: usize) -> (&[u32], &[f32]) {
+        let a = self.ids.partition_point(|&id| (id as usize) < lo);
+        let b = self.ids.partition_point(|&id| (id as usize) < hi);
+        (&self.ids[a..b], &self.vals[a * self.d..b * self.d])
+    }
+
     /// Split the stored rows into disjoint mutable row-range views, one
     /// per range. `ranges` must be ascending, non-overlapping `[lo, hi)`
     /// pairs; stored rows outside every range are not reachable through
@@ -259,6 +268,50 @@ pub struct SparseRowRangeMut<'a> {
     pub ids: &'a [u32],
     /// Packed values of those rows (`ids.len() * d`).
     pub vals: &'a mut [f32],
+}
+
+/// Union-merge two sorted packed row slices: `out = a + b` row-wise
+/// (rows present in both add element-wise, rows in one side copy
+/// through). This is exactly the arithmetic of
+/// [`SparseRows::axpy`]`(1.0, ..)` restricted to a range, so merging a
+/// reduction's two halves per row range is bitwise identical to merging
+/// the whole tables and slicing afterwards — the invariant the
+/// deferred-root-merge apply path rests on.
+pub fn merge_row_slices(
+    a_ids: &[u32],
+    a_vals: &[f32],
+    b_ids: &[u32],
+    b_vals: &[f32],
+    d: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    debug_assert_eq!(a_vals.len(), a_ids.len() * d);
+    debug_assert_eq!(b_vals.len(), b_ids.len() * d);
+    let mut ids = Vec::with_capacity(a_ids.len() + b_ids.len());
+    let mut vals = Vec::with_capacity(a_vals.len() + b_vals.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a_ids.len() || j < b_ids.len() {
+        let take_a = j >= b_ids.len() || (i < a_ids.len() && a_ids[i] < b_ids[j]);
+        let take_b = i >= a_ids.len() || (j < b_ids.len() && b_ids[j] < a_ids[i]);
+        if take_a {
+            ids.push(a_ids[i]);
+            vals.extend_from_slice(&a_vals[i * d..(i + 1) * d]);
+            i += 1;
+        } else if take_b {
+            ids.push(b_ids[j]);
+            vals.extend_from_slice(&b_vals[j * d..(j + 1) * d]);
+            j += 1;
+        } else {
+            ids.push(a_ids[i]);
+            let base = vals.len();
+            vals.extend_from_slice(&a_vals[i * d..(i + 1) * d]);
+            for (v, &o) in vals[base..].iter_mut().zip(&b_vals[j * d..(j + 1) * d]) {
+                *v += o;
+            }
+            i += 1;
+            j += 1;
+        }
+    }
+    (ids, vals)
 }
 
 /// A gradient tensor that is either dense (HLO path, dense MLP params)
@@ -454,6 +507,31 @@ mod tests {
         views.into_iter().for_each(|v| v.vals.iter_mut().for_each(|x| *x *= 2.0));
         assert_eq!(s.row(0), &[2.0, 3.0]);
         assert_eq!(s.row(3), &[16.0, 17.0]);
+    }
+
+    #[test]
+    fn range_slice_and_merge_match_whole_table_axpy() {
+        let a = sp(10, 2, &[1, 4, 8], &[1.0, 1.5, 4.0, 4.5, 8.0, 8.5]);
+        let b = sp(10, 2, &[0, 4, 9], &[0.1, 0.2, 40.0, 41.0, 9.0, 9.5]);
+        // whole-table oracle: a + b via axpy(1.0)
+        let mut whole = a.clone();
+        whole.axpy(1.0, &b).unwrap();
+        // per-range merges concatenate to the same ids/vals, bitwise
+        let mut ids = Vec::new();
+        let mut vals = Vec::new();
+        for &(lo, hi) in &[(0usize, 4usize), (4, 7), (7, 10)] {
+            let (ai, av) = a.range_slice(lo, hi);
+            let (bi, bv) = b.range_slice(lo, hi);
+            let (mi, mv) = merge_row_slices(ai, av, bi, bv, 2);
+            ids.extend(mi);
+            vals.extend(mv);
+        }
+        assert_eq!(ids, whole.ids());
+        assert_eq!(vals, whole.vals());
+        // empty-side merges copy through
+        let (mi, mv) = merge_row_slices(&[], &[], &[2], &[5.0, 6.0], 2);
+        assert_eq!(mi, vec![2]);
+        assert_eq!(mv, vec![5.0, 6.0]);
     }
 
     #[test]

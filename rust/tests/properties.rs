@@ -6,7 +6,7 @@
 use cowclip::clip::{
     clip_embedding_grads, clip_embedding_grads_sparse, ClipMode, ClipParams,
 };
-use cowclip::coordinator::allreduce::{tree_allreduce, Contribution};
+use cowclip::coordinator::allreduce::{tree_allreduce, Contribution, TreeReducer};
 use cowclip::data::schema::Schema;
 use cowclip::metrics::auc;
 use cowclip::scaling::rules::{HyperSet, ScalingRule};
@@ -170,6 +170,56 @@ fn prop_allreduce_matches_sequential_sum() {
         }
         for (got, want) in total.counts.to_dense().iter().zip(&want_counts) {
             assert_eq!(*got as f64, *want);
+        }
+    }
+}
+
+/// Invariant: the streaming tree reducer is **bitwise** arrival-order
+/// invariant — the fixed rank-range pairing alone defines the result —
+/// and its sparse totals match the dense sequential sum within f32
+/// association tolerance.
+#[test]
+fn prop_tree_reducer_is_arrival_order_invariant_bitwise() {
+    let mut rng = Rng::new(0x7EE5);
+    for _ in 0..100 {
+        let workers = 1 + rng.below(9) as usize;
+        let len = 1 + rng.below(24) as usize;
+        let contributions: Vec<Contribution> = (0..workers)
+            .map(|_| {
+                let g: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+                let c: Vec<f32> = (0..4).map(|_| rng.below(3) as f32).collect();
+                Contribution {
+                    grads: vec![GradTensor::Dense(Tensor::f32(vec![len], g))],
+                    counts: SparseRows::from_dense(&c, 4, 1),
+                    loss_weighted: 0.5 / workers as f32,
+                    weight: 1.0 / workers as f32,
+                }
+            })
+            .collect();
+
+        let mut reference: Option<(Vec<f32>, usize, u64)> = None;
+        for trial in 0..3 {
+            // deterministic pseudo-shuffle of the arrival order
+            let mut order: Vec<usize> = (0..workers).collect();
+            for i in (1..workers).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                order.swap(i, j);
+            }
+            let mut r = TreeReducer::new(workers);
+            for rank in order {
+                r.push(rank, contributions[rank].clone()).unwrap();
+            }
+            let (total, stats) = r.finish().unwrap();
+            assert_eq!(stats.rounds, workers - 1);
+            let got = total.grads[0].to_tensor().as_f32().unwrap().to_vec();
+            match &reference {
+                None => reference = Some((got, stats.rounds, stats.bytes_moved)),
+                Some((want, rounds, bytes)) => {
+                    assert_eq!(&got, want, "trial {trial}: arrival order changed the bits");
+                    assert_eq!(stats.rounds, *rounds);
+                    assert_eq!(stats.bytes_moved, *bytes, "traffic accounting must be fixed");
+                }
+            }
         }
     }
 }

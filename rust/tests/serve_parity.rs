@@ -322,3 +322,36 @@ fn direct_score_batch_matches_served_path() {
         assert!((a - b).abs() <= 1e-6, "req {i}: {a} vs {b}");
     }
 }
+
+/// PR-5 zero-allocation gate for serving: once a scoring thread's
+/// scratch arena has warmed on a batch shape, further batches of the
+/// same shape must not grow it — the fused gather + inference forward
+/// recycles every intermediate (f32 and quantized tables alike).
+#[test]
+fn steady_state_scoring_performs_no_scratch_allocation() {
+    for quant in [false, true] {
+        for kind in [ModelKind::DeepFm, ModelKind::DcnV2] {
+            let model = tiny_model(kind);
+            let params = tiny_params(&model, 23);
+            let frozen = ServeModel::from_params(model, params, quant).unwrap();
+            let reqs = requests(frozen.schema(), 32, 9);
+            let mut scratch = cowclip::reference::Scratch::new();
+            let lg = frozen.score_batch_scratch(&reqs, &mut scratch).unwrap();
+            let lg0 = lg.clone();
+            scratch.recycle(lg);
+            let grown = scratch.grow_events();
+            assert!(grown > 0, "{kind}/quant={quant}: warmup must populate the arena");
+            for _ in 0..4 {
+                let lg = frozen.score_batch_scratch(&reqs, &mut scratch).unwrap();
+                // bitwise-stable scores double as the stale-data guard
+                assert_eq!(lg, lg0, "{kind}/quant={quant}: scores drifted across calls");
+                scratch.recycle(lg);
+            }
+            assert_eq!(
+                scratch.grow_events(),
+                grown,
+                "{kind}/quant={quant}: steady-state scoring allocated scratch buffers"
+            );
+        }
+    }
+}
