@@ -1,0 +1,8 @@
+//! Fail fixture: an unordered container in a numeric-accumulation
+//! module, plus a float sum drawn from its unordered value iterator.
+
+use std::collections::HashMap;
+
+pub fn accumulate(rows: &HashMap<usize, f32>) -> f32 {
+    rows.values().sum()
+}

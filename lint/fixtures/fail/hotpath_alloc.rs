@@ -1,0 +1,15 @@
+//! Fail fixture: the root reaches an allocation two hops down the
+//! call graph — the lint must report it with the `hot via` chain.
+
+pub fn hot_root(n: usize) -> f32 {
+    helper(n)
+}
+
+fn helper(n: usize) -> f32 {
+    let buf = scratch(n);
+    buf.iter().sum()
+}
+
+fn scratch(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}

@@ -1,0 +1,25 @@
+//! Fail fixture: `step` acquires weights -> opt while `rollback`
+//! acquires opt -> weights — a classic deadlock-capable cycle.
+
+use std::sync::{Mutex, RwLock};
+
+pub struct Store {
+    weights: RwLock<Vec<f32>>,
+    opt: Mutex<Vec<f32>>,
+}
+
+impl Store {
+    pub fn step(&self) {
+        let w = self.weights.write();
+        let o = self.opt.lock();
+        drop(o);
+        drop(w);
+    }
+
+    pub fn rollback(&self) {
+        let o = self.opt.lock();
+        let w = self.weights.read();
+        drop(w);
+        drop(o);
+    }
+}

@@ -1,0 +1,15 @@
+//! Fail fixture: an unwrap and a direct slice index in the request
+//! path — either one can take the serve worker down on bad input.
+
+use std::sync::Mutex;
+
+pub struct Queue {
+    q: Mutex<Vec<u64>>,
+}
+
+impl Queue {
+    pub fn take_next(&self) -> u64 {
+        let st = self.q.lock().unwrap();
+        st[0]
+    }
+}

@@ -1,0 +1,7 @@
+//! Fail fixture: a waiver comment without a justification is itself a
+//! violation — the escape hatch must stay auditable.
+
+pub fn helper(n: usize) -> usize {
+    let out: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc)
+    out.len() + n
+}

@@ -1,0 +1,15 @@
+//! Pass fixture: ordered containers and slice-ordered reductions only.
+
+use std::collections::BTreeMap;
+
+pub fn accumulate(rows: &BTreeMap<usize, f32>) -> f32 {
+    let mut total = 0.0;
+    for (_, v) in rows {
+        total += *v;
+    }
+    total
+}
+
+pub fn slice_sum(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}

@@ -1,0 +1,29 @@
+//! Pass fixture: a hot root whose reachable call graph is
+//! allocation-free. `allowed_helper` allocates but is allowlisted in
+//! the test config; `cold_path` allocates but is unreachable from any
+//! root. (Fixtures are lexed by the lint, never compiled.)
+
+pub fn hot_root(dst: &mut [f32], src: &[f32]) -> f32 {
+    clean_helper(dst, src);
+    allowed_helper(src.len())
+}
+
+fn clean_helper(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+fn allowed_helper(n: usize) -> f32 {
+    let buf: Vec<usize> = (0..n).collect();
+    buf.len() as f32
+}
+
+pub fn hot_with_waiver(n: usize) -> usize {
+    let out: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates
+    out.len() + n
+}
+
+pub fn cold_path(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}

@@ -1,0 +1,26 @@
+//! Pass fixture: every function acquires `weights` before `opt` — the
+//! acquisition-order graph is a straight line, no cycle.
+
+use std::sync::{Mutex, RwLock};
+
+pub struct Store {
+    weights: RwLock<Vec<f32>>,
+    opt: Mutex<Vec<f32>>,
+}
+
+impl Store {
+    pub fn step(&self) {
+        let w = self.weights.write();
+        let o = self.opt.lock();
+        drop(o);
+        drop(w);
+    }
+
+    pub fn inspect(&self) -> usize {
+        let w = self.weights.read();
+        let o = self.opt.lock();
+        drop(w);
+        drop(o);
+        0
+    }
+}

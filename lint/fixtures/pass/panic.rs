@@ -1,0 +1,15 @@
+//! Pass fixture: poison-tolerant locking and no unwrap / expect /
+//! direct slice indexing in the request path.
+
+use std::sync::{Mutex, PoisonError};
+
+pub struct Queue {
+    state: Mutex<Vec<u64>>,
+}
+
+impl Queue {
+    pub fn take_next(&self) -> Option<u64> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.pop()
+    }
+}

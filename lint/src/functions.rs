@@ -1,0 +1,319 @@
+//! Function extraction and call-site discovery over the token stream.
+//!
+//! Tracks `impl` blocks (so methods get `Type::name` qualified names),
+//! `mod` nesting, and test regions (`#[cfg(test)]` modules, `#[test]`
+//! functions) — test code is exempt from every rule family.
+
+use crate::lexer::{Tok, TokKind};
+
+/// Rust keywords the scans must never mistake for a call or type name.
+pub const KEYWORDS: &[&str] = &[
+    "if", "while", "match", "for", "return", "loop", "else", "in", "let", "mut", "fn", "pub",
+    "impl", "use", "mod", "struct", "enum", "trait", "where", "as", "move", "ref", "unsafe",
+    "const", "static", "crate", "super", "self", "Self", "dyn", "type", "break", "continue",
+];
+
+pub fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+/// One extracted function: its body tokens (braces included) plus
+/// enough naming context to build a crate-local call graph.
+#[derive(Clone)]
+pub struct FnDef {
+    /// Path relative to `rust/src`, `/`-separated.
+    pub file: String,
+    /// Enclosing `impl` type, if any.
+    pub owner: Option<String>,
+    pub name: String,
+    /// Token slice from the opening `{` through the matching `}`.
+    pub body: Vec<Tok>,
+    pub line: usize,
+    pub is_test: bool,
+}
+
+impl FnDef {
+    /// `Type::name` for methods, plain `name` for free functions.
+    pub fn qname(&self) -> String {
+        match &self.owner {
+            Some(o) => format!("{o}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+
+    /// Crate-unique key (two files may define a same-named method).
+    pub fn key(&self) -> String {
+        format!("{}:{}", self.file, self.qname())
+    }
+}
+
+/// `toks[i]` is `{`; return the index just past the matching `}`.
+pub fn match_brace(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0i64;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// A lexical region (mod or impl body): functions inside inherit the
+/// owner type and test-ness.
+struct Region {
+    end: usize,
+    owner: Option<String>,
+    is_test: bool,
+}
+
+/// Extract every function (including nested and test ones) from a
+/// file's token stream.
+pub fn extract_functions(file: &str, toks: &[Tok]) -> Vec<FnDef> {
+    let n = toks.len();
+    let mut fns: Vec<FnDef> = Vec::new();
+    let mut regions: Vec<Region> = Vec::new();
+    let mut pending_cfg_test = false;
+    let mut pending_test_attr = false;
+    let mut i = 0usize;
+    while i < n {
+        let text = toks[i].text.as_str();
+        let kind = toks[i].kind;
+        regions.retain(|r| i < r.end);
+        let owner = regions.iter().rev().find_map(|r| r.owner.clone());
+        let in_test = regions.iter().any(|r| r.is_test);
+        // attribute: #[...] — watch for cfg(test) and #[test]
+        if text == "#" && i + 1 < n && toks[i + 1].text == "[" {
+            let mut end = i + 2;
+            let mut depth = 1i64;
+            let mut attr: Vec<&str> = Vec::new();
+            while end < n && depth > 0 {
+                let t = toks[end].text.as_str();
+                if t == "[" {
+                    depth += 1;
+                } else if t == "]" {
+                    depth -= 1;
+                }
+                if depth > 0 {
+                    attr.push(t);
+                }
+                end += 1;
+            }
+            if attr.contains(&"cfg") && attr.contains(&"test") {
+                pending_cfg_test = true;
+            }
+            if attr.first() == Some(&"test") {
+                pending_test_attr = true;
+            }
+            i = end;
+            continue;
+        }
+        if text == "mod" && kind == TokKind::Ident {
+            let mut j = i + 1;
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let end = match_brace(toks, j);
+                regions.push(Region { end, owner: None, is_test: pending_cfg_test });
+            }
+            pending_cfg_test = false;
+            i = j + 1;
+            continue;
+        }
+        if text == "impl" && kind == TokKind::Ident {
+            let mut j = i + 1;
+            // skip generic params <...>
+            if j < n && toks[j].text == "<" {
+                let mut d = 1i64;
+                j += 1;
+                while j < n && d > 0 {
+                    if toks[j].text == "<" {
+                        d += 1;
+                    } else if toks[j].text == ">" {
+                        d -= 1;
+                    }
+                    j += 1;
+                }
+            }
+            let seg_start = j;
+            while j < n && toks[j].text != "{" {
+                j += 1;
+            }
+            let seg = &toks[seg_start..j.min(n)];
+            let names: Vec<&str> = seg
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident && !is_keyword(&t.text))
+                .map(|t| t.text.as_str())
+                .collect();
+            // `impl Trait for Type` — the owner is the type after `for`
+            let forpos = seg.iter().position(|t| t.text == "for");
+            let tname: Option<String> = match forpos {
+                Some(p) => seg[p + 1..]
+                    .iter()
+                    .find(|t| t.kind == TokKind::Ident && !is_keyword(&t.text))
+                    .map(|t| t.text.clone()),
+                None => names.first().map(|s| s.to_string()),
+            };
+            let end = match_brace(toks, j);
+            regions.push(Region { end, owner: tname, is_test: pending_cfg_test });
+            pending_cfg_test = false;
+            i = j + 1;
+            continue;
+        }
+        if text == "fn" && kind == TokKind::Ident && i + 1 < n && toks[i + 1].kind == TokKind::Ident
+        {
+            let name = toks[i + 1].text.clone();
+            let fline = toks[i + 1].line;
+            let mut j = i + 2;
+            // scan for the body `{` at paren depth 0, or a trailing `;`
+            let mut pd = 0i64;
+            while j < n {
+                match toks[j].text.as_str() {
+                    "(" => pd += 1,
+                    ")" => pd -= 1,
+                    "{" if pd == 0 => break,
+                    ";" if pd == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let end = match_brace(toks, j);
+                fns.push(FnDef {
+                    file: file.to_string(),
+                    owner: owner.clone(),
+                    name,
+                    body: toks[j..end].to_vec(),
+                    line: fline,
+                    is_test: in_test || pending_test_attr || pending_cfg_test,
+                });
+            }
+            pending_test_attr = false;
+            pending_cfg_test = false;
+            i = j + 1;
+            continue;
+        }
+        if pending_cfg_test
+            && matches!(text, "use" | "struct" | "enum" | "const" | "static" | "type")
+        {
+            pending_cfg_test = false;
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// Ubiquitous std container/iterator/option method names: calls in
+/// method position with these names never resolve to crate functions
+/// (a crate fn that happens to share the name would create absurd
+/// cross-type call-graph edges, e.g. `Vec::push` -> `TreeReducer::push`).
+pub const STD_METHOD_SKIP: &[&str] = &[
+    "push", "pop", "insert", "remove", "get", "get_mut", "len", "is_empty", "iter", "iter_mut",
+    "into_iter", "next", "extend", "drain", "clear", "contains", "contains_key", "split_at",
+    "split_at_mut", "map", "filter", "zip", "enumerate", "sum", "min", "max", "abs", "sqrt",
+    "powi", "send", "recv", "join", "lock", "read", "write", "last", "first", "new",
+];
+
+const DEBUG_MACROS: &[&str] = &["debug_assert", "debug_assert_eq", "debug_assert_ne"];
+
+/// Token ranges covered by `debug_assert*!(...)` invocations — these
+/// compile out in release builds, so the hot-path rule ignores them.
+pub fn debug_spans(body: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut k = 0usize;
+    while k < body.len() {
+        let is_dbg = body[k].kind == TokKind::Ident
+            && DEBUG_MACROS.contains(&body[k].text.as_str())
+            && k + 2 < body.len()
+            && body[k + 1].text == "!"
+            && matches!(body[k + 2].text.as_str(), "(" | "[" | "{");
+        if is_dbg {
+            let opener = body[k + 2].text.clone();
+            let close = match opener.as_str() {
+                "(" => ")",
+                "[" => "]",
+                _ => "}",
+            };
+            let mut depth = 1i64;
+            let mut j = k + 3;
+            while j < body.len() && depth > 0 {
+                if body[j].text == opener {
+                    depth += 1;
+                } else if body[j].text == close {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+            spans.push((k, j));
+            k = j;
+            continue;
+        }
+        k += 1;
+    }
+    spans
+}
+
+pub fn in_spans(spans: &[(usize, usize)], k: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= k && k < b)
+}
+
+/// One call site inside a function body.
+pub struct Call {
+    /// `Some("Type")` for `Type::name(...)`, `None` otherwise.
+    pub owner: Option<String>,
+    pub name: String,
+    pub line: usize,
+    pub is_macro: bool,
+}
+
+/// Extract call sites (fn calls, method calls, macro invocations) from
+/// a body, skipping `debug_assert*!` contents and std method names.
+pub fn calls_of(body: &[Tok]) -> Vec<Call> {
+    let mut out: Vec<Call> = Vec::new();
+    let spans = debug_spans(body);
+    for k in 0..body.len() {
+        if in_spans(&spans, k) {
+            continue;
+        }
+        let t = &body[k];
+        if t.kind != TokKind::Ident || is_keyword(&t.text) {
+            continue;
+        }
+        let nxt = if k + 1 < body.len() { body[k + 1].text.as_str() } else { "" };
+        let prev = if k > 0 { body[k - 1].text.as_str() } else { "" };
+        if nxt == "!" {
+            out.push(Call { owner: None, name: t.text.clone(), line: t.line, is_macro: true });
+            continue;
+        }
+        if nxt == "(" {
+            if prev == "." {
+                if !STD_METHOD_SKIP.contains(&t.text.as_str()) {
+                    out.push(Call {
+                        owner: None,
+                        name: t.text.clone(),
+                        line: t.line,
+                        is_macro: false,
+                    });
+                }
+            } else if prev == "::" && k >= 2 && body[k - 2].kind == TokKind::Ident {
+                out.push(Call {
+                    owner: Some(body[k - 2].text.clone()),
+                    name: t.text.clone(),
+                    line: t.line,
+                    is_macro: false,
+                });
+            } else {
+                out.push(Call { owner: None, name: t.text.clone(), line: t.line, is_macro: false });
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,230 @@
+//! A minimal Rust lexer: just enough token structure for the lint's
+//! rule families — identifiers, punctuation, literals, and line
+//! numbers, with comments captured separately (waiver comments live
+//! there). Handles the lexical constructs that would otherwise corrupt
+//! a token scan: nested block comments, raw strings (`r#"..."#`),
+//! string escapes, and the char-literal vs lifetime ambiguity.
+
+/// Token class. The lint only branches on `Ident` vs everything else;
+/// the rest exist so the scan can skip literals safely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// Lexer output: the token stream plus line comments (for waivers).
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `(line, text)` for every `//` comment, in file order.
+    pub comments: Vec<(usize, String)>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source. Unknown bytes degrade to single-char `Punct`
+/// tokens — the lint only needs the structure around identifiers.
+pub fn tokenize(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (captured: waivers live here)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let mut j = i;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push((line, cs[i..j].iter().collect()));
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1i64;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw string: r"..." / r#"..."# / br#"..."#
+        {
+            let mut k = i;
+            if cs[k] == 'b' && k + 1 < n && cs[k + 1] == 'r' {
+                k += 1;
+            }
+            if cs[k] == 'r' {
+                let mut h = k + 1;
+                while h < n && cs[h] == '#' {
+                    h += 1;
+                }
+                if h < n && cs[h] == '"' {
+                    let hashes = h - (k + 1);
+                    let start_line = line;
+                    let mut j = h + 1;
+                    while j < n {
+                        if cs[j] == '\n' {
+                            line += 1;
+                        }
+                        if cs[j] == '"' {
+                            let mut m = 0usize;
+                            while m < hashes && j + 1 + m < n && cs[j + 1 + m] == '#' {
+                                m += 1;
+                            }
+                            if m == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    let j = j.min(n);
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: cs[i..j].iter().collect(),
+                        line: start_line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // plain / byte string with escapes
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let start_line = line;
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '"' {
+                    break;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            let j = (j + 1).min(n);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: cs[i..j].iter().collect(),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let next_is_ident = i + 1 < n && is_ident_start(cs[i + 1]);
+            let closes_as_char = i + 2 < n && cs[i + 2] == '\'';
+            if next_is_ident && !closes_as_char {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(cs[j]) {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Lifetime, text: cs[i..j].iter().collect(), line });
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\'' {
+                    break;
+                }
+                j += 1;
+            }
+            let j = (j + 1).min(n);
+            toks.push(Tok { kind: TokKind::Char, text: cs[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: cs[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let ch = cs[j];
+                let take = is_ident_cont(ch)
+                    || (ch == '.' && j + 1 < n && cs[j + 1].is_ascii_digit());
+                if !take {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: cs[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // multi-char punctuation the scans rely on: `::`, `->`, `=>`
+        if c == ':' && i + 1 < n && cs[i + 1] == ':' {
+            toks.push(Tok { kind: TokKind::Punct, text: "::".to_string(), line });
+            i += 2;
+            continue;
+        }
+        if (c == '-' || c == '=') && i + 1 < n && cs[i + 1] == '>' {
+            toks.push(Tok { kind: TokKind::Punct, text: cs[i..i + 2].iter().collect(), line });
+            i += 2;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    Lexed { toks, comments }
+}

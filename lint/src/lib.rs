@@ -1,0 +1,218 @@
+//! `cowclip-lint` — repo-invariant static analysis for the cowclip crate.
+//!
+//! The training and serving hot paths make promises an ordinary test
+//! suite can't police: allocation-free steady state, bit-exact
+//! determinism, panic-free request handling, and a consistent lock
+//! acquisition order. This crate enforces them structurally, as a
+//! blocking CI step, by lexing `rust/src/**` and running four rule
+//! families over the token streams:
+//!
+//! 1. **hotpath-alloc** — functions registered in `lint/hotpath.toml`
+//!    must not reach a forbidden allocation token through the
+//!    crate-local call graph.
+//! 2. **determinism** — no unordered containers or unordered float
+//!    sums in the numeric-accumulation modules.
+//! 3. **panic** — no panicking constructs in the serve request
+//!    lifecycle files.
+//! 4. **lock-order** — the "held while acquiring" graph over the
+//!    repo's known locks must stay cycle-free.
+//!
+//! Line-level escape hatch: `// lint:allow(<rule-id>): <justification>`
+//! on (or just above) the offending line. The justification is
+//! mandatory; an empty one is itself a violation (rule `waiver`).
+//!
+//! Deliberately dependency-free: a hand-rolled lexer plus token-level
+//! function/call extraction is exactly the granularity these rules
+//! need, and the repo builds offline.
+
+pub mod functions;
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+pub mod waivers;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use rules::locks::LockSpec;
+
+/// One rule violation, renderable as `file:line: [rule] message`.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// What the lint enforces: hot-path roots and allowlist (from the
+/// manifest) plus the repo's module policy (which dirs must be
+/// deterministic, which files must not panic, which locks exist).
+pub struct Config {
+    /// Hot-path roots, `file-suffix:qualified-name`.
+    pub roots: Vec<String>,
+    /// Call-graph allowlist: callee name (or `Type::name`) -> why.
+    pub allow: BTreeMap<String, String>,
+    /// Path substrings of the determinism-critical modules.
+    pub det_dirs: Vec<String>,
+    /// Path suffixes of the panic-free request lifecycle files.
+    pub panic_files: Vec<String>,
+    /// Subset of `panic_files` where slice indexing is also banned.
+    pub index_files: Vec<String>,
+    /// The repo's known locks, for acquisition-order extraction.
+    pub locks: Vec<LockSpec>,
+}
+
+impl Config {
+    /// The cowclip repo's policy. Roots and allowlist start empty;
+    /// load them from `lint/hotpath.toml` via [`Config::load_manifest`].
+    pub fn repo_policy() -> Config {
+        let s = |xs: &[&str]| xs.iter().map(|x| x.to_string()).collect::<Vec<String>>();
+        Config {
+            roots: Vec::new(),
+            allow: BTreeMap::new(),
+            det_dirs: s(&["coordinator/", "clip/", "optim/", "reference/"]),
+            panic_files: s(&["serve/queue.rs", "serve/request.rs", "serve/model.rs"]),
+            index_files: s(&["serve/queue.rs", "serve/request.rs"]),
+            locks: vec![
+                LockSpec {
+                    file_pat: "model/store.rs",
+                    recv: "weights",
+                    methods: &["read", "write"],
+                    canon: "ParamStore.weights",
+                },
+                LockSpec {
+                    file_pat: "model/store.rs",
+                    recv: "opt",
+                    methods: &["lock"],
+                    canon: "ParamStore.opt",
+                },
+                LockSpec {
+                    file_pat: "coordinator/",
+                    recv: "params",
+                    methods: &["read", "write"],
+                    canon: "ParamStore.weights",
+                },
+                LockSpec {
+                    file_pat: "coordinator/",
+                    recv: "store",
+                    methods: &["read", "write"],
+                    canon: "ParamStore.weights",
+                },
+                LockSpec {
+                    file_pat: "coordinator/pool.rs",
+                    recv: "rx",
+                    methods: &["lock"],
+                    canon: "StepPool.jobs",
+                },
+                LockSpec {
+                    file_pat: "serve/queue.rs",
+                    recv: "q",
+                    methods: &["lock"],
+                    canon: "serve.queue",
+                },
+                LockSpec {
+                    file_pat: "serve/queue.rs",
+                    recv: "counters",
+                    methods: &["lock"],
+                    canon: "serve.counters",
+                },
+                LockSpec {
+                    file_pat: "serve/queue.rs",
+                    recv: "error",
+                    methods: &["lock"],
+                    canon: "serve.error",
+                },
+            ],
+        }
+    }
+
+    /// Load hot-path roots and allowlist from `hotpath.toml`.
+    pub fn load_manifest(&mut self, path: &Path) -> Result<(), String> {
+        let src =
+            fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let (roots, allow) = manifest::parse_manifest(&src)?;
+        self.roots = roots;
+        self.allow = allow;
+        Ok(())
+    }
+}
+
+/// Lint a set of `(relative path, source)` pairs (one crate's worth of
+/// files) and return every violation, sorted by `(rule, file, line)`.
+pub fn lint_sources(files: &[(String, String)], cfg: &Config) -> Vec<Violation> {
+    let mut all_fns: Vec<functions::FnDef> = Vec::new();
+    let mut file_toks: Vec<(String, Vec<lexer::Tok>)> = Vec::new();
+    let mut waivers_by_file: BTreeMap<String, waivers::Waivers> = BTreeMap::new();
+    let mut violations: Vec<Violation> = Vec::new();
+    for (rel, src) in files {
+        let lexed = lexer::tokenize(src);
+        all_fns.extend(functions::extract_functions(rel, &lexed.toks));
+        let (w, bad) = waivers::parse(&lexed.comments);
+        for (line, rule) in bad {
+            violations.push(Violation {
+                rule: "waiver",
+                file: rel.clone(),
+                line,
+                msg: format!("lint:allow({rule}) without a justification"),
+            });
+        }
+        waivers_by_file.insert(rel.clone(), w);
+        file_toks.push((rel.clone(), lexed.toks));
+    }
+    violations.extend(rules::alloc::run(&all_fns, &cfg.roots, &cfg.allow, &waivers_by_file));
+    violations.extend(rules::determinism::run(
+        &all_fns,
+        &file_toks,
+        &cfg.det_dirs,
+        &waivers_by_file,
+    ));
+    violations.extend(rules::panics::run(
+        &all_fns,
+        &cfg.panic_files,
+        &cfg.index_files,
+        &waivers_by_file,
+    ));
+    violations.extend(rules::locks::run(&all_fns, &cfg.locks, &waivers_by_file));
+    violations.sort_by(|a, b| (a.rule, &a.file, a.line).cmp(&(b.rule, &b.file, b.line)));
+    violations
+}
+
+/// Lint every `.rs` file under `src_root` (recursively, sorted paths,
+/// `/`-normalized relative names).
+pub fn lint_dir(src_root: &Path, cfg: &Config) -> io::Result<Vec<Violation>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    collect_rs(src_root, &mut paths)?;
+    paths.sort();
+    let mut files: Vec<(String, String)> = Vec::new();
+    for p in &paths {
+        let rel = p
+            .strip_prefix(src_root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push((rel, fs::read_to_string(p)?));
+    }
+    Ok(lint_sources(&files, cfg))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

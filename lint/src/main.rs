@@ -1,0 +1,41 @@
+//! CLI entry point: lint the repo's `rust/src` tree against the policy
+//! in [`cowclip_lint::Config::repo_policy`] plus `lint/hotpath.toml`.
+//! Exit code 0 iff the tree is violation-free.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use cowclip_lint::Config;
+
+fn main() -> ExitCode {
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let Some(repo_root) = manifest_dir.parent() else {
+        eprintln!("cowclip-lint: cannot locate the repo root");
+        return ExitCode::FAILURE;
+    };
+    let mut cfg = Config::repo_policy();
+    if let Err(e) = cfg.load_manifest(&manifest_dir.join("hotpath.toml")) {
+        eprintln!("cowclip-lint: {e}");
+        return ExitCode::FAILURE;
+    }
+    let src_root = repo_root.join("rust").join("src");
+    let violations = match cowclip_lint::lint_dir(&src_root, &cfg) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("cowclip-lint: {}: {e}", src_root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if violations.is_empty() {
+        println!(
+            "cowclip-lint: rust/src is clean ({} hot-path roots, 4 rule families)",
+            cfg.roots.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    eprintln!("cowclip-lint: {} violation(s)", violations.len());
+    ExitCode::FAILURE
+}

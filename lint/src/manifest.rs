@@ -1,0 +1,41 @@
+//! Parser for `lint/hotpath.toml` — a deliberately tiny TOML subset:
+//! `#` comments, `[section]` headers, and `"key" = "value"` pairs.
+//! Keys in `[roots]` register hot-path entry points; keys in `[allow]`
+//! are call-graph allowlist entries with a justification as the value.
+
+use std::collections::BTreeMap;
+
+/// Parse the manifest text into `(roots, allow)`.
+///
+/// Returns `Err` with a line message on malformed non-comment lines so
+/// a typo in the manifest fails the lint run instead of silently
+/// dropping a root.
+pub fn parse_manifest(src: &str) -> Result<(Vec<String>, BTreeMap<String, String>), String> {
+    let mut roots: Vec<String> = Vec::new();
+    let mut allow: BTreeMap<String, String> = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            section = stripped.trim_end_matches(']').to_string();
+            continue;
+        }
+        let (k, v) = match line.split_once('=') {
+            Some((k, v)) => (k.trim().trim_matches('"'), v.trim().trim_matches('"')),
+            None => return Err(format!("hotpath.toml:{}: expected `key = value`", idx + 1)),
+        };
+        match section.as_str() {
+            "roots" => roots.push(k.to_string()),
+            "allow" => {
+                allow.insert(k.to_string(), v.to_string());
+            }
+            other => {
+                return Err(format!("hotpath.toml:{}: unknown section [{other}]", idx + 1));
+            }
+        }
+    }
+    Ok((roots, allow))
+}

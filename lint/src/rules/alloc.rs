@@ -1,0 +1,192 @@
+//! Rule 1: hot-path allocation freedom.
+//!
+//! Starting from each root in `lint/hotpath.toml`, walk the crate-local
+//! call graph and flag any forbidden allocation token reachable from
+//! it. Qualified calls (`Owner::name`) resolve exactly or are treated
+//! as external; unqualified calls resolve by simple name with
+//! module-locality narrowing (same file, then same directory) when
+//! ambiguous. Allowlisted callees stop the walk; `debug_assert*!`
+//! bodies are ignored (compiled out in release).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::functions::{calls_of, debug_spans, in_spans, FnDef};
+use crate::lexer::TokKind;
+use crate::waivers::Waivers;
+use crate::Violation;
+
+const ALLOC_METHODS: &[&str] = &["to_vec", "clone", "collect", "cloned", "to_string", "to_owned"];
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+fn is_alloc_qualified(owner: &str, name: &str) -> bool {
+    matches!(
+        (owner, name),
+        ("Vec", "new") | ("Box", "new") | ("String", "new") | ("String", "from")
+    )
+}
+
+/// Forbidden allocation token sites in a function body: `(line, what)`.
+pub fn alloc_sites(f: &FnDef) -> Vec<(usize, String)> {
+    let body = &f.body;
+    let spans = debug_spans(body);
+    let mut sites: Vec<(usize, String)> = Vec::new();
+    for k in 0..body.len() {
+        if in_spans(&spans, k) {
+            continue;
+        }
+        let t = &body[k];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let nxt = if k + 1 < body.len() { body[k + 1].text.as_str() } else { "" };
+        let prev = if k > 0 { body[k - 1].text.as_str() } else { "" };
+        if nxt == "!" && ALLOC_MACROS.contains(&t.text.as_str()) {
+            sites.push((t.line, format!("{}!", t.text)));
+        } else if nxt == "(" && prev == "." && ALLOC_METHODS.contains(&t.text.as_str()) {
+            sites.push((t.line, format!(".{}()", t.text)));
+        } else if t.text == "collect" && nxt == "::" {
+            // turbofish form: .collect::<Vec<_>>()
+            sites.push((t.line, ".collect()".to_string()));
+        } else if nxt == "(" && prev == "::" && k >= 2 {
+            let owner = body[k - 2].text.as_str();
+            if is_alloc_qualified(owner, &t.text) {
+                sites.push((t.line, format!("{owner}::{}", t.text)));
+            }
+        }
+    }
+    sites
+}
+
+fn dir_of(file: &str) -> &str {
+    file.rfind('/').map(|p| &file[..p]).unwrap_or("")
+}
+
+/// Walk the call graph from every root and report reachable allocation
+/// sites (deduped across roots by `(file, line, token)`).
+pub fn run(
+    fns: &[FnDef],
+    roots: &[String],
+    allow: &BTreeMap<String, String>,
+    waivers: &BTreeMap<String, Waivers>,
+) -> Vec<Violation> {
+    let mut by_simple: HashMap<&str, Vec<usize>> = HashMap::new();
+    let mut by_qual: HashMap<String, Vec<usize>> = HashMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        if f.is_test {
+            continue;
+        }
+        by_simple.entry(&f.name).or_default().push(i);
+        by_qual.entry(f.qname()).or_default().push(i);
+    }
+
+    let resolve = |caller: &FnDef, owner: Option<&str>, name: &str| -> Vec<usize> {
+        if let Some(o) = owner {
+            // Qualified call: exact match or external (std / foreign
+            // crate) — no simple-name fallback.
+            return by_qual.get(&format!("{o}::{name}")).cloned().unwrap_or_default();
+        }
+        let cand = by_simple.get(name).cloned().unwrap_or_default();
+        if cand.len() > 1 {
+            // Module-locality narrowing: same-file candidates (other
+            // than the caller itself) first, then same-directory ones;
+            // otherwise walk every candidate (conservative).
+            let ckey = caller.key();
+            let same_file: Vec<usize> = cand
+                .iter()
+                .copied()
+                .filter(|&i| fns[i].file == caller.file && fns[i].key() != ckey)
+                .collect();
+            if !same_file.is_empty() {
+                return same_file;
+            }
+            let cdir = dir_of(&caller.file);
+            let same_dir: Vec<usize> = cand
+                .iter()
+                .copied()
+                .filter(|&i| dir_of(&fns[i].file) == cdir && fns[i].key() != ckey)
+                .collect();
+            if !same_dir.is_empty() {
+                return same_dir;
+            }
+        }
+        cand
+    };
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut reported: HashSet<(String, usize, String)> = HashSet::new();
+    for rootspec in roots {
+        let Some((rfile, rq)) = rootspec.split_once(':') else {
+            violations.push(Violation {
+                rule: "hotpath-alloc",
+                file: rootspec.clone(),
+                line: 0,
+                msg: format!("malformed root spec {rootspec:?} (want file-suffix:qualified-name)"),
+            });
+            continue;
+        };
+        let Some(root) = fns
+            .iter()
+            .position(|f| f.file.ends_with(rfile) && f.qname() == rq && !f.is_test)
+        else {
+            violations.push(Violation {
+                rule: "hotpath-alloc",
+                file: rfile.to_string(),
+                line: 0,
+                msg: format!("root {rootspec} not found in tree"),
+            });
+            continue;
+        };
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut stack: Vec<(usize, Vec<String>)> = vec![(root, vec![fns[root].qname()])];
+        while let Some((fi, chain)) = stack.pop() {
+            let f = &fns[fi];
+            if !seen.insert(f.key()) {
+                continue;
+            }
+            let w = waivers.get(&f.file);
+            for (line, what) in alloc_sites(f) {
+                if w.is_some_and(|w| w.covers("hotpath-alloc", line)) {
+                    continue;
+                }
+                let key = (f.file.clone(), line, what.clone());
+                if !reported.insert(key) {
+                    continue;
+                }
+                let via = if chain.len() == 1 {
+                    String::new()
+                } else {
+                    format!(" (hot via {})", chain.join(" -> "))
+                };
+                violations.push(Violation {
+                    rule: "hotpath-alloc",
+                    file: f.file.clone(),
+                    line,
+                    msg: format!("{what} in hot-path fn {}{via}", f.qname()),
+                });
+            }
+            for call in calls_of(&f.body) {
+                if call.is_macro {
+                    continue;
+                }
+                let qual = call.owner.as_ref().map(|o| format!("{o}::{}", call.name));
+                if allow.contains_key(&call.name)
+                    || qual.as_ref().is_some_and(|q| allow.contains_key(q))
+                {
+                    continue;
+                }
+                for ci in resolve(f, call.owner.as_deref(), &call.name) {
+                    let callee = &fns[ci];
+                    if allow.contains_key(&callee.qname()) || allow.contains_key(&callee.name) {
+                        continue;
+                    }
+                    if !seen.contains(&callee.key()) {
+                        let mut chain2 = chain.clone();
+                        chain2.push(callee.qname());
+                        stack.push((ci, chain2));
+                    }
+                }
+            }
+        }
+    }
+    violations
+}

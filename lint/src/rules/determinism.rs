@@ -1,0 +1,71 @@
+//! Rule 2: determinism hygiene in the numeric-accumulation modules.
+//!
+//! `HashMap`/`HashSet` iteration order varies run to run, and floating
+//! point addition is not associative — an unordered reduction there
+//! silently breaks the repo's bit-exact parity contracts. Flag any
+//! unordered container in the listed modules, plus float sums drawn
+//! directly from `.values()` / `.keys()` iterators anywhere they
+//! appear. Test code is exempt.
+
+use std::collections::BTreeMap;
+
+use crate::functions::FnDef;
+use crate::lexer::{Tok, TokKind};
+use crate::waivers::Waivers;
+use crate::Violation;
+
+pub fn run(
+    fns: &[FnDef],
+    file_toks: &[(String, Vec<Tok>)],
+    det_dirs: &[String],
+    waivers: &BTreeMap<String, Waivers>,
+) -> Vec<Violation> {
+    let mut violations: Vec<Violation> = Vec::new();
+    for (file, toks) in file_toks {
+        if !det_dirs.iter().any(|d| file.contains(d.as_str())) {
+            continue;
+        }
+        let w = waivers.get(file);
+        // line ranges of test fns in this file (their bodies are exempt)
+        let test_ranges: Vec<(usize, usize)> = fns
+            .iter()
+            .filter(|f| f.file == *file && f.is_test && !f.body.is_empty())
+            .map(|f| (f.body[0].line, f.body[f.body.len() - 1].line))
+            .collect();
+        let in_test = |line: usize| test_ranges.iter().any(|&(a, b)| a <= line && line <= b);
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "HashMap" || t.text == "HashSet" {
+                if in_test(t.line) || w.is_some_and(|w| w.covers("determinism", t.line)) {
+                    continue;
+                }
+                violations.push(Violation {
+                    rule: "determinism",
+                    file: file.clone(),
+                    line: t.line,
+                    msg: format!("{} in numeric-accumulation module (unordered iteration)", t.text),
+                });
+            }
+            if (t.text == "values" || t.text == "keys")
+                && k + 1 < toks.len()
+                && toks[k + 1].text == "("
+            {
+                let window = &toks[k..toks.len().min(k + 14)];
+                if window.iter().any(|t| t.text == "sum") {
+                    if in_test(t.line) || w.is_some_and(|w| w.covers("determinism", t.line)) {
+                        continue;
+                    }
+                    violations.push(Violation {
+                        rule: "determinism",
+                        file: file.clone(),
+                        line: t.line,
+                        msg: "float sum over unordered iterator".to_string(),
+                    });
+                }
+            }
+        }
+    }
+    violations
+}

@@ -1,0 +1,168 @@
+//! Rule 4: lock-acquisition order discipline.
+//!
+//! Extracts "held while acquiring" edges between the repo's known
+//! locks (ParamStore weights/opt, StepPool jobs, the serve queue
+//! internals) by scanning each function body with brace-depth guard
+//! liveness: a `let`-bound guard lives until its block closes, an
+//! unbound temporary dies at the end of its statement. A cycle in the
+//! resulting graph is a potential deadlock and fails the lint.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::functions::FnDef;
+use crate::lexer::TokKind;
+use crate::waivers::Waivers;
+use crate::Violation;
+
+/// One known lock: where it lives, the receiver identifier it is
+/// acquired through, the acquisition methods, and its canonical name
+/// in the order graph.
+pub struct LockSpec {
+    /// Substring match against the file path (e.g. `"coordinator/"`).
+    pub file_pat: &'static str,
+    /// Receiver identifier at the call site (`self.<recv>.lock()`).
+    pub recv: &'static str,
+    pub methods: &'static [&'static str],
+    /// Canonical lock name; distinct receivers may alias one lock.
+    pub canon: &'static str,
+}
+
+type Edges = BTreeMap<String, BTreeSet<String>>;
+type Sites = HashMap<(String, String), (String, usize, String)>;
+
+pub fn run(
+    fns: &[FnDef],
+    locks: &[LockSpec],
+    waivers: &BTreeMap<String, Waivers>,
+) -> Vec<Violation> {
+    let mut edges: Edges = BTreeMap::new();
+    let mut sites: Sites = HashMap::new();
+    for f in fns {
+        if f.is_test {
+            continue;
+        }
+        // (canonical name, Some(bind depth) if let-bound)
+        let mut held: Vec<(String, Option<i64>)> = Vec::new();
+        let mut depth = 0i64;
+        let mut stmt_has_let = false;
+        let body = &f.body;
+        for k in 0..body.len() {
+            let t = &body[k];
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    held.retain(|h| match h.1 {
+                        Some(bind) => bind <= depth,
+                        None => true,
+                    });
+                }
+                ";" => {
+                    // unbound guard temporaries die at statement end
+                    held.retain(|h| h.1.is_some());
+                    stmt_has_let = false;
+                }
+                "let" => stmt_has_let = true,
+                _ => {}
+            }
+            let is_acquire = t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "lock" | "read" | "write")
+                && k + 1 < body.len()
+                && body[k + 1].text == "("
+                && k > 0
+                && body[k - 1].text == ".";
+            if !is_acquire {
+                continue;
+            }
+            let recv = if k >= 2 && body[k - 2].kind == TokKind::Ident {
+                Some(body[k - 2].text.as_str())
+            } else {
+                None
+            };
+            let canon = locks.iter().find_map(|l| {
+                let hit = f.file.contains(l.file_pat)
+                    && recv == Some(l.recv)
+                    && l.methods.contains(&t.text.as_str());
+                if hit {
+                    Some(l.canon)
+                } else {
+                    None
+                }
+            });
+            let Some(canon) = canon else {
+                continue;
+            };
+            for (h, _) in &held {
+                if h != canon {
+                    edges.entry(h.clone()).or_default().insert(canon.to_string());
+                    sites.insert(
+                        (h.clone(), canon.to_string()),
+                        (f.file.clone(), t.line, f.qname()),
+                    );
+                }
+            }
+            held.push((canon.to_string(), if stmt_has_let { Some(depth) } else { None }));
+        }
+    }
+
+    // DFS cycle detection over the edge graph (BTreeMap: deterministic)
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut color: HashMap<String, u8> = HashMap::new();
+    let nodes: Vec<String> = edges.keys().cloned().collect();
+    for u in &nodes {
+        if color.get(u).copied().unwrap_or(0) == 0 {
+            let mut path = vec![u.clone()];
+            dfs(u, &mut path, &mut color, &edges, &sites, waivers, &mut violations);
+        }
+    }
+    violations
+}
+
+fn dfs(
+    u: &str,
+    path: &mut Vec<String>,
+    color: &mut HashMap<String, u8>,
+    edges: &Edges,
+    sites: &Sites,
+    waivers: &BTreeMap<String, Waivers>,
+    out: &mut Vec<Violation>,
+) {
+    color.insert(u.to_string(), 1);
+    if let Some(vs) = edges.get(u) {
+        for v in vs {
+            match color.get(v).copied().unwrap_or(0) {
+                1 => {
+                    let cyc: Vec<String> = match path.iter().position(|x| x == v) {
+                        Some(p) => {
+                            let mut c = path[p..].to_vec();
+                            c.push(v.clone());
+                            c
+                        }
+                        None => vec![u.to_string(), v.clone()],
+                    };
+                    if let Some((file, line, q)) = sites.get(&(u.to_string(), v.clone())) {
+                        if waivers.get(file).is_some_and(|w| w.covers("lock-order", *line)) {
+                            continue;
+                        }
+                        out.push(Violation {
+                            rule: "lock-order",
+                            file: file.clone(),
+                            line: *line,
+                            msg: format!(
+                                "lock acquisition cycle: {} (edge {u} -> {v} in {q})",
+                                cyc.join(" -> ")
+                            ),
+                        });
+                    }
+                }
+                0 => {
+                    path.push(v.clone());
+                    dfs(v, path, color, edges, sites, waivers, out);
+                    path.pop();
+                }
+                _ => {}
+            }
+        }
+    }
+    color.insert(u.to_string(), 2);
+}

@@ -1,0 +1,14 @@
+//! The four rule families.
+//!
+//! * [`alloc`] — hot-path allocation freedom (transitive call-graph walk
+//!   from the roots in `lint/hotpath.toml`).
+//! * [`determinism`] — no unordered containers or unordered float sums
+//!   in the numeric-accumulation modules.
+//! * [`panics`] — no panicking constructs in the serve request lifecycle.
+//! * [`locks`] — a consistent global lock-acquisition order (cycle-free
+//!   held-while-acquiring graph).
+
+pub mod alloc;
+pub mod determinism;
+pub mod locks;
+pub mod panics;

@@ -1,0 +1,90 @@
+//! Rule 3: panic freedom in the serve request lifecycle.
+//!
+//! A panic in the scoring path takes down the worker (or poisons a
+//! shared lock) on a single bad request. In the listed files, flag
+//! panicking macros, `.unwrap()` / `.expect()`, and — in the files that
+//! handle raw request bytes — direct slice indexing (`x[i]`, which
+//! panics out of bounds). Poison-tolerant lock recovery
+//! (`unwrap_or_else(PoisonError::into_inner)`) passes because the
+//! matcher requires the exact `unwrap` identifier. Test code is exempt.
+
+use std::collections::BTreeMap;
+
+use crate::functions::{is_keyword, FnDef};
+use crate::lexer::TokKind;
+use crate::waivers::Waivers;
+use crate::Violation;
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne"];
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+
+pub fn run(
+    fns: &[FnDef],
+    panic_files: &[String],
+    index_files: &[String],
+    waivers: &BTreeMap<String, Waivers>,
+) -> Vec<Violation> {
+    let mut violations: Vec<Violation> = Vec::new();
+    for f in fns {
+        if f.is_test || !panic_files.iter().any(|p| f.file.ends_with(p.as_str())) {
+            continue;
+        }
+        let w = waivers.get(&f.file);
+        let waived = |line: usize| w.is_some_and(|w| w.covers("panic", line));
+        let index_file = index_files.iter().any(|p| f.file.ends_with(p.as_str()));
+        let body = &f.body;
+        for k in 0..body.len() {
+            let t = &body[k];
+            let nxt = if k + 1 < body.len() { body[k + 1].text.as_str() } else { "" };
+            let prev = if k > 0 { body[k - 1].text.as_str() } else { "" };
+            if t.kind == TokKind::Ident && nxt == "!" && PANIC_MACROS.contains(&t.text.as_str()) {
+                if waived(t.line) {
+                    continue;
+                }
+                violations.push(Violation {
+                    rule: "panic",
+                    file: f.file.clone(),
+                    line: t.line,
+                    msg: format!("{}! in request lifecycle fn {}", t.text, f.qname()),
+                });
+            }
+            if t.kind == TokKind::Ident
+                && nxt == "("
+                && prev == "."
+                && PANIC_METHODS.contains(&t.text.as_str())
+            {
+                if waived(t.line) {
+                    continue;
+                }
+                violations.push(Violation {
+                    rule: "panic",
+                    file: f.file.clone(),
+                    line: t.line,
+                    msg: format!(".{}() in request lifecycle fn {}", t.text, f.qname()),
+                });
+            }
+            if t.text == "[" && index_file {
+                // `x[i]` / `f(..)[i]` / `x[i][j]` — but not array
+                // literals, attributes, or slice patterns
+                let (pk, pt) = if k > 0 {
+                    (body[k - 1].kind, body[k - 1].text.as_str())
+                } else {
+                    (TokKind::Punct, "")
+                };
+                if (pk == TokKind::Ident && !is_keyword(pt)) || pt == ")" || pt == "]" {
+                    if waived(t.line) {
+                        continue;
+                    }
+                    violations.push(Violation {
+                        rule: "panic",
+                        file: f.file.clone(),
+                        line: t.line,
+                        msg: format!("slice index (may panic) in request lifecycle fn {}", f.qname()),
+                    });
+                }
+            }
+        }
+    }
+    violations
+}

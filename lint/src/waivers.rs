@@ -1,0 +1,54 @@
+//! Waiver comments: `// lint:allow(<rule-id>): <justification>`.
+//!
+//! A waiver on line L covers violations on lines L and L+1, so both
+//! trailing same-line comments and a comment on the line above work.
+//! The justification is mandatory — a waiver without one is itself a
+//! violation (rule `waiver`), keeping the escape hatch auditable.
+
+use std::collections::BTreeMap;
+
+/// Per-file waiver index: line -> waived rule id.
+#[derive(Default)]
+pub struct Waivers {
+    map: BTreeMap<usize, String>,
+}
+
+impl Waivers {
+    /// Does a waiver for `rule` cover `line`?
+    pub fn covers(&self, rule: &str, line: usize) -> bool {
+        if self.map.get(&line).map(String::as_str) == Some(rule) {
+            return true;
+        }
+        line > 0 && self.map.get(&(line - 1)).map(String::as_str) == Some(rule)
+    }
+}
+
+/// Scan a file's line comments for waivers. Returns the index plus the
+/// `(line, rule)` list of waivers missing a justification.
+pub fn parse(comments: &[(usize, String)]) -> (Waivers, Vec<(usize, String)>) {
+    let mut w = Waivers::default();
+    let mut bad: Vec<(usize, String)> = Vec::new();
+    for (line, text) in comments {
+        let Some(pos) = text.find("lint:allow(") else {
+            continue;
+        };
+        let after = &text[pos + "lint:allow(".len()..];
+        let Some(close) = after.find(')') else {
+            continue;
+        };
+        let rule = after[..close].trim().to_string();
+        if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_lowercase() || c == '-') {
+            continue;
+        }
+        let mut rest = after[close + 1..].trim();
+        if let Some(r) = rest.strip_prefix(':') {
+            rest = r.trim();
+        }
+        if rest.is_empty() {
+            bad.push((*line, rule));
+            continue;
+        }
+        w.map.insert(*line, rule);
+    }
+    (w, bad)
+}

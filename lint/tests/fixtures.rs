@@ -1,0 +1,112 @@
+//! Fixture corpus: every rule family has a pass fixture (clean code
+//! the lint must accept) and a fail fixture (a violation it must
+//! flag). Fixtures live under `lint/fixtures/` and are lexed by the
+//! lint, never compiled.
+
+use std::path::Path;
+
+use cowclip_lint::{lint_sources, Config, Violation};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+/// Lint one fixture under the relative path `rel` (rules key off path
+/// patterns, so the test picks the path that activates the rule).
+fn run_one(rel: &str, name: &str, cfg: &Config) -> Vec<Violation> {
+    lint_sources(&[(rel.to_string(), fixture(name))], cfg)
+}
+
+fn rules(vs: &[Violation]) -> Vec<&'static str> {
+    vs.iter().map(|v| v.rule).collect()
+}
+
+fn hotpath_cfg(roots: &[&str]) -> Config {
+    let mut cfg = Config::repo_policy();
+    cfg.roots = roots.iter().map(|s| s.to_string()).collect();
+    cfg.allow
+        .insert("allowed_helper".to_string(), "allowlisted by the fixture config".to_string());
+    cfg
+}
+
+#[test]
+fn hotpath_pass() {
+    let cfg = hotpath_cfg(&["hot/case.rs:hot_root", "hot/case.rs:hot_with_waiver"]);
+    let vs = run_one("hot/case.rs", "pass/hotpath_alloc.rs", &cfg);
+    assert!(vs.is_empty(), "expected clean, got: {vs:?}");
+}
+
+#[test]
+fn hotpath_fail_flags_transitive_alloc() {
+    // Only list roots that exist in this fixture: a missing root is
+    // itself a hotpath-alloc violation and would mask the assertion.
+    let cfg = hotpath_cfg(&["hot/case.rs:hot_root"]);
+    let vs = run_one("hot/case.rs", "fail/hotpath_alloc.rs", &cfg);
+    assert!(!vs.is_empty(), "transitive vec![] must be flagged");
+    assert!(vs.iter().all(|v| v.rule == "hotpath-alloc"), "{vs:?}");
+    assert!(
+        vs.iter().any(|v| v.msg.contains("vec!") && v.msg.contains("hot via")),
+        "wanted the hot via chain in {vs:?}"
+    );
+}
+
+#[test]
+fn determinism_pass() {
+    let vs = run_one("coordinator/fixture.rs", "pass/determinism.rs", &Config::repo_policy());
+    assert!(vs.is_empty(), "expected clean, got: {vs:?}");
+}
+
+#[test]
+fn determinism_fail_flags_unordered() {
+    let vs = run_one("coordinator/fixture.rs", "fail/determinism.rs", &Config::repo_policy());
+    assert!(!vs.is_empty());
+    assert!(vs.iter().all(|v| v.rule == "determinism"), "{vs:?}");
+    assert!(vs.iter().any(|v| v.msg.contains("HashMap")), "{vs:?}");
+    assert!(vs.iter().any(|v| v.msg.contains("float sum")), "{vs:?}");
+}
+
+#[test]
+fn panic_pass() {
+    let vs = run_one("serve/queue.rs", "pass/panic.rs", &Config::repo_policy());
+    assert!(vs.is_empty(), "expected clean, got: {vs:?}");
+}
+
+#[test]
+fn panic_fail_flags_unwrap_and_indexing() {
+    let vs = run_one("serve/queue.rs", "fail/panic.rs", &Config::repo_policy());
+    assert_eq!(rules(&vs), vec!["panic", "panic"], "{vs:?}");
+    assert!(vs.iter().any(|v| v.msg.contains(".unwrap()")), "{vs:?}");
+    assert!(vs.iter().any(|v| v.msg.contains("slice index")), "{vs:?}");
+}
+
+#[test]
+fn lock_order_pass() {
+    let vs = run_one("model/store.rs", "pass/lock_order.rs", &Config::repo_policy());
+    assert!(vs.is_empty(), "expected clean, got: {vs:?}");
+}
+
+#[test]
+fn lock_order_fail_flags_cycle() {
+    let vs = run_one("model/store.rs", "fail/lock_order.rs", &Config::repo_policy());
+    assert!(!vs.is_empty(), "opposite acquisition orders must be flagged");
+    assert!(vs.iter().all(|v| v.rule == "lock-order"), "{vs:?}");
+    assert!(vs[0].msg.contains("cycle"), "{vs:?}");
+}
+
+#[test]
+fn waiver_without_justification_is_flagged() {
+    let vs =
+        run_one("hot/case.rs", "fail/waiver_missing_justification.rs", &Config::repo_policy());
+    assert_eq!(rules(&vs), vec!["waiver"], "{vs:?}");
+    assert!(vs[0].msg.contains("without a justification"), "{vs:?}");
+}
+
+#[test]
+fn manifest_parses_roots_and_allow() {
+    let src = "# comment\n[roots]\n\"a.rs:f\" = \"why\"\n[allow]\n\"g\" = \"because\"\n";
+    let (roots, allow) = cowclip_lint::manifest::parse_manifest(src).expect("parses");
+    assert_eq!(roots, vec!["a.rs:f".to_string()]);
+    assert_eq!(allow.get("g").map(String::as_str), Some("because"));
+    assert!(cowclip_lint::manifest::parse_manifest("[roots]\nnot a pair\n").is_err());
+}

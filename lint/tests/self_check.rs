@@ -1,0 +1,21 @@
+//! Self-check: the real `rust/src` tree must be violation-free under
+//! the shipped policy + manifest. This is the same run CI performs via
+//! `cargo run -p cowclip-lint`, expressed as a test so `cargo test -p
+//! cowclip-lint` also covers it.
+
+use std::path::Path;
+
+use cowclip_lint::Config;
+
+#[test]
+fn real_tree_is_violation_free() {
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = manifest_dir.parent().expect("lint crate lives inside the repo");
+    let mut cfg = Config::repo_policy();
+    cfg.load_manifest(&manifest_dir.join("hotpath.toml")).expect("hotpath.toml parses");
+    assert!(!cfg.roots.is_empty(), "hotpath.toml must register hot-path roots");
+    let vs = cowclip_lint::lint_dir(&repo_root.join("rust").join("src"), &cfg)
+        .expect("rust/src is readable");
+    let rendered: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+    assert!(vs.is_empty(), "rust/src has lint violations:\n{}", rendered.join("\n"));
+}

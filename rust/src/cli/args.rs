@@ -26,7 +26,11 @@ impl Args {
                     .peek()
                     .map(|n| n.starts_with("--"))
                     .unwrap_or(true);
-                let value = if is_flag { "true".to_string() } else { it.next().unwrap() };
+                let value = if is_flag {
+                    "true".to_string()
+                } else {
+                    it.next().with_context(|| format!("--{key} is missing its value"))?
+                };
                 if args.flags.insert(key.to_string(), value).is_some() {
                     bail!("duplicate flag --{key}");
                 }

@@ -403,7 +403,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
             }
             // bound driver memory without closing the loop on every reply
             while pending.len() > 50_000 {
-                let _ = pending.pop_front().unwrap().recv();
+                if let Some(rx) = pending.pop_front() {
+                    let _ = rx.recv();
+                }
             }
         }
         let offered_qps = offered.qps();
@@ -548,7 +550,8 @@ fn artifacts_cmd(args: &Args) -> Result<()> {
             println!("compiled {compiled}/{} programs OK", m.artifacts.len());
             // schema drift check against rust presets
             for name in ["criteo_synth", "avazu_synth"] {
-                let ours = crate::data::schema::by_name(name).unwrap();
+                let ours = crate::data::schema::by_name(name)
+                    .with_context(|| format!("unknown preset schema {name}"))?;
                 let theirs = m.schema(name)?;
                 if ours != theirs {
                     bail!("schema drift for {name}");

@@ -137,6 +137,35 @@
 //! `lto = "thin"` and `codegen-units = 1` so the kernel tier inlines
 //! across module boundaries.
 //!
+//! ## Enforced invariants
+//!
+//! The promises above are policed structurally by `cowclip-lint` (the
+//! `lint/` workspace member), a dependency-free static analysis pass
+//! that runs blocking in CI (`cargo run -p cowclip-lint`, tests via
+//! `cargo test -p cowclip-lint`). Four rule families over `rust/src`:
+//!
+//! 1. **hotpath-alloc** — the hot-path roots registered in
+//!    `lint/hotpath.toml` (training forward/backward, clip, lazy Adam,
+//!    tree-reduce merge, serve scoring) must not reach a forbidden
+//!    allocation token (`Vec::new`, `vec![]`, `.clone()`, `.collect()`,
+//!    `format!`, …) through the crate-local call graph.
+//! 2. **determinism** — no `HashMap`/`HashSet` and no float sums over
+//!    unordered iterators in `coordinator/`, `clip/`, `optim/`,
+//!    `reference/` (bit-exact parity depends on ordered reduction).
+//! 3. **panic** — no `unwrap`/`expect`/panicking macros/slice indexing
+//!    in the serve request lifecycle (`serve/{queue,request,model}.rs`);
+//!    locks there recover from poisoning via
+//!    `unwrap_or_else(PoisonError::into_inner)`.
+//! 4. **lock-order** — the "held while acquiring" graph over
+//!    `ParamStore.weights`/`ParamStore.opt`/`StepPool.jobs` and the
+//!    serve-queue locks must stay cycle-free.
+//!
+//! Escape hatch, per line and audited: a trailing or preceding comment
+//! `lint:allow(<rule-id>): <justification>` — the justification is
+//! mandatory. The crate itself compiles under `#![forbid(unsafe_code)]`
+//! and `#![deny(unused_must_use)]`, and the concurrency-heavy parity
+//! suites run under ThreadSanitizer in CI's `sanitize` job.
+//!
 //! ## Features
 //!
 //! The `pjrt` cargo feature (off by default) compiles the real
@@ -156,6 +185,9 @@
 //! Entry points: the `cowclip` binary (see `cli`), the five `examples/`,
 //! and the benches above. Start with [`runtime::Runtime`] +
 //! [`coordinator::Trainer`] if you are embedding the library.
+
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
 
 pub mod cli;
 pub mod clip;

@@ -278,7 +278,7 @@ impl ReferenceModel {
                     scratch.recycle(sq);
                 }
                 let mut m = d0;
-                let mut h: Vec<f32> = Vec::new(); // empty = input is x0
+                let mut h: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (placeholder: input is x0)
                 for &nn in &self.hidden {
                     let w = r.next()?;
                     let bias = r.next()?;
@@ -311,7 +311,7 @@ impl ReferenceModel {
             }
             ModelKind::Dcn | ModelKind::DcnV2 => {
                 // cross stream (ping-pong buffers; empty = x0)
-                let mut xl: Vec<f32> = Vec::new();
+                let mut xl: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (ping-pong placeholder)
                 for _ in 0..self.n_cross {
                     let w = r.next()?;
                     let bias = r.next()?;
@@ -352,7 +352,7 @@ impl ReferenceModel {
                 }
                 // deep stream (hidden only)
                 let mut m = d0;
-                let mut h: Vec<f32> = Vec::new();
+                let mut h: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (placeholder: input is x0)
                 for &nn in &self.hidden {
                     let w = r.next()?;
                     let bias = r.next()?;
@@ -425,12 +425,12 @@ impl ReferenceModel {
         embed_concat_fwd(embed_table, ids, dense, b, f, d, nd, &mut x0);
 
         let n_hidden = self.hidden.len();
-        let mut fm_sums: Vec<f32> = Vec::new();
+        let mut fm_sums: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (kind-dependent cache slot)
         let mut mlp_pre: Vec<Vec<f32>> = Vec::with_capacity(n_hidden);
         let mut mlp_h: Vec<Vec<f32>> = Vec::with_capacity(n_hidden);
         let mut cross_su: Vec<Vec<f32>> = Vec::with_capacity(self.n_cross);
         let mut cross_out: Vec<Vec<f32>> = Vec::with_capacity(self.n_cross);
-        let mut head_in: Vec<f32> = Vec::new();
+        let mut head_in: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (kind-dependent cache slot)
 
         let logits: Vec<f32> = match self.kind {
             ModelKind::DeepFm | ModelKind::WideDeep => {
@@ -598,7 +598,7 @@ impl ReferenceModel {
                 let (dwide, dbias) = wide_bwd_sparse(dlogits, ids, touched, f);
                 // deep stream: head + hidden layers, walked backward
                 let n_hidden = self.hidden.len();
-                let mut dims = vec![d0];
+                let mut dims = vec![d0]; // lint:allow(hotpath-alloc): O(layers) shape bookkeeping, not per-element churn
                 dims.extend_from_slice(&self.hidden);
                 dims.push(1);
                 // collect weight refs in forward order
@@ -653,14 +653,14 @@ impl ReferenceModel {
                 }
                 // assemble positional grads: embed, wide, wide_bias, mlp...
                 let dtable = embed_bwd_sparse_strided(&dx0, d0, ids, touched, f, d);
-                grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable)));
-                grads.push(GradTensor::Sparse(SparseRows::new(v, 1, touched.to_vec(), dwide)));
-                grads.push(GradTensor::Dense(Tensor::f32(vec![1], vec![dbias])));
+                grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable))); // lint:allow(hotpath-alloc): escaping payload: sparse grad owns its touched-row copy
+                grads.push(GradTensor::Sparse(SparseRows::new(v, 1, touched.to_vec(), dwide))); // lint:allow(hotpath-alloc): escaping payload: sparse grad owns its touched-row copy
+                grads.push(GradTensor::Dense(Tensor::f32(vec![1], vec![dbias]))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
                 for (dw, db) in dws {
                     let n = db.len();
                     let m = dw.len() / n;
-                    grads.push(GradTensor::Dense(Tensor::f32(vec![m, n], dw)));
-                    grads.push(GradTensor::Dense(Tensor::f32(vec![n], db)));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![m, n], dw))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![n], db))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
                 }
             }
             ModelKind::Dcn | ModelKind::DcnV2 => {
@@ -704,7 +704,7 @@ impl ReferenceModel {
                 scratch.recycle(dhead_in);
 
                 // deep stream backward
-                let mut dims = vec![d0];
+                let mut dims = vec![d0]; // lint:allow(hotpath-alloc): O(layers) shape bookkeeping, not per-element churn
                 dims.extend_from_slice(&self.hidden);
                 let mut mlp_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_hidden);
                 for layer in (0..n_hidden).rev() {
@@ -738,7 +738,7 @@ impl ReferenceModel {
                             // x_{l+1} = x0 * s + b + xl, s = xl . w
                             let mut ds = scratch.take(b);
                             rowdot_into(&cache.x0, &dxl, &mut ds, b, d0);
-                            let mut dw = vec![0.0f32; d0];
+                            let mut dw = vec![0.0f32; d0]; // lint:allow(hotpath-alloc): escaping payload: per-layer cross grad accumulator
                             for i in 0..b {
                                 axpy(&mut dw, &xl_in[i * d0..(i + 1) * d0], ds[i]);
                             }
@@ -780,23 +780,23 @@ impl ReferenceModel {
                 scratch.recycle(dxl);
 
                 let dtable = embed_bwd_sparse_strided(&dx0, d0, ids, touched, f, d);
-                grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable)));
+                grads.push(GradTensor::Sparse(SparseRows::new(v, d, touched.to_vec(), dtable))); // lint:allow(hotpath-alloc): escaping payload: sparse grad owns its touched-row copy
                 for (dw, db) in cross_grads {
                     if self.kind == ModelKind::Dcn {
-                        grads.push(GradTensor::Dense(Tensor::f32(vec![d0], dw)));
+                        grads.push(GradTensor::Dense(Tensor::f32(vec![d0], dw))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
                     } else {
-                        grads.push(GradTensor::Dense(Tensor::f32(vec![d0, d0], dw)));
+                        grads.push(GradTensor::Dense(Tensor::f32(vec![d0, d0], dw))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
                     }
-                    grads.push(GradTensor::Dense(Tensor::f32(vec![d0], db)));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![d0], db))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
                 }
                 for (dw, db) in mlp_grads {
                     let n = db.len();
                     let m = dw.len() / n;
-                    grads.push(GradTensor::Dense(Tensor::f32(vec![m, n], dw)));
-                    grads.push(GradTensor::Dense(Tensor::f32(vec![n], db)));
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![m, n], dw))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
+                    grads.push(GradTensor::Dense(Tensor::f32(vec![n], db))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
                 }
-                grads.push(GradTensor::Dense(Tensor::f32(vec![hc, 1], dhead_w)));
-                grads.push(GradTensor::Dense(Tensor::f32(vec![1], dhead_b)));
+                grads.push(GradTensor::Dense(Tensor::f32(vec![hc, 1], dhead_w))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
+                grads.push(GradTensor::Dense(Tensor::f32(vec![1], dhead_b))); // lint:allow(hotpath-alloc): escaping payload: grad tensor shape
             }
         }
         scratch.recycle(dx0);

@@ -215,7 +215,7 @@ impl ServeModel {
     ) -> Result<Vec<f32>> {
         let b = reqs.len();
         if b == 0 {
-            return Ok(Vec::new());
+            return Ok(Vec::new()); // lint:allow(hotpath-alloc): empty Vec never allocates (empty batch)
         }
         let f = self.model.schema.n_cat();
         let d = self.model.embed_dim;

@@ -33,7 +33,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -170,17 +170,17 @@ impl Server {
     /// Flush the queue, stop the scoring threads and return the stats.
     pub fn shutdown(mut self) -> Result<ServeStats> {
         {
-            let mut st = self.shared.q.lock().unwrap();
+            let mut st = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             st.shutdown = true;
         }
         self.shared.cv.notify_all();
         for h in self.workers.drain(..) {
             h.join().map_err(|_| anyhow::anyhow!("scoring thread panicked"))?;
         }
-        if let Some(e) = self.shared.error.lock().unwrap().take() {
+        if let Some(e) = self.shared.error.lock().unwrap_or_else(PoisonError::into_inner).take() {
             bail!("serving error: {e}");
         }
-        let c = self.shared.counters.lock().unwrap();
+        let c = self.shared.counters.lock().unwrap_or_else(PoisonError::into_inner);
         Ok(ServeStats {
             requests: c.requests,
             batches: c.batches,
@@ -203,7 +203,7 @@ impl Client {
         req.validate(self.shared.model.schema())?;
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.shared.q.lock().unwrap();
+            let mut st = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             if st.shutdown {
                 bail!("server is shutting down");
             }
@@ -221,7 +221,7 @@ impl Client {
                 .shared
                 .error
                 .lock()
-                .unwrap()
+                .unwrap_or_else(PoisonError::into_inner)
                 .clone()
                 .unwrap_or_else(|| "scoring dropped the request".into());
             anyhow::anyhow!("serving error: {msg}")
@@ -239,24 +239,30 @@ fn worker_loop(shared: &Shared) {
     loop {
         // --- coalesce: wait for a full batch or the oldest deadline ---
         let batch: Vec<PendingReq> = {
-            let mut st = shared.q.lock().unwrap();
+            let mut st = shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if st.deque.is_empty() {
                     if st.shutdown {
                         return;
                     }
-                    st = shared.cv.wait(st).unwrap();
+                    st = shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                     continue;
                 }
                 if st.deque.len() >= max_batch || st.shutdown {
                     break; // size trigger (or flush-on-shutdown)
                 }
-                let deadline = st.deque.front().unwrap().enqueued + shared.cfg.max_delay;
+                let deadline = match st.deque.front() {
+                    Some(p) => p.enqueued + shared.cfg.max_delay,
+                    None => continue,
+                };
                 let now = Instant::now();
                 if now >= deadline {
                     break; // latency-deadline trigger
                 }
-                let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = guard;
             }
             let take = st.deque.len().min(max_batch);
@@ -277,7 +283,7 @@ fn worker_loop(shared: &Shared) {
             Ok(logits) => {
                 let scored_at = Instant::now();
                 {
-                    let mut c = shared.counters.lock().unwrap();
+                    let mut c = shared.counters.lock().unwrap_or_else(PoisonError::into_inner);
                     c.batches += 1;
                     c.requests += reqs.len() as u64;
                     for (enq, _) in &meta {
@@ -294,7 +300,7 @@ fn worker_loop(shared: &Shared) {
                 scratch.recycle(logits);
             }
             Err(e) => {
-                let mut slot = shared.error.lock().unwrap();
+                let mut slot = shared.error.lock().unwrap_or_else(PoisonError::into_inner);
                 if slot.is_none() {
                     *slot = Some(e.to_string());
                 }

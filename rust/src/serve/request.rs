@@ -72,7 +72,8 @@ pub fn read_requests_tsv(path: &Path, schema: &Schema) -> Result<Vec<Request>> {
     let want = schema.n_cat() + schema.n_dense;
     let mut out = Vec::new();
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
-        let line = line?;
+        let line = line
+            .with_context(|| format!("{}:{}: read error", path.display(), lineno + 1))?;
         let trimmed = line.trim();
         if trimmed.is_empty() || trimmed.starts_with('#') {
             continue;
@@ -89,18 +90,27 @@ pub fn read_requests_tsv(path: &Path, schema: &Schema) -> Result<Vec<Request>> {
                 schema.n_dense
             );
         }
-        let cat: Vec<i32> = toks[..schema.n_cat()]
+        let (cat_toks, dense_toks) = toks.split_at(schema.n_cat());
+        let cat: Vec<i32> = cat_toks
             .iter()
-            .map(|t| {
-                t.parse()
-                    .with_context(|| format!("{}:{}: bad id {t:?}", path.display(), lineno + 1))
+            .enumerate()
+            .map(|(col, t)| {
+                t.parse().with_context(|| {
+                    format!("{}:{}: column {}: bad id {t:?}", path.display(), lineno + 1, col + 1)
+                })
             })
             .collect::<Result<_>>()?;
-        let dense: Vec<f32> = toks[schema.n_cat()..]
+        let dense: Vec<f32> = dense_toks
             .iter()
-            .map(|t| {
+            .enumerate()
+            .map(|(col, t)| {
                 t.parse().with_context(|| {
-                    format!("{}:{}: bad dense value {t:?}", path.display(), lineno + 1)
+                    format!(
+                        "{}:{}: column {}: bad dense value {t:?}",
+                        path.display(),
+                        lineno + 1,
+                        schema.n_cat() + col + 1
+                    )
                 })
             })
             .collect::<Result<_>>()?;
