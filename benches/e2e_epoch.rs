@@ -28,6 +28,11 @@
 //!
 //! `-- --smoke` runs tiny threaded-arm, sharded-arm and hot-path
 //! configs (CI compile+run gate, a few seconds).
+//!
+//! The hot-path arm's numbers are also written to `BENCH_e2e.json` —
+//! tagged with the host arch and the active SIMD kernel tier (see
+//! `reference::simd`) — so CI can archive the throughput trajectory
+//! alongside `BENCH_kernels.json`.
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
@@ -161,7 +166,7 @@ fn reference_sharded_apply_speedup(smoke: bool) {
 /// arenas, tree reduce, deferred-merge apply). Print-and-compare across
 /// PR builds — the parity gates guarantee the math is unchanged, so any
 /// delta here is pure systems speedup.
-fn reference_hot_path_throughput(smoke: bool) {
+fn reference_hot_path_throughput(smoke: bool) -> Vec<String> {
     let schema = cowclip::data::schema::criteo_synth();
     let n = if smoke { 6_000 } else { 20_000 };
     let batches: &[usize] = if smoke { &[512] } else { &[512, 2048] };
@@ -173,23 +178,44 @@ fn reference_hot_path_throughput(smoke: bool) {
         "{:>8} {:>10} {:>10} {:>10} {:>12}",
         "batch", "steps", "step s", "steps/s", "rows/s"
     );
+    let mut rows = Vec::new();
     for &batch in batches {
         let mut trainer = Trainer::new(reference_engine(&schema), reference_cfg(batch)).unwrap();
         let report = trainer.train(&train, &test).unwrap();
+        let steps = report.steps;
         let t = report.seconds("step").max(1e-9);
-        println!(
-            "{:>8} {:>10} {:>10.2} {:>10.1} {:>12.0}",
-            batch,
-            report.steps,
-            t,
-            report.steps as f64 / t,
-            (report.steps * batch) as f64 / t
-        );
+        let steps_s = steps as f64 / t;
+        let rows_s = (steps * batch) as f64 / t;
+        println!("{batch:>8} {steps:>10} {t:>10.2} {steps_s:>10.1} {rows_s:>12.0}");
+        rows.push(format!(
+            "    {{\"batch\": {batch}, \"steps\": {steps}, \"step_s\": {t:.6}, \
+             \"steps_per_s\": {steps_s:.3}, \"rows_per_s\": {rows_s:.1}}}"
+        ));
     }
     println!(
         "(compare across PR builds at fixed config: the kernel/memory tier \
          is the only variable — see benches/kernels.rs for per-kernel numbers)\n"
     );
+    rows
+}
+
+/// Machine-readable mirror of the hot-path arm, tagged with the host
+/// arch and the active SIMD kernel tier (hand-formatted JSON: the repo
+/// carries no serializer dependency).
+fn write_bench_json(smoke: bool, rows: &[String]) {
+    let kernel = cowclip::reference::simd::active().name;
+    let json = format!(
+        "{{\n  \"bench\": \"e2e_epoch\",\n  \"smoke\": {},\n  \"arch\": \"{}\",\n  \
+         \"kernel\": \"{}\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        smoke,
+        std::env::consts::ARCH,
+        kernel,
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_e2e.json", &json) {
+        Ok(()) => println!("wrote BENCH_e2e.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("BENCH_e2e.json not written: {e}"),
+    }
 }
 
 fn reference_sparse_vs_dense() {
@@ -303,14 +329,16 @@ fn hlo_epochs() {
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
-        reference_hot_path_throughput(true);
+        let rows = reference_hot_path_throughput(true);
         reference_threaded_speedup(true);
         reference_sharded_apply_speedup(true);
+        write_bench_json(true, &rows);
         return;
     }
-    reference_hot_path_throughput(false);
+    let rows = reference_hot_path_throughput(false);
     reference_sparse_vs_dense();
     reference_threaded_speedup(false);
     reference_sharded_apply_speedup(false);
     hlo_epochs();
+    write_bench_json(false, &rows);
 }

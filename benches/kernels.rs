@@ -1,21 +1,30 @@
-//! Kernel microbenchmarks: the PR-5 vectorized/fused tier vs the kept
-//! naive oracles.
+//! Kernel microbenchmarks: the runtime-dispatched SIMD tier vs the
+//! scalar blocked tier vs the kept naive oracles.
+//!
+//! Three tiers race on every kernel:
+//!
+//! * **simd** — whatever `reference::simd::active()` resolved on this
+//!   host (AVX2+FMA, NEON, or scalar; pin with `COWCLIP_KERNEL=`),
+//! * **scalar** — the portable blocked kernels behind the scalar
+//!   vtable (the speedup denominator),
+//! * **naive** — the original scalar loops (`linalg::naive`), kept as
+//!   the correctness oracle.
+//!
+//! Covered: `matmul` fwd (`x@w`), bwd-input (`g@w^T`), bwd-weight
+//! (`x^T@g`), the fused gather+concat (`embed_concat_fwd`), and the
+//! fused serving gather+dequantize (`dequant_row` per gathered row).
 //!
 //! Reports GFLOP/s (matmuls) and GB/s (gathers) plus the
-//! vectorized-over-naive speedup per kernel:
-//!
-//! * `matmul` fwd (`x@w`), bwd-input (`g@w^T`), bwd-weight (`x^T@g`)
-//! * embedding gather — the fused gather+concat (`embed_concat_fwd`)
-//!   vs gather-then-copy through a staging buffer
-//! * fused gather+dequantize (`QuantizedTable::row_into` per row) vs
-//!   dequantize-everything-then-gather
-//!
-//! For peak numbers run with the machine's full SIMD set:
-//! `RUSTFLAGS="-C target-cpu=native" cargo bench --bench kernels`.
-//! `-- --smoke` shrinks every shape to a compile+run CI gate.
+//! simd-over-scalar speedup per kernel, and writes the same numbers —
+//! with the host arch, the detected CPU features and the active kernel
+//! tier — to `BENCH_kernels.json` for the CI artifact trail. No
+//! `RUSTFLAGS` needed: dispatch is resolved at startup from runtime
+//! feature detection. `-- --smoke` shrinks every shape to a
+//! compile+run CI gate.
 
-use cowclip::reference::layers::{embed_concat_fwd, embed_fwd};
-use cowclip::reference::linalg::{self, naive};
+use cowclip::reference::layers::embed_fwd;
+use cowclip::reference::linalg::naive;
+use cowclip::reference::simd::{self, scalar};
 use cowclip::serve::quant::QuantizedTable;
 use cowclip::util::bench::bench;
 use cowclip::util::Rng;
@@ -32,7 +41,42 @@ fn gbps(bytes: f64, mean_ms: f64) -> f64 {
     bytes / (mean_ms * 1e-3) / 1e9
 }
 
-fn matmul_arm(smoke: bool) {
+fn label(op: &str, tier: &str) -> String {
+    format!("{op} ({tier})")
+}
+
+/// CPU features relevant to the kernel tiers, detected at runtime.
+fn cpu_features() -> Vec<&'static str> {
+    #[allow(unused_mut)]
+    let mut out: Vec<&'static str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            out.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            out.push("fma");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            out.push("neon");
+        }
+    }
+    out
+}
+
+/// One machine-readable result row for `BENCH_kernels.json`
+/// (hand-formatted: the repo deliberately carries no JSON dependency).
+fn rec(name: &str, tier: &str, shape: &str, ms: f64, rate: f64, unit: &str, spd: f64) -> String {
+    format!(
+        "    {{\"name\": \"{name}\", \"tier\": \"{tier}\", \"shape\": \"{shape}\", \
+         \"mean_ms\": {ms:.6}, \"{unit}\": {rate:.3}, \"speedup_vs_scalar\": {spd:.3}}}"
+    )
+}
+
+fn matmul_arm(smoke: bool, recs: &mut Vec<String>) {
     let (b, m, n) = if smoke { (64, 48, 32) } else { (1024, 336, 128) };
     let (warm, reps) = if smoke { (1, 3) } else { (3, 15) };
     let mut rng = Rng::new(0xBE7C);
@@ -40,49 +84,66 @@ fn matmul_arm(smoke: bool) {
     let w = rand_vec(&mut rng, m * n);
     let g = rand_vec(&mut rng, b * n);
     let flops = 2.0 * b as f64 * m as f64 * n as f64;
+    let shape = format!("{b}x{m}x{n}");
+    let k = simd::active();
+    let sc = scalar();
 
     println!("== kernels: matmul tier ({b}x{m} @ {m}x{n}) ==");
     let mut y = vec![0.0f32; b * n];
-    let fwd_v = bench("matmul fwd (vectorized, into)", warm, reps, || {
-        linalg::matmul_into(&x, &w, &mut y, b, m, n);
+    let fwd_a = bench(&label("matmul_fwd", k.name), warm, reps, || {
+        (k.matmul_into)(&x, &w, &mut y, b, m, n);
     });
-    let fwd_n = bench("matmul fwd (naive oracle)", warm, reps, || {
+    let fwd_s = bench("matmul_fwd (scalar)", warm, reps, || {
+        (sc.matmul_into)(&x, &w, &mut y, b, m, n);
+    });
+    let fwd_n = bench("matmul_fwd (naive oracle)", warm, reps, || {
         std::hint::black_box(naive::matmul(&x, &w, b, m, n));
     });
     let mut dx = vec![0.0f32; b * m];
-    let nt_v = bench("matmul bwd-input g@w^T (vectorized)", warm, reps, || {
-        linalg::matmul_nt_into(&g, &w, &mut dx, b, m, n);
+    let nt_a = bench(&label("matmul_bwd_input", k.name), warm, reps, || {
+        (k.matmul_nt_into)(&g, &w, &mut dx, b, m, n);
     });
-    let nt_n = bench("matmul bwd-input (naive oracle)", warm, reps, || {
+    let nt_s = bench("matmul_bwd_input (scalar)", warm, reps, || {
+        (sc.matmul_nt_into)(&g, &w, &mut dx, b, m, n);
+    });
+    let nt_n = bench("matmul_bwd_input (naive oracle)", warm, reps, || {
         std::hint::black_box(naive::matmul_nt(&g, &w, b, m, n));
     });
     let mut dw = vec![0.0f32; m * n];
-    let tn_v = bench("matmul bwd-weight x^T@g (vectorized)", warm, reps, || {
-        linalg::matmul_tn_into(&x, &g, &mut dw, b, m, n);
+    let tn_a = bench(&label("matmul_bwd_weight", k.name), warm, reps, || {
+        (k.matmul_tn_into)(&x, &g, &mut dw, b, m, n);
     });
-    let tn_n = bench("matmul bwd-weight (naive oracle)", warm, reps, || {
+    let tn_s = bench("matmul_bwd_weight (scalar)", warm, reps, || {
+        (sc.matmul_tn_into)(&x, &g, &mut dw, b, m, n);
+    });
+    let tn_n = bench("matmul_bwd_weight (naive oracle)", warm, reps, || {
         std::hint::black_box(naive::matmul_tn(&x, &g, b, m, n));
     });
     std::hint::black_box((&y, &dx, &dw));
 
-    println!("\n{:>26} {:>12} {:>12} {:>9}", "kernel", "vec GF/s", "naive GF/s", "speedup");
-    for (name, v, nv) in [
-        ("matmul fwd", &fwd_v, &fwd_n),
-        ("matmul bwd-input", &nt_v, &nt_n),
-        ("matmul bwd-weight", &tn_v, &tn_n),
+    println!(
+        "\n{:>20} {:>12} {:>12} {:>12} {:>9}",
+        "kernel", "simd GF/s", "scalar GF/s", "naive GF/s", "speedup"
+    );
+    for (name, a, s, nv) in [
+        ("matmul_fwd", &fwd_a, &fwd_s, &fwd_n),
+        ("matmul_bwd_input", &nt_a, &nt_s, &nt_n),
+        ("matmul_bwd_weight", &tn_a, &tn_s, &tn_n),
     ] {
-        println!(
-            "{:>26} {:>12.2} {:>12.2} {:>8.2}x",
-            name,
-            gflops(flops, v.mean_ms()),
-            gflops(flops, nv.mean_ms()),
-            nv.mean_ms() / v.mean_ms()
-        );
+        let a_gf = gflops(flops, a.mean_ms());
+        let s_gf = gflops(flops, s.mean_ms());
+        let n_gf = gflops(flops, nv.mean_ms());
+        let spd = s.mean_ms() / a.mean_ms();
+        let n_spd = s.mean_ms() / nv.mean_ms();
+        println!("{:>20} {:>12.2} {:>12.2} {:>12.2} {:>8.2}x", name, a_gf, s_gf, n_gf, spd);
+        recs.push(rec(name, k.name, &shape, a.mean_ms(), a_gf, "gflops", spd));
+        recs.push(rec(name, "scalar", &shape, s.mean_ms(), s_gf, "gflops", 1.0));
+        recs.push(rec(name, "naive", &shape, nv.mean_ms(), n_gf, "gflops", n_spd));
     }
     println!();
 }
 
-fn gather_arm(smoke: bool) {
+fn gather_arm(smoke: bool, recs: &mut Vec<String>) {
     // Criteo-synth-shaped: 26 fields, d=16, plus 13 dense features
     let (vocab, b) = if smoke { (5_000, 256) } else { (200_000, 4096) };
     let (warm, reps) = if smoke { (1, 3) } else { (3, 15) };
@@ -93,11 +154,17 @@ fn gather_arm(smoke: bool) {
     let dense = rand_vec(&mut rng, b * nd);
     let ids: Vec<i32> = (0..b * f).map(|_| rng.below(vocab as u64) as i32).collect();
     let bytes = (b * f * d * 4) as f64; // embed payload moved per call
+    let gshape = format!("b={b} F={f} d={d}");
+    let k = simd::active();
+    let sc = scalar();
 
     println!("== kernels: embedding gather (b={b}, F={f}, d={d}, V={vocab}) ==");
     let mut x0 = vec![0.0f32; b * d0];
-    let fused = bench("gather+concat (fused, one pass)", warm, reps, || {
-        embed_concat_fwd(&table, &ids, &dense, b, f, d, nd, &mut x0);
+    let fused_a = bench(&label("gather+concat", k.name), warm, reps, || {
+        (k.embed_concat_fwd)(&table, &ids, &dense, b, f, d, nd, &mut x0);
+    });
+    let fused_s = bench("gather+concat (scalar)", warm, reps, || {
+        (sc.embed_concat_fwd)(&table, &ids, &dense, b, f, d, nd, &mut x0);
     });
     let staged = bench("gather then copy (staging buffer)", warm, reps, || {
         let embeds = embed_fwd(&table, &ids, b, f, d);
@@ -107,14 +174,22 @@ fn gather_arm(smoke: bool) {
         }
     });
     std::hint::black_box(&x0);
+    let spd = fused_s.mean_ms() / fused_a.mean_ms();
     println!(
-        "\n  fused {:.2} GB/s vs staged {:.2} GB/s -> {:.2}x\n",
-        gbps(bytes, fused.mean_ms()),
+        "\n  {} {:.2} GB/s vs scalar {:.2} GB/s vs staged {:.2} GB/s -> {:.2}x vs scalar\n",
+        k.name,
+        gbps(bytes, fused_a.mean_ms()),
+        gbps(bytes, fused_s.mean_ms()),
         gbps(bytes, staged.mean_ms()),
-        staged.mean_ms() / fused.mean_ms()
+        spd
     );
+    let a_r = gbps(bytes, fused_a.mean_ms());
+    let s_r = gbps(bytes, fused_s.mean_ms());
+    recs.push(rec("embed_concat_fwd", k.name, &gshape, fused_a.mean_ms(), a_r, "gbps", spd));
+    recs.push(rec("embed_concat_fwd", "scalar", &gshape, fused_s.mean_ms(), s_r, "gbps", 1.0));
 
-    // fused gather+dequantize (the quantized serving path)
+    // fused gather+dequantize (the quantized serving path), routed
+    // through the same vtable entry the serve scoring pass uses
     let fields: Vec<(usize, usize)> = (0..f).map(|j| (j * (vocab / f), vocab / f)).collect();
     let table_q: Vec<f32> = table[..(vocab / f) * f * d].to_vec();
     let q = QuantizedTable::quantize(&table_q, d, &fields).unwrap();
@@ -124,9 +199,16 @@ fn gather_arm(smoke: bool) {
 
     println!("== kernels: fused gather+dequantize (u16 codes -> f32 rows) ==");
     let mut out = vec![0.0f32; b * f * d];
-    let fused_q = bench("gather+dequant (fused, per row)", warm, reps, || {
+    let fused_qa = bench(&label("gather+dequant", k.name), warm, reps, || {
         for (slot, &id) in qids.iter().enumerate() {
-            q.row_into(id, field_of(id), &mut out[slot * d..(slot + 1) * d]);
+            let (min, step) = q.affine(field_of(id));
+            (k.dequant_row)(q.row_codes(id), min, step, &mut out[slot * d..(slot + 1) * d]);
+        }
+    });
+    let fused_qs = bench("gather+dequant (scalar)", warm, reps, || {
+        for (slot, &id) in qids.iter().enumerate() {
+            let (min, step) = q.affine(field_of(id));
+            (sc.dequant_row)(q.row_codes(id), min, step, &mut out[slot * d..(slot + 1) * d]);
         }
     });
     let staged_q = bench("dequantize-all then gather", warm, reps, || {
@@ -136,16 +218,47 @@ fn gather_arm(smoke: bool) {
         }
     });
     std::hint::black_box(&out);
+    let qspd = fused_qs.mean_ms() / fused_qa.mean_ms();
     println!(
-        "\n  fused {:.2} GB/s vs staged {:.2} GB/s -> {:.2}x\n",
-        gbps(bytes, fused_q.mean_ms()),
+        "\n  {} {:.2} GB/s vs scalar {:.2} GB/s vs staged {:.2} GB/s -> {:.2}x vs scalar\n",
+        k.name,
+        gbps(bytes, fused_qa.mean_ms()),
+        gbps(bytes, fused_qs.mean_ms()),
         gbps(bytes, staged_q.mean_ms()),
-        staged_q.mean_ms() / fused_q.mean_ms()
+        qspd
     );
+    let qa_r = gbps(bytes, fused_qa.mean_ms());
+    let qs_r = gbps(bytes, fused_qs.mean_ms());
+    recs.push(rec("dequant_row", k.name, &gshape, fused_qa.mean_ms(), qa_r, "gbps", qspd));
+    recs.push(rec("dequant_row", "scalar", &gshape, fused_qs.mean_ms(), qs_r, "gbps", 1.0));
 }
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    matmul_arm(smoke);
-    gather_arm(smoke);
+    let k = simd::active();
+    let features = cpu_features();
+    println!(
+        "simd kernels: {} (arch {}, features [{}])\n",
+        k.name,
+        std::env::consts::ARCH,
+        features.join(" ")
+    );
+    let mut recs: Vec<String> = Vec::new();
+    matmul_arm(smoke, &mut recs);
+    gather_arm(smoke, &mut recs);
+
+    let quoted: Vec<String> = features.iter().map(|ft| format!("\"{ft}\"")).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"smoke\": {},\n  \"arch\": \"{}\",\n  \
+         \"cpu_features\": [{}],\n  \"kernel\": \"{}\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        smoke,
+        std::env::consts::ARCH,
+        quoted.join(", "),
+        k.name,
+        recs.join(",\n")
+    );
+    match std::fs::write("BENCH_kernels.json", &json) {
+        Ok(()) => println!("wrote BENCH_kernels.json ({} kernel rows)", recs.len()),
+        Err(e) => eprintln!("BENCH_kernels.json not written: {e}"),
+    }
 }

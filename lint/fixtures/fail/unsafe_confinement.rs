@@ -1,0 +1,15 @@
+// Fail fixture for the unsafe-confinement rule: identical shape to the
+// pass fixture, but linted under `serve/helper.rs` — outside the SIMD
+// subtree — so both `unsafe` tokens must be flagged. A mention of
+// unsafe in a comment or "an unsafe string" must NOT be flagged: the
+// rule scans tokens, and comments/strings are not identifier tokens.
+pub fn fast_path(y: &mut [f32]) {
+    let p = y.as_mut_ptr();
+    unsafe {
+        *p = 1.0;
+    }
+}
+
+unsafe fn raw_write(p: *mut f32) {
+    *p = 2.0;
+}

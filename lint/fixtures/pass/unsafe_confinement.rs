@@ -1,0 +1,17 @@
+// Pass fixture for the unsafe-confinement rule: this file is linted
+// under the relative path `reference/simd/x86.rs`, where the `unsafe`
+// token is permitted (the SIMD kernel modules are the one exempt
+// subtree). Never compiled — only lexed.
+#![allow(unsafe_code)]
+
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    // Safety: reachable only through the vtable installed after
+    // runtime feature detection.
+    unsafe { axpy_inner(y, x, a) }
+}
+
+unsafe fn axpy_inner(y: &mut [f32], x: &[f32], a: f32) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}

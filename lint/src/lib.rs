@@ -4,7 +4,7 @@
 //! suite can't police: allocation-free steady state, bit-exact
 //! determinism, panic-free request handling, and a consistent lock
 //! acquisition order. This crate enforces them structurally, as a
-//! blocking CI step, by lexing `rust/src/**` and running four rule
+//! blocking CI step, by lexing `rust/src/**` and running five rule
 //! families over the token streams:
 //!
 //! 1. **hotpath-alloc** — functions registered in `lint/hotpath.toml`
@@ -16,6 +16,8 @@
 //!    lifecycle files.
 //! 4. **lock-order** — the "held while acquiring" graph over the
 //!    repo's known locks must stay cycle-free.
+//! 5. **unsafe-confinement** — the `unsafe` token may appear only in
+//!    the SIMD kernel modules (`reference/simd/`).
 //!
 //! Line-level escape hatch: `// lint:allow(<rule-id>): <justification>`
 //! on (or just above) the offending line. The justification is
@@ -68,6 +70,8 @@ pub struct Config {
     pub panic_files: Vec<String>,
     /// Subset of `panic_files` where slice indexing is also banned.
     pub index_files: Vec<String>,
+    /// Path substrings of the only modules allowed to use `unsafe`.
+    pub unsafe_dirs: Vec<String>,
     /// The repo's known locks, for acquisition-order extraction.
     pub locks: Vec<LockSpec>,
 }
@@ -83,6 +87,7 @@ impl Config {
             det_dirs: s(&["coordinator/", "clip/", "optim/", "reference/"]),
             panic_files: s(&["serve/queue.rs", "serve/request.rs", "serve/model.rs"]),
             index_files: s(&["serve/queue.rs", "serve/request.rs"]),
+            unsafe_dirs: s(&["reference/simd/"]),
             locks: vec![
                 LockSpec {
                     file_pat: "model/store.rs",
@@ -183,6 +188,7 @@ pub fn lint_sources(files: &[(String, String)], cfg: &Config) -> Vec<Violation> 
         &waivers_by_file,
     ));
     violations.extend(rules::locks::run(&all_fns, &cfg.locks, &waivers_by_file));
+    violations.extend(rules::unsafe_conf::run(&file_toks, &cfg.unsafe_dirs, &waivers_by_file));
     violations.sort_by(|a, b| (a.rule, &a.file, a.line).cmp(&(b.rule, &b.file, b.line)));
     violations
 }

@@ -1,4 +1,4 @@
-//! The four rule families.
+//! The five rule families.
 //!
 //! * [`alloc`] — hot-path allocation freedom (transitive call-graph walk
 //!   from the roots in `lint/hotpath.toml`).
@@ -7,8 +7,12 @@
 //! * [`panics`] — no panicking constructs in the serve request lifecycle.
 //! * [`locks`] — a consistent global lock-acquisition order (cycle-free
 //!   held-while-acquiring graph).
+//! * [`unsafe_conf`] — the `unsafe` token confined to the SIMD kernel
+//!   modules (`reference/simd/`), mirroring the crate's
+//!   `#![deny(unsafe_code)]` + scoped-allow policy.
 
 pub mod alloc;
 pub mod determinism;
 pub mod locks;
 pub mod panics;
+pub mod unsafe_conf;

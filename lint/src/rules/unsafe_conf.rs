@@ -1,0 +1,54 @@
+//! Rule 5: `unsafe` confinement.
+//!
+//! The crate root compiles under `#![deny(unsafe_code)]`; the SIMD
+//! microkernel modules opt back in with a scoped `#![allow(unsafe_code)]`
+//! because `core::arch` intrinsics and `#[target_feature]` functions
+//! require it. This rule is the second fence around that opt-in: the
+//! `unsafe` token may appear **only** in files under the configured
+//! directories (`reference/simd/` for this repo). Everywhere else —
+//! including test modules, matching the compiler-level deny — any
+//! occurrence is a violation. The scan runs over the raw token stream,
+//! so `unsafe fn`, `unsafe {}` blocks, `unsafe impl` and `unsafe trait`
+//! are all caught; comments and string literals are not tokens and
+//! cannot trip it.
+
+use std::collections::BTreeMap;
+
+use crate::lexer::{Tok, TokKind};
+use crate::waivers::Waivers;
+use crate::Violation;
+
+pub fn run(
+    file_toks: &[(String, Vec<Tok>)],
+    unsafe_dirs: &[String],
+    waivers: &BTreeMap<String, Waivers>,
+) -> Vec<Violation> {
+    let mut violations: Vec<Violation> = Vec::new();
+    for (rel, toks) in file_toks {
+        if unsafe_dirs.iter().any(|d| rel.contains(d.as_str())) {
+            continue;
+        }
+        let w = waivers.get(rel);
+        for t in toks {
+            if t.kind == TokKind::Ident && t.text == "unsafe" {
+                if w.is_some_and(|w| w.covers("unsafe-confinement", t.line)) {
+                    continue;
+                }
+                violations.push(Violation {
+                    rule: "unsafe-confinement",
+                    file: rel.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "`unsafe` outside the SIMD kernel modules ({})",
+                        if unsafe_dirs.is_empty() {
+                            "no directory is exempt".to_string()
+                        } else {
+                            format!("only {} may use it", unsafe_dirs.join(", "))
+                        }
+                    ),
+                });
+            }
+        }
+    }
+    violations
+}

@@ -95,6 +95,26 @@ fn lock_order_fail_flags_cycle() {
 }
 
 #[test]
+fn unsafe_confinement_pass_inside_simd_tree() {
+    let vs = run_one(
+        "reference/simd/x86.rs",
+        "pass/unsafe_confinement.rs",
+        &Config::repo_policy(),
+    );
+    assert!(vs.is_empty(), "expected clean, got: {vs:?}");
+}
+
+#[test]
+fn unsafe_confinement_fail_outside_simd_tree() {
+    let vs = run_one("serve/helper.rs", "fail/unsafe_confinement.rs", &Config::repo_policy());
+    assert_eq!(rules(&vs), vec!["unsafe-confinement", "unsafe-confinement"], "{vs:?}");
+    assert!(vs.iter().all(|v| v.msg.contains("reference/simd/")), "{vs:?}");
+    // comments and string literals mentioning unsafe are not tokens:
+    // exactly the two real occurrences are flagged, nothing from line 1-5
+    assert!(vs.iter().all(|v| v.line > 5), "{vs:?}");
+}
+
+#[test]
 fn waiver_without_justification_is_flagged() {
     let vs =
         run_one("hot/case.rs", "fail/waiver_missing_justification.rs", &Config::repo_policy());

@@ -13,6 +13,7 @@ use crate::data::split::{random_split, sequential_split};
 use crate::data::stats::{field_stats, infrequent_fraction};
 use crate::data::synth::{generate, SynthConfig};
 use crate::experiments::{self, ExpContext};
+use crate::reference::simd::{self, KernelMode};
 use crate::reference::ModelKind;
 use crate::runtime::Runtime;
 use crate::scaling::presets;
@@ -51,10 +52,22 @@ USAGE:
 
 Experiments: fig1 fig3 fig4 fig5 fig7_8 table2 table3 table4 table5 table6
              table7 table10 table11 table12 table13 table14 hypers
+
+Kernels: --kernel auto|scalar|avx2|neon (any command; or COWCLIP_KERNEL=...)
+         pins the SIMD dispatch tier — 'scalar' forces the portable blocked
+         kernels, 'auto' (default) picks the widest tier the host supports.
 ";
 
 /// Entry point used by `main`.
 pub fn dispatch(args: Args) -> Result<()> {
+    // Pin the SIMD kernel tier before any engine or model is built —
+    // the first resolver wins process-wide, so an explicit `--kernel`
+    // beats the `COWCLIP_KERNEL` env var read by `simd::active`.
+    if let Some(spec) = args.get("kernel") {
+        let mode: KernelMode = spec.parse().map_err(anyhow::Error::msg)?;
+        let kernels = simd::select(mode);
+        println!("simd kernels: {} (requested {spec})", kernels.name);
+    }
     match args.positional(0) {
         Some("data") => data_cmd(&args),
         Some("train") => train_cmd(&args),

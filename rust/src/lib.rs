@@ -101,13 +101,17 @@
 //! the compute path touches neither the allocator nor any redundant
 //! memory traffic:
 //!
-//! * **Kernels** ([`reference::linalg`]) — blocked, unit-stride,
-//!   FMA-friendly microkernels the compiler auto-vectorizes (`i-k-j`
-//!   matmuls with row-axpy inner loops, 8-lane dot products), each with
-//!   a write-into-output `_into` variant. The original scalar loops are
-//!   kept verbatim in `linalg::naive` as correctness oracles, pinned by
-//!   property tests (≤1e-6, odd shapes, empty batch) and raced by
-//!   `benches/kernels.rs`.
+//! * **Kernels** ([`reference::simd`]) — explicit SIMD microkernels
+//!   (AVX2+FMA 4×8 tiles on x86_64, NEON 4×4 on aarch64) behind a
+//!   [`reference::Kernels`] vtable resolved **once at startup** from
+//!   CPU feature detection, `COWCLIP_KERNEL={auto,scalar,avx2,neon}`,
+//!   or the `--kernel` CLI flag. The portable blocked kernels in
+//!   [`reference::linalg`] (`i-k-j` matmuls with row-axpy inner loops,
+//!   8-lane dot products) remain the scalar fallback tier, and the
+//!   original scalar loops are kept verbatim in `linalg::naive` as
+//!   correctness oracles — every SIMD kernel is pinned against them by
+//!   `rust/tests/kernel_parity.rs` (≤1e-6, odd shapes, remainder
+//!   lanes) and raced by `benches/kernels.rs`.
 //! * **Fused passes** ([`reference::layers`]) — the embedding gather
 //!   writes straight into the deep-stream `x0` concat layout (the
 //!   first `F·d` columns *are* the embeds tensor), DeepFM's FM term and
@@ -130,19 +134,24 @@
 //!   change a single bit (`apply_sharded_pair` vs eager-merge is
 //!   pinned exactly in `model::store` tests).
 //!
-//! Bench recipe: `RUSTFLAGS="-C target-cpu=native" cargo bench --bench
-//! kernels` (per-kernel GFLOP/s + vectorized-vs-naive speedup) and
+//! Bench recipe: `cargo bench --bench kernels` (per-kernel GFLOP/s +
+//! SIMD-vs-scalar speedup, written to `BENCH_kernels.json`) and
 //! `cargo bench --bench e2e_epoch` (absolute full-step throughput — the
-//! cross-PR comparison number). The release profile builds with
-//! `lto = "thin"` and `codegen-units = 1` so the kernel tier inlines
-//! across module boundaries.
+//! cross-PR comparison number, written to `BENCH_e2e.json`). No
+//! `RUSTFLAGS=-C target-cpu=native` is needed anymore: the SIMD tier is
+//! selected by **runtime dispatch**, so a plain release build runs the
+//! widest kernels the host supports (override with `COWCLIP_KERNEL=`
+//! or `--kernel` to pin a tier, e.g. `scalar` for cross-host bitwise
+//! reproduction). The release profile builds with `lto = "thin"` and
+//! `codegen-units = 1` so the scalar tier still inlines across module
+//! boundaries.
 //!
 //! ## Enforced invariants
 //!
 //! The promises above are policed structurally by `cowclip-lint` (the
 //! `lint/` workspace member), a dependency-free static analysis pass
 //! that runs blocking in CI (`cargo run -p cowclip-lint`, tests via
-//! `cargo test -p cowclip-lint`). Four rule families over `rust/src`:
+//! `cargo test -p cowclip-lint`). Five rule families over `rust/src`:
 //!
 //! 1. **hotpath-alloc** — the hot-path roots registered in
 //!    `lint/hotpath.toml` (training forward/backward, clip, lazy Adam,
@@ -159,12 +168,19 @@
 //! 4. **lock-order** — the "held while acquiring" graph over
 //!    `ParamStore.weights`/`ParamStore.opt`/`StepPool.jobs` and the
 //!    serve-queue locks must stay cycle-free.
+//! 5. **unsafe-confinement** — the token `unsafe` may appear only under
+//!    `reference/simd/` (the intrinsics microkernels); everywhere else
+//!    it is a lint violation, mirroring the compiler-level policy below.
 //!
 //! Escape hatch, per line and audited: a trailing or preceding comment
 //! `lint:allow(<rule-id>): <justification>` — the justification is
-//! mandatory. The crate itself compiles under `#![forbid(unsafe_code)]`
-//! and `#![deny(unused_must_use)]`, and the concurrency-heavy parity
-//! suites run under ThreadSanitizer in CI's `sanitize` job.
+//! mandatory. The crate compiles under `#![deny(unsafe_code)]` and
+//! `#![deny(unused_must_use)]`; the **only** `#[allow(unsafe_code)]`
+//! opt-ins live in `reference/simd/{x86,neon}.rs`, where every unsafe
+//! `#[target_feature]` inner function is reachable solely through a
+//! vtable installed after runtime feature detection (see
+//! [`reference::simd`] for the safety argument). The concurrency-heavy
+//! parity suites run under ThreadSanitizer in CI's `sanitize` job.
 //!
 //! ## Features
 //!
@@ -176,7 +192,7 @@
 //! ## Benches
 //!
 //! `cargo bench` runs the plain-binary benches under `benches/`:
-//! `kernels` (vectorized vs naive kernel tier, fused gathers),
+//! `kernels` (SIMD vs scalar vs naive kernel tiers, fused gathers),
 //! `clip_throughput` (dense vs sparse clipping arms + speedup),
 //! `e2e_epoch` (hot-path throughput, threaded and sharded-apply arms,
 //! plus the HLO ladder when artifacts exist), `fig1_step_time`,
@@ -186,7 +202,11 @@
 //! and the benches above. Start with [`runtime::Runtime`] +
 //! [`coordinator::Trainer`] if you are embedding the library.
 
-#![forbid(unsafe_code)]
+// `deny` (not `forbid`) so `reference/simd/{x86,neon}.rs` can opt in
+// with a scoped `#![allow(unsafe_code)]` — the only place the token is
+// legal, enforced a second time by cowclip-lint's unsafe-confinement
+// rule.
+#![deny(unsafe_code)]
 #![deny(unused_must_use)]
 
 pub mod cli;

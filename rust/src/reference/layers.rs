@@ -13,7 +13,8 @@
 //!   `d0`), so the model forward/backward never materializes a separate
 //!   `[b, F·d]` embeds tensor.
 
-use super::linalg::{colsum, matmul, matmul_into, matmul_nt, matmul_tn};
+use super::linalg::{colsum, matmul, matmul_nt, matmul_tn};
+use super::simd::Kernels;
 
 /// Embedding gather: `out[b, F, d] = table[ids[b, F]]`.
 pub fn embed_fwd(table: &[f32], ids: &[i32], b: usize, f: usize, d: usize) -> Vec<f32> {
@@ -339,10 +340,12 @@ pub fn dense_infer(
 }
 
 /// Write-into twin of [`dense_fwd`]: affine into `pre` (kept for the
-/// backward relu mask), activated copy into `out`. Same op order as the
-/// allocating form, so results are bitwise equal.
+/// backward relu mask), activated copy into `out`. The matmul routes
+/// through the caller's kernel vtable (`k`); with the scalar vtable the
+/// op order matches the allocating form exactly (bitwise).
 #[allow(clippy::too_many_arguments)]
 pub fn dense_fwd_into(
+    k: &Kernels,
     x: &[f32],
     w: &[f32],
     bias: &[f32],
@@ -355,7 +358,7 @@ pub fn dense_fwd_into(
 ) {
     debug_assert_eq!(pre.len(), b * n);
     debug_assert_eq!(out.len(), b * n);
-    matmul_into(x, w, pre, b, m, n);
+    (k.matmul_into)(x, w, pre, b, m, n);
     for row in pre.chunks_exact_mut(n) {
         for (yv, &bv) in row.iter_mut().zip(bias) {
             *yv += bv;
@@ -371,9 +374,11 @@ pub fn dense_fwd_into(
     }
 }
 
-/// Write-into twin of [`dense_infer`]: no pre-activation kept.
+/// Write-into twin of [`dense_infer`]: no pre-activation kept. The
+/// matmul routes through the caller's kernel vtable (`k`).
 #[allow(clippy::too_many_arguments)]
 pub fn dense_infer_into(
+    k: &Kernels,
     x: &[f32],
     w: &[f32],
     bias: &[f32],
@@ -384,7 +389,7 @@ pub fn dense_infer_into(
     out: &mut [f32],
 ) {
     debug_assert_eq!(out.len(), b * n);
-    matmul_into(x, w, out, b, m, n);
+    (k.matmul_into)(x, w, out, b, m, n);
     for row in out.chunks_exact_mut(n) {
         for (yv, &bv) in row.iter_mut().zip(bias) {
             *yv += bv;
@@ -653,14 +658,15 @@ mod tests {
         let w: Vec<f32> = (0..m * n).map(|i| (i as f32) * 0.07 - 0.6).collect();
         let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.1 - 0.2).collect();
         for relu in [false, true] {
+            let k = super::super::simd::scalar();
             let (y, cache) = dense_fwd(&x, &w, &bias, b, m, n, relu);
             let mut pre = vec![1.0f32; b * n];
             let mut out = vec![2.0f32; b * n];
-            dense_fwd_into(&x, &w, &bias, b, m, n, relu, &mut pre, &mut out);
+            dense_fwd_into(k, &x, &w, &bias, b, m, n, relu, &mut pre, &mut out);
             assert_eq!(out, y, "relu={relu}");
             assert_eq!(pre, cache.pre, "relu={relu}");
             let mut out2 = vec![3.0f32; b * n];
-            dense_infer_into(&x, &w, &bias, b, m, n, relu, &mut out2);
+            dense_infer_into(k, &x, &w, &bias, b, m, n, relu, &mut out2);
             assert_eq!(out2, y, "infer relu={relu}");
         }
         // wide into

@@ -17,8 +17,10 @@ pub mod layers;
 pub mod linalg;
 pub mod model;
 pub mod scratch;
+pub mod simd;
 pub mod step;
 
 pub use model::{ModelKind, ReferenceModel};
 pub use scratch::Scratch;
+pub use simd::{KernelMode, Kernels};
 pub use step::{GradOutput, ReferenceEngine};

@@ -19,8 +19,8 @@ use std::str::FromStr;
 use anyhow::{bail, ensure, Result};
 
 use super::layers::*;
-use super::linalg::{axpy, colsum, dot, matmul_into, matmul_nt_into, matmul_tn, rowdot_into};
 use super::scratch::Scratch;
+use super::simd::{self, Kernels};
 use crate::data::batcher::{touched_of, Batch};
 use crate::data::schema::Schema;
 use crate::model::params::ParamSet;
@@ -88,11 +88,28 @@ pub struct ReferenceModel {
     pub embed_dim: usize,
     pub hidden: Vec<usize>,
     pub n_cross: usize,
+    /// The SIMD vtable every kernel call routes through — resolved once
+    /// per process ([`simd::active`]) and shared by every clone, so all
+    /// workers/shards run the identical instruction stream.
+    kernels: &'static Kernels,
 }
 
 impl ReferenceModel {
     pub fn new(kind: ModelKind, schema: Schema, embed_dim: usize, hidden: Vec<usize>, n_cross: usize) -> Self {
-        ReferenceModel { kind, schema, embed_dim, hidden, n_cross }
+        ReferenceModel { kind, schema, embed_dim, hidden, n_cross, kernels: simd::active() }
+    }
+
+    /// Override the kernel vtable (tests and cross-mode parity harnesses;
+    /// production callers go through the process-wide [`simd::active`]).
+    pub fn with_kernels(mut self, kernels: &'static Kernels) -> Self {
+        self.kernels = kernels;
+        self
+    }
+
+    /// The vtable this model instance dispatches through (the serving
+    /// tier routes its fused gather–dequantize pass through the same one).
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
     }
 
     /// Deep-stream input dimension.
@@ -285,7 +302,7 @@ impl ReferenceModel {
                     let mut out = scratch.take(b * nn);
                     {
                         let input: &[f32] = if h.is_empty() { x0 } else { &h };
-                        dense_infer_into(input, w, bias, b, m, nn, true, &mut out);
+                        dense_infer_into(self.kernels, input, w, bias, b, m, nn, true, &mut out);
                     }
                     let old = std::mem::replace(&mut h, out);
                     if !old.is_empty() {
@@ -298,7 +315,7 @@ impl ReferenceModel {
                 let mut out1 = scratch.take(b);
                 {
                     let input: &[f32] = if h.is_empty() { x0 } else { &h };
-                    dense_infer_into(input, w, bias, b, m, 1, false, &mut out1);
+                    dense_infer_into(self.kernels, input, w, bias, b, m, 1, false, &mut out1);
                 }
                 if !h.is_empty() {
                     scratch.recycle(h);
@@ -320,7 +337,7 @@ impl ReferenceModel {
                         ModelKind::Dcn => {
                             let cur: &[f32] = if xl.is_empty() { x0 } else { &xl };
                             for i in 0..b {
-                                let s = dot(&cur[i * d0..(i + 1) * d0], w);
+                                let s = (self.kernels.dot)(&cur[i * d0..(i + 1) * d0], w);
                                 for j in 0..d0 {
                                     next[i * d0 + j] =
                                         x0[i * d0 + j] * s + bias[j] + cur[i * d0 + j];
@@ -331,7 +348,7 @@ impl ReferenceModel {
                             let mut u = scratch.take(b * d0);
                             {
                                 let cur: &[f32] = if xl.is_empty() { x0 } else { &xl };
-                                matmul_into(cur, w, &mut u, b, d0, d0);
+                                (self.kernels.matmul_into)(cur, w, &mut u, b, d0, d0);
                                 for row in u.chunks_exact_mut(d0) {
                                     for (uv, &bv) in row.iter_mut().zip(bias) {
                                         *uv += bv;
@@ -359,7 +376,7 @@ impl ReferenceModel {
                     let mut out = scratch.take(b * nn);
                     {
                         let input: &[f32] = if h.is_empty() { x0 } else { &h };
-                        dense_infer_into(input, w, bias, b, m, nn, true, &mut out);
+                        dense_infer_into(self.kernels, input, w, bias, b, m, nn, true, &mut out);
                     }
                     let old = std::mem::replace(&mut h, out);
                     if !old.is_empty() {
@@ -389,7 +406,7 @@ impl ReferenceModel {
                 let head_w = r.next()?;
                 let head_b = r.next()?;
                 let mut lg = scratch.take(b);
-                dense_infer_into(&head_in, head_w, head_b, b, hc, 1, false, &mut lg);
+                dense_infer_into(self.kernels, &head_in, head_w, head_b, b, hc, 1, false, &mut lg);
                 scratch.recycle(head_in);
                 lg
             }
@@ -422,7 +439,7 @@ impl ReferenceModel {
         let mut reader = Reader::new(params);
         let embed_table = reader.next()?;
         let mut x0 = scratch.take(b * d0);
-        embed_concat_fwd(embed_table, ids, dense, b, f, d, nd, &mut x0);
+        (self.kernels.embed_concat_fwd)(embed_table, ids, dense, b, f, d, nd, &mut x0);
 
         let n_hidden = self.hidden.len();
         let mut fm_sums: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (kind-dependent cache slot)
@@ -459,7 +476,7 @@ impl ReferenceModel {
                     let mut out = scratch.take(b * nn);
                     {
                         let input: &[f32] = if li == 0 { &x0 } else { &mlp_h[li - 1] };
-                        dense_fwd_into(input, w, bias, b, m, nn, true, &mut pre, &mut out);
+                        dense_fwd_into(self.kernels, input, w, bias, b, m, nn, true, &mut pre, &mut out);
                     }
                     mlp_pre.push(pre);
                     mlp_h.push(out);
@@ -471,7 +488,7 @@ impl ReferenceModel {
                 {
                     let input: &[f32] =
                         if n_hidden == 0 { &x0 } else { &mlp_h[n_hidden - 1] };
-                    dense_infer_into(input, w, bias, b, m, 1, false, &mut out1);
+                    dense_infer_into(self.kernels, input, w, bias, b, m, 1, false, &mut out1);
                 }
                 for (l, &o) in lg.iter_mut().zip(out1.iter()) {
                     *l += o;
@@ -493,7 +510,7 @@ impl ReferenceModel {
                                 let xl: &[f32] =
                                     if l == 0 { &x0 } else { &cross_out[l - 1] };
                                 for (i, sv) in sbuf.iter_mut().enumerate() {
-                                    *sv = dot(&xl[i * d0..(i + 1) * d0], w);
+                                    *sv = (self.kernels.dot)(&xl[i * d0..(i + 1) * d0], w);
                                 }
                                 for i in 0..b {
                                     for j in 0..d0 {
@@ -513,7 +530,7 @@ impl ReferenceModel {
                             {
                                 let xl: &[f32] =
                                     if l == 0 { &x0 } else { &cross_out[l - 1] };
-                                matmul_into(xl, w, &mut u, b, d0, d0);
+                                (self.kernels.matmul_into)(xl, w, &mut u, b, d0, d0);
                                 for row in u.chunks_exact_mut(d0) {
                                     for (uv, &bv) in row.iter_mut().zip(bias) {
                                         *uv += bv;
@@ -538,7 +555,7 @@ impl ReferenceModel {
                     let mut out = scratch.take(b * nn);
                     {
                         let input: &[f32] = if li == 0 { &x0 } else { &mlp_h[li - 1] };
-                        dense_fwd_into(input, w, bias, b, m, nn, true, &mut pre, &mut out);
+                        dense_fwd_into(self.kernels, input, w, bias, b, m, nn, true, &mut pre, &mut out);
                     }
                     mlp_pre.push(pre);
                     mlp_h.push(out);
@@ -565,7 +582,7 @@ impl ReferenceModel {
                 let head_w = reader.next()?;
                 let head_b = reader.next()?;
                 let mut lg = scratch.take(b);
-                dense_infer_into(&head_in, head_w, head_b, b, hc, 1, false, &mut lg);
+                dense_infer_into(self.kernels, &head_in, head_w, head_b, b, hc, 1, false, &mut lg);
                 lg
             }
         };
@@ -619,19 +636,19 @@ impl ReferenceModel {
                 for layer in (0..=n_hidden).rev() {
                     let (m, n) = (dims[layer], dims[layer + 1]);
                     if layer < n_hidden {
-                        relu_mask(&mut dy, &cache.mlp_pre[layer]);
+                        (self.kernels.relu_mask)(&mut dy, &cache.mlp_pre[layer]);
                     }
                     let input: &[f32] =
                         if layer == 0 { &cache.x0 } else { &cache.mlp_h[layer - 1] };
-                    let dw = matmul_tn(input, &dy, b, m, n);
-                    let db = colsum(&dy, b, n);
+                    let dw = self.kernels.matmul_tn(input, &dy, b, m, n);
+                    let db = self.kernels.colsum(&dy, b, n);
                     dws.push((dw, db));
                     if layer == 0 {
                         // the layer-0 dx *is* the deep-stream dx0
-                        matmul_nt_into(&dy, weights[layer], &mut dx0, b, m, n);
+                        (self.kernels.matmul_nt_into)(&dy, weights[layer], &mut dx0, b, m, n);
                     } else {
                         let mut dx = scratch.take(b * m);
-                        matmul_nt_into(&dy, weights[layer], &mut dx, b, m, n);
+                        (self.kernels.matmul_nt_into)(&dy, weights[layer], &mut dx, b, m, n);
                         scratch.recycle(std::mem::replace(&mut dy, dx));
                     }
                 }
@@ -689,10 +706,10 @@ impl ReferenceModel {
                 }
 
                 // head backward
-                let dhead_w = matmul_tn(&cache.head_in, dlogits, b, hc, 1);
-                let dhead_b = colsum(dlogits, b, 1);
+                let dhead_w = self.kernels.matmul_tn(&cache.head_in, dlogits, b, hc, 1);
+                let dhead_b = self.kernels.colsum(dlogits, b, 1);
                 let mut dhead_in = scratch.take(b * hc);
-                matmul_nt_into(dlogits, head_w, &mut dhead_in, b, hc, 1);
+                (self.kernels.matmul_nt_into)(dlogits, head_w, &mut dhead_in, b, hc, 1);
                 let mut dxl = scratch.take(b * d0);
                 let mut dy = scratch.take(b * h_last);
                 for i in 0..b {
@@ -709,17 +726,17 @@ impl ReferenceModel {
                 let mut mlp_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_hidden);
                 for layer in (0..n_hidden).rev() {
                     let (m, n) = (dims[layer], dims[layer + 1]);
-                    relu_mask(&mut dy, &cache.mlp_pre[layer]);
+                    (self.kernels.relu_mask)(&mut dy, &cache.mlp_pre[layer]);
                     let input: &[f32] =
                         if layer == 0 { &cache.x0 } else { &cache.mlp_h[layer - 1] };
-                    let dw = matmul_tn(input, &dy, b, m, n);
-                    let db = colsum(&dy, b, n);
+                    let dw = self.kernels.matmul_tn(input, &dy, b, m, n);
+                    let db = self.kernels.colsum(&dy, b, n);
                     mlp_grads.push((dw, db));
                     if layer == 0 {
-                        matmul_nt_into(&dy, mlp_ws[layer], &mut dx0, b, m, n);
+                        (self.kernels.matmul_nt_into)(&dy, mlp_ws[layer], &mut dx0, b, m, n);
                     } else {
                         let mut dx = scratch.take(b * m);
-                        matmul_nt_into(&dy, mlp_ws[layer], &mut dx, b, m, n);
+                        (self.kernels.matmul_nt_into)(&dy, mlp_ws[layer], &mut dx, b, m, n);
                         scratch.recycle(std::mem::replace(&mut dy, dx));
                     }
                 }
@@ -737,12 +754,12 @@ impl ReferenceModel {
                         ModelKind::Dcn => {
                             // x_{l+1} = x0 * s + b + xl, s = xl . w
                             let mut ds = scratch.take(b);
-                            rowdot_into(&cache.x0, &dxl, &mut ds, b, d0);
+                            (self.kernels.rowdot_into)(&cache.x0, &dxl, &mut ds, b, d0);
                             let mut dw = vec![0.0f32; d0]; // lint:allow(hotpath-alloc): escaping payload: per-layer cross grad accumulator
                             for i in 0..b {
-                                axpy(&mut dw, &xl_in[i * d0..(i + 1) * d0], ds[i]);
+                                (self.kernels.axpy)(&mut dw, &xl_in[i * d0..(i + 1) * d0], ds[i]);
                             }
-                            let db = colsum(&dxl, b, d0);
+                            let db = self.kernels.colsum(&dxl, b, d0);
                             // dx0 += s * dxl ; dxl += ds ⊗ w (in place:
                             // each element's old value is read first)
                             let w = cross_ws[l];
@@ -762,11 +779,11 @@ impl ReferenceModel {
                                 du[j] = cache.x0[j] * dxl[j];
                                 dx0[j] += su[j] * dxl[j];
                             }
-                            let dw = matmul_tn(xl_in, &du, b, d0, d0);
-                            let db = colsum(&du, b, d0);
+                            let dw = self.kernels.matmul_tn(xl_in, &du, b, d0, d0);
+                            let db = self.kernels.colsum(&du, b, d0);
                             let mut tmp = scratch.take(b * d0);
-                            matmul_nt_into(&du, cross_ws[l], &mut tmp, b, d0, d0);
-                            axpy(&mut dxl, &tmp, 1.0);
+                            (self.kernels.matmul_nt_into)(&du, cross_ws[l], &mut tmp, b, d0, d0);
+                            (self.kernels.axpy)(&mut dxl, &tmp, 1.0);
                             scratch.recycle(tmp);
                             scratch.recycle(du);
                             cross_grads.push((dw, db));
@@ -776,7 +793,7 @@ impl ReferenceModel {
                 }
                 cross_grads.reverse();
                 // x0 also receives the layer-0 dxl (xl starts as x0)
-                axpy(&mut dx0, &dxl, 1.0);
+                (self.kernels.axpy)(&mut dx0, &dxl, 1.0);
                 scratch.recycle(dxl);
 
                 let dtable = embed_bwd_sparse_strided(&dx0, d0, ids, touched, f, d);

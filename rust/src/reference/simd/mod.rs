@@ -1,0 +1,297 @@
+//! Explicit SIMD microkernels with one-shot runtime dispatch.
+//!
+//! PR 5 left the hot path allocation-free but still hostage to whatever
+//! the compiler auto-vectorizes; this module makes the instruction
+//! selection explicit. Three tiers:
+//!
+//! * **scalar** — the PR-5 blocked kernels in [`super::linalg`] and the
+//!   fused passes in [`super::layers`], unchanged. Always available,
+//!   always the fallback, and the only tier `linalg::naive` needs to be
+//!   compared against bitwise.
+//! * **avx2** (`x86_64`, requires AVX2 **and** FMA) — 8-lane `f32`
+//!   tiles in [`x86`].
+//! * **neon** (`aarch64`) — 4-lane `f32` twins in [`neon`].
+//!
+//! ## Dispatch model
+//!
+//! Selection happens **once per process**: [`active`] resolves the
+//! `COWCLIP_KERNEL` environment variable (`auto` | `scalar` | `avx2` |
+//! `neon`, default `auto`) through [`resolve`] into a `&'static`
+//! [`Kernels`] vtable and caches it in a `OnceLock`; the `--kernel` CLI
+//! flag calls [`select`] before the first model is built and wins if it
+//! runs first. Every [`super::ReferenceModel`] clone, every worker
+//! thread, every param shard and every serving scorer then calls
+//! through the *same* function pointers for the lifetime of the
+//! process. That is the whole determinism argument: within a fixed
+//! mode there is no per-call, per-thread or per-size re-dispatch, so
+//! any thread/shard count replays the identical instruction stream and
+//! stays bitwise-invariant — the same property the scalar tier had,
+//! now per mode.
+//!
+//! Requesting a mode the host cannot run (`neon` on x86_64, `avx2`
+//! without the CPUID bits) falls back to **scalar**, never to UB: the
+//! arch vtables are only reachable behind `is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!` checks in [`resolve`].
+//!
+//! ## Precision contract (why two gates)
+//!
+//! The FMA-based kernels (`matmul*`, `dot`, `axpy`, `rowdot`) contract
+//! `a*b + c` in one rounding where the scalar tier rounds twice, so
+//! SIMD-vs-scalar results differ in the low bits; cross-mode parity is
+//! therefore gated at ≤1e-6 (relative) by `rust/tests/kernel_parity.rs`
+//! and the model-level suites. Four kernels are *bitwise* identical to
+//! scalar by construction and keep the serving exactness story intact:
+//! `colsum_into` (pure lane adds, same i-ascending order, one rounding
+//! each — identical to the scalar `axpy(db, row, 1.0)` fold),
+//! `embed_concat_fwd` (pure copy), `dequant_row` (explicit
+//! multiply-then-add, never FMA, matching `min + code as f32 * step`),
+//! and `relu_mask` (a zero-mask with ordered-quiet `<= 0.0` compare —
+//! NaN lanes survive exactly like the scalar branch).
+//!
+//! ## Safety confinement
+//!
+//! This module subtree is the **only** place in the crate where
+//! `unsafe` is permitted: the crate root carries
+//! `#![deny(unsafe_code)]`, the arch submodules opt back in with a
+//! scoped `#![allow(unsafe_code)]`, and `cowclip-lint`'s
+//! `unsafe-confinement` rule fails CI if the token appears anywhere
+//! outside `reference/simd/`. Tile shapes and remainder handling are
+//! documented in the arch modules themselves.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::OnceLock;
+
+use super::{layers, linalg};
+
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// Requested dispatch mode (`COWCLIP_KERNEL` / `--kernel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Pick the widest tier the host supports (the default).
+    Auto,
+    /// Force the PR-5 blocked scalar kernels.
+    Scalar,
+    /// AVX2+FMA tier; falls back to scalar off-x86 or without the bits.
+    Avx2,
+    /// NEON tier; falls back to scalar off-aarch64.
+    Neon,
+}
+
+impl FromStr for KernelMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<KernelMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelMode::Auto),
+            "scalar" => Ok(KernelMode::Scalar),
+            "avx2" => Ok(KernelMode::Avx2),
+            "neon" => Ok(KernelMode::Neon),
+            other => Err(format!(
+                "unknown kernel mode {other:?} (expected auto|scalar|avx2|neon)"
+            )),
+        }
+    }
+}
+
+/// The kernel vtable: one function pointer per hot-path primitive,
+/// resolved once at startup and threaded through
+/// [`super::ReferenceModel`] and the serving tier. Shapes and layouts
+/// are exactly those of the [`super::linalg`] / [`super::layers`]
+/// scalar forms the pointers default to.
+pub struct Kernels {
+    /// Tier name as reported by logs, benches and the fallback tests.
+    pub name: &'static str,
+    /// `y += a * x`.
+    pub axpy: fn(&mut [f32], &[f32], f32),
+    /// Unit-stride dot product.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `y[b,n] = x[b,m] @ w[m,n]`.
+    pub matmul_into: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    /// `y[b,m] = g[b,n] @ w[m,n]^T`.
+    pub matmul_nt_into: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    /// `dw[m,n] = x[b,m]^T @ g[b,n]`.
+    pub matmul_tn_into: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    /// `db[n] = sum_i g[i,n]` (bitwise equal to scalar in every tier).
+    pub colsum_into: fn(&[f32], &mut [f32], usize, usize),
+    /// `out[i] = dot(a[i,:], c[i,:])` over `[b, n]` operands.
+    pub rowdot_into: fn(&[f32], &[f32], &mut [f32], usize, usize),
+    /// Zero `dy` where the cached pre-activation is `<= 0.0`
+    /// (bitwise equal to scalar in every tier, NaN included).
+    pub relu_mask: fn(&mut [f32], &[f32]),
+    /// Fused embedding gather + `x0` concat
+    /// (`table, ids, dense_x, b, f, d, nd, x0`; pure copy, bitwise).
+    pub embed_concat_fwd: fn(&[f32], &[i32], &[f32], usize, usize, usize, usize, &mut [f32]),
+    /// Serving's fused dequantize: `out[j] = min + codes[j] as f32 * step`
+    /// (explicit mul-then-add, bitwise equal to scalar in every tier).
+    pub dequant_row: fn(&[u16], f32, f32, &mut [f32]),
+}
+
+impl fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Kernels").field("name", &self.name).finish()
+    }
+}
+
+impl Kernels {
+    /// Allocating wrapper over `matmul_tn_into` (backward-pass call
+    /// sites where the gradient payload escapes the step).
+    pub fn matmul_tn(&self, x: &[f32], g: &[f32], b: usize, m: usize, n: usize) -> Vec<f32> {
+        let mut dw = vec![0.0f32; m * n];
+        (self.matmul_tn_into)(x, g, &mut dw, b, m, n);
+        dw
+    }
+
+    /// Allocating wrapper over `colsum_into` (escaping bias gradients).
+    pub fn colsum(&self, g: &[f32], b: usize, n: usize) -> Vec<f32> {
+        let mut db = vec![0.0f32; n];
+        (self.colsum_into)(g, &mut db, b, n);
+        db
+    }
+}
+
+fn dequant_row_scalar(codes: &[u16], min: f32, step: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = min + c as f32 * step;
+    }
+}
+
+/// The scalar tier: the PR-5 blocked kernels, unchanged, as a vtable.
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    axpy: linalg::axpy,
+    dot: linalg::dot,
+    matmul_into: linalg::matmul_into,
+    matmul_nt_into: linalg::matmul_nt_into,
+    matmul_tn_into: linalg::matmul_tn_into,
+    colsum_into: linalg::colsum_into,
+    rowdot_into: linalg::rowdot_into,
+    relu_mask: layers::relu_mask,
+    embed_concat_fwd: layers::embed_concat_fwd,
+    dequant_row: dequant_row_scalar,
+};
+
+/// The scalar vtable — the cross-mode parity baseline for tests and
+/// the `speedup vs scalar` denominator for benches.
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// Resolve a requested mode against what this host can actually run.
+/// Unsupported requests degrade to scalar — never to UB: the arch
+/// vtables are only returned behind their feature-detection checks.
+pub fn resolve(mode: KernelMode) -> &'static Kernels {
+    match mode {
+        KernelMode::Scalar => &SCALAR,
+        KernelMode::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return &x86::AVX2;
+            }
+            &SCALAR
+        }
+        KernelMode::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return &neon::NEON;
+            }
+            &SCALAR
+        }
+        KernelMode::Auto => {
+            #[cfg(target_arch = "x86_64")]
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return &x86::AVX2;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return &neon::NEON;
+            }
+            &SCALAR
+        }
+    }
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The process-wide vtable. First call wins: either [`select`] (the
+/// `--kernel` CLI flag) or this function's `COWCLIP_KERNEL` environment
+/// lookup (default `auto`); every later call returns the same pointer,
+/// so a running process never changes instruction streams.
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(|| {
+        let mode = match std::env::var("COWCLIP_KERNEL") {
+            Ok(v) => v.parse().unwrap_or_else(|e: String| {
+                eprintln!("cowclip: {e}; falling back to auto dispatch");
+                KernelMode::Auto
+            }),
+            Err(_) => KernelMode::Auto,
+        };
+        resolve(mode)
+    })
+}
+
+/// Pin the process-wide vtable to an explicit mode (the `--kernel`
+/// flag). A no-op if [`active`] already resolved — call it before
+/// building models. Returns the vtable that is actually in effect.
+pub fn select(mode: KernelMode) -> &'static Kernels {
+    ACTIVE.get_or_init(|| resolve(mode))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_case_insensitively_and_rejects_junk() {
+        assert_eq!("AVX2".parse::<KernelMode>().unwrap(), KernelMode::Avx2);
+        assert_eq!("auto".parse::<KernelMode>().unwrap(), KernelMode::Auto);
+        assert_eq!("Scalar".parse::<KernelMode>().unwrap(), KernelMode::Scalar);
+        assert_eq!("neon".parse::<KernelMode>().unwrap(), KernelMode::Neon);
+        assert!("sse9".parse::<KernelMode>().is_err());
+    }
+
+    #[test]
+    fn dispatch_falls_back_cleanly() {
+        // A mode the host cannot run must resolve to the scalar tier —
+        // never panic, never hand out an undetected arch vtable.
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(resolve(KernelMode::Neon).name, "scalar");
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(resolve(KernelMode::Avx2).name, "scalar");
+        assert_eq!(resolve(KernelMode::Scalar).name, "scalar");
+        // Auto resolves to *something* runnable, and resolution is stable.
+        let a = resolve(KernelMode::Auto);
+        let b = resolve(KernelMode::Auto);
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn scalar_vtable_points_at_linalg() {
+        // The scalar tier is the PR-5 kernels, not re-implementations:
+        // spot-check a couple of pointers and one computed value.
+        let k = scalar();
+        assert_eq!(k.name, "scalar");
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!((k.dot)(&a, &b), linalg::dot(&a, &b));
+        let mut out = [0.0f32; 3];
+        (k.dequant_row)(&[0u16, 1, 65535], -1.0, 0.5, &mut out);
+        assert_eq!(out, [-1.0, -0.5, -1.0 + 65535.0 * 0.5]);
+    }
+
+    #[test]
+    fn allocating_helpers_match_into_forms() {
+        let k = scalar();
+        let (b, m, n) = (3usize, 4usize, 5usize);
+        let x: Vec<f32> = (0..b * m).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let g: Vec<f32> = (0..b * n).map(|i| i as f32 * 0.2 - 0.7).collect();
+        assert_eq!(k.matmul_tn(&x, &g, b, m, n), linalg::matmul_tn(&x, &g, b, m, n));
+        assert_eq!(k.colsum(&g, b, n), linalg::colsum(&g, b, n));
+    }
+}

@@ -1,0 +1,431 @@
+//! NEON microkernels (aarch64) — 4-lane twins of the AVX2 tier.
+//!
+//! Same structure as [`super::x86`], scaled to 128-bit registers:
+//!
+//! * [`matmul_into`] / [`matmul_tn_into`] — 4-row × 4-column `vfmaq`
+//!   register tiles (4 accumulators + 1 strip in the 32 `v` registers,
+//!   each strip load reused four times), contraction `k`- resp.
+//!   `i`-ascending.
+//! * [`matmul_nt_into`] / [`rowdot_into`] / [`dot`] — one 4-lane FMA
+//!   accumulator per output, reduced with `vaddvq_f32` (the fixed
+//!   `faddp` pairwise tree).
+//! * [`axpy`], [`colsum_into`], [`relu_mask`], [`dequant_row`],
+//!   [`embed_concat_fwd`] — 4-wide streaming loops.
+//!
+//! Remainders split as `n4 = n - n % 4` (`b4` for tile rows) with the
+//! naive oracle's scalar loop on the tail — no alignment or padding
+//! assumptions. Determinism story is identical to the AVX2 module:
+//! bitwise within the mode (fixed contraction and reduction order),
+//! ≤1e-6 vs scalar for the FMA kernels, and bitwise across modes for
+//! [`colsum_into`] (pure `vaddq` in scalar order),
+//! [`embed_concat_fwd`] (pure copy), [`relu_mask`] (`vcleq`+`vbicq`
+//! zero-mask, NaN keeps the gradient like the scalar branch) and
+//! [`dequant_row`] (explicit `vmulq`+`vaddq`, never fused).
+
+// The one place in the crate (together with `x86.rs`) where unsafe is
+// permitted; `cowclip-lint`'s unsafe-confinement rule enforces that.
+#![allow(unsafe_code)]
+
+use core::arch::aarch64::*;
+
+use super::Kernels;
+
+/// The NEON vtable. Only handed out by `super::resolve` after
+/// `is_aarch64_feature_detected!("neon")` reports true.
+pub static NEON: Kernels = Kernels {
+    name: "neon",
+    axpy,
+    dot,
+    matmul_into,
+    matmul_nt_into,
+    matmul_tn_into,
+    colsum_into,
+    rowdot_into,
+    relu_mask,
+    embed_concat_fwd,
+    dequant_row,
+};
+
+/// `y += a * x`, 4 lanes at a time.
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    // Safety: reachable only through the `NEON` vtable, which is
+    // installed strictly after runtime NEON detection.
+    unsafe { axpy_neon(y, x, a) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(y: &mut [f32], x: &[f32], a: f32) {
+    let n = y.len();
+    let n4 = n - n % 4;
+    let av = vdupq_n_f32(a);
+    let mut k = 0;
+    while k < n4 {
+        let yv = vld1q_f32(y.as_ptr().add(k));
+        let xv = vld1q_f32(x.as_ptr().add(k));
+        vst1q_f32(y.as_mut_ptr().add(k), vfmaq_f32(yv, av, xv));
+        k += 4;
+    }
+    while k < n {
+        y[k] += a * x[k];
+        k += 1;
+    }
+}
+
+/// Unit-stride dot product: one 4-lane FMA accumulator + scalar tail.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { dot_neon(a, b) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let n4 = n - n % 4;
+    let mut acc = vdupq_n_f32(0.0);
+    let mut k = 0;
+    while k < n4 {
+        let av = vld1q_f32(a.as_ptr().add(k));
+        let bv = vld1q_f32(b.as_ptr().add(k));
+        acc = vfmaq_f32(acc, av, bv);
+        k += 4;
+    }
+    let mut s = vaddvq_f32(acc);
+    while k < n {
+        s += a[k] * b[k];
+        k += 1;
+    }
+    s
+}
+
+/// `y[b,n] = x[b,m] @ w[m,n]`: 4×4 FMA register tile, `k`-ascending.
+pub fn matmul_into(x: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(y.len(), b * n);
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { matmul_neon(x, w, y, b, m, n) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn matmul_neon(x: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    let n4 = n - n % 4;
+    let b4 = b - b % 4;
+    let mut i = 0;
+    while i < b4 {
+        let x0 = x.as_ptr().add(i * m);
+        let x1 = x.as_ptr().add((i + 1) * m);
+        let x2 = x.as_ptr().add((i + 2) * m);
+        let x3 = x.as_ptr().add((i + 3) * m);
+        let mut j = 0;
+        while j < n4 {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut acc2 = vdupq_n_f32(0.0);
+            let mut acc3 = vdupq_n_f32(0.0);
+            let mut wp = w.as_ptr().add(j);
+            for k in 0..m {
+                let wv = vld1q_f32(wp);
+                acc0 = vfmaq_f32(acc0, vdupq_n_f32(*x0.add(k)), wv);
+                acc1 = vfmaq_f32(acc1, vdupq_n_f32(*x1.add(k)), wv);
+                acc2 = vfmaq_f32(acc2, vdupq_n_f32(*x2.add(k)), wv);
+                acc3 = vfmaq_f32(acc3, vdupq_n_f32(*x3.add(k)), wv);
+                wp = wp.add(n);
+            }
+            vst1q_f32(y.as_mut_ptr().add(i * n + j), acc0);
+            vst1q_f32(y.as_mut_ptr().add((i + 1) * n + j), acc1);
+            vst1q_f32(y.as_mut_ptr().add((i + 2) * n + j), acc2);
+            vst1q_f32(y.as_mut_ptr().add((i + 3) * n + j), acc3);
+            j += 4;
+        }
+        while j < n {
+            for r in 0..4 {
+                let xr = x.as_ptr().add((i + r) * m);
+                let mut s = 0.0f32;
+                for k in 0..m {
+                    s += *xr.add(k) * w[k * n + j];
+                }
+                y[(i + r) * n + j] = s;
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < b {
+        let xr = x.as_ptr().add(i * m);
+        let mut j = 0;
+        while j < n4 {
+            let mut acc = vdupq_n_f32(0.0);
+            let mut wp = w.as_ptr().add(j);
+            for k in 0..m {
+                acc = vfmaq_f32(acc, vdupq_n_f32(*xr.add(k)), vld1q_f32(wp));
+                wp = wp.add(n);
+            }
+            vst1q_f32(y.as_mut_ptr().add(i * n + j), acc);
+            j += 4;
+        }
+        while j < n {
+            let mut s = 0.0f32;
+            for k in 0..m {
+                s += *xr.add(k) * w[k * n + j];
+            }
+            y[i * n + j] = s;
+            j += 1;
+        }
+        i += 1;
+    }
+}
+
+/// `y[b,m] = g[b,n] @ w[m,n]^T`: one 4-lane dot per output element.
+pub fn matmul_nt_into(g: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(y.len(), b * m);
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { matmul_nt_neon(g, w, y, b, m, n) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn matmul_nt_neon(g: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    for i in 0..b {
+        let grow = &g[i * n..(i + 1) * n];
+        let yrow = &mut y[i * m..(i + 1) * m];
+        for (k, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot_neon(grow, &w[k * n..(k + 1) * n]);
+        }
+    }
+}
+
+/// `dw[m,n] = x[b,m]^T @ g[b,n]`: the 4×4 tile with roles swapped.
+pub fn matmul_tn_into(x: &[f32], g: &[f32], dw: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(dw.len(), m * n);
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { matmul_tn_neon(x, g, dw, b, m, n) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn matmul_tn_neon(x: &[f32], g: &[f32], dw: &mut [f32], b: usize, m: usize, n: usize) {
+    let n4 = n - n % 4;
+    let m4 = m - m % 4;
+    let mut k = 0;
+    while k < m4 {
+        let mut j = 0;
+        while j < n4 {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut acc2 = vdupq_n_f32(0.0);
+            let mut acc3 = vdupq_n_f32(0.0);
+            for i in 0..b {
+                let gv = vld1q_f32(g.as_ptr().add(i * n + j));
+                let xp = x.as_ptr().add(i * m + k);
+                acc0 = vfmaq_f32(acc0, vdupq_n_f32(*xp), gv);
+                acc1 = vfmaq_f32(acc1, vdupq_n_f32(*xp.add(1)), gv);
+                acc2 = vfmaq_f32(acc2, vdupq_n_f32(*xp.add(2)), gv);
+                acc3 = vfmaq_f32(acc3, vdupq_n_f32(*xp.add(3)), gv);
+            }
+            vst1q_f32(dw.as_mut_ptr().add(k * n + j), acc0);
+            vst1q_f32(dw.as_mut_ptr().add((k + 1) * n + j), acc1);
+            vst1q_f32(dw.as_mut_ptr().add((k + 2) * n + j), acc2);
+            vst1q_f32(dw.as_mut_ptr().add((k + 3) * n + j), acc3);
+            j += 4;
+        }
+        while j < n {
+            for r in 0..4 {
+                let mut s = 0.0f32;
+                for i in 0..b {
+                    s += x[i * m + k + r] * g[i * n + j];
+                }
+                dw[(k + r) * n + j] = s;
+            }
+            j += 1;
+        }
+        k += 4;
+    }
+    while k < m {
+        let mut j = 0;
+        while j < n4 {
+            let mut acc = vdupq_n_f32(0.0);
+            for i in 0..b {
+                let gv = vld1q_f32(g.as_ptr().add(i * n + j));
+                acc = vfmaq_f32(acc, vdupq_n_f32(x[i * m + k]), gv);
+            }
+            vst1q_f32(dw.as_mut_ptr().add(k * n + j), acc);
+            j += 4;
+        }
+        while j < n {
+            let mut s = 0.0f32;
+            for i in 0..b {
+                s += x[i * m + k] * g[i * n + j];
+            }
+            dw[k * n + j] = s;
+            j += 1;
+        }
+        k += 1;
+    }
+}
+
+/// `db[n] = sum_i g[i,n]`: pure `vaddq` in the scalar fold's exact
+/// `i`-ascending order — bitwise identical to the scalar tier.
+pub fn colsum_into(g: &[f32], db: &mut [f32], b: usize, n: usize) {
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(db.len(), n);
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { colsum_neon(g, db, b, n) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn colsum_neon(g: &[f32], db: &mut [f32], b: usize, n: usize) {
+    let n4 = n - n % 4;
+    let mut j = 0;
+    while j < n4 {
+        let mut acc = vdupq_n_f32(0.0);
+        for i in 0..b {
+            acc = vaddq_f32(acc, vld1q_f32(g.as_ptr().add(i * n + j)));
+        }
+        vst1q_f32(db.as_mut_ptr().add(j), acc);
+        j += 4;
+    }
+    while j < n {
+        let mut s = 0.0f32;
+        for i in 0..b {
+            s += g[i * n + j];
+        }
+        db[j] = s;
+        j += 1;
+    }
+}
+
+/// `out[i] = dot(a[i,:], c[i,:])` over `[b, n]` operands.
+pub fn rowdot_into(a: &[f32], c: &[f32], out: &mut [f32], b: usize, n: usize) {
+    debug_assert_eq!(a.len(), b * n);
+    debug_assert_eq!(c.len(), b * n);
+    debug_assert_eq!(out.len(), b);
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { rowdot_neon(a, c, out, b, n) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn rowdot_neon(a: &[f32], c: &[f32], out: &mut [f32], b: usize, n: usize) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot_neon(&a[i * n..(i + 1) * n], &c[i * n..(i + 1) * n]);
+    }
+}
+
+/// Zero `dy` where `pre <= 0.0`; NaN pre-activations keep the gradient,
+/// exactly like the scalar branch — bitwise identical across modes.
+pub fn relu_mask(dy: &mut [f32], pre: &[f32]) {
+    debug_assert_eq!(dy.len(), pre.len());
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { relu_mask_neon(dy, pre) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn relu_mask_neon(dy: &mut [f32], pre: &[f32]) {
+    let n = dy.len();
+    let n4 = n - n % 4;
+    let zero = vdupq_n_f32(0.0);
+    let mut k = 0;
+    while k < n4 {
+        let p = vld1q_f32(pre.as_ptr().add(k));
+        let d = vld1q_f32(dy.as_ptr().add(k));
+        // mask lanes are all-ones where p <= 0 (false for NaN);
+        // bic keeps d where the mask is clear.
+        let mask = vcleq_f32(p, zero);
+        let kept = vbicq_u32(vreinterpretq_u32_f32(d), mask);
+        vst1q_f32(dy.as_mut_ptr().add(k), vreinterpretq_f32_u32(kept));
+        k += 4;
+    }
+    while k < n {
+        if pre[k] <= 0.0 {
+            dy[k] = 0.0;
+        }
+        k += 1;
+    }
+}
+
+/// Fused embedding gather + `x0` concat: 4-wide row copies straight
+/// into the concat layout. Pure copy — bitwise identical across modes.
+#[allow(clippy::too_many_arguments)]
+pub fn embed_concat_fwd(
+    table: &[f32],
+    ids: &[i32],
+    dense_x: &[f32],
+    b: usize,
+    f: usize,
+    d: usize,
+    nd: usize,
+    x0: &mut [f32],
+) {
+    let d0 = f * d + nd;
+    debug_assert_eq!(ids.len(), b * f);
+    debug_assert_eq!(dense_x.len(), b * nd);
+    debug_assert_eq!(x0.len(), b * d0);
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { embed_concat_neon(table, ids, dense_x, b, f, d, nd, x0) }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn embed_concat_neon(
+    table: &[f32],
+    ids: &[i32],
+    dense_x: &[f32],
+    b: usize,
+    f: usize,
+    d: usize,
+    nd: usize,
+    x0: &mut [f32],
+) {
+    let d0 = f * d + nd;
+    let d4 = d - d % 4;
+    for i in 0..b {
+        let row = i * d0;
+        for (j, &id) in ids[i * f..(i + 1) * f].iter().enumerate() {
+            let src = table.as_ptr().add(id as usize * d);
+            let dst = x0.as_mut_ptr().add(row + j * d);
+            let mut t = 0;
+            while t < d4 {
+                vst1q_f32(dst.add(t), vld1q_f32(src.add(t)));
+                t += 4;
+            }
+            while t < d {
+                *dst.add(t) = *src.add(t);
+                t += 1;
+            }
+        }
+        if nd > 0 {
+            x0[row + f * d..row + d0].copy_from_slice(&dense_x[i * nd..(i + 1) * nd]);
+        }
+    }
+}
+
+/// Serving's fused dequantize: widen 4 `u16` codes through `u32` to
+/// `f32`, then multiply-then-add (two roundings, deliberately *not*
+/// fused) — bitwise identical to the scalar `min + c as f32 * step`.
+pub fn dequant_row(codes: &[u16], min: f32, step: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    // Safety: reachable only through the `NEON` vtable (see `axpy`).
+    unsafe { dequant_row_neon(codes, min, step, out) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dequant_row_neon(codes: &[u16], min: f32, step: f32, out: &mut [f32]) {
+    let n = codes.len();
+    let n4 = n - n % 4;
+    let minv = vdupq_n_f32(min);
+    let stepv = vdupq_n_f32(step);
+    let mut k = 0;
+    while k < n4 {
+        let raw = vld1_u16(codes.as_ptr().add(k));
+        let wide = vcvtq_f32_u32(vmovl_u16(raw));
+        vst1q_f32(out.as_mut_ptr().add(k), vaddq_f32(minv, vmulq_f32(wide, stepv)));
+        k += 4;
+    }
+    while k < n {
+        out[k] = min + codes[k] as f32 * step;
+        k += 1;
+    }
+}

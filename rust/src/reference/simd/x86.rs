@@ -1,0 +1,465 @@
+//! AVX2+FMA microkernels (x86_64).
+//!
+//! ## Tile shapes
+//!
+//! * [`matmul_into`] — a 4-row × 8-column register tile: four `ymm`
+//!   accumulators, and per contraction step one 8-wide load of a `w`
+//!   row strip plus four scalar broadcasts from `x`, combined with
+//!   `vfmadd`. 4×8 is chosen to fit comfortably in the 16 `ymm`
+//!   registers (4 accumulators + 1 strip + broadcasts) while reusing
+//!   each `w` load four times; rows and columns come straight from the
+//!   caller's [`super::super::Scratch`] blocks, so no packing buffer is
+//!   needed (`m`, `n` are ≤ a few hundred for every model config).
+//! * [`matmul_tn_into`] — the same tile with the roles swapped: four
+//!   `dw` rows × 8 `g` columns, accumulating `i`-ascending over the
+//!   batch.
+//! * [`matmul_nt_into`] / [`rowdot_into`] / [`dot`] — one 8-lane FMA
+//!   accumulator per output element, reduced by a fixed
+//!   `extract/movehl/shuffle` pairwise tree.
+//! * [`axpy`], [`colsum_into`], [`relu_mask`], [`dequant_row`],
+//!   [`embed_concat_fwd`] — straight 8-wide streaming loops.
+//!
+//! ## Remainder handling
+//!
+//! Nothing here requires alignment or padded shapes: every kernel
+//! splits its trip count as `n8 = n - n % 8` (`b4 = b - b % 4` for the
+//! row dimension of the tiles), runs the vector body to `n8`, and
+//! finishes with the same scalar loop the naive oracle uses. The
+//! property sweep in `rust/tests/kernel_parity.rs` drives odd sizes and
+//! misaligned lengths through every branch.
+//!
+//! ## Determinism
+//!
+//! Per output element the contraction order is fixed (`k`- resp.
+//! `i`-ascending, lane `l` owning elements `l, l+8, …`, then one fixed
+//! pairwise lane reduction), so results are bitwise-reproducible for a
+//! given shape on every call, thread and shard — the within-mode
+//! invariant. Versus the scalar tier, `vfmadd` contracts `a*b + c`
+//! with a single rounding where scalar rounds the product and the sum
+//! separately, so FMA kernels differ from scalar in the last bits
+//! (cross-mode gate: ≤1e-6 relative). [`colsum_into`],
+//! [`embed_concat_fwd`], [`relu_mask`] and [`dequant_row`] perform the
+//! same single-rounding operations in the same order as scalar and are
+//! bitwise identical across modes.
+
+// The one place in the crate (together with `neon.rs`) where unsafe is
+// permitted; `cowclip-lint`'s unsafe-confinement rule enforces that.
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::*;
+
+use super::Kernels;
+
+/// The AVX2+FMA vtable. Only handed out by `super::resolve` after
+/// `is_x86_feature_detected!("avx2")` and `("fma")` both report true.
+pub static AVX2: Kernels = Kernels {
+    name: "avx2",
+    axpy,
+    dot,
+    matmul_into,
+    matmul_nt_into,
+    matmul_tn_into,
+    colsum_into,
+    rowdot_into,
+    relu_mask,
+    embed_concat_fwd,
+    dequant_row,
+};
+
+/// `y += a * x`, 8 lanes at a time.
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    // Safety: reachable only through the `AVX2` vtable, which is
+    // installed strictly after runtime AVX2+FMA detection.
+    unsafe { axpy_avx2(y, x, a) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(y: &mut [f32], x: &[f32], a: f32) {
+    let n = y.len();
+    let n8 = n - n % 8;
+    let av = _mm256_set1_ps(a);
+    let mut k = 0;
+    while k < n8 {
+        let yv = _mm256_loadu_ps(y.as_ptr().add(k));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(k));
+        _mm256_storeu_ps(y.as_mut_ptr().add(k), _mm256_fmadd_ps(av, xv, yv));
+        k += 8;
+    }
+    while k < n {
+        y[k] += a * x[k];
+        k += 1;
+    }
+}
+
+/// Unit-stride dot product: one 8-lane FMA accumulator + scalar tail.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { dot_avx2(a, b) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let n8 = n - n % 8;
+    let mut acc = _mm256_setzero_ps();
+    let mut k = 0;
+    while k < n8 {
+        let av = _mm256_loadu_ps(a.as_ptr().add(k));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(k));
+        acc = _mm256_fmadd_ps(av, bv, acc);
+        k += 8;
+    }
+    let mut s = hsum8(acc);
+    while k < n {
+        s += a[k] * b[k];
+        k += 1;
+    }
+    s
+}
+
+/// Fixed pairwise horizontal sum of the 8 lanes:
+/// `(lo+hi)` quad → `movehl` pair → `shuffle` single.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let q = _mm_add_ps(lo, hi);
+    let p = _mm_add_ps(q, _mm_movehl_ps(q, q));
+    let s = _mm_add_ss(p, _mm_shuffle_ps(p, p, 1));
+    _mm_cvtss_f32(s)
+}
+
+/// `y[b,n] = x[b,m] @ w[m,n]`: 4×8 FMA register tile, `k`-ascending.
+pub fn matmul_into(x: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(y.len(), b * n);
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { matmul_avx2(x, w, y, b, m, n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_avx2(x: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    let n8 = n - n % 8;
+    let b4 = b - b % 4;
+    let mut i = 0;
+    while i < b4 {
+        let x0 = x.as_ptr().add(i * m);
+        let x1 = x.as_ptr().add((i + 1) * m);
+        let x2 = x.as_ptr().add((i + 2) * m);
+        let x3 = x.as_ptr().add((i + 3) * m);
+        let mut j = 0;
+        while j < n8 {
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut acc2 = _mm256_setzero_ps();
+            let mut acc3 = _mm256_setzero_ps();
+            let mut wp = w.as_ptr().add(j);
+            for k in 0..m {
+                let wv = _mm256_loadu_ps(wp);
+                acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*x0.add(k)), wv, acc0);
+                acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*x1.add(k)), wv, acc1);
+                acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*x2.add(k)), wv, acc2);
+                acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*x3.add(k)), wv, acc3);
+                wp = wp.add(n);
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * n + j), acc0);
+            _mm256_storeu_ps(y.as_mut_ptr().add((i + 1) * n + j), acc1);
+            _mm256_storeu_ps(y.as_mut_ptr().add((i + 2) * n + j), acc2);
+            _mm256_storeu_ps(y.as_mut_ptr().add((i + 3) * n + j), acc3);
+            j += 8;
+        }
+        while j < n {
+            for r in 0..4 {
+                let xr = x.as_ptr().add((i + r) * m);
+                let mut s = 0.0f32;
+                for k in 0..m {
+                    s += *xr.add(k) * w[k * n + j];
+                }
+                y[(i + r) * n + j] = s;
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < b {
+        let xr = x.as_ptr().add(i * m);
+        let mut j = 0;
+        while j < n8 {
+            let mut acc = _mm256_setzero_ps();
+            let mut wp = w.as_ptr().add(j);
+            for k in 0..m {
+                acc = _mm256_fmadd_ps(_mm256_set1_ps(*xr.add(k)), _mm256_loadu_ps(wp), acc);
+                wp = wp.add(n);
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * n + j), acc);
+            j += 8;
+        }
+        while j < n {
+            let mut s = 0.0f32;
+            for k in 0..m {
+                s += *xr.add(k) * w[k * n + j];
+            }
+            y[i * n + j] = s;
+            j += 1;
+        }
+        i += 1;
+    }
+}
+
+/// `y[b,m] = g[b,n] @ w[m,n]^T`: one 8-lane dot per output element.
+pub fn matmul_nt_into(g: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(y.len(), b * m);
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { matmul_nt_avx2(g, w, y, b, m, n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_nt_avx2(g: &[f32], w: &[f32], y: &mut [f32], b: usize, m: usize, n: usize) {
+    for i in 0..b {
+        let grow = &g[i * n..(i + 1) * n];
+        let yrow = &mut y[i * m..(i + 1) * m];
+        for (k, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot_avx2(grow, &w[k * n..(k + 1) * n]);
+        }
+    }
+}
+
+/// `dw[m,n] = x[b,m]^T @ g[b,n]`: the 4×8 tile with roles swapped —
+/// four `dw` rows, eight `g` columns, `i`-ascending over the batch.
+pub fn matmul_tn_into(x: &[f32], g: &[f32], dw: &mut [f32], b: usize, m: usize, n: usize) {
+    debug_assert_eq!(x.len(), b * m);
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(dw.len(), m * n);
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { matmul_tn_avx2(x, g, dw, b, m, n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_tn_avx2(x: &[f32], g: &[f32], dw: &mut [f32], b: usize, m: usize, n: usize) {
+    let n8 = n - n % 8;
+    let m4 = m - m % 4;
+    let mut k = 0;
+    while k < m4 {
+        let mut j = 0;
+        while j < n8 {
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut acc2 = _mm256_setzero_ps();
+            let mut acc3 = _mm256_setzero_ps();
+            for i in 0..b {
+                let gv = _mm256_loadu_ps(g.as_ptr().add(i * n + j));
+                let xp = x.as_ptr().add(i * m + k);
+                acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*xp), gv, acc0);
+                acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*xp.add(1)), gv, acc1);
+                acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*xp.add(2)), gv, acc2);
+                acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*xp.add(3)), gv, acc3);
+            }
+            _mm256_storeu_ps(dw.as_mut_ptr().add(k * n + j), acc0);
+            _mm256_storeu_ps(dw.as_mut_ptr().add((k + 1) * n + j), acc1);
+            _mm256_storeu_ps(dw.as_mut_ptr().add((k + 2) * n + j), acc2);
+            _mm256_storeu_ps(dw.as_mut_ptr().add((k + 3) * n + j), acc3);
+            j += 8;
+        }
+        while j < n {
+            for r in 0..4 {
+                let mut s = 0.0f32;
+                for i in 0..b {
+                    s += x[i * m + k + r] * g[i * n + j];
+                }
+                dw[(k + r) * n + j] = s;
+            }
+            j += 1;
+        }
+        k += 4;
+    }
+    while k < m {
+        let mut j = 0;
+        while j < n8 {
+            let mut acc = _mm256_setzero_ps();
+            for i in 0..b {
+                let gv = _mm256_loadu_ps(g.as_ptr().add(i * n + j));
+                acc = _mm256_fmadd_ps(_mm256_set1_ps(x[i * m + k]), gv, acc);
+            }
+            _mm256_storeu_ps(dw.as_mut_ptr().add(k * n + j), acc);
+            j += 8;
+        }
+        while j < n {
+            let mut s = 0.0f32;
+            for i in 0..b {
+                s += x[i * m + k] * g[i * n + j];
+            }
+            dw[k * n + j] = s;
+            j += 1;
+        }
+        k += 1;
+    }
+}
+
+/// `db[n] = sum_i g[i,n]`: pure `vaddps` in the scalar fold's exact
+/// `i`-ascending order — bitwise identical to the scalar tier.
+pub fn colsum_into(g: &[f32], db: &mut [f32], b: usize, n: usize) {
+    debug_assert_eq!(g.len(), b * n);
+    debug_assert_eq!(db.len(), n);
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { colsum_avx2(g, db, b, n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn colsum_avx2(g: &[f32], db: &mut [f32], b: usize, n: usize) {
+    let n8 = n - n % 8;
+    let mut j = 0;
+    while j < n8 {
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..b {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(g.as_ptr().add(i * n + j)));
+        }
+        _mm256_storeu_ps(db.as_mut_ptr().add(j), acc);
+        j += 8;
+    }
+    while j < n {
+        let mut s = 0.0f32;
+        for i in 0..b {
+            s += g[i * n + j];
+        }
+        db[j] = s;
+        j += 1;
+    }
+}
+
+/// `out[i] = dot(a[i,:], c[i,:])` over `[b, n]` operands.
+pub fn rowdot_into(a: &[f32], c: &[f32], out: &mut [f32], b: usize, n: usize) {
+    debug_assert_eq!(a.len(), b * n);
+    debug_assert_eq!(c.len(), b * n);
+    debug_assert_eq!(out.len(), b);
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { rowdot_avx2(a, c, out, b, n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn rowdot_avx2(a: &[f32], c: &[f32], out: &mut [f32], b: usize, n: usize) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot_avx2(&a[i * n..(i + 1) * n], &c[i * n..(i + 1) * n]);
+    }
+}
+
+/// Zero `dy` where `pre <= 0.0`. The ordered-quiet compare treats NaN
+/// pre-activations as "keep", exactly like the scalar branch — bitwise
+/// identical across modes.
+pub fn relu_mask(dy: &mut [f32], pre: &[f32]) {
+    debug_assert_eq!(dy.len(), pre.len());
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { relu_mask_avx2(dy, pre) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn relu_mask_avx2(dy: &mut [f32], pre: &[f32]) {
+    let n = dy.len();
+    let n8 = n - n % 8;
+    let zero = _mm256_setzero_ps();
+    let mut k = 0;
+    while k < n8 {
+        let p = _mm256_loadu_ps(pre.as_ptr().add(k));
+        let d = _mm256_loadu_ps(dy.as_ptr().add(k));
+        // mask lanes are all-ones where p <= 0 (false for NaN);
+        // andnot keeps d where the mask is clear.
+        let mask = _mm256_cmp_ps::<_CMP_LE_OQ>(p, zero);
+        _mm256_storeu_ps(dy.as_mut_ptr().add(k), _mm256_andnot_ps(mask, d));
+        k += 8;
+    }
+    while k < n {
+        if pre[k] <= 0.0 {
+            dy[k] = 0.0;
+        }
+        k += 1;
+    }
+}
+
+/// Fused embedding gather + `x0` concat: 8-wide row copies straight
+/// into the concat layout. Pure copy — bitwise identical across modes.
+#[allow(clippy::too_many_arguments)]
+pub fn embed_concat_fwd(
+    table: &[f32],
+    ids: &[i32],
+    dense_x: &[f32],
+    b: usize,
+    f: usize,
+    d: usize,
+    nd: usize,
+    x0: &mut [f32],
+) {
+    let d0 = f * d + nd;
+    debug_assert_eq!(ids.len(), b * f);
+    debug_assert_eq!(dense_x.len(), b * nd);
+    debug_assert_eq!(x0.len(), b * d0);
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { embed_concat_avx2(table, ids, dense_x, b, f, d, nd, x0) }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn embed_concat_avx2(
+    table: &[f32],
+    ids: &[i32],
+    dense_x: &[f32],
+    b: usize,
+    f: usize,
+    d: usize,
+    nd: usize,
+    x0: &mut [f32],
+) {
+    let d0 = f * d + nd;
+    let d8 = d - d % 8;
+    for i in 0..b {
+        let row = i * d0;
+        for (j, &id) in ids[i * f..(i + 1) * f].iter().enumerate() {
+            let src = table.as_ptr().add(id as usize * d);
+            let dst = x0.as_mut_ptr().add(row + j * d);
+            let mut t = 0;
+            while t < d8 {
+                _mm256_storeu_ps(dst.add(t), _mm256_loadu_ps(src.add(t)));
+                t += 8;
+            }
+            while t < d {
+                *dst.add(t) = *src.add(t);
+                t += 1;
+            }
+        }
+        if nd > 0 {
+            x0[row + f * d..row + d0].copy_from_slice(&dense_x[i * nd..(i + 1) * nd]);
+        }
+    }
+}
+
+/// Serving's fused dequantize: widen 8 `u16` codes through `i32` to
+/// `f32`, then multiply-then-add (two roundings, deliberately *not*
+/// FMA) — bitwise identical to the scalar `min + c as f32 * step`.
+pub fn dequant_row(codes: &[u16], min: f32, step: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    // Safety: reachable only through the `AVX2` vtable (see `axpy`).
+    unsafe { dequant_row_avx2(codes, min, step, out) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dequant_row_avx2(codes: &[u16], min: f32, step: f32, out: &mut [f32]) {
+    let n = codes.len();
+    let n8 = n - n % 8;
+    let minv = _mm256_set1_ps(min);
+    let stepv = _mm256_set1_ps(step);
+    let mut k = 0;
+    while k < n8 {
+        let raw = _mm_loadu_si128(codes.as_ptr().add(k) as *const __m128i);
+        let wide = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(raw));
+        let v = _mm256_add_ps(minv, _mm256_mul_ps(wide, stepv));
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), v);
+        k += 8;
+    }
+    while k < n {
+        out[k] = min + codes[k] as f32 * step;
+        k += 1;
+    }
+}

@@ -37,7 +37,7 @@ use crate::data::schema::Schema;
 use crate::model::manifest::ParamEntry;
 use crate::model::params::ParamSet;
 use crate::model::store::ParamStore;
-use crate::reference::{ReferenceModel, Scratch};
+use crate::reference::{Kernels, ReferenceModel, Scratch};
 use crate::tensor::Tensor;
 
 /// Frozen storage of one vocab-shaped table.
@@ -47,10 +47,17 @@ enum TableStore {
 }
 
 impl TableStore {
-    fn row_into(&self, id: usize, field: usize, d: usize, out: &mut [f32]) {
+    /// Gather one row into `out`; quantized tables dequantize through
+    /// the serving model's SIMD vtable (`k.dequant_row` — the fused
+    /// gather–dequantize pass, bitwise equal to the scalar
+    /// `min + code as f32 * step` in every tier).
+    fn row_into(&self, k: &Kernels, id: usize, field: usize, d: usize, out: &mut [f32]) {
         match self {
             TableStore::F32(w) => out.copy_from_slice(&w[id * d..(id + 1) * d]),
-            TableStore::Quant(q) => q.row_into(id, field, out),
+            TableStore::Quant(q) => {
+                let (min, step) = q.affine(field);
+                (k.dequant_row)(q.row_codes(id), min, step, out);
+            }
         }
     }
 
@@ -223,13 +230,14 @@ impl ServeModel {
         let d0 = self.model.d0();
         debug_assert!(reqs.iter().all(|r| r.validate(&self.model.schema).is_ok()));
 
+        let kernels = self.model.kernels();
         let mut x0 = scratch.take(b * d0);
         let mut wide_sums = self.wide.as_ref().map(|_| scratch.take(b));
         for (i, r) in reqs.iter().enumerate() {
             let row = &mut x0[i * d0..(i + 1) * d0];
             let mut s = 0.0f32;
             for (j, &id) in r.cat.iter().enumerate() {
-                self.embed.row_into(id as usize, j, d, &mut row[j * d..(j + 1) * d]);
+                self.embed.row_into(kernels, id as usize, j, d, &mut row[j * d..(j + 1) * d]);
                 if let Some(wide) = self.wide.as_ref() {
                     s += wide.value(id as usize, j);
                 }

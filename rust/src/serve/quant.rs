@@ -121,6 +121,19 @@ impl QuantizedTable {
         }
     }
 
+    /// Raw `u16` codes of row `id` — the input to the SIMD
+    /// `dequant_row` kernel (see `reference::simd`).
+    #[inline]
+    pub fn row_codes(&self, id: usize) -> &[u16] {
+        &self.codes[id * self.d..(id + 1) * self.d]
+    }
+
+    /// The `(min, step)` affine constants of `field`.
+    #[inline]
+    pub fn affine(&self, field: usize) -> (f32, f32) {
+        (self.field_min[field], self.field_step[field])
+    }
+
     /// Dequantize the single scalar of a `d == 1` row (the wide table).
     #[inline]
     pub fn value(&self, id: usize, field: usize) -> f32 {

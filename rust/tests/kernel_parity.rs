@@ -1,0 +1,287 @@
+//! SIMD kernel tier parity: every kernel the runtime dispatcher can
+//! hand out must agree with the `linalg::naive` scalar oracles —
+//! bitwise for the copy-class kernels (`colsum`, `embed_concat_fwd`,
+//! `dequant_row`, `relu_mask`), ≤1e-6 relative for the FMA-contracted
+//! ones — on odd shapes, remainder lanes and misaligned lengths; and
+//! all four model architectures must score/train the same under the
+//! scalar and the widest native tier.
+//!
+//! On a host without AVX2/NEON every `resolve()` call degrades to the
+//! scalar vtable, so these tests pass trivially there — the CI matrix
+//! also runs the concurrency parity suites under `COWCLIP_KERNEL=scalar`
+//! to pin the cross-mode story from the environment side.
+
+use cowclip::data::batcher::Batch;
+use cowclip::data::schema::Schema;
+use cowclip::model::init::{init_params, InitConfig};
+use cowclip::reference::simd::{resolve, scalar, KernelMode};
+use cowclip::reference::step::build_spec;
+use cowclip::reference::{layers, linalg, ModelKind, ReferenceModel, Scratch};
+use cowclip::tensor::Tensor;
+use cowclip::util::Rng;
+
+/// Relative gate for kernels whose SIMD form contracts `a*b + c` into
+/// one rounding (matmul family, dot, axpy, rowdot).
+fn close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = 1e-6f32 * x.abs().max(y.abs()).max(1.0);
+        assert!((x - y).abs() <= tol, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.next_gaussian() as f32).collect()
+}
+
+/// Shapes chosen to hit every remainder path of the 4×8 (AVX2) and
+/// 4×4 (NEON) tiles: full tiles, column tails, row tails, sub-tile
+/// matrices, degenerate dims and the empty batch.
+const SHAPES: [(usize, usize, usize); 10] = [
+    (0, 4, 8),
+    (1, 1, 1),
+    (2, 3, 5),
+    (4, 8, 8),
+    (5, 7, 9),
+    (7, 5, 8),
+    (3, 17, 33),
+    (8, 16, 24),
+    (13, 31, 40),
+    (6, 64, 65),
+];
+
+/// The tiers worth racing on this host: scalar always, plus whatever
+/// each explicit mode resolves to (deduplicated by vtable identity so
+/// the test body stays meaningful off-x86/off-arm).
+fn tiers() -> Vec<&'static cowclip::reference::Kernels> {
+    let mut out = vec![scalar()];
+    for mode in [KernelMode::Avx2, KernelMode::Neon, KernelMode::Auto] {
+        let k = resolve(mode);
+        if !out.iter().any(|have| std::ptr::eq(*have, k)) {
+            out.push(k);
+        }
+    }
+    out
+}
+
+#[test]
+fn matmul_family_matches_naive_on_odd_shapes() {
+    for k in tiers() {
+        for (si, &(b, m, n)) in SHAPES.iter().enumerate() {
+            let seed = 100 + si as u64;
+            let x = gaussian(b * m, seed);
+            let w = gaussian(m * n, seed + 1);
+            let g = gaussian(b * n, seed + 2);
+            let tag = |op: &str| format!("{}[{op} b={b} m={m} n={n}]", k.name);
+
+            let mut y = vec![f32::NAN; b * n];
+            (k.matmul_into)(&x, &w, &mut y, b, m, n);
+            close(&y, &linalg::naive::matmul(&x, &w, b, m, n), &tag("matmul"));
+
+            let mut dx = vec![f32::NAN; b * m];
+            (k.matmul_nt_into)(&g, &w, &mut dx, b, m, n);
+            close(&dx, &linalg::naive::matmul_nt(&g, &w, b, m, n), &tag("matmul_nt"));
+
+            let mut dw = vec![f32::NAN; m * n];
+            (k.matmul_tn_into)(&x, &g, &mut dw, b, m, n);
+            close(&dw, &linalg::naive::matmul_tn(&x, &g, b, m, n), &tag("matmul_tn"));
+
+            // colsum is in the bitwise class: pure lane adds in the
+            // scalar i-ascending order, no FMA anywhere.
+            let mut db = vec![f32::NAN; n];
+            (k.colsum_into)(&g, &mut db, b, n);
+            assert_eq!(db, linalg::naive::colsum(&g, b, n), "{}", tag("colsum"));
+
+            let c = gaussian(b * n, seed + 3);
+            let mut rd = vec![f32::NAN; b];
+            (k.rowdot_into)(&g, &c, &mut rd, b, n);
+            close(&rd, &linalg::naive::rowdot(&g, &c, b, n), &tag("rowdot"));
+        }
+    }
+}
+
+#[test]
+fn dot_axpy_match_sequential_oracle_on_misaligned_lengths() {
+    // every lane-remainder case of the 8-wide and 4-wide kernels
+    for k in tiers() {
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100] {
+            let a = gaussian(len, 7 + len as u64);
+            let b = gaussian(len, 9 + len as u64);
+            let seq: f32 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+            close(&[(k.dot)(&a, &b)], &[seq], &format!("{}[dot len={len}]", k.name));
+
+            let mut y = gaussian(len, 11 + len as u64);
+            let want: Vec<f32> = y.iter().zip(&a).map(|(&yv, &xv)| yv + 0.37 * xv).collect();
+            (k.axpy)(&mut y, &a, 0.37);
+            close(&y, &want, &format!("{}[axpy len={len}]", k.name));
+        }
+    }
+}
+
+#[test]
+fn copy_class_kernels_are_bitwise_in_every_tier() {
+    for k in tiers() {
+        // dequant_row: explicit mul-then-add, including the remainder
+        // lanes and the full u16 range
+        for len in [0usize, 1, 3, 7, 8, 9, 16, 17, 33] {
+            let mut rng = Rng::new(40 + len as u64);
+            let codes: Vec<u16> = (0..len).map(|_| rng.below(65536) as u16).collect();
+            let (min, step) = (-0.73f32, 1.9e-4f32);
+            let mut out = vec![f32::NAN; len];
+            (k.dequant_row)(&codes, min, step, &mut out);
+            let want: Vec<f32> = codes.iter().map(|&c| min + c as f32 * step).collect();
+            assert_eq!(out, want, "{}[dequant len={len}]", k.name);
+        }
+
+        // relu_mask: ordered compare — negatives and -0.0 zero the
+        // gradient, positives and NaN pre-activations keep it
+        let pre = [1.0f32, -1.0, 0.0, -0.0, f32::NAN, 0.5, -3.0, 2.0, 1e-9, -1e-9, 7.0];
+        for len in [0usize, 1, 3, 8, 11] {
+            let mut dy: Vec<f32> = (0..len).map(|i| i as f32 + 1.0).collect();
+            let mut want = dy.clone();
+            for (gv, &p) in want.iter_mut().zip(&pre[..len]) {
+                if p <= 0.0 {
+                    *gv = 0.0;
+                }
+            }
+            (k.relu_mask)(&mut dy, &pre[..len]);
+            assert_eq!(dy, want, "{}[relu_mask len={len}]", k.name);
+        }
+
+        // embed_concat_fwd: pure gather+copy — compare against the
+        // scalar fused pass on a rows-with-tails layout
+        let (b, f, d, nd) = (5usize, 3usize, 6usize, 2usize);
+        let vocab = 11usize;
+        let table = gaussian(vocab * d, 77);
+        let dense = gaussian(b * nd, 78);
+        let mut rng = Rng::new(79);
+        let ids: Vec<i32> = (0..b * f).map(|_| rng.below(vocab as u64) as i32).collect();
+        let d0 = f * d + nd;
+        let mut got = vec![f32::NAN; b * d0];
+        let mut want = vec![f32::NAN; b * d0];
+        (k.embed_concat_fwd)(&table, &ids, &dense, b, f, d, nd, &mut got);
+        layers::embed_concat_fwd(&table, &ids, &dense, b, f, d, nd, &mut want);
+        assert_eq!(got, want, "{}[embed_concat_fwd]", k.name);
+    }
+}
+
+#[test]
+fn within_mode_repeat_is_bitwise() {
+    // the determinism tier-1 claim: a fixed vtable replays the identical
+    // instruction stream, so repeated calls cannot differ in one bit
+    for k in tiers() {
+        let (b, m, n) = (9usize, 33usize, 17usize);
+        let x = gaussian(b * m, 5);
+        let w = gaussian(m * n, 6);
+        let mut y0 = vec![0.0f32; b * n];
+        let mut y1 = vec![f32::NAN; b * n];
+        (k.matmul_into)(&x, &w, &mut y0, b, m, n);
+        (k.matmul_into)(&x, &w, &mut y1, b, m, n);
+        assert_eq!(y0, y1, "{}: repeated matmul drifted", k.name);
+        assert_eq!((k.dot)(&x, &x).to_bits(), (k.dot)(&x, &x).to_bits(), "{}: dot", k.name);
+    }
+}
+
+#[test]
+fn unsupported_modes_fall_back_to_scalar_not_ub() {
+    // requesting the other architecture's tier must degrade cleanly
+    #[cfg(not(target_arch = "x86_64"))]
+    assert!(std::ptr::eq(resolve(KernelMode::Avx2), scalar()));
+    #[cfg(not(target_arch = "aarch64"))]
+    assert!(std::ptr::eq(resolve(KernelMode::Neon), scalar()));
+    assert!(std::ptr::eq(resolve(KernelMode::Scalar), scalar()));
+    // and resolution is a pure function of (mode, host)
+    assert!(std::ptr::eq(resolve(KernelMode::Auto), resolve(KernelMode::Auto)));
+}
+
+fn tiny_schema() -> Schema {
+    Schema { name: "kernel_parity".into(), n_dense: 3, vocab_sizes: vec![7, 5, 3] }
+}
+
+fn tiny_batch(schema: &Schema, b: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let offs = schema.offsets();
+    let mut x_cat = Vec::new();
+    for _ in 0..b {
+        for (f, &vs) in schema.vocab_sizes.iter().enumerate() {
+            x_cat.push((offs[f] + rng.below(vs as u64) as usize) as i32);
+        }
+    }
+    let x_dense: Vec<f32> = (0..b * schema.n_dense).map(|_| rng.next_gaussian() as f32).collect();
+    let y: Vec<f32> = (0..b).map(|_| rng.bernoulli(0.4) as u8 as f32).collect();
+    Batch::new(
+        Tensor::i32(vec![b, schema.n_cat()], x_cat),
+        Tensor::f32(vec![b, schema.n_dense], x_dense),
+        Tensor::f32(vec![b], y),
+        b,
+    )
+}
+
+/// All four architectures, forward + backward + infer, scalar tier vs
+/// the widest tier the host runs — the end-to-end cross-mode gate.
+#[test]
+fn all_models_agree_across_kernel_tiers() {
+    let auto = resolve(KernelMode::Auto);
+    for kind in ModelKind::ALL {
+        let schema = tiny_schema();
+        let scalar_model = ReferenceModel::new(kind, schema.clone(), 4, vec![8, 8], 2)
+            .with_kernels(scalar());
+        let simd_model = ReferenceModel::new(kind, schema.clone(), 4, vec![8, 8], 2)
+            .with_kernels(auto);
+        let spec = build_spec(kind, &schema, 4, &[8, 8], 2);
+        let params = init_params(&spec, &InitConfig { seed: 21, embed_sigma: 0.05 });
+        // batch of 13: row tails in the 4-row matmul tiles every layer
+        let batch = tiny_batch(&schema, 13, 22);
+
+        let want = scalar_model.forward(&params, &batch).unwrap();
+        let got = simd_model.forward(&params, &batch).unwrap();
+        close(&got, &want, &format!("{kind}: forward ({})", auto.name));
+
+        let (loss_s, grads_s, counts_s) = scalar_model.grad(&params, &batch).unwrap();
+        let (loss_v, grads_v, counts_v) = simd_model.grad(&params, &batch).unwrap();
+        close(&[loss_v], &[loss_s], &format!("{kind}: loss"));
+        assert_eq!(counts_v, counts_s, "{kind}: touched-row counts");
+        assert_eq!(grads_v.len(), grads_s.len());
+        for (gi, (gv, gs)) in grads_v.iter().zip(&grads_s).enumerate() {
+            close(
+                gv.to_tensor().as_f32().unwrap(),
+                gs.to_tensor().as_f32().unwrap(),
+                &format!("{kind}: grad[{gi}]"),
+            );
+        }
+
+        // infer path: same x0 (embed_concat is bitwise in every tier),
+        // cross-mode logits within the FMA gate
+        let b = batch.batch_size();
+        let f = schema.n_cat();
+        let (d, nd, d0) = (4usize, schema.n_dense, scalar_model.d0());
+        let ids = batch.x_cat.as_i32().unwrap();
+        let dense = batch.x_dense.as_f32().unwrap();
+        let mut table: Option<&[f32]> = None;
+        let mut wide: Option<&[f32]> = None;
+        let mut dense_params: Vec<Tensor> = Vec::new();
+        for (e, t) in spec.iter().zip(&params.tensors) {
+            match e.group.as_str() {
+                "embed" => table = Some(t.as_f32().unwrap()),
+                "wide" => wide = Some(t.as_f32().unwrap()),
+                _ => dense_params.push(t.clone()),
+            }
+        }
+        let mut x0 = vec![0.0f32; b * d0];
+        layers::embed_concat_fwd(table.unwrap(), ids, dense, b, f, d, nd, &mut x0);
+        let wide_sums: Option<Vec<f32>> = wide.map(|wt| {
+            (0..b)
+                .map(|i| ids[i * f..(i + 1) * f].iter().map(|&id| wt[id as usize]).sum())
+                .collect()
+        });
+        let mut scratch = Scratch::new();
+        let want = scalar_model
+            .infer_x0(&dense_params, &x0, wide_sums.as_deref(), b, &mut scratch)
+            .unwrap();
+        let got = simd_model
+            .infer_x0(&dense_params, &x0, wide_sums.as_deref(), b, &mut scratch)
+            .unwrap();
+        close(&got, &want, &format!("{kind}: infer_x0"));
+    }
+}
