@@ -22,17 +22,24 @@
 //! config, same batches, only the kernel/memory tier changed (the
 //! parity suites pin the math).
 //!
-//! Arm 5 (needs `make artifacts` + the `pjrt` feature): full training
+//! Arm 5 (always runs): the multi-process all-reduce path — 2 ranks
+//! over a framed Unix-socket transport (run in-process on threads so
+//! the bench binary stays self-contained), lossless vs u8-quantized
+//! sparse gradients with error feedback, reporting rows/s, on-wire
+//! bytes per step, and the sparse compression ratio. Written to
+//! `BENCH_dist.json` for the CI artifact trail.
+//!
+//! Arm 6 (needs `make artifacts` + the `pjrt` feature): full training
 //! epochs through the AOT/PJRT path per batch size, reporting wall time
 //! and the speedup series.
 //!
-//! `-- --smoke` runs tiny threaded-arm, sharded-arm and hot-path
-//! configs (CI compile+run gate, a few seconds).
+//! `-- --smoke` runs tiny threaded-arm, sharded-arm, hot-path and
+//! distributed configs (CI compile+run gate, a few seconds).
 //!
 //! The hot-path arm's numbers are also written to `BENCH_e2e.json` —
 //! tagged with the host arch and the active SIMD kernel tier (see
 //! `reference::simd`) — so CI can archive the throughput trajectory
-//! alongside `BENCH_kernels.json`.
+//! alongside `BENCH_kernels.json` and `BENCH_dist.json`.
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
@@ -218,6 +225,98 @@ fn write_bench_json(smoke: bool, rows: &[String]) {
     }
 }
 
+/// Distributed arm: 2 ranks exchanging sparse contributions over a
+/// framed Unix socket (coordinator + workers on threads of this
+/// process — the protocol is identical to the multi-process CLI path).
+/// Lossless vs u8-quantized uplink; the parity and AUC gates live in
+/// `rust/tests/dist_parity.rs`, this arm measures throughput + traffic.
+fn reference_distributed(smoke: bool) -> Vec<String> {
+    use cowclip::coordinator::{coordinate, dist_worker, DistOptions, Endpoint};
+    use cowclip::wire::Compression;
+
+    let schema = cowclip::data::schema::criteo_synth();
+    let n = if smoke { 6_000 } else { 20_000 };
+    let batch = if smoke { 512 } else { 2048 };
+    let ranks = 2usize;
+    let ds = generate(&schema, &SynthConfig { n, seed: 2, ..Default::default() });
+    let (train, test) = random_split(&ds, 0.9, 0);
+
+    println!("== e2e_epoch: 2-rank socket all-reduce (framed unix transport) ==");
+    println!(
+        "{:>8} {:>9} {:>8} {:>8} {:>12} {:>13} {:>7}",
+        "batch", "compress", "steps", "wall s", "rows/s", "wire B/step", "ratio"
+    );
+    let mut rows = Vec::new();
+    for compress in [Compression::None, Compression::U8] {
+        let sock = std::env::temp_dir().join(format!(
+            "cowclip_bench_dist_{}_{compress}.sock",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&sock);
+        let mut cfg = reference_cfg(batch);
+        cfg.workers = ranks;
+        let opts = DistOptions {
+            ranks,
+            endpoint: Endpoint::Unix(sock.clone()),
+            compress,
+            deadline: std::time::Duration::from_secs(60),
+        };
+        let report = std::thread::scope(|s| {
+            let (schema, cfg, opts, train) = (&schema, &cfg, &opts, &train);
+            let handles: Vec<_> = (0..ranks)
+                .map(|rank| {
+                    s.spawn(move || {
+                        let engine = reference_engine(schema);
+                        dist_worker(&engine, cfg, train, rank, opts)
+                    })
+                })
+                .collect();
+            let engine = reference_engine(schema);
+            let (report, _store) = coordinate(&engine, cfg, train, &test, opts).unwrap();
+            for h in handles {
+                h.join().unwrap().unwrap();
+            }
+            report
+        });
+        let _ = std::fs::remove_file(&sock);
+        let steps = report.steps.max(1);
+        let rows_s = (steps * batch) as f64 / report.wall_seconds.max(1e-9);
+        let wire_per_step = report.stats.wire_bytes / steps as u64;
+        let ratio = report.stats.compression_ratio();
+        println!(
+            "{:>8} {:>9} {:>8} {:>8.2} {:>12.0} {:>13} {:>6.2}x",
+            batch, compress, steps, report.wall_seconds, rows_s, wire_per_step, ratio
+        );
+        rows.push(format!(
+            "    {{\"ranks\": {ranks}, \"compress\": \"{compress}\", \"batch\": {batch}, \
+             \"steps\": {steps}, \"wall_s\": {:.6}, \"rows_per_s\": {rows_s:.1}, \
+             \"wire_bytes_per_step\": {wire_per_step}, \"compression_ratio\": {ratio:.3}}}",
+            report.wall_seconds
+        ));
+    }
+    println!(
+        "(rows/s includes the final eval; wire B/step sums both ranks' uplink \
+         frames; ratio covers the sparse sections only — dense MLP grads and \
+         the lossless broadcast are never quantized)\n"
+    );
+    rows
+}
+
+/// Machine-readable mirror of the distributed arm (`BENCH_dist.json`).
+fn write_dist_json(smoke: bool, rows: &[String]) {
+    let json = format!(
+        "{{\n  \"bench\": \"dist_allreduce\",\n  \"smoke\": {},\n  \"arch\": \"{}\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        smoke,
+        std::env::consts::ARCH,
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_dist.json", &json) {
+        Ok(()) => println!("wrote BENCH_dist.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("BENCH_dist.json not written: {e}"),
+    }
+}
+
 fn reference_sparse_vs_dense() {
     let schema = cowclip::data::schema::criteo_synth();
     let n = 20_000;
@@ -332,13 +431,17 @@ fn main() {
         let rows = reference_hot_path_throughput(true);
         reference_threaded_speedup(true);
         reference_sharded_apply_speedup(true);
+        let dist_rows = reference_distributed(true);
         write_bench_json(true, &rows);
+        write_dist_json(true, &dist_rows);
         return;
     }
     let rows = reference_hot_path_throughput(false);
     reference_sparse_vs_dense();
     reference_threaded_speedup(false);
     reference_sharded_apply_speedup(false);
+    let dist_rows = reference_distributed(false);
     hlo_epochs();
     write_bench_json(false, &rows);
+    write_dist_json(false, &dist_rows);
 }

@@ -84,9 +84,21 @@ impl Config {
         Config {
             roots: Vec::new(),
             allow: BTreeMap::new(),
-            det_dirs: s(&["coordinator/", "clip/", "optim/", "reference/"]),
-            panic_files: s(&["serve/queue.rs", "serve/request.rs", "serve/model.rs"]),
-            index_files: s(&["serve/queue.rs", "serve/request.rs"]),
+            det_dirs: s(&["coordinator/", "clip/", "optim/", "reference/", "wire/"]),
+            // The serve request lifecycle plus the distributed worker /
+            // transport lifecycle: a panicking decode or socket path
+            // would take down a whole training run (or leave peers
+            // hanging until their deadline), so these surface errors.
+            panic_files: s(&[
+                "serve/queue.rs",
+                "serve/request.rs",
+                "serve/model.rs",
+                "coordinator/transport.rs",
+                "coordinator/dist.rs",
+                "wire/frame.rs",
+                "wire/codec.rs",
+            ]),
+            index_files: s(&["serve/queue.rs", "serve/request.rs", "wire/frame.rs"]),
             unsafe_dirs: s(&["reference/simd/"]),
             locks: vec![
                 LockSpec {

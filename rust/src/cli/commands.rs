@@ -2,12 +2,16 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::args::Args;
 use crate::clip::ClipMode;
-use crate::coordinator::{Engine, TrainConfig, Trainer};
+use crate::coordinator::{
+    coordinate, dist_worker, DistOptions, Endpoint, Engine, TrainConfig, Trainer,
+};
+use crate::wire::Compression;
 use crate::data::dataset::Dataset;
 use crate::data::split::{random_split, sequential_split};
 use crate::data::stats::{field_stats, infrequent_fraction};
@@ -31,9 +35,23 @@ USAGE:
                      [--epochs E] [--n N] [--workers W] [--threads T]
                      [--param-shards P] [--seq-split] [--engine hlo|reference]
                      [--seed S] [--save CKPT] [--resume CKPT]
+                     [--ranks R] [--bind SPEC] [--compress none|u16|u8]
+                     [--deadline-ms D] [--spawn-workers]
                      (--threads 0 = one per core [default]; 1 = sequential)
                      (--param-shards 0 = auto [default]; 1 = serial apply;
                       --resume continues step counter + warmup schedule)
+                     (--ranks 0 = in-process [default]; R >= 1 runs the
+                      multi-process coordinator over framed sockets —
+                      --spawn-workers forks the R `cowclip worker` ranks
+                      itself; --bind takes unix:PATH or tcp:HOST:PORT,
+                      default a temp unix socket; --compress quantizes
+                      sparse grads on the wire with error feedback)
+  cowclip worker     --rank R --ranks N --connect SPEC [train flags]
+                     (one distributed data-parallel rank: connects to a
+                      `train --ranks N` coordinator; data/model flags
+                      must match the coordinator's — usually you want
+                      `train --spawn-workers` instead of running this
+                      by hand)
   cowclip eval       --ckpt FILE --data FILE [--model M] [--batch B]
                      [--engine hlo|reference]
   cowclip serve      --ckpt FILE [--model M] [--schema S] [--quant]
@@ -71,6 +89,7 @@ pub fn dispatch(args: Args) -> Result<()> {
     match args.positional(0) {
         Some("data") => data_cmd(&args),
         Some("train") => train_cmd(&args),
+        Some("worker") => worker_cmd(&args),
         Some("eval") => eval_cmd(&args),
         Some("serve") => serve_cmd(&args),
         Some("inspect") => inspect_cmd(&args),
@@ -162,7 +181,22 @@ fn data_cmd(args: &Args) -> Result<()> {
     }
 }
 
-fn train_cmd(args: &Args) -> Result<()> {
+/// Everything the `train`-family commands share: the generated + split
+/// dataset, the engine, and the resolved [`TrainConfig`]. `worker`
+/// builds this from the same flags as the coordinator, so every replica
+/// derives bitwise-identical state without any data on the wire.
+struct TrainSetup {
+    model: ModelKind,
+    schema_name: String,
+    clip: ClipMode,
+    train: Dataset,
+    test: Dataset,
+    engine: Engine,
+    cfg: TrainConfig,
+    steps_per_epoch: usize,
+}
+
+fn train_setup(args: &Args, workers: usize, verbose: bool) -> Result<TrainSetup> {
     let model: ModelKind = args.str_or("model", "deepfm").parse()?;
     let schema_name = args.str_or("schema", "criteo_synth");
     let batch = args.usize_or("batch", 512)?;
@@ -170,7 +204,6 @@ fn train_cmd(args: &Args) -> Result<()> {
     let clip: ClipMode = args.str_or("clip", "cowclip").parse()?;
     let epochs = args.f64_or("epochs", 3.0)?;
     let n = args.usize_or("n", 100_000)?;
-    let workers = args.usize_or("workers", 1)?;
     let threads = args.usize_or("threads", 0)?;
     let param_shards = args.usize_or("param-shards", 0)?;
     let seed = args.u64_or("seed", 1234)?;
@@ -178,7 +211,9 @@ fn train_cmd(args: &Args) -> Result<()> {
 
     let schema = crate::data::schema::by_name(&schema_name)
         .with_context(|| format!("unknown schema {schema_name}"))?;
-    println!("generating {n} rows of {schema_name}...");
+    if verbose {
+        println!("generating {n} rows of {schema_name}...");
+    }
     let full = generate(&schema, &SynthConfig { n, seed, ..Default::default() });
     let (train, test) = if args.has("seq-split") {
         sequential_split(&full, 6.0 / 7.0)
@@ -215,11 +250,24 @@ fn train_cmd(args: &Args) -> Result<()> {
         init_sigma,
         seed,
         eval_every_epochs: 1,
-        verbose: true,
+        verbose,
     };
+    Ok(TrainSetup { model, schema_name, clip, train, test, engine, cfg, steps_per_epoch })
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let ranks = args.usize_or("ranks", 0)?;
+    if ranks > 0 {
+        return dist_train_cmd(args, ranks);
+    }
+    let workers = args.usize_or("workers", 1)?;
+    let s = train_setup(args, workers, true)?;
+    let TrainSetup { model, schema_name, clip, train, test, engine, cfg, steps_per_epoch } = s;
     println!(
-        "training {model} on {schema_name}: batch {batch} (scale {:.0}x), rule {rule}, clip {clip}, {} workers on {} threads, {} steps/epoch",
+        "training {model} on {schema_name}: batch {} (scale {:.0}x), rule {}, clip {clip}, {} workers on {} threads, {} steps/epoch",
+        cfg.batch,
         cfg.scale(),
+        cfg.rule,
         workers,
         cfg.threads_for(workers),
         steps_per_epoch
@@ -243,9 +291,10 @@ fn train_cmd(args: &Args) -> Result<()> {
     }
     if report.reduce_stats.workers > 1 {
         println!(
-            "  all-reduce: {} merges, {:.1} MiB moved",
+            "  all-reduce: {} merges, {:.1} MiB moved ({:.1} MiB framed on-wire equivalent)",
             report.reduce_stats.rounds,
-            report.reduce_stats.bytes_moved as f64 / (1 << 20) as f64
+            report.reduce_stats.bytes_moved as f64 / (1 << 20) as f64,
+            report.reduce_stats.wire_bytes as f64 / (1 << 20) as f64
         );
     }
     println!(
@@ -259,6 +308,149 @@ fn train_cmd(args: &Args) -> Result<()> {
         println!("checkpoint saved to {path} (params + moments + step {})", trainer.step());
     }
     Ok(())
+}
+
+/// Deadline shared by the coordinator's accept loop and every per-frame
+/// socket operation (`--deadline-ms`, clamped to at least 1 ms).
+fn dist_deadline(args: &Args) -> Result<Duration> {
+    Ok(Duration::from_millis(args.u64_or("deadline-ms", 30_000)?.max(1)))
+}
+
+/// `train --ranks R`: run the multi-process coordinator over the framed
+/// socket transport, optionally forking the R worker ranks itself, and
+/// print the wire-traffic report next to the usual quality metrics.
+fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
+    ensure!(
+        !args.has("resume"),
+        "--resume is not supported with --ranks: every replica must start from identical state"
+    );
+    ensure!(
+        !args.has("workers"),
+        "--workers is implied by --ranks in distributed mode (one worker per rank)"
+    );
+    let s = train_setup(args, ranks, true)?;
+    let compress: Compression = args.str_or("compress", "none").parse()?;
+    let deadline = dist_deadline(args)?;
+    let default_sock =
+        std::env::temp_dir().join(format!("cowclip_dist_{}.sock", std::process::id()));
+    let endpoint: Endpoint =
+        args.str_or("bind", &format!("unix:{}", default_sock.display())).parse()?;
+    let opts = DistOptions { ranks, endpoint, compress, deadline };
+    println!(
+        "distributed training {} on {}: {ranks} ranks at {}, batch {} (scale {:.0}x), rule {}, clip {}, compress {compress}, {} steps/epoch",
+        s.model,
+        s.schema_name,
+        opts.endpoint,
+        s.cfg.batch,
+        s.cfg.scale(),
+        s.cfg.rule,
+        s.clip,
+        s.steps_per_epoch
+    );
+
+    let children =
+        if args.has("spawn-workers") { spawn_workers(args, ranks, &opts)? } else { Vec::new() };
+    let run = coordinate(&s.engine, &s.cfg, &s.train, &s.test, &opts);
+    // Reap the forked ranks before surfacing the coordinator's result so
+    // a failed run never leaves orphan processes behind.
+    let mut worker_failures = Vec::new();
+    for (rank, mut child) in children.into_iter().enumerate() {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => worker_failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => worker_failures.push(format!("rank {rank} not reaped: {e}")),
+        }
+    }
+    let (report, store) = run?;
+    ensure!(
+        worker_failures.is_empty(),
+        "worker processes failed: {}",
+        worker_failures.join("; ")
+    );
+
+    let mib = |b: u64| b as f64 / (1 << 20) as f64;
+    println!("\n== result ==");
+    println!("steps: {}   wall: {:.1}s", report.steps, report.wall_seconds);
+    println!(
+        "  uplink: {} contrib frames, {:.1} MiB raw -> {:.1} MiB on wire ({:.2}x sparse compression)",
+        report.stats.rounds,
+        mib(report.stats.raw_bytes),
+        mib(report.stats.wire_bytes),
+        report.stats.compression_ratio()
+    );
+    println!("  broadcast: {:.1} MiB (lossless totals)", mib(report.stats.bcast_bytes));
+    println!(
+        "final test AUC {:.4}%  logloss {:.4}",
+        report.final_auc * 100.0,
+        report.final_logloss
+    );
+    if let Some(path) = args.get("save") {
+        store.save_checkpoint(Path::new(path), report.steps as u64)?;
+        println!("checkpoint saved to {path} (params + moments + step {})", report.steps);
+    }
+    Ok(())
+}
+
+/// Fork one `cowclip worker` child per rank, echoing the data/model
+/// flags so every replica derives the coordinator's exact state.
+fn spawn_workers(
+    args: &Args,
+    ranks: usize,
+    opts: &DistOptions,
+) -> Result<Vec<std::process::Child>> {
+    let exe = std::env::current_exe().context("locating the cowclip binary")?;
+    let passthrough = [
+        "model",
+        "schema",
+        "batch",
+        "rule",
+        "clip",
+        "epochs",
+        "n",
+        "threads",
+        "param-shards",
+        "seed",
+        "engine",
+        "deadline-ms",
+        "kernel",
+    ];
+    let mut children = Vec::with_capacity(ranks);
+    for rank in 0..ranks {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .args(["--rank", &rank.to_string()])
+            .args(["--ranks", &ranks.to_string()])
+            .args(["--connect", &opts.endpoint.to_string()]);
+        for key in passthrough {
+            if let Some(v) = args.get(key) {
+                cmd.arg(format!("--{key}")).arg(v);
+            }
+        }
+        if args.has("seq-split") {
+            cmd.arg("--seq-split");
+        }
+        children.push(cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?);
+    }
+    Ok(children)
+}
+
+/// One distributed data-parallel rank: rebuild the coordinator's replica
+/// state from the same flags, connect, and run the socket step loop.
+fn worker_cmd(args: &Args) -> Result<()> {
+    let rank: usize = args
+        .get("rank")
+        .context("--rank R required")?
+        .parse()
+        .context("--rank must be an integer")?;
+    let ranks = args.usize_or("ranks", 0)?;
+    ensure!(ranks >= 1, "--ranks N required");
+    let endpoint: Endpoint = args.get("connect").context("--connect SPEC required")?.parse()?;
+    let deadline = dist_deadline(args)?;
+    let s = train_setup(args, ranks, false)?;
+    // The coordinator's Welcome dictates the wire compression; the
+    // worker-side field is never consulted.
+    let opts = DistOptions { ranks, endpoint, compress: Compression::None, deadline };
+    dist_worker(&s.engine, &s.cfg, &s.train, rank, &opts)
 }
 
 /// Evaluate a checkpoint on a `.ctr` dataset file: AUC, logloss, and

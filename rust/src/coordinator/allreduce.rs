@@ -36,6 +36,8 @@ use std::collections::BTreeMap;
 use anyhow::{ensure, Result};
 
 use crate::tensor::{GradTensor, SparseRows};
+use crate::wire::codec::contribution_wire_len;
+use crate::wire::frame::FRAME_HEADER_LEN;
 
 /// One worker's weighted contribution.
 #[derive(Clone, Debug)]
@@ -51,8 +53,15 @@ pub struct Contribution {
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ReduceStats {
     pub rounds: usize,
-    /// Total bytes a real network would move (sum over pairwise merges).
+    /// Raw sparse payload bytes (ids + values as f32) summed over the
+    /// pairwise merges — the traffic-model quantity of Table 6.
     pub bytes_moved: u64,
+    /// What the same merges would occupy **on the wire** under the
+    /// `wire` layer's uncompressed framing: frame header + versioned
+    /// `Contribution` encoding (shared-id elision included). This is
+    /// what `coordinator::dist` actually moves per uplink frame with
+    /// compression off; quantization only shrinks it further.
+    pub wire_bytes: u64,
     pub workers: usize,
 }
 
@@ -87,8 +96,12 @@ impl Reduced {
     }
 }
 
-fn merge(dst: &mut Contribution, src: &Contribution) -> Result<u64> {
+/// Merge `src` into `dst`, returning `(raw, wire)` traffic for the
+/// transfer of `src`: raw sparse payload bytes vs the framed
+/// uncompressed wire encoding ([`contribution_wire_len`]).
+fn merge(dst: &mut Contribution, src: &Contribution) -> Result<(u64, u64)> {
     ensure!(dst.grads.len() == src.grads.len(), "grad arity mismatch");
+    let wire = FRAME_HEADER_LEN as u64 + contribution_wire_len(src);
     let mut bytes = 0u64;
     for (a, b) in dst.grads.iter_mut().zip(&src.grads) {
         a.axpy(1.0, b)?;
@@ -98,7 +111,7 @@ fn merge(dst: &mut Contribution, src: &Contribution) -> Result<u64> {
     bytes += src.counts.payload_bytes();
     dst.loss_weighted += src.loss_weighted;
     dst.weight += src.weight;
-    Ok(bytes)
+    Ok((bytes, wire))
 }
 
 fn payload_bytes(c: &Contribution) -> u64 {
@@ -111,7 +124,7 @@ pub fn tree_allreduce(
 ) -> Result<(Contribution, ReduceStats)> {
     ensure!(!contributions.is_empty(), "no contributions");
     let workers = contributions.len();
-    let mut stats = ReduceStats { rounds: 0, bytes_moved: 0, workers };
+    let mut stats = ReduceStats { rounds: 0, bytes_moved: 0, wire_bytes: 0, workers };
 
     while contributions.len() > 1 {
         stats.rounds += 1;
@@ -119,7 +132,9 @@ pub fn tree_allreduce(
         // pair worker i with worker i+half; survivors are the first half
         let tail = contributions.split_off(half);
         for (i, src) in tail.iter().enumerate() {
-            stats.bytes_moved += merge(&mut contributions[i], src)?;
+            let (raw, wire) = merge(&mut contributions[i], src)?;
+            stats.bytes_moved += raw;
+            stats.wire_bytes += wire;
         }
     }
     let total = contributions.pop().unwrap();
@@ -196,7 +211,7 @@ impl TreeReducer {
             workers,
             arrived: vec![false; workers],
             ready: BTreeMap::new(),
-            stats: ReduceStats { rounds: 0, bytes_moved: 0, workers },
+            stats: ReduceStats { rounds: 0, bytes_moved: 0, wire_bytes: 0, workers },
             defer_root: false,
         }
     }
@@ -237,7 +252,9 @@ impl TreeReducer {
             // merge left += right regardless of arrival order
             let (mut left, right) = if is_left { (mine, other) } else { (other, mine) };
             self.stats.rounds += 1;
-            self.stats.bytes_moved += merge(&mut left, &right)?;
+            let (raw, wire) = merge(&mut left, &right)?;
+            self.stats.bytes_moved += raw;
+            self.stats.wire_bytes += wire;
             self.ready.insert(parent.0, (parent.1, left));
             (lo, hi) = parent;
         }
@@ -264,7 +281,9 @@ impl TreeReducer {
             let (_, (_, right)) = self.ready.pop_last().unwrap();
             let (_, (_, mut left)) = self.ready.pop_last().unwrap();
             self.stats.rounds += 1;
-            self.stats.bytes_moved += merge(&mut left, &right)?;
+            let (raw, wire) = merge(&mut left, &right)?;
+            self.stats.bytes_moved += raw;
+            self.stats.wire_bytes += wire;
             self.ready.insert(0, (self.workers, left));
         }
         ensure!(self.ready.len() == 1, "reduction did not converge to a single segment");
@@ -300,6 +319,7 @@ impl TreeReducer {
         );
         self.stats.rounds += 1;
         self.stats.bytes_moved += payload_bytes(&right);
+        self.stats.wire_bytes += FRAME_HEADER_LEN as u64 + contribution_wire_len(&right);
         Ok((Reduced::Halves { left, right }, self.stats))
     }
 }
@@ -351,6 +371,11 @@ mod tests {
         assert_eq!(stats.workers, 4);
         // 4 workers: 3 merges, each 3*4 grad bytes + (2+2)*4 count bytes
         assert_eq!(stats.bytes_moved, 3 * (3 * 4 + 4 * 4));
+        // on-wire accounting: every merge moves one framed, versioned
+        // contribution — and all three transferred sides are identical
+        // in shape, so the exact length is 3x one encoding
+        let per_merge = FRAME_HEADER_LEN as u64 + contribution_wire_len(&contrib(0.25, 0.25));
+        assert_eq!(stats.wire_bytes, 3 * per_merge);
     }
 
     #[test]
@@ -372,6 +397,11 @@ mod tests {
         assert_eq!(stats.bytes_moved, (1 + 2) * 4 + (1 + 1) * 4);
         // far below the dense payload of 100*2*4 + 100*4 bytes
         assert!(stats.bytes_moved < 1200);
+        // the single transferred side is the rank-1 leaf
+        assert_eq!(
+            stats.wire_bytes,
+            FRAME_HEADER_LEN as u64 + contribution_wire_len(&sparse_contrib(90, 0.5, 0.5))
+        );
     }
 
     #[test]
@@ -485,6 +515,9 @@ mod tests {
             assert_eq!(stats.rounds, 3, "W-1 merges");
             assert_eq!(stats.workers, 4);
             assert!(stats.bytes_moved > 0);
+            // framing + versioned encoding overhead dominates these tiny
+            // contributions, so wire > raw here; at scale they converge
+            assert!(stats.wire_bytes > stats.bytes_moved);
             totals.push(total.grads[0].to_tensor().as_f32().unwrap().to_vec());
         }
         assert_eq!(totals[0], totals[1]);

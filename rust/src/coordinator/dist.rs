@@ -1,0 +1,626 @@
+//! Multi-process distributed training over the socket transport.
+//!
+//! # Process model
+//!
+//! One **coordinator** process binds the endpoint and `N` **worker**
+//! processes (`cowclip worker --rank R --ranks N`) connect to it. Every
+//! process builds the *same* replica state — identical parameter init
+//! (same seed), identical [`Batcher`] stream — so no batch data ever
+//! crosses the wire. Per step:
+//!
+//! 1. each rank computes its [`WorkerShard`] contribution for the step's
+//!    (locally materialized) batch and sends it as a `Contrib` frame;
+//! 2. the coordinator reduces the `N` contributions along the **fixed
+//!    binary tree over contiguous rank ranges** ([`TreeReducer`]) — the
+//!    same pairing the in-process trainer uses, so the reduced total is
+//!    bitwise identical to the sequential path at any rank count;
+//! 3. the coordinator broadcasts the reduced total **losslessly**
+//!    ([`Compression::None`], bitwise round-trip) before applying, and
+//!    every process applies those identical bytes through the same
+//!    sharded optimizer — the replicas cannot drift.
+//!
+//! # Determinism contract
+//!
+//! With compression off the `Contrib` payload is raw little-endian f32
+//! (bitwise round-trip), the tree pairing is fixed by the rank count,
+//! and the broadcast total is always lossless: a distributed run is
+//! **bitwise identical** to the sequential seed path for every clip
+//! mode and any rank count (`rust/tests/dist_parity.rs`).
+//!
+//! # Compression + error feedback
+//!
+//! With `u16`/`u8` compression, workers quantize sparse gradient values
+//! on the wire and keep a per-rank **error-feedback residual**
+//! ([`ErrorFeedback`]): the rounding error of step `t` (computed with
+//! the exact [`quant_code`]/[`dequant`] arithmetic the encoder used) is
+//! added to the next gradient for the same rows before step `t + 1`
+//! encodes, so quantization noise averages out instead of accumulating —
+//! the Baidu CTR result this module reproduces. Ids, counts, and dense
+//! MLP gradients are never quantized; the broadcast total stays
+//! lossless either way.
+//!
+//! Liveness is deadline-based: every socket read/write is armed with
+//! [`DistOptions::deadline`], so a killed or hung rank surfaces as an
+//! error naming the deadline and the coordinator pushes an `Error`
+//! frame to the surviving ranks before shutting down.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::allreduce::{Reduced, TreeReducer};
+use super::engine::Engine;
+use super::trainer::{
+    apply_contribution, evaluate_with, hypers_for_step, init_store, TrainConfig,
+};
+use super::transport::{Conn, Endpoint};
+use super::worker::WorkerShard;
+use crate::data::batcher::Batcher;
+use crate::data::dataset::Dataset;
+use crate::model::params::ParamSet;
+use crate::model::store::ParamStore;
+use crate::reference::Scratch;
+use crate::scaling::rules::HyperSet;
+use crate::scaling::warmup::Warmup;
+use crate::tensor::GradTensor;
+use crate::wire::codec::{
+    decode_contribution, decode_error, decode_hello, decode_welcome, dequant,
+    encode_contribution, encode_error, encode_hello, encode_welcome, quant_code, quant_scale,
+    Compression, Hello, Welcome,
+};
+use crate::wire::frame::{read_frame, write_frame, FrameKind, FRAME_HEADER_LEN};
+
+/// Everything a distributed run needs besides the [`TrainConfig`].
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Data-parallel rank count (must equal `TrainConfig::workers`).
+    pub ranks: usize,
+    /// Where the coordinator listens and workers connect.
+    pub endpoint: Endpoint,
+    /// Wire compression for worker → coordinator sparse gradients.
+    pub compress: Compression,
+    /// Accept + per-I/O deadline: a peer silent for longer errors out.
+    pub deadline: Duration,
+}
+
+/// Wire-traffic accounting for one distributed run (coordinator side).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistStats {
+    /// Optimizer steps completed.
+    pub steps: usize,
+    /// Worker → coordinator `Contrib` frames received.
+    pub rounds: usize,
+    /// Framed bytes the same contributions would occupy uncompressed.
+    pub raw_bytes: u64,
+    /// Framed bytes actually received (header + encoded payload).
+    pub wire_bytes: u64,
+    /// Framed bytes broadcast back (`Total` frames, always lossless).
+    pub bcast_bytes: u64,
+    /// Raw f32 bytes of the sparse sections (ids + counts + grads).
+    pub sparse_raw_bytes: u64,
+    /// On-wire bytes of the same sparse sections.
+    pub sparse_wire_bytes: u64,
+}
+
+impl DistStats {
+    /// Compression ratio over the sparse sections — the ≥4× gate of the
+    /// wire-compression acceptance criterion (dense MLP gradients are
+    /// never quantized, so they are excluded from the ratio).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.sparse_wire_bytes == 0 {
+            1.0
+        } else {
+            self.sparse_raw_bytes as f64 / self.sparse_wire_bytes as f64
+        }
+    }
+}
+
+/// Result of a coordinated distributed run.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub steps: usize,
+    pub final_auc: f64,
+    pub final_logloss: f64,
+    pub train_loss_curve: Vec<f32>,
+    pub stats: DistStats,
+    pub wall_seconds: f64,
+}
+
+fn validate(cfg: &TrainConfig, opts: &DistOptions) -> Result<()> {
+    ensure!(opts.ranks >= 1, "dist: ranks must be >= 1");
+    ensure!(
+        cfg.workers == opts.ranks,
+        "dist: cfg.workers ({}) must equal the rank count ({})",
+        cfg.workers,
+        opts.ranks
+    );
+    ensure!(
+        cfg.batch % opts.ranks == 0,
+        "dist: batch {} must divide by the rank count {}",
+        cfg.batch,
+        opts.ranks
+    );
+    Ok(())
+}
+
+/// Total optimizer steps of the run — identical arithmetic on every
+/// process, cross-checked in the handshake.
+fn plan_steps(cfg: &TrainConfig, train: &Dataset) -> Result<u64> {
+    let steps_per_epoch = train.n() / cfg.batch;
+    ensure!(steps_per_epoch > 0, "dist: batch larger than dataset");
+    let total_steps = ((steps_per_epoch as f64) * cfg.epochs).round() as usize;
+    ensure!(total_steps > 0, "dist: no steps to run");
+    Ok(total_steps as u64)
+}
+
+/// Run the coordinator: bind, handshake all ranks, drive the step loop,
+/// then evaluate the final replica. Returns the report and the trained
+/// store (bitwise identical to every worker's replica).
+pub fn coordinate(
+    engine: &Engine,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+    opts: &DistOptions,
+) -> Result<(DistReport, ParamStore)> {
+    let t0 = Instant::now();
+    validate(cfg, opts)?;
+    let total_steps = plan_steps(cfg, train)?;
+    let store = init_store(engine, cfg)?;
+    let hypers = cfg.scaled_hypers();
+    let warmup = Warmup::new(cfg.warmup_steps);
+
+    let listener = opts.endpoint.bind()?;
+    let mut slots: Vec<Option<Conn>> = (0..opts.ranks).map(|_| None).collect();
+    for _ in 0..opts.ranks {
+        let mut conn = listener.accept_deadline(opts.deadline)?;
+        conn.set_io_deadline(Some(opts.deadline))?;
+        let (kind, payload) =
+            read_frame(&mut conn).context("dist: handshake read (io deadline)")?;
+        match kind {
+            FrameKind::Hello => {}
+            FrameKind::Error => bail!("dist: worker failed: {}", decode_error(&payload)?),
+            other => bail!("dist: expected Hello, got {other:?}"),
+        }
+        let hello = decode_hello(&payload)?;
+        ensure!(
+            hello.ranks as usize == opts.ranks,
+            "dist: worker expects {} ranks, coordinator has {}",
+            hello.ranks,
+            opts.ranks
+        );
+        ensure!(
+            hello.batch == cfg.batch as u64,
+            "dist: worker batch {} != coordinator batch {}",
+            hello.batch,
+            cfg.batch
+        );
+        ensure!(
+            hello.seed == cfg.seed,
+            "dist: worker seed {} != coordinator seed {}",
+            hello.seed,
+            cfg.seed
+        );
+        ensure!(
+            hello.total_steps == total_steps,
+            "dist: worker plans {} steps, coordinator {total_steps}",
+            hello.total_steps
+        );
+        let rank = hello.rank as usize;
+        ensure!(rank < opts.ranks, "dist: rank {rank} out of range for {} ranks", opts.ranks);
+        let slot = slots.get_mut(rank).context("dist: rank slot")?;
+        ensure!(slot.is_none(), "dist: duplicate handshake for rank {rank}");
+        let welcome = encode_welcome(&Welcome { compress: opts.compress, total_steps });
+        write_frame(&mut conn, FrameKind::Welcome, &welcome)
+            .with_context(|| format!("dist: welcome rank {rank}"))?;
+        *slot = Some(conn);
+    }
+    let mut conns: Vec<Conn> = Vec::with_capacity(opts.ranks);
+    for (rank, slot) in slots.into_iter().enumerate() {
+        conns.push(slot.with_context(|| format!("dist: missing handshake for rank {rank}"))?);
+    }
+
+    let mut loss_curve = Vec::with_capacity(total_steps as usize);
+    let mut stats = DistStats::default();
+    let run = run_steps(
+        engine,
+        &store,
+        cfg,
+        hypers,
+        warmup,
+        total_steps,
+        &mut conns,
+        opts,
+        &mut loss_curve,
+        &mut stats,
+    );
+    if let Err(err) = run {
+        // Push the failure to the surviving ranks so they exit with the
+        // cause instead of timing out, then surface it locally.
+        broadcast_error(&mut conns, &format!("{err:#}"));
+        return Err(err);
+    }
+    for conn in conns.iter_mut() {
+        let _ = write_frame(conn, FrameKind::Shutdown, &[]);
+    }
+    for conn in &conns {
+        conn.shutdown();
+    }
+
+    let (final_auc, final_logloss) = evaluate_with(engine, &store, cfg, test)?;
+    let report = DistReport {
+        steps: loss_curve.len(),
+        final_auc,
+        final_logloss,
+        train_loss_curve: loss_curve,
+        stats,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok((report, store))
+}
+
+/// The coordinator's step loop: collect one `Contrib` per rank (rank
+/// order; the tree pairing makes arrival order irrelevant anyway),
+/// reduce, broadcast the lossless total, apply.
+#[allow(clippy::too_many_arguments)]
+fn run_steps(
+    engine: &Engine,
+    store: &ParamStore,
+    cfg: &TrainConfig,
+    hypers: HyperSet,
+    warmup: Warmup,
+    total_steps: u64,
+    conns: &mut [Conn],
+    opts: &DistOptions,
+    loss_curve: &mut Vec<f32>,
+    stats: &mut DistStats,
+) -> Result<()> {
+    let header = FRAME_HEADER_LEN as u64;
+    for step in 1..=total_steps {
+        let hv = hypers_for_step(hypers, warmup, step as usize);
+        let mut reducer = TreeReducer::new(conns.len());
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            let (kind, payload) = read_frame(conn).with_context(|| {
+                format!(
+                    "dist: rank {rank} missed the io deadline ({:?}) at step {step}",
+                    opts.deadline
+                )
+            })?;
+            match kind {
+                FrameKind::Contrib => {}
+                FrameKind::Error => {
+                    bail!("dist: rank {rank} failed at step {step}: {}", decode_error(&payload)?)
+                }
+                other => bail!("dist: rank {rank} sent {other:?}, expected Contrib"),
+            }
+            let (c, cstats) = decode_contribution(&payload)
+                .with_context(|| format!("dist: rank {rank} contribution at step {step}"))?;
+            stats.rounds += 1;
+            stats.raw_bytes += header + cstats.raw_bytes;
+            stats.wire_bytes += header + cstats.wire_bytes;
+            stats.sparse_raw_bytes += cstats.sparse_raw;
+            stats.sparse_wire_bytes += cstats.sparse_wire;
+            reducer.push(rank, c)?;
+        }
+        let (total, _) = reducer.finish()?;
+        // Broadcast the reduced total losslessly *before* applying:
+        // every replica then applies identical bytes, so the stores
+        // stay bitwise in sync even with lossy uplink compression.
+        let (payload, _) = encode_contribution(&total, Compression::None)?;
+        for conn in conns.iter_mut() {
+            write_frame(conn, FrameKind::Total, &payload)
+                .with_context(|| format!("dist: broadcast total at step {step}"))?;
+        }
+        stats.bcast_bytes += (header + payload.len() as u64) * conns.len() as u64;
+        let loss = apply_contribution(engine, store, cfg, &hv, Reduced::Whole(total))?;
+        loss_curve.push(loss);
+        stats.steps = step as usize;
+    }
+    Ok(())
+}
+
+/// Best-effort `Error` fan-out on coordinator failure; never blocks
+/// longer than a short bounded write per rank.
+fn broadcast_error(conns: &mut [Conn], msg: &str) {
+    let payload = encode_error(msg);
+    for conn in conns.iter_mut() {
+        let _ = conn.set_io_deadline(Some(Duration::from_millis(200)));
+        let _ = write_frame(conn, FrameKind::Error, &payload);
+        conn.shutdown();
+    }
+}
+
+/// Run one worker rank end to end: connect (with retry, covering the
+/// coordinator-bind race), handshake, then the step loop.
+pub fn worker(
+    engine: &Engine,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    rank: usize,
+    opts: &DistOptions,
+) -> Result<()> {
+    validate(cfg, opts)?;
+    ensure!(rank < opts.ranks, "dist: rank {rank} out of range for {} ranks", opts.ranks);
+    let conn = opts.endpoint.connect_retry(opts.deadline)?;
+    worker_loop(engine, cfg, train, rank, opts, conn)
+}
+
+/// The worker step loop over an established connection.
+fn worker_loop(
+    engine: &Engine,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    rank: usize,
+    opts: &DistOptions,
+    mut conn: Conn,
+) -> Result<()> {
+    let total_steps = plan_steps(cfg, train)?;
+    conn.set_io_deadline(Some(opts.deadline))?;
+    let hello = Hello {
+        rank: rank as u32,
+        ranks: opts.ranks as u32,
+        batch: cfg.batch as u64,
+        seed: cfg.seed,
+        total_steps,
+    };
+    write_frame(&mut conn, FrameKind::Hello, &encode_hello(&hello))
+        .with_context(|| format!("dist: rank {rank} hello"))?;
+    let (kind, payload) = read_frame(&mut conn)
+        .with_context(|| format!("dist: rank {rank} waiting for Welcome (io deadline)"))?;
+    let welcome = match kind {
+        FrameKind::Welcome => decode_welcome(&payload)?,
+        FrameKind::Error => {
+            bail!("dist: coordinator rejected rank {rank}: {}", decode_error(&payload)?)
+        }
+        other => bail!("dist: expected Welcome, got {other:?}"),
+    };
+    ensure!(
+        welcome.total_steps == total_steps,
+        "dist: coordinator plans {} steps, rank {rank} {total_steps}",
+        welcome.total_steps
+    );
+    let compress = welcome.compress;
+
+    // Full replica state: same init, same batch stream as every peer.
+    let store = init_store(engine, cfg)?;
+    let hypers = cfg.scaled_hypers();
+    let warmup = Warmup::new(cfg.warmup_steps);
+    let mut batcher = Batcher::new(train, cfg.batch, cfg.seed ^ 0x5eed);
+    let mut scratch = Scratch::new();
+    let mut ef = ErrorFeedback::default();
+
+    for step in 1..=total_steps {
+        let batch = batcher.next_batch();
+        let hv = hypers_for_step(hypers, warmup, step as usize);
+        let mut c = {
+            let guard = store.read();
+            let params: &ParamSet = &guard;
+            WorkerShard::new(rank, opts.ranks).compute(engine, params, &batch, &mut scratch)?
+        };
+        // Fold last step's rounding error into the touched rows, encode,
+        // then remember this step's rounding error for the next fold.
+        ef.fold_in(&mut c.grads);
+        let (payload, _) = encode_contribution(&c, compress)?;
+        ef.absorb(&c.grads, compress);
+        write_frame(&mut conn, FrameKind::Contrib, &payload)
+            .with_context(|| format!("dist: rank {rank} send contribution at step {step}"))?;
+
+        let (kind, payload) = read_frame(&mut conn).with_context(|| {
+            format!(
+                "dist: rank {rank} waiting for the reduced total at step {step} \
+                 (io deadline {:?})",
+                opts.deadline
+            )
+        })?;
+        let total = match kind {
+            FrameKind::Total => {
+                decode_contribution(&payload)
+                    .with_context(|| format!("dist: total at step {step}"))?
+                    .0
+            }
+            FrameKind::Error => {
+                bail!("dist: coordinator aborted at step {step}: {}", decode_error(&payload)?)
+            }
+            other => bail!("dist: expected Total, got {other:?}"),
+        };
+        apply_contribution(engine, &store, cfg, &hv, Reduced::Whole(total))?;
+    }
+
+    let (kind, payload) = read_frame(&mut conn)
+        .with_context(|| format!("dist: rank {rank} waiting for Shutdown (io deadline)"))?;
+    match kind {
+        FrameKind::Shutdown => {}
+        FrameKind::Error => {
+            bail!("dist: coordinator failed after the last step: {}", decode_error(&payload)?)
+        }
+        other => bail!("dist: expected Shutdown, got {other:?}"),
+    }
+    conn.shutdown();
+    Ok(())
+}
+
+/// Per-rank error-feedback residuals: the quantization rounding error of
+/// each sparse gradient row sent, keyed by row id, folded into the next
+/// gradient that touches the row.
+///
+/// The residual is computed with the exact [`quant_scale`] /
+/// [`quant_code`] / [`dequant`] arithmetic the encoder used on the same
+/// values, so what the map holds is bit-for-bit `sent - received` — the
+/// compensation term of Baidu's low-precision CTR training scheme.
+/// Rows untouched by a later step keep their residual pending until the
+/// row is touched again. With [`Compression::None`] the residual is
+/// identically zero and the maps stay empty.
+#[derive(Default)]
+struct ErrorFeedback {
+    /// One map per gradient slot (same order as `Contribution::grads`).
+    residuals: Vec<BTreeMap<u32, Vec<f32>>>,
+}
+
+impl ErrorFeedback {
+    fn ensure_slots(&mut self, n: usize) {
+        while self.residuals.len() < n {
+            self.residuals.push(BTreeMap::new());
+        }
+    }
+
+    /// Add pending residuals into the rows this gradient touches. Only
+    /// stored rows change, so the gradient's id structure (and the
+    /// shared-ids wire optimization) is preserved.
+    fn fold_in(&mut self, grads: &mut [GradTensor]) {
+        self.ensure_slots(grads.len());
+        for (g, map) in grads.iter_mut().zip(self.residuals.iter_mut()) {
+            if map.is_empty() {
+                continue;
+            }
+            if let GradTensor::Sparse(s) = g {
+                let d = s.d();
+                let (ids, vals) = s.ids_vals_mut();
+                for (k, id) in ids.iter().enumerate() {
+                    if let Some(row) = map.remove(id) {
+                        for (v, r) in vals.iter_mut().skip(k * d).take(d).zip(&row) {
+                            *v += *r;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record the rounding error the wire just introduced for every
+    /// sparse row of `grads` (which must be the exact values that were
+    /// encoded). No-op for [`Compression::None`].
+    fn absorb(&mut self, grads: &[GradTensor], compress: Compression) {
+        let Some(q) = compress.levels() else {
+            return;
+        };
+        self.ensure_slots(grads.len());
+        for (g, map) in grads.iter().zip(self.residuals.iter_mut()) {
+            if let GradTensor::Sparse(s) = g {
+                let d = s.d();
+                let scale = quant_scale(s.vals(), q);
+                for (k, &id) in s.ids().iter().enumerate() {
+                    let row = &s.vals()[k * d..(k + 1) * d];
+                    let mut res = Vec::with_capacity(d);
+                    let mut nonzero = false;
+                    for &v in row {
+                        let e = v - dequant(quant_code(v, scale, q), scale);
+                        nonzero |= e != 0.0;
+                        res.push(e);
+                    }
+                    if nonzero {
+                        map.insert(id, res);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SparseRows;
+
+    fn sparse_grad(ids: &[u32], vals: &[f32], d: usize) -> GradTensor {
+        GradTensor::Sparse(SparseRows::new(100, d, ids.to_vec(), vals.to_vec()))
+    }
+
+    #[test]
+    fn error_feedback_compensates_quantization_exactly() {
+        let compress = Compression::U8;
+        let q = compress.levels().unwrap();
+        let vals = [0.5f32, -0.31, 0.007, 0.2, -0.9, 0.113];
+        let mut grads = vec![sparse_grad(&[2, 7, 11], &vals, 2)];
+        let mut ef = ErrorFeedback::default();
+
+        // Step 1: nothing pending; absorb records the rounding error.
+        ef.fold_in(&mut grads);
+        ef.absorb(&grads, compress);
+        let scale = quant_scale(&vals, q);
+        let wire: Vec<f32> =
+            vals.iter().map(|&v| dequant(quant_code(v, scale, q), scale)).collect();
+
+        // Step 2 touches the same rows: the folded gradient must be the
+        // new values plus exactly (sent - received) from step 1.
+        let vals2 = [0.1f32, 0.1, 0.1, 0.1, 0.1, 0.1];
+        let mut grads2 = vec![sparse_grad(&[2, 7, 11], &vals2, 2)];
+        ef.fold_in(&mut grads2);
+        let GradTensor::Sparse(s) = &grads2[0] else { panic!("sparse expected") };
+        for ((&got, &v2), (&v1, &w)) in
+            s.vals().iter().zip(&vals2).zip(vals.iter().zip(&wire))
+        {
+            let want = v2 + (v1 - w);
+            assert_eq!(got.to_bits(), want.to_bits(), "residual must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn error_feedback_keeps_untouched_rows_pending() {
+        let compress = Compression::U8;
+        let mut grads = vec![sparse_grad(&[2, 7], &[0.5, -0.31], 1)];
+        let mut ef = ErrorFeedback::default();
+        ef.fold_in(&mut grads);
+        ef.absorb(&grads, compress);
+
+        // Next step touches only row 7: row 2's residual stays pending.
+        let mut grads2 = vec![sparse_grad(&[7], &[0.25], 1)];
+        ef.fold_in(&mut grads2);
+        assert!(ef.residuals[0].contains_key(&2), "row 2 residual must stay pending");
+        assert!(!ef.residuals[0].contains_key(&7), "row 7 residual was consumed");
+
+        // And a later step touching row 2 consumes it.
+        let mut grads3 = vec![sparse_grad(&[2], &[0.0], 1)];
+        ef.fold_in(&mut grads3);
+        assert!(ef.residuals[0].is_empty());
+        let GradTensor::Sparse(s) = &grads3[0] else { panic!("sparse expected") };
+        assert!(s.vals()[0] != 0.0, "pending residual folded into a zero gradient");
+    }
+
+    #[test]
+    fn error_feedback_is_inert_without_compression() {
+        let mut grads = vec![sparse_grad(&[1, 2], &[0.5, -0.5], 1)];
+        let mut ef = ErrorFeedback::default();
+        ef.fold_in(&mut grads);
+        ef.absorb(&grads, Compression::None);
+        assert!(ef.residuals[0].is_empty());
+        let GradTensor::Sparse(s) = &grads[0] else { panic!("sparse expected") };
+        assert_eq!(s.vals(), &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn dist_options_validate_rejects_mismatches() {
+        use crate::scaling::rules::{HyperSet, ScalingRule};
+        let cfg = TrainConfig {
+            batch: 128,
+            base_batch: 128,
+            base_hypers: HyperSet {
+                lr_dense: 1e-3,
+                lr_embed: 1e-3,
+                l2_embed: 0.0,
+                clip_r: 1.0,
+                clip_zeta: 1e-4,
+                clip_t: 0.5,
+            },
+            rule: ScalingRule::NoScale,
+            epochs: 1.0,
+            workers: 2,
+            threads: 1,
+            param_shards: 1,
+            warmup_steps: 0,
+            init_sigma: 0.01,
+            seed: 1,
+            eval_every_epochs: 0,
+            verbose: false,
+        };
+        let mk = |ranks| DistOptions {
+            ranks,
+            endpoint: Endpoint::Unix(std::path::PathBuf::from("/tmp/x.sock")),
+            compress: Compression::None,
+            deadline: Duration::from_secs(1),
+        };
+        assert!(validate(&cfg, &mk(2)).is_ok());
+        assert!(validate(&cfg, &mk(0)).is_err(), "zero ranks");
+        assert!(validate(&cfg, &mk(3)).is_err(), "workers != ranks");
+    }
+}

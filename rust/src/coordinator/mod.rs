@@ -28,17 +28,28 @@
 //!   prefetched batches, parallel eval, checkpoints (with resume),
 //!   timing. See the [`trainer`] module docs for the threading model and
 //!   determinism guarantees.
+//! * **Multi-process distributed training** ([`dist`], [`transport`]):
+//!   the same fixed-tree reduction promoted across process boundaries —
+//!   a coordinator plus `cowclip worker` processes exchanging framed
+//!   sparse contributions over Unix/TCP sockets (`wire` layer), with
+//!   optional u16/u8 gradient quantization + error feedback on the
+//!   uplink. Compression off is bitwise identical to the in-process
+//!   path (`rust/tests/dist_parity.rs`).
 
 pub mod accumulate;
 pub mod allreduce;
+pub mod dist;
 pub mod engine;
 pub mod pool;
 pub mod trainer;
+pub mod transport;
 pub mod worker;
 
 pub use accumulate::GradAccumulator;
-pub use allreduce::{tree_allreduce, Reduced, ReduceStats, TreeReducer};
+pub use allreduce::{tree_allreduce, Contribution, Reduced, ReduceStats, TreeReducer};
+pub use dist::{coordinate, worker as dist_worker, DistOptions, DistReport, DistStats};
 pub use engine::{Engine, HloEngine};
 pub use pool::{GradJob, StepPool};
 pub use trainer::{TrainConfig, TrainReport, Trainer};
+pub use transport::Endpoint;
 pub use worker::{BatchSlice, WorkerShard};

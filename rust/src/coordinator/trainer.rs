@@ -198,14 +198,22 @@ fn resolve_shards(engine: &Engine, cfg: &TrainConfig) -> usize {
     requested.min(n_fields).max(1)
 }
 
+/// Seed-deterministic store construction shared by the in-process
+/// trainer and every distributed replica (`coordinator::dist`): same
+/// engine + config → bitwise identical initial parameters, which is what
+/// lets distributed ranks rebuild state instead of shipping it.
+pub(crate) fn init_store(engine: &Engine, cfg: &TrainConfig) -> Result<ParamStore> {
+    let spec = engine.spec();
+    let params = init_params(&spec, &InitConfig { seed: cfg.seed, embed_sigma: cfg.init_sigma });
+    let n_shards = resolve_shards(engine, cfg);
+    ParamStore::new(engine.schema().clone(), params, n_shards)
+}
+
 impl Trainer {
     pub fn new(engine: Engine, cfg: TrainConfig) -> Result<Trainer> {
         ensure!(cfg.batch % cfg.workers == 0, "batch must divide by workers");
         ensure!(cfg.workers >= 1);
-        let spec = engine.spec();
-        let params = init_params(&spec, &InitConfig { seed: cfg.seed, embed_sigma: cfg.init_sigma });
-        let n_shards = resolve_shards(&engine, &cfg);
-        let store = ParamStore::new(engine.schema().clone(), params, n_shards)?;
+        let store = init_store(&engine, &cfg)?;
         let hypers = cfg.scaled_hypers();
         let warmup = Warmup::new(cfg.warmup_steps);
         let scratches = (0..cfg.threads_for(cfg.workers)).map(|_| Scratch::new()).collect();
@@ -395,7 +403,7 @@ fn finish_reducer(reducer: TreeReducer, defer: bool) -> Result<(Reduced, ReduceS
 /// The per-step hypers vector: warmup factor on the dense LR at 1-based
 /// `step`. Shared by `Trainer::train_step` and the pooled `run_loop` so
 /// the two step paths cannot drift.
-fn hypers_for_step(hypers: HyperSet, warmup: Warmup, step: usize) -> HypersVec {
+pub(crate) fn hypers_for_step(hypers: HyperSet, warmup: Warmup, step: usize) -> HypersVec {
     HypersVec::new(hypers).at_step(step).with_warmup(warmup.factor(step - 1))
 }
 
@@ -482,7 +490,7 @@ fn fan_out_inline(
 /// goes through the eager apply; deferred halves route to
 /// [`Engine::apply_store_halves`], whose per-shard tasks run their slice
 /// of the root merge inline.
-fn apply_contribution(
+pub(crate) fn apply_contribution(
     engine: &Engine,
     store: &ParamStore,
     cfg: &TrainConfig,
@@ -503,7 +511,7 @@ fn apply_contribution(
 }
 
 /// Parallel evaluation over a read snapshot of the store's weights.
-fn evaluate_with(
+pub(crate) fn evaluate_with(
     engine: &Engine,
     store: &ParamStore,
     cfg: &TrainConfig,
@@ -608,6 +616,7 @@ fn run_loop(
         sw.stop();
         reduce_total.rounds += rstats.rounds;
         reduce_total.bytes_moved += rstats.bytes_moved;
+        reduce_total.wire_bytes += rstats.wire_bytes;
         reduce_total.workers = rstats.workers;
         loss_curve.push(loss);
         epoch_loss.update(loss as f64);

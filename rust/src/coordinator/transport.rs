@@ -1,0 +1,359 @@
+//! Socket transport for distributed training.
+//!
+//! Unix domain sockets are the default (coordinator and workers share a
+//! host); TCP is opt-in via a `tcp:host:port` endpoint for multi-machine
+//! runs. Both sides speak the `wire::frame` protocol over a [`Conn`].
+//!
+//! Liveness is deadline-based everywhere: [`Listener::accept_deadline`]
+//! polls a non-blocking listener, and [`Conn::set_io_deadline`] arms OS
+//! read/write timeouts, so a killed or hung peer surfaces as an `Err`
+//! naming the deadline instead of wedging the run. The transport holds
+//! no locks and never panics on peer input.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+/// Where the coordinator listens and workers connect.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// Unix domain socket path (default; `unix:` prefix optional).
+    Unix(PathBuf),
+    /// TCP address as `tcp:host:port`.
+    Tcp(String),
+}
+
+impl FromStr for Endpoint {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Endpoint> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            ensure!(!addr.is_empty(), "transport: empty tcp address");
+            Ok(Endpoint::Tcp(addr.to_string()))
+        } else {
+            let path = s.strip_prefix("unix:").unwrap_or(s);
+            ensure!(!path.is_empty(), "transport: empty socket path");
+            Ok(Endpoint::Unix(PathBuf::from(path)))
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+            Endpoint::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+impl Endpoint {
+    /// Bind a non-blocking listener at this endpoint.
+    pub fn bind(&self) -> Result<Listener> {
+        match self {
+            Endpoint::Unix(path) => bind_unix(path),
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("transport: bind tcp:{addr}"))?;
+                l.set_nonblocking(true).context("transport: set_nonblocking")?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+
+    /// Connect, retrying until `timeout` — covers the startup race where
+    /// a worker launches before the coordinator has bound its socket.
+    pub fn connect_retry(&self, timeout: Duration) -> Result<Conn> {
+        let start = Instant::now();
+        loop {
+            match self.connect_once() {
+                Ok(conn) => return Ok(conn),
+                Err(err) => {
+                    if start.elapsed() >= timeout {
+                        return Err(err).with_context(|| {
+                            format!("transport: connect to {self} timed out after {timeout:?}")
+                        });
+                    }
+                    thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    fn connect_once(&self) -> Result<Conn> {
+        match self {
+            Endpoint::Unix(path) => connect_unix(path),
+            Endpoint::Tcp(addr) => {
+                let s = TcpStream::connect(addr)
+                    .with_context(|| format!("transport: connect tcp:{addr}"))?;
+                let _ = s.set_nodelay(true);
+                Ok(Conn::Tcp(s))
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+fn bind_unix(path: &Path) -> Result<Listener> {
+    use std::os::unix::fs::FileTypeExt;
+    // Remove a stale socket left by a previous run — but only if it
+    // really is a socket; never delete an arbitrary file.
+    if let Ok(meta) = std::fs::symlink_metadata(path) {
+        ensure!(
+            meta.file_type().is_socket(),
+            "transport: {} exists and is not a socket",
+            path.display()
+        );
+        std::fs::remove_file(path)
+            .with_context(|| format!("transport: remove stale socket {}", path.display()))?;
+    }
+    let l = UnixListener::bind(path)
+        .with_context(|| format!("transport: bind unix:{}", path.display()))?;
+    l.set_nonblocking(true).context("transport: set_nonblocking")?;
+    Ok(Listener::Unix(l))
+}
+
+#[cfg(not(unix))]
+fn bind_unix(path: &Path) -> Result<Listener> {
+    anyhow::bail!(
+        "transport: unix sockets are unsupported on this platform ({})",
+        path.display()
+    )
+}
+
+#[cfg(unix)]
+fn connect_unix(path: &Path) -> Result<Conn> {
+    let s = UnixStream::connect(path)
+        .with_context(|| format!("transport: connect unix:{}", path.display()))?;
+    Ok(Conn::Unix(s))
+}
+
+#[cfg(not(unix))]
+fn connect_unix(path: &Path) -> Result<Conn> {
+    anyhow::bail!(
+        "transport: unix sockets are unsupported on this platform ({})",
+        path.display()
+    )
+}
+
+/// A bound, non-blocking listener.
+pub enum Listener {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Accept one connection before `deadline` elapses; the returned
+    /// connection is switched back to blocking I/O.
+    pub fn accept_deadline(&self, deadline: Duration) -> Result<Conn> {
+        let start = Instant::now();
+        loop {
+            let accepted = match self {
+                #[cfg(unix)]
+                Listener::Unix(l) => match l.accept() {
+                    Ok((s, _)) => Some(Conn::Unix(s)),
+                    Err(err) if err.kind() == io::ErrorKind::WouldBlock => None,
+                    Err(err) => return Err(err).context("transport: accept"),
+                },
+                Listener::Tcp(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        let _ = s.set_nodelay(true);
+                        Some(Conn::Tcp(s))
+                    }
+                    Err(err) if err.kind() == io::ErrorKind::WouldBlock => None,
+                    Err(err) => return Err(err).context("transport: accept"),
+                },
+            };
+            if let Some(conn) = accepted {
+                conn.set_blocking()?;
+                return Ok(conn);
+            }
+            ensure!(
+                start.elapsed() < deadline,
+                "transport: accept deadline ({deadline:?}) expired waiting for a worker"
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// One established connection; implements `Read` + `Write` so
+/// `wire::frame` works over it directly.
+pub enum Conn {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    fn set_blocking(&self) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(false).context("transport: set_blocking"),
+            Conn::Tcp(s) => s.set_nonblocking(false).context("transport: set_blocking"),
+        }
+    }
+
+    /// Bound every subsequent read and write: a peer that stalls past
+    /// the deadline turns into an `Err` instead of a hang. `None`
+    /// restores unbounded blocking I/O.
+    pub fn set_io_deadline(&self, deadline: Option<Duration>) -> Result<()> {
+        // A zero duration means "no timeout" to the std API (which
+        // rejects it); clamp to something strictly positive.
+        let t = deadline.map(|d| d.max(Duration::from_millis(1)));
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                s.set_read_timeout(t).context("transport: set read timeout")?;
+                s.set_write_timeout(t).context("transport: set write timeout")
+            }
+            Conn::Tcp(s) => {
+                s.set_read_timeout(t).context("transport: set read timeout")?;
+                s.set_write_timeout(t).context("transport: set write timeout")
+            }
+        }
+    }
+
+    /// Best-effort close of both directions.
+    pub fn shutdown(&self) {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::wire::{read_frame, write_frame, FrameKind};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static SOCK_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    fn temp_endpoint() -> Endpoint {
+        let seq = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "cowclip-transport-test-{}-{seq}.sock",
+            std::process::id()
+        ));
+        Endpoint::Unix(path)
+    }
+
+    #[test]
+    fn endpoint_parse_and_display() {
+        let ep: Endpoint = "unix:/tmp/x.sock".parse().unwrap();
+        assert_eq!(ep, Endpoint::Unix(PathBuf::from("/tmp/x.sock")));
+        assert_eq!(ep.to_string(), "unix:/tmp/x.sock");
+        let ep: Endpoint = "/tmp/y.sock".parse().unwrap();
+        assert_eq!(ep, Endpoint::Unix(PathBuf::from("/tmp/y.sock")));
+        let ep: Endpoint = "tcp:127.0.0.1:9000".parse().unwrap();
+        assert_eq!(ep, Endpoint::Tcp("127.0.0.1:9000".to_string()));
+        assert_eq!(ep.to_string(), "tcp:127.0.0.1:9000");
+        assert!("".parse::<Endpoint>().is_err());
+        assert!("tcp:".parse::<Endpoint>().is_err());
+    }
+
+    #[test]
+    fn unix_frame_roundtrip_both_directions() {
+        let ep = temp_endpoint();
+        let listener = ep.bind().unwrap();
+        let ep2 = ep.clone();
+        let client = std::thread::spawn(move || {
+            let mut conn = ep2.connect_retry(Duration::from_secs(5)).unwrap();
+            write_frame(&mut conn, FrameKind::Hello, b"worker 0").unwrap();
+            let (kind, payload) = read_frame(&mut conn).unwrap();
+            assert_eq!(kind, FrameKind::Welcome);
+            payload
+        });
+        let mut conn = listener.accept_deadline(Duration::from_secs(5)).unwrap();
+        let (kind, payload) = read_frame(&mut conn).unwrap();
+        assert_eq!(kind, FrameKind::Hello);
+        assert_eq!(payload, b"worker 0");
+        write_frame(&mut conn, FrameKind::Welcome, b"ok").unwrap();
+        assert_eq!(client.join().unwrap(), b"ok");
+    }
+
+    #[test]
+    fn accept_deadline_expires_with_named_error() {
+        let ep = temp_endpoint();
+        let listener = ep.bind().unwrap();
+        let err = listener
+            .accept_deadline(Duration::from_millis(40))
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+    }
+
+    #[test]
+    fn io_deadline_turns_a_silent_peer_into_an_error() {
+        let ep = temp_endpoint();
+        let listener = ep.bind().unwrap();
+        let ep2 = ep.clone();
+        let client = std::thread::spawn(move || {
+            let conn = ep2.connect_retry(Duration::from_secs(5)).unwrap();
+            // Connect and then go silent for longer than the deadline.
+            std::thread::sleep(Duration::from_millis(300));
+            drop(conn);
+        });
+        let mut conn = listener.accept_deadline(Duration::from_secs(5)).unwrap();
+        conn.set_io_deadline(Some(Duration::from_millis(50))).unwrap();
+        assert!(read_frame(&mut conn).is_err());
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn stale_socket_is_replaced_but_regular_files_are_not() {
+        let ep = temp_endpoint();
+        // First bind creates the socket file; a rebind must replace it.
+        drop(ep.bind().unwrap());
+        drop(ep.bind().unwrap());
+        if let Endpoint::Unix(path) = &ep {
+            let _ = std::fs::remove_file(path);
+            std::fs::write(path, b"not a socket").unwrap();
+            assert!(ep.bind().is_err());
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}

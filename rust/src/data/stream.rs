@@ -8,8 +8,9 @@
 //! within-chunk order is preserved, chunk order is randomized per epoch).
 
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
+use std::io::{Read, Seek};
 use std::path::{Path, PathBuf};
+#[cfg(not(unix))]
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -23,9 +24,14 @@ use crate::util::Rng;
 /// Streaming reader over a `.ctr` file.
 ///
 /// The header-parsed file handle is kept open and reused by every
-/// `read_rows` call (behind a `Mutex`, so the reader is `Sync` and a
-/// [`super::Prefetch`] thread can drive it) — the seed implementation
-/// paid three `File::open` syscalls per batch instead.
+/// `read_rows` call via **positioned reads** (`pread(2)` on Unix): each
+/// read names its absolute offset, so there is no shared cursor, no
+/// lock, and concurrent readers — the [`super::Prefetch`] thread, eval
+/// threads, distributed worker replicas — never serialize on the
+/// handle. (The seed implementation paid three `File::open` syscalls
+/// per batch; the first fix funneled everything through one
+/// `Mutex<File>`, which made every reader queue behind one cursor.)
+/// Non-Unix hosts fall back to seek+read behind a cursor mutex.
 pub struct StreamReader {
     path: PathBuf,
     pub schema: Schema,
@@ -34,8 +40,12 @@ pub struct StreamReader {
     cat_off: u64,
     dense_off: u64,
     y_off: u64,
-    /// Reusable read handle; all three sections are read through it.
-    file: Mutex<File>,
+    /// Reusable read handle; all three sections are read through it at
+    /// explicit offsets.
+    file: File,
+    /// Shared-cursor guard for the non-Unix seek+read fallback only.
+    #[cfg(not(unix))]
+    cursor: Mutex<()>,
 }
 
 impl StreamReader {
@@ -89,8 +99,33 @@ impl StreamReader {
             cat_off,
             dense_off,
             y_off,
-            file: Mutex::new(f),
+            file: f,
+            #[cfg(not(unix))]
+            cursor: Mutex::new(()),
         })
+    }
+
+    /// Fill `buf` from the absolute byte offset `off`: lock-free
+    /// `pread(2)` on Unix, seek+read behind the cursor mutex elsewhere.
+    fn read_exact_at(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file
+                .read_exact_at(buf, off)
+                .with_context(|| format!("{}: read at offset {off}", self.path.display()))
+        }
+        #[cfg(not(unix))]
+        {
+            let _cursor = self
+                .cursor
+                .lock()
+                .map_err(|_| anyhow::anyhow!("{}: reader cursor poisoned", self.path.display()))?;
+            let mut f = &self.file;
+            f.seek(std::io::SeekFrom::Start(off))?;
+            f.read_exact(buf)
+                .with_context(|| format!("{}: read at offset {off}", self.path.display()))
+        }
     }
 
     /// Path this reader was opened from.
@@ -106,14 +141,9 @@ impl StreamReader {
         let rows = hi - lo;
         let f_cat = self.schema.n_cat();
         let f_dense = self.schema.n_dense;
-        let mut file = self
-            .file
-            .lock()
-            .map_err(|_| anyhow::anyhow!("{}: reader handle poisoned", self.path.display()))?;
 
         let mut cat_bytes = vec![0u8; rows * f_cat * 4];
-        file.seek(SeekFrom::Start(self.cat_off + (lo * f_cat * 4) as u64))?;
-        file.read_exact(&mut cat_bytes)?;
+        self.read_exact_at(&mut cat_bytes, self.cat_off + (lo * f_cat * 4) as u64)?;
         let x_cat: Vec<i32> = cat_bytes
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -122,16 +152,14 @@ impl StreamReader {
         let mut dense = vec![0f32; rows * f_dense];
         if f_dense > 0 {
             let mut dense_bytes = vec![0u8; rows * f_dense * 4];
-            file.seek(SeekFrom::Start(self.dense_off + (lo * f_dense * 4) as u64))?;
-            file.read_exact(&mut dense_bytes)?;
+            self.read_exact_at(&mut dense_bytes, self.dense_off + (lo * f_dense * 4) as u64)?;
             for (o, c) in dense.iter_mut().zip(dense_bytes.chunks_exact(4)) {
                 *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
             }
         }
 
         let mut y_bytes = vec![0u8; rows];
-        file.seek(SeekFrom::Start(self.y_off + lo as u64))?;
-        file.read_exact(&mut y_bytes)?;
+        self.read_exact_at(&mut y_bytes, self.y_off + lo as u64)?;
         let y: Vec<f32> = y_bytes.iter().map(|&b| b as f32).collect();
 
         Ok(Batch::new(
@@ -259,6 +287,32 @@ mod tests {
         });
         // same chunk-shuffle order and same epoch coverage, batch by batch
         assert_eq!(plain, prefetched);
+    }
+
+    /// Positioned reads share no cursor: four threads hammering
+    /// overlapping row ranges each get exactly their own rows.
+    #[test]
+    fn concurrent_readers_do_not_interleave() {
+        let ds = generate(&criteo_synth(), &SynthConfig { n: 256, ..Default::default() });
+        let path = tmpfile("e.ctr");
+        ds.save(&path).unwrap();
+        let r = StreamReader::open(&path).unwrap();
+        let (r, ds) = (&r, &ds);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for i in 0..8usize {
+                        let lo = (t * 13 + i * 29) % 192;
+                        let b = r.read_rows(lo, lo + 64).unwrap();
+                        assert_eq!(
+                            b.x_cat.as_i32().unwrap(),
+                            &ds.x_cat[lo * 26..(lo + 64) * 26],
+                            "thread {t} read {i}"
+                        );
+                    }
+                });
+            }
+        });
     }
 
     #[test]

@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::ParamEntry;
 use crate::tensor::Tensor;
+use crate::wire::codec::{read_f32_vec, read_u32_le, read_u64_le, write_u32_le, write_u64_le};
 
 pub(crate) const CKPT_MAGIC: &[u8; 4] = b"CCKP";
 
@@ -90,12 +91,12 @@ impl ParamSet {
     /// embeds three of these back to back.
     pub fn write_block<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_all(CKPT_MAGIC)?;
-        w.write_all(&(self.len() as u32).to_le_bytes())?;
+        write_u32_le(w, self.len() as u32)?;
         for (e, t) in self.spec.iter().zip(&self.tensors) {
             let name = e.name.as_bytes();
-            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            write_u32_le(w, name.len() as u32)?;
             w.write_all(name)?;
-            w.write_all(&(t.len() as u64).to_le_bytes())?;
+            write_u64_le(w, t.len() as u64)?;
             for &x in t.as_f32()? {
                 w.write_all(&x.to_le_bytes())?;
             }
@@ -123,35 +124,24 @@ impl ParamSet {
 
     /// Read a `CCKP` block whose magic has already been consumed.
     pub(crate) fn read_block_body<R: Read>(r: &mut R, spec: &[ParamEntry]) -> Result<ParamSet> {
-        let mut nb = [0u8; 4];
-        r.read_exact(&mut nb)?;
-        let n = u32::from_le_bytes(nb) as usize;
+        let n = read_u32_le(r)? as usize;
         if n != spec.len() {
             bail!("checkpoint has {n} tensors, spec wants {}", spec.len());
         }
         let mut tensors = Vec::with_capacity(n);
         for e in spec {
-            let mut lb = [0u8; 4];
-            r.read_exact(&mut lb)?;
-            let name_len = u32::from_le_bytes(lb) as usize;
+            let name_len = read_u32_le(r)? as usize;
             let mut name = vec![0u8; name_len];
             r.read_exact(&mut name)?;
             let name = String::from_utf8(name)?;
             if name != e.name {
                 bail!("checkpoint order mismatch: {} vs {}", name, e.name);
             }
-            let mut cb = [0u8; 8];
-            r.read_exact(&mut cb)?;
-            let count = u64::from_le_bytes(cb) as usize;
+            let count = read_u64_le(r)? as usize;
             if count != e.numel() {
                 bail!("param {}: checkpoint numel {count} vs spec {}", e.name, e.numel());
             }
-            let mut buf = vec![0u8; count * 4];
-            r.read_exact(&mut buf)?;
-            let data: Vec<f32> = buf
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            let data = read_f32_vec(r, count)?;
             tensors.push(Tensor::f32(e.shape.clone(), data));
         }
         ParamSet::new(spec.to_vec(), tensors)

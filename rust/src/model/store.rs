@@ -53,6 +53,7 @@ use crate::clip::{clip_embedding_grads_range, grad_l2_norm, ClipMode, ClipParams
 use crate::data::schema::Schema;
 use crate::optim::{lazy_step_rows, Adam, AdamConfig};
 use crate::tensor::{merge_row_slices, GradTensor, SparseRows, Tensor};
+use crate::wire::codec::{read_u32_le, read_u32_vec, read_u64_le, write_u32_le, write_u64_le};
 
 const STORE_MAGIC: &[u8; 4] = b"CCKS";
 const STORE_VERSION: u32 = 1;
@@ -579,8 +580,8 @@ impl ParamStore {
                 .with_context(|| format!("creating {}", tmp.display()))?;
             let mut w = BufWriter::new(f);
             w.write_all(STORE_MAGIC)?;
-            w.write_all(&STORE_VERSION.to_le_bytes())?;
-            w.write_all(&step.to_le_bytes())?;
+            write_u32_le(&mut w, STORE_VERSION)?;
+            write_u64_le(&mut w, step)?;
             w_guard.write_block(&mut w)?;
             opt.m.write_block(&mut w)?;
             opt.v.write_block(&mut w)?;
@@ -588,12 +589,12 @@ impl ParamStore {
             for last in &opt.last_step {
                 match last {
                     Some(rows) => {
-                        w.write_all(&(rows.len() as u64).to_le_bytes())?;
+                        write_u64_le(&mut w, rows.len() as u64)?;
                         for &x in rows {
-                            w.write_all(&x.to_le_bytes())?;
+                            write_u32_le(&mut w, x)?;
                         }
                     }
-                    None => w.write_all(&0u64.to_le_bytes())?,
+                    None => write_u64_le(&mut w, 0)?,
                 }
             }
             w.flush()?;
@@ -622,22 +623,16 @@ impl ParamStore {
         let moments: Option<(ParamSet, ParamSet)>;
         let mut lazy: Option<Vec<Option<Vec<u32>>>> = None;
         if &magic == STORE_MAGIC {
-            let mut vb = [0u8; 4];
-            r.read_exact(&mut vb)?;
-            let version = u32::from_le_bytes(vb);
+            let version = read_u32_le(&mut r)?;
             ensure!(version == STORE_VERSION, "unsupported checkpoint version {version}");
-            let mut sb = [0u8; 8];
-            r.read_exact(&mut sb)?;
-            step = u64::from_le_bytes(sb);
+            step = read_u64_le(&mut r)?;
             params = ParamSet::read_block(&mut r, &self.spec)?;
             let m = ParamSet::read_block(&mut r, &self.spec)?;
             let v = ParamSet::read_block(&mut r, &self.spec)?;
             moments = Some((m, v));
             let mut rows_per_param = Vec::with_capacity(self.spec.len());
             for e in &self.spec {
-                let mut nb = [0u8; 8];
-                r.read_exact(&mut nb)?;
-                let n = u64::from_le_bytes(nb) as usize;
+                let n = read_u64_le(&mut r)? as usize;
                 if matches!(e.group.as_str(), "embed" | "wide") {
                     ensure!(
                         n == e.shape[0],
@@ -645,13 +640,7 @@ impl ParamStore {
                         e.shape[0],
                         e.name
                     );
-                    let mut buf = vec![0u8; n * 4];
-                    r.read_exact(&mut buf)?;
-                    let rows: Vec<u32> = buf
-                        .chunks_exact(4)
-                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect();
-                    rows_per_param.push(Some(rows));
+                    rows_per_param.push(Some(read_u32_vec(&mut r, n)?));
                 } else {
                     ensure!(n == 0, "unexpected lazy rows for dense param {}", e.name);
                     rows_per_param.push(None);
@@ -700,12 +689,9 @@ impl ParamStore {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
         if &magic == STORE_MAGIC {
-            let mut vb = [0u8; 4];
-            r.read_exact(&mut vb)?;
-            let version = u32::from_le_bytes(vb);
+            let version = read_u32_le(&mut r)?;
             ensure!(version == STORE_VERSION, "unsupported checkpoint version {version}");
-            let mut sb = [0u8; 8];
-            r.read_exact(&mut sb)?;
+            let _step = read_u64_le(&mut r)?;
             ParamSet::read_block(&mut r, spec)
         } else if &magic == CKPT_MAGIC {
             ParamSet::read_block_body(&mut r, spec)
@@ -771,13 +757,9 @@ pub fn inspect_checkpoint(path: &Path) -> Result<CheckpointInfo> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic == STORE_MAGIC {
-        let mut vb = [0u8; 4];
-        r.read_exact(&mut vb)?;
-        let version = u32::from_le_bytes(vb);
+        let version = read_u32_le(&mut r)?;
         ensure!(version == STORE_VERSION, "unsupported checkpoint version {version}");
-        let mut sb = [0u8; 8];
-        r.read_exact(&mut sb)?;
-        let step = u64::from_le_bytes(sb);
+        let step = read_u64_le(&mut r)?;
         let params = scan_block(&mut r)?;
         // the "resumable" claim covers the moment and lazy-row blocks
         // too: scan (seek over) all of them so truncation anywhere in
@@ -793,10 +775,8 @@ pub fn inspect_checkpoint(path: &Path) -> Result<CheckpointInfo> {
             );
         }
         for e in &params {
-            let mut nb = [0u8; 8];
-            r.read_exact(&mut nb)
+            let n = read_u64_le(&mut r)
                 .with_context(|| format!("lazy-Adam rows for {}", e.name))?;
-            let n = u64::from_le_bytes(nb);
             r.seek(SeekFrom::Current(n as i64 * 4))?;
         }
         check_not_truncated(&mut r)?;
@@ -828,19 +808,13 @@ fn scan_block<R: Read + Seek>(r: &mut R) -> Result<Vec<CheckpointEntry>> {
 }
 
 fn scan_block_body<R: Read + Seek>(r: &mut R) -> Result<Vec<CheckpointEntry>> {
-    let mut nb = [0u8; 4];
-    r.read_exact(&mut nb)?;
-    let n = u32::from_le_bytes(nb) as usize;
+    let n = read_u32_le(r)? as usize;
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
-        let mut lb = [0u8; 4];
-        r.read_exact(&mut lb)?;
-        let name_len = u32::from_le_bytes(lb) as usize;
+        let name_len = read_u32_le(r)? as usize;
         let mut name = vec![0u8; name_len];
         r.read_exact(&mut name)?;
-        let mut cb = [0u8; 8];
-        r.read_exact(&mut cb)?;
-        let numel = u64::from_le_bytes(cb);
+        let numel = read_u64_le(r)?;
         r.seek(SeekFrom::Current(numel as i64 * 4))
             .context("checkpoint truncated inside a tensor payload")?;
         out.push(CheckpointEntry { name: String::from_utf8(name)?, numel });

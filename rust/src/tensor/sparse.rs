@@ -41,6 +41,30 @@ impl SparseRows {
         SparseRows::new(n_rows, d, Vec::new(), Vec::new())
     }
 
+    /// Build from untrusted parts (e.g. decoded off the wire): the
+    /// invariants [`SparseRows::new`] asserts are checked here and
+    /// reported as errors instead of panics.
+    pub fn validated(n_rows: usize, d: usize, ids: Vec<u32>, vals: Vec<f32>) -> Result<SparseRows> {
+        ensure!(d > 0, "sparse: row width must be positive");
+        ensure!(
+            vals.len() == ids.len() * d,
+            "sparse: {} values for {} rows of width {d}",
+            vals.len(),
+            ids.len()
+        );
+        ensure!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "sparse: row ids must be sorted and unique"
+        );
+        if let Some(&last) = ids.last() {
+            ensure!(
+                (last as usize) < n_rows,
+                "sparse: row id {last} out of range for {n_rows} rows"
+            );
+        }
+        Ok(SparseRows { n_rows, d, ids, vals })
+    }
+
     /// Scan a dense table and keep its nonzero rows.
     pub fn from_dense(dense: &[f32], n_rows: usize, d: usize) -> SparseRows {
         assert_eq!(dense.len(), n_rows * d, "dense length mismatch");

@@ -1,0 +1,1130 @@
+//! Shared byte-level codec for the distributed wire protocol, checkpoint
+//! files, and serving's request path.
+//!
+//! Everything that crosses a socket or lives in a `CCKS`/`CCKP` file goes
+//! through the little-endian primitives here: `put_*` writers over a
+//! `Vec<u8>`, bounds-checked [`Reader`] decoding, CRC-32 (IEEE)
+//! integrity, and the versioned payload codecs for [`Contribution`],
+//! the worker handshake, and serving score messages. Centralising the
+//! layer means the reducer, the checkpoint store, and the serve
+//! front-end cannot drift apart on byte layout.
+//!
+//! # Compression
+//!
+//! [`encode_contribution`] optionally quantizes *sparse gradient values*
+//! to u16 or u8 codes (symmetric linear, per-tensor scale). Everything
+//! else — touched-id lists, per-id counts, dense MLP gradients, the
+//! loss/weight scalars — is always lossless, so the clip thresholds and
+//! update *structure* stay exact and only sparse-gradient magnitudes see
+//! quantization noise. Workers compensate that noise with per-rank
+//! error-feedback residuals (see `coordinator::dist`), computed with the
+//! same [`quant_code`] / [`dequant`] primitives the encoder uses, so the
+//! residual is exactly the rounding error of the bytes on the wire.
+//!
+//! With [`Compression::None`] the payload is pure little-endian f32/u32
+//! words: encode → decode round-trips bitwise, which is what lets the
+//! distributed path reproduce the sequential trainer bit for bit.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::allreduce::Contribution;
+use crate::serve::{Request, Scored};
+use crate::tensor::{GradTensor, SparseRows, Tensor};
+
+/// Version byte leading every [`Contribution`] payload.
+pub const CONTRIB_VERSION: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3 polynomial, reflected) — frame integrity.
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `bytes`; the check value of `b"123456789"` is
+/// `0xCBF4_3926`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian writers over a growable buffer.
+// ---------------------------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// LEB128 unsigned varint: 7 value bits per byte, high bit = continue.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounds-checked reader over a decoded payload.
+// ---------------------------------------------------------------------------
+
+/// Cursor over a byte slice whose every access is bounds-checked: a
+/// truncated or forged payload surfaces as an error, never a panic.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Consume the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("codec: length overflow")?;
+        let slice = self.buf.get(self.pos..end).with_context(|| {
+            format!(
+                "codec: truncated payload (need {n} bytes at offset {}, have {})",
+                self.pos,
+                self.buf.len()
+            )
+        })?;
+        self.pos = end;
+        Ok(slice)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        let [b]: [u8; 1] = self.take(1)?.try_into().context("codec: u8")?;
+        Ok(b)
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().context("codec: u16")?))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().context("codec: u32")?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().context("codec: u64")?))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().context("codec: i32")?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().context("codec: f32")?))
+    }
+
+    /// LEB128 unsigned varint (up to 10 bytes).
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        for shift in (0..64).step_by(7) {
+            let b = self.u8()?;
+            v |= ((b & 0x7F) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        bail!("codec: varint longer than 10 bytes")
+    }
+
+    /// Consume `n` little-endian f32 words.
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).context("codec: f32 vec overflow")?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Consume `n` little-endian u32 words.
+    pub fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n.checked_mul(4).context("codec: u32 vec overflow")?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "codec: {} trailing bytes after payload",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// std::io mirrors of the primitives — the checkpoint readers stream from
+// a `File` instead of decoding an in-memory payload.
+// ---------------------------------------------------------------------------
+
+pub fn write_u32_le<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("codec: write u32")
+}
+
+pub fn write_u64_le<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("codec: write u64")
+}
+
+pub fn read_u32_le<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("codec: read u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64_le<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("codec: read u64")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read `n` little-endian f32 words from a stream.
+pub fn read_f32_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n.checked_mul(4).context("codec: f32 vec overflow")?];
+    r.read_exact(&mut bytes).context("codec: read f32 block")?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read `n` little-endian u32 words from a stream.
+pub fn read_u32_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n.checked_mul(4).context("codec: u32 vec overflow")?];
+    r.read_exact(&mut bytes).context("codec: read u32 block")?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Compression mode + quantization primitives.
+// ---------------------------------------------------------------------------
+
+/// Wire compression applied to sparse gradient values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// Raw little-endian f32 everywhere: bitwise round-trip.
+    None,
+    /// 16-bit symmetric linear quantization (Q = 32767).
+    U16,
+    /// 8-bit symmetric linear quantization (Q = 127).
+    U8,
+}
+
+impl Compression {
+    pub fn tag(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::U16 => 1,
+            Compression::U8 => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<Compression> {
+        match tag {
+            0 => Ok(Compression::None),
+            1 => Ok(Compression::U16),
+            2 => Ok(Compression::U8),
+            other => bail!("codec: unknown compression tag {other}"),
+        }
+    }
+
+    /// Quantization level count `Q` (codes span `[-Q, Q]`), or `None`
+    /// for the lossless mode.
+    pub fn levels(self) -> Option<u32> {
+        match self {
+            Compression::None => None,
+            Compression::U16 => Some(32767),
+            Compression::U8 => Some(127),
+        }
+    }
+}
+
+impl std::str::FromStr for Compression {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Compression> {
+        match s {
+            "none" => Ok(Compression::None),
+            "u16" => Ok(Compression::U16),
+            "u8" => Ok(Compression::U8),
+            other => bail!("unknown compression {other:?} (expected none|u16|u8)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Compression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Compression::None => "none",
+            Compression::U16 => "u16",
+            Compression::U8 => "u8",
+        })
+    }
+}
+
+/// Per-tensor symmetric quantization scale: `max|v| / Q`, or `0.0` for
+/// an all-zero tensor (every code is then 0).
+pub fn quant_scale(vals: &[f32], q: u32) -> f32 {
+    let max_abs = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        0.0
+    } else {
+        max_abs / q as f32
+    }
+}
+
+/// Quantization code of one value: `clamp(round(v / scale), -Q, Q)`.
+///
+/// Error feedback in `coordinator::dist` calls this (and [`dequant`])
+/// with the exact arguments the encoder used, so the residual it folds
+/// forward is bit-for-bit the rounding error the coordinator saw.
+pub fn quant_code(v: f32, scale: f32, q: u32) -> i32 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let qf = q as f32;
+    (v / scale).round().clamp(-qf, qf) as i32
+}
+
+/// Reconstruction of a quantization code.
+pub fn dequant(code: i32, scale: f32) -> f32 {
+    code as f32 * scale
+}
+
+// ---------------------------------------------------------------------------
+// Sparse-section helpers.
+// ---------------------------------------------------------------------------
+
+fn put_ids(out: &mut Vec<u8>, ids: &[u32], compress: Compression) {
+    if compress == Compression::None {
+        for &id in ids {
+            put_u32(out, id);
+        }
+    } else {
+        // Ids are sorted strictly ascending: first absolute, then
+        // deltas, varint-coded. Lossless.
+        let mut prev = 0u64;
+        for (k, &id) in ids.iter().enumerate() {
+            let v = id as u64;
+            put_varint(out, if k == 0 { v } else { v - prev });
+            prev = v;
+        }
+    }
+}
+
+fn read_ids(r: &mut Reader, nnz: usize, n_rows: usize, compress: Compression) -> Result<Vec<u32>> {
+    if compress == Compression::None {
+        return r.u32_vec(nnz);
+    }
+    let mut ids = Vec::with_capacity(nnz.min(r.remaining()));
+    let mut prev = 0u64;
+    for k in 0..nnz {
+        let delta = r.varint()?;
+        let v = if k == 0 {
+            delta
+        } else {
+            prev.checked_add(delta).context("codec: row id overflow")?
+        };
+        ensure!(
+            v < n_rows as u64 && v <= u32::MAX as u64,
+            "codec: row id {v} out of range (n_rows {n_rows})"
+        );
+        ids.push(v as u32);
+        prev = v;
+    }
+    Ok(ids)
+}
+
+fn put_count_vals(out: &mut Vec<u8>, vals: &[f32], compress: Compression) {
+    if compress == Compression::None {
+        for &v in vals {
+            put_f32(out, v);
+        }
+        return;
+    }
+    // Counts are small non-negative integers in practice; varint-code
+    // them when that round-trips exactly, raw f32 otherwise. Either way
+    // the decode is lossless.
+    let integral = vals
+        .iter()
+        .all(|&v| v >= 0.0 && v <= (1u64 << 63) as f32 && v.fract() == 0.0);
+    put_u8(out, u8::from(integral));
+    if integral {
+        for &v in vals {
+            put_varint(out, v as u64);
+        }
+    } else {
+        for &v in vals {
+            put_f32(out, v);
+        }
+    }
+}
+
+fn read_count_vals(r: &mut Reader, n: usize, compress: Compression) -> Result<Vec<f32>> {
+    if compress == Compression::None {
+        return r.f32_vec(n);
+    }
+    match r.u8()? {
+        1 => {
+            let mut vals = Vec::with_capacity(n.min(r.remaining()));
+            for _ in 0..n {
+                vals.push(r.varint()? as f32);
+            }
+            Ok(vals)
+        }
+        0 => r.f32_vec(n),
+        other => bail!("codec: unknown count-value encoding {other}"),
+    }
+}
+
+fn put_quantized(out: &mut Vec<u8>, vals: &[f32], q: u32) {
+    let scale = quant_scale(vals, q);
+    put_f32(out, scale);
+    for &v in vals {
+        let stored = (quant_code(v, scale, q) + q as i32) as u32;
+        if q > u8::MAX as u32 {
+            put_u16(out, stored as u16);
+        } else {
+            put_u8(out, stored as u8);
+        }
+    }
+}
+
+fn read_quantized(r: &mut Reader, n: usize, q: u32) -> Result<Vec<f32>> {
+    let scale = r.f32()?;
+    ensure!(scale.is_finite() && scale >= 0.0, "codec: bad quant scale {scale}");
+    let cap = 2 * q;
+    if q > u8::MAX as u32 {
+        let bytes = r.take(n.checked_mul(2).context("codec: quantized vals overflow")?)?;
+        let mut vals = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(2) {
+            let stored = u16::from_le_bytes([c[0], c[1]]) as u32;
+            ensure!(stored <= cap, "codec: quant code {stored} out of range");
+            vals.push(dequant(stored as i32 - q as i32, scale));
+        }
+        Ok(vals)
+    } else {
+        let bytes = r.take(n)?;
+        let mut vals = Vec::with_capacity(n);
+        for &b in bytes {
+            let stored = b as u32;
+            ensure!(stored <= cap, "codec: quant code {stored} out of range");
+            vals.push(dequant(stored as i32 - q as i32, scale));
+        }
+        Ok(vals)
+    }
+}
+
+fn put_sparse_counts(out: &mut Vec<u8>, s: &SparseRows, compress: Compression) -> Result<()> {
+    ensure!(s.nnz() <= u32::MAX as usize, "codec: counts nnz overflow");
+    put_u64(out, s.n_rows() as u64);
+    put_u32(out, s.d() as u32);
+    put_u32(out, s.nnz() as u32);
+    put_ids(out, s.ids(), compress);
+    put_count_vals(out, s.vals(), compress);
+    Ok(())
+}
+
+fn read_sparse_counts(r: &mut Reader, compress: Compression) -> Result<SparseRows> {
+    let n_rows = usize::try_from(r.u64()?).context("codec: counts n_rows")?;
+    let d = r.u32()? as usize;
+    ensure!(d > 0, "codec: counts d == 0");
+    let nnz = r.u32()? as usize;
+    ensure!(nnz <= n_rows, "codec: counts nnz {nnz} > n_rows {n_rows}");
+    let ids = read_ids(r, nnz, n_rows, compress)?;
+    let n = nnz.checked_mul(d).context("codec: counts vals overflow")?;
+    let vals = read_count_vals(r, n, compress)?;
+    SparseRows::validated(n_rows, d, ids, vals)
+}
+
+// ---------------------------------------------------------------------------
+// Contribution payload (version 1).
+// ---------------------------------------------------------------------------
+
+/// Byte accounting of one encoded / decoded [`Contribution`].
+///
+/// `raw_bytes` is the [`Compression::None`] length of the same payload
+/// (the traffic-model numerator); `wire_bytes` is what actually hit the
+/// socket. The `sparse_*` pair restricts both to the sparse sections
+/// (counts + sparse gradients) — the ≥4× compression gate is judged on
+/// that ratio, since dense MLP gradients are never quantized.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ContribStats {
+    pub raw_bytes: u64,
+    pub wire_bytes: u64,
+    pub sparse_raw: u64,
+    pub sparse_wire: u64,
+}
+
+impl ContribStats {
+    pub fn add(&mut self, other: &ContribStats) {
+        self.raw_bytes += other.raw_bytes;
+        self.wire_bytes += other.wire_bytes;
+        self.sparse_raw += other.sparse_raw;
+        self.sparse_wire += other.sparse_wire;
+    }
+}
+
+/// Exact encoded length, in bytes, of `c` under [`Compression::None`].
+///
+/// This is the *raw* on-wire size: the traffic model's per-merge byte
+/// count and the numerator of the compression ratio. Kept alloc-free —
+/// the reducer's hot merge path calls it per merge.
+pub fn contribution_wire_len(c: &Contribution) -> u64 {
+    // version + compression tag + loss_weighted + weight
+    let mut n = 1 + 1 + 4 + 4u64;
+    // counts: n_rows u64, d u32, nnz u32, raw u32 ids, raw f32 vals
+    n += 8 + 4 + 4;
+    n += c.counts.nnz() as u64 * 4;
+    n += c.counts.vals().len() as u64 * 4;
+    // grad count
+    n += 4;
+    for g in &c.grads {
+        match g {
+            GradTensor::Dense(t) => {
+                // kind, ndim u32, dims u64 each, raw f32 data
+                n += 1 + 4 + 8 * t.shape().len() as u64 + 4 * t.len() as u64;
+            }
+            GradTensor::Sparse(s) => {
+                // kind, n_rows u64, d u32, ids-mode u8
+                n += 1 + 8 + 4 + 1;
+                let same = s.n_rows() == c.counts.n_rows() && s.ids() == c.counts.ids();
+                if !same {
+                    // nnz u32 + raw u32 ids
+                    n += 4 + s.ids().len() as u64 * 4;
+                }
+                // value-encoding u8 + raw f32 vals
+                n += 1 + s.vals().len() as u64 * 4;
+            }
+        }
+    }
+    n
+}
+
+/// Encode a [`Contribution`] as a versioned payload.
+///
+/// Sparse gradients whose id list equals the counts' id list (the
+/// normal case: every per-table gradient and the counts are indexed by
+/// the same touched ids) omit their ids entirely and reference the
+/// counts section instead.
+pub fn encode_contribution(
+    c: &Contribution,
+    compress: Compression,
+) -> Result<(Vec<u8>, ContribStats)> {
+    let raw_bytes = contribution_wire_len(c);
+    let mut out = Vec::with_capacity(raw_bytes as usize);
+    put_u8(&mut out, CONTRIB_VERSION);
+    put_u8(&mut out, compress.tag());
+    put_f32(&mut out, c.loss_weighted);
+    put_f32(&mut out, c.weight);
+
+    let mut sparse_raw = 0u64;
+    let mut sparse_wire = 0u64;
+
+    let start = out.len();
+    put_sparse_counts(&mut out, &c.counts, compress)?;
+    sparse_raw += c.counts.payload_bytes();
+    sparse_wire += (out.len() - start) as u64;
+
+    ensure!(c.grads.len() <= u32::MAX as usize, "codec: grad count overflow");
+    put_u32(&mut out, c.grads.len() as u32);
+    for g in &c.grads {
+        match g {
+            GradTensor::Dense(t) => {
+                put_u8(&mut out, 0);
+                let shape = t.shape();
+                ensure!(shape.len() <= 8, "codec: dense grad rank {} > 8", shape.len());
+                put_u32(&mut out, shape.len() as u32);
+                for &dim in shape {
+                    put_u64(&mut out, dim as u64);
+                }
+                for &v in t.as_f32()? {
+                    put_f32(&mut out, v);
+                }
+            }
+            GradTensor::Sparse(s) => {
+                put_u8(&mut out, 1);
+                let start = out.len();
+                put_u64(&mut out, s.n_rows() as u64);
+                put_u32(&mut out, s.d() as u32);
+                let same = s.n_rows() == c.counts.n_rows() && s.ids() == c.counts.ids();
+                put_u8(&mut out, u8::from(same));
+                if !same {
+                    ensure!(s.nnz() <= u32::MAX as usize, "codec: sparse grad nnz overflow");
+                    put_u32(&mut out, s.nnz() as u32);
+                    put_ids(&mut out, s.ids(), compress);
+                }
+                match compress.levels() {
+                    None => {
+                        put_u8(&mut out, 0);
+                        for &v in s.vals() {
+                            put_f32(&mut out, v);
+                        }
+                    }
+                    Some(q) => {
+                        put_u8(&mut out, compress.tag());
+                        put_quantized(&mut out, s.vals(), q);
+                    }
+                }
+                sparse_raw += s.payload_bytes();
+                sparse_wire += (out.len() - start) as u64;
+            }
+        }
+    }
+
+    let stats = ContribStats {
+        raw_bytes,
+        wire_bytes: out.len() as u64,
+        sparse_raw,
+        sparse_wire,
+    };
+    Ok((out, stats))
+}
+
+/// Decode a [`Contribution`] payload produced by [`encode_contribution`].
+pub fn decode_contribution(buf: &[u8]) -> Result<(Contribution, ContribStats)> {
+    let mut r = Reader::new(buf);
+    let version = r.u8()?;
+    ensure!(
+        version == CONTRIB_VERSION,
+        "codec: contribution payload v{version}, supported v{CONTRIB_VERSION}"
+    );
+    let compress = Compression::from_tag(r.u8()?)?;
+    let loss_weighted = r.f32()?;
+    let weight = r.f32()?;
+
+    let mut sparse_raw = 0u64;
+    let mut sparse_wire = 0u64;
+
+    let start = r.pos();
+    let counts = read_sparse_counts(&mut r, compress)?;
+    sparse_raw += counts.payload_bytes();
+    sparse_wire += (r.pos() - start) as u64;
+
+    let n_grads = r.u32()? as usize;
+    ensure!(n_grads <= 65536, "codec: implausible grad count {n_grads}");
+    let mut grads = Vec::with_capacity(n_grads);
+    for _ in 0..n_grads {
+        match r.u8()? {
+            0 => {
+                let ndim = r.u32()? as usize;
+                ensure!(ndim <= 8, "codec: dense grad rank {ndim} > 8");
+                let mut shape = Vec::with_capacity(ndim);
+                let mut numel = 1usize;
+                for _ in 0..ndim {
+                    let dim = usize::try_from(r.u64()?).context("codec: dense grad dim")?;
+                    numel = numel.checked_mul(dim).context("codec: dense grad numel overflow")?;
+                    shape.push(dim);
+                }
+                let data = r.f32_vec(numel)?;
+                grads.push(GradTensor::Dense(Tensor::f32(shape, data)));
+            }
+            1 => {
+                let start = r.pos();
+                let n_rows = usize::try_from(r.u64()?).context("codec: sparse grad n_rows")?;
+                let d = r.u32()? as usize;
+                ensure!(d > 0, "codec: sparse grad d == 0");
+                let ids = match r.u8()? {
+                    1 => {
+                        ensure!(
+                            n_rows == counts.n_rows(),
+                            "codec: shared-id grad n_rows {n_rows} != counts {}",
+                            counts.n_rows()
+                        );
+                        counts.ids().to_vec()
+                    }
+                    0 => {
+                        let nnz = r.u32()? as usize;
+                        ensure!(nnz <= n_rows, "codec: sparse grad nnz {nnz} > n_rows {n_rows}");
+                        read_ids(&mut r, nnz, n_rows, compress)?
+                    }
+                    other => bail!("codec: unknown ids mode {other}"),
+                };
+                let n = ids.len().checked_mul(d).context("codec: sparse grad vals overflow")?;
+                let val_enc = r.u8()?;
+                let vals = match Compression::from_tag(val_enc)?.levels() {
+                    None => r.f32_vec(n)?,
+                    Some(q) => read_quantized(&mut r, n, q)?,
+                };
+                let s = SparseRows::validated(n_rows, d, ids, vals)?;
+                sparse_raw += s.payload_bytes();
+                sparse_wire += (r.pos() - start) as u64;
+                grads.push(GradTensor::Sparse(s));
+            }
+            other => bail!("codec: unknown grad kind {other}"),
+        }
+    }
+    r.done()?;
+
+    let c = Contribution {
+        grads,
+        counts,
+        loss_weighted,
+        weight,
+    };
+    let stats = ContribStats {
+        raw_bytes: contribution_wire_len(&c),
+        wire_bytes: buf.len() as u64,
+        sparse_raw,
+        sparse_wire,
+    };
+    Ok((c, stats))
+}
+
+// ---------------------------------------------------------------------------
+// Handshake payloads.
+// ---------------------------------------------------------------------------
+
+/// Worker → coordinator handshake: identity plus the run parameters the
+/// coordinator cross-checks so mismatched processes fail fast instead of
+/// silently diverging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub rank: u32,
+    pub ranks: u32,
+    pub batch: u64,
+    pub seed: u64,
+    pub total_steps: u64,
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 4 + 8 + 8 + 8);
+    put_u32(&mut out, h.rank);
+    put_u32(&mut out, h.ranks);
+    put_u64(&mut out, h.batch);
+    put_u64(&mut out, h.seed);
+    put_u64(&mut out, h.total_steps);
+    out
+}
+
+pub fn decode_hello(buf: &[u8]) -> Result<Hello> {
+    let mut r = Reader::new(buf);
+    let h = Hello {
+        rank: r.u32()?,
+        ranks: r.u32()?,
+        batch: r.u64()?,
+        seed: r.u64()?,
+        total_steps: r.u64()?,
+    };
+    r.done()?;
+    Ok(h)
+}
+
+/// Coordinator → worker handshake reply: the negotiated wire settings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Welcome {
+    pub compress: Compression,
+    pub total_steps: u64,
+}
+
+pub fn encode_welcome(w: &Welcome) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8);
+    put_u8(&mut out, w.compress.tag());
+    put_u64(&mut out, w.total_steps);
+    out
+}
+
+pub fn decode_welcome(buf: &[u8]) -> Result<Welcome> {
+    let mut r = Reader::new(buf);
+    let w = Welcome {
+        compress: Compression::from_tag(r.u8()?)?,
+        total_steps: r.u64()?,
+    };
+    r.done()?;
+    Ok(w)
+}
+
+/// Error frames carry a UTF-8 message.
+pub fn encode_error(msg: &str) -> Vec<u8> {
+    msg.as_bytes().to_vec()
+}
+
+pub fn decode_error(buf: &[u8]) -> Result<String> {
+    String::from_utf8(buf.to_vec()).context("codec: error payload is not UTF-8")
+}
+
+// ---------------------------------------------------------------------------
+// Serving score payloads — the network shape of `serve::Request` /
+// `serve::Scored`, shared with the future socket front-end.
+// ---------------------------------------------------------------------------
+
+pub fn encode_score(req: &Request) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 4 + 4 + 4 * (req.cat.len() + req.dense.len()));
+    put_u64(&mut out, req.id);
+    put_u32(&mut out, req.cat.len() as u32);
+    put_u32(&mut out, req.dense.len() as u32);
+    for &c in &req.cat {
+        put_i32(&mut out, c);
+    }
+    for &v in &req.dense {
+        put_f32(&mut out, v);
+    }
+    out
+}
+
+pub fn decode_score(buf: &[u8]) -> Result<Request> {
+    let mut r = Reader::new(buf);
+    let id = r.u64()?;
+    let n_cat = r.u32()? as usize;
+    let n_dense = r.u32()? as usize;
+    ensure!(
+        n_cat <= 4096 && n_dense <= 4096,
+        "codec: implausible score-request arity ({n_cat} cat, {n_dense} dense)"
+    );
+    let cat_bytes = r.take(n_cat * 4)?;
+    let cat = cat_bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let dense = r.f32_vec(n_dense)?;
+    r.done()?;
+    Ok(Request { id, cat, dense })
+}
+
+pub fn encode_scored(s: &Scored) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 4 + 4);
+    put_u64(&mut out, s.id);
+    put_f32(&mut out, s.logit);
+    put_f32(&mut out, s.prob);
+    out
+}
+
+pub fn decode_scored(buf: &[u8]) -> Result<Scored> {
+    let mut r = Reader::new(buf);
+    let s = Scored {
+        id: r.u64()?,
+        logit: r.f32()?,
+        prob: r.f32()?,
+    };
+    r.done()?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_contrib_eq(a: &Contribution, b: &Contribution) {
+        assert_eq!(a.loss_weighted.to_bits(), b.loss_weighted.to_bits());
+        assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.grads.len(), b.grads.len());
+        for (ga, gb) in a.grads.iter().zip(&b.grads) {
+            match (ga, gb) {
+                (GradTensor::Dense(ta), GradTensor::Dense(tb)) => assert_eq!(ta, tb),
+                (GradTensor::Sparse(sa), GradTensor::Sparse(sb)) => assert_eq!(sa, sb),
+                other => panic!("grad kind mismatch: {other:?}"),
+            }
+        }
+    }
+
+    /// Small mixed contribution: an embedding grad sharing the counts'
+    /// ids, a wide grad with its own ids, and a dense MLP grad.
+    fn sample_contribution() -> Contribution {
+        let counts = SparseRows::new(100, 1, vec![3, 7, 42], vec![1.0, 2.0, 5.0]);
+        let embed = SparseRows::new(
+            100,
+            4,
+            vec![3, 7, 42],
+            vec![
+                0.5, -0.25, 0.125, -1.5, 2.0, -0.75, 0.0625, -0.5, 1.0, 0.25, -2.0, 0.375,
+            ],
+        );
+        let wide = SparseRows::new(100, 1, vec![3, 9], vec![0.75, -0.375]);
+        let dense = Tensor::f32(vec![2, 3], vec![0.1, -0.2, 0.3, -0.4, 0.5, -0.6]);
+        Contribution {
+            grads: vec![
+                GradTensor::Sparse(embed),
+                GradTensor::Sparse(wide),
+                GradTensor::Dense(dense),
+            ],
+            counts,
+            loss_weighted: 0.693,
+            weight: 0.5,
+        }
+    }
+
+    /// Larger contribution with ids shared across all sparse sections —
+    /// the trainer-path shape the compression-ratio gate is judged on.
+    fn wide_contribution() -> Contribution {
+        let nnz = 256usize;
+        let ids: Vec<u32> = (0..nnz as u32).map(|i| i * 3).collect();
+        let embed_vals: Vec<f32> = (0..nnz * 10)
+            .map(|i| ((i as f32) * 0.37).sin() * 0.01)
+            .collect();
+        let wide_vals: Vec<f32> = (0..nnz).map(|i| ((i as f32) * 0.11).cos() * 0.02).collect();
+        let count_vals: Vec<f32> = (0..nnz).map(|i| (i % 7 + 1) as f32).collect();
+        let n_rows = 1024;
+        Contribution {
+            grads: vec![
+                GradTensor::Sparse(SparseRows::new(n_rows, 10, ids.clone(), embed_vals)),
+                GradTensor::Sparse(SparseRows::new(n_rows, 1, ids.clone(), wide_vals)),
+            ],
+            counts: SparseRows::new(n_rows, 1, ids, count_vals),
+            loss_weighted: 0.25,
+            weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let cases = [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v);
+            r.done().unwrap();
+        }
+    }
+
+    #[test]
+    fn reader_rejects_truncation_and_trailing() {
+        let short = [1u8, 2, 3];
+        let mut r = Reader::new(&short);
+        assert!(r.u32().is_err());
+        let buf = [1u8, 0, 0, 0, 9];
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 1);
+        assert!(r.done().is_err());
+    }
+
+    #[test]
+    fn contribution_roundtrip_none_is_bitwise() {
+        let c = sample_contribution();
+        let (buf, stats) = encode_contribution(&c, Compression::None).unwrap();
+        assert_eq!(stats.wire_bytes, buf.len() as u64);
+        assert_eq!(stats.raw_bytes, stats.wire_bytes);
+        assert_eq!(contribution_wire_len(&c), buf.len() as u64);
+        let (back, dstats) = decode_contribution(&buf).unwrap();
+        assert_contrib_eq(&c, &back);
+        assert_eq!(stats, dstats);
+    }
+
+    #[test]
+    fn contribution_roundtrip_u8_structure_lossless_values_bounded() {
+        let c = sample_contribution();
+        let (buf, _) = encode_contribution(&c, Compression::U8).unwrap();
+        let (back, _) = decode_contribution(&buf).unwrap();
+        // Structure (ids, counts, dense grads, scalars) is lossless.
+        assert_eq!(back.counts, c.counts);
+        assert_eq!(back.loss_weighted.to_bits(), c.loss_weighted.to_bits());
+        for (ga, gb) in c.grads.iter().zip(&back.grads) {
+            match (ga, gb) {
+                (GradTensor::Dense(ta), GradTensor::Dense(tb)) => assert_eq!(ta, tb),
+                (GradTensor::Sparse(sa), GradTensor::Sparse(sb)) => {
+                    assert_eq!(sa.ids(), sb.ids());
+                    assert_eq!(sa.n_rows(), sb.n_rows());
+                    // Values are within half a quantization step.
+                    let q = Compression::U8.levels().unwrap();
+                    let scale = quant_scale(sa.vals(), q);
+                    for (&va, &vb) in sa.vals().iter().zip(sb.vals()) {
+                        assert!(
+                            (va - vb).abs() <= 0.5 * scale + 1e-7,
+                            "|{va} - {vb}| > step/2 ({scale})"
+                        );
+                    }
+                }
+                other => panic!("grad kind mismatch: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn u16_is_tighter_than_u8() {
+        let c = wide_contribution();
+        let q16 = Compression::U16.levels().unwrap();
+        let q8 = Compression::U8.levels().unwrap();
+        for g in &c.grads {
+            if let GradTensor::Sparse(s) = g {
+                let s16 = quant_scale(s.vals(), q16);
+                let s8 = quant_scale(s.vals(), q8);
+                assert!(s16 < s8);
+                for &v in s.vals() {
+                    let e16 = (v - dequant(quant_code(v, s16, q16), s16)).abs();
+                    assert!(e16 <= 0.5 * s16 + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn u8_compression_hits_4x_on_sparse_sections() {
+        let c = wide_contribution();
+        let (buf, stats) = encode_contribution(&c, Compression::U8).unwrap();
+        let (back, dstats) = decode_contribution(&buf).unwrap();
+        // Ids and counts survive exactly.
+        assert_eq!(back.counts, c.counts);
+        assert_eq!(stats.sparse_raw, dstats.sparse_raw);
+        assert_eq!(stats.sparse_wire, dstats.sparse_wire);
+        let ratio = stats.sparse_raw as f64 / stats.sparse_wire as f64;
+        assert!(ratio >= 4.0, "sparse compression ratio {ratio:.2} < 4.0");
+        assert!(stats.wire_bytes < stats.raw_bytes);
+    }
+
+    #[test]
+    fn shared_ids_are_omitted_from_the_wire() {
+        let c = wide_contribution();
+        let (with_sharing, _) = encode_contribution(&c, Compression::None).unwrap();
+        // Same payload, but with the wide grad's ids perturbed so they
+        // no longer match the counts: the encoding must grow by the
+        // explicit id list.
+        let mut ids: Vec<u32> = c.counts.ids().to_vec();
+        let last = ids.pop().unwrap();
+        ids.push(last + 1);
+        let mut c2 = Contribution {
+            grads: c.grads.clone(),
+            counts: c.counts.clone(),
+            loss_weighted: c.loss_weighted,
+            weight: c.weight,
+        };
+        if let Some(GradTensor::Sparse(s)) = c2.grads.pop() {
+            c2.grads.push(GradTensor::Sparse(SparseRows::new(
+                1024,
+                1,
+                ids,
+                s.vals().to_vec(),
+            )));
+        }
+        let (without_sharing, _) = encode_contribution(&c2, Compression::None).unwrap();
+        assert_eq!(without_sharing.len(), with_sharing.len() + 4 + 256 * 4);
+        let (back, _) = decode_contribution(&with_sharing).unwrap();
+        assert_contrib_eq(&c, &back);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        let c = sample_contribution();
+        let (mut buf, _) = encode_contribution(&c, Compression::None).unwrap();
+        assert!(decode_contribution(&buf[..8]).is_err(), "truncation");
+        buf[0] = 99;
+        assert!(decode_contribution(&buf).is_err(), "bad version");
+        buf[0] = CONTRIB_VERSION;
+        buf[1] = 99;
+        assert!(decode_contribution(&buf).is_err(), "bad compression tag");
+    }
+
+    #[test]
+    fn hello_welcome_roundtrip() {
+        let h = Hello {
+            rank: 3,
+            ranks: 4,
+            batch: 1024,
+            seed: 42,
+            total_steps: 100,
+        };
+        assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
+        let w = Welcome {
+            compress: Compression::U8,
+            total_steps: 100,
+        };
+        assert_eq!(decode_welcome(&encode_welcome(&w)).unwrap(), w);
+        assert!(decode_hello(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn score_roundtrip() {
+        let req = Request {
+            id: 7,
+            cat: vec![1, -2, 300],
+            dense: vec![0.5, -1.5],
+        };
+        let back = decode_score(&encode_score(&req)).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.cat, req.cat);
+        assert_eq!(back.dense, req.dense);
+        let s = Scored {
+            id: 7,
+            logit: 0.25,
+            prob: 0.562,
+        };
+        let back = decode_scored(&encode_scored(&s)).unwrap();
+        assert_eq!(back.id, s.id);
+        assert_eq!(back.logit.to_bits(), s.logit.to_bits());
+        assert_eq!(back.prob.to_bits(), s.prob.to_bits());
+    }
+
+    #[test]
+    fn compression_parses_and_displays() {
+        for (s, c) in [
+            ("none", Compression::None),
+            ("u16", Compression::U16),
+            ("u8", Compression::U8),
+        ] {
+            assert_eq!(s.parse::<Compression>().unwrap(), c);
+            assert_eq!(c.to_string(), s);
+            assert_eq!(Compression::from_tag(c.tag()).unwrap(), c);
+        }
+        assert!("zstd".parse::<Compression>().is_err());
+    }
+}

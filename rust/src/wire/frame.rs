@@ -1,0 +1,234 @@
+//! Length-prefixed frame protocol for the distributed socket transport.
+//!
+//! Every message is `header ‖ payload`. The 16-byte header is
+//!
+//! ```text
+//! offset  0  1  2        3     4..8      8..12   12..16
+//!         'C' 'W' version kind  len (LE)  crc32   reserved
+//! ```
+//!
+//! `len` is the payload byte count (capped at [`MAX_FRAME_LEN`]) and
+//! `crc32` is the IEEE CRC of the payload, verified on read so a torn or
+//! corrupted stream surfaces as an error instead of a silently wrong
+//! gradient. Payload bytes are opaque here; `wire::codec` gives them
+//! meaning per [`FrameKind`].
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::codec::crc32;
+
+const MAGIC0: u8 = b'C';
+const MAGIC1: u8 = b'W';
+
+/// Protocol version stamped into every frame header.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Header length in bytes.
+pub const FRAME_HEADER_LEN: usize = 16;
+
+/// Largest accepted payload (256 MiB) — a forged length field cannot
+/// force an unbounded allocation.
+pub const MAX_FRAME_LEN: usize = 256 << 20;
+
+/// Message discriminant carried in byte 3 of the header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → coordinator: handshake (`codec::Hello`).
+    Hello,
+    /// Coordinator → worker: handshake reply (`codec::Welcome`).
+    Welcome,
+    /// Worker → coordinator: one step's `Contribution`.
+    Contrib,
+    /// Coordinator → worker: the reduced total `Contribution`.
+    Total,
+    /// Coordinator → worker: clean end of run.
+    Shutdown,
+    /// Either direction: fatal error, UTF-8 message payload.
+    Error,
+    /// Client → server: a serving score request (`codec::encode_score`).
+    Score,
+    /// Server → client: a serving score reply (`codec::encode_scored`).
+    Scored,
+}
+
+impl FrameKind {
+    pub fn tag(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Welcome => 2,
+            FrameKind::Contrib => 3,
+            FrameKind::Total => 4,
+            FrameKind::Shutdown => 5,
+            FrameKind::Error => 6,
+            FrameKind::Score => 7,
+            FrameKind::Scored => 8,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<FrameKind> {
+        match tag {
+            1 => Ok(FrameKind::Hello),
+            2 => Ok(FrameKind::Welcome),
+            3 => Ok(FrameKind::Contrib),
+            4 => Ok(FrameKind::Total),
+            5 => Ok(FrameKind::Shutdown),
+            6 => Ok(FrameKind::Error),
+            7 => Ok(FrameKind::Score),
+            8 => Ok(FrameKind::Scored),
+            other => bail!("wire: unknown frame kind {other}"),
+        }
+    }
+}
+
+/// Write one frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_LEN,
+        "wire: frame of {} bytes exceeds the {} byte cap",
+        payload.len(),
+        MAX_FRAME_LEN
+    );
+    let [l0, l1, l2, l3] = (payload.len() as u32).to_le_bytes();
+    let [c0, c1, c2, c3] = crc32(payload).to_le_bytes();
+    let header: [u8; FRAME_HEADER_LEN] = [
+        MAGIC0,
+        MAGIC1,
+        WIRE_VERSION,
+        kind.tag(),
+        l0,
+        l1,
+        l2,
+        l3,
+        c0,
+        c1,
+        c2,
+        c3,
+        0,
+        0,
+        0,
+        0,
+    ];
+    w.write_all(&header).context("wire: write frame header")?;
+    w.write_all(payload).context("wire: write frame payload")?;
+    w.flush().context("wire: flush frame")?;
+    Ok(())
+}
+
+/// Read one frame; the payload's CRC is verified before it is returned.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(FrameKind, Vec<u8>)> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut header).context("wire: read frame header")?;
+    let [m0, m1, version, kind_tag, l0, l1, l2, l3, c0, c1, c2, c3, _, _, _, _] = header;
+    ensure!(
+        m0 == MAGIC0 && m1 == MAGIC1,
+        "wire: bad frame magic {m0:#04x} {m1:#04x}"
+    );
+    ensure!(
+        version == WIRE_VERSION,
+        "wire: frame version {version}, supported {WIRE_VERSION}"
+    );
+    let kind = FrameKind::from_tag(kind_tag)?;
+    let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
+    ensure!(
+        len <= MAX_FRAME_LEN,
+        "wire: frame of {len} bytes exceeds the {MAX_FRAME_LEN} byte cap"
+    );
+    let want = u32::from_le_bytes([c0, c1, c2, c3]);
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("wire: read frame payload")?;
+    let got = crc32(&payload);
+    ensure!(
+        got == want,
+        "wire: frame CRC mismatch (got {got:#010x}, want {want:#010x})"
+    );
+    Ok((kind, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_all_kinds() {
+        let kinds = [
+            FrameKind::Hello,
+            FrameKind::Welcome,
+            FrameKind::Contrib,
+            FrameKind::Total,
+            FrameKind::Shutdown,
+            FrameKind::Error,
+            FrameKind::Score,
+            FrameKind::Scored,
+        ];
+        let mut buf = Vec::new();
+        for (i, &k) in kinds.iter().enumerate() {
+            let payload: Vec<u8> = (0..i as u8).collect();
+            write_frame(&mut buf, k, &payload).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for (i, &k) in kinds.iter().enumerate() {
+            let (kind, payload) = read_frame(&mut cur).unwrap();
+            assert_eq!(kind, k);
+            assert_eq!(payload.len(), i);
+        }
+        assert_eq!(cur.position() as usize, cur.get_ref().len());
+    }
+
+    #[test]
+    fn corrupt_payload_fails_crc() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Contrib, b"hello world").unwrap();
+        let last = buf.len() - 1;
+        if let Some(b) = buf.get_mut(last) {
+            *b ^= 0xFF;
+        }
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_version_and_kind_rejected() {
+        let mut good = Vec::new();
+        write_frame(&mut good, FrameKind::Hello, b"x").unwrap();
+
+        let mut bad = good.clone();
+        if let Some(b) = bad.first_mut() {
+            *b = b'X';
+        }
+        assert!(read_frame(&mut Cursor::new(bad)).is_err());
+
+        let mut bad = good.clone();
+        if let Some(b) = bad.get_mut(2) {
+            *b = 99;
+        }
+        assert!(read_frame(&mut Cursor::new(bad)).is_err());
+
+        let mut bad = good.clone();
+        if let Some(b) = bad.get_mut(3) {
+            *b = 0;
+        }
+        assert!(read_frame(&mut Cursor::new(bad)).is_err());
+    }
+
+    #[test]
+    fn oversize_length_field_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Error, b"").unwrap();
+        // Forge a 1 GiB length into the header.
+        let forged = (1u32 << 30).to_le_bytes();
+        buf.splice(4..8, forged);
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn truncated_stream_is_an_error_not_a_hang() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Contrib, &[0u8; 64]).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Byte-level wire layer shared by distributed training, checkpoint
+//! files, and the serving request path.
+//!
+//! - [`frame`] — length-prefixed `header ‖ payload` frames with magic,
+//!   version, kind, and CRC-32 integrity, over any `Read`/`Write`.
+//! - [`codec`] — little-endian encode/decode primitives and the
+//!   versioned payload codecs: `Contribution` (with optional u16/u8
+//!   sparse-gradient quantization), the worker handshake, and serving
+//!   score messages. The checkpoint readers (`CCKP`/`CCKS`) stream
+//!   through the same primitives.
+
+pub mod codec;
+pub mod frame;
+
+pub use codec::{
+    contribution_wire_len, decode_contribution, encode_contribution, Compression, ContribStats,
+    Hello, Welcome,
+};
+pub use frame::{read_frame, write_frame, FrameKind, FRAME_HEADER_LEN, MAX_FRAME_LEN};

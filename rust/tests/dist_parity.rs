@@ -1,0 +1,292 @@
+//! Distributed == sequential: the multi-process socket path
+//! (`coordinator::dist`) must reproduce the in-process seed trainer
+//! **bitwise** — same loss curve, same final params, same AUC — for
+//! every clip mode and 1/2/4 ranks with compression off (the `Contrib`
+//! and `Total` payloads are raw little-endian f32, and the fixed binary
+//! reduction tree pairs contributions identically on both paths). With
+//! u8 wire quantization + error feedback the run is no longer bitwise,
+//! but the final AUC must stay within 1e-3 of the sequential run while
+//! the sparse wire sections shrink ≥4×. A hung rank must surface as a
+//! deadline error with a clean shutdown, and the `cowclip train
+//! --ranks --spawn-workers` CLI path must work end to end as real
+//! processes.
+//!
+//! Workers here run on threads of the test process (the protocol is
+//! byte-identical to the multi-process deployment); the last test forks
+//! actual `cowclip` processes through the CLI.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{
+    coordinate, dist_worker, DistOptions, DistReport, Endpoint, Engine, TrainConfig, TrainReport,
+    Trainer,
+};
+use cowclip::data::dataset::Dataset;
+use cowclip::data::schema::criteo_synth;
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::model::ParamSet;
+use cowclip::reference::ModelKind;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::wire::codec::encode_hello;
+use cowclip::wire::{read_frame, write_frame, Compression, FrameKind, Hello};
+
+static SOCK_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Unique per-process socket path (tests in one binary run in parallel).
+fn temp_sock(tag: &str) -> PathBuf {
+    let k = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("cowclip_dp_{}_{tag}_{k}.sock", std::process::id()))
+}
+
+fn engine_for(clip: ClipMode) -> Engine {
+    Engine::reference(ModelKind::DeepFm, criteo_synth(), 8, vec![32, 32], 2, clip)
+}
+
+fn cfg_for(ranks: usize, batch: usize, epochs: f64) -> TrainConfig {
+    let preset = criteo_preset();
+    TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs,
+        workers: ranks,
+        threads: 1,
+        param_shards: 1,
+        warmup_steps: 4,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    }
+}
+
+fn data(n: usize) -> (Dataset, Dataset) {
+    let schema = criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n, seed: 19, ..Default::default() });
+    random_split(&ds, 0.9, 0)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// The in-process seed path: same config, same worker fan-out, no wire.
+fn seq_run(
+    clip: ClipMode,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> (TrainReport, ParamSet) {
+    let mut trainer = Trainer::new(engine_for(clip), cfg.clone()).unwrap();
+    let report = trainer.train(train, test).unwrap();
+    let params = trainer.store.snapshot();
+    (report, params)
+}
+
+/// One full socket run: coordinator on this thread, one worker thread
+/// per rank, all over a fresh Unix socket.
+fn dist_run(
+    clip: ClipMode,
+    cfg: &TrainConfig,
+    compress: Compression,
+    train: &Dataset,
+    test: &Dataset,
+) -> (DistReport, ParamSet) {
+    let ranks = cfg.workers;
+    let sock = temp_sock("run");
+    let opts = DistOptions {
+        ranks,
+        endpoint: Endpoint::Unix(sock.clone()),
+        compress,
+        deadline: Duration::from_secs(60),
+    };
+    let out = std::thread::scope(|s| {
+        let opts = &opts;
+        let handles: Vec<_> = (0..ranks)
+            .map(|rank| {
+                s.spawn(move || {
+                    let engine = engine_for(clip);
+                    dist_worker(&engine, cfg, train, rank, opts)
+                })
+            })
+            .collect();
+        let engine = engine_for(clip);
+        let (report, store) = coordinate(&engine, cfg, train, test, opts).unwrap();
+        for (rank, h) in handles.into_iter().enumerate() {
+            h.join()
+                .unwrap()
+                .unwrap_or_else(|e| panic!("rank {rank} failed: {e:#}"));
+        }
+        (report, store.snapshot())
+    });
+    let _ = std::fs::remove_file(&sock);
+    out
+}
+
+/// Acceptance (determinism): with compression off, 1/2/4-rank socket
+/// runs are bitwise identical to the sequential seed path for all six
+/// clip modes — loss curve, final params, and AUC.
+#[test]
+fn socket_runs_match_sequential_bitwise_all_modes() {
+    let (train, test) = data(1_500);
+    for clip in ClipMode::ALL {
+        for ranks in [1usize, 2, 4] {
+            let cfg = cfg_for(ranks, 128, 1.0);
+            let (seq_report, seq_params) = seq_run(clip, &cfg, &train, &test);
+            let (dist_report, dist_params) =
+                dist_run(clip, &cfg, Compression::None, &train, &test);
+            let tag = format!("{clip}/ranks={ranks}");
+            assert_eq!(seq_report.steps, dist_report.steps, "{tag}: step count");
+            assert_bitwise(
+                &seq_report.train_loss_curve,
+                &dist_report.train_loss_curve,
+                &format!("{tag}: loss curve"),
+            );
+            for (i, (a, b)) in seq_params.tensors.iter().zip(&dist_params.tensors).enumerate() {
+                assert_bitwise(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                    &format!("{tag}: param[{i}] ({})", seq_params.spec[i].name),
+                );
+            }
+            assert_eq!(
+                seq_report.final_auc.to_bits(),
+                dist_report.final_auc.to_bits(),
+                "{tag}: AUC {} vs {}",
+                seq_report.final_auc,
+                dist_report.final_auc
+            );
+            // Lossless wire: raw and on-wire byte counts coincide.
+            assert_eq!(
+                dist_report.stats.raw_bytes, dist_report.stats.wire_bytes,
+                "{tag}: lossless uplink must cost exactly its raw size"
+            );
+        }
+    }
+}
+
+/// Acceptance (compression): u8 quantization with error feedback keeps
+/// the final AUC within 1e-3 of the sequential run while the sparse
+/// wire sections shrink at least 4x.
+#[test]
+fn u8_compression_preserves_auc_and_compresses_4x() {
+    let (train, test) = data(6_000);
+    let cfg = cfg_for(2, 256, 2.0);
+    let clip = ClipMode::CowClip;
+    let (seq_report, _) = seq_run(clip, &cfg, &train, &test);
+    let (dist_report, _) = dist_run(clip, &cfg, Compression::U8, &train, &test);
+    assert_eq!(seq_report.steps, dist_report.steps, "step count");
+    let delta = (seq_report.final_auc - dist_report.final_auc).abs();
+    assert!(
+        delta <= 1e-3,
+        "u8 wire AUC drifted {delta:.2e} ({} vs {})",
+        seq_report.final_auc,
+        dist_report.final_auc
+    );
+    let ratio = dist_report.stats.compression_ratio();
+    assert!(ratio >= 4.0, "sparse compression ratio {ratio:.2} < 4.0");
+    assert!(
+        dist_report.stats.wire_bytes < dist_report.stats.raw_bytes,
+        "compressed uplink must beat raw ({} vs {})",
+        dist_report.stats.wire_bytes,
+        dist_report.stats.raw_bytes
+    );
+}
+
+/// Acceptance (liveness): a rank that handshakes and then goes silent
+/// surfaces as a coordinator error naming the deadline, and the hung
+/// peer is told why via an `Error` frame instead of being left hanging.
+#[test]
+fn hung_rank_surfaces_deadline_error() {
+    let (train, test) = data(1_500);
+    let cfg = cfg_for(1, 128, 1.0);
+    let sock = temp_sock("deadline");
+    let opts = DistOptions {
+        ranks: 1,
+        endpoint: Endpoint::Unix(sock.clone()),
+        compress: Compression::None,
+        deadline: Duration::from_millis(300),
+    };
+    let steps_per_epoch = train.n() / cfg.batch;
+    let total_steps = ((steps_per_epoch as f64) * cfg.epochs).round() as u64;
+    let err = std::thread::scope(|s| {
+        let (cfg, opts) = (&cfg, &opts);
+        let hung = s.spawn(move || {
+            let mut conn = opts.endpoint.connect_retry(Duration::from_secs(10)).unwrap();
+            conn.set_io_deadline(Some(Duration::from_secs(10))).unwrap();
+            let hello = Hello {
+                rank: 0,
+                ranks: 1,
+                batch: cfg.batch as u64,
+                seed: cfg.seed,
+                total_steps,
+            };
+            write_frame(&mut conn, FrameKind::Hello, &encode_hello(&hello)).unwrap();
+            let (kind, _) = read_frame(&mut conn).unwrap();
+            assert_eq!(kind, FrameKind::Welcome);
+            // Hang: never send a Contrib. The coordinator must give up
+            // at its 300 ms deadline and push the Error frame read here.
+            let (kind, _) = read_frame(&mut conn).expect("error frame after the deadline");
+            assert_eq!(kind, FrameKind::Error);
+        });
+        let engine = engine_for(ClipMode::CowClip);
+        let err = coordinate(&engine, cfg, &train, &test, opts).unwrap_err();
+        hung.join().unwrap();
+        err
+    });
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline"), "error should name the deadline: {msg}");
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// Acceptance (CLI): `train --ranks 2 --spawn-workers` forks real
+/// worker processes, trains over the Unix socket with u8 compression,
+/// and reports the result + wire traffic.
+#[test]
+fn cli_spawn_workers_end_to_end() {
+    let sock = temp_sock("cli");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cowclip"))
+        .args([
+            "train",
+            "--model",
+            "deepfm",
+            "--schema",
+            "criteo_synth",
+            "--n",
+            "2000",
+            "--batch",
+            "128",
+            "--epochs",
+            "0.25",
+            "--threads",
+            "1",
+            "--engine",
+            "reference",
+            "--ranks",
+            "2",
+            "--spawn-workers",
+            "--compress",
+            "u8",
+            "--deadline-ms",
+            "60000",
+            "--bind",
+        ])
+        .arg(format!("unix:{}", sock.display()))
+        .output()
+        .expect("running the cowclip binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "cli run failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("final test AUC"), "missing result line:\n{stdout}");
+    assert!(stdout.contains("uplink:"), "missing wire-traffic line:\n{stdout}");
+    let _ = std::fs::remove_file(&sock);
+}
