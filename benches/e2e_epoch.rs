@@ -43,6 +43,8 @@
 
 use cowclip::clip::ClipMode;
 use cowclip::coordinator::{Engine, TrainConfig, Trainer};
+use cowclip::obs::{bench_report, obj, write_json_report};
+use cowclip::util::json::Json;
 use cowclip::data::split::random_split;
 use cowclip::data::synth::{generate, SynthConfig};
 use cowclip::reference::{ModelKind, ReferenceEngine, ReferenceModel};
@@ -173,7 +175,7 @@ fn reference_sharded_apply_speedup(smoke: bool) {
 /// arenas, tree reduce, deferred-merge apply). Print-and-compare across
 /// PR builds — the parity gates guarantee the math is unchanged, so any
 /// delta here is pure systems speedup.
-fn reference_hot_path_throughput(smoke: bool) -> Vec<String> {
+fn reference_hot_path_throughput(smoke: bool) -> Vec<Json> {
     let schema = cowclip::data::schema::criteo_synth();
     let n = if smoke { 6_000 } else { 20_000 };
     let batches: &[usize] = if smoke { &[512] } else { &[512, 2048] };
@@ -194,10 +196,13 @@ fn reference_hot_path_throughput(smoke: bool) -> Vec<String> {
         let steps_s = steps as f64 / t;
         let rows_s = (steps * batch) as f64 / t;
         println!("{batch:>8} {steps:>10} {t:>10.2} {steps_s:>10.1} {rows_s:>12.0}");
-        rows.push(format!(
-            "    {{\"batch\": {batch}, \"steps\": {steps}, \"step_s\": {t:.6}, \
-             \"steps_per_s\": {steps_s:.3}, \"rows_per_s\": {rows_s:.1}}}"
-        ));
+        rows.push(obj(vec![
+            ("batch", Json::Num(batch as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("step_s", Json::Num(t)),
+            ("steps_per_s", Json::Num(steps_s)),
+            ("rows_per_s", Json::Num(rows_s)),
+        ]));
     }
     println!(
         "(compare across PR builds at fixed config: the kernel/memory tier \
@@ -207,22 +212,18 @@ fn reference_hot_path_throughput(smoke: bool) -> Vec<String> {
 }
 
 /// Machine-readable mirror of the hot-path arm, tagged with the host
-/// arch and the active SIMD kernel tier (hand-formatted JSON: the repo
-/// carries no serializer dependency).
-fn write_bench_json(smoke: bool, rows: &[String]) {
+/// arch and the active SIMD kernel tier — shares the `cowclip-bench-v1`
+/// schema (via `obs::snapshot`) with `BENCH_kernels.json` and
+/// `BENCH_dist.json`.
+fn write_bench_json(smoke: bool, rows: Vec<Json>) {
     let kernel = cowclip::reference::simd::active().name;
-    let json = format!(
-        "{{\n  \"bench\": \"e2e_epoch\",\n  \"smoke\": {},\n  \"arch\": \"{}\",\n  \
-         \"kernel\": \"{}\",\n  \"results\": [\n{}\n  ]\n}}\n",
+    let report = bench_report(
+        "e2e_epoch",
         smoke,
-        std::env::consts::ARCH,
-        kernel,
-        rows.join(",\n")
+        &[("kernel", Json::Str(kernel.to_string()))],
+        rows,
     );
-    match std::fs::write("BENCH_e2e.json", &json) {
-        Ok(()) => println!("wrote BENCH_e2e.json ({} rows)", rows.len()),
-        Err(e) => eprintln!("BENCH_e2e.json not written: {e}"),
-    }
+    write_json_report("BENCH_e2e.json", &report);
 }
 
 /// Distributed arm: 2 ranks exchanging sparse contributions over a
@@ -230,7 +231,7 @@ fn write_bench_json(smoke: bool, rows: &[String]) {
 /// process — the protocol is identical to the multi-process CLI path).
 /// Lossless vs u8-quantized uplink; the parity and AUC gates live in
 /// `rust/tests/dist_parity.rs`, this arm measures throughput + traffic.
-fn reference_distributed(smoke: bool) -> Vec<String> {
+fn reference_distributed(smoke: bool) -> Vec<Json> {
     use cowclip::coordinator::{coordinate, dist_worker, DistOptions, Endpoint};
     use cowclip::wire::Compression;
 
@@ -287,12 +288,16 @@ fn reference_distributed(smoke: bool) -> Vec<String> {
             "{:>8} {:>9} {:>8} {:>8.2} {:>12.0} {:>13} {:>6.2}x",
             batch, compress, steps, report.wall_seconds, rows_s, wire_per_step, ratio
         );
-        rows.push(format!(
-            "    {{\"ranks\": {ranks}, \"compress\": \"{compress}\", \"batch\": {batch}, \
-             \"steps\": {steps}, \"wall_s\": {:.6}, \"rows_per_s\": {rows_s:.1}, \
-             \"wire_bytes_per_step\": {wire_per_step}, \"compression_ratio\": {ratio:.3}}}",
-            report.wall_seconds
-        ));
+        rows.push(obj(vec![
+            ("ranks", Json::Num(ranks as f64)),
+            ("compress", Json::Str(compress.to_string())),
+            ("batch", Json::Num(batch as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("wall_s", Json::Num(report.wall_seconds)),
+            ("rows_per_s", Json::Num(rows_s)),
+            ("wire_bytes_per_step", Json::Num(wire_per_step as f64)),
+            ("compression_ratio", Json::Num(ratio)),
+        ]));
     }
     println!(
         "(rows/s includes the final eval; wire B/step sums both ranks' uplink \
@@ -302,19 +307,11 @@ fn reference_distributed(smoke: bool) -> Vec<String> {
     rows
 }
 
-/// Machine-readable mirror of the distributed arm (`BENCH_dist.json`).
-fn write_dist_json(smoke: bool, rows: &[String]) {
-    let json = format!(
-        "{{\n  \"bench\": \"dist_allreduce\",\n  \"smoke\": {},\n  \"arch\": \"{}\",\n  \
-         \"results\": [\n{}\n  ]\n}}\n",
-        smoke,
-        std::env::consts::ARCH,
-        rows.join(",\n")
-    );
-    match std::fs::write("BENCH_dist.json", &json) {
-        Ok(()) => println!("wrote BENCH_dist.json ({} rows)", rows.len()),
-        Err(e) => eprintln!("BENCH_dist.json not written: {e}"),
-    }
+/// Machine-readable mirror of the distributed arm (`BENCH_dist.json`),
+/// on the same shared `cowclip-bench-v1` schema.
+fn write_dist_json(smoke: bool, rows: Vec<Json>) {
+    let report = bench_report("dist_allreduce", smoke, &[], rows);
+    write_json_report("BENCH_dist.json", &report);
 }
 
 fn reference_sparse_vs_dense() {
@@ -432,8 +429,8 @@ fn main() {
         reference_threaded_speedup(true);
         reference_sharded_apply_speedup(true);
         let dist_rows = reference_distributed(true);
-        write_bench_json(true, &rows);
-        write_dist_json(true, &dist_rows);
+        write_bench_json(true, rows);
+        write_dist_json(true, dist_rows);
         return;
     }
     let rows = reference_hot_path_throughput(false);
@@ -442,6 +439,6 @@ fn main() {
     reference_sharded_apply_speedup(false);
     let dist_rows = reference_distributed(false);
     hlo_epochs();
-    write_bench_json(false, &rows);
-    write_dist_json(false, &dist_rows);
+    write_bench_json(false, rows);
+    write_dist_json(false, dist_rows);
 }

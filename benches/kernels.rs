@@ -22,11 +22,13 @@
 //! feature detection. `-- --smoke` shrinks every shape to a
 //! compile+run CI gate.
 
+use cowclip::obs::{bench_report, obj, write_json_report};
 use cowclip::reference::layers::embed_fwd;
 use cowclip::reference::linalg::naive;
 use cowclip::reference::simd::{self, scalar};
 use cowclip::serve::quant::QuantizedTable;
 use cowclip::util::bench::bench;
+use cowclip::util::json::Json;
 use cowclip::util::Rng;
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -67,16 +69,21 @@ fn cpu_features() -> Vec<&'static str> {
     out
 }
 
-/// One machine-readable result row for `BENCH_kernels.json`
-/// (hand-formatted: the repo deliberately carries no JSON dependency).
-fn rec(name: &str, tier: &str, shape: &str, ms: f64, rate: f64, unit: &str, spd: f64) -> String {
-    format!(
-        "    {{\"name\": \"{name}\", \"tier\": \"{tier}\", \"shape\": \"{shape}\", \
-         \"mean_ms\": {ms:.6}, \"{unit}\": {rate:.3}, \"speedup_vs_scalar\": {spd:.3}}}"
-    )
+/// One machine-readable result row for `BENCH_kernels.json`, built on
+/// the shared `obs::snapshot` serializer so every BENCH artifact
+/// carries the same `cowclip-bench-v1` schema.
+fn rec(name: &str, tier: &str, shape: &str, ms: f64, rate: f64, unit: &str, spd: f64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("tier", Json::Str(tier.to_string())),
+        ("shape", Json::Str(shape.to_string())),
+        ("mean_ms", Json::Num(ms)),
+        (unit, Json::Num(rate)),
+        ("speedup_vs_scalar", Json::Num(spd)),
+    ])
 }
 
-fn matmul_arm(smoke: bool, recs: &mut Vec<String>) {
+fn matmul_arm(smoke: bool, recs: &mut Vec<Json>) {
     let (b, m, n) = if smoke { (64, 48, 32) } else { (1024, 336, 128) };
     let (warm, reps) = if smoke { (1, 3) } else { (3, 15) };
     let mut rng = Rng::new(0xBE7C);
@@ -143,7 +150,7 @@ fn matmul_arm(smoke: bool, recs: &mut Vec<String>) {
     println!();
 }
 
-fn gather_arm(smoke: bool, recs: &mut Vec<String>) {
+fn gather_arm(smoke: bool, recs: &mut Vec<Json>) {
     // Criteo-synth-shaped: 26 fields, d=16, plus 13 dense features
     let (vocab, b) = if smoke { (5_000, 256) } else { (200_000, 4096) };
     let (warm, reps) = if smoke { (1, 3) } else { (3, 15) };
@@ -243,22 +250,20 @@ fn main() {
         std::env::consts::ARCH,
         features.join(" ")
     );
-    let mut recs: Vec<String> = Vec::new();
+    let mut recs: Vec<Json> = Vec::new();
     matmul_arm(smoke, &mut recs);
     gather_arm(smoke, &mut recs);
 
-    let quoted: Vec<String> = features.iter().map(|ft| format!("\"{ft}\"")).collect();
-    let json = format!(
-        "{{\n  \"bench\": \"kernels\",\n  \"smoke\": {},\n  \"arch\": \"{}\",\n  \
-         \"cpu_features\": [{}],\n  \"kernel\": \"{}\",\n  \"results\": [\n{}\n  ]\n}}\n",
+    let n_rows = recs.len();
+    let report = bench_report(
+        "kernels",
         smoke,
-        std::env::consts::ARCH,
-        quoted.join(", "),
-        k.name,
-        recs.join(",\n")
+        &[
+            ("cpu_features", Json::Arr(features.iter().map(|f| Json::Str(f.to_string())).collect())),
+            ("kernel", Json::Str(k.name.to_string())),
+        ],
+        recs,
     );
-    match std::fs::write("BENCH_kernels.json", &json) {
-        Ok(()) => println!("wrote BENCH_kernels.json ({} kernel rows)", recs.len()),
-        Err(e) => eprintln!("BENCH_kernels.json not written: {e}"),
-    }
+    write_json_report("BENCH_kernels.json", &report);
+    println!("({n_rows} kernel rows)");
 }

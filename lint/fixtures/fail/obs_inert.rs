@@ -1,0 +1,24 @@
+// Fail fixture for obs-inert: a registry registration and a snapshot
+// reachable from a hot-path root. Both allocate (name formatting,
+// registry lock) and must be hoisted to setup code.
+
+pub fn hot_root(xs: &mut [f32]) {
+    let _span = crate::obs::span(crate::obs::Phase::Forward);
+    helper(xs);
+}
+
+fn helper(xs: &mut [f32]) {
+    // registering inside the step: flagged (transitively hot)
+    let steps = crate::obs::counter("fixture.steps");
+    steps.inc();
+    for x in xs.iter_mut() {
+        *x += 1.0;
+    }
+    report();
+}
+
+fn report() {
+    // snapshotting inside the step: flagged
+    let snap = crate::obs::snapshot_metrics();
+    let _ = snap;
+}

@@ -1,0 +1,22 @@
+// Pass fixture for obs-inert: hot-path code may call the alloc-free
+// recording API (span / span_rank / tracing_on) and may use handles
+// that were registered at setup time, outside the hot call graph.
+
+pub fn hot_root(xs: &mut [f32]) {
+    let _span = crate::obs::span(crate::obs::Phase::Forward);
+    helper(xs, 0);
+}
+
+fn helper(xs: &mut [f32], rank: usize) {
+    if crate::obs::tracing_on() {
+        let _s = crate::obs::span_rank(crate::obs::Phase::Clip, rank);
+    }
+    for x in xs.iter_mut() {
+        *x += 1.0;
+    }
+}
+
+// Registration happens in setup code that the hot roots never reach.
+pub fn setup() -> std::sync::Arc<crate::obs::Counter> {
+    crate::obs::counter("fixture.steps")
+}

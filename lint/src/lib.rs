@@ -4,7 +4,7 @@
 //! suite can't police: allocation-free steady state, bit-exact
 //! determinism, panic-free request handling, and a consistent lock
 //! acquisition order. This crate enforces them structurally, as a
-//! blocking CI step, by lexing `rust/src/**` and running five rule
+//! blocking CI step, by lexing `rust/src/**` and running six rule
 //! families over the token streams:
 //!
 //! 1. **hotpath-alloc** — functions registered in `lint/hotpath.toml`
@@ -18,6 +18,10 @@
 //!    repo's known locks must stay cycle-free.
 //! 5. **unsafe-confinement** — the `unsafe` token may appear only in
 //!    the SIMD kernel modules (`reference/simd/`).
+//! 6. **obs-inert** — `obs::` calls reachable from the hot-path roots
+//!    must resolve into the alloc-free recording API only
+//!    (`span`/`span_rank`/`tracing_on`); registration and snapshot
+//!    calls belong in setup code.
 //!
 //! Line-level escape hatch: `// lint:allow(<rule-id>): <justification>`
 //! on (or just above) the offending line. The justification is
@@ -72,6 +76,10 @@ pub struct Config {
     pub index_files: Vec<String>,
     /// Path substrings of the only modules allowed to use `unsafe`.
     pub unsafe_dirs: Vec<String>,
+    /// `obs::` function names the hot path may call (the alloc-free
+    /// recording API); any other `obs::` call reachable from a root is
+    /// an `obs-inert` violation.
+    pub obs_safe: Vec<String>,
     /// The repo's known locks, for acquisition-order extraction.
     pub locks: Vec<LockSpec>,
 }
@@ -100,6 +108,7 @@ impl Config {
             ]),
             index_files: s(&["serve/queue.rs", "serve/request.rs", "wire/frame.rs"]),
             unsafe_dirs: s(&["reference/simd/"]),
+            obs_safe: s(&["span", "span_rank", "tracing_on"]),
             locks: vec![
                 LockSpec {
                     file_pat: "model/store.rs",
@@ -201,6 +210,13 @@ pub fn lint_sources(files: &[(String, String)], cfg: &Config) -> Vec<Violation> 
     ));
     violations.extend(rules::locks::run(&all_fns, &cfg.locks, &waivers_by_file));
     violations.extend(rules::unsafe_conf::run(&file_toks, &cfg.unsafe_dirs, &waivers_by_file));
+    violations.extend(rules::obs::run(
+        &all_fns,
+        &cfg.roots,
+        &cfg.allow,
+        &cfg.obs_safe,
+        &waivers_by_file,
+    ));
     violations.sort_by(|a, b| (a.rule, &a.file, a.line).cmp(&(b.rule, &b.file, b.line)));
     violations
 }

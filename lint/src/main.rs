@@ -28,7 +28,7 @@ fn main() -> ExitCode {
     };
     if violations.is_empty() {
         println!(
-            "cowclip-lint: rust/src is clean ({} hot-path roots, 5 rule families)",
+            "cowclip-lint: rust/src is clean ({} hot-path roots, 6 rule families)",
             cfg.roots.len()
         );
         return ExitCode::SUCCESS;

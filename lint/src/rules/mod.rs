@@ -1,4 +1,4 @@
-//! The five rule families.
+//! The six rule families.
 //!
 //! * [`alloc`] — hot-path allocation freedom (transitive call-graph walk
 //!   from the roots in `lint/hotpath.toml`).
@@ -10,9 +10,14 @@
 //! * [`unsafe_conf`] — the `unsafe` token confined to the SIMD kernel
 //!   modules (`reference/simd/`), mirroring the crate's
 //!   `#![deny(unsafe_code)]` + scoped-allow policy.
+//! * [`obs`] — observability inertness: `obs::` calls reachable from
+//!   the hot-path roots must resolve into the alloc-free recording API
+//!   only (`span`/`span_rank`/`tracing_on`), never registration or
+//!   snapshot paths.
 
 pub mod alloc;
 pub mod determinism;
 pub mod locks;
+pub mod obs;
 pub mod panics;
 pub mod unsafe_conf;

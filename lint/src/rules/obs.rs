@@ -1,0 +1,150 @@
+//! Rule 6: observability inertness (`obs-inert`).
+//!
+//! Instrumentation is allowed on the hot paths precisely because the
+//! recording API (`obs::span` / `obs::span_rank` / `obs::tracing_on`)
+//! is allocation-free and lock-free in steady state. Everything else in
+//! the `obs` module — registration (`obs::counter`), snapshots
+//! (`obs::snapshot_metrics`), exporters — allocates or takes the
+//! registry lock, and must stay off the hot path: register handles once
+//! at setup and pass the `Arc` in.
+//!
+//! Starting from each root in `lint/hotpath.toml`, walk the crate-local
+//! call graph (the same walk as `hotpath-alloc`) and flag any
+//! `obs::<name>` call whose `name` is not on the safe list.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::functions::{calls_of, FnDef};
+use crate::waivers::Waivers;
+use crate::Violation;
+
+fn dir_of(file: &str) -> &str {
+    file.rfind('/').map(|p| &file[..p]).unwrap_or("")
+}
+
+/// Walk the call graph from every root and report reachable
+/// non-safe-listed `obs::` calls (deduped by `(file, line, name)`).
+pub fn run(
+    fns: &[FnDef],
+    roots: &[String],
+    allow: &BTreeMap<String, String>,
+    obs_safe: &[String],
+    waivers: &BTreeMap<String, Waivers>,
+) -> Vec<Violation> {
+    let mut by_simple: HashMap<&str, Vec<usize>> = HashMap::new();
+    let mut by_qual: HashMap<String, Vec<usize>> = HashMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        if f.is_test {
+            continue;
+        }
+        by_simple.entry(&f.name).or_default().push(i);
+        by_qual.entry(f.qname()).or_default().push(i);
+    }
+
+    let resolve = |caller: &FnDef, owner: Option<&str>, name: &str| -> Vec<usize> {
+        if let Some(o) = owner {
+            return by_qual.get(&format!("{o}::{name}")).cloned().unwrap_or_default();
+        }
+        let cand = by_simple.get(name).cloned().unwrap_or_default();
+        if cand.len() > 1 {
+            let ckey = caller.key();
+            let same_file: Vec<usize> = cand
+                .iter()
+                .copied()
+                .filter(|&i| fns[i].file == caller.file && fns[i].key() != ckey)
+                .collect();
+            if !same_file.is_empty() {
+                return same_file;
+            }
+            let cdir = dir_of(&caller.file);
+            let same_dir: Vec<usize> = cand
+                .iter()
+                .copied()
+                .filter(|&i| dir_of(&fns[i].file) == cdir && fns[i].key() != ckey)
+                .collect();
+            if !same_dir.is_empty() {
+                return same_dir;
+            }
+        }
+        cand
+    };
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut reported: HashSet<(String, usize, String)> = HashSet::new();
+    for rootspec in roots {
+        // Malformed or missing roots are already reported by the alloc
+        // rule, which shares this manifest — stay quiet here.
+        let Some((rfile, rq)) = rootspec.split_once(':') else {
+            continue;
+        };
+        let Some(root) = fns
+            .iter()
+            .position(|f| f.file.ends_with(rfile) && f.qname() == rq && !f.is_test)
+        else {
+            continue;
+        };
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut stack: Vec<(usize, Vec<String>)> = vec![(root, vec![fns[root].qname()])];
+        while let Some((fi, chain)) = stack.pop() {
+            let f = &fns[fi];
+            if !seen.insert(f.key()) {
+                continue;
+            }
+            let w = waivers.get(&f.file);
+            for call in calls_of(&f.body) {
+                if call.is_macro {
+                    continue;
+                }
+                // The inertness check itself: any obs:: call reachable
+                // from a root must be on the alloc-free recording API.
+                if call.owner.as_deref() == Some("obs")
+                    && !obs_safe.iter().any(|s| s == &call.name)
+                {
+                    if w.is_some_and(|w| w.covers("obs-inert", call.line)) {
+                        continue;
+                    }
+                    let key = (f.file.clone(), call.line, call.name.clone());
+                    if !reported.insert(key) {
+                        continue;
+                    }
+                    let via = if chain.len() == 1 {
+                        String::new()
+                    } else {
+                        format!(" (hot via {})", chain.join(" -> "))
+                    };
+                    violations.push(Violation {
+                        rule: "obs-inert",
+                        file: f.file.clone(),
+                        line: call.line,
+                        msg: format!(
+                            "obs::{} in hot-path fn {}{via}: only the alloc-free recording \
+                             API ({}) may run here — register handles at setup",
+                            call.name,
+                            f.qname(),
+                            obs_safe.join("/"),
+                        ),
+                    });
+                    continue;
+                }
+                let qual = call.owner.as_ref().map(|o| format!("{o}::{}", call.name));
+                if allow.contains_key(&call.name)
+                    || qual.as_ref().is_some_and(|q| allow.contains_key(q))
+                {
+                    continue;
+                }
+                for ci in resolve(f, call.owner.as_deref(), &call.name) {
+                    let callee = &fns[ci];
+                    if allow.contains_key(&callee.qname()) || allow.contains_key(&callee.name) {
+                        continue;
+                    }
+                    if !seen.contains(&callee.key()) {
+                        let mut chain2 = chain.clone();
+                        chain2.push(callee.qname());
+                        stack.push((ci, chain2));
+                    }
+                }
+            }
+        }
+    }
+    violations
+}

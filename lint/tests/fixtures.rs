@@ -115,6 +115,26 @@ fn unsafe_confinement_fail_outside_simd_tree() {
 }
 
 #[test]
+fn obs_inert_pass() {
+    let cfg = hotpath_cfg(&["hot/case.rs:hot_root"]);
+    let vs = run_one("hot/case.rs", "pass/obs_inert.rs", &cfg);
+    assert!(vs.is_empty(), "expected clean, got: {vs:?}");
+}
+
+#[test]
+fn obs_inert_fail_flags_registration_and_snapshot() {
+    let cfg = hotpath_cfg(&["hot/case.rs:hot_root"]);
+    let vs = run_one("hot/case.rs", "fail/obs_inert.rs", &cfg);
+    assert!(!vs.is_empty(), "obs registration in the hot graph must be flagged");
+    assert!(vs.iter().all(|v| v.rule == "obs-inert"), "{vs:?}");
+    assert!(
+        vs.iter().any(|v| v.msg.contains("obs::counter") && v.msg.contains("hot via")),
+        "wanted the transitive counter registration with its chain in {vs:?}"
+    );
+    assert!(vs.iter().any(|v| v.msg.contains("obs::snapshot_metrics")), "{vs:?}");
+}
+
+#[test]
 fn waiver_without_justification_is_flagged() {
     let vs =
         run_one("hot/case.rs", "fail/waiver_missing_justification.rs", &Config::repo_policy());

@@ -65,6 +65,11 @@ USAGE:
                      (print format/step/per-table sizes of a CCKP/CCKS
                       file; --model+--schema resolve tensor shapes)
   cowclip experiment <id|all|quick> [--n N] [--epochs E] [--seed S] [--out DIR]
+  cowclip metrics    (--connect SPEC | --validate-trace FILE |
+                      --validate-jsonl FILE) [--timeout-ms T]
+                     (one-shot metrics pull from a live `train --ranks
+                      --metrics-bind SPEC` coordinator, or CI-style
+                      validation of --trace / --metrics-out artifacts)
   cowclip artifacts  check
   cowclip help
 
@@ -74,6 +79,13 @@ Experiments: fig1 fig3 fig4 fig5 fig7_8 table2 table3 table4 table5 table6
 Kernels: --kernel auto|scalar|avx2|neon (any command; or COWCLIP_KERNEL=...)
          pins the SIMD dispatch tier — 'scalar' forces the portable blocked
          kernels, 'auto' (default) picks the widest tier the host supports.
+
+Observability (train, train --ranks, serve):
+         --trace FILE writes a chrome://tracing JSON of step-phase spans;
+         --metrics-out FILE [--metrics-interval MS] streams periodic JSONL
+         registry snapshots (schema cowclip-metrics-v1); serve --prom dumps
+         Prometheus-style text at shutdown; train --ranks --metrics-bind
+         SPEC answers live `cowclip metrics --connect SPEC` pulls.
 ";
 
 /// Entry point used by `main`.
@@ -94,6 +106,7 @@ pub fn dispatch(args: Args) -> Result<()> {
         Some("serve") => serve_cmd(&args),
         Some("inspect") => inspect_cmd(&args),
         Some("experiment") => experiment_cmd(&args),
+        Some("metrics") => metrics_cmd(&args),
         Some("artifacts") => artifacts_cmd(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -122,6 +135,114 @@ fn open_runtime() -> Result<Arc<Runtime>> {
     Ok(Arc::new(Runtime::new(&dir).with_context(|| {
         format!("opening artifacts at {} — run `make artifacts` first", dir.display())
     })?))
+}
+
+/// Observability surface shared by `train`, `train --ranks` and
+/// `serve`: `--trace FILE` turns on span tracing for the run and
+/// exports a chrome://tracing JSON at the end; `--metrics-out FILE`
+/// (with optional `--metrics-interval MS`, default 1000) streams
+/// periodic JSONL registry snapshots.
+struct ObsSession {
+    trace: Option<PathBuf>,
+    snapshots: Option<crate::obs::SnapshotWriter>,
+}
+
+fn obs_start(args: &Args) -> Result<ObsSession> {
+    let trace = args.get("trace").map(PathBuf::from);
+    if trace.is_some() {
+        crate::obs::reset_spans();
+        crate::obs::set_tracing(true);
+    }
+    // `--metrics-interval` without `--metrics-out` still snapshots, to a
+    // default file next to the run.
+    let out = match (args.get("metrics-out"), args.has("metrics-interval")) {
+        (Some(p), _) => Some(p.to_string()),
+        (None, true) => Some("metrics.jsonl".to_string()),
+        (None, false) => None,
+    };
+    let snapshots = match out {
+        Some(path) => {
+            let interval = Duration::from_millis(args.u64_or("metrics-interval", 1000)?.max(1));
+            Some(crate::obs::SnapshotWriter::spawn(Path::new(&path), interval)?)
+        }
+        None => None,
+    };
+    Ok(ObsSession { trace, snapshots })
+}
+
+impl ObsSession {
+    fn finish(self) -> Result<()> {
+        if let Some(path) = &self.trace {
+            crate::obs::set_tracing(false);
+            crate::obs::export_chrome(path)?;
+            println!("wrote {}", path.display());
+        }
+        if let Some(w) = self.snapshots {
+            let lines = w.finish()?;
+            println!("wrote {lines} metrics snapshot lines");
+        }
+        Ok(())
+    }
+}
+
+/// `cowclip metrics`: live one-shot pull over the wire frame protocol
+/// (`--connect`), or offline validation of the observability artifacts
+/// a traced run produced (`--validate-trace` / `--validate-jsonl`) —
+/// the latter is what CI runs against the smoke-test outputs.
+fn metrics_cmd(args: &Args) -> Result<()> {
+    use crate::util::json::Json;
+
+    let mut did_something = false;
+    if let Some(spec) = args.get("connect") {
+        let endpoint: Endpoint = spec.parse()?;
+        let timeout = Duration::from_millis(args.u64_or("timeout-ms", 5000)?.max(1));
+        let body = crate::obs::fetch_metrics(&endpoint, timeout)?;
+        println!("{body}");
+        did_something = true;
+    }
+    if let Some(path) = args.get("validate-trace") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path}"))?;
+        let v = Json::parse(&text).with_context(|| format!("{path}: not valid JSON"))?;
+        let events = v.get("traceEvents")?.as_arr()?;
+        ensure!(!events.is_empty(), "{path}: trace has no events");
+        let known: Vec<&str> = crate::obs::Phase::ALL.iter().map(|p| p.name()).collect();
+        let mut phases = std::collections::BTreeSet::new();
+        for e in events {
+            let name = e.get("name")?.as_str()?;
+            ensure!(known.contains(&name), "{path}: unknown phase {name:?} in trace");
+            ensure!(e.get("ph")?.as_str()? == "X", "{path}: expected complete ('X') events");
+            phases.insert(name.to_string());
+        }
+        println!("{path}: valid chrome trace, {} events, phases {:?}", events.len(), phases);
+        did_something = true;
+    }
+    if let Some(path) = args.get("validate-jsonl") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading snapshots {path}"))?;
+        let mut lines = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).with_context(|| format!("{path}:{}: bad JSON", i + 1))?;
+            ensure!(
+                v.get("schema")?.as_str()? == "cowclip-metrics-v1",
+                "{path}:{}: wrong schema",
+                i + 1
+            );
+            v.get("metrics")?.get("counters")?.as_obj()?;
+            lines += 1;
+        }
+        ensure!(lines > 0, "{path}: no snapshot lines");
+        println!("{path}: {lines} valid cowclip-metrics-v1 snapshot lines");
+        did_something = true;
+    }
+    ensure!(
+        did_something,
+        "usage: cowclip metrics (--connect SPEC | --validate-trace FILE | --validate-jsonl FILE)"
+    );
+    Ok(())
 }
 
 fn data_cmd(args: &Args) -> Result<()> {
@@ -282,7 +403,9 @@ fn train_cmd(args: &Args) -> Result<()> {
         trainer.resume_from(Path::new(ckpt))?;
         println!("resumed from {ckpt} at step {}", trainer.step());
     }
+    let obs = obs_start(args)?;
     let report = trainer.train(&train, &test)?;
+    obs.finish()?;
 
     println!("\n== result ==");
     println!("steps: {}   wall: {:.1}s", report.steps, report.wall_seconds);
@@ -348,6 +471,15 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
         s.steps_per_epoch
     );
 
+    let obs = obs_start(args)?;
+    // Baseline for the per-rank wire counters: the registry is
+    // process-global, so deltas (not absolutes) describe this run.
+    let before = crate::obs::snapshot_metrics();
+    if let Some(spec) = args.get("metrics-bind") {
+        let ep: Endpoint = spec.parse()?;
+        crate::obs::serve_metrics(&ep)?;
+        println!("metrics exposition at {ep} (pull with `cowclip metrics --connect {ep}`)");
+    }
     let children =
         if args.has("spawn-workers") { spawn_workers(args, ranks, &opts)? } else { Vec::new() };
     let run = coordinate(&s.engine, &s.cfg, &s.train, &s.test, &opts);
@@ -379,6 +511,16 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
         report.stats.compression_ratio()
     );
     println!("  broadcast: {:.1} MiB (lossless totals)", mib(report.stats.bcast_bytes));
+    // Per-rank wire traffic from the metrics registry — same counters a
+    // live `cowclip metrics --connect` pull reads; their sum matches
+    // the uplink/broadcast totals above by construction.
+    let after = crate::obs::snapshot_metrics();
+    for rank in 0..ranks {
+        let delta = |name: &str| after.counter(name).saturating_sub(before.counter(name));
+        let rx = delta(&format!("dist.rank{rank}.rx_bytes"));
+        let tx = delta(&format!("dist.rank{rank}.tx_bytes"));
+        println!("  rank {rank}: {:.1} MiB up, {:.1} MiB down", mib(rx), mib(tx));
+    }
     println!(
         "final test AUC {:.4}%  logloss {:.4}",
         report.final_auc * 100.0,
@@ -388,6 +530,7 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
         store.save_checkpoint(Path::new(path), report.steps as u64)?;
         println!("checkpoint saved to {path} (params + moments + step {})", report.steps);
     }
+    obs.finish()?;
     Ok(())
 }
 
@@ -569,6 +712,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         cfg.max_delay.as_micros(),
         cfg.threads
     );
+    let obs = obs_start(args)?;
     let server = Server::start(Arc::clone(&frozen), cfg);
     let client = server.client();
 
@@ -628,6 +772,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
     println!("  QPS           {:>10.0}", stats.qps());
     println!("  micro-batches {:>10}   (mean size {:.1})", stats.batches, stats.mean_batch());
     println!("  latency ms    p50 {p50:>8.3}   p90 {p90:>8.3}   p99 {p99:>8.3}   mean {mean:>8.3}");
+    if args.has("prom") {
+        println!("\n== metrics (prometheus text) ==");
+        print!("{}", crate::obs::prometheus_text());
+    }
+    obs.finish()?;
     Ok(())
 }
 

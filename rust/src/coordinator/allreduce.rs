@@ -65,6 +65,17 @@ pub struct ReduceStats {
     pub workers: usize,
 }
 
+impl ReduceStats {
+    /// Fold one step's stats into a running total (the trainer's
+    /// end-of-run summary; `workers` is a property, not a sum).
+    pub fn accumulate(&mut self, step: &ReduceStats) {
+        self.rounds += step.rounds;
+        self.bytes_moved += step.bytes_moved;
+        self.wire_bytes += step.wire_bytes;
+        self.workers = step.workers;
+    }
+}
+
 /// A finished reduction: either the full total, or the root's two
 /// subtree totals with their merge deferred into the apply stage.
 pub enum Reduced {
@@ -100,6 +111,7 @@ impl Reduced {
 /// transfer of `src`: raw sparse payload bytes vs the framed
 /// uncompressed wire encoding ([`contribution_wire_len`]).
 fn merge(dst: &mut Contribution, src: &Contribution) -> Result<(u64, u64)> {
+    let _span = crate::obs::span(crate::obs::Phase::Reduce);
     ensure!(dst.grads.len() == src.grads.len(), "grad arity mismatch");
     let wire = FRAME_HEADER_LEN as u64 + contribution_wire_len(src);
     let mut bytes = 0u64;

@@ -277,11 +277,34 @@ fn run_steps(
     stats: &mut DistStats,
 ) -> Result<()> {
     let header = FRAME_HEADER_LEN as u64;
+    // Registered once per run, before the step loop: per-rank wire-byte
+    // counters are bumped with the exact same quantities as the
+    // `DistStats` fields below, so the per-rank totals always sum to the
+    // run summary's byte accounting.
+    let m_rx: Vec<_> = (0..conns.len())
+        .map(|r| crate::obs::counter(&format!("dist.rank{r}.rx_bytes")))
+        .collect();
+    let m_tx: Vec<_> = (0..conns.len())
+        .map(|r| crate::obs::counter(&format!("dist.rank{r}.tx_bytes")))
+        .collect();
+    let m_steps = crate::obs::counter("dist.steps");
+    let m_raw = crate::obs::counter("dist.raw_bytes");
+    let m_wire = crate::obs::counter("dist.wire_bytes");
+    let m_bcast = crate::obs::counter("dist.bcast_bytes");
+    let m_deadline = crate::obs::counter("dist.deadline_errors");
+    let m_ratio = crate::obs::gauge("dist.compression_ratio");
     for step in 1..=total_steps {
         let hv = hypers_for_step(hypers, warmup, step as usize);
         let mut reducer = TreeReducer::new(conns.len());
         for (rank, conn) in conns.iter_mut().enumerate() {
-            let (kind, payload) = read_frame(conn).with_context(|| {
+            let read = {
+                let _rx = crate::obs::span_rank(crate::obs::Phase::WireRx, rank);
+                read_frame(conn)
+            };
+            if read.is_err() {
+                m_deadline.inc();
+            }
+            let (kind, payload) = read.with_context(|| {
                 format!(
                     "dist: rank {rank} missed the io deadline ({:?}) at step {step}",
                     opts.deadline
@@ -301,6 +324,11 @@ fn run_steps(
             stats.wire_bytes += header + cstats.wire_bytes;
             stats.sparse_raw_bytes += cstats.sparse_raw;
             stats.sparse_wire_bytes += cstats.sparse_wire;
+            m_raw.add(header + cstats.raw_bytes);
+            m_wire.add(header + cstats.wire_bytes);
+            if let Some(ctr) = m_rx.get(rank) {
+                ctr.add(header + cstats.wire_bytes);
+            }
             reducer.push(rank, c)?;
         }
         let (total, _) = reducer.finish()?;
@@ -308,14 +336,21 @@ fn run_steps(
         // every replica then applies identical bytes, so the stores
         // stay bitwise in sync even with lossy uplink compression.
         let (payload, _) = encode_contribution(&total, Compression::None)?;
-        for conn in conns.iter_mut() {
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            let _tx = crate::obs::span_rank(crate::obs::Phase::WireTx, rank);
             write_frame(conn, FrameKind::Total, &payload)
                 .with_context(|| format!("dist: broadcast total at step {step}"))?;
+            if let Some(ctr) = m_tx.get(rank) {
+                ctr.add(header + payload.len() as u64);
+            }
         }
         stats.bcast_bytes += (header + payload.len() as u64) * conns.len() as u64;
+        m_bcast.add((header + payload.len() as u64) * conns.len() as u64);
         let loss = apply_contribution(engine, store, cfg, &hv, Reduced::Whole(total))?;
         loss_curve.push(loss);
         stats.steps = step as usize;
+        m_steps.inc();
+        m_ratio.set(stats.compression_ratio());
     }
     Ok(())
 }
@@ -389,6 +424,8 @@ fn worker_loop(
     let mut batcher = Batcher::new(train, cfg.batch, cfg.seed ^ 0x5eed);
     let mut scratch = Scratch::new();
     let mut ef = ErrorFeedback::default();
+    let m_stalls = crate::obs::counter("dist.stalls");
+    let m_ef = crate::obs::gauge("dist.ef_residual");
 
     for step in 1..=total_steps {
         let batch = batcher.next_batch();
@@ -403,10 +440,21 @@ fn worker_loop(
         ef.fold_in(&mut c.grads);
         let (payload, _) = encode_contribution(&c, compress)?;
         ef.absorb(&c.grads, compress);
-        write_frame(&mut conn, FrameKind::Contrib, &payload)
-            .with_context(|| format!("dist: rank {rank} send contribution at step {step}"))?;
+        m_ef.set(ef.residual_l1());
+        {
+            let _tx = crate::obs::span_rank(crate::obs::Phase::WireTx, rank);
+            write_frame(&mut conn, FrameKind::Contrib, &payload)
+                .with_context(|| format!("dist: rank {rank} send contribution at step {step}"))?;
+        }
 
-        let (kind, payload) = read_frame(&mut conn).with_context(|| {
+        let read = {
+            let _rx = crate::obs::span_rank(crate::obs::Phase::WireRx, rank);
+            read_frame(&mut conn)
+        };
+        if read.is_err() {
+            m_stalls.inc();
+        }
+        let (kind, payload) = read.with_context(|| {
             format!(
                 "dist: rank {rank} waiting for the reduced total at step {step} \
                  (io deadline {:?})",
@@ -485,6 +533,20 @@ impl ErrorFeedback {
                 }
             }
         }
+    }
+
+    /// Total pending-residual L1 mass — the `dist.ef_residual` gauge.
+    /// Maps are `BTreeMap`s, so the accumulation order is deterministic.
+    fn residual_l1(&self) -> f64 {
+        let mut total = 0.0f64;
+        for map in &self.residuals {
+            for row in map.values() {
+                for &v in row {
+                    total += v.abs() as f64;
+                }
+            }
+        }
+        total
     }
 
     /// Record the rounding error the wire just introduced for every

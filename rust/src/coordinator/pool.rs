@@ -58,8 +58,11 @@ impl StepPool {
     ) -> StepPool {
         let (tx, rx) = channel::<GradJob>();
         let rx = Arc::new(Mutex::new(rx));
+        // registered once at pool creation; each job is one relaxed bump
+        let jobs_done = crate::obs::counter("pool.jobs");
         for _ in 0..threads.max(1) {
             let rx = Arc::clone(&rx);
+            let jobs_done = Arc::clone(&jobs_done);
             scope.spawn(move || {
                 // one scratch arena per worker thread, alive for the
                 // whole run: after the first job its buffers reach
@@ -78,6 +81,7 @@ impl StepPool {
                         WorkerShard::new(job.rank, job.world)
                             .compute(engine, &guard, &job.batch, &mut scratch)
                     };
+                    jobs_done.inc();
                     // a dropped reply receiver just means the leader
                     // already failed this step; keep serving the queue
                     let _ = job.reply.send((job.rank, contribution));

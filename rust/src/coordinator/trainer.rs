@@ -517,6 +517,7 @@ pub(crate) fn evaluate_with(
     cfg: &TrainConfig,
     ds: &Dataset,
 ) -> Result<(f64, f64)> {
+    let _eval = crate::obs::span(crate::obs::Phase::Eval);
     // HLO fwd artifacts are shape-specialized: always use their exact
     // batch (EvalBatcher pads small datasets up to it); the reference
     // engine takes whatever fits.
@@ -590,13 +591,26 @@ fn run_loop(
 ) -> Result<TrainReport> {
     let defer = wants_deferred_merge(engine);
     let mut sw = Stopwatch::new();
-    let mut grad_secs = 0.0f64;
-    let mut apply_secs = 0.0f64;
     let mut loss_curve = Vec::with_capacity(total_steps);
     let mut epoch_evals = Vec::new();
     let mut reduce_total = ReduceStats::default();
     let mut epoch_loss = LossMeter::new();
     let mut diverged = false;
+
+    // Registry handles, registered once per run: the step loop below
+    // publishes grad/apply time and reduce traffic straight into the
+    // metrics registry, and the end-of-run `grad`/`apply` phase totals
+    // are read back as counter deltas — one source of truth instead of
+    // loose local accumulators.
+    let m_steps = crate::obs::counter("train.steps");
+    let m_grad_ns = crate::obs::counter("train.grad_ns");
+    let m_apply_ns = crate::obs::counter("train.apply_ns");
+    let m_loss = crate::obs::gauge("train.loss");
+    let m_rounds = crate::obs::counter("reduce.rounds");
+    let m_raw = crate::obs::counter("reduce.bytes_moved");
+    let m_wire = crate::obs::counter("reduce.wire_bytes");
+    let grad_ns0 = m_grad_ns.get();
+    let apply_ns0 = m_apply_ns.get();
 
     for s in 1..=total_steps {
         sw.start("data");
@@ -609,15 +623,17 @@ fn run_loop(
             Some(pool) => fan_out_pool(pool, cfg.workers, &batch, defer)?,
             None => fan_out_inline(engine, store, cfg, &batch, defer, scratches)?,
         };
-        grad_secs += t_grad.elapsed().as_secs_f64();
+        m_grad_ns.add(t_grad.elapsed().as_nanos() as u64);
         let t_apply = Instant::now();
         let loss = apply_contribution(engine, store, cfg, &hv, total)?;
-        apply_secs += t_apply.elapsed().as_secs_f64();
+        m_apply_ns.add(t_apply.elapsed().as_nanos() as u64);
         sw.stop();
-        reduce_total.rounds += rstats.rounds;
-        reduce_total.bytes_moved += rstats.bytes_moved;
-        reduce_total.wire_bytes += rstats.wire_bytes;
-        reduce_total.workers = rstats.workers;
+        reduce_total.accumulate(&rstats);
+        m_steps.inc();
+        m_loss.set(loss as f64);
+        m_rounds.add(rstats.rounds as u64);
+        m_raw.add(rstats.bytes_moved);
+        m_wire.add(rstats.wire_bytes);
         loss_curve.push(loss);
         epoch_loss.update(loss as f64);
         if !loss.is_finite() {
@@ -665,8 +681,14 @@ fn run_loop(
         .into_iter()
         .map(|(n, d)| (n, d.as_secs_f64()))
         .collect();
-    phase_seconds.push(("grad".to_string(), grad_secs));
-    phase_seconds.push(("apply".to_string(), apply_secs));
+    phase_seconds.push((
+        "grad".to_string(),
+        (m_grad_ns.get() - grad_ns0) as f64 / 1e9,
+    ));
+    phase_seconds.push((
+        "apply".to_string(),
+        (m_apply_ns.get() - apply_ns0) as f64 / 1e9,
+    ));
 
     Ok(TrainReport {
         steps: loss_curve.len(),

@@ -41,9 +41,23 @@ impl<T: Send> Prefetch<T> {
         T: 'scope,
     {
         let (tx, rx) = sync_channel(depth.max(1));
-        let it = source.into_iter();
+        let mut it = source.into_iter();
         scope.spawn(move || {
-            for item in it {
+            // registered once per producer thread; the per-item path
+            // below is a span guard + one relaxed counter bump
+            let produced = crate::obs::counter("prefetch.batches");
+            loop {
+                let item = {
+                    // the span covers the source's materialization work
+                    // (batch assembly + touched-id sort), not the
+                    // channel wait
+                    let _s = crate::obs::span(crate::obs::Phase::Prefetch);
+                    it.next()
+                };
+                let Some(item) = item else {
+                    break; // source exhausted
+                };
+                produced.inc();
                 if tx.send(item).is_err() {
                     break; // consumer dropped the Prefetch
                 }

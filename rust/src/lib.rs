@@ -171,12 +171,45 @@
 //! `codegen-units = 1` so the scalar tier still inlines across module
 //! boundaries.
 //!
+//! ## Observability
+//!
+//! The [`obs`] subsystem unifies telemetry across train/dist/serve with
+//! zero dependencies and a hard **inertness contract**: observability
+//! reads the clock and writes to obs-private atomics only, so every
+//! parity suite (parallel/shard/serve/dist/kernel) passes
+//! bitwise-unchanged with tracing and metrics enabled
+//! (`rust/tests/obs_parity.rs`), and steady-state recording is
+//! allocation-free and lock-free.
+//!
+//! * **Span tracing** ([`obs::span`](mod@obs::span)) — preallocated
+//!   per-thread ring buffers record the step-phase taxonomy
+//!   (`prefetch`, `gather`, `forward`, `backward`, `clip`, `reduce`,
+//!   `wire-tx`, `wire-rx`, `apply`, `eval`, `serve-score`) with
+//!   thread + rank attribution; `--trace <path>` exports a
+//!   chrome://tracing-compatible JSON timeline. With tracing off a span
+//!   call site costs one relaxed atomic load.
+//! * **Metrics registry** ([`obs::registry`]) — fixed-slot atomic
+//!   counters, gauges and histograms (the serve histogram's bucket
+//!   math, generalized into [`obs::hist`]), registered once at startup;
+//!   hot-path updates are single relaxed atomic operations. The trainer
+//!   step loop, `StepPool`, `Prefetch`, the reducers, the dist
+//!   coordinator (per-rank wire bytes, compression ratio, EF residual,
+//!   deadline/stall counters) and the serve queue all publish here.
+//! * **Exposition** ([`obs::snapshot`], [`obs::expose`]) — periodic
+//!   JSONL snapshots (`--metrics-interval`, schema
+//!   `cowclip-metrics-v1`), a Prometheus-style text dump at serve
+//!   shutdown, and `cowclip metrics --connect <ep>` for a live one-shot
+//!   pull over the wire `MetricsReq`/`Metrics` frames
+//!   (`--metrics-bind`). The benches share the same serializer:
+//!   `BENCH_kernels.json` / `BENCH_e2e.json` / `BENCH_dist.json` all
+//!   carry the `cowclip-bench-v1` schema.
+//!
 //! ## Enforced invariants
 //!
 //! The promises above are policed structurally by `cowclip-lint` (the
 //! `lint/` workspace member), a dependency-free static analysis pass
 //! that runs blocking in CI (`cargo run -p cowclip-lint`, tests via
-//! `cargo test -p cowclip-lint`). Five rule families over `rust/src`:
+//! `cargo test -p cowclip-lint`). Six rule families over `rust/src`:
 //!
 //! 1. **hotpath-alloc** — the hot-path roots registered in
 //!    `lint/hotpath.toml` (training forward/backward, clip, lazy Adam,
@@ -196,6 +229,11 @@
 //! 5. **unsafe-confinement** — the token `unsafe` may appear only under
 //!    `reference/simd/` (the intrinsics microkernels); everywhere else
 //!    it is a lint violation, mirroring the compiler-level policy below.
+//! 6. **obs-inert** — obs calls reachable from the hot-path roots must
+//!    resolve only into the alloc-free recording API
+//!    (`obs::span` / `obs::span_rank` / `obs::tracing_on`); metric
+//!    registration, snapshotting and export are flagged if they leak
+//!    into a hot path.
 //!
 //! Escape hatch, per line and audited: a trailing or preceding comment
 //! `lint:allow(<rule-id>): <justification>` — the justification is
@@ -241,6 +279,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod reference;
 pub mod runtime;

@@ -1,9 +1,15 @@
 //! Streaming metric accumulators used by the trainer, the evaluators and
-//! the online serving tier (latency histogram + QPS meter).
-
-use std::time::Instant;
+//! the online serving tier.
+//!
+//! The latency histogram and QPS meter moved to [`crate::obs::hist`]
+//! (one bucket-math implementation shared with the lock-free
+//! [`crate::obs::registry::AtomicHistogram`]); `LatencyHistogram` and
+//! `QpsMeter` stay re-exported here so the serving API is unchanged,
+//! and their edge-case tests stay in this module as the behavioral pin.
 
 use super::{auc, logloss_from_logits};
+
+pub use crate::obs::hist::{Histogram as LatencyHistogram, QpsMeter};
 
 /// Running mean of per-step training loss.
 #[derive(Clone, Debug, Default)]
@@ -73,177 +79,6 @@ impl EvalAccumulator {
     }
 }
 
-/// Number of latency buckets (fixed so histograms merge trivially).
-const LAT_BUCKETS: usize = 64;
-/// First bucket upper bound in milliseconds (1 µs).
-const LAT_BASE_MS: f64 = 1e-3;
-/// Geometric bucket growth; 64 buckets cover ~1 µs to ~15 s.
-const LAT_RATIO: f64 = 1.3;
-
-/// Fixed-bucket latency histogram with log-spaced bounds.
-///
-/// Bucket `i` covers `(base·r^(i-1), base·r^i]` milliseconds, with the
-/// last bucket absorbing everything larger, so recording is O(1), the
-/// memory footprint is constant, and two histograms (e.g. per scoring
-/// thread) merge by adding counts. Percentiles interpolate linearly
-/// inside the winning bucket and are clamped to the observed
-/// `[min, max]`, which makes the empty (0.0), single-sample and
-/// all-equal cases exact.
-#[derive(Clone, Debug)]
-pub struct LatencyHistogram {
-    counts: [u64; LAT_BUCKETS],
-    n: u64,
-    sum_ms: f64,
-    min_ms: f64,
-    max_ms: f64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram {
-            counts: [0; LAT_BUCKETS],
-            n: 0,
-            sum_ms: 0.0,
-            min_ms: f64::INFINITY,
-            max_ms: 0.0,
-        }
-    }
-}
-
-impl LatencyHistogram {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Upper bound of bucket `i` in milliseconds.
-    fn bound(i: usize) -> f64 {
-        LAT_BASE_MS * LAT_RATIO.powi(i as i32)
-    }
-
-    fn bucket_of(ms: f64) -> usize {
-        if ms <= LAT_BASE_MS {
-            return 0;
-        }
-        let i = ((ms / LAT_BASE_MS).ln() / LAT_RATIO.ln()).ceil() as usize;
-        i.min(LAT_BUCKETS - 1)
-    }
-
-    /// Record one latency sample in milliseconds (negatives clamp to 0).
-    pub fn record(&mut self, ms: f64) {
-        let ms = ms.max(0.0);
-        self.counts[Self::bucket_of(ms)] += 1;
-        self.n += 1;
-        self.sum_ms += ms;
-        self.min_ms = self.min_ms.min(ms);
-        self.max_ms = self.max_ms.max(ms);
-    }
-
-    /// Fold another histogram into this one.
-    pub fn merge(&mut self, other: &LatencyHistogram) {
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
-        }
-        self.n += other.n;
-        self.sum_ms += other.sum_ms;
-        self.min_ms = self.min_ms.min(other.min_ms);
-        self.max_ms = self.max_ms.max(other.max_ms);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.n
-    }
-
-    pub fn mean_ms(&self) -> f64 {
-        if self.n == 0 {
-            0.0
-        } else {
-            self.sum_ms / self.n as f64
-        }
-    }
-
-    pub fn max_ms(&self) -> f64 {
-        if self.n == 0 {
-            0.0
-        } else {
-            self.max_ms
-        }
-    }
-
-    /// Percentile `p` in `[0, 100]` in milliseconds (0.0 when empty).
-    /// Resolution is one bucket (~±15%); exact for single-sample and
-    /// all-equal inputs thanks to the `[min, max]` clamp.
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.n == 0 {
-            return 0.0;
-        }
-        let target = (p.clamp(0.0, 100.0) / 100.0) * self.n as f64;
-        let mut seen = 0u64;
-        for (i, &c) in self.counts.iter().enumerate() {
-            if c == 0 {
-                continue;
-            }
-            let next = seen + c;
-            if (next as f64) >= target {
-                let lo = if i == 0 { 0.0 } else { Self::bound(i - 1) };
-                // the last bucket is unbounded above: close it with the
-                // observed max so p100 reports the true extreme
-                let hi = if i == LAT_BUCKETS - 1 { self.max_ms } else { Self::bound(i) };
-                let frac = ((target - seen as f64) / c as f64).clamp(0.0, 1.0);
-                return (lo + frac * (hi - lo)).clamp(self.min_ms, self.max_ms);
-            }
-            seen = next;
-        }
-        self.max_ms
-    }
-
-    /// `(p50, p90, p99, mean)` in milliseconds — the serving report row.
-    pub fn summary(&self) -> (f64, f64, f64, f64) {
-        (self.percentile(50.0), self.percentile(90.0), self.percentile(99.0), self.mean_ms())
-    }
-}
-
-/// Wall-clock throughput meter: count events, read events/second.
-#[derive(Clone, Debug)]
-pub struct QpsMeter {
-    started: Instant,
-    n: u64,
-}
-
-impl Default for QpsMeter {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl QpsMeter {
-    pub fn new() -> Self {
-        QpsMeter { started: Instant::now(), n: 0 }
-    }
-
-    /// Count `k` completed events.
-    pub fn hit(&mut self, k: u64) {
-        self.n += k;
-    }
-
-    pub fn count(&self) -> u64 {
-        self.n
-    }
-
-    pub fn elapsed_secs(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
-    }
-
-    /// Events per second since construction.
-    pub fn qps(&self) -> f64 {
-        let secs = self.elapsed_secs();
-        if secs <= 0.0 {
-            0.0
-        } else {
-            self.n as f64 / secs
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +104,12 @@ mod tests {
         assert!((acc.auc() - 1.0).abs() < 1e-12);
         assert!(acc.logloss() > 0.0);
     }
+
+    // The histogram/QPS edge-case tests below pin the serving-facing
+    // behavior of the re-exported `obs::hist` types: empty → 0.0,
+    // single-sample and all-equal exact, monotone percentiles, extremes
+    // and merge. They ran against the in-module implementation before
+    // the move and must keep passing unchanged.
 
     #[test]
     fn latency_histogram_empty_is_zero() {

@@ -937,6 +937,7 @@ fn apply_table_range(
     lr: f32,
 ) {
     if clip {
+        let _clip = crate::obs::span(crate::obs::Phase::Clip);
         clip_embedding_grads_range(
             ctx.clip,
             ids,
@@ -951,6 +952,7 @@ fn apply_table_range(
             &ctx.clip_params,
         );
     }
+    let _apply = crate::obs::span(crate::obs::Phase::Apply);
     // lazy L2: regularize touched rows only (serial-oracle semantics
     // for sparse payloads)
     for (k, &id) in ids.iter().enumerate() {
@@ -986,6 +988,7 @@ fn run_shard(items: Vec<WorkItem<'_>>, ctx: &ApplyCtx) -> Result<()> {
     for item in items {
         match item {
             WorkItem::DenseTensor { w, m, v, g, lr } => {
+                let _apply = crate::obs::span(crate::obs::Phase::Apply);
                 adam.step(w, m, v, g, lr, ctx.step as f32);
             }
             WorkItem::VocabTable {

@@ -1,0 +1,131 @@
+//! Metrics exposition: Prometheus-style text dumps and the live
+//! `MetricsReq`/`Metrics` frame exchange behind `cowclip metrics`.
+//!
+//! Three read paths, one source of truth (the registry snapshot):
+//!
+//! * [`prometheus_text`] — the text format `cowclip serve` prints at
+//!   shutdown (and anything else that wants a scrapeable dump).
+//! * [`serve_metrics`] — a detached responder thread bound to an
+//!   [`Endpoint`]; each accepted connection may send one `MetricsReq`
+//!   frame and gets back one `Metrics` frame whose payload is the
+//!   `cowclip-metrics-v1` JSON tree. Live dist/serve runs opt in with
+//!   `--metrics-bind`.
+//! * [`fetch_metrics`] — the client side (`cowclip metrics --connect`).
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::transport::Endpoint;
+use crate::wire::frame::{read_frame, write_frame, FrameKind};
+
+use super::registry::snapshot_metrics;
+use super::snapshot::{metrics_json, render_json};
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; dotted registry names
+/// map through `cowclip_` + dots-to-underscores.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 8);
+    out.push_str("cowclip_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn prom_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render every registered metric as Prometheus exposition text.
+/// Counters and gauges map directly; histograms expose count, mean and
+/// the p50/p90/p99 quantile gauges (in milliseconds).
+pub fn prometheus_text() -> String {
+    let snap = snapshot_metrics();
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {}", prom_num(*v));
+    }
+    for (name, h) in &snap.hists {
+        let n = prom_name(name);
+        let (p50, p90, p99, mean) = h.summary();
+        let _ = writeln!(out, "# TYPE {n}_count counter");
+        let _ = writeln!(out, "{n}_count {}", h.count());
+        let _ = writeln!(out, "# TYPE {n}_mean gauge");
+        let _ = writeln!(out, "{n}_mean {}", prom_num(mean));
+        for (q, v) in [("0.5", p50), ("0.9", p90), ("0.99", p99)] {
+            let _ = writeln!(out, "{n}{{quantile=\"{q}\"}} {}", prom_num(v));
+        }
+    }
+    out
+}
+
+/// Answer `MetricsReq` frames on `endpoint` from a detached thread for
+/// the lifetime of the process. Each accepted connection gets exactly
+/// one snapshot reply; accept timeouts just re-poll so the thread dies
+/// with the process instead of pinning shutdown.
+pub fn serve_metrics(endpoint: &Endpoint) -> Result<()> {
+    let listener = endpoint.bind().context("metrics: bind exposition endpoint")?;
+    std::thread::spawn(move || loop {
+        let Ok(mut conn) = listener.accept_deadline(Duration::from_millis(200)) else {
+            continue;
+        };
+        let _ = conn.set_io_deadline(Some(Duration::from_secs(5)));
+        let ok = matches!(read_frame(&mut conn), Ok((FrameKind::MetricsReq, _)));
+        if ok {
+            let body = render_json(&metrics_json());
+            let _ = write_frame(&mut conn, FrameKind::Metrics, body.as_bytes());
+        }
+        conn.shutdown();
+    });
+    Ok(())
+}
+
+/// One-shot client pull: connect to `endpoint`, send `MetricsReq`, and
+/// return the `Metrics` payload (a `cowclip-metrics-v1` JSON document).
+pub fn fetch_metrics(endpoint: &Endpoint, timeout: Duration) -> Result<String> {
+    let mut conn = endpoint
+        .connect_retry(timeout)
+        .context("metrics: connect to exposition endpoint")?;
+    conn.set_io_deadline(Some(timeout))?;
+    write_frame(&mut conn, FrameKind::MetricsReq, &[])?;
+    let (kind, payload) = read_frame(&mut conn)?;
+    conn.shutdown();
+    if kind != FrameKind::Metrics {
+        bail!("metrics: expected a Metrics frame, got {kind:?}");
+    }
+    String::from_utf8(payload).context("metrics: reply is not UTF-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("train.steps"), "cowclip_train_steps");
+        assert_eq!(prom_name("dist.rank0.tx_bytes"), "cowclip_dist_rank0_tx_bytes");
+    }
+
+    #[test]
+    fn prom_numbers_render_clean() {
+        assert_eq!(prom_num(12.0), "12");
+        assert_eq!(prom_num(0.125), "0.125");
+    }
+}

@@ -1,0 +1,227 @@
+//! The shared fixed-bucket latency histogram and throughput meter.
+//!
+//! This is the bucket math that used to live in `metrics/meters.rs`
+//! (serve-only), generalized so every tier — serving, the lock-free
+//! metrics registry ([`crate::obs::registry::AtomicHistogram`]) and the
+//! exposition formats — shares **one** implementation of the bounds,
+//! the bucket index function and the percentile interpolation.
+//! `metrics::LatencyHistogram` is now a re-export of [`Histogram`], so
+//! the public p50/p90/p99 API (and its edge-case behavior: empty → 0.0,
+//! single-sample and all-equal exact via the `[min, max]` clamp) is
+//! unchanged.
+
+use std::time::Instant;
+
+/// Number of latency buckets (fixed so histograms merge trivially).
+pub const LAT_BUCKETS: usize = 64;
+/// First bucket upper bound in milliseconds (1 µs).
+pub const LAT_BASE_MS: f64 = 1e-3;
+/// Geometric bucket growth; 64 buckets cover ~1 µs to ~15 s.
+pub const LAT_RATIO: f64 = 1.3;
+
+/// Upper bound of bucket `i` in milliseconds.
+pub fn bucket_bound(i: usize) -> f64 {
+    LAT_BASE_MS * LAT_RATIO.powi(i as i32)
+}
+
+/// Bucket index for a sample of `ms` milliseconds.
+pub fn bucket_of(ms: f64) -> usize {
+    if ms <= LAT_BASE_MS {
+        return 0;
+    }
+    let i = ((ms / LAT_BASE_MS).ln() / LAT_RATIO.ln()).ceil() as usize;
+    i.min(LAT_BUCKETS - 1)
+}
+
+/// Fixed-bucket latency histogram with log-spaced bounds.
+///
+/// Bucket `i` covers `(base·r^(i-1), base·r^i]` milliseconds, with the
+/// last bucket absorbing everything larger, so recording is O(1), the
+/// memory footprint is constant, and two histograms (e.g. per scoring
+/// thread) merge by adding counts. Percentiles interpolate linearly
+/// inside the winning bucket and are clamped to the observed
+/// `[min, max]`, which makes the empty (0.0), single-sample and
+/// all-equal cases exact.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; LAT_BUCKETS],
+    n: u64,
+    sum_ms: f64,
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; LAT_BUCKETS],
+            n: 0,
+            sum_ms: 0.0,
+            min_ms: f64::INFINITY,
+            max_ms: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild a histogram from raw parts (the atomic registry variant
+    /// snapshots into this type so the percentile math lives once).
+    pub fn from_parts(
+        counts: [u64; LAT_BUCKETS],
+        n: u64,
+        sum_ms: f64,
+        min_ms: f64,
+        max_ms: f64,
+    ) -> Self {
+        Histogram { counts, n, sum_ms, min_ms, max_ms }
+    }
+
+    /// Record one latency sample in milliseconds (negatives clamp to 0).
+    pub fn record(&mut self, ms: f64) {
+        let ms = ms.max(0.0);
+        self.counts[bucket_of(ms)] += 1;
+        self.n += 1;
+        self.sum_ms += ms;
+        self.min_ms = self.min_ms.min(ms);
+        self.max_ms = self.max_ms.max(ms);
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum_ms += other.sum_ms;
+        self.min_ms = self.min_ms.min(other.min_ms);
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.n as f64
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max_ms
+        }
+    }
+
+    /// Percentile `p` in `[0, 100]` in milliseconds (0.0 when empty).
+    /// Resolution is one bucket (~±15%); exact for single-sample and
+    /// all-equal inputs thanks to the `[min, max]` clamp.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0) * self.n as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = seen + c;
+            if (next as f64) >= target {
+                let lo = if i == 0 { 0.0 } else { bucket_bound(i - 1) };
+                // the last bucket is unbounded above: close it with the
+                // observed max so p100 reports the true extreme
+                let hi = if i == LAT_BUCKETS - 1 { self.max_ms } else { bucket_bound(i) };
+                let frac = ((target - seen as f64) / c as f64).clamp(0.0, 1.0);
+                return (lo + frac * (hi - lo)).clamp(self.min_ms, self.max_ms);
+            }
+            seen = next;
+        }
+        self.max_ms
+    }
+
+    /// `(p50, p90, p99, mean)` in milliseconds — the serving report row.
+    pub fn summary(&self) -> (f64, f64, f64, f64) {
+        (self.percentile(50.0), self.percentile(90.0), self.percentile(99.0), self.mean_ms())
+    }
+}
+
+/// Wall-clock throughput meter: count events, read events/second.
+#[derive(Clone, Debug)]
+pub struct QpsMeter {
+    started: Instant,
+    n: u64,
+}
+
+impl Default for QpsMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QpsMeter {
+    pub fn new() -> Self {
+        QpsMeter { started: Instant::now(), n: 0 }
+    }
+
+    /// Count `k` completed events.
+    pub fn hit(&mut self, k: u64) {
+        self.n += k;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Events per second since construction.
+    pub fn qps(&self) -> f64 {
+        let secs = self.elapsed_secs();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.n as f64 / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_monotone() {
+        for i in 1..LAT_BUCKETS {
+            assert!(bucket_bound(i) > bucket_bound(i - 1));
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(f64::MAX), LAT_BUCKETS - 1);
+        // every bound lands in its own bucket
+        for i in 0..LAT_BUCKETS {
+            assert!(bucket_of(bucket_bound(i)) <= i.max(1));
+        }
+    }
+
+    #[test]
+    fn from_parts_round_trips_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=50 {
+            h.record(i as f64 * 0.1);
+        }
+        let clone = Histogram::from_parts(h.counts, h.n, h.sum_ms, h.min_ms, h.max_ms);
+        assert_eq!(clone.count(), h.count());
+        assert_eq!(clone.percentile(50.0), h.percentile(50.0));
+        assert_eq!(clone.summary(), h.summary());
+    }
+}

@@ -1,0 +1,56 @@
+//! Unified telemetry: step-phase tracing, the lock-free metrics
+//! registry, and exposition (JSONL snapshots, chrome-trace export,
+//! Prometheus text, the `Metrics` wire frame).
+//!
+//! # Layout
+//!
+//! * [`span`](mod@span) — preallocated per-thread span rings recording the
+//!   step-phase taxonomy (`prefetch`, `gather`, `forward`, `backward`,
+//!   `clip`, `reduce`, `wire-tx`, `wire-rx`, `apply`, `eval`,
+//!   `serve-score`) with thread + rank attribution.
+//! * [`registry`] — fixed-slot atomic counters / gauges / histograms:
+//!   register once at startup, update on the hot path with single
+//!   relaxed atomic operations.
+//! * [`hist`] — the shared fixed-bucket histogram + QPS meter
+//!   (generalized out of `metrics/meters.rs`; `metrics::LatencyHistogram`
+//!   re-exports it).
+//! * [`snapshot`] — deterministic JSON rendering, the periodic JSONL
+//!   [`SnapshotWriter`], and the shared `cowclip-bench-v1` report shape.
+//! * [`trace`] — chrome://tracing export of the span rings (`--trace`).
+//! * [`expose`] — Prometheus text + the live `MetricsReq`/`Metrics`
+//!   frame exchange (`cowclip metrics --connect`).
+//!
+//! # Inertness contract
+//!
+//! Observability never touches numerics: spans and metrics read the
+//! clock and write to obs-private atomics only, so every parity suite
+//! passes bitwise-unchanged with tracing and metrics enabled
+//! (`rust/tests/obs_parity.rs`). Steady-state recording is
+//! allocation-free and lock-free; the only allocating paths are
+//! registration (per metric, per thread-ring) and export, which run off
+//! the hot path. The cowclip-lint `obs-inert` rule family statically
+//! checks that hot-path code reaches only the alloc-free recording API
+//! ([`span`](fn@span) / [`span_rank`] / [`tracing_on`]).
+
+pub mod expose;
+pub mod hist;
+pub mod registry;
+pub mod snapshot;
+pub mod span;
+pub mod trace;
+
+pub use expose::{fetch_metrics, prometheus_text, serve_metrics};
+pub use hist::{Histogram, QpsMeter};
+pub use registry::{
+    counter, gauge, histogram, reset_metrics, snapshot_metrics, AtomicHistogram, Counter, Gauge,
+    MetricsSnapshot,
+};
+pub use snapshot::{
+    bench_report, metrics_json, obj, render_json, render_json_pretty, write_json_report,
+    SnapshotWriter,
+};
+pub use span::{
+    collect_spans, reset_spans, set_tracing, span, span_rank, thread_ring_grows, tracing_on, Phase,
+    SpanGuard, SpanRecord, NO_RANK,
+};
+pub use trace::{chrome_trace_json, export_chrome};

@@ -1,0 +1,271 @@
+//! The lock-free metrics registry: fixed-slot atomic counters, gauges
+//! and histograms, registered once by name and updated on the hot path
+//! with plain relaxed atomic operations.
+//!
+//! # Design
+//!
+//! Registration ([`counter`] / [`gauge`] / [`histogram`]) takes a
+//! `Mutex` and may allocate — it happens once, at startup or per-run
+//! setup, and returns an `Arc` handle. Every subsequent update through
+//! the handle is lock-free and allocation-free: a counter bump is a
+//! single `fetch_add(Relaxed)`, a gauge set a single `store(Relaxed)`,
+//! a histogram record a fixed handful of relaxed atomic ops. The
+//! cowclip-lint `obs-inert` rule family statically enforces that hot
+//! paths only reach the recording API, never registration.
+//!
+//! Names are dotted lowercase (`train.steps`, `dist.rank0.tx_bytes`);
+//! [`snapshot_metrics`] returns every metric sorted by name, so all
+//! exposition formats (JSONL, Prometheus text, the `Metrics` wire
+//! frame) render deterministically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use super::hist::{bucket_of, Histogram, LAT_BUCKETS};
+
+/// Monotone event counter. Bumps are single relaxed atomic adds.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in one atomic word).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free variant of [`Histogram`]: same bounds and bucket function
+/// (shared via `obs::hist`), atomically updatable from any thread.
+/// Percentile math runs on a [`Histogram`] snapshot so it exists once.
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; LAT_BUCKETS],
+    n: AtomicU64,
+    /// Sum in integer nanosecond-of-a-millisecond units (`ms * 1e6`):
+    /// `fetch_add` needs an integer, and 1 ns resolution loses nothing
+    /// the bucket math could keep.
+    sum_ns: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            n: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    /// Record one sample in milliseconds (negatives clamp to 0). All
+    /// relaxed atomics, no locks, no allocation. `fetch_min`/`fetch_max`
+    /// on the raw bits are order-correct because the clamped sample is
+    /// non-negative (IEEE-754 bit patterns of non-negative floats sort
+    /// like their values).
+    pub fn record(&self, ms: f64) {
+        let ms = if ms.is_finite() { ms.max(0.0) } else { 0.0 };
+        self.buckets[bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((ms * 1e6) as u64, Ordering::Relaxed);
+        self.min_bits.fetch_min(ms.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(ms.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot into the plain histogram type (percentiles, summary).
+    pub fn snapshot(&self) -> Histogram {
+        let mut counts = [0u64; LAT_BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        Histogram::from_parts(
+            counts,
+            self.n.load(Ordering::Relaxed),
+            self.sum_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            f64::from_bits(self.min_bits.load(Ordering::Relaxed)),
+            f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+/// Name-sorted registry slots (linear structures, not hash maps: the
+/// registry is small, ordered iteration is the common read, and the
+/// snapshot order must be deterministic).
+#[derive(Default)]
+struct Inner {
+    counters: Vec<(String, Arc<Counter>)>,
+    gauges: Vec<(String, Arc<Gauge>)>,
+    hists: Vec<(String, Arc<AtomicHistogram>)>,
+}
+
+fn registry() -> &'static Mutex<Inner> {
+    static REGISTRY: OnceLock<Mutex<Inner>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Inner::default()))
+}
+
+fn lookup<T: Default>(slots: &mut Vec<(String, Arc<T>)>, name: &str) -> Arc<T> {
+    match slots.binary_search_by(|(n, _)| n.as_str().cmp(name)) {
+        Ok(i) => Arc::clone(&slots[i].1),
+        Err(i) => {
+            let handle: Arc<T> = Arc::new(T::default());
+            slots.insert(i, (name.to_string(), Arc::clone(&handle)));
+            handle
+        }
+    }
+}
+
+/// Register (or fetch) the counter named `name`. Registration-time
+/// only: never call from a hot path — hold the handle instead.
+pub fn counter(name: &str) -> Arc<Counter> {
+    lookup(&mut registry().lock().unwrap_or_else(PoisonError::into_inner).counters, name)
+}
+
+/// Register (or fetch) the gauge named `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    lookup(&mut registry().lock().unwrap_or_else(PoisonError::into_inner).gauges, name)
+}
+
+/// Register (or fetch) the atomic histogram named `name`.
+pub fn histogram(name: &str) -> Arc<AtomicHistogram> {
+    lookup(&mut registry().lock().unwrap_or_else(PoisonError::into_inner).hists, name)
+}
+
+/// A point-in-time copy of every registered metric, sorted by name.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, Histogram)>,
+}
+
+impl MetricsSnapshot {
+    /// Value of a counter in this snapshot (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Value of a gauge in this snapshot (0.0 when absent).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Snapshot every registered metric.
+pub fn snapshot_metrics() -> MetricsSnapshot {
+    let g = registry().lock().unwrap_or_else(PoisonError::into_inner);
+    MetricsSnapshot {
+        counters: g.counters.iter().map(|(n, c)| (n.clone(), c.get())).collect(),
+        gauges: g.gauges.iter().map(|(n, c)| (n.clone(), c.get())).collect(),
+        hists: g.hists.iter().map(|(n, h)| (n.clone(), h.snapshot())).collect(),
+    }
+}
+
+/// Unregister everything (test isolation). Live handles keep working
+/// but stop appearing in snapshots.
+pub fn reset_metrics() {
+    let mut g = registry().lock().unwrap_or_else(PoisonError::into_inner);
+    g.counters.clear();
+    g.gauges.clear();
+    g.hists.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_ops() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.set(-1.0);
+        assert_eq!(g.get(), -1.0);
+    }
+
+    #[test]
+    fn atomic_histogram_matches_plain() {
+        let a = AtomicHistogram::default();
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            let ms = i as f64 * 0.37;
+            a.record(ms);
+            h.record(ms);
+        }
+        let s = a.snapshot();
+        assert_eq!(s.count(), h.count());
+        assert_eq!(s.percentile(50.0), h.percentile(50.0));
+        assert_eq!(s.percentile(99.0), h.percentile(99.0));
+        assert_eq!(s.max_ms(), h.max_ms());
+        assert!((s.mean_ms() - h.mean_ms()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn atomic_histogram_empty_and_junk_samples() {
+        let a = AtomicHistogram::default();
+        let s = a.snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        a.record(f64::NAN);
+        a.record(-3.0);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.snapshot().percentile(100.0), 0.0);
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_sorted() {
+        // exercise private `lookup` directly so this test cannot race
+        // other tests through the global registry
+        let mut slots: Vec<(String, Arc<Counter>)> = Vec::new();
+        let b = lookup(&mut slots, "b.metric");
+        let a = lookup(&mut slots, "a.metric");
+        let b2 = lookup(&mut slots, "b.metric");
+        b.add(3);
+        b2.add(4);
+        a.inc();
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots[0].0, "a.metric");
+        assert_eq!(slots[1].0, "b.metric");
+        assert_eq!(slots[1].1.get(), 7, "both handles hit one slot");
+    }
+}

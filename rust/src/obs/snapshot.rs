@@ -1,0 +1,319 @@
+//! Deterministic JSON rendering + the shared snapshot/bench schema.
+//!
+//! The repo carries no serializer dependency; this module renders the
+//! existing [`Json`] tree (previously parse-only) so every emitter —
+//! metrics JSONL snapshots, chrome-trace export, the `Metrics` wire
+//! frame, and the `BENCH_*.json` reports — shares one schema and one
+//! formatter instead of three divergent hand-formatted writers.
+//! Objects render in `BTreeMap` key order and metric names are sorted
+//! at snapshot time, so output is byte-deterministic for a given state.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::registry;
+
+/// Render a JSON value compactly (single line — JSONL-safe).
+pub fn render_json(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v, None, 0);
+    out
+}
+
+/// Render a JSON value with 2-space indentation (human-facing files).
+pub fn render_json_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v, Some(2), 0);
+    out
+}
+
+fn write_value(out: &mut String, v: &Json, indent: Option<usize>, depth: usize) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => out.push_str(&fmt_num(*n)),
+        Json::Str(s) => write_string(out, s),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_value(out, item, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, item)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_string(out, k);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(out, item, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+/// JSON has no NaN/Inf; non-finite numbers render as 0 (documented
+/// lossy guard — metric values are finite in practice). Integral values
+/// render without a fractional part.
+fn fmt_num(n: f64) -> String {
+    if !n.is_finite() {
+        return "0".to_string();
+    }
+    if n == n.trunc() && n.abs() < 9.0e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// The current metrics registry as a JSON tree:
+/// `{"counters": {..}, "gauges": {..}, "histograms": {name: summary}}`.
+pub fn metrics_json() -> Json {
+    let snap = registry::snapshot_metrics();
+    let mut counters = std::collections::BTreeMap::new();
+    for (name, v) in snap.counters {
+        counters.insert(name, Json::Num(v as f64));
+    }
+    let mut gauges = std::collections::BTreeMap::new();
+    for (name, v) in snap.gauges {
+        gauges.insert(name, Json::Num(v));
+    }
+    let mut hists = std::collections::BTreeMap::new();
+    for (name, h) in snap.hists {
+        let (p50, p90, p99, mean) = h.summary();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(h.count() as f64));
+        o.insert("mean_ms".to_string(), Json::Num(mean));
+        o.insert("p50_ms".to_string(), Json::Num(p50));
+        o.insert("p90_ms".to_string(), Json::Num(p90));
+        o.insert("p99_ms".to_string(), Json::Num(p99));
+        o.insert("max_ms".to_string(), Json::Num(h.max_ms()));
+        hists.insert(name, Json::Obj(o));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("counters".to_string(), Json::Obj(counters));
+    root.insert("gauges".to_string(), Json::Obj(gauges));
+    root.insert("histograms".to_string(), Json::Obj(hists));
+    Json::Obj(root)
+}
+
+/// Build one JSONL snapshot line: sequence number, elapsed wall time,
+/// and the full metrics tree.
+fn snapshot_line(seq: u64, started: Instant) -> String {
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("cowclip-metrics-v1".to_string()));
+    root.insert("seq".to_string(), Json::Num(seq as f64));
+    root.insert(
+        "elapsed_ms".to_string(),
+        Json::Num(started.elapsed().as_secs_f64() * 1e3),
+    );
+    root.insert("metrics".to_string(), metrics_json());
+    render_json(&Json::Obj(root))
+}
+
+/// Periodic JSONL metrics writer (`--metrics-interval`): appends one
+/// snapshot line every `interval` to `path`, plus a final line at
+/// [`SnapshotWriter::finish`]. The writer thread snapshots off the hot
+/// path; recording threads never block on it.
+pub struct SnapshotWriter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<u64>>,
+    path: PathBuf,
+    started: Instant,
+}
+
+impl SnapshotWriter {
+    /// Start the writer; truncates `path`.
+    pub fn spawn(path: &Path, interval: Duration) -> Result<SnapshotWriter> {
+        std::fs::write(path, "")
+            .with_context(|| format!("metrics: create {}", path.display()))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let started = Instant::now();
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let path = path.to_path_buf();
+            std::thread::spawn(move || {
+                let mut seq = 0u64;
+                let tick = Duration::from_millis(interval.as_millis().clamp(1, 50) as u64);
+                let mut next = Instant::now() + interval;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if Instant::now() >= next {
+                        append_line(&path, &snapshot_line(seq, started));
+                        seq += 1;
+                        next += interval;
+                    }
+                }
+                seq
+            })
+        };
+        Ok(SnapshotWriter { stop, handle: Some(handle), path: path.to_path_buf(), started })
+    }
+
+    /// Stop the writer thread and append one final snapshot. Returns
+    /// the number of lines written (periodic + final).
+    pub fn finish(mut self) -> Result<u64> {
+        self.stop.store(true, Ordering::Relaxed);
+        let seq = match self.handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("metrics writer panicked"))?,
+            None => 0,
+        };
+        append_line(&self.path, &snapshot_line(seq, self.started));
+        Ok(seq + 1)
+    }
+}
+
+fn append_line(path: &Path, line: &str) {
+    let opened = std::fs::OpenOptions::new().append(true).create(true).open(path);
+    if let Ok(mut f) = opened {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// The shared `BENCH_*.json` report shape: schema tag, bench name,
+/// smoke flag, host arch, caller tags, and a `results` row array. One
+/// emitter for `BENCH_kernels.json` / `BENCH_e2e.json` /
+/// `BENCH_dist.json` (and the future sweep harness) replaces the three
+/// divergent hand-formatted writers the benches used to carry.
+pub fn bench_report(bench: &str, smoke: bool, tags: &[(&str, Json)], results: Vec<Json>) -> Json {
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("cowclip-bench-v1".to_string()));
+    root.insert("bench".to_string(), Json::Str(bench.to_string()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert(
+        "arch".to_string(),
+        Json::Str(std::env::consts::ARCH.to_string()),
+    );
+    for (k, v) in tags {
+        root.insert((*k).to_string(), v.clone());
+    }
+    root.insert("results".to_string(), Json::Arr(results));
+    Json::Obj(root)
+}
+
+/// Write a JSON tree to `path` (pretty, trailing newline) and report
+/// like the benches always have.
+pub fn write_json_report(path: &str, v: &Json) {
+    let body = render_json_pretty(v) + "\n";
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("{path} not written: {e}"),
+    }
+}
+
+/// Convenience: an object row from `(key, value)` pairs.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_reparses() {
+        let v = obj(vec![
+            ("name", Json::Str("a \"quoted\"\nline".to_string())),
+            ("n", Json::Num(3.0)),
+            ("frac", Json::Num(0.25)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)])),
+        ]);
+        for rendered in [render_json(&v), render_json_pretty(&v)] {
+            let back = Json::parse(&rendered).expect("round-trip parse");
+            assert_eq!(back.get("name").unwrap().as_str().unwrap(), "a \"quoted\"\nline");
+            assert_eq!(back.get("n").unwrap().as_f64().unwrap(), 3.0);
+            assert_eq!(back.get("frac").unwrap().as_f64().unwrap(), 0.25);
+            assert!(back.get("ok").unwrap().as_bool().unwrap());
+            assert_eq!(back.get("xs").unwrap().as_arr().unwrap().len(), 2);
+        }
+        assert!(!render_json(&v).contains('\n'), "compact form must be JSONL-safe");
+    }
+
+    #[test]
+    fn numbers_render_clean() {
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(-2.0), "-2");
+        assert_eq!(fmt_num(0.5), "0.5");
+        assert_eq!(fmt_num(f64::NAN), "0");
+        assert_eq!(fmt_num(f64::INFINITY), "0");
+    }
+
+    #[test]
+    fn bench_report_schema_shape() {
+        let rep = bench_report(
+            "kernels",
+            true,
+            &[("kernel", Json::Str("scalar".to_string()))],
+            vec![obj(vec![("name", Json::Str("matmul".to_string()))])],
+        );
+        let back = Json::parse(&render_json_pretty(&rep)).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "cowclip-bench-v1");
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "kernels");
+        assert!(back.get("smoke").unwrap().as_bool().unwrap());
+        assert_eq!(back.get("kernel").unwrap().as_str().unwrap(), "scalar");
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

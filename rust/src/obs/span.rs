@@ -1,0 +1,335 @@
+//! Span-based step-phase tracing over preallocated per-thread rings.
+//!
+//! # Design
+//!
+//! Each recording thread owns one fixed-capacity ring of atomic words
+//! (allocated once, at that thread's first span after tracing is
+//! enabled); recording a span writes three relaxed `AtomicU64` stores
+//! plus one `Release` head bump — no locks, no allocation, no
+//! contention with other writers. A global registry of `Arc<Ring>`s
+//! (locked only at thread registration and at export time) lets the
+//! trace exporter walk every thread's spans after the run.
+//!
+//! When tracing is **off** (the default), [`span`] returns an inert
+//! guard without even reading the clock, so instrumentation left in the
+//! hot path costs one relaxed atomic load per call site.
+//!
+//! # Determinism / inertness contract
+//!
+//! Recording reads the clock and writes to obs-private atomics; it
+//! never reads or writes model state, gradients, RNG state or iteration
+//! order. Training and serving results are therefore bitwise identical
+//! with tracing on or off (`rust/tests/obs_parity.rs` pins this for all
+//! six clip modes).
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Step-phase taxonomy. One span = one timed occurrence of a phase on
+/// one thread (optionally attributed to a distributed rank).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// Batch materialization + touched-id sort in the prefetch thread.
+    Prefetch = 0,
+    /// Embedding gather fused into the x0 concat.
+    Gather = 1,
+    /// Dense forward (MLP / FM / cross streams).
+    Forward = 2,
+    /// Backward pass (dense + sparse embedding grads).
+    Backward = 3,
+    /// Gradient clipping (any of the six modes).
+    Clip = 4,
+    /// Tree all-reduce pairwise merge.
+    Reduce = 5,
+    /// A frame written to a socket (dist uplink / broadcast).
+    WireTx = 6,
+    /// A frame read from a socket (dist uplink / broadcast).
+    WireRx = 7,
+    /// Optimizer apply (L2 + Adam / lazy rows).
+    Apply = 8,
+    /// An evaluation pass over the test split.
+    Eval = 9,
+    /// One micro-batch scored by the serving queue.
+    ServeScore = 10,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 11] = [
+        Phase::Prefetch,
+        Phase::Gather,
+        Phase::Forward,
+        Phase::Backward,
+        Phase::Clip,
+        Phase::Reduce,
+        Phase::WireTx,
+        Phase::WireRx,
+        Phase::Apply,
+        Phase::Eval,
+        Phase::ServeScore,
+    ];
+
+    /// Stable lowercase name used in trace JSON and tests.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefetch => "prefetch",
+            Phase::Gather => "gather",
+            Phase::Forward => "forward",
+            Phase::Backward => "backward",
+            Phase::Clip => "clip",
+            Phase::Reduce => "reduce",
+            Phase::WireTx => "wire-tx",
+            Phase::WireRx => "wire-rx",
+            Phase::Apply => "apply",
+            Phase::Eval => "eval",
+            Phase::ServeScore => "serve-score",
+        }
+    }
+
+    fn from_code(code: u8) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| *p as u8 == code)
+    }
+}
+
+/// Rank value meaning "not attributed to a distributed rank".
+pub const NO_RANK: u32 = u32::MAX;
+
+/// Spans per thread ring; older spans are overwritten once full (the
+/// exporter reports the freshest `RING_SPANS` per thread).
+pub const RING_SPANS: usize = 8192;
+const WORDS: usize = 3; // meta, start_ns, dur_ns
+
+/// One thread's preallocated span ring (single writer, many readers).
+struct Ring {
+    tid: u64,
+    /// Monotone span count; slot `i % RING_SPANS` holds span `i`.
+    head: AtomicU64,
+    slots: Box<[AtomicU64]>,
+}
+
+impl Ring {
+    fn new(tid: u64) -> Ring {
+        let slots: Vec<AtomicU64> = (0..RING_SPANS * WORDS).map(|_| AtomicU64::new(0)).collect();
+        Ring { tid, head: AtomicU64::new(0), slots: slots.into_boxed_slice() }
+    }
+
+    /// Single-writer push: relaxed payload stores, `Release` head bump
+    /// so a reader that `Acquire`-loads the head sees complete slots.
+    fn push(&self, meta: u64, start_ns: u64, dur_ns: u64) {
+        let i = (self.head.load(Ordering::Relaxed) as usize % RING_SPANS) * WORDS;
+        self.slots[i].store(meta, Ordering::Relaxed);
+        self.slots[i + 1].store(start_ns, Ordering::Relaxed);
+        self.slots[i + 2].store(dur_ns, Ordering::Relaxed);
+        self.head.fetch_add(1, Ordering::Release);
+    }
+}
+
+struct SpanState {
+    rings: Mutex<Vec<Arc<Ring>>>,
+    /// Bumped by [`reset_spans`]; threads re-register lazily when their
+    /// cached ring's generation goes stale.
+    generation: AtomicU64,
+    next_tid: AtomicU64,
+}
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+fn state() -> &'static SpanState {
+    static STATE: OnceLock<SpanState> = OnceLock::new();
+    STATE.get_or_init(|| SpanState {
+        rings: Mutex::new(Vec::new()),
+        generation: AtomicU64::new(0),
+        next_tid: AtomicU64::new(0),
+    })
+}
+
+/// The process-wide time origin for span start stamps.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static RING: RefCell<Option<(u64, Arc<Ring>)>> = const { RefCell::new(None) };
+    static RING_GROWS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Enable or disable span recording process-wide.
+pub fn set_tracing(on: bool) {
+    if on {
+        // Pin the time origin before the first span so start stamps
+        // are non-negative offsets.
+        let _ = epoch();
+    }
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+/// Is span recording currently enabled?
+pub fn tracing_on() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// How many times *this thread* allocated/registered a span ring. Flat
+/// after the first span per generation — the zero-growth gate in
+/// `rust/tests/obs_parity.rs` asserts on it, mirroring the
+/// `Scratch::grow_events` pattern.
+pub fn thread_ring_grows() -> u64 {
+    RING_GROWS.with(Cell::get)
+}
+
+/// Drop all recorded spans and detach every thread's ring (test
+/// isolation; threads re-register on their next span).
+pub fn reset_spans() {
+    let st = state();
+    st.generation.fetch_add(1, Ordering::Release);
+    st.rings.lock().unwrap_or_else(PoisonError::into_inner).clear();
+}
+
+/// RAII span: created by [`span`]/[`span_rank`], records on drop. Inert
+/// (and clock-free) when tracing is disabled.
+pub struct SpanGuard {
+    live: Option<(Phase, u32, Instant)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((phase, rank, t0)) = self.live.take() {
+            record(phase, rank, t0);
+        }
+    }
+}
+
+/// Open a span for `phase` on this thread (no rank attribution).
+pub fn span(phase: Phase) -> SpanGuard {
+    if !tracing_on() {
+        return SpanGuard { live: None };
+    }
+    SpanGuard { live: Some((phase, NO_RANK, Instant::now())) }
+}
+
+/// Open a span for `phase` attributed to distributed rank `rank`.
+pub fn span_rank(phase: Phase, rank: usize) -> SpanGuard {
+    if !tracing_on() {
+        return SpanGuard { live: None };
+    }
+    SpanGuard { live: Some((phase, rank as u32, Instant::now())) }
+}
+
+fn record(phase: Phase, rank: u32, t0: Instant) {
+    let dur_ns = t0.elapsed().as_nanos() as u64;
+    // saturates to 0 if t0 somehow predates the pinned epoch
+    let start_ns = t0.duration_since(epoch()).as_nanos() as u64;
+    let meta = ((rank as u64) << 8) | phase as u64;
+    RING.with(|cell| {
+        let st = state();
+        let generation = st.generation.load(Ordering::Acquire);
+        let mut slot = cell.borrow_mut();
+        let stale = match &*slot {
+            Some((g, _)) => *g != generation,
+            None => true,
+        };
+        if stale {
+            // Registration: the only allocating path, once per thread
+            // per generation (counted by `thread_ring_grows`).
+            let ring = Arc::new(Ring::new(st.next_tid.fetch_add(1, Ordering::Relaxed)));
+            st.rings
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push(Arc::clone(&ring));
+            RING_GROWS.with(|g| g.set(g.get() + 1));
+            *slot = Some((generation, ring));
+        }
+        if let Some((_, ring)) = &*slot {
+            ring.push(meta, start_ns, dur_ns);
+        }
+    });
+}
+
+/// One exported span.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub phase: Phase,
+    /// `NO_RANK` when the span has no distributed-rank attribution.
+    pub rank: u32,
+    /// Per-ring thread id (registration order, process-unique).
+    pub tid: u64,
+    /// Nanoseconds since the tracing epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Snapshot every thread's ring (freshest `RING_SPANS` spans per
+/// thread), sorted by start time for a stable export order.
+pub fn collect_spans() -> Vec<SpanRecord> {
+    let rings: Vec<Arc<Ring>> = state()
+        .rings
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .iter()
+        .map(Arc::clone)
+        .collect();
+    let mut out: Vec<SpanRecord> = Vec::new();
+    for ring in &rings {
+        let head = ring.head.load(Ordering::Acquire);
+        let n = (head as usize).min(RING_SPANS);
+        let first = head as usize - n;
+        for k in first..head as usize {
+            let i = (k % RING_SPANS) * WORDS;
+            let meta = ring.slots[i].load(Ordering::Relaxed);
+            let start_ns = ring.slots[i + 1].load(Ordering::Relaxed);
+            let dur_ns = ring.slots[i + 2].load(Ordering::Relaxed);
+            let Some(phase) = Phase::from_code((meta & 0xFF) as u8) else {
+                continue;
+            };
+            out.push(SpanRecord {
+                phase,
+                rank: (meta >> 8) as u32,
+                tid: ring.tid,
+                start_ns,
+                dur_ns,
+            });
+        }
+    }
+    out.sort_by_key(|s| (s.start_ns, s.tid, s.dur_ns));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_wraps() {
+        let ring = Ring::new(7);
+        for k in 0..(RING_SPANS as u64 + 10) {
+            ring.push(k, k * 2, k * 3);
+        }
+        let head = ring.head.load(Ordering::Acquire);
+        assert_eq!(head, RING_SPANS as u64 + 10);
+        // the freshest span sits at (head-1) % RING_SPANS
+        let i = ((head - 1) as usize % RING_SPANS) * WORDS;
+        assert_eq!(ring.slots[i].load(Ordering::Relaxed), head - 1);
+    }
+
+    #[test]
+    fn phase_codes_round_trip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_code(p as u8), Some(p));
+            assert!(!p.name().is_empty());
+        }
+        assert_eq!(Phase::from_code(200), None);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Tracing defaults to off in the lib test binary; an inert
+        // guard must not register a ring for this thread.
+        let before = thread_ring_grows();
+        {
+            let _g = span(Phase::Forward);
+        }
+        assert_eq!(thread_ring_grows(), before);
+    }
+}

@@ -439,7 +439,11 @@ impl ReferenceModel {
         let mut reader = Reader::new(params);
         let embed_table = reader.next()?;
         let mut x0 = scratch.take(b * d0);
-        (self.kernels.embed_concat_fwd)(embed_table, ids, dense, b, f, d, nd, &mut x0);
+        {
+            let _gather = crate::obs::span(crate::obs::Phase::Gather);
+            (self.kernels.embed_concat_fwd)(embed_table, ids, dense, b, f, d, nd, &mut x0);
+        }
+        let _fwd = crate::obs::span(crate::obs::Phase::Forward);
 
         let n_hidden = self.hidden.len();
         let mut fm_sums: Vec<f32> = Vec::new(); // lint:allow(hotpath-alloc): empty Vec never allocates (kind-dependent cache slot)
@@ -600,6 +604,7 @@ impl ReferenceModel {
         touched: &[u32],
         scratch: &mut Scratch,
     ) -> Result<Vec<GradTensor>> {
+        let _bwd = crate::obs::span(crate::obs::Phase::Backward);
         let f = self.schema.n_cat();
         let d = self.embed_dim;
         let d0 = self.d0();

@@ -90,6 +90,11 @@ struct Shared {
     error: Mutex<Option<String>>,
     started: Instant,
     next_id: AtomicU64,
+    /// Registry handles, registered once at [`Server::start`]; the
+    /// scoring threads update them with relaxed atomic ops only.
+    m_requests: Arc<crate::obs::Counter>,
+    m_batches: Arc<crate::obs::Counter>,
+    m_latency: Arc<crate::obs::AtomicHistogram>,
 }
 
 /// A running micro-batching scorer: owns the scoring threads; hand out
@@ -153,6 +158,9 @@ impl Server {
             error: Mutex::new(None),
             started: Instant::now(),
             next_id: AtomicU64::new(0),
+            m_requests: crate::obs::counter("serve.requests"),
+            m_batches: crate::obs::counter("serve.batches"),
+            m_latency: crate::obs::histogram("serve.latency_ms"),
         });
         let workers = (0..threads)
             .map(|_| {
@@ -279,15 +287,23 @@ fn worker_loop(shared: &Shared) {
             reqs.push(p.req);
         }
         // requests were validated at submit; don't re-check per batch
-        match shared.model.score_batch_validated(&reqs, &mut scratch) {
+        let scored = {
+            let _score = crate::obs::span(crate::obs::Phase::ServeScore);
+            shared.model.score_batch_validated(&reqs, &mut scratch)
+        };
+        match scored {
             Ok(logits) => {
                 let scored_at = Instant::now();
+                shared.m_batches.inc();
+                shared.m_requests.add(reqs.len() as u64);
                 {
                     let mut c = shared.counters.lock().unwrap_or_else(PoisonError::into_inner);
                     c.batches += 1;
                     c.requests += reqs.len() as u64;
                     for (enq, _) in &meta {
-                        c.latency.record(scored_at.duration_since(*enq).as_secs_f64() * 1e3);
+                        let ms = scored_at.duration_since(*enq).as_secs_f64() * 1e3;
+                        c.latency.record(ms);
+                        shared.m_latency.record(ms);
                     }
                 }
                 // --- respond ---

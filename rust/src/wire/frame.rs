@@ -51,6 +51,10 @@ pub enum FrameKind {
     Score,
     /// Server → client: a serving score reply (`codec::encode_scored`).
     Scored,
+    /// Client → process: one-shot metrics pull (`cowclip metrics`), empty payload.
+    MetricsReq,
+    /// Process → client: metrics snapshot, JSON (`cowclip-metrics-v1`) payload.
+    Metrics,
 }
 
 impl FrameKind {
@@ -64,6 +68,8 @@ impl FrameKind {
             FrameKind::Error => 6,
             FrameKind::Score => 7,
             FrameKind::Scored => 8,
+            FrameKind::MetricsReq => 9,
+            FrameKind::Metrics => 10,
         }
     }
 
@@ -77,6 +83,8 @@ impl FrameKind {
             6 => Ok(FrameKind::Error),
             7 => Ok(FrameKind::Score),
             8 => Ok(FrameKind::Scored),
+            9 => Ok(FrameKind::MetricsReq),
+            10 => Ok(FrameKind::Metrics),
             other => bail!("wire: unknown frame kind {other}"),
         }
     }
@@ -162,6 +170,8 @@ mod tests {
             FrameKind::Error,
             FrameKind::Score,
             FrameKind::Scored,
+            FrameKind::MetricsReq,
+            FrameKind::Metrics,
         ];
         let mut buf = Vec::new();
         for (i, &k) in kinds.iter().enumerate() {

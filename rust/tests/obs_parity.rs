@@ -1,0 +1,384 @@
+//! Observability is provably inert: training results are bitwise
+//! identical with tracing + metrics on vs off for all six clip modes;
+//! span recording allocates nothing after warmup; a 2-rank dist run's
+//! trace carries per-rank wire spans whose byte counters reconcile with
+//! the wire report; the exported chrome-trace JSON and JSONL snapshots
+//! parse with the expected phase names; and the whole subsystem costs
+//! at most 3% of step time when enabled.
+//!
+//! The span/registry state is process-global, so every test that flips
+//! tracing or reads counters serializes behind one mutex — the tests in
+//! this binary may otherwise run on parallel threads.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{
+    coordinate, dist_worker, DistOptions, DistReport, Endpoint, Engine, TrainConfig, TrainReport,
+    Trainer,
+};
+use cowclip::data::dataset::Dataset;
+use cowclip::data::schema::criteo_synth;
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::model::ParamSet;
+use cowclip::obs;
+use cowclip::reference::ModelKind;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::util::json::Json;
+use cowclip::wire::Compression;
+
+/// Serializes every tracing/registry-sensitive test in this binary.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_guard() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+static FILE_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn temp_path(tag: &str, ext: &str) -> PathBuf {
+    let k = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("cowclip_obs_{}_{tag}_{k}.{ext}", std::process::id()))
+}
+
+fn engine_for(clip: ClipMode) -> Engine {
+    Engine::reference(ModelKind::DeepFm, criteo_synth(), 8, vec![32, 32], 2, clip)
+}
+
+fn cfg_for(workers: usize, batch: usize, epochs: f64) -> TrainConfig {
+    let preset = criteo_preset();
+    TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs,
+        workers,
+        threads: 1,
+        param_shards: 1,
+        warmup_steps: 4,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    }
+}
+
+fn data(n: usize) -> (Dataset, Dataset) {
+    let schema = criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n, seed: 19, ..Default::default() });
+    random_split(&ds, 0.9, 0)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn seq_run(
+    clip: ClipMode,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> (TrainReport, ParamSet) {
+    let mut trainer = Trainer::new(engine_for(clip), cfg.clone()).unwrap();
+    let report = trainer.train(train, test).unwrap();
+    let params = trainer.store.snapshot();
+    (report, params)
+}
+
+/// 2-rank socket run with coordinator + workers on threads of this
+/// process (the protocol is byte-identical to the multi-process path).
+fn dist_run(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> (DistReport, ParamSet) {
+    let ranks = cfg.workers;
+    let sock = temp_path("dist", "sock");
+    let opts = DistOptions {
+        ranks,
+        endpoint: Endpoint::Unix(sock.clone()),
+        compress: Compression::None,
+        deadline: Duration::from_secs(60),
+    };
+    let out = std::thread::scope(|s| {
+        let opts = &opts;
+        let handles: Vec<_> = (0..ranks)
+            .map(|rank| {
+                s.spawn(move || {
+                    let engine = engine_for(ClipMode::CowClip);
+                    dist_worker(&engine, cfg, train, rank, opts)
+                })
+            })
+            .collect();
+        let engine = engine_for(ClipMode::CowClip);
+        let (report, store) = coordinate(&engine, cfg, train, test, opts).unwrap();
+        for (rank, h) in handles.into_iter().enumerate() {
+            h.join().unwrap().unwrap_or_else(|e| panic!("rank {rank} failed: {e:#}"));
+        }
+        (report, store.snapshot())
+    });
+    let _ = std::fs::remove_file(&sock);
+    out
+}
+
+/// Acceptance (inertness): all six clip modes produce bitwise-identical
+/// loss curves, params and AUC with tracing + periodic metrics
+/// snapshots enabled vs fully disabled.
+#[test]
+fn all_clip_modes_bitwise_identical_with_obs_on() {
+    let _g = obs_guard();
+    let (train, test) = data(1_200);
+    for clip in ClipMode::ALL {
+        let cfg = cfg_for(1, 128, 1.0);
+        obs::set_tracing(false);
+        let (off_report, off_params) = seq_run(clip, &cfg, &train, &test);
+
+        let jsonl = temp_path("parity", "jsonl");
+        obs::reset_spans();
+        obs::set_tracing(true);
+        let writer = obs::SnapshotWriter::spawn(&jsonl, Duration::from_millis(5)).unwrap();
+        let (on_report, on_params) = seq_run(clip, &cfg, &train, &test);
+        let lines = writer.finish().unwrap();
+        obs::set_tracing(false);
+        assert!(lines > 0, "{clip}: snapshot writer produced no lines");
+        assert!(
+            !obs::collect_spans().is_empty(),
+            "{clip}: tracing was on but no spans were recorded"
+        );
+        let _ = std::fs::remove_file(&jsonl);
+
+        assert_eq!(off_report.steps, on_report.steps, "{clip}: step count");
+        assert_bitwise(
+            &off_report.train_loss_curve,
+            &on_report.train_loss_curve,
+            &format!("{clip}: loss curve"),
+        );
+        for (i, (a, b)) in off_params.tensors.iter().zip(&on_params.tensors).enumerate() {
+            assert_bitwise(
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                &format!("{clip}: param[{i}] ({})", off_params.spec[i].name),
+            );
+        }
+        assert_eq!(
+            off_report.final_auc.to_bits(),
+            on_report.final_auc.to_bits(),
+            "{clip}: AUC {} vs {}",
+            off_report.final_auc,
+            on_report.final_auc
+        );
+    }
+}
+
+/// Acceptance (zero growth): after the first span warms a thread's
+/// ring, recording tens of thousands more spans and counter updates
+/// performs no further ring registration, and re-registering a metric
+/// returns the same slot.
+#[test]
+fn recording_is_allocation_free_after_warmup() {
+    let _g = obs_guard();
+    obs::reset_spans();
+    obs::set_tracing(true);
+    {
+        let _warm = obs::span(obs::Phase::Forward);
+    }
+    let grows = obs::thread_ring_grows();
+    assert!(grows > 0, "warmup span should have registered this thread's ring");
+
+    let ctr = obs::counter("obs_parity.gate");
+    let gauge = obs::gauge("obs_parity.gate_gauge");
+    let hist = obs::histogram("obs_parity.gate_hist");
+    for i in 0..20_000u64 {
+        let _s = obs::span_rank(obs::Phase::Clip, (i % 4) as usize);
+        ctr.inc();
+        gauge.set(i as f64);
+        hist.record((i % 7) as f64);
+    }
+    assert_eq!(
+        obs::thread_ring_grows(),
+        grows,
+        "steady-state span recording must not grow or re-register the ring"
+    );
+    // Registration is idempotent: the same name resolves to the same
+    // atomic slot, never a new allocation.
+    assert!(std::sync::Arc::ptr_eq(&ctr, &obs::counter("obs_parity.gate")));
+    obs::set_tracing(false);
+}
+
+/// Acceptance (dist attribution): a 2-rank run's trace carries wire-tx
+/// and wire-rx spans for both ranks, the per-rank wire-byte counters
+/// reconcile exactly with the run's wire report, and the chrome-trace
+/// JSON + JSONL snapshots parse with the expected phase names.
+#[test]
+fn two_rank_dist_trace_and_counters_reconcile() {
+    let _g = obs_guard();
+    let (train, test) = data(1_200);
+    let cfg = cfg_for(2, 128, 1.0);
+
+    obs::reset_spans();
+    obs::set_tracing(true);
+    let before = obs::snapshot_metrics();
+    let jsonl = temp_path("dist", "jsonl");
+    let writer = obs::SnapshotWriter::spawn(&jsonl, Duration::from_millis(5)).unwrap();
+    let (report, _params) = dist_run(&cfg, &train, &test);
+    let lines = writer.finish().unwrap();
+    obs::set_tracing(false);
+    let after = obs::snapshot_metrics();
+
+    // Per-rank wire spans, both directions, both ranks.
+    let spans = obs::collect_spans();
+    for rank in 0..2u32 {
+        for phase in [obs::Phase::WireTx, obs::Phase::WireRx] {
+            assert!(
+                spans.iter().any(|s| s.phase == phase && s.rank == rank),
+                "missing {} span for rank {rank}",
+                phase.name()
+            );
+        }
+    }
+
+    // Per-rank byte counters sum exactly to the wire report: the same
+    // expressions feed both, so this is equality, not approximation.
+    let delta = |name: &str| after.counter(name).saturating_sub(before.counter(name));
+    let rx_sum: u64 = (0..2).map(|r| delta(&format!("dist.rank{r}.rx_bytes"))).sum();
+    let tx_sum: u64 = (0..2).map(|r| delta(&format!("dist.rank{r}.tx_bytes"))).sum();
+    assert_eq!(rx_sum, report.stats.wire_bytes, "sum of per-rank rx vs uplink wire bytes");
+    assert_eq!(tx_sum, report.stats.bcast_bytes, "sum of per-rank tx vs broadcast bytes");
+
+    // Chrome trace export parses and names only known phases.
+    let trace = obs::render_json(&obs::chrome_trace_json());
+    let v = Json::parse(&trace).unwrap();
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "trace export is empty");
+    let known: Vec<&str> = obs::Phase::ALL.iter().map(|p| p.name()).collect();
+    for e in events {
+        let name = e.get("name").unwrap().as_str().unwrap();
+        assert!(known.contains(&name), "unknown phase {name:?} in trace");
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+    }
+    assert!(
+        events.iter().any(|e| e.get("name").unwrap().as_str().unwrap() == "wire-tx"),
+        "trace should contain wire-tx events"
+    );
+
+    // JSONL snapshots parse with the metrics schema.
+    assert!(lines > 0, "no snapshot lines written");
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let mut parsed = 0;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "cowclip-metrics-v1");
+        v.get("metrics").unwrap().get("counters").unwrap().as_obj().unwrap();
+        parsed += 1;
+    }
+    assert!(parsed > 0, "no parseable snapshot lines");
+    let last = Json::parse(text.lines().rev().find(|l| !l.trim().is_empty()).unwrap()).unwrap();
+    let counters = last.get("metrics").unwrap().get("counters").unwrap().as_obj().unwrap();
+    assert!(counters.contains_key("dist.steps"), "final snapshot should carry dist.steps");
+    let _ = std::fs::remove_file(&jsonl);
+}
+
+/// Acceptance (overhead): enabling tracing + metrics costs at most 3%
+/// of step wall time. Min-of-N on both sides, with retries, so timer
+/// noise on a loaded CI host doesn't flake the gate.
+#[test]
+fn obs_overhead_within_three_percent() {
+    let _g = obs_guard();
+    let (train, test) = data(3_000);
+    let cfg = cfg_for(1, 256, 1.0);
+    let clip = ClipMode::CowClip;
+
+    let min_of = |reps: usize, cfg: &TrainConfig| -> f64 {
+        (0..reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                let _ = seq_run(clip, cfg, &train, &test);
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+
+    let mut last = (0.0, 0.0);
+    for attempt in 0..5 {
+        obs::set_tracing(false);
+        let off = min_of(3, &cfg);
+        obs::reset_spans();
+        obs::set_tracing(true);
+        let on = min_of(3, &cfg);
+        obs::set_tracing(false);
+        last = (off, on);
+        if on <= off * 1.03 {
+            return;
+        }
+        eprintln!("overhead attempt {attempt}: off {off:.4}s on {on:.4}s — retrying");
+    }
+    panic!(
+        "tracing overhead above 3%: off {:.4}s vs on {:.4}s ({:+.1}%)",
+        last.0,
+        last.1,
+        (last.1 / last.0 - 1.0) * 100.0
+    );
+}
+
+/// Acceptance (CLI): a traced `cowclip train` writes chrome-trace and
+/// JSONL artifacts that `cowclip metrics --validate-*` accepts.
+#[test]
+fn cli_trace_and_metrics_artifacts_validate() {
+    let trace = temp_path("cli", "json");
+    let jsonl = temp_path("cli", "jsonl");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cowclip"))
+        .args([
+            "train",
+            "--model",
+            "deepfm",
+            "--schema",
+            "criteo_synth",
+            "--n",
+            "2000",
+            "--batch",
+            "128",
+            "--epochs",
+            "0.25",
+            "--threads",
+            "1",
+            "--engine",
+            "reference",
+            "--metrics-interval",
+            "5",
+        ])
+        .arg("--trace")
+        .arg(&trace)
+        .arg("--metrics-out")
+        .arg(&jsonl)
+        .output()
+        .expect("running the cowclip binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "traced train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("final test AUC"), "missing result line:\n{stdout}");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cowclip"))
+        .arg("metrics")
+        .arg("--validate-trace")
+        .arg(&trace)
+        .arg("--validate-jsonl")
+        .arg(&jsonl)
+        .output()
+        .expect("running cowclip metrics");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "validation failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("valid chrome trace"), "missing trace verdict:\n{stdout}");
+    assert!(stdout.contains("cowclip-metrics-v1"), "missing jsonl verdict:\n{stdout}");
+    let _ = std::fs::remove_file(&trace);
+    let _ = std::fs::remove_file(&jsonl);
+}
