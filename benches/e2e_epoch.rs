@@ -256,12 +256,12 @@ fn reference_distributed(smoke: bool) -> Vec<Json> {
         let _ = std::fs::remove_file(&sock);
         let mut cfg = reference_cfg(batch);
         cfg.workers = ranks;
-        let opts = DistOptions {
+        let opts = DistOptions::new(
             ranks,
-            endpoint: Endpoint::Unix(sock.clone()),
+            Endpoint::Unix(sock.clone()),
             compress,
-            deadline: std::time::Duration::from_secs(60),
-        };
+            std::time::Duration::from_secs(60),
+        );
         let report = std::thread::scope(|s| {
             let (schema, cfg, opts, train) = (&schema, &cfg, &opts, &train);
             let handles: Vec<_> = (0..ranks)

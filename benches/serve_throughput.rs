@@ -53,6 +53,7 @@ fn main() {
                 max_batch,
                 max_delay: Duration::from_micros(500),
                 threads: 2,
+                max_queue: 0,
             };
             let server = Server::start(Arc::clone(&frozen), cfg);
             let client = server.client();

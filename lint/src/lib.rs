@@ -103,10 +103,17 @@ impl Config {
                 "serve/model.rs",
                 "coordinator/transport.rs",
                 "coordinator/dist.rs",
+                "coordinator/chaos.rs",
                 "wire/frame.rs",
                 "wire/codec.rs",
+                "wire/link.rs",
             ]),
-            index_files: s(&["serve/queue.rs", "serve/request.rs", "wire/frame.rs"]),
+            index_files: s(&[
+                "serve/queue.rs",
+                "serve/request.rs",
+                "wire/frame.rs",
+                "wire/link.rs",
+            ]),
             unsafe_dirs: s(&["reference/simd/"]),
             obs_safe: s(&["span", "span_rank", "tracing_on"]),
             locks: vec![
@@ -157,6 +164,12 @@ impl Config {
                     recv: "error",
                     methods: &["lock"],
                     canon: "serve.error",
+                },
+                LockSpec {
+                    file_pat: "cli/commands.rs",
+                    recv: "children",
+                    methods: &["lock"],
+                    canon: "Supervisor.children",
                 },
             ],
         }

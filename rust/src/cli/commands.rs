@@ -1,7 +1,7 @@
 //! Subcommand implementations for the `cowclip` binary.
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -9,7 +9,7 @@ use anyhow::{bail, ensure, Context, Result};
 use super::args::Args;
 use crate::clip::ClipMode;
 use crate::coordinator::{
-    coordinate, dist_worker, DistOptions, Endpoint, Engine, TrainConfig, Trainer,
+    coordinate_with, dist_worker, DistOptions, Endpoint, Engine, Respawn, TrainConfig, Trainer,
 };
 use crate::wire::Compression;
 use crate::data::dataset::Dataset;
@@ -37,6 +37,8 @@ USAGE:
                      [--seed S] [--save CKPT] [--resume CKPT]
                      [--ranks R] [--bind SPEC] [--compress none|u16|u8]
                      [--deadline-ms D] [--spawn-workers]
+                     [--max-restarts K] [--retransmit-budget B]
+                     [--chaos SPEC] [--snapshot-every S]
                      (--threads 0 = one per core [default]; 1 = sequential)
                      (--param-shards 0 = auto [default]; 1 = serial apply;
                       --resume continues step counter + warmup schedule)
@@ -46,7 +48,20 @@ USAGE:
                       itself; --bind takes unix:PATH or tcp:HOST:PORT,
                       default a temp unix socket; --compress quantizes
                       sparse grads on the wire with error feedback)
+                     (fault tolerance: a rank lost mid-step is recovered
+                      step-atomically — up to --max-restarts rejoins per
+                      rank [default 2, 0 = abort on first loss; requires
+                      --compress none]; --retransmit-budget bounds CRC
+                      Nack/Resend healing per frame [default 3];
+                      --snapshot-every S writes a CCKS snapshot to the
+                      --save path every S committed steps;
+                      --chaos injects deterministic faults, e.g.
+                      'kill:rank=1,step=4;corrupt:rank=0,step=2,times=1;
+                      hang:rank=1,step=3,ms=800;seed:7' — kinds kill,
+                      hang, corrupt, drop, trunc, delay)
   cowclip worker     --rank R --ranks N --connect SPEC [train flags]
+                     [--chaos SPEC] [--max-restarts K]
+                     [--retransmit-budget B]
                      (one distributed data-parallel rank: connects to a
                       `train --ranks N` coordinator; data/model flags
                       must match the coordinator's — usually you want
@@ -56,11 +71,13 @@ USAGE:
                      [--engine hlo|reference]
   cowclip serve      --ckpt FILE [--model M] [--schema S] [--quant]
                      [--max-batch N] [--max-delay-us U] [--scoring-threads T]
-                     [--synthetic] [--duration-ms D] [--qps Q] [--seed S]
-                     [--requests FILE.tsv]
+                     [--max-queue N] [--synthetic] [--duration-ms D]
+                     [--qps Q] [--seed S] [--requests FILE.tsv]
                      (micro-batching scorer: synthetic open-loop load for
                       D ms — Q req/s, 0 = max rate — or a TSV of requests;
-                      --quant serves u16-quantized tables, ~2x less memory)
+                      --quant serves u16-quantized tables, ~2x less memory;
+                      --max-queue N sheds submits past N pending [0 =
+                      unbounded], counted on serve.rejected)
   cowclip inspect    <ckpt> [--model M] [--schema S]
                      (print format/step/per-table sizes of a CCKP/CCKS
                       file; --model+--schema resolve tensor shapes)
@@ -458,7 +475,15 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
         std::env::temp_dir().join(format!("cowclip_dist_{}.sock", std::process::id()));
     let endpoint: Endpoint =
         args.str_or("bind", &format!("unix:{}", default_sock.display())).parse()?;
-    let opts = DistOptions { ranks, endpoint, compress, deadline };
+    let mut opts = DistOptions::new(ranks, endpoint, compress, deadline);
+    apply_fault_flags(args, &mut opts)?;
+    opts.snapshot_every = args.u64_or("snapshot-every", 0)?;
+    if opts.snapshot_every > 0 {
+        let path = args
+            .get("save")
+            .context("--snapshot-every requires --save CKPT (snapshots write there)")?;
+        opts.snapshot = Some(PathBuf::from(path));
+    }
     println!(
         "distributed training {} on {}: {ranks} ranks at {}, batch {} (scale {:.0}x), rule {}, clip {}, compress {compress}, {} steps/epoch",
         s.model,
@@ -480,19 +505,27 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
         crate::obs::serve_metrics(&ep)?;
         println!("metrics exposition at {ep} (pull with `cowclip metrics --connect {ep}`)");
     }
-    let children =
-        if args.has("spawn-workers") { spawn_workers(args, ranks, &opts)? } else { Vec::new() };
-    let run = coordinate(&s.engine, &s.cfg, &s.train, &s.test, &opts);
+    let supervisor = if args.has("spawn-workers") {
+        Some(WorkerSupervisor::start(args, ranks, &opts)?)
+    } else {
+        None
+    };
+    let run = coordinate_with(
+        &s.engine,
+        &s.cfg,
+        &s.train,
+        &s.test,
+        &opts,
+        supervisor.as_ref().map(|sup| sup as &dyn Respawn),
+    );
     // Reap the forked ranks before surfacing the coordinator's result so
-    // a failed run never leaves orphan processes behind.
-    let mut worker_failures = Vec::new();
-    for (rank, mut child) in children.into_iter().enumerate() {
-        match child.wait() {
-            Ok(status) if status.success() => {}
-            Ok(status) => worker_failures.push(format!("rank {rank} exited with {status}")),
-            Err(e) => worker_failures.push(format!("rank {rank} not reaped: {e}")),
-        }
-    }
+    // a failed run never leaves orphan processes behind. Only each
+    // rank's *last* incarnation must exit cleanly — earlier ones may
+    // have died by injected faults and been respawned.
+    let worker_failures = match &supervisor {
+        Some(sup) => sup.reap(),
+        None => Vec::new(),
+    };
     let (report, store) = run?;
     ensure!(
         worker_failures.is_empty(),
@@ -521,6 +554,15 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
         let tx = delta(&format!("dist.rank{rank}.tx_bytes"));
         println!("  rank {rank}: {:.1} MiB up, {:.1} MiB down", mib(rx), mib(tx));
     }
+    if report.stats.dead_ranks > 0 || report.stats.retransmits > 0 {
+        println!(
+            "  recovery: {} rank losses, {} rejoins, {} steps recovered, {} frames retransmitted",
+            report.stats.dead_ranks,
+            report.stats.reconnects,
+            report.stats.recovered_steps,
+            report.stats.retransmits
+        );
+    }
     println!(
         "final test AUC {:.4}%  logloss {:.4}",
         report.final_auc * 100.0,
@@ -534,47 +576,126 @@ fn dist_train_cmd(args: &Args, ranks: usize) -> Result<()> {
     Ok(())
 }
 
-/// Fork one `cowclip worker` child per rank, echoing the data/model
-/// flags so every replica derives the coordinator's exact state.
-fn spawn_workers(
-    args: &Args,
+/// Fault-tolerance knobs shared by `train --ranks` and `worker`.
+fn apply_fault_flags(args: &Args, opts: &mut DistOptions) -> Result<()> {
+    opts.retransmit_budget = args.u64_or("retransmit-budget", 3)? as u32;
+    opts.max_restarts = args.u64_or("max-restarts", 2)? as u32;
+    if let Some(spec) = args.get("chaos") {
+        opts.chaos = Some(spec.parse().context("parsing --chaos")?);
+    }
+    Ok(())
+}
+
+/// Forked `cowclip worker` ranks plus the ability to relaunch one that
+/// died mid-run (the coordinator's [`Respawn`] hook). Every spawned
+/// child is recorded, and [`WorkerSupervisor::reap`] holds only each
+/// rank's *last* incarnation to a clean exit: earlier incarnations may
+/// have died on purpose (chaos kills) and been replaced.
+struct WorkerSupervisor {
+    exe: PathBuf,
+    /// `--key value` argv echoed to every rank (data/model flags).
+    passthrough: Vec<String>,
+    endpoint: String,
     ranks: usize,
-    opts: &DistOptions,
-) -> Result<Vec<std::process::Child>> {
-    let exe = std::env::current_exe().context("locating the cowclip binary")?;
-    let passthrough = [
-        "model",
-        "schema",
-        "batch",
-        "rule",
-        "clip",
-        "epochs",
-        "n",
-        "threads",
-        "param-shards",
-        "seed",
-        "engine",
-        "deadline-ms",
-        "kernel",
-    ];
-    let mut children = Vec::with_capacity(ranks);
-    for rank in 0..ranks {
-        let mut cmd = std::process::Command::new(&exe);
-        cmd.arg("worker")
-            .args(["--rank", &rank.to_string()])
-            .args(["--ranks", &ranks.to_string()])
-            .args(["--connect", &opts.endpoint.to_string()]);
-        for key in passthrough {
+    /// Forwarded to the *first* incarnation of each rank only: a
+    /// respawn models a fresh post-crash process, so it starts with no
+    /// fault schedule (otherwise a `kill` event would fire again and
+    /// the run could never converge).
+    chaos: Option<String>,
+    children: Mutex<Vec<(usize, std::process::Child)>>,
+}
+
+impl WorkerSupervisor {
+    /// Fork one `cowclip worker` child per rank, echoing the data/model
+    /// flags so every replica derives the coordinator's exact state.
+    fn start(args: &Args, ranks: usize, opts: &DistOptions) -> Result<WorkerSupervisor> {
+        let exe = std::env::current_exe().context("locating the cowclip binary")?;
+        let keys = [
+            "model",
+            "schema",
+            "batch",
+            "rule",
+            "clip",
+            "epochs",
+            "n",
+            "threads",
+            "param-shards",
+            "seed",
+            "engine",
+            "deadline-ms",
+            "kernel",
+            "max-restarts",
+            "retransmit-budget",
+        ];
+        let mut passthrough = Vec::new();
+        for key in keys {
             if let Some(v) = args.get(key) {
-                cmd.arg(format!("--{key}")).arg(v);
+                passthrough.push(format!("--{key}"));
+                passthrough.push(v.to_string());
             }
         }
         if args.has("seq-split") {
-            cmd.arg("--seq-split");
+            passthrough.push("--seq-split".to_string());
         }
-        children.push(cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?);
+        let sup = WorkerSupervisor {
+            exe,
+            passthrough,
+            endpoint: opts.endpoint.to_string(),
+            ranks,
+            chaos: args.get("chaos").map(str::to_string),
+            children: Mutex::new(Vec::with_capacity(ranks)),
+        };
+        for rank in 0..ranks {
+            sup.spawn_rank(rank, true)?;
+        }
+        Ok(sup)
     }
-    Ok(children)
+
+    fn spawn_rank(&self, rank: usize, with_chaos: bool) -> Result<()> {
+        let mut cmd = std::process::Command::new(&self.exe);
+        cmd.arg("worker")
+            .args(["--rank", &rank.to_string()])
+            .args(["--ranks", &self.ranks.to_string()])
+            .args(["--connect", &self.endpoint]);
+        for a in &self.passthrough {
+            cmd.arg(a);
+        }
+        if with_chaos {
+            if let Some(spec) = &self.chaos {
+                cmd.arg("--chaos").arg(spec);
+            }
+        }
+        let child = cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?;
+        self.children.lock().unwrap_or_else(PoisonError::into_inner).push((rank, child));
+        Ok(())
+    }
+
+    /// Wait for every child ever spawned; returns one message per rank
+    /// whose last incarnation did not exit cleanly.
+    fn reap(&self) -> Vec<String> {
+        let drained = {
+            let mut guard = self.children.lock().unwrap_or_else(PoisonError::into_inner);
+            std::mem::take(&mut *guard)
+        };
+        let mut last: std::collections::BTreeMap<usize, Option<String>> =
+            std::collections::BTreeMap::new();
+        for (rank, mut child) in drained {
+            let verdict = match child.wait() {
+                Ok(status) if status.success() => None,
+                Ok(status) => Some(format!("rank {rank} exited with {status}")),
+                Err(e) => Some(format!("rank {rank} not reaped: {e}")),
+            };
+            last.insert(rank, verdict);
+        }
+        last.into_values().flatten().collect()
+    }
+}
+
+impl Respawn for WorkerSupervisor {
+    fn respawn(&self, rank: usize) -> Result<()> {
+        // Post-crash processes start clean: no chaos schedule.
+        self.spawn_rank(rank, false)
+    }
 }
 
 /// One distributed data-parallel rank: rebuild the coordinator's replica
@@ -592,7 +713,8 @@ fn worker_cmd(args: &Args) -> Result<()> {
     let s = train_setup(args, ranks, false)?;
     // The coordinator's Welcome dictates the wire compression; the
     // worker-side field is never consulted.
-    let opts = DistOptions { ranks, endpoint, compress: Compression::None, deadline };
+    let mut opts = DistOptions::new(ranks, endpoint, Compression::None, deadline);
+    apply_fault_flags(args, &mut opts)?;
     dist_worker(&s.engine, &s.cfg, &s.train, rank, &opts)
 }
 
@@ -705,12 +827,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
         max_batch: args.usize_or("max-batch", 64)?.max(1),
         max_delay: Duration::from_micros(args.u64_or("max-delay-us", 2000)?),
         threads: args.usize_or("scoring-threads", 2)?.max(1),
+        max_queue: args.usize_or("max-queue", 0)?,
     };
     println!(
-        "serving: max batch {}, deadline {} us, {} scoring threads",
+        "serving: max batch {}, deadline {} us, {} scoring threads, queue bound {}",
         cfg.max_batch,
         cfg.max_delay.as_micros(),
-        cfg.threads
+        cfg.threads,
+        if cfg.max_queue == 0 { "off".to_string() } else { cfg.max_queue.to_string() }
     );
     let obs = obs_start(args)?;
     let server = Server::start(Arc::clone(&frozen), cfg);

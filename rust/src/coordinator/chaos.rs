@@ -1,0 +1,488 @@
+//! Deterministic fault injection for the distributed transport.
+//!
+//! Every failure mode the fault-tolerance layer claims to survive is
+//! reproducible on demand: a [`ChaosSpec`] (parsed from `--chaos SPEC`)
+//! schedules faults against specific ranks and steps, and a
+//! [`ChaosConn`] applies the frame-level ones on the write side of a
+//! worker's connection. Process-level faults (kill, stall) are consumed
+//! by the worker loop at step boundaries. Everything is seeded and
+//! schedule-driven — two runs with the same spec inject bit-identical
+//! faults at the same instants — which is what lets `fault_parity.rs`
+//! assert that a recovered run is *bitwise* equal to an uninterrupted
+//! one.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! SPEC   := clause (';' clause)*
+//! clause := KIND ':' arg (',' arg)*   |   'seed' ':' N
+//! arg    := 'rank=' R | 'step=' N | 'ms=' T | 'times=' K
+//! KIND   := 'kill' | 'hang' | 'corrupt' | 'drop' | 'trunc' | 'delay'
+//! ```
+//!
+//! - `kill:rank=1,step=4` — rank 1's worker aborts at the step-4
+//!   boundary, before computing or sending its contribution (simulated
+//!   process death; under `--spawn-workers` the child exits nonzero and
+//!   the coordinator respawns it).
+//! - `hang:rank=0,step=3,ms=800` — the worker stalls 800 ms at step 3
+//!   before sending, tripping the coordinator's io deadline.
+//! - `corrupt:rank=1,step=3` — one payload bit of the frame sent at
+//!   step 3 is flipped (CRC mismatch at the receiver; healed by the
+//!   wire-link Nack/Resend exchange). `times=K` corrupts the first K
+//!   frames flushed at that step — including retransmissions, which is
+//!   how the retry budget is exhausted on purpose.
+//! - `drop:rank=0,step=2` — the frame sent at step 2 is swallowed.
+//! - `trunc:rank=0,step=2` — only the first half of the frame is sent
+//!   (desyncs the stream; heals via reconnect, not retransmit).
+//! - `delay:rank=0,step=2,ms=50` — the frame is sent 50 ms late.
+//! - `rank=` is optional (default: every rank); `step=` is required;
+//!   `seed:N` reseeds the corrupt-bit position generator.
+//!
+//! All events are one-shot (consumed when they fire), so a respawned or
+//! reconnected replica does not re-trigger them; the CLI additionally
+//! strips `--chaos` from respawned workers.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::str::FromStr;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::transport::{Conn, Endpoint, Listener};
+use crate::wire::FRAME_HEADER_LEN;
+
+/// The kind of injected fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Abort the worker process at a step boundary.
+    Kill,
+    /// Stall the worker `ms` at a step boundary before sending.
+    Hang,
+    /// Flip one payload bit of a frame sent at the step.
+    Corrupt,
+    /// Swallow a frame sent at the step.
+    Drop,
+    /// Send only the first half of a frame (stream desync).
+    Trunc,
+    /// Send a frame `ms` late.
+    Delay,
+}
+
+impl ChaosKind {
+    /// Frame-level faults are applied by [`ChaosConn`]; the rest are
+    /// consumed by the worker loop.
+    fn is_frame(self) -> bool {
+        matches!(self, ChaosKind::Corrupt | ChaosKind::Drop | ChaosKind::Trunc | ChaosKind::Delay)
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub kind: ChaosKind,
+    /// Target rank; `None` targets every rank.
+    pub rank: Option<u32>,
+    /// 1-based training step the fault fires at.
+    pub step: u64,
+    /// Stall/delay duration for `hang`/`delay`.
+    pub ms: u64,
+    /// How many frames flushed at `step` the fault applies to
+    /// (frame-level kinds only; each application consumes one).
+    pub times: u32,
+}
+
+/// A parsed `--chaos` schedule. See the module docs for the grammar.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    pub events: Vec<ChaosEvent>,
+}
+
+impl FromStr for ChaosSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ChaosSpec> {
+        let mut seed: u64 = 0x5eed;
+        let mut events = Vec::new();
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind_str, args) = match clause.split_once(':') {
+                Some((k, a)) => (k.trim(), a.trim()),
+                None => bail!("chaos: clause `{clause}` is missing `:` (grammar: kind:key=val,...)"),
+            };
+            if kind_str == "seed" {
+                seed = args.parse().with_context(|| format!("chaos: bad seed `{args}`"))?;
+                continue;
+            }
+            let kind = match kind_str {
+                "kill" => ChaosKind::Kill,
+                "hang" | "stall" => ChaosKind::Hang,
+                "corrupt" => ChaosKind::Corrupt,
+                "drop" => ChaosKind::Drop,
+                "trunc" => ChaosKind::Trunc,
+                "delay" => ChaosKind::Delay,
+                other => bail!(
+                    "chaos: unknown kind `{other}` (expected kill|hang|corrupt|drop|trunc|delay|seed)"
+                ),
+            };
+            let mut ev = ChaosEvent { kind, rank: None, step: 0, ms: 0, times: 1 };
+            for arg in args.split(',') {
+                let arg = arg.trim();
+                if arg.is_empty() {
+                    continue;
+                }
+                let (key, val) = match arg.split_once('=') {
+                    Some((k, v)) => (k.trim(), v.trim()),
+                    None => bail!("chaos: bad argument `{arg}` in `{clause}` (expected key=val)"),
+                };
+                let parsed: u64 =
+                    val.parse().with_context(|| format!("chaos: bad value `{val}` for `{key}`"))?;
+                match key {
+                    "rank" => ev.rank = Some(parsed as u32),
+                    "step" => ev.step = parsed,
+                    "ms" => ev.ms = parsed,
+                    "times" => ev.times = parsed as u32,
+                    other => bail!("chaos: unknown key `{other}` (expected rank|step|ms|times)"),
+                }
+            }
+            ensure!(ev.step >= 1, "chaos: `{clause}` needs step=N (steps are 1-based)");
+            ensure!(
+                !matches!(ev.kind, ChaosKind::Hang | ChaosKind::Delay) || ev.ms > 0,
+                "chaos: `{clause}` needs ms=T"
+            );
+            ensure!(ev.times >= 1, "chaos: `{clause}` has times=0 (it would never fire)");
+            events.push(ev);
+        }
+        ensure!(!events.is_empty(), "chaos: spec `{s}` contains no events");
+        Ok(ChaosSpec { seed, events })
+    }
+}
+
+/// The live, consumable form of a [`ChaosSpec`] for one rank: events
+/// are removed as they fire, so a schedule salvaged across a reconnect
+/// (see [`ChaosConn::into_parts`]) does not re-inject healed faults.
+#[derive(Debug, Default)]
+pub struct ChaosSchedule {
+    seed: u64,
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosSchedule {
+    /// A schedule that never fires.
+    pub fn inert() -> ChaosSchedule {
+        ChaosSchedule::default()
+    }
+
+    /// The subset of `spec` targeting `rank` (or all ranks).
+    pub fn for_rank(spec: Option<&ChaosSpec>, rank: usize) -> ChaosSchedule {
+        match spec {
+            None => ChaosSchedule::inert(),
+            Some(spec) => ChaosSchedule {
+                seed: spec.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                events: spec
+                    .events
+                    .iter()
+                    .filter(|e| e.rank.is_none() || e.rank == Some(rank as u32))
+                    .copied()
+                    .collect(),
+            },
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Remove and return the process-level events (kill/hang) due at
+    /// `step`. Called once per step by the worker loop.
+    pub fn take_process(&mut self, step: u64) -> Vec<ChaosEvent> {
+        let mut due = Vec::new();
+        self.events.retain(|e| {
+            if !e.kind.is_frame() && e.step == step {
+                due.push(*e);
+                false
+            } else {
+                true
+            }
+        });
+        due
+    }
+
+    /// Consume one application of a frame-level event due at `step`.
+    fn take_frame(&mut self, step: u64) -> Option<ChaosEvent> {
+        let pos = self.events.iter().position(|e| e.kind.is_frame() && e.step == step)?;
+        let ev = {
+            let e = self.events.get_mut(pos)?;
+            e.times = e.times.saturating_sub(1);
+            *e
+        };
+        if ev.times == 0 {
+            self.events.remove(pos);
+        }
+        Some(ev)
+    }
+}
+
+/// The distinguished error a chaos `kill` raises in the worker: the
+/// reconnect loop treats it as fatal (a real process death — the
+/// process exits nonzero) rather than retrying in-process.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosKill {
+    pub rank: usize,
+    pub step: u64,
+}
+
+impl fmt::Display for ChaosKill {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "chaos: kill rank {} at step {} (injected fault)", self.rank, self.step)
+    }
+}
+
+impl std::error::Error for ChaosKill {}
+
+/// A [`Conn`] wrapper that injects the schedule's frame-level faults on
+/// the write side. Writes are buffered until `flush` — `write_frame`
+/// flushes exactly once per frame, so each flush is one frame and the
+/// fault is applied to whole frames, never to a byte range spanning
+/// two.
+///
+/// Reads pass through untouched: every fault is injected at its
+/// *sender*, which keeps cause and schedule in one place.
+pub struct ChaosConn {
+    inner: Conn,
+    sched: ChaosSchedule,
+    step: u64,
+    wbuf: Vec<u8>,
+    rng: u64,
+}
+
+impl ChaosConn {
+    pub fn new(inner: Conn, sched: ChaosSchedule) -> ChaosConn {
+        let rng = sched.seed ^ 0x243F_6A88_85A3_08D3;
+        ChaosConn { inner, sched, step: 0, wbuf: Vec::new(), rng }
+    }
+
+    /// A wrapper with an empty schedule — plain pass-through, used on
+    /// the coordinator side and on fault-free workers.
+    pub fn inert(inner: Conn) -> ChaosConn {
+        ChaosConn::new(inner, ChaosSchedule::inert())
+    }
+
+    /// Point the schedule at the current training step.
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// The underlying connection (deadlines, shutdown).
+    pub fn conn(&self) -> &Conn {
+        &self.inner
+    }
+
+    pub fn schedule_mut(&mut self) -> &mut ChaosSchedule {
+        &mut self.sched
+    }
+
+    /// Tear down the wrapper, salvaging the connection and whatever
+    /// events have not fired yet (a reconnect carries them forward).
+    pub fn into_parts(self) -> (Conn, ChaosSchedule) {
+        (self.inner, self.sched)
+    }
+
+    /// splitmix64 — deterministic corrupt-bit positions from the seed.
+    fn next_rand(&mut self) -> u64 {
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn flush_frame(&mut self, mut frame: Vec<u8>) -> io::Result<()> {
+        match self.sched.take_frame(self.step) {
+            None => {
+                self.inner.write_all(&frame)?;
+                self.inner.flush()
+            }
+            Some(ev) => match ev.kind {
+                ChaosKind::Drop => Ok(()),
+                ChaosKind::Delay => {
+                    std::thread::sleep(Duration::from_millis(ev.ms));
+                    self.inner.write_all(&frame)?;
+                    self.inner.flush()
+                }
+                ChaosKind::Trunc => {
+                    let half = frame.len() / 2;
+                    frame.truncate(half);
+                    self.inner.write_all(&frame)?;
+                    self.inner.flush()
+                }
+                ChaosKind::Corrupt => {
+                    // Flip one bit in the payload (or, for an empty
+                    // payload, in the CRC field) — never in the magic /
+                    // kind bytes, so the receiver stays frame-aligned
+                    // and the damage is exactly a CRC mismatch.
+                    let r = self.next_rand();
+                    let idx = if frame.len() > FRAME_HEADER_LEN {
+                        FRAME_HEADER_LEN + (r as usize) % (frame.len() - FRAME_HEADER_LEN)
+                    } else {
+                        8 // first CRC byte
+                    };
+                    let bit = (r >> 32) % 8;
+                    if let Some(b) = frame.get_mut(idx) {
+                        *b ^= 1u8 << bit;
+                    }
+                    self.inner.write_all(&frame)?;
+                    self.inner.flush()
+                }
+                // Process-level kinds never reach take_frame.
+                ChaosKind::Kill | ChaosKind::Hang => {
+                    self.inner.write_all(&frame)?;
+                    self.inner.flush()
+                }
+            },
+        }
+    }
+}
+
+impl Read for ChaosConn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.inner.read(buf)
+    }
+}
+
+impl Write for ChaosConn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.wbuf.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.wbuf.is_empty() {
+            return Ok(());
+        }
+        let frame = std::mem::take(&mut self.wbuf);
+        self.flush_frame(frame)
+    }
+}
+
+/// A [`Listener`] whose accepted connections come pre-wrapped in
+/// (inert) [`ChaosConn`]s, so both sides of the dist loop speak the
+/// same stream type; faults are injected at the worker ranks.
+pub struct ChaosListener {
+    inner: Listener,
+}
+
+impl ChaosListener {
+    pub fn bind(endpoint: &Endpoint) -> Result<ChaosListener> {
+        Ok(ChaosListener { inner: endpoint.bind()? })
+    }
+
+    pub fn accept_deadline(&self, deadline: Duration) -> Result<ChaosConn> {
+        Ok(ChaosConn::inert(self.inner.accept_deadline(deadline)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_full_grammar() {
+        let spec: ChaosSpec =
+            "seed:7; kill:rank=1,step=4; hang:rank=0,step=3,ms=800; corrupt:step=2,times=5; \
+             drop:rank=0,step=2; trunc:step=5; delay:step=2,ms=50"
+                .parse()
+                .unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.events.len(), 6);
+        assert_eq!(
+            spec.events[0],
+            ChaosEvent { kind: ChaosKind::Kill, rank: Some(1), step: 4, ms: 0, times: 1 }
+        );
+        assert_eq!(spec.events[2].kind, ChaosKind::Corrupt);
+        assert_eq!(spec.events[2].times, 5);
+        assert_eq!(spec.events[2].rank, None);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "explode:step=1",
+            "kill:rank=1",          // missing step
+            "hang:step=2",          // missing ms
+            "kill",                 // missing colon
+            "kill:rank",            // missing =
+            "corrupt:step=1,times=0",
+            "kill:step=x",
+        ] {
+            assert!(bad.parse::<ChaosSpec>().is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn schedule_filters_by_rank_and_consumes_events() {
+        let spec: ChaosSpec = "kill:rank=1,step=4; corrupt:step=2,times=2".parse().unwrap();
+        let mut r0 = ChaosSchedule::for_rank(Some(&spec), 0);
+        let mut r1 = ChaosSchedule::for_rank(Some(&spec), 1);
+        // rank 0 only sees the all-rank corrupt event.
+        assert!(r0.take_process(4).is_empty());
+        assert_eq!(r0.take_frame(2).unwrap().kind, ChaosKind::Corrupt);
+        assert_eq!(r0.take_frame(2).unwrap().kind, ChaosKind::Corrupt);
+        assert!(r0.take_frame(2).is_none(), "times=2 exhausted");
+        // rank 1 sees kill at step 4, exactly once.
+        assert!(r1.take_process(3).is_empty());
+        let due = r1.take_process(4);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].kind, ChaosKind::Kill);
+        assert!(r1.take_process(4).is_empty(), "one-shot");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn chaos_conn_applies_frame_faults() {
+        use crate::wire::{read_frame, write_frame, FrameKind, FrameRead};
+        use std::os::unix::net::UnixStream;
+
+        let pair = |spec: &str, rank: usize| {
+            let (a, b) = UnixStream::pair().unwrap();
+            let spec: ChaosSpec = spec.parse().unwrap();
+            let sched = ChaosSchedule::for_rank(Some(&spec), rank);
+            (ChaosConn::new(Conn::Unix(a), sched), Conn::Unix(b))
+        };
+
+        // corrupt: receiver sees a CRC mismatch, stream stays aligned.
+        let (mut tx, mut rx) = pair("corrupt:step=3", 0);
+        tx.set_step(3);
+        write_frame(&mut tx, FrameKind::Contrib, b"some gradient bytes").unwrap();
+        match crate::wire::frame::read_frame_checked(&mut rx).unwrap() {
+            FrameRead::Corrupt { kind, .. } => assert_eq!(kind, FrameKind::Contrib),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // The next frame (step moved on) is clean.
+        tx.set_step(4);
+        write_frame(&mut tx, FrameKind::Contrib, b"clean").unwrap();
+        let (_, payload) = read_frame(&mut rx).unwrap();
+        assert_eq!(payload, b"clean");
+
+        // drop: nothing arrives; a later frame does.
+        let (mut tx, mut rx) = pair("drop:step=1", 0);
+        tx.set_step(1);
+        write_frame(&mut tx, FrameKind::Contrib, b"swallowed").unwrap();
+        tx.set_step(2);
+        write_frame(&mut tx, FrameKind::Contrib, b"arrives").unwrap();
+        let (_, payload) = read_frame(&mut rx).unwrap();
+        assert_eq!(payload, b"arrives");
+
+        // events scheduled for another rank do not fire.
+        let (mut tx, mut rx) = pair("corrupt:rank=1,step=3", 0);
+        tx.set_step(3);
+        write_frame(&mut tx, FrameKind::Contrib, b"untouched").unwrap();
+        let (_, payload) = read_frame(&mut rx).unwrap();
+        assert_eq!(payload, b"untouched");
+    }
+}

@@ -39,27 +39,65 @@
 //! MLP gradients are never quantized; the broadcast total stays
 //! lossless either way.
 //!
+//! # Fault tolerance
+//!
 //! Liveness is deadline-based: every socket read/write is armed with
-//! [`DistOptions::deadline`], so a killed or hung rank surfaces as an
-//! error naming the deadline and the coordinator pushes an `Error`
-//! frame to the surviving ranks before shutting down.
+//! [`DistOptions::deadline`]. On top of that, PR 10 makes a rank
+//! failure *recoverable* instead of run-fatal:
+//!
+//! - **Step-atomic commit.** The coordinator applies a step only after
+//!   all `N` contributions arrived and the lossless total was reduced.
+//!   If a rank dies mid-step, the contributions already read are
+//!   *retained* (parameters have not changed, so they stay valid), the
+//!   rank is marked dead, and the run enters a bounded **recovery
+//!   window** (3× the io deadline) instead of aborting.
+//! - **Versioned rejoin.** A reconnecting worker's `Hello` names the
+//!   last step it applied plus its [`TrainConfig::fingerprint`]; the
+//!   coordinator refuses mismatched configs and replies with its
+//!   `committed` step. The worker replays `last+1..=committed` by
+//!   local reduction ([`replay_step`] computes *all* ranks' shards from
+//!   its own batch stream) — bitwise identical to the socket path
+//!   because the broadcast total is a lossless round-trip of exactly
+//!   that reduction. Recovery therefore **requires
+//!   [`Compression::None`]**: quantized uplinks carry per-rank
+//!   error-feedback state that a fresh process cannot rebuild, and both
+//!   sides refuse recovery rather than silently fork the replicas.
+//! - **Bounded retransmission.** CRC-corrupt frames are healed by the
+//!   [`FrameLink`] Nack/Resend exchange within
+//!   [`DistOptions::retransmit_budget`]; only then is the peer lost.
+//! - **Fault injection.** [`DistOptions::chaos`] arms a deterministic,
+//!   seeded [`ChaosSpec`] schedule on the worker side (kill / hang a
+//!   rank at step N, corrupt / drop / truncate / delay a frame), so
+//!   every recovery path above is exercised by tests
+//!   (`rust/tests/fault_parity.rs`) and CI rather than by production
+//!   incidents.
+//! - **Coordinator snapshots.** [`DistOptions::snapshot_every`] writes
+//!   a CCKS checkpoint every K committed steps so a coordinator crash
+//!   can restart the whole run from the last committed step.
+//!
+//! Observable counters: `dist.reconnects`, `dist.retransmits`,
+//! `dist.recovered_steps`, `dist.dead_ranks`, `dist.error_fanout_dropped`.
 
 use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::allreduce::{Reduced, TreeReducer};
+use super::allreduce::{Contribution, Reduced, TreeReducer};
+use super::chaos::{ChaosConn, ChaosKill, ChaosKind, ChaosListener, ChaosSchedule, ChaosSpec};
 use super::engine::Engine;
 use super::trainer::{
     apply_contribution, evaluate_with, hypers_for_step, init_store, TrainConfig,
 };
 use super::transport::{Conn, Endpoint};
 use super::worker::WorkerShard;
-use crate::data::batcher::Batcher;
+use crate::data::batcher::{Batch, Batcher};
 use crate::data::dataset::Dataset;
 use crate::model::params::ParamSet;
 use crate::model::store::ParamStore;
+use crate::obs::Counter;
 use crate::reference::Scratch;
 use crate::scaling::rules::HyperSet;
 use crate::scaling::warmup::Warmup;
@@ -67,9 +105,10 @@ use crate::tensor::GradTensor;
 use crate::wire::codec::{
     decode_contribution, decode_error, decode_hello, decode_welcome, dequant,
     encode_contribution, encode_error, encode_hello, encode_welcome, quant_code, quant_scale,
-    Compression, Hello, Welcome,
+    Compression, ContribStats, Hello, Welcome,
 };
-use crate::wire::frame::{read_frame, write_frame, FrameKind, FRAME_HEADER_LEN};
+use crate::wire::frame::{write_frame, FrameKind, FRAME_HEADER_LEN};
+use crate::wire::link::FrameLink;
 
 /// Everything a distributed run needs besides the [`TrainConfig`].
 #[derive(Clone, Debug)]
@@ -80,8 +119,47 @@ pub struct DistOptions {
     pub endpoint: Endpoint,
     /// Wire compression for worker → coordinator sparse gradients.
     pub compress: Compression,
-    /// Accept + per-I/O deadline: a peer silent for longer errors out.
+    /// Accept + per-I/O deadline: a peer silent for longer is lost.
     pub deadline: Duration,
+    /// Corrupt receptions healed per logical frame before the peer is
+    /// treated as lost (the [`FrameLink`] Nack/Resend budget).
+    pub retransmit_budget: u32,
+    /// Rejoins tolerated per rank (and worker-side reconnect attempts)
+    /// before the run fails. `0` disables recovery entirely: the first
+    /// lost rank aborts the run, as before PR 10.
+    pub max_restarts: u32,
+    /// Deterministic fault-injection schedule, armed on the worker side
+    /// (`--chaos`). `None` in production.
+    pub chaos: Option<ChaosSpec>,
+    /// Write a CCKS snapshot of the coordinator store every K committed
+    /// steps (`0` = off). Requires [`DistOptions::snapshot`].
+    pub snapshot_every: u64,
+    /// Snapshot destination path.
+    pub snapshot: Option<PathBuf>,
+}
+
+impl DistOptions {
+    /// Options with the fault-tolerance knobs at their defaults:
+    /// retransmit budget 3, two restarts per rank, no chaos, no
+    /// snapshots.
+    pub fn new(
+        ranks: usize,
+        endpoint: Endpoint,
+        compress: Compression,
+        deadline: Duration,
+    ) -> DistOptions {
+        DistOptions {
+            ranks,
+            endpoint,
+            compress,
+            deadline,
+            retransmit_budget: 3,
+            max_restarts: 2,
+            chaos: None,
+            snapshot_every: 0,
+            snapshot: None,
+        }
+    }
 }
 
 /// Wire-traffic accounting for one distributed run (coordinator side).
@@ -101,6 +179,14 @@ pub struct DistStats {
     pub sparse_raw_bytes: u64,
     /// On-wire bytes of the same sparse sections.
     pub sparse_wire_bytes: u64,
+    /// Successful rank rejoins accepted by the coordinator.
+    pub reconnects: u64,
+    /// CRC-corrupt frames healed by Nack/Resend on coordinator links.
+    pub retransmits: u64,
+    /// Steps that committed despite losing (and recovering) a rank.
+    pub recovered_steps: u64,
+    /// Rank-loss events (a rank can die, rejoin, and die again).
+    pub dead_ranks: u64,
 }
 
 impl DistStats {
@@ -127,6 +213,27 @@ pub struct DistReport {
     pub wall_seconds: f64,
 }
 
+/// Hook used by `--spawn-workers`: relaunch the worker process for a
+/// dead rank so it can rejoin within the recovery window. Reconnects
+/// from still-alive ranks (hung, not crashed) need no hook — they reuse
+/// the in-library retry path.
+pub trait Respawn {
+    fn respawn(&self, rank: usize) -> Result<()>;
+}
+
+/// Terminal coordinator verdict carried by an `Error` frame: the worker
+/// must *not* reconnect after one of these — the run itself is over.
+#[derive(Debug)]
+struct CoordinatorAbort(String);
+
+impl fmt::Display for CoordinatorAbort {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CoordinatorAbort {}
+
 fn validate(cfg: &TrainConfig, opts: &DistOptions) -> Result<()> {
     ensure!(opts.ranks >= 1, "dist: ranks must be >= 1");
     ensure!(
@@ -141,6 +248,10 @@ fn validate(cfg: &TrainConfig, opts: &DistOptions) -> Result<()> {
         cfg.batch,
         opts.ranks
     );
+    ensure!(
+        opts.snapshot_every == 0 || opts.snapshot.is_some(),
+        "dist: --snapshot-every needs a snapshot path (--save)"
+    );
     Ok(())
 }
 
@@ -154,9 +265,44 @@ fn plan_steps(cfg: &TrainConfig, train: &Dataset) -> Result<u64> {
     Ok(total_steps as u64)
 }
 
-/// Run the coordinator: bind, handshake all ranks, drive the step loop,
-/// then evaluate the final replica. Returns the report and the trained
-/// store (bitwise identical to every worker's replica).
+/// Per-rank connection state on the coordinator.
+struct RankLinks {
+    /// One slot per rank; `None` while the rank is dead.
+    links: Vec<Option<FrameLink<ChaosConn>>>,
+    /// Connections of lost ranks, parked *open*: a hung-but-alive peer
+    /// can still be handed the terminal `Error` fan-out through its old
+    /// socket even though the coordinator will never read from it again.
+    parked: Vec<Conn>,
+    /// Rejoins consumed per rank (bounded by `max_restarts`).
+    restarts: Vec<u32>,
+}
+
+impl RankLinks {
+    fn new(ranks: usize) -> RankLinks {
+        RankLinks {
+            links: (0..ranks).map(|_| None).collect(),
+            parked: Vec::new(),
+            restarts: vec![0; ranks],
+        }
+    }
+
+    fn any_dead(&self) -> bool {
+        self.links.iter().any(|slot| slot.is_none())
+    }
+
+    fn dead_ranks(&self) -> Vec<usize> {
+        self.links
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.is_none())
+            .map(|(rank, _)| rank)
+            .collect()
+    }
+}
+
+/// Run the coordinator: bind, handshake all ranks, drive the step loop
+/// (with recovery), then evaluate the final replica. Returns the report
+/// and the trained store (bitwise identical to every worker's replica).
 pub fn coordinate(
     engine: &Engine,
     cfg: &TrainConfig,
@@ -164,61 +310,31 @@ pub fn coordinate(
     test: &Dataset,
     opts: &DistOptions,
 ) -> Result<(DistReport, ParamStore)> {
+    coordinate_with(engine, cfg, train, test, opts, None)
+}
+
+/// [`coordinate`] with an optional [`Respawn`] hook for dead ranks.
+pub fn coordinate_with(
+    engine: &Engine,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+    opts: &DistOptions,
+    respawn: Option<&dyn Respawn>,
+) -> Result<(DistReport, ParamStore)> {
     let t0 = Instant::now();
     validate(cfg, opts)?;
     let total_steps = plan_steps(cfg, train)?;
+    let fingerprint = cfg.fingerprint();
     let store = init_store(engine, cfg)?;
     let hypers = cfg.scaled_hypers();
     let warmup = Warmup::new(cfg.warmup_steps);
 
-    let listener = opts.endpoint.bind()?;
-    let mut slots: Vec<Option<Conn>> = (0..opts.ranks).map(|_| None).collect();
+    let listener = ChaosListener::bind(&opts.endpoint)?;
+    let mut links = RankLinks::new(opts.ranks);
     for _ in 0..opts.ranks {
-        let mut conn = listener.accept_deadline(opts.deadline)?;
-        conn.set_io_deadline(Some(opts.deadline))?;
-        let (kind, payload) =
-            read_frame(&mut conn).context("dist: handshake read (io deadline)")?;
-        match kind {
-            FrameKind::Hello => {}
-            FrameKind::Error => bail!("dist: worker failed: {}", decode_error(&payload)?),
-            other => bail!("dist: expected Hello, got {other:?}"),
-        }
-        let hello = decode_hello(&payload)?;
-        ensure!(
-            hello.ranks as usize == opts.ranks,
-            "dist: worker expects {} ranks, coordinator has {}",
-            hello.ranks,
-            opts.ranks
-        );
-        ensure!(
-            hello.batch == cfg.batch as u64,
-            "dist: worker batch {} != coordinator batch {}",
-            hello.batch,
-            cfg.batch
-        );
-        ensure!(
-            hello.seed == cfg.seed,
-            "dist: worker seed {} != coordinator seed {}",
-            hello.seed,
-            cfg.seed
-        );
-        ensure!(
-            hello.total_steps == total_steps,
-            "dist: worker plans {} steps, coordinator {total_steps}",
-            hello.total_steps
-        );
-        let rank = hello.rank as usize;
-        ensure!(rank < opts.ranks, "dist: rank {rank} out of range for {} ranks", opts.ranks);
-        let slot = slots.get_mut(rank).context("dist: rank slot")?;
-        ensure!(slot.is_none(), "dist: duplicate handshake for rank {rank}");
-        let welcome = encode_welcome(&Welcome { compress: opts.compress, total_steps });
-        write_frame(&mut conn, FrameKind::Welcome, &welcome)
-            .with_context(|| format!("dist: welcome rank {rank}"))?;
-        *slot = Some(conn);
-    }
-    let mut conns: Vec<Conn> = Vec::with_capacity(opts.ranks);
-    for (rank, slot) in slots.into_iter().enumerate() {
-        conns.push(slot.with_context(|| format!("dist: missing handshake for rank {rank}"))?);
+        accept_rank(&listener, cfg, opts, total_steps, fingerprint, 0, &mut links, opts.deadline)
+            .context("dist: initial handshake")?;
     }
 
     let mut loss_curve = Vec::with_capacity(total_steps as usize);
@@ -230,21 +346,28 @@ pub fn coordinate(
         hypers,
         warmup,
         total_steps,
-        &mut conns,
+        &listener,
+        &mut links,
         opts,
+        respawn,
+        fingerprint,
         &mut loss_curve,
         &mut stats,
     );
     if let Err(err) = run {
-        // Push the failure to the surviving ranks so they exit with the
-        // cause instead of timing out, then surface it locally.
-        broadcast_error(&mut conns, &format!("{err:#}"));
+        // Push the failure to the surviving ranks (live and parked) so
+        // they exit with the cause instead of timing out, then surface
+        // it locally.
+        broadcast_error(&mut links, opts, &format!("{err:#}"));
         return Err(err);
     }
-    for conn in conns.iter_mut() {
-        let _ = write_frame(conn, FrameKind::Shutdown, &[]);
+    for slot in links.links.iter_mut().flatten() {
+        let _ = slot.send(FrameKind::Shutdown, &[]);
     }
-    for conn in &conns {
+    for slot in links.links.iter().flatten() {
+        slot.stream().conn().shutdown();
+    }
+    for conn in &links.parked {
         conn.shutdown();
     }
 
@@ -260,9 +383,231 @@ pub fn coordinate(
     Ok((report, store))
 }
 
+/// Accept one connection and run the versioned (re)join handshake:
+/// validate the `Hello` against the run (rank count, batch, seed, step
+/// plan, config fingerprint, claimed progress ≤ committed), reply with
+/// `Welcome { committed }`, and fill the rank's slot. Returns the rank.
+#[allow(clippy::too_many_arguments)]
+fn accept_rank(
+    listener: &ChaosListener,
+    cfg: &TrainConfig,
+    opts: &DistOptions,
+    total_steps: u64,
+    fingerprint: u64,
+    committed: u64,
+    links: &mut RankLinks,
+    window: Duration,
+) -> Result<usize> {
+    let conn = listener.accept_deadline(window)?;
+    conn.conn().set_io_deadline(Some(opts.deadline))?;
+    let mut link = FrameLink::new(conn, opts.retransmit_budget);
+    let (kind, payload) = link.recv().context("dist: handshake read (io deadline)")?;
+    match kind {
+        FrameKind::Hello => {}
+        FrameKind::Error => bail!("dist: worker failed: {}", decode_error(&payload)?),
+        other => bail!("dist: expected Hello, got {other:?}"),
+    }
+    let hello = decode_hello(&payload)?;
+    ensure!(
+        hello.ranks as usize == opts.ranks,
+        "dist: worker expects {} ranks, coordinator has {}",
+        hello.ranks,
+        opts.ranks
+    );
+    ensure!(
+        hello.batch == cfg.batch as u64,
+        "dist: worker batch {} != coordinator batch {}",
+        hello.batch,
+        cfg.batch
+    );
+    ensure!(
+        hello.seed == cfg.seed,
+        "dist: worker seed {} != coordinator seed {}",
+        hello.seed,
+        cfg.seed
+    );
+    ensure!(
+        hello.total_steps == total_steps,
+        "dist: worker plans {} steps, coordinator {total_steps}",
+        hello.total_steps
+    );
+    ensure!(
+        hello.fingerprint == fingerprint,
+        "dist: worker config fingerprint {:#018x} != coordinator {fingerprint:#018x} \
+         (mismatched training configuration)",
+        hello.fingerprint
+    );
+    ensure!(
+        hello.last_step <= committed,
+        "dist: rank {} claims step {} but the coordinator committed only {committed}",
+        hello.rank,
+        hello.last_step
+    );
+    let rank = hello.rank as usize;
+    ensure!(rank < opts.ranks, "dist: rank {rank} out of range for {} ranks", opts.ranks);
+    let slot = links.links.get_mut(rank).context("dist: rank slot")?;
+    ensure!(slot.is_none(), "dist: duplicate handshake for rank {rank}");
+    let welcome = encode_welcome(&Welcome { compress: opts.compress, total_steps, committed });
+    link.send(FrameKind::Welcome, &welcome)
+        .with_context(|| format!("dist: welcome rank {rank}"))?;
+    *slot = Some(link);
+    Ok(rank)
+}
+
+/// How a rank's turn in the collection loop failed.
+enum RankFailure {
+    /// The run must abort (the rank reported an application error).
+    Fatal(anyhow::Error),
+    /// The rank is gone or desynced; recovery may replace it.
+    Lost(anyhow::Error),
+}
+
+/// Read one `Contrib` frame from a rank. Returns the decoded
+/// contribution, its wire stats, and the retransmissions healed while
+/// reading it.
+fn read_contrib(
+    link: &mut FrameLink<ChaosConn>,
+    rank: usize,
+    step: u64,
+    opts: &DistOptions,
+) -> std::result::Result<(Contribution, ContribStats, u64), RankFailure> {
+    let read = {
+        let _rx = crate::obs::span_rank(crate::obs::Phase::WireRx, rank);
+        link.recv()
+    };
+    let healed = link.drain_retransmits();
+    let (kind, payload) = match read {
+        Ok(frame) => frame,
+        Err(err) => {
+            return Err(RankFailure::Lost(err.context(format!(
+                "dist: rank {rank} missed the io deadline ({:?}) at step {step}",
+                opts.deadline
+            ))))
+        }
+    };
+    match kind {
+        FrameKind::Contrib => {}
+        FrameKind::Error => {
+            let msg = decode_error(&payload)
+                .unwrap_or_else(|_| "malformed error payload".to_string());
+            return Err(RankFailure::Fatal(anyhow!(
+                "dist: rank {rank} failed at step {step}: {msg}"
+            )));
+        }
+        other => {
+            return Err(RankFailure::Lost(anyhow!(
+                "dist: rank {rank} sent {other:?} at step {step}, expected Contrib"
+            )))
+        }
+    }
+    match decode_contribution(&payload) {
+        Ok((c, cstats)) => Ok((c, cstats, healed)),
+        Err(err) => Err(RankFailure::Lost(
+            err.context(format!("dist: rank {rank} contribution at step {step}")),
+        )),
+    }
+}
+
+/// Mark a rank dead: park its connection (open — see [`RankLinks`]) and
+/// decide whether recovery is allowed. Errors when recovery is off,
+/// impossible (lossy compression), or exhausted for this rank.
+fn mark_lost(
+    links: &mut RankLinks,
+    rank: usize,
+    step: u64,
+    opts: &DistOptions,
+    cause: anyhow::Error,
+    stats: &mut DistStats,
+    m_dead: &Counter,
+) -> Result<()> {
+    stats.dead_ranks += 1;
+    m_dead.inc();
+    if let Some(link) = links.links.get_mut(rank).and_then(|slot| slot.take()) {
+        let (conn, _sched) = link.into_stream().into_parts();
+        links.parked.push(conn);
+    }
+    if opts.max_restarts == 0 {
+        return Err(cause.context(format!(
+            "dist: rank {rank} lost at step {step}; recovery is disabled (--max-restarts 0)"
+        )));
+    }
+    if opts.compress != Compression::None {
+        return Err(cause.context(format!(
+            "dist: rank {rank} lost at step {step}; recovery requires --compress none \
+             (a rejoining rank cannot rebuild quantized error-feedback residuals bitwise)"
+        )));
+    }
+    let used = links.restarts.get_mut(rank).context("dist: restart slot")?;
+    if *used >= opts.max_restarts {
+        return Err(cause.context(format!(
+            "dist: rank {rank} lost at step {step} after exhausting --max-restarts {}",
+            opts.max_restarts
+        )));
+    }
+    *used += 1;
+    Ok(())
+}
+
+/// Re-admit every dead rank within the recovery window (3× the io
+/// deadline: one for the peer to notice the break, one to reconnect and
+/// handshake, one slack). Respawns dead ranks first when a hook is
+/// present.
+#[allow(clippy::too_many_arguments)]
+fn recover_dead(
+    listener: &ChaosListener,
+    cfg: &TrainConfig,
+    opts: &DistOptions,
+    total_steps: u64,
+    fingerprint: u64,
+    committed: u64,
+    step: u64,
+    links: &mut RankLinks,
+    respawn: Option<&dyn Respawn>,
+    stats: &mut DistStats,
+    m_reconnects: &Counter,
+) -> Result<()> {
+    if let Some(hook) = respawn {
+        for rank in links.dead_ranks() {
+            hook.respawn(rank)
+                .with_context(|| format!("dist: respawning rank {rank} at step {step}"))?;
+        }
+    }
+    let window = opts.deadline.saturating_mul(3);
+    let t0 = Instant::now();
+    while links.any_dead() {
+        let remaining = window.checked_sub(t0.elapsed()).with_context(|| {
+            format!(
+                "dist: recovery window ({window:?} = 3x the io deadline) expired at step \
+                 {step} with ranks {:?} still dead",
+                links.dead_ranks()
+            )
+        })?;
+        let rank = accept_rank(
+            listener,
+            cfg,
+            opts,
+            total_steps,
+            fingerprint,
+            committed,
+            links,
+            remaining,
+        )
+        .with_context(|| {
+            format!("dist: recovering ranks {:?} at step {step}", links.dead_ranks())
+        })?;
+        stats.reconnects += 1;
+        m_reconnects.inc();
+        if cfg.verbose {
+            println!("dist: rank {rank} rejoined at step {step} (committed {committed})");
+        }
+    }
+    Ok(())
+}
+
 /// The coordinator's step loop: collect one `Contrib` per rank (rank
 /// order; the tree pairing makes arrival order irrelevant anyway),
-/// reduce, broadcast the lossless total, apply.
+/// reduce, broadcast the lossless total, apply — recovering lost ranks
+/// between collection passes so a step only ever commits whole.
 #[allow(clippy::too_many_arguments)]
 fn run_steps(
     engine: &Engine,
@@ -271,103 +616,245 @@ fn run_steps(
     hypers: HyperSet,
     warmup: Warmup,
     total_steps: u64,
-    conns: &mut [Conn],
+    listener: &ChaosListener,
+    links: &mut RankLinks,
     opts: &DistOptions,
+    respawn: Option<&dyn Respawn>,
+    fingerprint: u64,
     loss_curve: &mut Vec<f32>,
     stats: &mut DistStats,
 ) -> Result<()> {
     let header = FRAME_HEADER_LEN as u64;
+    let ranks = opts.ranks;
     // Registered once per run, before the step loop: per-rank wire-byte
     // counters are bumped with the exact same quantities as the
     // `DistStats` fields below, so the per-rank totals always sum to the
     // run summary's byte accounting.
-    let m_rx: Vec<_> = (0..conns.len())
-        .map(|r| crate::obs::counter(&format!("dist.rank{r}.rx_bytes")))
-        .collect();
-    let m_tx: Vec<_> = (0..conns.len())
-        .map(|r| crate::obs::counter(&format!("dist.rank{r}.tx_bytes")))
-        .collect();
+    let m_rx: Vec<_> =
+        (0..ranks).map(|r| crate::obs::counter(&format!("dist.rank{r}.rx_bytes"))).collect();
+    let m_tx: Vec<_> =
+        (0..ranks).map(|r| crate::obs::counter(&format!("dist.rank{r}.tx_bytes"))).collect();
     let m_steps = crate::obs::counter("dist.steps");
     let m_raw = crate::obs::counter("dist.raw_bytes");
     let m_wire = crate::obs::counter("dist.wire_bytes");
     let m_bcast = crate::obs::counter("dist.bcast_bytes");
     let m_deadline = crate::obs::counter("dist.deadline_errors");
     let m_ratio = crate::obs::gauge("dist.compression_ratio");
+    let m_reconnects = crate::obs::counter("dist.reconnects");
+    let m_retrans = crate::obs::counter("dist.retransmits");
+    let m_recovered = crate::obs::counter("dist.recovered_steps");
+    let m_dead = crate::obs::counter("dist.dead_ranks");
     for step in 1..=total_steps {
+        let committed = step - 1;
         let hv = hypers_for_step(hypers, warmup, step as usize);
-        let mut reducer = TreeReducer::new(conns.len());
-        for (rank, conn) in conns.iter_mut().enumerate() {
-            let read = {
-                let _rx = crate::obs::span_rank(crate::obs::Phase::WireRx, rank);
-                read_frame(conn)
-            };
-            if read.is_err() {
-                m_deadline.inc();
+        let mut reducer = TreeReducer::new(ranks);
+        let mut have = vec![false; ranks];
+        let mut recovered = false;
+        // Collection passes: read every missing contribution; on rank
+        // loss, recover and re-read only the ranks that never landed
+        // (already-read contributions stay valid — no state changed).
+        loop {
+            if links.any_dead() {
+                recover_dead(
+                    listener,
+                    cfg,
+                    opts,
+                    total_steps,
+                    fingerprint,
+                    committed,
+                    step,
+                    links,
+                    respawn,
+                    stats,
+                    &m_reconnects,
+                )?;
+                recovered = true;
             }
-            let (kind, payload) = read.with_context(|| {
-                format!(
-                    "dist: rank {rank} missed the io deadline ({:?}) at step {step}",
-                    opts.deadline
-                )
-            })?;
-            match kind {
-                FrameKind::Contrib => {}
-                FrameKind::Error => {
-                    bail!("dist: rank {rank} failed at step {step}: {}", decode_error(&payload)?)
+            let mut lost = false;
+            for rank in 0..ranks {
+                if have.get(rank).copied().unwrap_or(true) {
+                    continue;
                 }
-                other => bail!("dist: rank {rank} sent {other:?}, expected Contrib"),
+                let outcome = match links.links.get_mut(rank).and_then(|slot| slot.as_mut()) {
+                    Some(link) => read_contrib(link, rank, step, opts),
+                    None => {
+                        lost = true;
+                        continue;
+                    }
+                };
+                match outcome {
+                    Ok((c, cstats, healed)) => {
+                        stats.rounds += 1;
+                        stats.raw_bytes += header + cstats.raw_bytes;
+                        stats.wire_bytes += header + cstats.wire_bytes;
+                        stats.sparse_raw_bytes += cstats.sparse_raw;
+                        stats.sparse_wire_bytes += cstats.sparse_wire;
+                        stats.retransmits += healed;
+                        m_raw.add(header + cstats.raw_bytes);
+                        m_wire.add(header + cstats.wire_bytes);
+                        if healed > 0 {
+                            m_retrans.add(healed);
+                        }
+                        if let Some(ctr) = m_rx.get(rank) {
+                            ctr.add(header + cstats.wire_bytes);
+                        }
+                        reducer.push(rank, c)?;
+                        if let Some(flag) = have.get_mut(rank) {
+                            *flag = true;
+                        }
+                    }
+                    Err(RankFailure::Fatal(err)) => return Err(err),
+                    Err(RankFailure::Lost(cause)) => {
+                        m_deadline.inc();
+                        mark_lost(links, rank, step, opts, cause, stats, &m_dead)?;
+                        lost = true;
+                    }
+                }
             }
-            let (c, cstats) = decode_contribution(&payload)
-                .with_context(|| format!("dist: rank {rank} contribution at step {step}"))?;
-            stats.rounds += 1;
-            stats.raw_bytes += header + cstats.raw_bytes;
-            stats.wire_bytes += header + cstats.wire_bytes;
-            stats.sparse_raw_bytes += cstats.sparse_raw;
-            stats.sparse_wire_bytes += cstats.sparse_wire;
-            m_raw.add(header + cstats.raw_bytes);
-            m_wire.add(header + cstats.wire_bytes);
-            if let Some(ctr) = m_rx.get(rank) {
-                ctr.add(header + cstats.wire_bytes);
+            if !lost && !links.any_dead() {
+                break;
             }
-            reducer.push(rank, c)?;
         }
         let (total, _) = reducer.finish()?;
         // Broadcast the reduced total losslessly *before* applying:
         // every replica then applies identical bytes, so the stores
         // stay bitwise in sync even with lossy uplink compression.
         let (payload, _) = encode_contribution(&total, Compression::None)?;
-        for (rank, conn) in conns.iter_mut().enumerate() {
-            let _tx = crate::obs::span_rank(crate::obs::Phase::WireTx, rank);
-            write_frame(conn, FrameKind::Total, &payload)
-                .with_context(|| format!("dist: broadcast total at step {step}"))?;
-            if let Some(ctr) = m_tx.get(rank) {
-                ctr.add(header + payload.len() as u64);
+        let mut sent: u64 = 0;
+        for rank in 0..ranks {
+            let pushed = match links.links.get_mut(rank).and_then(|slot| slot.as_mut()) {
+                Some(link) => {
+                    let _tx = crate::obs::span_rank(crate::obs::Phase::WireTx, rank);
+                    link.send(FrameKind::Total, &payload)
+                }
+                None => continue,
+            };
+            match pushed {
+                Ok(()) => {
+                    if let Some(ctr) = m_tx.get(rank) {
+                        ctr.add(header + payload.len() as u64);
+                    }
+                    sent += 1;
+                }
+                Err(cause) => {
+                    // A rank lost on broadcast is not re-awaited this
+                    // step: the commit proceeds (all contributions are
+                    // in) and the rank replays the step itself when it
+                    // rejoins.
+                    mark_lost(
+                        links,
+                        rank,
+                        step,
+                        opts,
+                        cause.context(format!(
+                            "dist: broadcast total to rank {rank} at step {step}"
+                        )),
+                        stats,
+                        &m_dead,
+                    )?;
+                    recovered = true;
+                }
             }
         }
-        stats.bcast_bytes += (header + payload.len() as u64) * conns.len() as u64;
-        m_bcast.add((header + payload.len() as u64) * conns.len() as u64);
+        stats.bcast_bytes += (header + payload.len() as u64) * sent;
+        m_bcast.add((header + payload.len() as u64) * sent);
         let loss = apply_contribution(engine, store, cfg, &hv, Reduced::Whole(total))?;
         loss_curve.push(loss);
         stats.steps = step as usize;
         m_steps.inc();
         m_ratio.set(stats.compression_ratio());
+        if recovered {
+            stats.recovered_steps += 1;
+            m_recovered.inc();
+        }
+        if opts.snapshot_every > 0 && step % opts.snapshot_every == 0 {
+            if let Some(path) = &opts.snapshot {
+                store
+                    .save_checkpoint(path, step)
+                    .with_context(|| format!("dist: snapshot at step {step}"))?;
+            }
+        }
+    }
+    // A rank lost on the final broadcast still deserves a clean exit:
+    // let it rejoin, replay to the end locally, and take the Shutdown.
+    if links.any_dead() {
+        recover_dead(
+            listener,
+            cfg,
+            opts,
+            total_steps,
+            fingerprint,
+            total_steps,
+            total_steps,
+            links,
+            respawn,
+            stats,
+            &m_reconnects,
+        )?;
     }
     Ok(())
 }
 
-/// Best-effort `Error` fan-out on coordinator failure; never blocks
-/// longer than a short bounded write per rank.
-fn broadcast_error(conns: &mut [Conn], msg: &str) {
+/// Best-effort `Error` fan-out on coordinator failure — to live links
+/// *and* parked connections of lost ranks — with a per-rank write
+/// deadline derived from the run's io deadline. Writes that fail are
+/// counted on `dist.error_fanout_dropped`.
+fn broadcast_error(links: &mut RankLinks, opts: &DistOptions, msg: &str) {
     let payload = encode_error(msg);
-    for conn in conns.iter_mut() {
-        let _ = conn.set_io_deadline(Some(Duration::from_millis(200)));
-        let _ = write_frame(conn, FrameKind::Error, &payload);
+    let per_rank =
+        (opts.deadline / 8).clamp(Duration::from_millis(50), Duration::from_secs(1));
+    let m_dropped = crate::obs::counter("dist.error_fanout_dropped");
+    for slot in links.links.iter_mut().flatten() {
+        let _ = slot.stream().conn().set_io_deadline(Some(per_rank));
+        if slot.send(FrameKind::Error, &payload).is_err() {
+            m_dropped.inc();
+        }
+        slot.stream().conn().shutdown();
+    }
+    for conn in links.parked.iter_mut() {
+        let _ = conn.set_io_deadline(Some(per_rank));
+        if write_frame(conn, FrameKind::Error, &payload).is_err() {
+            m_dropped.inc();
+        }
         conn.shutdown();
     }
 }
 
+/// One worker's full replica state, built once and carried across
+/// reconnects: the same init and the same forward-only batch stream as
+/// every peer.
+struct WorkerState<'a> {
+    store: ParamStore,
+    hypers: HyperSet,
+    warmup: Warmup,
+    batcher: Batcher<'a>,
+    scratch: Scratch,
+    ef: ErrorFeedback,
+    /// Last step whose total this replica applied.
+    last_completed: u64,
+    /// Highest step a batch has been drawn for (the batcher is
+    /// forward-only, so a batch is drawn at most once per step).
+    produced: u64,
+    /// The batch for step `produced`, kept until that step commits so a
+    /// failed step can be retried on a fresh connection.
+    cur: Option<Batch>,
+}
+
+impl WorkerState<'_> {
+    /// Materialize the batch for `step`, drawing from the batcher only
+    /// if this step never had one (a retry reuses the kept batch).
+    fn draw(&mut self, step: u64) {
+        if self.produced < step {
+            self.cur = Some(self.batcher.next_batch());
+            self.produced = step;
+        }
+    }
+}
+
 /// Run one worker rank end to end: connect (with retry, covering the
-/// coordinator-bind race), handshake, then the step loop.
+/// coordinator-bind race), handshake, and drive the step loop —
+/// reconnecting and replaying through up to `max_restarts` connection
+/// failures.
 pub fn worker(
     engine: &Engine,
     cfg: &TrainConfig,
@@ -377,80 +864,187 @@ pub fn worker(
 ) -> Result<()> {
     validate(cfg, opts)?;
     ensure!(rank < opts.ranks, "dist: rank {rank} out of range for {} ranks", opts.ranks);
-    let conn = opts.endpoint.connect_retry(opts.deadline)?;
-    worker_loop(engine, cfg, train, rank, opts, conn)
+    let total_steps = plan_steps(cfg, train)?;
+    let fingerprint = cfg.fingerprint();
+    let mut st = WorkerState {
+        store: init_store(engine, cfg)?,
+        hypers: cfg.scaled_hypers(),
+        warmup: Warmup::new(cfg.warmup_steps),
+        batcher: Batcher::new(train, cfg.batch, cfg.seed ^ 0x5eed),
+        scratch: Scratch::new(),
+        ef: ErrorFeedback::default(),
+        last_completed: 0,
+        produced: 0,
+        cur: None,
+    };
+    // The chaos schedule outlives any one connection: events not yet
+    // fired survive a reconnect (a respawned *process* starts clean —
+    // the supervisor strips `--chaos` when relaunching).
+    let mut chaos = ChaosSchedule::for_rank(opts.chaos.as_ref(), rank);
+    let mut reconnects: u32 = 0;
+    let m_reconnects = crate::obs::counter("dist.reconnects");
+    loop {
+        let conn = opts.endpoint.connect_retry(opts.deadline)?;
+        conn.set_io_deadline(Some(opts.deadline))?;
+        let sched = std::mem::replace(&mut chaos, ChaosSchedule::inert());
+        let mut link = FrameLink::new(ChaosConn::new(conn, sched), opts.retransmit_budget);
+        let res = worker_session(engine, cfg, total_steps, fingerprint, rank, opts, &mut link, &mut st);
+        let (conn, sched) = link.into_stream().into_parts();
+        conn.shutdown();
+        chaos = sched;
+        match res {
+            Ok(()) => return Ok(()),
+            Err(err) => {
+                // Injected kills and terminal coordinator verdicts are
+                // final; everything else is a connection-level failure
+                // the rejoin handshake can heal.
+                if err.downcast_ref::<ChaosKill>().is_some()
+                    || err.downcast_ref::<CoordinatorAbort>().is_some()
+                {
+                    return Err(err);
+                }
+                if reconnects >= opts.max_restarts {
+                    return Err(err.context(format!(
+                        "dist: rank {rank} gave up after {reconnects} reconnect attempts \
+                         (--max-restarts {})",
+                        opts.max_restarts
+                    )));
+                }
+                reconnects += 1;
+                m_reconnects.inc();
+                if cfg.verbose {
+                    println!("dist: rank {rank} reconnecting after: {err:#}");
+                }
+            }
+        }
+    }
 }
 
-/// The worker step loop over an established connection.
-fn worker_loop(
+/// One connection's worth of worker protocol: rejoin handshake, local
+/// catch-up replay, then the compute/send/apply step loop until the
+/// final Shutdown.
+#[allow(clippy::too_many_arguments)]
+fn worker_session(
     engine: &Engine,
     cfg: &TrainConfig,
-    train: &Dataset,
+    total_steps: u64,
+    fingerprint: u64,
     rank: usize,
     opts: &DistOptions,
-    mut conn: Conn,
+    link: &mut FrameLink<ChaosConn>,
+    st: &mut WorkerState<'_>,
 ) -> Result<()> {
-    let total_steps = plan_steps(cfg, train)?;
-    conn.set_io_deadline(Some(opts.deadline))?;
     let hello = Hello {
         rank: rank as u32,
         ranks: opts.ranks as u32,
         batch: cfg.batch as u64,
         seed: cfg.seed,
         total_steps,
+        last_step: st.last_completed,
+        fingerprint,
     };
-    write_frame(&mut conn, FrameKind::Hello, &encode_hello(&hello))
+    link.send(FrameKind::Hello, &encode_hello(&hello))
         .with_context(|| format!("dist: rank {rank} hello"))?;
-    let (kind, payload) = read_frame(&mut conn)
+    let (kind, payload) = link
+        .recv()
         .with_context(|| format!("dist: rank {rank} waiting for Welcome (io deadline)"))?;
     let welcome = match kind {
         FrameKind::Welcome => decode_welcome(&payload)?,
         FrameKind::Error => {
-            bail!("dist: coordinator rejected rank {rank}: {}", decode_error(&payload)?)
+            let msg = decode_error(&payload)
+                .unwrap_or_else(|_| "malformed error payload".to_string());
+            return Err(anyhow::Error::new(CoordinatorAbort(format!(
+                "dist: coordinator rejected rank {rank}: {msg}"
+            ))));
         }
         other => bail!("dist: expected Welcome, got {other:?}"),
     };
+    if welcome.total_steps != total_steps {
+        return Err(anyhow::Error::new(CoordinatorAbort(format!(
+            "dist: coordinator plans {} steps, rank {rank} {total_steps}",
+            welcome.total_steps
+        ))));
+    }
     ensure!(
-        welcome.total_steps == total_steps,
-        "dist: coordinator plans {} steps, rank {rank} {total_steps}",
-        welcome.total_steps
+        welcome.committed <= total_steps,
+        "dist: coordinator claims committed step {} of {total_steps}",
+        welcome.committed
     );
+    ensure!(
+        st.last_completed <= welcome.committed,
+        "dist: rank {rank} is ahead of the coordinator ({} > {})",
+        st.last_completed,
+        welcome.committed
+    );
+    if welcome.committed > st.last_completed {
+        ensure!(
+            welcome.compress == Compression::None,
+            "dist: rank {rank} cannot replay steps {}..={} under {:?} compression; \
+             recovery requires --compress none",
+            st.last_completed + 1,
+            welcome.committed,
+            welcome.compress
+        );
+    }
     let compress = welcome.compress;
 
-    // Full replica state: same init, same batch stream as every peer.
-    let store = init_store(engine, cfg)?;
-    let hypers = cfg.scaled_hypers();
-    let warmup = Warmup::new(cfg.warmup_steps);
-    let mut batcher = Batcher::new(train, cfg.batch, cfg.seed ^ 0x5eed);
-    let mut scratch = Scratch::new();
-    let mut ef = ErrorFeedback::default();
+    // Catch up to the coordinator by local replay: compute *all* ranks'
+    // shards from our own batch stream and reduce them through the same
+    // fixed tree. With lossless totals (enforced above) this is bitwise
+    // the same arithmetic the socket path would have fed us.
+    while st.last_completed < welcome.committed {
+        let step = st.last_completed + 1;
+        st.draw(step);
+        replay_step(engine, cfg, st, step)
+            .with_context(|| format!("dist: rank {rank} replaying step {step}"))?;
+        st.last_completed = step;
+        st.cur = None;
+    }
+
     let m_stalls = crate::obs::counter("dist.stalls");
     let m_ef = crate::obs::gauge("dist.ef_residual");
-
-    for step in 1..=total_steps {
-        let batch = batcher.next_batch();
-        let hv = hypers_for_step(hypers, warmup, step as usize);
+    let m_retrans = crate::obs::counter("dist.retransmits");
+    while st.last_completed < total_steps {
+        let step = st.last_completed + 1;
+        for ev in link.stream_mut().schedule_mut().take_process(step) {
+            match ev.kind {
+                ChaosKind::Kill => {
+                    return Err(anyhow::Error::new(ChaosKill { rank, step }))
+                }
+                ChaosKind::Hang => std::thread::sleep(Duration::from_millis(ev.ms)),
+                _ => {}
+            }
+        }
+        link.stream_mut().set_step(step);
+        st.draw(step);
+        let hv = hypers_for_step(st.hypers, st.warmup, step as usize);
         let mut c = {
+            let WorkerState { store, cur, scratch, .. } = &mut *st;
+            let batch = cur.as_ref().context("dist: step batch missing")?;
             let guard = store.read();
             let params: &ParamSet = &guard;
-            WorkerShard::new(rank, opts.ranks).compute(engine, params, &batch, &mut scratch)?
+            WorkerShard::new(rank, opts.ranks).compute(engine, params, batch, scratch)?
         };
         // Fold last step's rounding error into the touched rows, encode,
         // then remember this step's rounding error for the next fold.
-        ef.fold_in(&mut c.grads);
+        st.ef.fold_in(&mut c.grads);
         let (payload, _) = encode_contribution(&c, compress)?;
-        ef.absorb(&c.grads, compress);
-        m_ef.set(ef.residual_l1());
+        st.ef.absorb(&c.grads, compress);
+        m_ef.set(st.ef.residual_l1());
         {
             let _tx = crate::obs::span_rank(crate::obs::Phase::WireTx, rank);
-            write_frame(&mut conn, FrameKind::Contrib, &payload)
+            link.send(FrameKind::Contrib, &payload)
                 .with_context(|| format!("dist: rank {rank} send contribution at step {step}"))?;
         }
 
         let read = {
             let _rx = crate::obs::span_rank(crate::obs::Phase::WireRx, rank);
-            read_frame(&mut conn)
+            link.recv()
         };
+        let healed = link.drain_retransmits();
+        if healed > 0 {
+            m_retrans.add(healed);
+        }
         if read.is_err() {
             m_stalls.inc();
         }
@@ -468,23 +1062,54 @@ fn worker_loop(
                     .0
             }
             FrameKind::Error => {
-                bail!("dist: coordinator aborted at step {step}: {}", decode_error(&payload)?)
+                let msg = decode_error(&payload)
+                    .unwrap_or_else(|_| "malformed error payload".to_string());
+                return Err(anyhow::Error::new(CoordinatorAbort(format!(
+                    "dist: coordinator aborted at step {step}: {msg}"
+                ))));
             }
             other => bail!("dist: expected Total, got {other:?}"),
         };
-        apply_contribution(engine, &store, cfg, &hv, Reduced::Whole(total))?;
+        apply_contribution(engine, &st.store, cfg, &hv, Reduced::Whole(total))?;
+        st.last_completed = step;
+        st.cur = None;
     }
 
-    let (kind, payload) = read_frame(&mut conn)
+    let (kind, payload) = link
+        .recv()
         .with_context(|| format!("dist: rank {rank} waiting for Shutdown (io deadline)"))?;
     match kind {
-        FrameKind::Shutdown => {}
+        FrameKind::Shutdown => Ok(()),
         FrameKind::Error => {
-            bail!("dist: coordinator failed after the last step: {}", decode_error(&payload)?)
+            let msg = decode_error(&payload)
+                .unwrap_or_else(|_| "malformed error payload".to_string());
+            Err(anyhow::Error::new(CoordinatorAbort(format!(
+                "dist: coordinator failed after the last step: {msg}"
+            ))))
         }
         other => bail!("dist: expected Shutdown, got {other:?}"),
     }
-    conn.shutdown();
+}
+
+/// Replay one committed step entirely locally: compute every rank's
+/// shard from this replica's batch, reduce through the fixed tree, and
+/// apply the whole total — the exact arithmetic whose lossless
+/// broadcast the socket path would have delivered.
+fn replay_step(engine: &Engine, cfg: &TrainConfig, st: &mut WorkerState<'_>, step: u64) -> Result<()> {
+    let hv = hypers_for_step(st.hypers, st.warmup, step as usize);
+    let WorkerState { store, cur, scratch, .. } = &mut *st;
+    let batch = cur.as_ref().context("dist: replay batch missing")?;
+    let mut reducer = TreeReducer::new(cfg.workers);
+    {
+        let guard = store.read();
+        let params: &ParamSet = &guard;
+        for r in 0..cfg.workers {
+            let c = WorkerShard::new(r, cfg.workers).compute(engine, params, batch, scratch)?;
+            reducer.push(r, c)?;
+        }
+    }
+    let (total, _) = reducer.finish()?;
+    apply_contribution(engine, store, cfg, &hv, Reduced::Whole(total))?;
     Ok(())
 }
 
@@ -675,14 +1300,60 @@ mod tests {
             eval_every_epochs: 0,
             verbose: false,
         };
-        let mk = |ranks| DistOptions {
-            ranks,
-            endpoint: Endpoint::Unix(std::path::PathBuf::from("/tmp/x.sock")),
-            compress: Compression::None,
-            deadline: Duration::from_secs(1),
+        let mk = |ranks| {
+            DistOptions::new(
+                ranks,
+                Endpoint::Unix(std::path::PathBuf::from("/tmp/x.sock")),
+                Compression::None,
+                Duration::from_secs(1),
+            )
         };
         assert!(validate(&cfg, &mk(2)).is_ok());
         assert!(validate(&cfg, &mk(0)).is_err(), "zero ranks");
         assert!(validate(&cfg, &mk(3)).is_err(), "workers != ranks");
+        let mut snap = mk(2);
+        snap.snapshot_every = 4;
+        assert!(validate(&cfg, &snap).is_err(), "snapshot-every without a path");
+        snap.snapshot = Some(std::path::PathBuf::from("/tmp/x.ckpt"));
+        assert!(validate(&cfg, &snap).is_ok());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs_and_ignores_shape() {
+        let base = TrainConfig {
+            batch: 128,
+            base_batch: 128,
+            base_hypers: HyperSet {
+                lr_dense: 1e-3,
+                lr_embed: 1e-3,
+                l2_embed: 0.0,
+                clip_r: 1.0,
+                clip_zeta: 1e-4,
+                clip_t: 0.5,
+            },
+            rule: crate::scaling::rules::ScalingRule::CowClip,
+            epochs: 1.0,
+            workers: 2,
+            threads: 1,
+            param_shards: 1,
+            warmup_steps: 0,
+            init_sigma: 0.01,
+            seed: 1,
+            eval_every_epochs: 0,
+            verbose: false,
+        };
+        let fp = base.fingerprint();
+        let mut other = base.clone();
+        other.seed = 2;
+        assert_ne!(fp, other.fingerprint(), "seed must change the fingerprint");
+        let mut lr = base.clone();
+        lr.base_hypers.lr_embed = 2e-3;
+        assert_ne!(fp, lr.fingerprint(), "hypers must change the fingerprint");
+        // Execution-shape knobs are parity-inert and excluded.
+        let mut shape = base.clone();
+        shape.threads = 8;
+        shape.param_shards = 4;
+        shape.verbose = true;
+        assert_eq!(fp, shape.fingerprint(), "shape knobs must not change the fingerprint");
     }
 }

@@ -35,9 +35,16 @@
 //!   optional u16/u8 gradient quantization + error feedback on the
 //!   uplink. Compression off is bitwise identical to the in-process
 //!   path (`rust/tests/dist_parity.rs`).
+//! * **Fault tolerance** ([`chaos`], [`dist`]): deterministic fault
+//!   injection (`--chaos`), step-atomic recovery with a versioned
+//!   rejoin handshake and local catch-up replay, bounded CRC
+//!   retransmission, and CCKS snapshots — a mid-run rank kill recovers
+//!   bitwise identical to the sequential path
+//!   (`rust/tests/fault_parity.rs`).
 
 pub mod accumulate;
 pub mod allreduce;
+pub mod chaos;
 pub mod dist;
 pub mod engine;
 pub mod pool;
@@ -47,7 +54,11 @@ pub mod worker;
 
 pub use accumulate::GradAccumulator;
 pub use allreduce::{tree_allreduce, Contribution, Reduced, ReduceStats, TreeReducer};
-pub use dist::{coordinate, worker as dist_worker, DistOptions, DistReport, DistStats};
+pub use chaos::{ChaosConn, ChaosEvent, ChaosKill, ChaosKind, ChaosListener, ChaosSchedule, ChaosSpec};
+pub use dist::{
+    coordinate, coordinate_with, worker as dist_worker, DistOptions, DistReport, DistStats,
+    Respawn,
+};
 pub use engine::{Engine, HloEngine};
 pub use pool::{GradJob, StepPool};
 pub use trainer::{TrainConfig, TrainReport, Trainer};

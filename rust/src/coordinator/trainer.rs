@@ -119,6 +119,48 @@ impl TrainConfig {
         self.rule.apply(&self.base_hypers, self.scale())
     }
 
+    /// Order-stable 64-bit FNV-1a over every field that shapes replica
+    /// state. The distributed rejoin handshake compares fingerprints so
+    /// a reconnecting worker whose config drifted from the run (edited
+    /// flags, different binary defaults) is refused instead of silently
+    /// corrupting the reduction.
+    ///
+    /// Execution-shape fields (`threads`, `param_shards`,
+    /// `eval_every_epochs`, `verbose`) are excluded: the repo's parity
+    /// suites guarantee they never change the math, and a respawned
+    /// worker may legitimately differ in them.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.batch as u64);
+        eat(self.base_batch as u64);
+        eat(self.base_hypers.lr_dense.to_bits() as u64);
+        eat(self.base_hypers.lr_embed.to_bits() as u64);
+        eat(self.base_hypers.l2_embed.to_bits() as u64);
+        eat(self.base_hypers.clip_r.to_bits() as u64);
+        eat(self.base_hypers.clip_zeta.to_bits() as u64);
+        eat(self.base_hypers.clip_t.to_bits() as u64);
+        eat(match self.rule {
+            ScalingRule::NoScale => 0,
+            ScalingRule::Sqrt => 1,
+            ScalingRule::SqrtStar => 2,
+            ScalingRule::Linear => 3,
+            ScalingRule::N2Lambda => 4,
+            ScalingRule::CowClip => 5,
+        });
+        eat(self.epochs.to_bits());
+        eat(self.workers as u64);
+        eat(self.warmup_steps as u64);
+        eat(self.init_sigma.to_bits() as u64);
+        eat(self.seed);
+        h
+    }
+
     /// Resolve the thread count for a stage with `max_units` independent
     /// units of work (worker shards for the fan-out, parameter shards
     /// for apply, batches for eval).

@@ -70,19 +70,38 @@ impl Endpoint {
     }
 
     /// Connect, retrying until `timeout` — covers the startup race where
-    /// a worker launches before the coordinator has bound its socket.
+    /// a worker launches before the coordinator has bound its socket,
+    /// and reconnection storms during fault recovery.
+    ///
+    /// Retries back off exponentially (5 ms doubling to a 500 ms cap)
+    /// with a small deterministic jitter derived from the attempt index
+    /// — no RNG, so two runs of the same schedule retry at the same
+    /// instants, but concurrent ranks (different attempt phases) do not
+    /// thundering-herd a recovering coordinator.
     pub fn connect_retry(&self, timeout: Duration) -> Result<Conn> {
         let start = Instant::now();
+        let mut attempts: u64 = 0;
+        let mut backoff = Duration::from_millis(5);
         loop {
             match self.connect_once() {
                 Ok(conn) => return Ok(conn),
                 Err(err) => {
+                    attempts += 1;
                     if start.elapsed() >= timeout {
                         return Err(err).with_context(|| {
-                            format!("transport: connect to {self} timed out after {timeout:?}")
+                            format!(
+                                "transport: connect to {self} timed out after {timeout:?} \
+                                 ({attempts} attempts)"
+                            )
                         });
                     }
-                    thread::sleep(Duration::from_millis(10));
+                    // Top 3 bits of a Weyl-sequence hash: 0..8 ms jitter.
+                    let jitter = Duration::from_millis(
+                        attempts.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 61,
+                    );
+                    let remaining = timeout.saturating_sub(start.elapsed());
+                    thread::sleep((backoff + jitter).min(remaining.max(Duration::from_millis(1))));
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
                 }
             }
         }
@@ -314,6 +333,15 @@ mod tests {
         assert_eq!(payload, b"worker 0");
         write_frame(&mut conn, FrameKind::Welcome, b"ok").unwrap();
         assert_eq!(client.join().unwrap(), b"ok");
+    }
+
+    #[test]
+    fn connect_timeout_names_attempt_count() {
+        let ep = temp_endpoint(); // never bound
+        let err = ep.connect_retry(Duration::from_millis(60)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("attempts"), "{msg}");
     }
 
     #[test]

@@ -116,9 +116,53 @@
 //! cutting sparse wire bytes ≥4× at ≤1e-3 AUC cost; ids, counts and
 //! dense gradients stay lossless, and shared grad/count id lists are
 //! elided entirely. A deadline on every socket operation turns a killed
-//! or hung rank into a clean error instead of a hang. `cargo bench
-//! --bench e2e_epoch` writes the distributed arm's rows/s, wire
+//! or hung rank into a clean failure signal instead of a hang — and the
+//! fault-tolerance layer below turns that signal into recovery. `cargo
+//! bench --bench e2e_epoch` writes the distributed arm's rows/s, wire
 //! bytes/step and compression ratio to `BENCH_dist.json`.
+//!
+//! ## Fault tolerance
+//!
+//! A distributed run survives the failure modes a real fleet produces —
+//! killed workers, hung workers, corrupted frames, lost coordinators —
+//! without giving up determinism ([`coordinator::dist`] "Fault
+//! tolerance" for the protocol, [`coordinator::chaos`] for the fault
+//! injector, `rust/tests/fault_parity.rs` for the gates):
+//!
+//! * **Step-atomic recovery** — the coordinator applies a step only
+//!   once every rank's contribution has arrived, so a mid-step rank
+//!   loss never leaves partial state: already-read contributions are
+//!   retained, the dead rank is parked, and a recovery window (3× the
+//!   io deadline) opens for the rank to rejoin. The rejoin handshake is
+//!   versioned — `Hello` carries the worker's last completed step and a
+//!   [`coordinator::TrainConfig::fingerprint`] of the training
+//!   configuration — and a rejoining worker catches up by **local
+//!   replay** of the committed prefix from its deterministic
+//!   [`data::Batcher`] stream (no parameter shipping). Requires
+//!   `--compress none`; with lossy uplink compression recovery is
+//!   refused by name. A run that loses a rank mid-step finishes
+//!   **bitwise identical** to the fault-free sequential path for all
+//!   six clip modes.
+//! * **Bounded retransmission** — a CRC-corrupt frame is healed in
+//!   place by the wire link's Nack/Resend exchange
+//!   ([`wire::FrameLink`]) within `--retransmit-budget` tries, then
+//!   fails by name; worker reconnects back off exponentially with
+//!   jitter. `--max-restarts` caps rejoins per rank (`0` restores
+//!   fail-fast), `--spawn-workers` respawns dead children, and
+//!   `--snapshot-every` writes periodic CCKS snapshots so a killed
+//!   *coordinator* restarts from the last committed step via
+//!   `--resume`.
+//! * **Deterministic fault injection** — `--chaos
+//!   "kill:rank=1,step=4;corrupt:rank=0,step=2"` schedules seeded
+//!   kill/hang/corrupt/drop/trunc/delay faults against exact ranks and
+//!   steps ([`coordinator::ChaosSpec`]), which is what lets the test
+//!   suite assert *bitwise* recovery rather than eventual convergence.
+//!   Recovery is observable: `dist.reconnects`, `dist.retransmits`,
+//!   `dist.recovered_steps`, `dist.dead_ranks` and
+//!   `serve.rejected`/`dist.error_fanout_dropped` land in the metrics
+//!   registry, and the serve queue sheds overload past `--max-queue`
+//!   with a typed [`serve::Overloaded`] error instead of queueing
+//!   unboundedly.
 //!
 //! ## Performance model
 //!

@@ -13,6 +13,8 @@
 //! scoring thread drains a micro-batch when the queue reaches
 //! [`ServeConfig::max_batch`] *or* the oldest request has waited
 //! [`ServeConfig::max_delay`] (so a lone request is never stranded);
+//! [`ServeConfig::max_queue`] caps admission, shedding overload with
+//! the typed [`Overloaded`] error at submit time;
 //! the batch runs one inference-only forward through the immutable
 //! `Arc<`[`ServeModel`]`>`; each request's logit and calibrated
 //! probability return over its reply channel. Per-request latency lands
@@ -80,5 +82,5 @@ pub mod request;
 
 pub use model::ServeModel;
 pub use quant::QuantizedTable;
-pub use queue::{score_all, Client, ServeConfig, ServeStats, Server};
+pub use queue::{score_all, Client, Overloaded, ServeConfig, ServeStats, Server};
 pub use request::{read_requests_tsv, Request, Scored};

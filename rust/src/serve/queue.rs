@@ -25,7 +25,10 @@
 //! forward pass. Batching policy is two-trigger (size OR deadline),
 //! which is the standard production trade: `max_batch` bounds the work
 //! per forward, `max_delay` bounds the queueing latency any request can
-//! pay waiting for co-riders.
+//! pay waiting for co-riders. A third knob, `max_queue`, bounds
+//! *admission*: past that depth `submit` fails fast with the typed
+//! [`Overloaded`] error (counted on `serve.rejected`) so overload sheds
+//! at the door instead of stretching every queued request's latency.
 //!
 //! Shutdown flushes: remaining requests are drained and scored without
 //! waiting for deadlines, then the workers exit.
@@ -52,13 +55,46 @@ pub struct ServeConfig {
     pub max_delay: Duration,
     /// Scoring threads (each drains and scores whole micro-batches).
     pub threads: usize,
+    /// Admission bound on queued-but-unscored requests (`0` =
+    /// unbounded). At the bound, [`Client::submit`] fails fast with the
+    /// typed [`Overloaded`] error instead of letting queueing latency
+    /// grow without limit.
+    pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 64, max_delay: Duration::from_millis(2), threads: 2 }
+        ServeConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            threads: 2,
+            max_queue: 0,
+        }
     }
 }
+
+/// Typed admission-control failure: the queue already holds `max_queue`
+/// pending requests. Callers shed or retry; the request was never
+/// enqueued. Counted on `serve.rejected`.
+#[derive(Clone, Copy, Debug)]
+pub struct Overloaded {
+    /// Queue depth observed at rejection time.
+    pub depth: usize,
+    /// The configured bound.
+    pub max_queue: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "serve: queue overloaded ({} pending >= --max-queue {})",
+            self.depth, self.max_queue
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
 
 struct PendingReq {
     req: Request,
@@ -94,6 +130,7 @@ struct Shared {
     /// scoring threads update them with relaxed atomic ops only.
     m_requests: Arc<crate::obs::Counter>,
     m_batches: Arc<crate::obs::Counter>,
+    m_rejected: Arc<crate::obs::Counter>,
     m_latency: Arc<crate::obs::AtomicHistogram>,
 }
 
@@ -160,6 +197,7 @@ impl Server {
             next_id: AtomicU64::new(0),
             m_requests: crate::obs::counter("serve.requests"),
             m_batches: crate::obs::counter("serve.batches"),
+            m_rejected: crate::obs::counter("serve.rejected"),
             m_latency: crate::obs::histogram("serve.latency_ms"),
         });
         let workers = (0..threads)
@@ -214,6 +252,13 @@ impl Client {
             let mut st = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             if st.shutdown {
                 bail!("server is shutting down");
+            }
+            let cap = self.shared.cfg.max_queue;
+            if cap > 0 && st.deque.len() >= cap {
+                let depth = st.deque.len();
+                drop(st);
+                self.shared.m_rejected.inc();
+                return Err(anyhow::Error::new(Overloaded { depth, max_queue: cap }));
             }
             st.deque.push_back(PendingReq { req, enqueued: Instant::now(), reply: tx });
         }

@@ -742,6 +742,12 @@ pub fn decode_contribution(buf: &[u8]) -> Result<(Contribution, ContribStats)> {
 /// Worker → coordinator handshake: identity plus the run parameters the
 /// coordinator cross-checks so mismatched processes fail fast instead of
 /// silently diverging.
+///
+/// Wire v2 made this double as the **rejoin** handshake: `last_step` is
+/// the worker's last fully applied step (0 for a cold start) and
+/// `fingerprint` is `TrainConfig::fingerprint()`, so a reconnecting
+/// replica whose config drifted from the run is refused instead of
+/// silently corrupting the reduction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Hello {
     pub rank: u32,
@@ -749,15 +755,21 @@ pub struct Hello {
     pub batch: u64,
     pub seed: u64,
     pub total_steps: u64,
+    /// Last step this replica has applied; 0 on a cold start.
+    pub last_step: u64,
+    /// `TrainConfig::fingerprint()` of the worker's config.
+    pub fingerprint: u64,
 }
 
 pub fn encode_hello(h: &Hello) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 + 4 + 8 + 8 + 8);
+    let mut out = Vec::with_capacity(4 + 4 + 8 * 5);
     put_u32(&mut out, h.rank);
     put_u32(&mut out, h.ranks);
     put_u64(&mut out, h.batch);
     put_u64(&mut out, h.seed);
     put_u64(&mut out, h.total_steps);
+    put_u64(&mut out, h.last_step);
+    put_u64(&mut out, h.fingerprint);
     out
 }
 
@@ -769,22 +781,31 @@ pub fn decode_hello(buf: &[u8]) -> Result<Hello> {
         batch: r.u64()?,
         seed: r.u64()?,
         total_steps: r.u64()?,
+        last_step: r.u64()?,
+        fingerprint: r.u64()?,
     };
     r.done()?;
     Ok(h)
 }
 
 /// Coordinator → worker handshake reply: the negotiated wire settings.
+///
+/// Wire v2 added `committed`, the coordinator's last committed step: a
+/// rejoining worker replays `last_step+1..=committed` locally from its
+/// deterministic batch stream before resuming the socket protocol.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Welcome {
     pub compress: Compression,
     pub total_steps: u64,
+    /// The coordinator's last committed step (0 before the first).
+    pub committed: u64,
 }
 
 pub fn encode_welcome(w: &Welcome) -> Vec<u8> {
-    let mut out = Vec::with_capacity(1 + 8);
+    let mut out = Vec::with_capacity(1 + 8 + 8);
     put_u8(&mut out, w.compress.tag());
     put_u64(&mut out, w.total_steps);
+    put_u64(&mut out, w.committed);
     out
 }
 
@@ -793,6 +814,7 @@ pub fn decode_welcome(buf: &[u8]) -> Result<Welcome> {
     let w = Welcome {
         compress: Compression::from_tag(r.u8()?)?,
         total_steps: r.u64()?,
+        committed: r.u64()?,
     };
     r.done()?;
     Ok(w)
@@ -1082,11 +1104,14 @@ mod tests {
             batch: 1024,
             seed: 42,
             total_steps: 100,
+            last_step: 17,
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
         };
         assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
         let w = Welcome {
             compress: Compression::U8,
             total_steps: 100,
+            committed: 18,
         };
         assert_eq!(decode_welcome(&encode_welcome(&w)).unwrap(), w);
         assert!(decode_hello(&[1, 2, 3]).is_err());

@@ -12,6 +12,15 @@
 //! corrupted stream surfaces as an error instead of a silently wrong
 //! gradient. Payload bytes are opaque here; `wire::codec` gives them
 //! meaning per [`FrameKind`].
+//!
+//! A CRC mismatch is special: by the time it is detected the full
+//! payload has already been consumed, so the stream is still aligned on
+//! a frame boundary and the damage is confined to one frame.
+//! [`read_frame_checked`] surfaces that case as a recoverable
+//! [`FrameRead::Corrupt`] value instead of an error, which is what lets
+//! `wire::link` heal it with a bounded Nack/Resend exchange. Bad magic,
+//! an unknown version or kind, or a truncated stream remain hard
+//! errors — the reader no longer knows where the next frame starts.
 
 use std::io::{Read, Write};
 
@@ -23,7 +32,16 @@ const MAGIC0: u8 = b'C';
 const MAGIC1: u8 = b'W';
 
 /// Protocol version stamped into every frame header.
-pub const WIRE_VERSION: u8 = 1;
+///
+/// History:
+/// - **1** (PR 8): initial framed protocol, kinds 1–10.
+/// - **2** (PR 10): fault tolerance. `Hello` gained `last_step` +
+///   `fingerprint` and `Welcome` gained `committed` (the versioned
+///   rejoin handshake), and the [`FrameKind::Nack`] /
+///   [`FrameKind::Resend`] control kinds were added for bounded
+///   retransmission of CRC-corrupt frames. v1 peers are refused at
+///   the header check.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Header length in bytes.
 pub const FRAME_HEADER_LEN: usize = 16;
@@ -55,6 +73,15 @@ pub enum FrameKind {
     MetricsReq,
     /// Process → client: metrics snapshot, JSON (`cowclip-metrics-v1`) payload.
     Metrics,
+    /// Either direction: "your last frame arrived CRC-corrupt, resend
+    /// it". Empty payload. Handled inside `wire::link`, never
+    /// surfaced to the dist loop.
+    Nack,
+    /// Either direction: retransmission of the previous frame in reply
+    /// to a [`FrameKind::Nack`]. Payload is the original kind tag
+    /// followed by the original payload, so a retransmitted frame is
+    /// always distinguishable from a fresh one.
+    Resend,
 }
 
 impl FrameKind {
@@ -70,6 +97,8 @@ impl FrameKind {
             FrameKind::Scored => 8,
             FrameKind::MetricsReq => 9,
             FrameKind::Metrics => 10,
+            FrameKind::Nack => 11,
+            FrameKind::Resend => 12,
         }
     }
 
@@ -85,6 +114,8 @@ impl FrameKind {
             8 => Ok(FrameKind::Scored),
             9 => Ok(FrameKind::MetricsReq),
             10 => Ok(FrameKind::Metrics),
+            11 => Ok(FrameKind::Nack),
+            12 => Ok(FrameKind::Resend),
             other => bail!("wire: unknown frame kind {other}"),
         }
     }
@@ -124,8 +155,23 @@ pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, payload: &[u8]) -> Resu
     Ok(())
 }
 
-/// Read one frame; the payload's CRC is verified before it is returned.
-pub fn read_frame<R: Read>(r: &mut R) -> Result<(FrameKind, Vec<u8>)> {
+/// Outcome of [`read_frame_checked`]: either an intact frame or a
+/// recoverable single-frame corruption.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// Header and CRC checked out; the frame is intact.
+    Frame(FrameKind, Vec<u8>),
+    /// The header was well formed and the payload fully consumed, but
+    /// its CRC did not match. The stream is still aligned on a frame
+    /// boundary, so the caller may Nack and keep reading.
+    Corrupt { kind: FrameKind, got: u32, want: u32 },
+}
+
+/// Read one frame, reporting a payload CRC mismatch as a recoverable
+/// [`FrameRead::Corrupt`] instead of an error. Everything that desyncs
+/// the stream (bad magic, version, kind, oversize length, truncation)
+/// is still a hard error.
+pub fn read_frame_checked<R: Read>(r: &mut R) -> Result<FrameRead> {
     let mut header = [0u8; FRAME_HEADER_LEN];
     r.read_exact(&mut header).context("wire: read frame header")?;
     let [m0, m1, version, kind_tag, l0, l1, l2, l3, c0, c1, c2, c3, _, _, _, _] = header;
@@ -147,11 +193,22 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<(FrameKind, Vec<u8>)> {
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).context("wire: read frame payload")?;
     let got = crc32(&payload);
-    ensure!(
-        got == want,
-        "wire: frame CRC mismatch (got {got:#010x}, want {want:#010x})"
-    );
-    Ok((kind, payload))
+    if got != want {
+        return Ok(FrameRead::Corrupt { kind, got, want });
+    }
+    Ok(FrameRead::Frame(kind, payload))
+}
+
+/// Read one frame; the payload's CRC is verified before it is returned
+/// and a mismatch is a hard error. Callers that can retransmit should
+/// use [`read_frame_checked`] (via `wire::link`) instead.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(FrameKind, Vec<u8>)> {
+    match read_frame_checked(r)? {
+        FrameRead::Frame(kind, payload) => Ok((kind, payload)),
+        FrameRead::Corrupt { got, want, .. } => {
+            bail!("wire: frame CRC mismatch (got {got:#010x}, want {want:#010x})")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +229,8 @@ mod tests {
             FrameKind::Scored,
             FrameKind::MetricsReq,
             FrameKind::Metrics,
+            FrameKind::Nack,
+            FrameKind::Resend,
         ];
         let mut buf = Vec::new();
         for (i, &k) in kinds.iter().enumerate() {
@@ -197,6 +256,29 @@ mod tests {
         }
         let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
         assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn checked_read_reports_corruption_and_stays_in_sync() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Contrib, b"first").unwrap();
+        let corrupt_at = buf.len() - 1;
+        write_frame(&mut buf, FrameKind::Total, b"second").unwrap();
+        if let Some(b) = buf.get_mut(corrupt_at) {
+            *b ^= 0x01;
+        }
+        let mut cur = Cursor::new(buf);
+        match read_frame_checked(&mut cur).unwrap() {
+            FrameRead::Corrupt { kind, got, want } => {
+                assert_eq!(kind, FrameKind::Contrib);
+                assert_ne!(got, want);
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // The corrupt payload was fully consumed: the next frame reads clean.
+        let (kind, payload) = read_frame(&mut cur).unwrap();
+        assert_eq!(kind, FrameKind::Total);
+        assert_eq!(payload, b"second");
     }
 
     #[test]

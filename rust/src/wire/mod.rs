@@ -8,12 +8,39 @@
 //!   sparse-gradient quantization), the worker handshake, and serving
 //!   score messages. The checkpoint readers (`CCKP`/`CCKS`) stream
 //!   through the same primitives.
+//! - [`link`] — a reliable frame channel over any stream: CRC-corrupt
+//!   frames are healed by a bounded Nack/Resend exchange instead of
+//!   killing the connection.
+//!
+//! ## Protocol version 2
+//!
+//! PR 10 bumped [`frame::WIRE_VERSION`] from 1 to 2 for fault
+//! tolerance. The changes relative to v1:
+//!
+//! - `Hello` carries two new trailing fields, `last_step` and
+//!   `fingerprint`, turning the handshake into a versioned **rejoin**
+//!   handshake (a reconnecting worker names the last step it applied
+//!   and proves its config matches the run).
+//! - `Welcome` carries the coordinator's last `committed` step, which
+//!   the worker uses to replay forward deterministically before
+//!   resuming.
+//! - Two control frame kinds, `Nack` (11) and `Resend` (12), support
+//!   bounded retransmission of corrupt frames inside [`link`].
+//!
+//! v1 and v2 payloads are not wire-compatible (the handshake grew), so
+//! the version byte check refuses v1 peers outright rather than
+//! negotiating down.
 
 pub mod codec;
 pub mod frame;
+pub mod link;
 
 pub use codec::{
     contribution_wire_len, decode_contribution, encode_contribution, Compression, ContribStats,
     Hello, Welcome,
 };
-pub use frame::{read_frame, write_frame, FrameKind, FRAME_HEADER_LEN, MAX_FRAME_LEN};
+pub use frame::{
+    read_frame, read_frame_checked, write_frame, FrameKind, FrameRead, FRAME_HEADER_LEN,
+    MAX_FRAME_LEN,
+};
+pub use link::FrameLink;

@@ -103,12 +103,12 @@ fn dist_run(
 ) -> (DistReport, ParamSet) {
     let ranks = cfg.workers;
     let sock = temp_sock("run");
-    let opts = DistOptions {
+    let opts = DistOptions::new(
         ranks,
-        endpoint: Endpoint::Unix(sock.clone()),
+        Endpoint::Unix(sock.clone()),
         compress,
-        deadline: Duration::from_secs(60),
-    };
+        Duration::from_secs(60),
+    );
     let out = std::thread::scope(|s| {
         let opts = &opts;
         let handles: Vec<_> = (0..ranks)
@@ -210,12 +210,15 @@ fn hung_rank_surfaces_deadline_error() {
     let (train, test) = data(1_500);
     let cfg = cfg_for(1, 128, 1.0);
     let sock = temp_sock("deadline");
-    let opts = DistOptions {
-        ranks: 1,
-        endpoint: Endpoint::Unix(sock.clone()),
-        compress: Compression::None,
-        deadline: Duration::from_millis(300),
-    };
+    let mut opts = DistOptions::new(
+        1,
+        Endpoint::Unix(sock.clone()),
+        Compression::None,
+        Duration::from_millis(300),
+    );
+    // Recovery off: the hung rank must surface as a deadline error, not
+    // trigger a reconnect window.
+    opts.max_restarts = 0;
     let steps_per_epoch = train.n() / cfg.batch;
     let total_steps = ((steps_per_epoch as f64) * cfg.epochs).round() as u64;
     let err = std::thread::scope(|s| {
@@ -229,6 +232,8 @@ fn hung_rank_surfaces_deadline_error() {
                 batch: cfg.batch as u64,
                 seed: cfg.seed,
                 total_steps,
+                last_step: 0,
+                fingerprint: cfg.fingerprint(),
             };
             write_frame(&mut conn, FrameKind::Hello, &encode_hello(&hello)).unwrap();
             let (kind, _) = read_frame(&mut conn).unwrap();

@@ -1,0 +1,394 @@
+//! Fault tolerance == no fault: a distributed run that loses a rank
+//! mid-step must recover **bitwise identical** to the uninterrupted
+//! sequential baseline (compression off) — same loss curve, same final
+//! params, same AUC. Faults are injected deterministically with the
+//! `--chaos` schedule machinery (`coordinator::chaos`):
+//!
+//! * a rank **killed** at a step boundary rejoins (fresh incarnation,
+//!   like a supervisor respawn), replays the committed prefix locally
+//!   and finishes the run — for all six clip modes, and for early /
+//!   final-step kill positions;
+//! * a rank that **hangs** past the io deadline is marked lost, then
+//!   heals through the worker's in-library reconnect loop;
+//! * a **CRC-corrupt** contribution heals in place through the wire
+//!   link's Nack/Resend exchange without the rank ever being lost;
+//! * a corruption burst past the retry budget fails by name
+//!   ("retransmit budget exhausted"), and with recovery disabled
+//!   (`max_restarts = 0`) the run aborts cleanly;
+//! * the `train --spawn-workers --chaos kill:...` CLI path respawns the
+//!   dead child process and reports the recovery in its summary.
+//!
+//! Workers run on threads of the test process (byte-identical protocol
+//! to the multi-process deployment); the last test forks real `cowclip`
+//! processes.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use cowclip::clip::ClipMode;
+use cowclip::coordinator::{
+    coordinate, dist_worker, DistOptions, DistReport, Endpoint, Engine, TrainConfig, TrainReport,
+    Trainer,
+};
+use cowclip::data::dataset::Dataset;
+use cowclip::data::schema::criteo_synth;
+use cowclip::data::split::random_split;
+use cowclip::data::synth::{generate, SynthConfig};
+use cowclip::model::ParamSet;
+use cowclip::reference::ModelKind;
+use cowclip::scaling::presets::criteo_preset;
+use cowclip::scaling::rules::ScalingRule;
+use cowclip::wire::Compression;
+
+static SOCK_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Unique per-process socket path (tests in one binary run in parallel).
+fn temp_sock(tag: &str) -> PathBuf {
+    let k = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("cowclip_fp_{}_{tag}_{k}.sock", std::process::id()))
+}
+
+fn engine_for(clip: ClipMode) -> Engine {
+    Engine::reference(ModelKind::DeepFm, criteo_synth(), 8, vec![32, 32], 2, clip)
+}
+
+fn cfg_for(ranks: usize, batch: usize, epochs: f64) -> TrainConfig {
+    let preset = criteo_preset();
+    TrainConfig {
+        batch,
+        base_batch: preset.base_batch,
+        base_hypers: preset.cowclip,
+        rule: ScalingRule::CowClip,
+        epochs,
+        workers: ranks,
+        threads: 1,
+        param_shards: 1,
+        warmup_steps: 4,
+        init_sigma: preset.init_sigma_cowclip,
+        seed: 1234,
+        eval_every_epochs: 0,
+        verbose: false,
+    }
+}
+
+fn data(n: usize) -> (Dataset, Dataset) {
+    let schema = criteo_synth();
+    let ds = generate(&schema, &SynthConfig { n, seed: 19, ..Default::default() });
+    random_split(&ds, 0.9, 0)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// The in-process seed path: the fault-free oracle.
+fn seq_run(
+    clip: ClipMode,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> (TrainReport, ParamSet) {
+    let mut trainer = Trainer::new(engine_for(clip), cfg.clone()).unwrap();
+    let report = trainer.train(train, test).unwrap();
+    let params = trainer.store.snapshot();
+    (report, params)
+}
+
+/// Assert a recovered distributed run equals the sequential oracle
+/// bitwise: step count, loss curve, every parameter tensor, final AUC.
+fn assert_run_bitwise(
+    tag: &str,
+    seq_report: &TrainReport,
+    seq_params: &ParamSet,
+    dist_report: &DistReport,
+    dist_params: &ParamSet,
+) {
+    assert_eq!(seq_report.steps, dist_report.steps, "{tag}: step count");
+    assert_bitwise(
+        &seq_report.train_loss_curve,
+        &dist_report.train_loss_curve,
+        &format!("{tag}: loss curve"),
+    );
+    for (i, (a, b)) in seq_params.tensors.iter().zip(&dist_params.tensors).enumerate() {
+        assert_bitwise(
+            a.as_f32().unwrap(),
+            b.as_f32().unwrap(),
+            &format!("{tag}: param[{i}] ({})", seq_params.spec[i].name),
+        );
+    }
+    assert_eq!(
+        seq_report.final_auc.to_bits(),
+        dist_report.final_auc.to_bits(),
+        "{tag}: AUC {} vs {}",
+        seq_report.final_auc,
+        dist_report.final_auc
+    );
+}
+
+/// One socket run with a chaos schedule armed on `faulty_rank`'s worker.
+/// The faulty worker's thread plays the part of a process supervisor:
+/// when `expect_kill` is set, its first incarnation must die to the
+/// injected kill, and the thread "respawns" it by calling `dist_worker`
+/// again with the schedule stripped — exactly what the CLI supervisor
+/// does with a real child process. Non-kill faults heal inside the one
+/// `dist_worker` call (retransmit or reconnect), so no respawn happens.
+fn chaos_run(
+    clip: ClipMode,
+    cfg: &TrainConfig,
+    opts: &DistOptions,
+    chaos: &str,
+    faulty_rank: usize,
+    expect_kill: bool,
+    train: &Dataset,
+    test: &Dataset,
+) -> (DistReport, ParamSet) {
+    let ranks = cfg.workers;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..ranks)
+            .map(|rank| {
+                let mut w_opts = opts.clone();
+                if rank == faulty_rank {
+                    w_opts.chaos = Some(chaos.parse().expect("chaos spec"));
+                }
+                s.spawn(move || {
+                    let engine = engine_for(clip);
+                    let first = dist_worker(&engine, cfg, train, rank, &w_opts);
+                    if !(rank == faulty_rank && expect_kill) {
+                        return first;
+                    }
+                    let err = first.expect_err("chaos kill must abort the first incarnation");
+                    let msg = format!("{err:#}");
+                    assert!(msg.contains("chaos: kill"), "expected a chaos kill, got: {msg}");
+                    // Respawn: fresh state, no schedule (one-shot fault).
+                    let mut clean = w_opts.clone();
+                    clean.chaos = None;
+                    dist_worker(&engine, cfg, train, rank, &clean)
+                })
+            })
+            .collect();
+        let engine = engine_for(clip);
+        let (report, store) = coordinate(&engine, cfg, train, test, opts).unwrap();
+        for (rank, h) in handles.into_iter().enumerate() {
+            h.join()
+                .unwrap()
+                .unwrap_or_else(|e| panic!("rank {rank} failed: {e:#}"));
+        }
+        (report, store.snapshot())
+    })
+}
+
+/// Acceptance (recovery determinism): a 2-rank run whose rank 1 is
+/// killed mid-run recovers bitwise identical to the sequential baseline
+/// for **all six clip modes** with compression off, and the recovery is
+/// visible in the stats (one rank loss, one rejoin, the interrupted
+/// step recovered).
+#[test]
+fn killed_rank_recovers_bitwise_all_modes() {
+    let (train, test) = data(1_500);
+    for clip in ClipMode::ALL {
+        let cfg = cfg_for(2, 128, 1.0);
+        let (seq_report, seq_params) = seq_run(clip, &cfg, &train, &test);
+        let sock = temp_sock("kill");
+        let opts = DistOptions::new(
+            2,
+            Endpoint::Unix(sock.clone()),
+            Compression::None,
+            Duration::from_secs(60),
+        );
+        let (report, params) =
+            chaos_run(clip, &cfg, &opts, "kill:rank=1,step=5", 1, true, &train, &test);
+        let tag = format!("{clip}/kill@5");
+        assert_eq!(report.stats.dead_ranks, 1, "{tag}: rank losses");
+        assert_eq!(report.stats.reconnects, 1, "{tag}: rejoins");
+        assert!(report.stats.recovered_steps >= 1, "{tag}: recovered steps");
+        assert_run_bitwise(&tag, &seq_report, &seq_params, &report, &params);
+        let _ = std::fs::remove_file(&sock);
+    }
+}
+
+/// Acceptance (kill position): recovery is step-position independent —
+/// a kill right after warmup and a kill at the *final* step (where the
+/// rejoining rank replays the whole committed run locally and only then
+/// contributes) both recover bitwise.
+#[test]
+fn kill_position_early_and_final_step_recover_bitwise() {
+    let (train, test) = data(1_500);
+    let clip = ClipMode::CowClip;
+    let cfg = cfg_for(2, 128, 1.0);
+    let total_steps = ((train.n() / cfg.batch) as f64 * cfg.epochs).round() as u64;
+    assert!(total_steps >= 4, "need a few steps to place kills");
+    let (seq_report, seq_params) = seq_run(clip, &cfg, &train, &test);
+    for kill_step in [2, total_steps] {
+        let sock = temp_sock("killpos");
+        let opts = DistOptions::new(
+            2,
+            Endpoint::Unix(sock.clone()),
+            Compression::None,
+            Duration::from_secs(60),
+        );
+        let spec = format!("kill:rank=1,step={kill_step}");
+        let (report, params) = chaos_run(clip, &cfg, &opts, &spec, 1, true, &train, &test);
+        let tag = format!("{clip}/kill@{kill_step}");
+        assert_eq!(report.stats.dead_ranks, 1, "{tag}: rank losses");
+        assert_run_bitwise(&tag, &seq_report, &seq_params, &report, &params);
+        let _ = std::fs::remove_file(&sock);
+    }
+}
+
+/// Acceptance (hang → reconnect): a rank stalled past the io deadline
+/// is marked lost; the same worker process notices its dead session,
+/// reconnects through the in-library retry loop within the recovery
+/// window, and the run still finishes bitwise identical.
+#[test]
+fn hung_rank_reconnects_and_recovers_bitwise() {
+    let (train, test) = data(1_500);
+    let clip = ClipMode::CowClip;
+    let cfg = cfg_for(2, 128, 1.0);
+    let (seq_report, seq_params) = seq_run(clip, &cfg, &train, &test);
+    let sock = temp_sock("hang");
+    // Deadline 800 ms, stall 1200 ms: the coordinator gives up at
+    // ~800 ms and opens a 3x recovery window (2.4 s); the worker wakes
+    // at 1.2 s, its own read times out by ~2 s, and it reconnects with
+    // >1 s of window to spare.
+    let opts = DistOptions::new(
+        2,
+        Endpoint::Unix(sock.clone()),
+        Compression::None,
+        Duration::from_millis(800),
+    );
+    let (report, params) =
+        chaos_run(clip, &cfg, &opts, "hang:rank=1,step=3,ms=1200", 1, false, &train, &test);
+    let tag = format!("{clip}/hang@3");
+    assert_eq!(report.stats.dead_ranks, 1, "{tag}: rank losses");
+    assert_eq!(report.stats.reconnects, 1, "{tag}: rejoins");
+    assert!(report.stats.recovered_steps >= 1, "{tag}: recovered steps");
+    assert_run_bitwise(&tag, &seq_report, &seq_params, &report, &params);
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// Acceptance (transport healing): one CRC-corrupt contribution heals
+/// in place via the Nack/Resend exchange — the retransmit shows up in
+/// the stats, no rank is ever lost, and the run is bitwise clean.
+#[test]
+fn corrupt_contrib_heals_within_budget_bitwise() {
+    let (train, test) = data(1_500);
+    let clip = ClipMode::CowClip;
+    let cfg = cfg_for(2, 128, 1.0);
+    let (seq_report, seq_params) = seq_run(clip, &cfg, &train, &test);
+    let sock = temp_sock("corrupt");
+    let opts = DistOptions::new(
+        2,
+        Endpoint::Unix(sock.clone()),
+        Compression::None,
+        Duration::from_secs(60),
+    );
+    let (report, params) =
+        chaos_run(clip, &cfg, &opts, "corrupt:rank=1,step=2", 1, false, &train, &test);
+    let tag = format!("{clip}/corrupt@2");
+    assert!(report.stats.retransmits >= 1, "{tag}: healed retransmits");
+    assert_eq!(report.stats.dead_ranks, 0, "{tag}: corruption must heal without a loss");
+    assert_eq!(report.stats.reconnects, 0, "{tag}: no reconnect needed");
+    assert_run_bitwise(&tag, &seq_report, &seq_params, &report, &params);
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// Acceptance (bounded retries): a corruption burst outlasting the
+/// retransmit budget fails by name, and with recovery disabled
+/// (`max_restarts = 0`) the coordinator aborts instead of waiting for a
+/// rejoin — the worker is told why via the error fan-out.
+#[test]
+fn retransmit_budget_exhaustion_fails_by_name() {
+    let (train, test) = data(1_500);
+    let clip = ClipMode::CowClip;
+    let cfg = cfg_for(1, 128, 1.0);
+    let sock = temp_sock("budget");
+    let mut opts = DistOptions::new(
+        1,
+        Endpoint::Unix(sock.clone()),
+        Compression::None,
+        Duration::from_secs(60),
+    );
+    opts.retransmit_budget = 2;
+    opts.max_restarts = 0;
+    let err = std::thread::scope(|s| {
+        let (cfg, opts, train) = (&cfg, &opts, &train);
+        let worker = s.spawn(move || {
+            let mut w_opts = opts.clone();
+            // Corrupt every frame flushed at step 2 — including the
+            // retransmissions — so the budget cannot win.
+            w_opts.chaos = Some("corrupt:rank=0,step=2,times=10".parse().unwrap());
+            let engine = engine_for(clip);
+            dist_worker(&engine, cfg, train, 0, &w_opts)
+        });
+        let engine = engine_for(clip);
+        let err = coordinate(&engine, cfg, train, &test, opts).unwrap_err();
+        assert!(worker.join().unwrap().is_err(), "worker must be told the run died");
+        err
+    });
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("retransmit budget exhausted"),
+        "error should name the exhausted budget: {msg}"
+    );
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// Acceptance (CLI): `train --spawn-workers --chaos kill:...` forks
+/// real worker processes, the killed child exits nonzero, the
+/// supervisor respawns it (chaos stripped), and the run completes with
+/// the recovery reported in the summary.
+#[test]
+fn cli_spawn_workers_respawns_killed_child() {
+    let sock = temp_sock("cli");
+    let ckpt = std::env::temp_dir()
+        .join(format!("cowclip_fp_cli_{}.ckpt", std::process::id()));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cowclip"))
+        .args([
+            "train",
+            "--model",
+            "deepfm",
+            "--schema",
+            "criteo_synth",
+            "--n",
+            "2000",
+            "--batch",
+            "128",
+            "--epochs",
+            "0.5",
+            "--threads",
+            "1",
+            "--engine",
+            "reference",
+            "--ranks",
+            "2",
+            "--spawn-workers",
+            "--compress",
+            "none",
+            "--deadline-ms",
+            "60000",
+            "--chaos",
+            "kill:rank=1,step=3",
+            "--max-restarts",
+            "2",
+            "--snapshot-every",
+            "2",
+            "--save",
+        ])
+        .arg(&ckpt)
+        .arg("--bind")
+        .arg(format!("unix:{}", sock.display()))
+        .output()
+        .expect("running the cowclip binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "cli run failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("final test AUC"), "missing result line:\n{stdout}");
+    assert!(stdout.contains("recovery:"), "missing recovery summary:\n{stdout}");
+    assert!(ckpt.exists(), "snapshot/checkpoint file missing");
+    let _ = std::fs::remove_file(&sock);
+    let _ = std::fs::remove_file(&ckpt);
+}

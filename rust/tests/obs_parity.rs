@@ -103,12 +103,12 @@ fn dist_run(
 ) -> (DistReport, ParamSet) {
     let ranks = cfg.workers;
     let sock = temp_path("dist", "sock");
-    let opts = DistOptions {
+    let opts = DistOptions::new(
         ranks,
-        endpoint: Endpoint::Unix(sock.clone()),
-        compress: Compression::None,
-        deadline: Duration::from_secs(60),
-    };
+        Endpoint::Unix(sock.clone()),
+        Compression::None,
+        Duration::from_secs(60),
+    );
     let out = std::thread::scope(|s| {
         let opts = &opts;
         let handles: Vec<_> = (0..ranks)

@@ -26,7 +26,7 @@ use cowclip::model::params::ParamSet;
 use cowclip::reference::step::build_spec;
 use cowclip::reference::{ModelKind, ReferenceModel};
 use cowclip::scaling::rules::{HyperSet, ScalingRule};
-use cowclip::serve::{Request, ServeConfig, ServeModel, Server};
+use cowclip::serve::{Overloaded, Request, ServeConfig, ServeModel, Server};
 use cowclip::tensor::Tensor;
 use cowclip::util::Rng;
 
@@ -131,6 +131,7 @@ fn served_scores_match_offline_forward_all_models_f32() {
                 max_batch,
                 max_delay: Duration::from_micros(300),
                 threads,
+                max_queue: 0,
             };
             let got = serve_scores(&frozen, cfg, &reqs, clients, 1000 + max_batch as u64);
             for (i, (&g, &o)) in got.iter().zip(&oracle).enumerate() {
@@ -153,6 +154,7 @@ fn deadline_trigger_flushes_partial_batches() {
         max_batch: 10_000,
         max_delay: Duration::from_millis(5),
         threads: 2,
+        max_queue: 0,
     };
     let server = Server::start(Arc::clone(&frozen), cfg);
     let client = server.client();
@@ -182,6 +184,67 @@ fn invalid_request_is_rejected_at_submit() {
     assert_eq!(stats.requests, 0);
 }
 
+/// Admission control: with `max_queue` set, the submit past the bound
+/// fails with the typed [`Overloaded`] error (and bumps the
+/// `serve.rejected` counter) instead of growing the queue, while the
+/// admitted requests still score on shutdown. Deterministic setup: one
+/// scoring thread parked on a far-off deadline (huge `max_batch`, long
+/// `max_delay`), so the queue provably holds every admitted request
+/// when the over-limit submit arrives.
+#[test]
+fn bounded_queue_sheds_overload_with_typed_error() {
+    let model = tiny_model(ModelKind::WideDeep);
+    let params = tiny_params(&model, 13);
+    let frozen = Arc::new(ServeModel::from_params(model, params, false).unwrap());
+    let cfg = ServeConfig {
+        max_batch: 10_000,
+        max_delay: Duration::from_secs(30),
+        threads: 1,
+        max_queue: 4,
+    };
+    let rejected_before = cowclip::obs::counter("serve.rejected").get();
+    let server = Server::start(Arc::clone(&frozen), cfg);
+    let client = server.client();
+    let reqs = requests(frozen.schema(), 5, 23);
+    let mut rxs = Vec::new();
+    for (i, r) in reqs.into_iter().enumerate() {
+        match client.submit(r) {
+            Ok(rx) => {
+                assert!(i < 4, "request {i} should have been shed");
+                rxs.push(rx);
+            }
+            Err(err) => {
+                assert_eq!(i, 4, "request {i} rejected early: {err:#}");
+                let over = err
+                    .downcast_ref::<Overloaded>()
+                    .unwrap_or_else(|| panic!("expected Overloaded, got: {err:#}"));
+                assert_eq!(over.depth, 4);
+                assert_eq!(over.max_queue, 4);
+            }
+        }
+    }
+    // Shutdown flushes the four admitted requests through the scorer.
+    let flushed: Vec<_> = std::thread::scope(|s| {
+        let h = s.spawn(move || {
+            rxs.into_iter()
+                .map(|rx| rx.recv_timeout(Duration::from_secs(10)).expect("flush on shutdown"))
+                .collect()
+        });
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 4, "admitted requests must still score");
+        h.join().unwrap()
+    });
+    assert_eq!(flushed.len(), 4);
+    for sc in &flushed {
+        assert!(sc.logit.is_finite());
+    }
+    let rejected_after = cowclip::obs::counter("serve.rejected").get();
+    assert!(
+        rejected_after >= rejected_before + 1,
+        "serve.rejected should count the shed request ({rejected_before} -> {rejected_after})"
+    );
+}
+
 #[test]
 fn quantized_serving_matches_dequantized_oracle_all_models() {
     for kind in ModelKind::ALL {
@@ -194,7 +257,8 @@ fn quantized_serving_matches_dequantized_oracle_all_models() {
         // the scorer's semantics: forward over the dequantized tables
         let oracle_params = frozen.oracle_params().unwrap();
         let oracle = offline_logits(&model, &oracle_params, &reqs);
-        let cfg = ServeConfig { max_batch: 9, max_delay: Duration::from_micros(300), threads: 3 };
+        let cfg =
+            ServeConfig { max_batch: 9, max_delay: Duration::from_micros(300), threads: 3, max_queue: 0 };
         let got = serve_scores(&frozen, cfg, &reqs, 3, 77);
         for (i, (&g, &o)) in got.iter().zip(&oracle).enumerate() {
             assert!((g - o).abs() <= 1e-6, "{kind}: req {i}: {g} vs {o}");
@@ -316,7 +380,8 @@ fn direct_score_batch_matches_served_path() {
     let reqs = requests(&model.schema, 64, 5);
     let frozen = Arc::new(ServeModel::from_params(model, params, false).unwrap());
     let direct = frozen.score_batch(&reqs).unwrap();
-    let cfg = ServeConfig { max_batch: 5, max_delay: Duration::from_micros(200), threads: 2 };
+    let cfg =
+        ServeConfig { max_batch: 5, max_delay: Duration::from_micros(200), threads: 2, max_queue: 0 };
     let served = serve_scores(&frozen, cfg, &reqs, 2, 3);
     for (i, (&a, &b)) in direct.iter().zip(&served).enumerate() {
         assert!((a - b).abs() <= 1e-6, "req {i}: {a} vs {b}");
